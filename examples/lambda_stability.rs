@@ -1,0 +1,39 @@
+//! Figure-3 driver: classification error after 5 FALKON iterations
+//! across a λ_falkon sweep — BLESS centers widen the near-optimal region.
+//!
+//! ```bash
+//! cargo run --release --example lambda_stability -- --n 4000
+//! ```
+
+use bless::coordinator::{build_engine, fig3_stability, EngineKind, Fig3Config};
+use bless::data::susy_like;
+use bless::kernels::Gaussian;
+use bless::rng::Rng;
+use bless::util::cli::Args;
+use bless::util::table::fnum;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse();
+    let n = args.get_usize("n", 4_000);
+    let seed = args.get_u64("seed", 0);
+    let mut rng = Rng::seeded(seed);
+    let ds = susy_like(n, &mut rng);
+    let (train, test) = ds.split(0.25, &mut rng);
+    let cfg = Fig3Config {
+        sigma: args.get_f64("sigma", 4.0),
+        lambda_bless: args.get_f64("lambda-bless", 1e-3),
+        iterations: args.get_usize("iters", 5),
+        seed,
+        ..Default::default()
+    };
+    let kind = EngineKind::parse(&args.get_str("engine", "native")).unwrap();
+    let engine = build_engine(kind, train.x.clone(), Gaussian::new(cfg.sigma))?;
+    let res = fig3_stability(engine.as_dyn(), &train.y, &test, &cfg)?;
+    println!("{}", res.table.to_console());
+    println!(
+        "95%-optimal λ region: BLESS {} decades vs UNI {} decades",
+        fnum(res.bless_region_decades),
+        fnum(res.uni_region_decades)
+    );
+    Ok(())
+}

@@ -1,0 +1,32 @@
+//! Figure-1 driver: leverage-score relative accuracy (R-ACC) of BLESS,
+//! BLESS-R, SQUEAK, RRLS, Two-Pass and Uniform against exact scores.
+//!
+//! ```bash
+//! cargo run --release --example leverage_accuracy -- --n 2000 --lambda 1e-4 --reps 5
+//! ```
+
+use bless::coordinator::{build_engine, fig1_accuracy, EngineKind, Fig1Config};
+use bless::data::susy_like;
+use bless::kernels::Gaussian;
+use bless::rng::Rng;
+use bless::util::cli::Args;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse();
+    let cfg = Fig1Config {
+        n: args.get_usize("n", 2_000),
+        lambda: args.get_f64("lambda", 1e-4),
+        sigma: args.get_f64("sigma", 4.0),
+        reps: args.get_usize("reps", 5),
+        seed: args.get_u64("seed", 0),
+        uniform_m: args.get_usize("uniform-m", 400),
+        ..Default::default()
+    };
+    let ds = susy_like(cfg.n, &mut Rng::seeded(cfg.seed.wrapping_add(77)));
+    let kind = EngineKind::parse(&args.get_str("engine", "native")).unwrap();
+    let engine = build_engine(kind, ds.x, Gaussian::new(cfg.sigma))?;
+    let table = fig1_accuracy(engine.as_dyn(), &cfg);
+    println!("{}", table.to_console());
+    println!("{}", table.to_markdown());
+    Ok(())
+}

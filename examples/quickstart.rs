@@ -1,0 +1,50 @@
+//! Quickstart: sample Nyström centers with BLESS and train FALKON-BLESS
+//! on a small synthetic problem — the 60-second tour of the public API.
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+
+use bless::bless::{bless, BlessConfig};
+use bless::coordinator::{build_engine, EngineKind};
+use bless::data::{auc, susy_like};
+use bless::falkon::Falkon;
+use bless::kernels::Gaussian;
+use bless::rng::Rng;
+
+fn main() -> anyhow::Result<()> {
+    // 1. data: SUSY-like synthetic events (18 features, ±1 labels)
+    let mut rng = Rng::seeded(42);
+    let ds = susy_like(3_000, &mut rng);
+    let (train, test) = ds.split(0.25, &mut rng);
+    println!("train n={} d={} | test n={}", train.n(), train.d(), test.n());
+
+    // 2. engine: prefers the AOT-compiled Pallas tiles (make artifacts),
+    //    falls back to the native rust backend
+    let engine = build_engine(EngineKind::Auto, train.x.clone(), Gaussian::new(4.0))?;
+    println!("kernel engine backend: {}", engine.label());
+
+    // 3. BLESS: leverage-score sampling along the regularization path
+    let lambda_bless = 1e-3;
+    let t0 = std::time::Instant::now();
+    let path = bless(engine.as_dyn(), lambda_bless, &BlessConfig::default(), &mut rng);
+    println!(
+        "BLESS: {} levels, final |J| = {} ({} score evals, {:.2}s)",
+        path.levels.len(),
+        path.final_set().len(),
+        path.score_evals,
+        t0.elapsed().as_secs_f64()
+    );
+    for l in &path.levels {
+        println!("  λ={:<9.2e} |J|={:<5} d̂_eff={:.1}", l.lambda, l.set.len(), l.d_est);
+    }
+
+    // 4. FALKON with the BLESS centers + weights (Eq. 15 preconditioner)
+    let lambda_falkon = 1e-5;
+    let set = path.final_set().clone();
+    let solver = Falkon::new(engine.as_dyn(), &set, lambda_falkon)?;
+    let model = solver.fit(&train.y, 15, None)?;
+    let scores = model.predict(engine.as_dyn(), &test.x);
+    println!("FALKON-BLESS: M={} test AUC = {:.4}", solver.m(), auc(&scores, &test.y));
+    Ok(())
+}

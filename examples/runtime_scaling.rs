@@ -1,0 +1,32 @@
+//! Figure-2 driver: sampler runtime as n grows at fixed λ — BLESS and
+//! BLESS-R stay flat (O(1/λ)) while the baselines grow linearly.
+//!
+//! ```bash
+//! cargo run --release --example runtime_scaling -- --sizes 1000,2000,4000,8000
+//! ```
+
+use bless::coordinator::{fig2_scaling, scaling_exponent, Fig2Config};
+use bless::util::cli::Args;
+use bless::util::table::fnum;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse();
+    let sizes = args
+        .get("sizes")
+        .map(|s| s.split(',').map(|v| v.trim().parse().unwrap()).collect())
+        .unwrap_or_else(|| vec![1_000, 2_000, 4_000, 8_000]);
+    let cfg = Fig2Config {
+        sizes,
+        lambda: args.get_f64("lambda", 1e-3),
+        sigma: args.get_f64("sigma", 4.0),
+        seed: args.get_u64("seed", 0),
+        ..Default::default()
+    };
+    let table = fig2_scaling(&cfg);
+    println!("{}", table.to_console());
+    println!("empirical log-log slope of time vs n (theory: 0 for BLESS/BLESS-R, 1 otherwise):");
+    for &m in &cfg.methods {
+        println!("  {:<10} {}", m.name(), fnum(scaling_exponent(&table, m)));
+    }
+    Ok(())
+}

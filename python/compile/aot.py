@@ -1,0 +1,87 @@
+"""AOT lowering: JAX/Pallas -> HLO text artifacts for the rust runtime.
+
+Interchange format is **HLO text**, not serialized HloModuleProto: jax
+>= 0.5 emits protos with 64-bit instruction ids which the xla crate's
+xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Usage:  cd python && python -m compile.aot --out ../artifacts
+
+Writes one `<name>.hlo.txt` per primitive plus `manifest.json`
+describing shapes/dtypes, which the rust runtime validates at load time.
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .kernels.rbf import FEATURE_DIM, TILE
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def primitives(tile: int, d: int):
+    """The artifact set: name -> (function, example_args)."""
+    f32 = jnp.float32
+    mat = jax.ShapeDtypeStruct((tile, d), f32)
+    vec = jax.ShapeDtypeStruct((tile,), f32)
+    scl = jax.ShapeDtypeStruct((), f32)
+    return {
+        "rbf_block": (model.kernel_tile, (mat, mat, scl)),
+        "rbf_matvec": (model.kernel_matvec_tile, (mat, mat, vec, scl)),
+        "rbf_matvec_t": (model.kernel_matvec_t_tile, (mat, mat, vec, scl)),
+        "rbf_fused_normal": (model.kernel_fused_normal_tile, (mat, mat, vec, scl)),
+        "rbf_degree": (model.degree_tile, (mat, mat, scl)),
+    }
+
+
+def spec_json(s):
+    return {"shape": list(s.shape), "dtype": str(s.dtype)}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="artifact directory")
+    ap.add_argument("--tile", type=int, default=TILE, help="tile size T")
+    ap.add_argument("--dim", type=int, default=FEATURE_DIM, help="feature dim D")
+    args = ap.parse_args()
+
+    os.makedirs(args.out, exist_ok=True)
+    manifest = {
+        "tile": args.tile,
+        "feature_dim": args.dim,
+        "jax_version": jax.__version__,
+        "artifacts": {},
+    }
+    for name, (fn, example) in primitives(args.tile, args.dim).items():
+        lowered = jax.jit(fn).lower(*example)
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(args.out, fname), "w") as f:
+            f.write(text)
+        manifest["artifacts"][name] = {
+            "file": fname,
+            "inputs": [spec_json(s) for s in example],
+            "chars": len(text),
+        }
+        print(f"lowered {name}: {len(text)} chars")
+
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote manifest with {len(manifest['artifacts'])} artifacts to {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,152 @@
+"""Layer-1 Pallas kernels: tiled Gaussian-kernel block evaluation.
+
+The paper's compute hot-spot is evaluating blocks of the kernel matrix
+`K(X_I, X_J)` (leverage-score formulas, FALKON matvecs). On TPU the
+natural mapping (DESIGN.md §Hardware-Adaptation) is:
+
+* the cross term `X @ Y^T` on the **MXU** systolic array,
+* row norms / subtraction / `exp` on the **VPU**,
+* everything fused in one kernel so the `(bm, bn)` output tile and both
+  input slabs live in **VMEM** — the HBM<->VMEM schedule a CUDA version
+  would write with threadblocks is expressed with `BlockSpec`s over a
+  `(M/bm, N/bn)` grid.
+
+VMEM budget at the default `bm = bn = 128`, `d = 32`, f32:
+inputs 2 * 128*32*4 B = 32 KiB, output 128*128*4 B = 64 KiB - far below
+the ~16 MiB/core budget, leaving room for double buffering.
+
+`interpret=True` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls, so kernels are verified through the interpreter and the
+AOT artifacts are the interpreter-lowered HLO (plain HLO ops).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default tile geometry shared with the rust runtime (see
+# rust/src/runtime/): T x T output tiles built from bm x bn blocks.
+TILE = 256
+BLOCK = 128
+FEATURE_DIM = 32
+
+
+def _rbf_block_kernel(x_ref, y_ref, g_ref, o_ref):
+    """One (bm, bn) output block: full fused distance + exp."""
+    x = x_ref[...]                                     # (bm, d)   VMEM
+    y = y_ref[...]                                     # (bn, d)   VMEM
+    g = g_ref[0]
+    xx = jnp.sum(x * x, axis=1, keepdims=True)         # (bm, 1)   VPU
+    yy = jnp.sum(y * y, axis=1, keepdims=True).T       # (1, bn)   VPU
+    cross = jnp.dot(x, y.T, preferred_element_type=jnp.float32)  # MXU
+    d2 = jnp.maximum(xx + yy - 2.0 * cross, 0.0)
+    o_ref[...] = jnp.exp(-g * d2)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn"))
+def rbf_block(x, y, gamma, *, bm=BLOCK, bn=BLOCK):
+    """Gaussian kernel block `K(x, y)` via a tiled Pallas kernel.
+
+    Args:
+        x: (m, d) f32, m divisible by bm.
+        y: (n, d) f32, n divisible by bn.
+        gamma: scalar 1/(2 sigma^2) (traced - one artifact serves every
+            bandwidth).
+    Returns:
+        (m, n) f32 kernel block.
+    """
+    m, d = x.shape
+    n = y.shape[0]
+    g = jnp.asarray(gamma, jnp.float32).reshape(1)
+    grid = (m // bm, n // bn)
+    return pl.pallas_call(
+        _rbf_block_kernel,
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, d), lambda i, j: (i, 0)),   # row slab
+            pl.BlockSpec((bn, d), lambda i, j: (j, 0)),   # col slab
+            pl.BlockSpec((1,), lambda i, j: (0,)),        # gamma
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        interpret=True,
+    )(x, y, g)
+
+
+def _rbf_matvec_kernel(x_ref, y_ref, v_ref, g_ref, o_ref):
+    """One bm-row block of `K(x, y) @ v` - K never leaves VMEM."""
+    x = x_ref[...]                                     # (bm, d)
+    y = y_ref[...]                                     # (n, d) full slab
+    v = v_ref[...]                                     # (n,)
+    g = g_ref[0]
+    xx = jnp.sum(x * x, axis=1, keepdims=True)
+    yy = jnp.sum(y * y, axis=1, keepdims=True).T
+    cross = jnp.dot(x, y.T, preferred_element_type=jnp.float32)
+    k = jnp.exp(-g * jnp.maximum(xx + yy - 2.0 * cross, 0.0))
+    o_ref[...] = k @ v
+
+
+@functools.partial(jax.jit, static_argnames=("bm",))
+def rbf_matvec(x, y, v, gamma, *, bm=BLOCK):
+    """Fused `K(x, y) @ v` (the FALKON `K_nM v` streaming primitive)."""
+    m, d = x.shape
+    n = y.shape[0]
+    g = jnp.asarray(gamma, jnp.float32).reshape(1)
+    return pl.pallas_call(
+        _rbf_matvec_kernel,
+        out_shape=jax.ShapeDtypeStruct((m,), jnp.float32),
+        grid=(m // bm,),
+        in_specs=[
+            pl.BlockSpec((bm, d), lambda i: (i, 0)),
+            pl.BlockSpec((n, d), lambda i: (0, 0)),
+            pl.BlockSpec((n,), lambda i: (0,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((bm,), lambda i: (i,)),
+        interpret=True,
+    )(x, y, v, g)
+
+
+def _rbf_matvec_t_kernel(x_ref, y_ref, u_ref, g_ref, o_ref):
+    """Accumulate one row-slab's contribution to `K^T @ u`."""
+    i = pl.program_id(0)
+    x = x_ref[...]                                     # (bm, d)
+    y = y_ref[...]                                     # (n, d)
+    u = u_ref[...]                                     # (bm,)
+    g = g_ref[0]
+    xx = jnp.sum(x * x, axis=1, keepdims=True)
+    yy = jnp.sum(y * y, axis=1, keepdims=True).T
+    cross = jnp.dot(x, y.T, preferred_element_type=jnp.float32)
+    k = jnp.exp(-g * jnp.maximum(xx + yy - 2.0 * cross, 0.0))
+    contrib = k.T @ u                                  # (n,)
+
+    @pl.when(i == 0)
+    def _init():
+        o_ref[...] = contrib
+
+    @pl.when(i > 0)
+    def _accum():
+        o_ref[...] += contrib
+
+
+@functools.partial(jax.jit, static_argnames=("bm",))
+def rbf_matvec_t(x, y, u, gamma, *, bm=BLOCK):
+    """Fused `K(x, y)^T @ u` (the FALKON `K_nM^T u` primitive)."""
+    m, d = x.shape
+    n = y.shape[0]
+    g = jnp.asarray(gamma, jnp.float32).reshape(1)
+    return pl.pallas_call(
+        _rbf_matvec_t_kernel,
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.float32),
+        grid=(m // bm,),
+        in_specs=[
+            pl.BlockSpec((bm, d), lambda i: (i, 0)),
+            pl.BlockSpec((n, d), lambda i: (0, 0)),
+            pl.BlockSpec((bm,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((n,), lambda i: (0,)),
+        interpret=True,
+    )(x, y, u, g)

@@ -1,0 +1,36 @@
+"""Pure-jnp reference oracle for the Pallas kernels.
+
+Every Pallas kernel in this package has a line-for-line mathematical
+counterpart here; pytest asserts `assert_allclose` between the two across
+shape/bandwidth sweeps (hypothesis). The oracle is also what the L2 model
+functions are checked against.
+"""
+
+import jax.numpy as jnp
+
+
+def rbf_block(x, y, gamma):
+    """Gaussian kernel block: K[i,j] = exp(-gamma * ||x_i - y_j||^2).
+
+    Args:
+        x: (m, d) float array.
+        y: (n, d) float array.
+        gamma: scalar, 1/(2 sigma^2).
+    Returns:
+        (m, n) kernel block.
+    """
+    xx = jnp.sum(x * x, axis=1, keepdims=True)        # (m, 1)
+    yy = jnp.sum(y * y, axis=1, keepdims=True).T      # (1, n)
+    cross = x @ y.T                                   # (m, n)
+    d2 = jnp.maximum(xx + yy - 2.0 * cross, 0.0)
+    return jnp.exp(-gamma * d2)
+
+
+def rbf_matvec(x, y, v, gamma):
+    """Fused `K(x, y) @ v` without materializing K outside the tile."""
+    return rbf_block(x, y, gamma) @ v
+
+
+def rbf_matvec_t(x, y, u, gamma):
+    """Fused `K(x, y)^T @ u`."""
+    return rbf_block(x, y, gamma).T @ u

@@ -1,0 +1,58 @@
+"""Layer-2 JAX compute graphs — the functions the rust coordinator calls
+through their AOT-compiled artifacts.
+
+Each public function here composes the Layer-1 Pallas kernels
+(`kernels.rbf`) into the exact primitives the BLESS / FALKON hot paths
+need. `aot.py` lowers each of them once, at fixed tile shapes, to HLO
+text; the rust runtime (rust/src/runtime/) pads dynamic shapes up to the
+tile contract and assembles results.
+
+Nothing in this module runs at serving time - python is build-time only.
+"""
+
+import jax.numpy as jnp
+
+from .kernels import rbf
+
+
+def kernel_tile(x, y, gamma):
+    """`K(x, y)` for one (T, D) x (T, D) tile -> (T, T).
+
+    Used by the rust side for `K_JJ`, `K_JU` and leverage-score cross
+    blocks. Zero-padded feature columns are exact (they contribute 0 to
+    the squared distance); padded rows produce garbage rows/cols the rust
+    side slices away.
+    """
+    return rbf.rbf_block(x, y, gamma)
+
+
+def kernel_matvec_tile(x, y, v, gamma):
+    """`K(x, y) @ v` for one tile -> (T,).
+
+    FALKON's `K_nM v` streaming step. Zero-padded entries of `v` nullify
+    padded center columns, so padding is exact here too.
+    """
+    return rbf.rbf_matvec(x, y, v, gamma)
+
+
+def kernel_matvec_t_tile(x, y, u, gamma):
+    """`K(x, y)^T @ u` for one tile -> (T,).
+
+    FALKON's `K_nM^T u` accumulation step; zero-padded entries of `u`
+    nullify padded data rows.
+    """
+    return rbf.rbf_matvec_t(x, y, u, gamma)
+
+
+def kernel_fused_normal_tile(x, y, v, gamma):
+    """`K^T (K v)` for one row tile -> (T,): one kernel-block evaluation
+    serves both products (the FALKON CG hot loop, Eq. 16's nMt term)."""
+    k = rbf.rbf_block(x, y, gamma)
+    return k.T @ (k @ v)
+
+
+def degree_tile(x, y, gamma):
+    """Row sums of the kernel block -> (T,). Used for diagnostics and the
+    uniform-sampling d_inf estimates."""
+    k = rbf.rbf_block(x, y, gamma)
+    return jnp.sum(k, axis=1)

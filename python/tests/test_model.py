@@ -1,0 +1,49 @@
+"""L2 correctness: model.py compute graphs vs dense oracles."""
+
+import numpy as np
+import jax.numpy as jnp
+
+from compile import model
+from compile.kernels import ref
+
+
+def rand(shape, seed):
+    return np.random.RandomState(seed).randn(*shape).astype(np.float32)
+
+
+def test_kernel_tile_shape_and_value():
+    x, y = rand((256, 32), 0), rand((256, 32), 1)
+    k = np.asarray(model.kernel_tile(jnp.array(x), jnp.array(y), 0.2))
+    assert k.shape == (256, 256)
+    want = np.asarray(ref.rbf_block(jnp.array(x), jnp.array(y), 0.2))
+    np.testing.assert_allclose(k, want, rtol=2e-5, atol=2e-6)
+
+
+def test_fused_normal_tile_equals_two_step():
+    x, y = rand((256, 32), 2), rand((256, 32), 3)
+    v = rand((256,), 4)
+    fused = np.asarray(
+        model.kernel_fused_normal_tile(jnp.array(x), jnp.array(y), jnp.array(v), 0.2)
+    )
+    k = np.asarray(ref.rbf_block(jnp.array(x), jnp.array(y), 0.2))
+    want = k.T @ (k @ v)
+    np.testing.assert_allclose(fused, want, rtol=1e-3, atol=1e-3)
+
+
+def test_degree_tile_is_row_sums():
+    x, y = rand((256, 32), 5), rand((256, 32), 6)
+    deg = np.asarray(model.degree_tile(jnp.array(x), jnp.array(y), 0.2))
+    k = np.asarray(ref.rbf_block(jnp.array(x), jnp.array(y), 0.2))
+    np.testing.assert_allclose(deg, k.sum(axis=1), rtol=1e-4, atol=1e-4)
+
+
+def test_matvec_round_trip_consistency():
+    """matvec_t(x, y, matvec(x, y, v)) == K^T K v."""
+    x, y = rand((256, 32), 7), rand((256, 32), 8)
+    v = rand((256,), 9)
+    kv = model.kernel_matvec_tile(jnp.array(x), jnp.array(y), jnp.array(v), 0.15)
+    ktkv = np.asarray(
+        model.kernel_matvec_t_tile(jnp.array(x), jnp.array(y), kv, 0.15)
+    )
+    k = np.asarray(ref.rbf_block(jnp.array(x), jnp.array(y), 0.15))
+    np.testing.assert_allclose(ktkv, k.T @ (k @ np.asarray(v)), rtol=1e-3, atol=1e-3)

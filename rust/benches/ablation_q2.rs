@@ -1,0 +1,43 @@
+//! Ablation: the BLESS oversampling constant q₂ (Thm. 1 asks for a large
+//! log-factor constant; the experiments use small ones). Sweeps q₂ and
+//! reports |J|, runtime and mean R-ACC — the accuracy/cost trade-off the
+//! DESIGN.md §3 defaults were tuned on.
+
+use bless::bless::{bless, BlessConfig};
+use bless::data::susy_like;
+use bless::kernels::{Gaussian, NativeEngine};
+use bless::leverage::{exact_leverage_scores, LsGenerator, RAccStats};
+use bless::rng::Rng;
+use bless::util::table::{fnum, Table};
+use bless::util::timed;
+
+fn main() {
+    let n = 1_500;
+    let lambda = 1e-4;
+    let ds = susy_like(n, &mut Rng::seeded(7));
+    let eng = NativeEngine::new(ds.x, Gaussian::new(4.0));
+    let exact = exact_leverage_scores(&eng, lambda);
+    let all: Vec<usize> = (0..n).collect();
+
+    let mut table = Table::new(
+        &format!("Ablation: BLESS q2 sweep (n={n}, λ={lambda:.0e})"),
+        &["q2", "|J|", "time_s", "R-ACC", "q05", "q95"],
+    );
+    for &q2 in &[1.0, 2.0, 4.0, 8.0, 16.0] {
+        let cfg = BlessConfig { q2, ..Default::default() };
+        let mut rng = Rng::seeded(13);
+        let (path, secs) = timed(|| bless(&eng, lambda, &cfg, &mut rng));
+        let gen = LsGenerator::new(&eng, path.final_set(), lambda).unwrap();
+        let stats = RAccStats::from_scores(&gen.scores(&all), &exact);
+        table.row(&[
+            fnum(q2),
+            path.final_set().len().to_string(),
+            fnum(secs),
+            fnum(stats.mean),
+            fnum(stats.q05),
+            fnum(stats.q95),
+        ]);
+    }
+    println!("{}", table.to_console());
+    println!("expected shape: q05→1 and q95→1 as q2 grows, |J| ∝ q2.");
+}

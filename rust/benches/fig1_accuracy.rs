@@ -1,0 +1,15 @@
+//! Bench: Figure 1 — R-ACC accuracy/time table for all samplers against
+//! exact leverage scores (time dominated by the exact reference).
+
+use bless::coordinator::{build_engine, fig1_accuracy, EngineKind, Fig1Config};
+use bless::data::susy_like;
+use bless::kernels::Gaussian;
+use bless::rng::Rng;
+
+fn main() {
+    let cfg = Fig1Config { n: 1_500, reps: 3, lambda: 1e-4, ..Default::default() };
+    let ds = susy_like(cfg.n, &mut Rng::seeded(cfg.seed.wrapping_add(77)));
+    let eng = build_engine(EngineKind::Native, ds.x, Gaussian::new(cfg.sigma)).unwrap();
+    let t = fig1_accuracy(eng.as_dyn(), &cfg);
+    println!("{}", t.to_console());
+}

@@ -1,0 +1,18 @@
+//! Bench: Figure 2 — runtime vs n at λ=1e-3 for all scalable samplers.
+//! The paper's claim under test: BLESS/BLESS-R flat, others near-linear.
+
+use bless::coordinator::{fig2_scaling, scaling_exponent, Fig2Config};
+
+fn main() {
+    let cfg = Fig2Config {
+        sizes: vec![1_000, 2_000, 4_000, 8_000],
+        lambda: 1e-3,
+        ..Default::default()
+    };
+    let t = fig2_scaling(&cfg);
+    println!("{}", t.to_console());
+    println!("log-log slope of time vs n:");
+    for &m in &cfg.methods {
+        println!("  {:<10} {:+.2}", m.name(), scaling_exponent(&t, m));
+    }
+}

@@ -1,0 +1,24 @@
+//! Bench: Figure 5 — FALKON-BLESS vs FALKON-UNI AUC/iteration on
+//! HIGGS-like data.
+
+use bless::coordinator::{build_engine, fig45_falkon, EngineKind, Fig45Config};
+use bless::data::higgs_like;
+use bless::kernels::Gaussian;
+use bless::rng::Rng;
+
+fn main() {
+    let mut rng = Rng::seeded(0);
+    let ds = higgs_like(6_000, &mut rng);
+    let (train, test) = ds.split(0.25, &mut rng);
+    let eng = build_engine(EngineKind::Native, train.x.clone(), Gaussian::new(5.0)).unwrap();
+    let cfg = Fig45Config { iterations: 15, ..Fig45Config::higgs() };
+    let (b, u, table) = fig45_falkon(eng.as_dyn(), &train.y, &test, &cfg).unwrap();
+    println!("{}", table.to_console());
+    println!(
+        "BLESS M={} final {:.4} | UNI M={} final {:.4}",
+        b.centers,
+        b.final_auc(),
+        u.centers,
+        u.final_auc()
+    );
+}

@@ -1,0 +1,60 @@
+//! Hot-path microbenchmarks for the perf pass (EXPERIMENTS.md §Perf):
+//! GEMM, Cholesky, kernel-block evaluation (native + XLA tile), the
+//! LsGenerator batch scoring, and the FALKON fused CG matvec.
+
+use bless::data::susy_like;
+use bless::kernels::{Gaussian, KernelEngine, NativeEngine};
+use bless::leverage::{LsGenerator, WeightedSet};
+use bless::linalg::{cholesky, gemm, Matrix};
+use bless::rng::Rng;
+use bless::util::bench::Bencher;
+
+fn main() {
+    let mut b = Bencher::with_budget(3.0);
+
+    // --- GEMM (the engine's inner loop shape: tall × small-d and square)
+    let a512 = Matrix::from_fn(512, 512, |i, j| ((i * 31 + j * 17) % 19) as f64 * 0.05);
+    let b512 = Matrix::from_fn(512, 512, |i, j| ((i * 13 + j * 7) % 23) as f64 * 0.04);
+    b.bench("gemm 512x512x512", || gemm(&a512, &b512));
+    let tall = Matrix::from_fn(4_096, 18, |i, j| ((i + j) % 11) as f64 * 0.1);
+    let wide = tall.transpose();
+    b.bench("gemm 4096x18 · 18x4096 (kernel cross-term)", || gemm(&tall, &wide));
+
+    // --- Cholesky (LsGenerator / preconditioner factorizations)
+    let mut spd = gemm(&a512, &a512.transpose());
+    spd.add_scaled_identity(600.0);
+    b.bench("cholesky 512", || cholesky(&spd).unwrap());
+
+    // --- kernel block evaluation
+    let ds = susy_like(4_096, &mut Rng::seeded(3));
+    let eng = NativeEngine::new(ds.x.clone(), Gaussian::new(4.0));
+    let rows: Vec<usize> = (0..1024).collect();
+    let cols: Vec<usize> = (0..512).map(|i| i * 8).collect();
+    b.bench("native kernel block 1024x512", || eng.block(&rows, &cols));
+
+    // --- XLA tile path (if artifacts are built)
+    if let Some(dir) = bless::runtime::find_artifact_dir() {
+        let xla =
+            bless::runtime::XlaEngine::from_artifacts(&dir, ds.x.clone(), Gaussian::new(4.0))
+                .unwrap();
+        b.bench("xla kernel block 1024x512 (PJRT tiles)", || xla.block(&rows, &cols));
+        let t = xla.tile();
+        let trows: Vec<usize> = (0..t).collect();
+        b.bench("xla single tile TxT", || xla.block(&trows, &trows));
+    } else {
+        println!("(artifacts not built; skipping XLA benches)");
+    }
+
+    // --- leverage-score batch evaluation (BLESS inner loop)
+    let set = WeightedSet::uniform((0..256).map(|i| i * 16).collect(), 1e-3);
+    let gen = LsGenerator::new(&eng, &set, 1e-3).unwrap();
+    let batch: Vec<usize> = (0..1_000).collect();
+    b.bench("LsGenerator::scores batch=1000 |J|=256", || gen.scores(&batch));
+
+    // --- FALKON fused CG matvec
+    let centers: Vec<usize> = (0..256).map(|i| i * 16).collect();
+    let v: Vec<f64> = (0..256).map(|i| ((i as f64) * 0.1).sin()).collect();
+    b.bench("knm_t_knm_matvec n=4096 M=256", || eng.knm_t_knm_matvec(&centers, &v));
+
+    b.summary("hot-path microbenchmarks");
+}

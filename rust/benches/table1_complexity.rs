@@ -1,0 +1,29 @@
+//! Bench: Table 1 — per-sampler runtime at growing n and fixed λ, plus
+//! the fitted scaling exponents (theory: BLESS/BLESS-R ≈ 0, others ≈ 1).
+
+use bless::coordinator::{table1_complexity, Method, Table1Config};
+use bless::util::table::fnum;
+
+fn main() {
+    let cfg = Table1Config {
+        sizes: vec![500, 1_000, 2_000, 4_000],
+        lambda: 1e-3,
+        sigma: 4.0,
+        seed: 0,
+        methods: Method::scalable().to_vec(),
+    };
+    let (raw, summary) = table1_complexity(&cfg);
+    println!("{}", raw.to_console());
+    println!("{}", summary.to_console());
+    for row in &summary.rows {
+        let emp: f64 = row[1].parse().unwrap();
+        let theo: f64 = row[2].parse().unwrap();
+        println!(
+            "  {:<10} empirical {} vs theory {} — {}",
+            row[0],
+            fnum(emp),
+            fnum(theo),
+            if (emp - theo).abs() < 0.6 { "SHAPE OK" } else { "shape off (small-n regime)" }
+        );
+    }
+}

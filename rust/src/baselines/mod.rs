@@ -1,0 +1,135 @@
+//! Comparison baselines from Table 1 of the paper: uniform sampling [5],
+//! exact RLS sampling, Two-Pass sampling [6], Recursive-RLS [9] and
+//! SQUEAK [8]. All return the same [`WeightedSet`] shape as BLESS so the
+//! downstream consumers (Figure-1 accuracy harness, FALKON) are agnostic
+//! to the sampler.
+
+mod rrls;
+mod squeak;
+mod two_pass;
+
+pub use rrls::{rrls, RrlsConfig};
+pub use squeak::{squeak, SqueakConfig};
+pub use two_pass::{two_pass, TwoPassConfig};
+
+use crate::kernels::KernelEngine;
+use crate::leverage::{exact_leverage_scores, WeightedSet};
+use crate::rng::Rng;
+
+/// Output of a sampling baseline: the weighted set plus cost accounting.
+#[derive(Clone, Debug)]
+pub struct SamplerOutput {
+    pub set: WeightedSet,
+    /// Number of leverage-score evaluations performed (0 for uniform).
+    pub score_evals: usize,
+}
+
+/// Uniform Nyström sampling [5]: `m` columns without replacement, `A = I`.
+///
+/// Needs `m ≈ d_∞(λ) ≤ 1/λ` columns for the Eq.-2 guarantee — the gap to
+/// `d_eff(λ)` is exactly what leverage-score sampling buys (Table 1).
+pub fn uniform(engine: &dyn KernelEngine, lambda: f64, m: usize, rng: &mut Rng) -> SamplerOutput {
+    let n = engine.n();
+    let m = m.min(n);
+    let indices = rng.sample_without_replacement(n, m);
+    SamplerOutput { set: WeightedSet::uniform(indices, lambda), score_evals: 0 }
+}
+
+/// Exact RLS sampling: `m` multinomial draws from the *exact* leverage
+/// scores (Eq. 1). `O(n³)` — the gold standard for accuracy comparisons.
+pub fn exact_rls(
+    engine: &dyn KernelEngine,
+    lambda: f64,
+    m: usize,
+    rng: &mut Rng,
+) -> SamplerOutput {
+    let n = engine.n();
+    let scores = exact_leverage_scores(engine, lambda);
+    let set = sample_proportional(&(0..n).collect::<Vec<_>>(), &scores, m, n, lambda, rng);
+    SamplerOutput { set, score_evals: n }
+}
+
+/// Shared tail of every with-replacement leverage sampler: draw `m`
+/// columns from `pool` proportionally to `scores`, attaching the
+/// importance weights that make Eq. (3) unbiased:
+/// `A = (|pool|·m/n)·diag(p_j)` (Alg. 1 line 10 with `R = |pool|`).
+pub(crate) fn sample_proportional(
+    pool: &[usize],
+    scores: &[f64],
+    m: usize,
+    n: usize,
+    lambda: f64,
+    rng: &mut Rng,
+) -> WeightedSet {
+    assert_eq!(pool.len(), scores.len());
+    assert!(!pool.is_empty(), "empty candidate pool");
+    let total: f64 = scores.iter().sum();
+    assert!(total > 0.0, "all-zero scores");
+    let picks = rng.multinomial(scores, m);
+    let coeff = (pool.len() as f64) * (m as f64) / (n as f64);
+    let mut indices = Vec::with_capacity(m);
+    let mut weights = Vec::with_capacity(m);
+    for &k in &picks {
+        indices.push(pool[k]);
+        weights.push(coeff * scores[k] / total);
+    }
+    WeightedSet { indices, weights, lambda }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::susy_like;
+    use crate::kernels::{Gaussian, NativeEngine};
+    use crate::leverage::{LsGenerator, RAccStats};
+
+    fn engine(n: usize) -> NativeEngine {
+        let ds = susy_like(n, &mut Rng::seeded(51));
+        NativeEngine::new(ds.x, Gaussian::new(2.0))
+    }
+
+    #[test]
+    fn uniform_properties() {
+        let eng = engine(100);
+        let out = uniform(&eng, 1e-2, 30, &mut Rng::seeded(0));
+        assert_eq!(out.set.len(), 30);
+        assert_eq!(out.score_evals, 0);
+        assert!(out.set.weights.iter().all(|&w| w == 1.0));
+        let mut idx = out.set.indices.clone();
+        idx.sort_unstable();
+        idx.dedup();
+        assert_eq!(idx.len(), 30);
+    }
+
+    #[test]
+    fn exact_rls_sampling_is_accurate_generator() {
+        let eng = engine(250);
+        let lambda = 1e-2;
+        let out = exact_rls(&eng, lambda, 120, &mut Rng::seeded(1));
+        let gen = LsGenerator::new(&eng, &out.set, lambda).unwrap();
+        let all: Vec<usize> = (0..250).collect();
+        let approx = gen.scores(&all);
+        let exact = exact_leverage_scores(&eng, lambda);
+        let stats = RAccStats::from_scores(&approx, &exact);
+        assert!(stats.mean > 0.7 && stats.mean < 1.6, "mean {}", stats.mean);
+    }
+
+    #[test]
+    fn sample_proportional_weights_are_m_p_scaled() {
+        let mut rng = Rng::seeded(2);
+        let pool: Vec<usize> = (0..10).collect();
+        let scores = vec![1.0; 10];
+        let set = sample_proportional(&pool, &scores, 5, 10, 0.1, &mut rng);
+        // |pool| = n = 10, p = 1/10 ⇒ A_jj = 10·5/10 · 1/10 = 0.5
+        for &w in &set.weights {
+            assert!((w - 0.5).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "all-zero")]
+    fn zero_scores_rejected() {
+        let mut rng = Rng::seeded(3);
+        sample_proportional(&[0, 1], &[0.0, 0.0], 2, 2, 0.1, &mut rng);
+    }
+}

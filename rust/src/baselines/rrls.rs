@@ -1,0 +1,138 @@
+//! Recursive-RLS [Musco & Musco, 2017] — recursive halving: estimate
+//! leverage scores of a set from the scores of a uniformly-halved subset,
+//! recursing until the base case fits a direct sample. Bernoulli keeps
+//! with `p_i = min(q₂·ℓ̃(i), 1)` and inverse-probability weights (our
+//! Eq.-3 convention stores `A_ii = p_i`, matching BLESS-R).
+//!
+//! Cost is dominated by the top level: `n` score evaluations against a
+//! dictionary of size `O(d_eff)` ⇒ `O(n·d_eff²)` (Table 1).
+
+use super::SamplerOutput;
+use crate::kernels::KernelEngine;
+use crate::leverage::{LsGenerator, WeightedSet};
+use crate::rng::Rng;
+
+/// Parameters of Recursive-RLS.
+#[derive(Clone, Debug)]
+pub struct RrlsConfig {
+    /// Oversampling constant in `p_i = min(q₂·ℓ̃(i,λ), 1)`.
+    pub q2: f64,
+    /// Recursion base: pools of at most this size are used directly
+    /// (uniform weights) instead of recursing further.
+    pub base_size: usize,
+    /// Floor on every level's kept-set size.
+    pub min_m: usize,
+}
+
+impl Default for RrlsConfig {
+    fn default() -> Self {
+        RrlsConfig { q2: 4.0, base_size: 128, min_m: 8 }
+    }
+}
+
+/// Run Recursive-RLS at regularization `lambda` over the whole dataset.
+pub fn rrls(
+    engine: &dyn KernelEngine,
+    lambda: f64,
+    cfg: &RrlsConfig,
+    rng: &mut Rng,
+) -> SamplerOutput {
+    let n = engine.n();
+    let pool: Vec<usize> = (0..n).collect();
+    let mut evals = 0usize;
+    let set = recurse(engine, &pool, lambda, cfg, rng, &mut evals);
+    SamplerOutput { set, score_evals: evals }
+}
+
+fn recurse(
+    engine: &dyn KernelEngine,
+    pool: &[usize],
+    lambda: f64,
+    cfg: &RrlsConfig,
+    rng: &mut Rng,
+    evals: &mut usize,
+) -> WeightedSet {
+    if pool.len() <= cfg.base_size {
+        return WeightedSet::uniform(pool.to_vec(), lambda);
+    }
+    // uniform halving (Bernoulli(1/2) per element, as in the original)
+    let half: Vec<usize> = pool.iter().copied().filter(|_| rng.bernoulli(0.5)).collect();
+    let half = if half.is_empty() { vec![pool[0]] } else { half };
+    let inner = recurse(engine, &half, lambda, cfg, rng, evals);
+
+    // score the whole pool against the inner dictionary
+    let gen = LsGenerator::new(engine, &inner, lambda).expect("rrls generator must factor");
+    let scores = gen.scores(pool);
+    *evals += pool.len();
+
+    // Bernoulli keeps with p = min(q2·ℓ̃, 1); A_ii = p_i
+    let mut indices = Vec::new();
+    let mut weights = Vec::new();
+    for (k, &i) in pool.iter().enumerate() {
+        let p = (cfg.q2 * scores[k]).min(1.0);
+        if rng.bernoulli(p) {
+            indices.push(i);
+            weights.push(p);
+        }
+    }
+    // degenerate-level guard
+    let floor = cfg.min_m.min(pool.len());
+    let mut k = 0;
+    while indices.len() < floor {
+        let cand = pool[k % pool.len()];
+        if !indices.contains(&cand) {
+            indices.push(cand);
+            weights.push(1.0);
+        }
+        k += 1;
+    }
+    WeightedSet { indices, weights, lambda }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::susy_like;
+    use crate::kernels::{Gaussian, NativeEngine};
+    use crate::leverage::{exact_leverage_scores, RAccStats};
+
+    fn engine(n: usize) -> NativeEngine {
+        let ds = susy_like(n, &mut Rng::seeded(71));
+        NativeEngine::new(ds.x, Gaussian::new(2.0))
+    }
+
+    #[test]
+    fn output_accurate_generator() {
+        let eng = engine(400);
+        let lambda = 5e-3;
+        let out = rrls(&eng, lambda, &RrlsConfig::default(), &mut Rng::seeded(1));
+        out.set.validate().unwrap();
+        // top level scores all n points
+        assert!(out.score_evals >= 400);
+        let gen = LsGenerator::new(&eng, &out.set, lambda).unwrap();
+        let all: Vec<usize> = (0..400).collect();
+        let stats =
+            RAccStats::from_scores(&gen.scores(&all), &exact_leverage_scores(&eng, lambda));
+        assert!(stats.mean > 0.5 && stats.mean < 2.0, "mean {}", stats.mean);
+    }
+
+    #[test]
+    fn small_pool_short_circuits() {
+        let eng = engine(50);
+        let out = rrls(&eng, 1e-2, &RrlsConfig::default(), &mut Rng::seeded(2));
+        // n ≤ base_size: uniform pass-through, no score evals
+        assert_eq!(out.score_evals, 0);
+        assert_eq!(out.set.len(), 50);
+    }
+
+    #[test]
+    fn distinct_indices() {
+        let eng = engine(300);
+        let out = rrls(&eng, 1e-2, &RrlsConfig::default(), &mut Rng::seeded(3));
+        let mut idx = out.set.indices.clone();
+        idx.sort_unstable();
+        let before = idx.len();
+        idx.dedup();
+        assert_eq!(idx.len(), before);
+    }
+}

@@ -1,0 +1,159 @@
+//! SQUEAK [Calandriello, Lazaric & Valko, 2017] — single-pass
+//! merge-and-reduce: partition `[n]` into chunks, maintain a weighted
+//! dictionary, and at each step merge the next chunk into the dictionary,
+//! re-estimate leverage scores of the merged set against itself
+//! (`L_{J∪U}(J∪U, λ) ↦ J'`, Eq. 7), and thin it with shrinking inclusion
+//! probabilities `p_i = min(q₂·ℓ̃(i,λ), p_i^{old})`.
+//!
+//! Cost: `n/c` merges of `O((M+c)³)` ⇒ `O(n·d_eff²)` for chunk size
+//! `c ≍ d_eff` (Table 1).
+
+use super::SamplerOutput;
+use crate::kernels::KernelEngine;
+use crate::leverage::{LsGenerator, WeightedSet};
+use crate::rng::Rng;
+
+/// Parameters of SQUEAK.
+#[derive(Clone, Debug)]
+pub struct SqueakConfig {
+    /// Oversampling constant in `p = min(q₂·ℓ̃, 1)`.
+    pub q2: f64,
+    /// Chunk size `|U_h|`; `None` picks `max(min_m, ⌈q₂·κ²/λ⌉^{1/1}∧n/4)`
+    /// heuristically (≈ the expected dictionary size).
+    pub chunk: Option<usize>,
+    /// Floor on the dictionary size.
+    pub min_m: usize,
+}
+
+impl Default for SqueakConfig {
+    fn default() -> Self {
+        SqueakConfig { q2: 4.0, chunk: None, min_m: 8 }
+    }
+}
+
+/// Run SQUEAK at regularization `lambda` (single pass over a random
+/// permutation of the data).
+pub fn squeak(
+    engine: &dyn KernelEngine,
+    lambda: f64,
+    cfg: &SqueakConfig,
+    rng: &mut Rng,
+) -> SamplerOutput {
+    let n = engine.n();
+    let chunk = cfg
+        .chunk
+        .unwrap_or_else(|| {
+            // heuristic chunk ≈ expected dictionary size, capped for memory
+            let guess = (cfg.q2 / lambda).sqrt() * 8.0;
+            (guess.ceil() as usize).clamp(cfg.min_m.max(16), (n / 2).max(16))
+        })
+        .max(1);
+    let perm = rng.permutation(n);
+    let mut evals = 0usize;
+
+    // D_1 = U_1 with unit weights.
+    let first: Vec<usize> = perm.iter().copied().take(chunk.min(n)).collect();
+    let mut dict_idx = first;
+    let mut dict_p: Vec<f64> = vec![1.0; dict_idx.len()];
+
+    let mut pos = dict_idx.len();
+    while pos < n {
+        let next_end = (pos + chunk).min(n);
+        // merge: dictionary ∪ next chunk (chunk members enter with p = 1)
+        let mut merged_idx = dict_idx.clone();
+        let mut merged_p = dict_p.clone();
+        for &i in &perm[pos..next_end] {
+            merged_idx.push(i);
+            merged_p.push(1.0);
+        }
+        pos = next_end;
+
+        // score the merged set against itself (Eq. 7)
+        let merged_set =
+            WeightedSet { indices: merged_idx.clone(), weights: merged_p.clone(), lambda };
+        let gen =
+            LsGenerator::new(engine, &merged_set, lambda).expect("squeak generator must factor");
+        let scores = gen.scores(&merged_idx);
+        evals += merged_idx.len();
+
+        // shrink-only Bernoulli thinning
+        let mut new_idx = Vec::new();
+        let mut new_p = Vec::new();
+        for (k, &i) in merged_idx.iter().enumerate() {
+            let p_target = (cfg.q2 * scores[k]).min(1.0).min(merged_p[k]);
+            let keep_prob = p_target / merged_p[k];
+            if rng.bernoulli(keep_prob) {
+                new_idx.push(i);
+                new_p.push(p_target);
+            }
+        }
+        // degenerate guard
+        let floor = cfg.min_m.min(merged_idx.len());
+        let mut k = 0;
+        while new_idx.len() < floor {
+            let cand = merged_idx[k % merged_idx.len()];
+            if !new_idx.contains(&cand) {
+                new_idx.push(cand);
+                new_p.push(merged_p[k % merged_p.len()]);
+            }
+            k += 1;
+        }
+        dict_idx = new_idx;
+        dict_p = new_p;
+    }
+
+    let set = WeightedSet { indices: dict_idx, weights: dict_p, lambda };
+    SamplerOutput { set, score_evals: evals }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::susy_like;
+    use crate::kernels::{Gaussian, NativeEngine};
+    use crate::leverage::{exact_leverage_scores, RAccStats};
+
+    fn engine(n: usize) -> NativeEngine {
+        let ds = susy_like(n, &mut Rng::seeded(81));
+        NativeEngine::new(ds.x, Gaussian::new(2.0))
+    }
+
+    #[test]
+    fn output_accurate_generator() {
+        let eng = engine(400);
+        let lambda = 5e-3;
+        let out = squeak(&eng, lambda, &SqueakConfig::default(), &mut Rng::seeded(1));
+        out.set.validate().unwrap();
+        assert!(out.score_evals >= 400, "single pass must touch every point");
+        let gen = LsGenerator::new(&eng, &out.set, lambda).unwrap();
+        let all: Vec<usize> = (0..400).collect();
+        let stats =
+            RAccStats::from_scores(&gen.scores(&all), &exact_leverage_scores(&eng, lambda));
+        assert!(stats.mean > 0.5 && stats.mean < 2.0, "mean {}", stats.mean);
+    }
+
+    #[test]
+    fn dictionary_much_smaller_than_n() {
+        let eng = engine(500);
+        let out = squeak(&eng, 1e-2, &SqueakConfig::default(), &mut Rng::seeded(2));
+        assert!(out.set.len() < 500, "dictionary must compress");
+        assert!(out.set.len() >= SqueakConfig::default().min_m);
+    }
+
+    #[test]
+    fn weights_are_valid_probabilities() {
+        let eng = engine(300);
+        let out = squeak(&eng, 1e-2, &SqueakConfig::default(), &mut Rng::seeded(3));
+        for &w in &out.set.weights {
+            assert!(w > 0.0 && w <= 1.0 + 1e-12);
+        }
+    }
+
+    #[test]
+    fn explicit_chunk_respected() {
+        let eng = engine(200);
+        let cfg = SqueakConfig { chunk: Some(50), ..Default::default() };
+        let out = squeak(&eng, 1e-2, &cfg, &mut Rng::seeded(4));
+        out.set.validate().unwrap();
+    }
+}

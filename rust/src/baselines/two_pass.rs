@@ -1,0 +1,87 @@
+//! Two-Pass sampling [El Alaoui & Mahoney, 2015] — the first approximate
+//! leverage-score sampler: one uniform pass to build `J₁` of size
+//! `≈ q₁/λ`, then one full pass computing `ℓ̃_{J₁}(i, λ)` for **all**
+//! `i ∈ [n]` and sampling `J₂` from them. Cost `O(n/λ²)` — the `R·M²`
+//! term of §2.2 with `R = n`, `M = 1/λ`.
+
+use super::{sample_proportional, SamplerOutput};
+use crate::kernels::KernelEngine;
+use crate::leverage::{LsGenerator, WeightedSet};
+use crate::rng::Rng;
+
+/// Parameters of Two-Pass sampling.
+#[derive(Clone, Debug)]
+pub struct TwoPassConfig {
+    /// First-pass pool size multiplier: `|J₁| = min(q₁/λ, n)`.
+    pub q1: f64,
+    /// Final oversampling: `|J₂| = q₂ · d̂_eff`.
+    pub q2: f64,
+    /// Floor on the output size.
+    pub min_m: usize,
+}
+
+impl Default for TwoPassConfig {
+    fn default() -> Self {
+        TwoPassConfig { q1: 2.0, q2: 4.0, min_m: 8 }
+    }
+}
+
+/// Run Two-Pass sampling at regularization `lambda`.
+pub fn two_pass(
+    engine: &dyn KernelEngine,
+    lambda: f64,
+    cfg: &TwoPassConfig,
+    rng: &mut Rng,
+) -> SamplerOutput {
+    let n = engine.n();
+    let kappa_sq = engine.kappa_sq();
+    // Pass 1: uniform J₁ of size ≈ q₁·κ²/λ (the d_∞ ≤ κ²/λ bound).
+    let m1 = ((cfg.q1 * kappa_sq / lambda).ceil() as usize).clamp(cfg.min_m.min(n), n);
+    let j1 = rng.sample_without_replacement(n, m1);
+    let set1 = WeightedSet::uniform(j1, lambda);
+
+    // Pass 2: score every point against J₁, then multinomial-sample J₂.
+    let gen = LsGenerator::new(engine, &set1, lambda).expect("two-pass generator must factor");
+    let all: Vec<usize> = (0..n).collect();
+    let scores = gen.scores(&all);
+    let d_est: f64 = scores.iter().sum();
+    let m2 = ((cfg.q2 * d_est).ceil() as usize).clamp(cfg.min_m, n);
+    let set = sample_proportional(&all, &scores, m2, n, lambda, rng);
+    SamplerOutput { set, score_evals: n }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::susy_like;
+    use crate::kernels::{Gaussian, NativeEngine};
+    use crate::leverage::{exact_leverage_scores, RAccStats};
+
+    fn engine(n: usize) -> NativeEngine {
+        let ds = susy_like(n, &mut Rng::seeded(61));
+        NativeEngine::new(ds.x, Gaussian::new(2.0))
+    }
+
+    #[test]
+    fn output_accurate_and_sized() {
+        let eng = engine(300);
+        let lambda = 1e-2;
+        let out = two_pass(&eng, lambda, &TwoPassConfig::default(), &mut Rng::seeded(1));
+        assert_eq!(out.score_evals, 300);
+        out.set.validate().unwrap();
+        let gen = LsGenerator::new(&eng, &out.set, lambda).unwrap();
+        let all: Vec<usize> = (0..300).collect();
+        let stats =
+            RAccStats::from_scores(&gen.scores(&all), &exact_leverage_scores(&eng, lambda));
+        assert!(stats.mean > 0.6 && stats.mean < 1.8, "mean {}", stats.mean);
+    }
+
+    #[test]
+    fn pool_caps_at_n_for_tiny_lambda() {
+        let eng = engine(120);
+        // q1/λ ≫ n: J₁ must cap at n and the algorithm still works
+        let out = two_pass(&eng, 1e-4, &TwoPassConfig::default(), &mut Rng::seeded(2));
+        out.set.validate().unwrap();
+        assert!(out.set.len() <= 120);
+    }
+}

@@ -1,0 +1,183 @@
+//! Algorithm 1 — **BLESS**: bottom-up leverage-score sampling *with*
+//! replacement (multinomial resampling of a uniform candidate pool).
+
+use super::{lambda_path, BlessPath, LevelOutput};
+use crate::kernels::KernelEngine;
+use crate::leverage::{LsGenerator, WeightedSet};
+use crate::rng::Rng;
+
+/// Parameters of Algorithm 1.
+///
+/// The paper's Theorem-1 constants (`q₁ ≳ 5κ²q₂/q`, `q₂ ≳ 12q·…·log(12Hn/δ)`)
+/// are worst-case; the experiments (and ours, see `benches/ablation_q2.rs`)
+/// show small constants already give mean R-ACC ≈ 1.05. These defaults are
+/// tuned to reproduce Figure 1's accuracy/time trade-off.
+#[derive(Clone, Debug)]
+pub struct BlessConfig {
+    /// Path step `q > 1`: `λ_h = λ_{h-1}/q`.
+    pub q: f64,
+    /// Candidate oversampling: `R_h = min(q₁·κ²/λ_h, n)`.
+    pub q1: f64,
+    /// Selection oversampling: `M_h = q₂·d_h`.
+    pub q2: f64,
+    /// Starting regularization `λ₀` (default `κ²`, i.e. `t = 1` in Thm. 1).
+    pub lambda0: Option<f64>,
+    /// Floor on `M_h` — keeps the very first levels from degenerating to
+    /// one or two columns where the multinomial estimate is noisy.
+    pub min_m: usize,
+}
+
+impl Default for BlessConfig {
+    fn default() -> Self {
+        BlessConfig { q: 2.0, q1: 6.0, q2: 4.0, lambda0: None, min_m: 8 }
+    }
+}
+
+/// Run BLESS (Algorithm 1) down to regularization `lambda`.
+///
+/// Returns the whole path of weighted sets `(J_h, A_h)` for
+/// `λ_h = λ₀/q^h`, the last of which is the requested `λ`.
+pub fn bless(
+    engine: &dyn KernelEngine,
+    lambda: f64,
+    cfg: &BlessConfig,
+    rng: &mut Rng,
+) -> BlessPath {
+    let n = engine.n();
+    assert!(n > 0, "empty dataset");
+    assert!(lambda > 0.0, "lambda must be positive");
+    let kappa_sq = engine.kappa_sq();
+    let lambda0 = cfg.lambda0.unwrap_or(kappa_sq);
+    let path = lambda_path(lambda0, lambda, cfg.q);
+
+    // J_0 = ∅, A_0 = [] — the empty generator scores ℓ̃_∅ = K_ii/(λn).
+    let mut current = WeightedSet { indices: vec![], weights: vec![], lambda: lambda0 };
+    let mut levels = Vec::with_capacity(path.len());
+    let mut score_evals = 0usize;
+
+    for &lambda_h in &path {
+        // Step 4-5: uniform candidate pool U_h, R_h = q1·min(κ²/λ_h, n).
+        let r_h = ((cfg.q1 * kappa_sq / lambda_h).ceil() as usize).clamp(1, n);
+        let u_h = rng.uniform_indices(n, r_h);
+
+        // Step 6: approximate scores of the candidates w.r.t. (J_{h-1}, A_{h-1}).
+        let gen = LsGenerator::new(engine, &current, lambda_h)
+            .expect("BLESS generator must factor");
+        let scores = gen.scores(&u_h);
+        score_evals += u_h.len();
+
+        // Step 7-8: selection probabilities and d_h estimate.
+        let total: f64 = scores.iter().sum();
+        let d_h = (n as f64 / r_h as f64) * total;
+        let m_h = ((cfg.q2 * d_h).ceil() as usize).max(cfg.min_m).min(n.max(cfg.min_m));
+
+        // Step 9: multinomial sampling with replacement from U_h.
+        let picks = rng.multinomial(&scores, m_h);
+
+        // Step 10: A_h = (R_h·M_h/n) · diag(p_{j_1}, …, p_{j_M}).
+        let coeff = (r_h as f64) * (m_h as f64) / (n as f64);
+        let mut indices = Vec::with_capacity(m_h);
+        let mut weights = Vec::with_capacity(m_h);
+        for &k in &picks {
+            indices.push(u_h[k]);
+            weights.push(coeff * scores[k] / total);
+        }
+        current = WeightedSet { indices, weights, lambda: lambda_h };
+        levels.push(LevelOutput {
+            lambda: lambda_h,
+            set: current.clone(),
+            d_est: d_h,
+            candidates: r_h,
+        });
+    }
+    BlessPath { levels, score_evals }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::susy_like;
+    use crate::kernels::{Gaussian, NativeEngine};
+    use crate::leverage::{exact_leverage_scores, effective_dimension, RAccStats};
+
+    fn engine(n: usize) -> NativeEngine {
+        let ds = susy_like(n, &mut Rng::seeded(31));
+        NativeEngine::new(ds.x, Gaussian::new(2.0))
+    }
+
+    #[test]
+    fn produces_full_path() {
+        let eng = engine(300);
+        let out = bless(&eng, 1e-2, &BlessConfig::default(), &mut Rng::seeded(1));
+        assert!(!out.levels.is_empty());
+        assert_eq!(*out.levels.last().map(|l| &l.lambda).unwrap(), 1e-2);
+        // λ decreasing along the path
+        for w in out.levels.windows(2) {
+            assert!(w[1].lambda < w[0].lambda);
+        }
+        // every level has a valid weighted set
+        for l in &out.levels {
+            l.set.validate().unwrap();
+            assert!(l.set.indices.iter().all(|&i| i < 300));
+        }
+        assert!(out.score_evals > 0);
+    }
+
+    #[test]
+    fn final_scores_accurate() {
+        // End-to-end accuracy: ℓ̃_{J_H} within a multiplicative band of the
+        // exact scores — the Thm. 1(a) guarantee, with practical constants.
+        let eng = engine(400);
+        let lambda = 5e-3;
+        let out = bless(&eng, lambda, &BlessConfig::default(), &mut Rng::seeded(2));
+        let gen = LsGenerator::new(&eng, out.final_set(), lambda).unwrap();
+        let all: Vec<usize> = (0..400).collect();
+        let approx = gen.scores(&all);
+        let exact = exact_leverage_scores(&eng, lambda);
+        let stats = RAccStats::from_scores(&approx, &exact);
+        assert!(
+            stats.mean > 0.6 && stats.mean < 1.8,
+            "mean R-ACC {} out of band",
+            stats.mean
+        );
+        assert!(stats.q05 > 0.35, "5th quantile {} too low", stats.q05);
+        assert!(stats.q95 < 3.0, "95th quantile {} too high", stats.q95);
+    }
+
+    #[test]
+    fn set_size_tracks_effective_dimension() {
+        // Thm. 1(b): |J_h| ≤ q₂·d_eff(λ_h) up to constants.
+        let eng = engine(400);
+        let lambda = 1e-2;
+        let cfg = BlessConfig::default();
+        let out = bless(&eng, lambda, &cfg, &mut Rng::seeded(3));
+        let deff = effective_dimension(&exact_leverage_scores(&eng, lambda));
+        let m = out.final_set().len() as f64;
+        assert!(
+            m <= 4.0 * cfg.q2 * deff + cfg.min_m as f64,
+            "|J| = {m} vs q2·deff = {}",
+            cfg.q2 * deff
+        );
+        // d_est in the right ballpark
+        let d_est = out.levels.last().unwrap().d_est;
+        assert!(d_est > 0.2 * deff && d_est < 5.0 * deff, "d_est {d_est} vs deff {deff}");
+    }
+
+    #[test]
+    fn deterministic_with_seed() {
+        let eng = engine(200);
+        let a = bless(&eng, 1e-2, &BlessConfig::default(), &mut Rng::seeded(7));
+        let b = bless(&eng, 1e-2, &BlessConfig::default(), &mut Rng::seeded(7));
+        assert_eq!(a.final_set().indices, b.final_set().indices);
+    }
+
+    #[test]
+    fn candidates_bounded_by_q1_over_lambda() {
+        let eng = engine(500);
+        let out = bless(&eng, 1e-1, &BlessConfig::default(), &mut Rng::seeded(8));
+        for l in &out.levels {
+            let bound = (6.0 / l.lambda).ceil() as usize;
+            assert!(l.candidates <= bound.min(500));
+        }
+    }
+}

@@ -1,0 +1,178 @@
+//! Algorithm 2 — **BLESS-R**: bottom-up leverage-score sampling *without*
+//! replacement, via a single round of rejection sampling per column.
+//!
+//! Instead of materializing the candidate pool and a multinomial, BLESS-R
+//! thins `[n]` with a Bernoulli(β_h) pre-filter (the cheap uniform stage)
+//! and then accepts each survivor `j` with probability `p_{h,j}/β_h`
+//! where `p_{h,j} = min(q₂·ℓ̃_{J_{h-1}}(x_j, λ_{h-1}), 1)`, so that the
+//! unconditional acceptance probability is exactly `p_{h,j}` — leverage
+//! score sampling without ever touching most of the data.
+
+use super::{lambda_path, BlessPath, LevelOutput};
+use crate::kernels::KernelEngine;
+use crate::leverage::{LsGenerator, WeightedSet};
+use crate::rng::Rng;
+
+/// Parameters of Algorithm 2.
+#[derive(Clone, Debug)]
+pub struct BlessRConfig {
+    /// Path step `q > 1`.
+    pub q: f64,
+    /// Oversampling constant `q₂`: acceptance `p = min(q₂·ℓ̃, 1)` and
+    /// pre-filter `β_h = min(q₂·κ²/(λ_h n), 1)`.
+    pub q2: f64,
+    /// Starting regularization `λ₀` (default `κ²`).
+    pub lambda0: Option<f64>,
+    /// Floor on `|J_h|`: if rejection sampling returns fewer columns, the
+    /// level is topped up with uniform draws (keeps early levels stable).
+    pub min_m: usize,
+}
+
+impl Default for BlessRConfig {
+    fn default() -> Self {
+        BlessRConfig { q: 2.0, q2: 4.0, lambda0: None, min_m: 8 }
+    }
+}
+
+/// Run BLESS-R (Algorithm 2) down to regularization `lambda`.
+pub fn bless_r(
+    engine: &dyn KernelEngine,
+    lambda: f64,
+    cfg: &BlessRConfig,
+    rng: &mut Rng,
+) -> BlessPath {
+    let n = engine.n();
+    assert!(n > 0, "empty dataset");
+    assert!(lambda > 0.0, "lambda must be positive");
+    let kappa_sq = engine.kappa_sq();
+    let lambda0 = cfg.lambda0.unwrap_or(kappa_sq);
+    let path = lambda_path(lambda0, lambda, cfg.q);
+
+    let mut current = WeightedSet { indices: vec![], weights: vec![], lambda: lambda0 };
+    let mut levels = Vec::with_capacity(path.len());
+    let mut score_evals = 0usize;
+    let mut lambda_prev = lambda0;
+
+    for &lambda_h in &path {
+        // Step 4-7: Bernoulli(β_h) pre-filter of all n columns.
+        let beta_h = (cfg.q2 * kappa_sq / (lambda_h * n as f64)).min(1.0);
+        let mut u_h: Vec<usize> = Vec::new();
+        for i in 0..n {
+            if rng.bernoulli(beta_h) {
+                u_h.push(i);
+            }
+        }
+
+        // Step 9-12: acceptance probabilities from the *previous* level's
+        // generator at λ_{h-1} (Alg. 2 line 10 uses λ_{h-1}).
+        let gen = LsGenerator::new(engine, &current, lambda_prev)
+            .expect("BLESS-R generator must factor");
+        let scores = gen.scores(&u_h);
+        score_evals += u_h.len();
+
+        let mut indices = Vec::new();
+        let mut weights = Vec::new();
+        for (k, &j) in u_h.iter().enumerate() {
+            let p_hj = (cfg.q2 * scores[k]).min(1.0);
+            let accept = (p_hj / beta_h).min(1.0);
+            if rng.bernoulli(accept) {
+                indices.push(j);
+                weights.push(p_hj);
+            }
+        }
+
+        // Degenerate-level guard: top up with uniform columns at weight 1.
+        while indices.len() < cfg.min_m.min(n) {
+            let j = rng.below(n);
+            if !indices.contains(&j) {
+                indices.push(j);
+                weights.push(1.0);
+            }
+        }
+
+        let d_est: f64 = weights.iter().sum::<f64>() / cfg.q2;
+        current = WeightedSet { indices, weights, lambda: lambda_h };
+        levels.push(LevelOutput {
+            lambda: lambda_h,
+            set: current.clone(),
+            d_est,
+            candidates: u_h.len(),
+        });
+        lambda_prev = lambda_h;
+    }
+    BlessPath { levels, score_evals }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::susy_like;
+    use crate::kernels::{Gaussian, NativeEngine};
+    use crate::leverage::{effective_dimension, exact_leverage_scores, RAccStats};
+
+    fn engine(n: usize) -> NativeEngine {
+        let ds = susy_like(n, &mut Rng::seeded(41));
+        NativeEngine::new(ds.x, Gaussian::new(2.0))
+    }
+
+    #[test]
+    fn indices_distinct_without_replacement() {
+        let eng = engine(300);
+        let out = bless_r(&eng, 1e-2, &BlessRConfig::default(), &mut Rng::seeded(1));
+        for l in &out.levels {
+            let mut idx = l.set.indices.clone();
+            idx.sort_unstable();
+            let before = idx.len();
+            idx.dedup();
+            assert_eq!(idx.len(), before, "duplicates at λ={}", l.lambda);
+            l.set.validate().unwrap();
+        }
+    }
+
+    #[test]
+    fn final_scores_accurate() {
+        let eng = engine(400);
+        let lambda = 5e-3;
+        let out = bless_r(&eng, lambda, &BlessRConfig::default(), &mut Rng::seeded(2));
+        let gen = LsGenerator::new(&eng, out.final_set(), lambda).unwrap();
+        let all: Vec<usize> = (0..400).collect();
+        let approx = gen.scores(&all);
+        let exact = exact_leverage_scores(&eng, lambda);
+        let stats = RAccStats::from_scores(&approx, &exact);
+        assert!(
+            stats.mean > 0.6 && stats.mean < 1.8,
+            "mean R-ACC {} out of band",
+            stats.mean
+        );
+        assert!(stats.q05 > 0.35 && stats.q95 < 3.0, "quantiles {stats:?}");
+    }
+
+    #[test]
+    fn set_size_tracks_effective_dimension() {
+        let eng = engine(400);
+        let lambda = 1e-2;
+        let cfg = BlessRConfig::default();
+        let out = bless_r(&eng, lambda, &cfg, &mut Rng::seeded(3));
+        let deff = effective_dimension(&exact_leverage_scores(&eng, lambda));
+        let m = out.final_set().len() as f64;
+        // Thm. 1(b) shape: |J| = O(q2·deff)
+        assert!(m <= 6.0 * cfg.q2 * deff + cfg.min_m as f64, "|J| = {m}, deff = {deff}");
+    }
+
+    #[test]
+    fn acceptance_never_exceeds_prefilter_population() {
+        let eng = engine(200);
+        let out = bless_r(&eng, 1e-1, &BlessRConfig::default(), &mut Rng::seeded(4));
+        for l in &out.levels {
+            assert!(l.set.len() <= l.candidates + BlessRConfig::default().min_m);
+        }
+    }
+
+    #[test]
+    fn deterministic_with_seed() {
+        let eng = engine(200);
+        let a = bless_r(&eng, 1e-2, &BlessRConfig::default(), &mut Rng::seeded(7));
+        let b = bless_r(&eng, 1e-2, &BlessRConfig::default(), &mut Rng::seeded(7));
+        assert_eq!(a.final_set().indices, b.final_set().indices);
+    }
+}

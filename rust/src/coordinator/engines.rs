@@ -1,0 +1,101 @@
+//! Engine selection: native rust vs the PJRT/Pallas production path.
+
+use crate::kernels::{Gaussian, KernelEngine, NativeEngine};
+use crate::linalg::Matrix;
+use crate::runtime::{find_artifact_dir, XlaEngine};
+
+/// Which compute backend evaluates kernel blocks.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EngineKind {
+    /// Pure-rust blocked evaluation (always available).
+    Native,
+    /// AOT-compiled Pallas tiles via PJRT (requires `make artifacts`).
+    Xla,
+    /// Prefer XLA, fall back to native when artifacts are missing.
+    Auto,
+}
+
+impl EngineKind {
+    /// Parse from a CLI string.
+    pub fn parse(s: &str) -> Option<EngineKind> {
+        match s.to_lowercase().as_str() {
+            "native" => Some(EngineKind::Native),
+            "xla" => Some(EngineKind::Xla),
+            "auto" => Some(EngineKind::Auto),
+            _ => None,
+        }
+    }
+}
+
+/// A built engine (enum so call sites stay object-safe and allocation-free).
+pub enum Engine {
+    Native(NativeEngine),
+    Xla(XlaEngine),
+}
+
+impl Engine {
+    /// Borrow as the trait object every algorithm consumes.
+    pub fn as_dyn(&self) -> &dyn KernelEngine {
+        match self {
+            Engine::Native(e) => e,
+            Engine::Xla(e) => e,
+        }
+    }
+
+    /// Backend label for logs.
+    pub fn label(&self) -> &'static str {
+        match self {
+            Engine::Native(_) => "native",
+            Engine::Xla(_) => "xla",
+        }
+    }
+}
+
+/// Build the requested engine over a dataset.
+pub fn build_engine(kind: EngineKind, x: Matrix, kernel: Gaussian) -> anyhow::Result<Engine> {
+    match kind {
+        EngineKind::Native => Ok(Engine::Native(NativeEngine::new(x, kernel))),
+        EngineKind::Xla => {
+            let dir = find_artifact_dir()
+                .ok_or_else(|| anyhow::anyhow!("artifacts not found — run `make artifacts`"))?;
+            Ok(Engine::Xla(XlaEngine::from_artifacts(&dir, x, kernel)?))
+        }
+        EngineKind::Auto => match find_artifact_dir() {
+            Some(dir) => Ok(Engine::Xla(XlaEngine::from_artifacts(&dir, x, kernel)?)),
+            None => Ok(Engine::Native(NativeEngine::new(x, kernel))),
+        },
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::susy_like;
+    use crate::rng::Rng;
+
+    #[test]
+    fn native_always_builds() {
+        let ds = susy_like(50, &mut Rng::seeded(0));
+        let e = build_engine(EngineKind::Native, ds.x, Gaussian::new(2.0)).unwrap();
+        assert_eq!(e.label(), "native");
+        assert_eq!(e.as_dyn().n(), 50);
+    }
+
+    #[test]
+    fn auto_prefers_xla_when_artifacts_exist() {
+        let ds = susy_like(50, &mut Rng::seeded(1));
+        let e = build_engine(EngineKind::Auto, ds.x, Gaussian::new(2.0)).unwrap();
+        if find_artifact_dir().is_some() {
+            assert_eq!(e.label(), "xla");
+        } else {
+            assert_eq!(e.label(), "native");
+        }
+    }
+
+    #[test]
+    fn kind_parsing() {
+        assert_eq!(EngineKind::parse("XLA"), Some(EngineKind::Xla));
+        assert_eq!(EngineKind::parse("native"), Some(EngineKind::Native));
+        assert_eq!(EngineKind::parse("bogus"), None);
+    }
+}

@@ -1,0 +1,126 @@
+//! Figure 1 — leverage-score relative accuracy (R-ACC).
+//!
+//! Paper setup: SUSY subset n = 70 000, Gaussian σ = 4, λ = 1e-5, exact
+//! scores as reference, 10 repetitions; reports runtime, mean R-ACC and
+//! the 5ᵗʰ/95ᵗʰ quantiles per method.
+//!
+//! Our substitution (DESIGN.md §5): SUSY-like n = 8 000 (exact RLS is
+//! O(n³) and this box has one core), λ rescaled to keep d_eff in the same
+//! regime. The *statistics* compared are identical.
+
+use super::{run_method, Method};
+use crate::kernels::KernelEngine;
+use crate::leverage::{exact_leverage_scores, LsGenerator, RAccStats};
+use crate::rng::Rng;
+use crate::util::table::{fnum, Table};
+use crate::util::{mean, timed};
+
+/// Configuration of the Figure-1 experiment.
+#[derive(Clone, Debug)]
+pub struct Fig1Config {
+    pub n: usize,
+    pub sigma: f64,
+    pub lambda: f64,
+    pub reps: usize,
+    pub seed: u64,
+    /// Columns for the Uniform baseline (the other methods size themselves).
+    pub uniform_m: usize,
+    pub methods: Vec<Method>,
+}
+
+impl Default for Fig1Config {
+    fn default() -> Self {
+        Fig1Config {
+            n: 2_000,
+            sigma: 4.0,
+            lambda: 1e-4,
+            reps: 5,
+            seed: 0,
+            uniform_m: 400,
+            methods: vec![
+                Method::Bless,
+                Method::BlessR,
+                Method::Squeak,
+                Method::Uniform,
+                Method::Rrls,
+                Method::TwoPass,
+            ],
+        }
+    }
+}
+
+/// Run the accuracy comparison; returns the Figure-1 table
+/// (method, time, mean R-ACC, 5ᵗʰ/95ᵗʰ quantiles, |J|).
+pub fn fig1_accuracy(engine: &dyn KernelEngine, cfg: &Fig1Config) -> Table {
+    let n = engine.n();
+    let all: Vec<usize> = (0..n).collect();
+    // exact reference once (shared across methods and reps)
+    let (exact, exact_secs) = timed(|| exact_leverage_scores(engine, cfg.lambda));
+    let mut table = Table::new(
+        &format!(
+            "Figure 1: R-ACC at λ={:.0e}, n={}, σ={}, {} reps (exact ref: {:.1}s)",
+            cfg.lambda, n, cfg.sigma, cfg.reps, exact_secs
+        ),
+        &["method", "time_s", "R-ACC", "q05", "q95", "|J|"],
+    );
+
+    for &m in &cfg.methods {
+        let mut times = Vec::new();
+        let mut means = Vec::new();
+        let mut q05s = Vec::new();
+        let mut q95s = Vec::new();
+        let mut sizes = Vec::new();
+        for rep in 0..cfg.reps {
+            let mut rng = Rng::seeded(cfg.seed ^ (rep as u64 + 1) * 0x9E37);
+            let ((set, _), secs) =
+                timed(|| run_method(m, engine, cfg.lambda, cfg.uniform_m, &mut rng));
+            let gen = LsGenerator::new(engine, &set, cfg.lambda).expect("generator");
+            let approx = gen.scores(&all);
+            let stats = RAccStats::from_scores(&approx, &exact);
+            times.push(secs);
+            means.push(stats.mean);
+            q05s.push(stats.q05);
+            q95s.push(stats.q95);
+            sizes.push(set.len() as f64);
+        }
+        table.row(&[
+            m.name().to_string(),
+            fnum(mean(&times)),
+            fnum(mean(&means)),
+            fnum(mean(&q05s)),
+            fnum(mean(&q95s)),
+            format!("{:.0}", mean(&sizes)),
+        ]);
+    }
+    table
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::susy_like;
+    use crate::kernels::Gaussian;
+
+    fn default_engine(cfg: &Fig1Config) -> crate::kernels::NativeEngine {
+        let ds = susy_like(cfg.n, &mut Rng::seeded(cfg.seed.wrapping_add(77)));
+        crate::kernels::NativeEngine::new(ds.x, Gaussian::new(cfg.sigma))
+    }
+
+    #[test]
+    fn small_fig1_runs_and_has_sane_raccs() {
+        let cfg = Fig1Config {
+            n: 250,
+            reps: 2,
+            lambda: 1e-2,
+            uniform_m: 60,
+            methods: vec![Method::Bless, Method::Uniform],
+            ..Default::default()
+        };
+        let eng = default_engine(&cfg);
+        let t = fig1_accuracy(&eng, &cfg);
+        assert_eq!(t.rows.len(), 2);
+        // BLESS mean R-ACC close to 1
+        let bless_racc: f64 = t.rows[0][2].parse().unwrap();
+        assert!(bless_racc > 0.5 && bless_racc < 2.0, "R-ACC {bless_racc}");
+    }
+}

@@ -1,0 +1,106 @@
+//! Figure 2 — runtime vs dataset size at fixed λ.
+//!
+//! Paper: n from 1 000 to 70 000, λ = 1e-3; previous algorithms' runtime
+//! grows near-linearly in n while BLESS/BLESS-R stay at a constant
+//! `O(1/λ)` cost. We reproduce the same sweep (n capped by the one-core
+//! budget; the *shape* — flat vs linear — is the claim under test).
+
+use super::{run_method, Method};
+use crate::data::susy_like;
+use crate::kernels::{Gaussian, NativeEngine};
+use crate::rng::Rng;
+use crate::util::table::{fnum, Table};
+use crate::util::timed;
+
+/// Configuration of the Figure-2 sweep.
+#[derive(Clone, Debug)]
+pub struct Fig2Config {
+    pub sizes: Vec<usize>,
+    pub sigma: f64,
+    pub lambda: f64,
+    pub seed: u64,
+    pub methods: Vec<Method>,
+}
+
+impl Default for Fig2Config {
+    fn default() -> Self {
+        Fig2Config {
+            sizes: vec![1_000, 2_000, 4_000, 8_000],
+            sigma: 4.0,
+            lambda: 1e-3,
+            seed: 0,
+            methods: Method::scalable().to_vec(),
+        }
+    }
+}
+
+/// Result: one row per (n, method) with wallclock and score-evaluation
+/// counts, plus a per-method log-log slope summary appended by the CLI.
+pub fn fig2_scaling(cfg: &Fig2Config) -> Table {
+    let mut table = Table::new(
+        &format!("Figure 2: runtime vs n at λ={:.0e}", cfg.lambda),
+        &["n", "method", "time_s", "score_evals", "|J|"],
+    );
+    for &n in &cfg.sizes {
+        let ds = susy_like(n, &mut Rng::seeded(cfg.seed.wrapping_add(n as u64)));
+        let eng = NativeEngine::new(ds.x, Gaussian::new(cfg.sigma));
+        for &m in &cfg.methods {
+            let mut rng = Rng::seeded(cfg.seed ^ 0xF1E2);
+            let ((set, evals), secs) =
+                timed(|| run_method(m, &eng, cfg.lambda, (1.0 / cfg.lambda) as usize, &mut rng));
+            table.row(&[
+                n.to_string(),
+                m.name().to_string(),
+                fnum(secs),
+                evals.to_string(),
+                set.len().to_string(),
+            ]);
+        }
+    }
+    table
+}
+
+/// Fit the log-log slope of time vs n for one method from a fig2 table —
+/// the Table-1 empirical scaling exponent (≈0 for BLESS, ≈1 for others).
+pub fn scaling_exponent(table: &Table, method: Method) -> f64 {
+    let pts: Vec<(f64, f64)> = table
+        .rows
+        .iter()
+        .filter(|r| r[1] == method.name())
+        .map(|r| {
+            let n: f64 = r[0].parse().unwrap();
+            let t: f64 = r[2].parse().unwrap();
+            (n.ln(), t.max(1e-9).ln())
+        })
+        .collect();
+    assert!(pts.len() >= 2, "need at least two sizes");
+    let mx = crate::util::mean(&pts.iter().map(|p| p.0).collect::<Vec<_>>());
+    let my = crate::util::mean(&pts.iter().map(|p| p.1).collect::<Vec<_>>());
+    let num: f64 = pts.iter().map(|(x, y)| (x - mx) * (y - my)).sum();
+    let den: f64 = pts.iter().map(|(x, _)| (x - mx) * (x - mx)).sum();
+    num / den
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sweep_runs_and_slopes_differ() {
+        let cfg = Fig2Config {
+            sizes: vec![300, 600, 1_200],
+            lambda: 5e-3,
+            methods: vec![Method::Bless, Method::TwoPass],
+            ..Default::default()
+        };
+        let t = fig2_scaling(&cfg);
+        assert_eq!(t.rows.len(), 6);
+        let s_bless = scaling_exponent(&t, Method::Bless);
+        let s_tp = scaling_exponent(&t, Method::TwoPass);
+        // Two-Pass must scale strictly worse in n than BLESS
+        assert!(
+            s_tp > s_bless - 0.2,
+            "two-pass slope {s_tp} vs bless {s_bless}"
+        );
+    }
+}

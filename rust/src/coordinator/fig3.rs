@@ -1,0 +1,150 @@
+//! Figure 3 — stability in λ_falkon: classification error after 5 CG
+//! iterations across a λ_falkon sweep, FALKON-BLESS vs FALKON-UNI.
+//!
+//! Paper claim: the BLESS-center model has a *wider* region of λ_falkon
+//! within 95% of its best error (i.e. leverage-score centers make the
+//! solver less sensitive to under-regularization).
+
+use crate::bless::{bless, BlessConfig};
+use crate::data::{classification_error, Dataset};
+use crate::falkon::Falkon;
+use crate::kernels::KernelEngine;
+use crate::leverage::WeightedSet;
+use crate::rng::Rng;
+use crate::util::table::{fnum, Table};
+
+/// Configuration of the λ-stability sweep.
+#[derive(Clone, Debug)]
+pub struct Fig3Config {
+    pub sigma: f64,
+    pub lambda_bless: f64,
+    /// λ_falkon sweep grid (log-spaced).
+    pub lambdas: Vec<f64>,
+    pub iterations: usize,
+    pub seed: u64,
+}
+
+impl Default for Fig3Config {
+    fn default() -> Self {
+        Fig3Config {
+            sigma: 4.0,
+            lambda_bless: 1e-3,
+            lambdas: (0..10).map(|i| 10f64.powf(-1.0 - 0.6 * i as f64)).collect(),
+            iterations: 5,
+            seed: 0,
+        }
+    }
+}
+
+/// Sweep result: per-λ c-err for both center choices + the width (in
+/// decades) of each method's 95%-optimal region.
+pub struct Fig3Result {
+    pub table: Table,
+    pub bless_region_decades: f64,
+    pub uni_region_decades: f64,
+}
+
+/// Run the sweep.
+pub fn fig3_stability(
+    engine: &dyn KernelEngine,
+    train_y: &[f64],
+    test: &Dataset,
+    cfg: &Fig3Config,
+) -> anyhow::Result<Fig3Result> {
+    // centers chosen once per method, reused across the λ sweep
+    let mut rng = Rng::seeded(cfg.seed.wrapping_add(11));
+    let path = bless(engine, cfg.lambda_bless, &BlessConfig::default(), &mut rng);
+    let bless_set = path.final_set().clone();
+    let m = bless_set.len();
+    let mut rng = Rng::seeded(cfg.seed.wrapping_add(12));
+    let uni_idx = rng.sample_without_replacement(engine.n(), m.min(engine.n()));
+
+    let mut table = Table::new(
+        &format!(
+            "Figure 3: c-err after {} iterations vs λ_falkon (M={})",
+            cfg.iterations, m
+        ),
+        &["lambda", "BLESS_cerr", "UNI_cerr"],
+    );
+    let mut errs_b = Vec::new();
+    let mut errs_u = Vec::new();
+    for &lam in &cfg.lambdas {
+        let e_b = run_once(engine, train_y, test, &bless_set.with_lambda(lam), lam, cfg)?;
+        let uni_set = WeightedSet::uniform(uni_idx.clone(), lam);
+        let e_u = run_once(engine, train_y, test, &uni_set, lam, cfg)?;
+        errs_b.push(e_b);
+        errs_u.push(e_u);
+        table.row(&[fnum(lam), fnum(e_b), fnum(e_u)]);
+    }
+    let width = |errs: &[f64]| -> f64 {
+        // width (in decades of λ) of the region within 5% of the best err
+        let best = errs.iter().cloned().fold(f64::INFINITY, f64::min);
+        let thresh = best * 1.05 + 1e-12;
+        let lam_ln: Vec<f64> = cfg.lambdas.iter().map(|l| l.log10()).collect();
+        let mut lo = f64::INFINITY;
+        let mut hi = f64::NEG_INFINITY;
+        for (i, &e) in errs.iter().enumerate() {
+            if e <= thresh {
+                lo = lo.min(lam_ln[i]);
+                hi = hi.max(lam_ln[i]);
+            }
+        }
+        (hi - lo).max(0.0)
+    };
+    Ok(Fig3Result {
+        table,
+        bless_region_decades: width(&errs_b),
+        uni_region_decades: width(&errs_u),
+    })
+}
+
+impl WeightedSet {
+    /// Copy with a different λ tag (the Figure-3 sweep reuses one center
+    /// set across many λ_falkon values).
+    pub fn with_lambda(&self, lambda: f64) -> WeightedSet {
+        WeightedSet { indices: self.indices.clone(), weights: self.weights.clone(), lambda }
+    }
+}
+
+fn run_once(
+    engine: &dyn KernelEngine,
+    train_y: &[f64],
+    test: &Dataset,
+    set: &WeightedSet,
+    lambda: f64,
+    cfg: &Fig3Config,
+) -> anyhow::Result<f64> {
+    let solver = Falkon::new(engine, set, lambda)?;
+    let model = solver.fit(train_y, cfg.iterations, None)?;
+    let scores = model.predict(engine, &test.x);
+    Ok(classification_error(&scores, &test.y))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::susy_like;
+    use crate::kernels::{Gaussian, NativeEngine};
+
+    #[test]
+    fn sweep_runs_and_regions_nonneg() {
+        let mut rng = Rng::seeded(9);
+        let ds = susy_like(600, &mut rng);
+        let (train, test) = ds.split(0.3, &mut rng);
+        let eng = NativeEngine::new(train.x.clone(), Gaussian::new(4.0));
+        let cfg = Fig3Config {
+            lambdas: vec![1e-2, 1e-3, 1e-4, 1e-5],
+            iterations: 4,
+            ..Default::default()
+        };
+        let res = fig3_stability(&eng, &train.y, &test, &cfg).unwrap();
+        assert_eq!(res.table.rows.len(), 4);
+        assert!(res.bless_region_decades >= 0.0);
+        assert!(res.uni_region_decades >= 0.0);
+        // errors are valid probabilities
+        for r in &res.table.rows {
+            let e: f64 = r[1].parse().unwrap();
+            assert!((0.0..=1.0).contains(&e));
+        }
+    }
+}

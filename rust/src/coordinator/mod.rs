@@ -1,0 +1,146 @@
+//! Experiment coordinator: the harness that regenerates every table and
+//! figure of the paper's evaluation section (see DESIGN.md §4 for the
+//! experiment index). Each submodule returns [`crate::util::table::Table`]s
+//! so the CLI, the examples and the benches share one implementation.
+
+mod engines;
+mod fig1;
+mod fig2;
+mod fig3;
+mod fig45;
+mod table1;
+
+pub use engines::{build_engine, Engine, EngineKind};
+pub use fig1::{fig1_accuracy, Fig1Config};
+pub use fig2::{fig2_scaling, scaling_exponent, Fig2Config};
+pub use fig3::{fig3_stability, Fig3Config};
+pub use fig45::{fig45_falkon, Fig45Config, FalkonCurve};
+pub use table1::{table1_complexity, Table1Config};
+
+/// The sampling methods compared throughout the evaluation.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Method {
+    Bless,
+    BlessR,
+    Squeak,
+    Rrls,
+    TwoPass,
+    Uniform,
+    ExactRls,
+}
+
+impl Method {
+    /// All methods, in the paper's Figure-1 ordering.
+    pub fn all() -> &'static [Method] {
+        &[
+            Method::Bless,
+            Method::BlessR,
+            Method::Squeak,
+            Method::Uniform,
+            Method::Rrls,
+            Method::TwoPass,
+            Method::ExactRls,
+        ]
+    }
+
+    /// Fast methods only (feasible in the Figure-2 n-sweep).
+    pub fn scalable() -> &'static [Method] {
+        &[Method::Bless, Method::BlessR, Method::Squeak, Method::Rrls, Method::TwoPass]
+    }
+
+    /// Display name matching the paper.
+    pub fn name(&self) -> &'static str {
+        match self {
+            Method::Bless => "BLESS",
+            Method::BlessR => "BLESS-R",
+            Method::Squeak => "SQUEAK",
+            Method::Rrls => "RRLS",
+            Method::TwoPass => "Two-Pass",
+            Method::Uniform => "Uniform",
+            Method::ExactRls => "Exact-RLS",
+        }
+    }
+
+    /// Parse from a CLI string.
+    pub fn parse(s: &str) -> Option<Method> {
+        match s.to_lowercase().as_str() {
+            "bless" => Some(Method::Bless),
+            "bless-r" | "blessr" => Some(Method::BlessR),
+            "squeak" => Some(Method::Squeak),
+            "rrls" => Some(Method::Rrls),
+            "two-pass" | "twopass" => Some(Method::TwoPass),
+            "uniform" => Some(Method::Uniform),
+            "exact" | "exact-rls" => Some(Method::ExactRls),
+            _ => None,
+        }
+    }
+}
+
+/// Run one sampling method, returning `(set, score_evals)`.
+pub fn run_method(
+    method: Method,
+    engine: &dyn crate::kernels::KernelEngine,
+    lambda: f64,
+    uniform_m: usize,
+    rng: &mut crate::rng::Rng,
+) -> (crate::leverage::WeightedSet, usize) {
+    use crate::baselines as bl;
+    match method {
+        Method::Bless => {
+            let out = crate::bless::bless(engine, lambda, &Default::default(), rng);
+            let evals = out.score_evals;
+            (out.final_set().clone(), evals)
+        }
+        Method::BlessR => {
+            let out = crate::bless::bless_r(engine, lambda, &Default::default(), rng);
+            let evals = out.score_evals;
+            (out.final_set().clone(), evals)
+        }
+        Method::Squeak => {
+            let out = bl::squeak(engine, lambda, &Default::default(), rng);
+            (out.set, out.score_evals)
+        }
+        Method::Rrls => {
+            let out = bl::rrls(engine, lambda, &Default::default(), rng);
+            (out.set, out.score_evals)
+        }
+        Method::TwoPass => {
+            let out = bl::two_pass(engine, lambda, &Default::default(), rng);
+            (out.set, out.score_evals)
+        }
+        Method::Uniform => {
+            let out = bl::uniform(engine, lambda, uniform_m, rng);
+            (out.set, out.score_evals)
+        }
+        Method::ExactRls => {
+            let out = bl::exact_rls(engine, lambda, uniform_m, rng);
+            (out.set, out.score_evals)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn method_parse_round_trip() {
+        for &m in Method::all() {
+            assert_eq!(Method::parse(m.name()), Some(m));
+        }
+        assert_eq!(Method::parse("nope"), None);
+    }
+
+    #[test]
+    fn run_method_dispatches_all() {
+        let ds = crate::data::susy_like(150, &mut crate::rng::Rng::seeded(1));
+        let eng =
+            crate::kernels::NativeEngine::new(ds.x, crate::kernels::Gaussian::new(2.0));
+        for &m in Method::all() {
+            let mut rng = crate::rng::Rng::seeded(2);
+            let (set, _) = run_method(m, &eng, 1e-2, 30, &mut rng);
+            set.validate().unwrap();
+            assert!(!set.is_empty(), "{} produced empty set", m.name());
+        }
+    }
+}

@@ -1,0 +1,114 @@
+//! Table 1 — complexity comparison: measured runtime scaling in `n`
+//! (at fixed λ) and in `1/λ` (at fixed n) for every sampler, against the
+//! theoretical exponents the paper tabulates.
+//!
+//! | method    | theory time        | theory |J|   |
+//! |-----------|--------------------|--------------|
+//! | Uniform   | —                  | 1/λ          |
+//! | Exact     | n³                 | d_eff        |
+//! | Two-Pass  | n/λ²               | d_eff        |
+//! | RRLS      | n·d_eff²           | d_eff        |
+//! | SQUEAK    | n·d_eff²           | d_eff        |
+//! | BLESS(-R) | (1/λ)·d_eff²       | d_eff        |
+//!
+//! We report the fitted log-log exponent of time vs n — BLESS/BLESS-R
+//! should be ≈0 (n-independent once n > 1/λ), the others ≈1 (and exact ≈3).
+
+use super::fig2::{fig2_scaling, scaling_exponent, Fig2Config};
+use super::Method;
+use crate::util::table::{fnum, Table};
+
+/// Configuration of the Table-1 scaling measurement.
+#[derive(Clone, Debug)]
+pub struct Table1Config {
+    pub sizes: Vec<usize>,
+    pub lambda: f64,
+    pub sigma: f64,
+    pub seed: u64,
+    pub methods: Vec<Method>,
+}
+
+impl Default for Table1Config {
+    fn default() -> Self {
+        Table1Config {
+            sizes: vec![1_000, 2_000, 4_000, 8_000],
+            lambda: 1e-3,
+            sigma: 4.0,
+            seed: 0,
+            methods: Method::scalable().to_vec(),
+        }
+    }
+}
+
+/// Theoretical n-exponent of each method's runtime at fixed λ
+/// (for n beyond the 1/λ crossover).
+pub fn theory_exponent(m: Method) -> f64 {
+    match m {
+        Method::Bless | Method::BlessR => 0.0,
+        Method::Uniform => 0.0,
+        Method::ExactRls => 3.0,
+        Method::TwoPass | Method::Rrls | Method::Squeak => 1.0,
+    }
+}
+
+/// Run the measurement and produce the Table-1 comparison.
+pub fn table1_complexity(cfg: &Table1Config) -> (Table, Table) {
+    let f2 = Fig2Config {
+        sizes: cfg.sizes.clone(),
+        sigma: cfg.sigma,
+        lambda: cfg.lambda,
+        seed: cfg.seed,
+        methods: cfg.methods.clone(),
+    };
+    let raw = fig2_scaling(&f2);
+    let mut summary = Table::new(
+        &format!(
+            "Table 1: empirical time exponent in n at λ={:.0e} (sizes {:?})",
+            cfg.lambda, cfg.sizes
+        ),
+        &["method", "empirical_exp", "theory_exp", "final_|J|"],
+    );
+    for &m in &cfg.methods {
+        let emp = scaling_exponent(&raw, m);
+        let last_j = raw
+            .rows
+            .iter()
+            .rev()
+            .find(|r| r[1] == m.name())
+            .map(|r| r[4].clone())
+            .unwrap_or_default();
+        summary.row(&[
+            m.name().to_string(),
+            fnum(emp),
+            fnum(theory_exponent(m)),
+            last_j,
+        ]);
+    }
+    (raw, summary)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exponents_reported_for_each_method() {
+        let cfg = Table1Config {
+            sizes: vec![300, 600],
+            lambda: 5e-3,
+            methods: vec![Method::Bless, Method::Squeak],
+            ..Default::default()
+        };
+        let (raw, summary) = table1_complexity(&cfg);
+        assert_eq!(raw.rows.len(), 4);
+        assert_eq!(summary.rows.len(), 2);
+        assert_eq!(summary.rows[0][0], "BLESS");
+    }
+
+    #[test]
+    fn theory_exponents_match_paper() {
+        assert_eq!(theory_exponent(Method::Bless), 0.0);
+        assert_eq!(theory_exponent(Method::Squeak), 1.0);
+        assert_eq!(theory_exponent(Method::ExactRls), 3.0);
+    }
+}

@@ -1,0 +1,123 @@
+//! Evaluation metrics: AUC, classification error, RMSE.
+
+/// Area under the ROC curve of `scores` against ±1 `labels`.
+///
+/// Computed by the rank statistic (Mann–Whitney U) with midrank handling
+/// of tied scores — O(n log n).
+pub fn auc(scores: &[f64], labels: &[f64]) -> f64 {
+    assert_eq!(scores.len(), labels.len());
+    let n = scores.len();
+    let mut idx: Vec<usize> = (0..n).collect();
+    idx.sort_by(|&a, &b| scores[a].partial_cmp(&scores[b]).unwrap());
+    // midranks
+    let mut ranks = vec![0.0; n];
+    let mut i = 0;
+    while i < n {
+        let mut j = i;
+        while j + 1 < n && scores[idx[j + 1]] == scores[idx[i]] {
+            j += 1;
+        }
+        let mid = (i + j) as f64 / 2.0 + 1.0;
+        for k in i..=j {
+            ranks[idx[k]] = mid;
+        }
+        i = j + 1;
+    }
+    let n_pos = labels.iter().filter(|&&l| l > 0.0).count();
+    let n_neg = n - n_pos;
+    if n_pos == 0 || n_neg == 0 {
+        return 0.5;
+    }
+    let rank_sum_pos: f64 = (0..n).filter(|&i| labels[i] > 0.0).map(|i| ranks[i]).sum();
+    let u = rank_sum_pos - (n_pos * (n_pos + 1)) as f64 / 2.0;
+    u / (n_pos as f64 * n_neg as f64)
+}
+
+/// Fraction of sign mismatches between `scores` and ±1 `labels`.
+pub fn classification_error(scores: &[f64], labels: &[f64]) -> f64 {
+    assert_eq!(scores.len(), labels.len());
+    let wrong = scores
+        .iter()
+        .zip(labels)
+        .filter(|(s, l)| (s.is_sign_positive() as i8 * 2 - 1) as f64 * **l <= 0.0)
+        .count();
+    wrong as f64 / scores.len() as f64
+}
+
+/// Confusion counts `(tp, fp, tn, fn)` at threshold 0.
+pub fn confusion(scores: &[f64], labels: &[f64]) -> (usize, usize, usize, usize) {
+    let (mut tp, mut fp, mut tn, mut fnn) = (0, 0, 0, 0);
+    for (s, l) in scores.iter().zip(labels) {
+        match (*s > 0.0, *l > 0.0) {
+            (true, true) => tp += 1,
+            (true, false) => fp += 1,
+            (false, false) => tn += 1,
+            (false, true) => fnn += 1,
+        }
+    }
+    (tp, fp, tn, fnn)
+}
+
+/// Root mean squared error.
+pub fn rmse(pred: &[f64], target: &[f64]) -> f64 {
+    assert_eq!(pred.len(), target.len());
+    let s: f64 = pred.iter().zip(target).map(|(p, t)| (p - t) * (p - t)).sum();
+    (s / pred.len() as f64).sqrt()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn perfect_auc() {
+        let scores = vec![-2.0, -1.0, 1.0, 2.0];
+        let labels = vec![-1.0, -1.0, 1.0, 1.0];
+        assert!((auc(&scores, &labels) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn inverted_auc_is_zero() {
+        let scores = vec![2.0, 1.0, -1.0, -2.0];
+        let labels = vec![-1.0, -1.0, 1.0, 1.0];
+        assert!(auc(&scores, &labels).abs() < 1e-12);
+    }
+
+    #[test]
+    fn random_auc_near_half() {
+        let mut r = crate::rng::Rng::seeded(0);
+        let n = 10_000;
+        let scores: Vec<f64> = (0..n).map(|_| r.next_f64()).collect();
+        let labels: Vec<f64> =
+            (0..n).map(|_| if r.bernoulli(0.5) { 1.0 } else { -1.0 }).collect();
+        let a = auc(&scores, &labels);
+        assert!((a - 0.5).abs() < 0.02, "auc {a}");
+    }
+
+    #[test]
+    fn ties_get_midranks() {
+        // all scores equal → AUC 0.5 exactly
+        let scores = vec![1.0; 6];
+        let labels = vec![1.0, -1.0, 1.0, -1.0, 1.0, -1.0];
+        assert!((auc(&scores, &labels) - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn classification_error_counts() {
+        let scores = vec![1.0, -1.0, 1.0, -1.0];
+        let labels = vec![1.0, 1.0, -1.0, -1.0];
+        assert!((classification_error(&scores, &labels) - 0.5).abs() < 1e-12);
+        let (tp, fp, tn, fnn) = confusion(&scores, &labels);
+        assert_eq!((tp, fp, tn, fnn), (1, 1, 1, 1));
+    }
+
+    #[test]
+    fn rmse_basic() {
+        assert!((rmse(&[1.0, 2.0], &[1.0, 4.0]) - (2.0f64).sqrt()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn degenerate_single_class() {
+        assert_eq!(auc(&[0.3, 0.5], &[1.0, 1.0]), 0.5);
+    }
+}

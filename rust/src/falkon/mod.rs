@@ -1,0 +1,81 @@
+//! FALKON — approximate kernel ridge regression via Nyström centers +
+//! preconditioned conjugate gradient (§3 of the paper, Defs. 2–3 of the
+//! appendix).
+//!
+//! * [`Preconditioner`] — the generalized preconditioner of Def. 2 with
+//!   the BLESS weight matrix `A` (Eq. 15); uniform centers are the
+//!   special case `A = I` (Eq. 14).
+//! * [`Falkon`] — the solver: CG on `Wβ = b` with
+//!   `W = Bᵀ(K_nMᵀK_nM + λnK_MM)B`, streaming `K_nM` in row tiles so the
+//!   `n × M` matrix is never materialized (`O(M²)` memory, Eq. 16).
+//! * [`nystrom_krr`] — the direct `O(nM² + M³)` Nyström solver (Def. 4),
+//!   used as the convergence oracle in tests.
+//!
+//! FALKON-BLESS = `Falkon::fit` with centers/weights from
+//! [`crate::bless::bless`]; FALKON-UNI = the same with uniform centers.
+
+mod cg;
+mod precond;
+mod solver;
+
+pub use cg::{cg_solve, CgCallback, CgTrace};
+pub use precond::Preconditioner;
+pub use solver::{nystrom_krr, Falkon, FalkonModel, IterationStat};
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{auc, susy_like};
+    use crate::kernels::{Gaussian, KernelEngine, NativeEngine};
+    use crate::leverage::WeightedSet;
+    use crate::rng::Rng;
+
+    /// End-to-end: FALKON matches exact KRR on a small problem where all
+    /// n points are centers (then Nyström-KRR *is* KRR).
+    #[test]
+    fn falkon_matches_exact_krr_with_all_centers() {
+        let mut rng = Rng::seeded(90);
+        let ds = susy_like(120, &mut rng);
+        let eng = NativeEngine::new(ds.x.clone(), Gaussian::new(2.0));
+        let lambda = 1e-3;
+        let n = eng.n();
+
+        // exact KRR: c = (K + λnI)⁻¹ y
+        let all: Vec<usize> = (0..n).collect();
+        let k = eng.block(&all, &all);
+        let mut reg = k.clone();
+        reg.add_scaled_identity(lambda * n as f64);
+        let f = crate::linalg::cholesky(&reg).unwrap();
+        let c = f.solve(&ds.y);
+        let krr_pred = crate::linalg::matvec(&k, &c);
+
+        // FALKON with all centers, enough iterations
+        let set = WeightedSet::uniform(all.clone(), lambda);
+        let model = Falkon::new(&eng, &set, lambda)
+            .unwrap()
+            .fit(&ds.y, 60, None)
+            .unwrap();
+        let falkon_pred = model.predict(&eng, &ds.x);
+
+        let err = crate::data::rmse(&falkon_pred, &krr_pred);
+        let scale = crate::linalg::norm2(&krr_pred) / (n as f64).sqrt();
+        assert!(err < 1e-4 * scale.max(1.0), "FALKON vs KRR rmse {err}");
+    }
+
+    /// FALKON generalizes: AUC on held-out data well above chance.
+    #[test]
+    fn falkon_learns_susy_like() {
+        let mut rng = Rng::seeded(91);
+        let ds = susy_like(1_200, &mut rng);
+        let (train, test) = ds.split(0.25, &mut rng);
+        let eng = NativeEngine::new(train.x.clone(), Gaussian::new(4.0));
+        let m = 150;
+        let centers = rng.sample_without_replacement(train.n(), m);
+        let set = WeightedSet::uniform(centers, 1e-4);
+        let model =
+            Falkon::new(&eng, &set, 1e-4).unwrap().fit(&train.y, 20, None).unwrap();
+        let scores = model.predict(&eng, &test.x);
+        let a = auc(&scores, &test.y);
+        assert!(a > 0.75, "test AUC {a} too low");
+    }
+}

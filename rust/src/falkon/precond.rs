@@ -1,0 +1,203 @@
+//! The generalized FALKON preconditioner (Def. 2 / Eq. 15).
+//!
+//! For centers `J` (size `M`), weights `A` and regularization `λ`:
+//!
+//! `B Bᵀ = ((n/M)·K_MM A⁻¹ K_MM + λn·K_MM)⁻¹`
+//!
+//! factored without ever forming the `M × M` inverse: with
+//! `A^{-1/2} K_MM A^{-1/2} = L Lᵀ` and `G = (n/M)·LᵀL + λn·I = L_G L_Gᵀ`,
+//!
+//! `B = A^{-1/2} L^{-ᵀ} L_G^{-ᵀ}`
+//!
+//! so applying `B`/`Bᵀ` costs two triangular solves + a diagonal scale.
+//! Uniform centers (`A = I`) recover Eq. 14.
+
+use crate::linalg::{
+    cholesky, gemm_tn, solve_lower, solve_upper, CholeskyFactor, Matrix,
+};
+
+/// Factored FALKON preconditioner.
+pub struct Preconditioner {
+    /// `L`: Cholesky of `A^{-1/2} K_MM A^{-1/2}` (plus jitter if needed).
+    l: CholeskyFactor,
+    /// `L_G`: Cholesky of `(n/M)·LᵀL + λn·I`.
+    lg: CholeskyFactor,
+    /// `a_isqrt[i] = A_ii^{-1/2}`.
+    a_isqrt: Vec<f64>,
+    /// Jitter that had to be added to make `K_MM` factor (0 if none) —
+    /// reported for diagnostics.
+    pub jitter: f64,
+}
+
+impl Preconditioner {
+    /// Build from the raw `K_MM` block, the weight diagonal `a`, the
+    /// dataset size `n` and regularization `λ`.
+    pub fn new(kmm: &Matrix, a: &[f64], n: usize, lambda: f64) -> anyhow::Result<Self> {
+        let m = kmm.rows();
+        anyhow::ensure!(m > 0 && kmm.cols() == m, "K_MM must be square and non-empty");
+        anyhow::ensure!(a.len() == m, "weight length mismatch");
+        anyhow::ensure!(a.iter().all(|&w| w > 0.0), "weights must be positive");
+        anyhow::ensure!(lambda > 0.0, "lambda must be positive");
+
+        let a_isqrt: Vec<f64> = a.iter().map(|&w| 1.0 / w.sqrt()).collect();
+        // S = A^{-1/2} K_MM A^{-1/2}
+        let mut s = kmm.clone();
+        {
+            let sd = s.as_mut_slice();
+            for i in 0..m {
+                for j in 0..m {
+                    sd[i * m + j] *= a_isqrt[i] * a_isqrt[j];
+                }
+            }
+        }
+        // factor with escalating jitter: K_MM from close-by (or duplicate)
+        // centers can be numerically rank-deficient; the QR path of
+        // Example 1.2 is replaced by a diagonal shift, standard practice.
+        let mut jitter = 0.0;
+        let trace: f64 = (0..m).map(|i| s.get(i, i)).sum();
+        let base = (trace / m as f64) * 1e-12;
+        let l = loop {
+            let mut sj = s.clone();
+            if jitter > 0.0 {
+                sj.add_scaled_identity(jitter);
+            }
+            if let Some(f) = cholesky(&sj) {
+                break f;
+            }
+            jitter = if jitter == 0.0 { base.max(1e-300) } else { jitter * 100.0 };
+            anyhow::ensure!(jitter < trace.max(1.0), "K_MM hopelessly singular");
+        };
+
+        // G = (n/M)·LᵀL + λn·I
+        let mut g = gemm_tn(l.l(), l.l());
+        g.scale(n as f64 / m as f64);
+        g.add_scaled_identity(lambda * n as f64);
+        let lg = cholesky(&g)
+            .ok_or_else(|| anyhow::anyhow!("preconditioner G not SPD (λ={lambda})"))?;
+
+        Ok(Preconditioner { l, lg, a_isqrt, jitter })
+    }
+
+    /// Number of centers `M`.
+    pub fn m(&self) -> usize {
+        self.a_isqrt.len()
+    }
+
+    /// `α = B β` (β-space → center-coefficient space).
+    pub fn apply_b(&self, beta: &[f64]) -> Vec<f64> {
+        // B = A^{-1/2} L^{-ᵀ} L_G^{-ᵀ}
+        let u = self.lg.solve_lt(beta);
+        let v = self.l.solve_lt(&u);
+        v.iter().zip(&self.a_isqrt).map(|(x, s)| x * s).collect()
+    }
+
+    /// `z = Bᵀ v`.
+    pub fn apply_bt(&self, v: &[f64]) -> Vec<f64> {
+        let w: Vec<f64> = v.iter().zip(&self.a_isqrt).map(|(x, s)| x * s).collect();
+        let u = self.l.solve_l(&w);
+        self.lg.solve_l(&u)
+    }
+
+    /// Direct access to the triangular solves (for tests).
+    pub fn solve_l(&self, b: &[f64]) -> Vec<f64> {
+        solve_lower(self.l.l(), b)
+    }
+
+    /// `Lᵀ x = b` via the stored lower factor (for tests).
+    pub fn solve_lt(&self, b: &[f64]) -> Vec<f64> {
+        solve_upper(&self.l.l().transpose(), b)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::susy_like;
+    use crate::kernels::{Gaussian, KernelEngine, NativeEngine};
+    use crate::linalg::{gemm, matvec};
+    use crate::rng::Rng;
+
+    fn kmm(m: usize) -> (Matrix, usize) {
+        let ds = susy_like(200, &mut Rng::seeded(100));
+        let eng = NativeEngine::new(ds.x, Gaussian::new(2.0));
+        let idx: Vec<usize> = (0..m).map(|i| i * 200 / m).collect();
+        (eng.block(&idx, &idx), 200)
+    }
+
+    /// B Bᵀ must equal ((n/M)·K A⁻¹ K + λn·K)⁻¹ — verified densely.
+    #[test]
+    fn bbt_is_the_target_inverse() {
+        let m = 24;
+        let (k, n) = kmm(m);
+        let lambda = 1e-2;
+        let a: Vec<f64> = (0..m).map(|i| 0.5 + (i as f64) / m as f64).collect();
+        let p = Preconditioner::new(&k, &a, n, lambda).unwrap();
+        assert_eq!(p.jitter, 0.0);
+
+        // target T = (n/M)·K A⁻¹ K + λn·K
+        let a_inv = Matrix::diag(&a.iter().map(|&w| 1.0 / w).collect::<Vec<_>>());
+        let mut t = gemm(&gemm(&k, &a_inv), &k);
+        t.scale(n as f64 / m as f64);
+        let mut lk = k.clone();
+        lk.scale(lambda * n as f64);
+        for i in 0..m {
+            for j in 0..m {
+                let v = t.get(i, j) + lk.get(i, j);
+                t.set(i, j, v);
+            }
+        }
+        // check T · (B Bᵀ e_i) = e_i  for a few basis vectors
+        for i in [0usize, 7, 23] {
+            let mut e = vec![0.0; m];
+            e[i] = 1.0;
+            let bbt_e = p.apply_b(&p.apply_bt(&e));
+            let t_bbt_e = matvec(&t, &bbt_e);
+            for (j, &v) in t_bbt_e.iter().enumerate() {
+                let expect = if j == i { 1.0 } else { 0.0 };
+                assert!((v - expect).abs() < 1e-6, "T·BBᵀe_{i}[{j}] = {v}");
+            }
+        }
+    }
+
+    #[test]
+    fn bt_is_adjoint_of_b() {
+        let m = 16;
+        let (k, n) = kmm(m);
+        let a = vec![1.0; m];
+        let p = Preconditioner::new(&k, &a, n, 1e-3).unwrap();
+        let mut rng = Rng::seeded(5);
+        let x: Vec<f64> = (0..m).map(|_| rng.gaussian()).collect();
+        let y: Vec<f64> = (0..m).map(|_| rng.gaussian()).collect();
+        // ⟨Bx, y⟩ = ⟨x, Bᵀy⟩
+        let lhs = crate::linalg::dot(&p.apply_b(&x), &y);
+        let rhs = crate::linalg::dot(&x, &p.apply_bt(&y));
+        assert!((lhs - rhs).abs() < 1e-8 * lhs.abs().max(1.0));
+    }
+
+    #[test]
+    fn duplicate_centers_survive_via_jitter() {
+        let (k0, n) = kmm(10);
+        // duplicate the first row/col to force exact singularity
+        let mut k = Matrix::zeros(11, 11);
+        for i in 0..11 {
+            for j in 0..11 {
+                let si = if i == 10 { 0 } else { i };
+                let sj = if j == 10 { 0 } else { j };
+                k.set(i, j, k0.get(si, sj));
+            }
+        }
+        let a = vec![1.0; 11];
+        let p = Preconditioner::new(&k, &a, n, 1e-3).unwrap();
+        assert!(p.jitter > 0.0, "must have jittered");
+        let out = p.apply_b(&vec![1.0; 11]);
+        assert!(out.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn rejects_bad_inputs() {
+        let (k, n) = kmm(5);
+        assert!(Preconditioner::new(&k, &[1.0; 4], n, 1e-3).is_err());
+        assert!(Preconditioner::new(&k, &[0.0; 5], n, 1e-3).is_err());
+        assert!(Preconditioner::new(&k, &[1.0; 5], n, 0.0).is_err());
+    }
+}

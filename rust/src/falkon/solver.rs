@@ -1,0 +1,273 @@
+//! The FALKON estimator (Def. 3) and the direct Nyström-KRR oracle
+//! (Def. 4).
+
+use super::{cg_solve, Preconditioner};
+use crate::kernels::{tile_indices, KernelEngine};
+use crate::leverage::WeightedSet;
+use crate::linalg::{self, Matrix};
+
+/// Statistics captured after each CG iteration via the fit callback.
+#[derive(Clone, Debug)]
+pub struct IterationStat {
+    pub iter: usize,
+    pub seconds: f64,
+    /// Optional user metric (e.g. test AUC) computed by the callback.
+    pub metric: Option<f64>,
+}
+
+/// A fitted FALKON model: centers + coefficients.
+#[derive(Clone, Debug)]
+pub struct FalkonModel {
+    /// Center indices into the training set.
+    pub centers: Vec<usize>,
+    /// Coefficients `α` (same length).
+    pub alpha: Vec<f64>,
+    /// Per-iteration statistics from the fit.
+    pub iterations: Vec<IterationStat>,
+}
+
+impl FalkonModel {
+    /// Predict scores for query points: `f(x) = Σ_j α_j K(x, x̃_j)`,
+    /// streamed in row tiles of the query matrix.
+    pub fn predict(&self, engine: &dyn KernelEngine, q: &Matrix) -> Vec<f64> {
+        let mut out = vec![0.0; q.rows()];
+        for (s, e) in tile_indices(q.rows(), crate::kernels::DEFAULT_ROW_TILE) {
+            let tile = Matrix::from_fn(e - s, q.cols(), |i, j| q.get(s + i, j));
+            let k = engine.cross_block(&tile, &self.centers);
+            linalg::matvec_into(&k, &self.alpha, &mut out[s..e]);
+        }
+        out
+    }
+}
+
+/// FALKON solver bound to an engine, a weighted center set and λ.
+pub struct Falkon<'a> {
+    engine: &'a dyn KernelEngine,
+    centers: Vec<usize>,
+    precond: Preconditioner,
+    kmm: Matrix,
+    lambda: f64,
+}
+
+impl<'a> Falkon<'a> {
+    /// Prepare the solver: dedupe centers (with-replacement samplers can
+    /// repeat them — a repeated center adds nothing to the model span),
+    /// evaluate `K_MM` once, and factor the Def.-2 preconditioner with
+    /// the BLESS weights (Eq. 15). Uniform weights give FALKON-UNI (Eq. 14).
+    pub fn new(
+        engine: &'a dyn KernelEngine,
+        set: &WeightedSet,
+        lambda: f64,
+    ) -> anyhow::Result<Self> {
+        set.validate()?;
+        anyhow::ensure!(!set.is_empty(), "FALKON needs at least one center");
+        // dedupe, merging duplicate weights harmonically (the Ĉ estimator
+        // sums A_ii⁻¹ contributions, so 1/w_merged = Σ 1/w_dup).
+        let mut seen: std::collections::BTreeMap<usize, f64> = std::collections::BTreeMap::new();
+        for (&i, &w) in set.indices.iter().zip(&set.weights) {
+            *seen.entry(i).or_insert(0.0) += 1.0 / w;
+        }
+        let centers: Vec<usize> = seen.keys().copied().collect();
+        let weights: Vec<f64> = seen.values().map(|&inv| 1.0 / inv).collect();
+
+        let kmm = engine.block(&centers, &centers);
+        let precond = Preconditioner::new(&kmm, &weights, engine.n(), lambda)?;
+        Ok(Falkon { engine, centers, precond, kmm, lambda })
+    }
+
+    /// Number of (deduplicated) centers.
+    pub fn m(&self) -> usize {
+        self.centers.len()
+    }
+
+    /// The deduplicated center indices.
+    pub fn centers(&self) -> &[usize] {
+        &self.centers
+    }
+
+    /// Run `t` CG iterations on `Wβ = b` (Def. 3) and return the model.
+    ///
+    /// `per_iter` is invoked after every iteration with the *current
+    /// model* (α-space), enabling the paper's AUC-per-iteration curves;
+    /// its return value is stored in [`IterationStat::metric`].
+    pub fn fit(
+        &self,
+        y: &[f64],
+        t: usize,
+        mut per_iter: Option<&mut dyn FnMut(usize, &FalkonModel) -> Option<f64>>,
+    ) -> anyhow::Result<FalkonModel> {
+        anyhow::ensure!(y.len() == self.engine.n(), "label length mismatch");
+        anyhow::ensure!(t > 0, "need at least one iteration");
+        let lam_n = self.lambda * self.engine.n() as f64;
+
+        // b = Bᵀ K_nMᵀ y — one streaming pass over the data
+        let kty = self.engine.knm_t_matvec(&self.centers, y);
+        let b = self.precond.apply_bt(&kty);
+
+        // W β = Bᵀ (K_nMᵀ K_nM + λn K_MM) B β
+        let matvec = |beta: &[f64]| -> Vec<f64> {
+            let alpha = self.precond.apply_b(beta);
+            let mut z = self.engine.knm_t_knm_matvec(&self.centers, &alpha);
+            let reg = linalg::matvec(&self.kmm, &alpha);
+            linalg::axpy(lam_n, &reg, &mut z);
+            self.precond.apply_bt(&z)
+        };
+
+        let mut stats: Vec<IterationStat> = Vec::with_capacity(t);
+        let t0 = std::time::Instant::now();
+        let mut cb = |it: usize, beta: &[f64]| {
+            let secs = t0.elapsed().as_secs_f64();
+            let metric = per_iter.as_deref_mut().map(|f| {
+                let snapshot = FalkonModel {
+                    centers: self.centers.clone(),
+                    alpha: self.precond.apply_b(beta),
+                    iterations: vec![],
+                };
+                f(it, &snapshot)
+            });
+            stats.push(IterationStat { iter: it, seconds: secs, metric: metric.flatten() });
+        };
+        let (beta, _trace) = cg_solve(matvec, &b, t, 0.0, Some(&mut cb));
+
+        Ok(FalkonModel {
+            centers: self.centers.clone(),
+            alpha: self.precond.apply_b(&beta),
+            iterations: stats,
+        })
+    }
+}
+
+/// Direct Nyström-KRR (Def. 4): `α = (K_nMᵀK_nM + λn·K_MM)⁻¹ K_nMᵀ y`.
+///
+/// `O(nM²)` to build the Gram block + `O(M³)` to solve — the convergence
+/// oracle FALKON must approach as `t → ∞` (Thm. 6).
+pub fn nystrom_krr(
+    engine: &dyn KernelEngine,
+    centers: &[usize],
+    lambda: f64,
+    y: &[f64],
+) -> anyhow::Result<FalkonModel> {
+    anyhow::ensure!(!centers.is_empty(), "need centers");
+    anyhow::ensure!(y.len() == engine.n(), "label length mismatch");
+    let n = engine.n();
+    let m = centers.len();
+    let kmm = engine.block(centers, centers);
+
+    // H = K_nMᵀ K_nM accumulated over row tiles; rhs = K_nMᵀ y
+    let mut h = Matrix::zeros(m, m);
+    let mut rhs = vec![0.0; m];
+    let all: Vec<usize> = (0..n).collect();
+    for (s, e) in tile_indices(n, crate::kernels::DEFAULT_ROW_TILE) {
+        let blk = engine.block(&all[s..e], centers);
+        let ht = linalg::gemm_tn(&blk, &blk);
+        for (hv, tv) in h.as_mut_slice().iter_mut().zip(ht.as_slice()) {
+            *hv += tv;
+        }
+        let part = linalg::matvec_t(&blk, &y[s..e]);
+        linalg::axpy(1.0, &part, &mut rhs);
+    }
+    let lam_n = lambda * n as f64;
+    for (hv, kv) in h.as_mut_slice().iter_mut().zip(kmm.as_slice()) {
+        *hv += lam_n * kv;
+    }
+    // jittered Cholesky (K_MM may be numerically rank-deficient)
+    let trace: f64 = h.diagonal().iter().sum();
+    let mut jitter = 0.0;
+    let f = loop {
+        let mut hj = h.clone();
+        if jitter > 0.0 {
+            hj.add_scaled_identity(jitter);
+        }
+        if let Some(f) = linalg::cholesky(&hj) {
+            break f;
+        }
+        jitter = if jitter == 0.0 { trace * 1e-12 / m as f64 } else { jitter * 100.0 };
+        anyhow::ensure!(jitter < trace.max(1.0), "normal equations singular");
+    };
+    let alpha = f.solve(&rhs);
+    Ok(FalkonModel { centers: centers.to_vec(), alpha, iterations: vec![] })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::susy_like;
+    use crate::kernels::{Gaussian, NativeEngine};
+    use crate::rng::Rng;
+
+    fn setup(n: usize) -> (NativeEngine, Vec<f64>, Vec<usize>) {
+        let mut rng = Rng::seeded(110);
+        let ds = susy_like(n, &mut rng);
+        let eng = NativeEngine::new(ds.x, Gaussian::new(3.0));
+        let centers = rng.sample_without_replacement(n, (n / 6).max(5));
+        (eng, ds.y, centers)
+    }
+
+    #[test]
+    fn falkon_converges_to_nystrom_krr() {
+        // Thm. 6 shape: after enough CG iterations FALKON ≈ direct Nyström.
+        let (eng, y, centers) = setup(300);
+        let lambda = 1e-3;
+        let set = WeightedSet::uniform(centers.clone(), lambda);
+        let falkon =
+            Falkon::new(&eng, &set, lambda).unwrap().fit(&y, 80, None).unwrap();
+        let direct = nystrom_krr(&eng, &falkon.centers, lambda, &y).unwrap();
+        // compare predictions on the training inputs
+        let q = eng.points().clone();
+        let pf = falkon.predict(&eng, &q);
+        let pd = direct.predict(&eng, &q);
+        let err = crate::data::rmse(&pf, &pd);
+        let scale = linalg::norm2(&pd) / (y.len() as f64).sqrt();
+        assert!(err < 1e-5 * scale.max(1.0), "rmse {err} vs scale {scale}");
+    }
+
+    #[test]
+    fn duplicate_centers_deduped() {
+        let (eng, y, mut centers) = setup(150);
+        let m0 = centers.len();
+        centers.extend_from_slice(&centers.clone()[..3]); // add dups
+        let lambda = 1e-3;
+        let set = WeightedSet::uniform(centers, lambda);
+        let f = Falkon::new(&eng, &set, lambda).unwrap();
+        assert_eq!(f.m(), m0);
+        let model = f.fit(&y, 5, None).unwrap();
+        assert_eq!(model.alpha.len(), m0);
+    }
+
+    #[test]
+    fn per_iteration_callback_collects_metrics() {
+        let (eng, y, centers) = setup(200);
+        let lambda = 1e-3;
+        let set = WeightedSet::uniform(centers, lambda);
+        let f = Falkon::new(&eng, &set, lambda).unwrap();
+        let q = eng.points().clone();
+        let mut aucs = Vec::new();
+        let mut cb = |_it: usize, m: &FalkonModel| -> Option<f64> {
+            let s = m.predict(&eng, &q);
+            let a = crate::data::auc(&s, &y);
+            aucs.push(a);
+            Some(a)
+        };
+        let model = f.fit(&y, 8, Some(&mut cb)).unwrap();
+        assert_eq!(model.iterations.len(), 8);
+        assert_eq!(aucs.len(), 8);
+        // training AUC should improve over iterations (first vs last)
+        assert!(aucs.last().unwrap() >= aucs.first().unwrap());
+        assert!(model.iterations.iter().all(|s| s.metric.is_some()));
+        // timing is monotone
+        for w in model.iterations.windows(2) {
+            assert!(w[1].seconds >= w[0].seconds);
+        }
+    }
+
+    #[test]
+    fn rejects_bad_inputs() {
+        let (eng, y, centers) = setup(100);
+        let empty = WeightedSet::uniform(vec![], 1e-3);
+        assert!(Falkon::new(&eng, &empty, 1e-3).is_err());
+        let set = WeightedSet::uniform(centers, 1e-3);
+        let f = Falkon::new(&eng, &set, 1e-3).unwrap();
+        assert!(f.fit(&y[..50], 5, None).is_err()); // wrong label length
+        assert!(f.fit(&y, 0, None).is_err()); // zero iterations
+    }
+}

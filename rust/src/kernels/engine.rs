@@ -1,0 +1,248 @@
+//! The [`KernelEngine`] abstraction and its native (pure-rust) backend.
+
+use super::Gaussian;
+use crate::linalg::{self, Matrix};
+
+/// Row-tile size for streaming matvecs (`K_nM` is never materialized).
+pub const DEFAULT_ROW_TILE: usize = 1024;
+
+/// Split `0..n` into `(start, end)` tiles of at most `tile` rows.
+pub fn tile_indices(n: usize, tile: usize) -> Vec<(usize, usize)> {
+    assert!(tile > 0);
+    let mut out = Vec::with_capacity(n.div_ceil(tile));
+    let mut s = 0;
+    while s < n {
+        let e = (s + tile).min(n);
+        out.push((s, e));
+        s = e;
+    }
+    out
+}
+
+/// Abstraction over who evaluates Gaussian-kernel blocks of the (implicit)
+/// `n × n` kernel matrix of a fixed dataset.
+///
+/// Implementations: [`NativeEngine`] (pure rust) and
+/// [`crate::runtime::XlaEngine`] (PJRT-compiled Pallas tiles).
+pub trait KernelEngine {
+    /// Number of data points.
+    fn n(&self) -> usize;
+
+    /// The kernel function.
+    fn kernel(&self) -> &Gaussian;
+
+    /// The underlying dataset (row-major `n × d`).
+    fn points(&self) -> &Matrix;
+
+    /// Kernel block `K(X[rows], X[cols])` (`|rows| × |cols|`).
+    fn block(&self, rows: &[usize], cols: &[usize]) -> Matrix;
+
+    /// Cross block `K(Q, X[cols])` for out-of-sample points `Q`.
+    fn cross_block(&self, q: &Matrix, cols: &[usize]) -> Matrix;
+
+    /// Kernel diagonal at the given indices (`K_ii`; 1 for Gaussian).
+    fn diag(&self, idx: &[usize]) -> Vec<f64> {
+        vec![self.kernel().kappa_sq(); idx.len()]
+    }
+
+    /// `κ²` bound on the kernel.
+    fn kappa_sq(&self) -> f64 {
+        self.kernel().kappa_sq()
+    }
+
+    /// Streaming `y = K_nM · v` where `M` indexes `centers` (length-n out).
+    fn knm_matvec(&self, centers: &[usize], v: &[f64]) -> Vec<f64> {
+        assert_eq!(centers.len(), v.len());
+        let n = self.n();
+        let mut y = vec![0.0; n];
+        let rows: Vec<usize> = (0..n).collect();
+        for (s, e) in tile_indices(n, DEFAULT_ROW_TILE) {
+            let blk = self.block(&rows[s..e], centers);
+            linalg::matvec_into(&blk, v, &mut y[s..e]);
+        }
+        y
+    }
+
+    /// Streaming `z = K_nMᵀ · u` (length-M out).
+    fn knm_t_matvec(&self, centers: &[usize], u: &[f64]) -> Vec<f64> {
+        assert_eq!(u.len(), self.n());
+        let n = self.n();
+        let mut z = vec![0.0; centers.len()];
+        let rows: Vec<usize> = (0..n).collect();
+        for (s, e) in tile_indices(n, DEFAULT_ROW_TILE) {
+            let blk = self.block(&rows[s..e], centers);
+            let partial = linalg::matvec_t(&blk, &u[s..e]);
+            linalg::axpy(1.0, &partial, &mut z);
+        }
+        z
+    }
+
+    /// Fused streaming `z = K_nMᵀ (K_nM v)` — the FALKON CG hot loop.
+    /// Each row tile of `K_nM` is evaluated once and used for both
+    /// products, halving kernel evaluations vs. two separate passes.
+    fn knm_t_knm_matvec(&self, centers: &[usize], v: &[f64]) -> Vec<f64> {
+        assert_eq!(centers.len(), v.len());
+        let n = self.n();
+        let mut z = vec![0.0; centers.len()];
+        let rows: Vec<usize> = (0..n).collect();
+        for (s, e) in tile_indices(n, DEFAULT_ROW_TILE) {
+            let blk = self.block(&rows[s..e], centers);
+            let w = linalg::matvec(&blk, v);
+            let partial = linalg::matvec_t(&blk, &w);
+            linalg::axpy(1.0, &partial, &mut z);
+        }
+        z
+    }
+
+    /// Streaming `z = K_nMᵀ · y` over labels plus row-sum accounting:
+    /// returns `K_nMᵀ y` (used for the FALKON right-hand side).
+    fn knm_t_labels(&self, centers: &[usize], y: &[f64]) -> Vec<f64> {
+        self.knm_t_matvec(centers, y)
+    }
+}
+
+/// Pure-rust kernel engine: blocked evaluation with the row-norm trick.
+///
+/// `K(X_I, X_J) = exp(−γ(‖x_i‖² + ‖x_j‖² − 2 X_I X_Jᵀ))` — the cross term
+/// is a GEMM, so the whole block evaluation inherits the blocked GEMM's
+/// cache behaviour.
+pub struct NativeEngine {
+    x: Matrix,
+    kernel: Gaussian,
+    sq_norms: Vec<f64>,
+}
+
+impl NativeEngine {
+    /// Build an engine over the dataset `x` with the given kernel.
+    pub fn new(x: Matrix, kernel: Gaussian) -> Self {
+        let sq_norms = (0..x.rows()).map(|i| linalg::norm2_sq(x.row(i))).collect();
+        NativeEngine { x, kernel, sq_norms }
+    }
+
+    /// Gather rows into a dense matrix (cheap relative to the GEMM).
+    fn gather(&self, idx: &[usize]) -> Matrix {
+        let d = self.x.cols();
+        let mut m = Matrix::zeros(idx.len(), d);
+        for (r, &i) in idx.iter().enumerate() {
+            m.row_mut(r).copy_from_slice(self.x.row(i));
+        }
+        m
+    }
+
+    /// Kernel block between two explicit point sets with precomputed
+    /// squared norms.
+    fn block_impl(&self, a: &Matrix, a_sq: &[f64], b: &Matrix, b_sq: &[f64]) -> Matrix {
+        // cross = A · Bᵀ, evaluated as gemm against the transposed gather
+        let mut k = linalg::gemm(a, &b.transpose());
+        let kd = k.as_mut_slice();
+        let cols = b_sq.len();
+        for (i, &ai) in a_sq.iter().enumerate() {
+            let row = &mut kd[i * cols..(i + 1) * cols];
+            for (v, &bj) in row.iter_mut().zip(b_sq.iter()) {
+                let d2 = ai + bj - 2.0 * *v;
+                *v = self.kernel.from_sq_dist(d2);
+            }
+        }
+        k
+    }
+}
+
+impl KernelEngine for NativeEngine {
+    fn n(&self) -> usize {
+        self.x.rows()
+    }
+
+    fn kernel(&self) -> &Gaussian {
+        &self.kernel
+    }
+
+    fn points(&self) -> &Matrix {
+        &self.x
+    }
+
+    fn block(&self, rows: &[usize], cols: &[usize]) -> Matrix {
+        let a = self.gather(rows);
+        let b = self.gather(cols);
+        let a_sq: Vec<f64> = rows.iter().map(|&i| self.sq_norms[i]).collect();
+        let b_sq: Vec<f64> = cols.iter().map(|&j| self.sq_norms[j]).collect();
+        self.block_impl(&a, &a_sq, &b, &b_sq)
+    }
+
+    fn cross_block(&self, q: &Matrix, cols: &[usize]) -> Matrix {
+        assert_eq!(q.cols(), self.x.cols(), "query dimension mismatch");
+        let q_sq: Vec<f64> = (0..q.rows()).map(|i| linalg::norm2_sq(q.row(i))).collect();
+        let b = self.gather(cols);
+        let b_sq: Vec<f64> = cols.iter().map(|&j| self.sq_norms[j]).collect();
+        self.block_impl(q, &q_sq, &b, &b_sq)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::susy_like;
+    use crate::rng::Rng;
+
+    fn engine(n: usize) -> NativeEngine {
+        let ds = susy_like(n, &mut Rng::seeded(7));
+        NativeEngine::new(ds.x, Gaussian::new(2.0))
+    }
+
+    #[test]
+    fn tiles_cover_range() {
+        assert_eq!(tile_indices(10, 4), vec![(0, 4), (4, 8), (8, 10)]);
+        assert_eq!(tile_indices(4, 4), vec![(0, 4)]);
+        assert_eq!(tile_indices(0, 4), Vec::<(usize, usize)>::new());
+    }
+
+    #[test]
+    fn matvec_matches_dense() {
+        let eng = engine(60);
+        let centers: Vec<usize> = vec![3, 10, 20, 33, 47];
+        let v: Vec<f64> = (0..5).map(|i| (i as f64) * 0.5 - 1.0).collect();
+        let all: Vec<usize> = (0..60).collect();
+        let knm = eng.block(&all, &centers);
+        let dense = linalg::matvec(&knm, &v);
+        let streamed = eng.knm_matvec(&centers, &v);
+        for (a, b) in dense.iter().zip(&streamed) {
+            assert!((a - b).abs() < 1e-12);
+        }
+        // transpose version
+        let u: Vec<f64> = (0..60).map(|i| ((i * i) as f64).sin()).collect();
+        let dense_t = linalg::matvec_t(&knm, &u);
+        let streamed_t = eng.knm_t_matvec(&centers, &u);
+        for (a, b) in dense_t.iter().zip(&streamed_t) {
+            assert!((a - b).abs() < 1e-12);
+        }
+        // fused K^T K v
+        let fused = eng.knm_t_knm_matvec(&centers, &v);
+        let two_pass = eng.knm_t_matvec(&centers, &eng.knm_matvec(&centers, &v));
+        for (a, b) in fused.iter().zip(&two_pass) {
+            assert!((a - b).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn cross_block_matches_block_on_same_data() {
+        let eng = engine(30);
+        let rows = vec![2usize, 8, 14];
+        let cols = vec![0usize, 29, 7];
+        let q = Matrix::from_fn(3, eng.points().cols(), |i, j| eng.points().get(rows[i], j));
+        let via_cross = eng.cross_block(&q, &cols);
+        let via_block = eng.block(&rows, &cols);
+        assert!(via_cross.max_abs_diff(&via_block) < 1e-12);
+    }
+
+    #[test]
+    fn knm_t_knm_is_psd_quadratic() {
+        // vᵀ (KᵀK) v ≥ 0 for any v
+        let eng = engine(50);
+        let centers: Vec<usize> = vec![1, 5, 9, 13];
+        let mut r = Rng::seeded(9);
+        for _ in 0..5 {
+            let v: Vec<f64> = (0..4).map(|_| r.gaussian()).collect();
+            let z = eng.knm_t_knm_matvec(&centers, &v);
+            assert!(linalg::dot(&v, &z) >= -1e-10);
+        }
+    }
+}

@@ -1,0 +1,153 @@
+//! The Gaussian (RBF) kernel used throughout the paper's experiments.
+
+/// Fast `exp(x)` for `x ≤ 0` — the kernel-block hot loop is exp-bound
+/// (perf pass, EXPERIMENTS.md §Perf), and `f64::exp` costs ~10 ns/call.
+///
+/// Range-reduction `exp(x) = 2^k · e^z` with `k = round(x·log2 e)` and
+/// `z = x − k·ln 2 ∈ [−0.347, 0.347]`, degree-8 Taylor for `e^z`
+/// (relative error < 3e-10, far below the f32 accuracy of the Pallas
+/// tiles), exponent assembled with bit arithmetic. Branch-light so the
+/// surrounding loops auto-vectorize.
+#[inline]
+pub fn fast_exp_neg(x: f64) -> f64 {
+    debug_assert!(x <= 1e-9, "fast_exp_neg expects non-positive input");
+    if x < -708.0 {
+        return 0.0;
+    }
+    const LOG2E: f64 = std::f64::consts::LOG2_E;
+    const LN2_HI: f64 = 0.693_147_180_369_123_8;
+    const LN2_LO: f64 = 1.908_214_929_270_587_7e-10;
+    let y = x * LOG2E;
+    let k = (y + 0.5).floor(); // round-to-nearest for y ≤ 0
+    let z = (x - k * LN2_HI) - k * LN2_LO;
+    // e^z, |z| ≤ 0.3466: Horner degree 8
+    let p = 1.0
+        + z * (1.0
+            + z * (0.5
+                + z * (1.0 / 6.0
+                    + z * (1.0 / 24.0
+                        + z * (1.0 / 120.0
+                            + z * (1.0 / 720.0
+                                + z * (1.0 / 5040.0 + z * (1.0 / 40320.0))))))));
+    // scale by 2^k via exponent bits (k ∈ [-1075, 1); subnormals handled
+    // by the early-out above at -708)
+    let bits = ((k as i64 + 1023) as u64) << 52;
+    p * f64::from_bits(bits)
+}
+
+/// Gaussian kernel `K(x, x') = exp(−‖x−x'‖² / (2σ²))`.
+///
+/// Bounded by `κ² = 1` (Eq. 17 of the paper with κ = 1), which the
+/// algorithms exploit (`λ₀ = κ²`, `R_h = q₁·min(κ²/λ_h, n)`).
+#[derive(Clone, Debug)]
+pub struct Gaussian {
+    sigma: f64,
+    gamma: f64,
+}
+
+impl Gaussian {
+    /// Kernel with bandwidth `sigma` (the paper uses σ = 4 for SUSY,
+    /// σ = 22 for HIGGS).
+    pub fn new(sigma: f64) -> Self {
+        assert!(sigma > 0.0, "bandwidth must be positive");
+        Gaussian { sigma, gamma: 1.0 / (2.0 * sigma * sigma) }
+    }
+
+    /// Bandwidth σ.
+    pub fn sigma(&self) -> f64 {
+        self.sigma
+    }
+
+    /// `γ = 1/(2σ²)` — the form the AOT kernels take as input.
+    pub fn gamma(&self) -> f64 {
+        self.gamma
+    }
+
+    /// `κ² = sup_x K(x,x)`.
+    pub fn kappa_sq(&self) -> f64 {
+        1.0
+    }
+
+    /// Evaluate on a pair of points.
+    #[inline]
+    pub fn eval(&self, x: &[f64], y: &[f64]) -> f64 {
+        debug_assert_eq!(x.len(), y.len());
+        let mut d2 = 0.0;
+        for (a, b) in x.iter().zip(y) {
+            let diff = a - b;
+            d2 += diff * diff;
+        }
+        (-self.gamma * d2).exp()
+    }
+
+    /// Evaluate from a precomputed squared distance.
+    #[inline]
+    pub fn from_sq_dist(&self, d2: f64) -> f64 {
+        // clamp tiny negative values produced by the ‖x‖²+‖y‖²−2x·y trick.
+        // NOTE (§Perf): a range-reduced polynomial exp ([`fast_exp_neg`])
+        // was measured at 6.5 ns/call vs 5.0 ns for `f64::exp` on this
+        // target (glibc's exp already vectorizes well) — change reverted,
+        // see EXPERIMENTS.md §Perf iteration log.
+        (-self.gamma * d2.max(0.0)).exp()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn self_similarity_is_one() {
+        let k = Gaussian::new(3.0);
+        let x = vec![1.0, -2.0, 0.5];
+        assert!((k.eval(&x, &x) - 1.0).abs() < 1e-15);
+    }
+
+    #[test]
+    fn known_value() {
+        let k = Gaussian::new(1.0);
+        // ‖(0)−(2)‖² = 4 → exp(−4/2) = exp(−2); fast_exp_neg is accurate
+        // to ~3e-10 relative
+        assert!((k.eval(&[0.0], &[2.0]) - (-2.0f64).exp()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn fast_exp_matches_std_exp() {
+        // dense sweep over the whole kernel-relevant range
+        let mut worst = 0.0f64;
+        let mut x = -700.0;
+        while x <= 0.0 {
+            let got = fast_exp_neg(x);
+            let want = x.exp();
+            let rel = if want > 0.0 { (got - want).abs() / want } else { got };
+            worst = worst.max(rel);
+            x += 0.0173; // irrational-ish step to avoid hitting only integers
+        }
+        assert!(worst < 1e-9, "worst relative error {worst}");
+        assert_eq!(fast_exp_neg(-800.0), 0.0);
+        assert_eq!(fast_exp_neg(0.0), 1.0);
+    }
+
+    #[test]
+    fn symmetry_and_bounds() {
+        let k = Gaussian::new(0.7);
+        let x = vec![0.3, 1.2];
+        let y = vec![-0.5, 2.0];
+        assert_eq!(k.eval(&x, &y), k.eval(&y, &x));
+        let v = k.eval(&x, &y);
+        assert!(v > 0.0 && v < 1.0);
+        assert_eq!(k.kappa_sq(), 1.0);
+    }
+
+    #[test]
+    fn sq_dist_form_clamps_negative() {
+        let k = Gaussian::new(1.0);
+        assert_eq!(k.from_sq_dist(-1e-14), 1.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "positive")]
+    fn zero_bandwidth_rejected() {
+        Gaussian::new(0.0);
+    }
+}

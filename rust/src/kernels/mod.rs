@@ -1,0 +1,60 @@
+//! Kernel functions and kernel-matrix engines.
+//!
+//! The paper's compute hot-spot is the evaluation of Gaussian-kernel
+//! blocks `K(X_I, X_J)` (leverage-score formulas, FALKON matvecs). The
+//! [`KernelEngine`] trait abstracts *who* evaluates those blocks:
+//!
+//! * [`NativeEngine`] — pure-rust blocked evaluation via the row-norm
+//!   trick `‖x−y‖² = ‖x‖² + ‖y‖² − 2·x·y` (GEMM-shaped); always
+//!   available, used as the correctness baseline and in ablations.
+//! * [`crate::runtime::XlaEngine`] — the production path: PJRT-compiled
+//!   Pallas/JAX tiles produced by `make artifacts`.
+//!
+//! All downstream algorithms (BLESS, baselines, FALKON) are generic over
+//! the engine, so switching the compute backend is a one-line change.
+
+mod engine;
+mod gaussian;
+
+pub use engine::{tile_indices, KernelEngine, NativeEngine, DEFAULT_ROW_TILE};
+pub use gaussian::{fast_exp_neg, Gaussian};
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::susy_like;
+    use crate::rng::Rng;
+
+    #[test]
+    fn engine_block_matches_pointwise() {
+        let ds = susy_like(40, &mut Rng::seeded(0));
+        let kern = Gaussian::new(2.0);
+        let eng = NativeEngine::new(ds.x.clone(), kern.clone());
+        let rows = vec![0, 5, 9];
+        let cols = vec![1, 2, 3, 30];
+        let b = eng.block(&rows, &cols);
+        for (bi, &i) in rows.iter().enumerate() {
+            for (bj, &j) in cols.iter().enumerate() {
+                let direct = kern.eval(ds.x.row(i), ds.x.row(j));
+                assert!(
+                    (b.get(bi, bj) - direct).abs() < 1e-12,
+                    "block ({bi},{bj}) mismatch"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn kernel_matrix_is_symmetric_with_unit_diag() {
+        let ds = susy_like(25, &mut Rng::seeded(1));
+        let eng = NativeEngine::new(ds.x.clone(), Gaussian::new(1.5));
+        let all: Vec<usize> = (0..25).collect();
+        let k = eng.block(&all, &all);
+        for i in 0..25 {
+            assert!((k.get(i, i) - 1.0).abs() < 1e-12);
+            for j in 0..i {
+                assert!((k.get(i, j) - k.get(j, i)).abs() < 1e-12);
+            }
+        }
+    }
+}

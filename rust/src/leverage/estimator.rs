@@ -1,0 +1,218 @@
+//! The subset-based leverage-score estimator `ℓ̃_{J,A}` of Eq. (3).
+//!
+//! `ℓ̃_J(i,λ) = (λn)⁻¹ (K_ii − K_{J,i}ᵀ (K_{J,J} + λnA)⁻¹ K_{J,i})`
+//!
+//! A built [`LsGenerator`] holds the Cholesky factor of `K_{J,J} + λnA`
+//! and answers batched score queries in `O(|J|²)` per point — this is the
+//! inner object every sampling algorithm (BLESS, baselines) builds once
+//! per iteration and queries many times.
+
+use crate::kernels::KernelEngine;
+use crate::leverage::WeightedSet;
+use crate::linalg::{cholesky, CholeskyFactor, Matrix};
+
+/// Leverage-score generator for a fixed `(J, A, λ)`.
+pub struct LsGenerator<'a> {
+    engine: &'a dyn KernelEngine,
+    set: WeightedSet,
+    lambda: f64,
+    /// Cholesky of `K_{J,J} + λnA`; `None` when `J = ∅` (then
+    /// `ℓ̃_∅(i,λ) = K_ii/(λn)`, Def. 1 of the appendix).
+    factor: Option<CholeskyFactor>,
+}
+
+impl<'a> LsGenerator<'a> {
+    /// Build the generator: evaluates `K_{J,J}`, adds `λnA`, factorizes.
+    ///
+    /// Cost: `O(|J|² d)` kernel evaluations + `O(|J|³)` factorization.
+    pub fn new(
+        engine: &'a dyn KernelEngine,
+        set: &WeightedSet,
+        lambda: f64,
+    ) -> anyhow::Result<Self> {
+        anyhow::ensure!(lambda > 0.0, "lambda must be positive");
+        set.validate()?;
+        let factor = if set.is_empty() {
+            None
+        } else {
+            let mut kjj = engine.block(&set.indices, &set.indices);
+            let lam_n = lambda * engine.n() as f64;
+            kjj.add_scaled_diag(lam_n, &set.weights);
+            // With-replacement samplers can hand us duplicate indices,
+            // which keeps K_JJ PSD but can make the factorization
+            // borderline; the λnA shift keeps it SPD for A > 0.
+            let f = cholesky(&kjj)
+                .ok_or_else(|| anyhow::anyhow!("K_JJ + λnA not SPD (λ={lambda})"))?;
+            Some(f)
+        };
+        Ok(LsGenerator { engine, set: set.clone(), lambda, factor })
+    }
+
+    /// The `(J, A)` pair this generator was built from.
+    pub fn set(&self) -> &WeightedSet {
+        &self.set
+    }
+
+    /// Regularization level λ.
+    pub fn lambda(&self) -> f64 {
+        self.lambda
+    }
+
+    /// Approximate scores `ℓ̃_J(i,λ)` for a batch of in-sample indices.
+    pub fn scores(&self, idx: &[usize]) -> Vec<f64> {
+        let diag = self.engine.diag(idx);
+        match &self.factor {
+            None => {
+                let lam_n = self.lambda * self.engine.n() as f64;
+                diag.iter().map(|&kii| kii / lam_n).collect()
+            }
+            Some(f) => {
+                // K_{J,idx}: |J| × |idx|
+                let kju = self.engine.block(&self.set.indices, idx);
+                self.scores_from_cross(&kju, &diag, f)
+            }
+        }
+    }
+
+    /// Out-of-sample scores `ℓ̂_J(x,λ)` for explicit query points
+    /// (Def. 1 in the appendix; used by FALKON-BLESS diagnostics).
+    pub fn scores_points(&self, q: &Matrix) -> Vec<f64> {
+        let diag = vec![self.engine.kappa_sq(); q.rows()];
+        match &self.factor {
+            None => {
+                let lam_n = self.lambda * self.engine.n() as f64;
+                diag.iter().map(|&kii| kii / lam_n).collect()
+            }
+            Some(f) => {
+                let kjq = self.engine.cross_block(q, &self.set.indices).transpose();
+                self.scores_from_cross(&kjq, &diag, f)
+            }
+        }
+    }
+
+    /// Shared tail: given `K_{J,·}` (|J| × m) and the kernel diagonal,
+    /// compute `(K_ii − ‖L⁻¹ k_i‖²)/(λn)` column-wise.
+    fn scores_from_cross(&self, kju: &Matrix, diag: &[f64], f: &CholeskyFactor) -> Vec<f64> {
+        let z = f.solve_l_matrix(kju);
+        let m = kju.cols();
+        let mut col_sq = vec![0.0; m];
+        for r in 0..z.rows() {
+            let row = z.row(r);
+            for (c, v) in row.iter().enumerate() {
+                col_sq[c] += v * v;
+            }
+        }
+        let lam_n = self.lambda * self.engine.n() as f64;
+        // exact arithmetic guarantees positivity; clamp the float residue
+        diag.iter()
+            .zip(&col_sq)
+            .map(|(&kii, &sq)| ((kii - sq) / lam_n).max(1e-300))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::susy_like;
+    use crate::kernels::{Gaussian, NativeEngine};
+    use crate::leverage::exact_leverage_scores;
+    use crate::rng::Rng;
+
+    fn engine(n: usize) -> NativeEngine {
+        let ds = susy_like(n, &mut Rng::seeded(21));
+        NativeEngine::new(ds.x, Gaussian::new(2.0))
+    }
+
+    #[test]
+    fn full_set_identity_recovers_exact() {
+        // Paper §2.2: J = [n], A = I ⇒ ℓ̃_J(i,λ) = ℓ(i,λ) exactly.
+        let eng = engine(35);
+        let lambda = 1e-2;
+        let set = WeightedSet::uniform((0..35).collect(), lambda);
+        let gen = LsGenerator::new(&eng, &set, lambda).unwrap();
+        let approx = gen.scores(&(0..35).collect::<Vec<_>>());
+        let exact = exact_leverage_scores(&eng, lambda);
+        for (a, e) in approx.iter().zip(&exact) {
+            assert!((a - e).abs() < 1e-9, "{a} vs {e}");
+        }
+    }
+
+    #[test]
+    fn empty_set_gives_diag_over_lambda_n() {
+        let eng = engine(20);
+        let lambda = 0.05;
+        let set = WeightedSet { indices: vec![], weights: vec![], lambda };
+        let gen = LsGenerator::new(&eng, &set, lambda).unwrap();
+        let s = gen.scores(&[0, 5, 19]);
+        let expect = 1.0 / (lambda * 20.0);
+        for v in s {
+            assert!((v - expect).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn subset_scores_upper_bound_exact() {
+        // A smaller model (J ⊂ [n], A=I) can only *overestimate* scores:
+        // K_JJ-based projection captures less energy, so the residual
+        // K_ii − kᵀ(·)⁻¹k is larger than with J=[n].
+        let eng = engine(40);
+        let lambda = 1e-2;
+        let exact = exact_leverage_scores(&eng, lambda);
+        let sub = WeightedSet::uniform((0..40).step_by(2).collect(), lambda);
+        let gen = LsGenerator::new(&eng, &sub, lambda).unwrap();
+        let approx = gen.scores(&(0..40).collect::<Vec<_>>());
+        for (i, (a, e)) in approx.iter().zip(&exact).enumerate() {
+            assert!(*a >= *e - 1e-9, "point {i}: approx {a} < exact {e}");
+        }
+    }
+
+    #[test]
+    fn out_of_sample_matches_in_sample_on_training_points() {
+        let eng = engine(30);
+        let lambda = 1e-2;
+        let set = WeightedSet::uniform(vec![0, 3, 6, 9, 12], lambda);
+        let gen = LsGenerator::new(&eng, &set, lambda).unwrap();
+        let idx = vec![1usize, 7, 22];
+        let in_sample = gen.scores(&idx);
+        let q = Matrix::from_fn(3, eng.points().cols(), |i, j| eng.points().get(idx[i], j));
+        let oos = gen.scores_points(&q);
+        for (a, b) in in_sample.iter().zip(&oos) {
+            assert!((a - b).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn weights_change_scores() {
+        let eng = engine(25);
+        let lambda = 1e-2;
+        let idx: Vec<usize> = (0..10).collect();
+        let s_id = {
+            let set = WeightedSet::uniform(idx.clone(), lambda);
+            LsGenerator::new(&eng, &set, lambda).unwrap().scores(&[15])[0]
+        };
+        let s_big = {
+            let set =
+                WeightedSet { indices: idx.clone(), weights: vec![100.0; 10], lambda };
+            LsGenerator::new(&eng, &set, lambda).unwrap().scores(&[15])[0]
+        };
+        // Larger A ⇒ more regularization ⇒ bigger residual ⇒ larger score
+        assert!(s_big > s_id);
+    }
+
+    #[test]
+    fn duplicate_indices_tolerated() {
+        // with-replacement samplers produce duplicates; the generator must
+        // still factor thanks to the λnA shift.
+        let eng = engine(25);
+        let lambda = 1e-2;
+        let set = WeightedSet {
+            indices: vec![2, 2, 7, 7, 7],
+            weights: vec![1.0, 1.0, 0.5, 0.5, 0.5],
+            lambda,
+        };
+        let gen = LsGenerator::new(&eng, &set, lambda).unwrap();
+        let s = gen.scores(&[0, 1]);
+        assert!(s.iter().all(|&v| v > 0.0 && v.is_finite()));
+    }
+}

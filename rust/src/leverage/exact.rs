@@ -1,0 +1,142 @@
+//! Exact ridge leverage scores (Eq. 1) — the O(n³) reference.
+//!
+//! `ℓ(i,λ) = (K̂ (K̂ + λnI)⁻¹)_ii` computed via the identity
+//! `K(K+λnI)⁻¹ = (λn)⁻¹ (K − K(K+λnI)⁻¹K)`, so with `L Lᵀ = K + λnI`:
+//! `ℓ(i,λ) = (λn)⁻¹ (K_ii − ‖L⁻¹ k_i‖²)` — a single triangular matrix
+//! solve instead of a full inverse.
+
+use crate::kernels::KernelEngine;
+use crate::linalg::cholesky;
+
+/// Exact leverage scores for all `n` points at regularization `λ`.
+///
+/// Cost: `O(n³)` time, `O(n²)` memory — only feasible for moderate `n`;
+/// used as the Figure-1 accuracy reference and in tests.
+pub fn exact_leverage_scores(engine: &dyn KernelEngine, lambda: f64) -> Vec<f64> {
+    let n = engine.n();
+    assert!(n > 0 && lambda > 0.0);
+    let all: Vec<usize> = (0..n).collect();
+    let k = engine.block(&all, &all);
+    let lam_n = lambda * n as f64;
+    let mut reg = k.clone();
+    reg.add_scaled_identity(lam_n);
+    let f = cholesky(&reg).expect("K + λnI must be SPD");
+    // Z = L⁻¹ K ; ℓ_i = (K_ii − ‖Z e_i‖²)/(λn) = (K_ii − Σ_r Z_ri²)/(λn)
+    let z = f.solve_l_matrix(&k);
+    let mut col_sq = vec![0.0; n];
+    for r in 0..n {
+        let row = z.row(r);
+        for (c, v) in row.iter().enumerate() {
+            col_sq[c] += v * v;
+        }
+    }
+    (0..n).map(|i| ((k.get(i, i) - col_sq[i]) / lam_n).max(0.0)).collect()
+}
+
+/// Effective dimension `d_eff(λ) = Σ_i ℓ(i,λ)` from a score vector.
+pub fn effective_dimension(scores: &[f64]) -> f64 {
+    scores.iter().sum()
+}
+
+/// `d_∞(λ) = n · max_i ℓ(i,λ)` — the uniform-sampling complexity measure.
+pub fn max_leverage_dimension(scores: &[f64]) -> f64 {
+    scores.iter().fold(0.0f64, |a, &b| a.max(b)) * scores.len() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::susy_like;
+    use crate::kernels::{Gaussian, NativeEngine};
+    use crate::linalg::{gemm, Matrix};
+    use crate::rng::Rng;
+
+    fn engine(n: usize, sigma: f64) -> NativeEngine {
+        let ds = susy_like(n, &mut Rng::seeded(11));
+        NativeEngine::new(ds.x, Gaussian::new(sigma))
+    }
+
+    /// Direct dense oracle: diag(K (K+λnI)⁻¹) via full solve.
+    fn oracle(engine: &NativeEngine, lambda: f64) -> Vec<f64> {
+        use crate::kernels::KernelEngine as _;
+        let n = engine.n();
+        let all: Vec<usize> = (0..n).collect();
+        let k = engine.block(&all, &all);
+        let mut reg = k.clone();
+        reg.add_scaled_identity(lambda * n as f64);
+        let f = crate::linalg::cholesky(&reg).unwrap();
+        // X = (K+λnI)⁻¹ K, ℓ_i = (K X)… — use symmetric form: ℓ_i = (K A⁻¹)_ii
+        // = Σ_j K_ij (A⁻¹K)_ji ; compute A⁻¹K column-block and contract.
+        let y = f.solve_l_matrix(&k);
+        let ainv_k = crate::linalg::solve_upper_matrix(f.l(), &y);
+        let prod = gemm(&k, &ainv_k);
+        // note: leverage = diag(K (K+λnI)^{-1}); K(K+λnI)^{-1} and
+        // (K+λnI)^{-1}K share the diagonal by symmetry — but `prod`
+        // here is K (K+λnI)⁻¹ K. Use the (λn)⁻¹(K − ·) identity instead:
+        let lam_n = lambda * n as f64;
+        (0..n).map(|i| (k.get(i, i) - prod.get(i, i)) / lam_n).collect()
+    }
+
+    #[test]
+    fn matches_dense_oracle() {
+        let eng = engine(50, 2.0);
+        for &lambda in &[1e-1, 1e-2, 1e-3] {
+            let fast = exact_leverage_scores(&eng, lambda);
+            let slow = oracle(&eng, lambda);
+            for (a, b) in fast.iter().zip(&slow) {
+                assert!((a - b).abs() < 1e-9, "λ={lambda}: {a} vs {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn scores_in_unit_interval_and_sum_bounds() {
+        let eng = engine(80, 3.0);
+        let lambda = 1e-2;
+        let scores = exact_leverage_scores(&eng, lambda);
+        for &s in &scores {
+            assert!((0.0..=1.0 + 1e-12).contains(&s));
+        }
+        let deff = effective_dimension(&scores);
+        let dinf = max_leverage_dimension(&scores);
+        // d_eff ≤ d_∞ ≤ 1/λ (paper §2.1, using κ²=1)
+        assert!(deff <= dinf + 1e-9);
+        assert!(dinf <= 1.0 / lambda + 1e-9);
+        assert!(deff > 0.0);
+    }
+
+    #[test]
+    fn identity_kernel_limit() {
+        // For well-separated points (tiny σ) the kernel matrix → I and
+        // ℓ(i,λ) → 1/(1 + λn).
+        let x = Matrix::from_fn(10, 2, |i, j| (i * 10 + j) as f64 * 50.0);
+        let eng = NativeEngine::new(x, Gaussian::new(0.01));
+        let lambda = 0.05;
+        let scores = exact_leverage_scores(&eng, lambda);
+        let expect = 1.0 / (1.0 + lambda * 10.0);
+        for &s in &scores {
+            assert!((s - expect).abs() < 1e-9, "{s} vs {expect}");
+        }
+    }
+
+    #[test]
+    fn monotone_in_lambda() {
+        // Lemma 3: ℓ(i,λ') ≤ ℓ(i,λ) ≤ (λ'/λ) ℓ(i,λ') for λ ≤ λ'
+        let eng = engine(40, 2.0);
+        let (lam, lam_p) = (1e-3, 1e-2);
+        let lo = exact_leverage_scores(&eng, lam_p);
+        let hi = exact_leverage_scores(&eng, lam);
+        for (l, h) in lo.iter().zip(&hi) {
+            assert!(*l <= *h + 1e-12);
+            assert!(*h <= (lam_p / lam) * *l + 1e-9);
+        }
+    }
+
+    #[test]
+    fn deff_decreases_with_lambda() {
+        let eng = engine(60, 2.0);
+        let d1 = effective_dimension(&exact_leverage_scores(&eng, 1e-1));
+        let d2 = effective_dimension(&exact_leverage_scores(&eng, 1e-3));
+        assert!(d1 < d2, "d_eff must grow as λ shrinks: {d1} vs {d2}");
+    }
+}

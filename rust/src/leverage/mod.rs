@@ -1,0 +1,125 @@
+//! Ridge leverage scores: exact computation (Eq. 1), the subset-based
+//! estimator `ℓ̃_J` (Eq. 3) with its weight matrix `A`, and the R-ACC
+//! accuracy statistics used by the paper's Figure 1.
+
+mod estimator;
+mod exact;
+
+pub use estimator::LsGenerator;
+pub use exact::{effective_dimension, exact_leverage_scores, max_leverage_dimension};
+
+use crate::util::quantile;
+
+/// A weighted column subset `(J, A)` — the output of every sampler in this
+/// crate (BLESS, BLESS-R and all baselines) and the input to FALKON.
+///
+/// `weights[k]` is the diagonal entry `A_kk` of the weight matrix in
+/// Eq. (3): uniform samplers use `A = I`; BLESS uses
+/// `A_h = (R_h·M_h/n)·diag(p)`; BLESS-R uses `A_h = diag(p)`.
+#[derive(Clone, Debug)]
+pub struct WeightedSet {
+    /// Selected column indices (into the dataset), possibly with repeats
+    /// for with-replacement samplers.
+    pub indices: Vec<usize>,
+    /// Positive diagonal of the weight matrix `A` (same length).
+    pub weights: Vec<f64>,
+    /// Regularization level this set was built for.
+    pub lambda: f64,
+}
+
+impl WeightedSet {
+    /// Uniformly-weighted set (`A = I`).
+    pub fn uniform(indices: Vec<usize>, lambda: f64) -> Self {
+        let weights = vec![1.0; indices.len()];
+        WeightedSet { indices, weights, lambda }
+    }
+
+    /// Number of selected columns.
+    pub fn len(&self) -> usize {
+        self.indices.len()
+    }
+
+    /// Whether the set is empty.
+    pub fn is_empty(&self) -> bool {
+        self.indices.is_empty()
+    }
+
+    /// Sanity: weights strictly positive and lengths agree.
+    pub fn validate(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(self.indices.len() == self.weights.len(), "length mismatch");
+        anyhow::ensure!(
+            self.weights.iter().all(|&w| w > 0.0 && w.is_finite()),
+            "non-positive weight"
+        );
+        Ok(())
+    }
+}
+
+/// Relative-accuracy statistics of approximate vs exact leverage scores —
+/// the quantities reported in the paper's Figure 1 (mean R-ACC and the
+/// 5ᵗʰ/95ᵗʰ quantiles of `ℓ̃(i,λ)/ℓ(i,λ)`).
+#[derive(Clone, Debug)]
+pub struct RAccStats {
+    pub mean: f64,
+    pub q05: f64,
+    pub q95: f64,
+    pub min: f64,
+    pub max: f64,
+}
+
+impl RAccStats {
+    /// Compute from paired approximate/exact scores.
+    pub fn from_scores(approx: &[f64], exact: &[f64]) -> Self {
+        assert_eq!(approx.len(), exact.len());
+        assert!(!approx.is_empty());
+        let mut ratios: Vec<f64> =
+            approx.iter().zip(exact).map(|(a, e)| a / e.max(1e-300)).collect();
+        ratios.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        RAccStats {
+            mean: crate::util::mean(&ratios),
+            q05: quantile(&ratios, 0.05),
+            q95: quantile(&ratios, 0.95),
+            min: ratios[0],
+            max: *ratios.last().unwrap(),
+        }
+    }
+
+    /// Whether all ratios satisfy the multiplicative bound of Eq. (2)
+    /// for a given `t`.
+    pub fn within_bound(&self, t: f64) -> bool {
+        self.min >= 1.0 / (1.0 + t) - 1e-9 && self.max <= 1.0 + t + 1e-9
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn weighted_set_validation() {
+        let ok = WeightedSet { indices: vec![1, 2], weights: vec![0.5, 2.0], lambda: 0.1 };
+        assert!(ok.validate().is_ok());
+        let bad = WeightedSet { indices: vec![1], weights: vec![0.0], lambda: 0.1 };
+        assert!(bad.validate().is_err());
+        let mismatch = WeightedSet { indices: vec![1], weights: vec![1.0, 1.0], lambda: 0.1 };
+        assert!(mismatch.validate().is_err());
+        assert_eq!(WeightedSet::uniform(vec![3, 4, 5], 0.1).weights, vec![1.0; 3]);
+    }
+
+    #[test]
+    fn racc_stats_of_identical_scores() {
+        let s = vec![0.1, 0.2, 0.3];
+        let st = RAccStats::from_scores(&s, &s);
+        assert!((st.mean - 1.0).abs() < 1e-12);
+        assert!(st.within_bound(0.01));
+    }
+
+    #[test]
+    fn racc_detects_violation() {
+        let approx = vec![0.3, 0.1];
+        let exact = vec![0.1, 0.1];
+        let st = RAccStats::from_scores(&approx, &exact);
+        assert!(!st.within_bound(1.0));
+        assert!((st.max - 3.0).abs() < 1e-12);
+    }
+}

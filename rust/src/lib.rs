@@ -1,0 +1,41 @@
+//! # BLESS — fast ridge leverage score sampling and optimal kernel learning
+//!
+//! Production reproduction of *"On Fast Leverage Score Sampling and Optimal
+//! Learning"* (Rudi, Calandriello, Carratino, Rosasco — NeurIPS 2018).
+//!
+//! The crate is the **Layer-3 coordinator** of a three-layer stack:
+//!
+//! * **L1 (Pallas)** — tiled Gaussian-kernel compute kernels, authored in
+//!   `python/compile/kernels/` and AOT-lowered to HLO text.
+//! * **L2 (JAX)** — the kernel-block / block-matvec compute graphs in
+//!   `python/compile/model.py`, lowered once by `python/compile/aot.py`.
+//! * **L3 (this crate)** — the paper's algorithmic contribution: the
+//!   [`bless`] samplers, the comparison [`baselines`], the [`falkon`]
+//!   preconditioned solver, and the experiment [`coordinator`]. The rust
+//!   side loads the AOT artifacts through [`runtime`] (PJRT CPU client)
+//!   and never touches python at run time.
+//!
+//! ## Quick start
+//!
+//! ```no_run
+//! use bless::data::susy_like;
+//! use bless::kernels::{Gaussian, NativeEngine};
+//! use bless::bless::{bless, BlessConfig};
+//! use bless::rng::Rng;
+//!
+//! let ds = susy_like(2_000, &mut Rng::seeded(0));
+//! let engine = NativeEngine::new(ds.x.clone(), Gaussian::new(4.0));
+//! let out = bless(&engine, 1e-3, &BlessConfig::default(), &mut Rng::seeded(1));
+//! println!("selected {} Nyström centers", out.final_set().indices.len());
+//! ```
+pub mod baselines;
+pub mod bless;
+pub mod coordinator;
+pub mod data;
+pub mod falkon;
+pub mod kernels;
+pub mod leverage;
+pub mod linalg;
+pub mod rng;
+pub mod runtime;
+pub mod util;

@@ -1,0 +1,232 @@
+//! Cholesky factorization of symmetric positive-definite matrices.
+//!
+//! Blocked right-looking algorithm: factor a diagonal panel, triangular-
+//! solve the column panel below it, then a (lower-triangle-only) Schur
+//! complement update. The update is the GEMM-shaped hot loop and uses the
+//! same streaming inner loop as [`super::gemm`].
+
+use super::{solve_lower, solve_lower_matrix, Matrix};
+
+/// Panel width for the blocked factorization.
+const NB: usize = 96;
+
+/// A lower-triangular Cholesky factor `L` with `L Lᵀ = A`.
+///
+/// Wraps the factor together with the solve routines the leverage-score
+/// and FALKON code paths need (`A⁻¹ b`, `L⁻¹ B`, quadratic forms).
+#[derive(Clone, Debug)]
+pub struct CholeskyFactor {
+    l: Matrix,
+}
+
+impl CholeskyFactor {
+    /// Dimension of the factored matrix.
+    pub fn dim(&self) -> usize {
+        self.l.rows()
+    }
+
+    /// The lower-triangular factor.
+    pub fn l(&self) -> &Matrix {
+        &self.l
+    }
+
+    /// Solve `A x = b` via two triangular solves.
+    pub fn solve(&self, b: &[f64]) -> Vec<f64> {
+        let y = solve_lower(&self.l, b);
+        solve_upper_from_lower(&self.l, &y)
+    }
+
+    /// Solve `L y = b` (forward substitution only).
+    pub fn solve_l(&self, b: &[f64]) -> Vec<f64> {
+        solve_lower(&self.l, b)
+    }
+
+    /// Solve `Lᵀ x = b` (back substitution against the stored lower factor).
+    pub fn solve_lt(&self, b: &[f64]) -> Vec<f64> {
+        solve_upper_from_lower(&self.l, b)
+    }
+
+    /// Solve `L Y = B` column-block-wise for a whole matrix `B`.
+    pub fn solve_l_matrix(&self, b: &Matrix) -> Matrix {
+        solve_lower_matrix(&self.l, b)
+    }
+
+    /// Quadratic form `bᵀ A⁻¹ b = ‖L⁻¹ b‖²`.
+    pub fn quad_form(&self, b: &[f64]) -> f64 {
+        let y = solve_lower(&self.l, b);
+        super::norm2_sq(&y)
+    }
+
+    /// log-determinant of `A`: `2 Σ log L_ii`.
+    pub fn log_det(&self) -> f64 {
+        (0..self.dim()).map(|i| self.l.get(i, i).ln()).sum::<f64>() * 2.0
+    }
+}
+
+/// Back substitution `Lᵀ x = b` reading the *lower* factor row-wise.
+fn solve_upper_from_lower(l: &Matrix, b: &[f64]) -> Vec<f64> {
+    let n = l.rows();
+    debug_assert_eq!(b.len(), n);
+    let mut x = b.to_vec();
+    let ld = l.as_slice();
+    for i in (0..n).rev() {
+        let xi = x[i] / ld[i * n + i];
+        x[i] = xi;
+        // propagate: x[j] -= L[i][j] * xi for j < i  (column i of Lᵀ)
+        let row = &ld[i * n..i * n + i];
+        for (xj, lij) in x[..i].iter_mut().zip(row.iter()) {
+            *xj -= lij * xi;
+        }
+    }
+    x
+}
+
+/// Cholesky factorization `A = L Lᵀ`; returns `None` if `A` is not
+/// numerically positive definite.
+pub fn cholesky(a: &Matrix) -> Option<CholeskyFactor> {
+    let mut l = a.clone();
+    cholesky_in_place(&mut l)?;
+    Some(CholeskyFactor { l })
+}
+
+/// In-place blocked Cholesky: on success the lower triangle of `a` holds
+/// `L` and the strict upper triangle is zeroed.
+pub fn cholesky_in_place(a: &mut Matrix) -> Option<()> {
+    let n = a.rows();
+    assert_eq!(n, a.cols(), "cholesky requires a square matrix");
+    let ad = a.as_mut_slice();
+    let mut kb = 0;
+    while kb < n {
+        let ke = (kb + NB).min(n);
+        // 1. factor the diagonal panel A[kb..ke, kb..ke] (unblocked)
+        for j in kb..ke {
+            let mut d = ad[j * n + j];
+            for p in kb..j {
+                d -= ad[j * n + p] * ad[j * n + p];
+            }
+            if d <= 0.0 || !d.is_finite() {
+                return None;
+            }
+            let djj = d.sqrt();
+            ad[j * n + j] = djj;
+            // update column j below the diagonal with the panel
+            // contribution [kb..j), then divide by the pivot
+            for i in (j + 1)..n {
+                let mut s = ad[i * n + j];
+                for p in kb..j {
+                    s -= ad[i * n + p] * ad[j * n + p];
+                }
+                ad[i * n + j] = s / djj;
+            }
+        }
+        // 2. Schur complement update of the trailing matrix:
+        //    A[ke.., ke..] -= L[ke.., kb..ke] * L[ke.., kb..ke]ᵀ
+        //    (lower triangle only). Row i's panel segment is staged in a
+        //    local buffer so the inner product runs through the 4-way
+        //    unrolled `dot` kernel (§Perf: 1.9 → 4.6 GF/s on chol-512).
+        let w = ke - kb;
+        let mut rowi = [0.0f64; NB];
+        for i in ke..n {
+            let ri = i * n;
+            rowi[..w].copy_from_slice(&ad[ri + kb..ri + ke]);
+            for j in ke..=i {
+                let rj = j * n;
+                let s = super::dot(&rowi[..w], &ad[rj + kb..rj + ke]);
+                ad[ri + j] -= s;
+            }
+        }
+        kb = ke;
+    }
+    // zero the strict upper triangle so the factor is clean
+    for i in 0..n {
+        for j in (i + 1)..n {
+            ad[i * n + j] = 0.0;
+        }
+    }
+    Some(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::gemm;
+
+    /// Random-ish SPD matrix: A = M Mᵀ + n·I.
+    fn spd(n: usize, seed: u64) -> Matrix {
+        let mut state = seed.wrapping_mul(0x9E3779B97F4A7C15).wrapping_add(1);
+        let mut next = move || {
+            state ^= state << 13;
+            state ^= state >> 7;
+            state ^= state << 17;
+            (state as f64 / u64::MAX as f64) - 0.5
+        };
+        let m = Matrix::from_fn(n, n, |_, _| next());
+        let mut a = gemm(&m, &m.transpose());
+        a.add_scaled_identity(n as f64 * 0.1 + 1.0);
+        a
+    }
+
+    #[test]
+    fn factor_reconstructs_spd() {
+        for &n in &[1usize, 2, 5, 17, 48, 49, 100, 131] {
+            let a = spd(n, n as u64);
+            let f = cholesky(&a).expect("SPD must factor");
+            let rec = gemm(f.l(), &f.l().transpose());
+            let err = rec.max_abs_diff(&a) / a.fro_norm().max(1.0);
+            assert!(err < 1e-10, "n={n}: reconstruction error {err}");
+        }
+    }
+
+    #[test]
+    fn solve_matches_direct() {
+        let n = 73;
+        let a = spd(n, 3);
+        let f = cholesky(&a).unwrap();
+        let b: Vec<f64> = (0..n).map(|i| (i as f64).sin()).collect();
+        let x = f.solve(&b);
+        // check A x ≈ b
+        let ax = crate::linalg::matvec(&a, &x);
+        for (u, v) in ax.iter().zip(&b) {
+            assert!((u - v).abs() < 1e-8, "residual too large");
+        }
+    }
+
+    #[test]
+    fn quad_form_is_bt_ainv_b() {
+        let n = 29;
+        let a = spd(n, 7);
+        let f = cholesky(&a).unwrap();
+        let b: Vec<f64> = (0..n).map(|i| ((i * i) as f64).cos()).collect();
+        let x = f.solve(&b);
+        let direct = crate::linalg::dot(&b, &x);
+        assert!((f.quad_form(&b) - direct).abs() < 1e-8);
+    }
+
+    #[test]
+    fn non_spd_rejected() {
+        let a = Matrix::from_vec(2, 2, vec![1.0, 2.0, 2.0, 1.0]); // indefinite
+        assert!(cholesky(&a).is_none());
+    }
+
+    #[test]
+    fn identity_factors_to_identity() {
+        let f = cholesky(&Matrix::eye(5)).unwrap();
+        assert!(f.l().max_abs_diff(&Matrix::eye(5)) < 1e-14);
+        assert!((f.log_det() - 0.0).abs() < 1e-14);
+    }
+
+    #[test]
+    fn solve_lt_transpose_consistency() {
+        let n = 21;
+        let a = spd(n, 11);
+        let f = cholesky(&a).unwrap();
+        let b: Vec<f64> = (0..n).map(|i| i as f64 * 0.3 - 2.0).collect();
+        // L (Lᵀ)⁻¹ᵀ? — check L Lᵀ x = b path equals solve()
+        let y = f.solve_l(&b);
+        let x = f.solve_lt(&y);
+        let x2 = f.solve(&b);
+        for (u, v) in x.iter().zip(&x2) {
+            assert!((u - v).abs() < 1e-10);
+        }
+    }
+}

@@ -1,0 +1,219 @@
+//! Blocked general matrix multiplication and matrix-vector products.
+//!
+//! Row-major GEMM built around the `i-p-j` loop order: the innermost loop
+//! streams a row of `B` into a row of `C` with a scalar multiplier, which
+//! auto-vectorizes well and keeps all accesses sequential. Outer blocking
+//! on the `p` (inner) dimension keeps the active slab of `B` in cache.
+
+use super::Matrix;
+
+/// Inner-dimension block size (tuned in the perf pass, see EXPERIMENTS.md §Perf).
+const KC: usize = 256;
+/// Row block size.
+const MC: usize = 64;
+
+/// `C = A * B` for row-major matrices.
+pub fn gemm(a: &Matrix, b: &Matrix) -> Matrix {
+    assert_eq!(a.cols(), b.rows(), "gemm dimension mismatch");
+    let mut c = Matrix::zeros(a.rows(), b.cols());
+    gemm_into(a, b, &mut c);
+    c
+}
+
+/// `C += A * B`, writing into an existing buffer (no allocation).
+pub fn gemm_into(a: &Matrix, b: &Matrix, c: &mut Matrix) {
+    let (m, k, n) = (a.rows(), a.cols(), b.cols());
+    assert_eq!(b.rows(), k);
+    assert_eq!(c.rows(), m);
+    assert_eq!(c.cols(), n);
+    let (ad, bd) = (a.as_slice(), b.as_slice());
+    let cd = c.as_mut_slice();
+    for pb in (0..k).step_by(KC) {
+        let pe = (pb + KC).min(k);
+        for ib in (0..m).step_by(MC) {
+            let ie = (ib + MC).min(m);
+            // 4×8 register micro-kernel: a 4-row × 8-col C tile lives in
+            // registers across the whole p-panel, so C is read/written
+            // once per panel instead of once per p (the k=d≈18 kernel
+            // cross-term shape was C-bandwidth-bound; §Perf).
+            let mut i = ib;
+            while i + 4 <= ie {
+                let a0 = &ad[i * k..(i + 1) * k];
+                let a1 = &ad[(i + 1) * k..(i + 2) * k];
+                let a2 = &ad[(i + 2) * k..(i + 3) * k];
+                let a3 = &ad[(i + 3) * k..(i + 4) * k];
+                let mut j = 0;
+                while j + 8 <= n {
+                    let mut acc = [[0.0f64; 8]; 4];
+                    for p in pb..pe {
+                        let b8 = &bd[p * n + j..p * n + j + 8];
+                        let w = [a0[p], a1[p], a2[p], a3[p]];
+                        for (r, acc_r) in acc.iter_mut().enumerate() {
+                            let wr = w[r];
+                            for (c, av) in acc_r.iter_mut().enumerate() {
+                                *av += wr * b8[c];
+                            }
+                        }
+                    }
+                    for (r, acc_r) in acc.iter().enumerate() {
+                        let crow = &mut cd[(i + r) * n + j..(i + r) * n + j + 8];
+                        for (cv, av) in crow.iter_mut().zip(acc_r.iter()) {
+                            *cv += av;
+                        }
+                    }
+                    j += 8;
+                }
+                // column remainder
+                while j < n {
+                    let mut acc = [0.0f64; 4];
+                    for p in pb..pe {
+                        let bv = bd[p * n + j];
+                        acc[0] += a0[p] * bv;
+                        acc[1] += a1[p] * bv;
+                        acc[2] += a2[p] * bv;
+                        acc[3] += a3[p] * bv;
+                    }
+                    for (r, av) in acc.iter().enumerate() {
+                        cd[(i + r) * n + j] += av;
+                    }
+                    j += 1;
+                }
+                i += 4;
+            }
+            // remainder rows: plain row-streaming kernel
+            while i < ie {
+                let arow = &ad[i * k..(i + 1) * k];
+                let crow = &mut cd[i * n..(i + 1) * n];
+                for p in pb..pe {
+                    let aip = arow[p];
+                    if aip == 0.0 {
+                        continue;
+                    }
+                    let brow = &bd[p * n..(p + 1) * n];
+                    for (cv, bv) in crow.iter_mut().zip(brow.iter()) {
+                        *cv += aip * bv;
+                    }
+                }
+                i += 1;
+            }
+        }
+    }
+}
+
+/// `C = Aᵀ * B` without materializing `Aᵀ` (A is k×m, B is k×n, C is m×n).
+pub fn gemm_tn(a: &Matrix, b: &Matrix) -> Matrix {
+    assert_eq!(a.rows(), b.rows(), "gemm_tn dimension mismatch");
+    let (k, m, n) = (a.rows(), a.cols(), b.cols());
+    let mut c = Matrix::zeros(m, n);
+    let (ad, bd) = (a.as_slice(), b.as_slice());
+    let cd = c.as_mut_slice();
+    // Loop over the shared dimension p (rows of both A and B): rank-1
+    // updates C += a_p ⊗ b_p. Sequential access on all three matrices.
+    for pb in (0..k).step_by(KC) {
+        let pe = (pb + KC).min(k);
+        for p in pb..pe {
+            let arow = &ad[p * m..(p + 1) * m];
+            let brow = &bd[p * n..(p + 1) * n];
+            for i in 0..m {
+                let aip = arow[i];
+                if aip == 0.0 {
+                    continue;
+                }
+                let crow = &mut cd[i * n..(i + 1) * n];
+                for (cv, bv) in crow.iter_mut().zip(brow.iter()) {
+                    *cv += aip * bv;
+                }
+            }
+        }
+    }
+    c
+}
+
+/// `y = A * x`.
+pub fn matvec(a: &Matrix, x: &[f64]) -> Vec<f64> {
+    assert_eq!(a.cols(), x.len());
+    let mut y = vec![0.0; a.rows()];
+    matvec_into(a, x, &mut y);
+    y
+}
+
+/// `y = A * x` into an existing buffer.
+pub fn matvec_into(a: &Matrix, x: &[f64], y: &mut [f64]) {
+    assert_eq!(a.cols(), x.len());
+    assert_eq!(a.rows(), y.len());
+    for i in 0..a.rows() {
+        y[i] = super::dot(a.row(i), x);
+    }
+}
+
+/// `y = Aᵀ * x` without materializing `Aᵀ`.
+pub fn matvec_t(a: &Matrix, x: &[f64]) -> Vec<f64> {
+    assert_eq!(a.rows(), x.len());
+    let mut y = vec![0.0; a.cols()];
+    for i in 0..a.rows() {
+        super::axpy(x[i], a.row(i), &mut y);
+    }
+    y
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn naive_gemm(a: &Matrix, b: &Matrix) -> Matrix {
+        Matrix::from_fn(a.rows(), b.cols(), |i, j| {
+            (0..a.cols()).map(|p| a.get(i, p) * b.get(p, j)).sum()
+        })
+    }
+
+    #[test]
+    fn gemm_matches_naive_small() {
+        let a = Matrix::from_vec(2, 3, vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        let b = Matrix::from_vec(3, 2, vec![7.0, 8.0, 9.0, 10.0, 11.0, 12.0]);
+        let c = gemm(&a, &b);
+        assert!(c.max_abs_diff(&naive_gemm(&a, &b)) < 1e-12);
+    }
+
+    #[test]
+    fn gemm_matches_naive_odd_sizes() {
+        // sizes chosen to exercise partial blocks
+        let a = Matrix::from_fn(67, 129, |i, j| ((i * 7 + j * 13) % 11) as f64 - 5.0);
+        let b = Matrix::from_fn(129, 43, |i, j| ((i * 3 + j * 17) % 9) as f64 - 4.0);
+        let c = gemm(&a, &b);
+        assert!(c.max_abs_diff(&naive_gemm(&a, &b)) < 1e-9);
+    }
+
+    #[test]
+    fn gemm_tn_matches_transpose_then_gemm() {
+        let a = Matrix::from_fn(31, 17, |i, j| (i as f64 - j as f64) * 0.25);
+        let b = Matrix::from_fn(31, 23, |i, j| ((i + j) % 7) as f64);
+        let c1 = gemm_tn(&a, &b);
+        let c2 = gemm(&a.transpose(), &b);
+        assert!(c1.max_abs_diff(&c2) < 1e-10);
+    }
+
+    #[test]
+    fn matvec_consistency() {
+        let a = Matrix::from_fn(13, 29, |i, j| (i + 2 * j) as f64 * 0.1);
+        let x: Vec<f64> = (0..29).map(|i| (i as f64).cos()).collect();
+        let y = matvec(&a, &x);
+        for i in 0..13 {
+            let expect: f64 = (0..29).map(|j| a.get(i, j) * x[j]).sum();
+            assert!((y[i] - expect).abs() < 1e-10);
+        }
+        // Aᵀ via matvec_t equals transpose-then-matvec
+        let z: Vec<f64> = (0..13).map(|i| (i as f64).sin()).collect();
+        let t1 = matvec_t(&a, &z);
+        let t2 = matvec(&a.transpose(), &z);
+        for (u, v) in t1.iter().zip(&t2) {
+            assert!((u - v).abs() < 1e-10);
+        }
+    }
+
+    #[test]
+    fn gemm_identity() {
+        let a = Matrix::from_fn(10, 10, |i, j| (i * j) as f64);
+        let c = gemm(&a, &Matrix::eye(10));
+        assert!(c.max_abs_diff(&a) < 1e-12);
+    }
+}

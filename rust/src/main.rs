@@ -1,0 +1,231 @@
+//! `repro` — the BLESS reproduction CLI (Layer-3 leader binary).
+//!
+//! Subcommands regenerate every table/figure of the paper and expose the
+//! library's two main entry points (`bless`, `falkon`) directly:
+//!
+//! ```text
+//! repro fig1   [--n 2000] [--lambda 1e-4] [--reps 5] [--engine auto]
+//! repro fig2   [--sizes 1000,2000,4000,8000] [--lambda 1e-3]
+//! repro fig3   [--n 4000] [--iters 5]
+//! repro fig4   [--n 8000]            # SUSY-like end-to-end
+//! repro fig5   [--n 8000]            # HIGGS-like end-to-end
+//! repro table1 [--sizes ...] [--lambda 1e-3]
+//! repro bless  [--n 4000] [--lambda 1e-4] [--method bless|bless-r|...]
+//! repro info                         # runtime / artifact diagnostics
+//! ```
+
+use bless::coordinator::{
+    build_engine, fig1_accuracy, fig2_scaling, fig3_stability, fig45_falkon,
+    scaling_exponent, table1_complexity, EngineKind, Fig1Config, Fig2Config, Fig3Config,
+    Fig45Config, Method, Table1Config,
+};
+use bless::data::{higgs_like, susy_like};
+use bless::kernels::Gaussian;
+use bless::rng::Rng;
+use bless::util::cli::Args;
+use bless::util::table::fnum;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse();
+    let cmd = args.pos(0).unwrap_or("help").to_string();
+    match cmd.as_str() {
+        "fig1" => cmd_fig1(&args),
+        "fig2" => cmd_fig2(&args),
+        "fig3" => cmd_fig3(&args),
+        "fig4" => cmd_fig45(&args, false),
+        "fig5" => cmd_fig45(&args, true),
+        "table1" => cmd_table1(&args),
+        "bless" => cmd_bless(&args),
+        "falkon" => cmd_fig45(&args, false),
+        "info" => cmd_info(),
+        _ => {
+            print!("{HELP}");
+            Ok(())
+        }
+    }
+}
+
+const HELP: &str = "\
+repro — BLESS (NeurIPS 2018) reproduction CLI
+
+  fig1    leverage-score R-ACC comparison table (paper Fig. 1)
+  fig2    runtime-vs-n sweep (paper Fig. 2)
+  fig3    lambda_falkon stability sweep (paper Fig. 3)
+  fig4    FALKON-BLESS vs FALKON-UNI on SUSY-like data (paper Fig. 4)
+  fig5    same on HIGGS-like data (paper Fig. 5)
+  table1  empirical complexity exponents (paper Table 1)
+  bless   run one sampler and report the selected set
+  info    PJRT runtime / artifact diagnostics
+
+common flags: --n --lambda --sigma --seed --reps --engine native|xla|auto
+              --csv <path> (also save the result table as CSV)
+";
+
+fn engine_kind(args: &Args) -> EngineKind {
+    EngineKind::parse(&args.get_str("engine", "native")).unwrap_or(EngineKind::Native)
+}
+
+fn maybe_csv(args: &Args, table: &bless::util::table::Table) -> anyhow::Result<()> {
+    if let Some(path) = args.get("csv") {
+        table.save_csv(path)?;
+        println!("(saved CSV to {path})");
+    }
+    Ok(())
+}
+
+fn cmd_fig1(args: &Args) -> anyhow::Result<()> {
+    let cfg = Fig1Config {
+        n: args.get_usize("n", 2_000),
+        sigma: args.get_f64("sigma", 4.0),
+        lambda: args.get_f64("lambda", 1e-4),
+        reps: args.get_usize("reps", 5),
+        seed: args.get_u64("seed", 0),
+        uniform_m: args.get_usize("uniform-m", 400),
+        ..Default::default()
+    };
+    let ds = susy_like(cfg.n, &mut Rng::seeded(cfg.seed.wrapping_add(77)));
+    let eng = build_engine(engine_kind(args), ds.x, Gaussian::new(cfg.sigma))?;
+    println!("engine backend: {}", eng.label());
+    let t = fig1_accuracy(eng.as_dyn(), &cfg);
+    println!("{}", t.to_console());
+    maybe_csv(args, &t)
+}
+
+fn parse_sizes(args: &Args, default: &[usize]) -> Vec<usize> {
+    args.get("sizes")
+        .map(|s| s.split(',').map(|v| v.trim().parse().expect("bad --sizes")).collect())
+        .unwrap_or_else(|| default.to_vec())
+}
+
+fn cmd_fig2(args: &Args) -> anyhow::Result<()> {
+    let cfg = Fig2Config {
+        sizes: parse_sizes(args, &[1_000, 2_000, 4_000, 8_000]),
+        lambda: args.get_f64("lambda", 1e-3),
+        sigma: args.get_f64("sigma", 4.0),
+        seed: args.get_u64("seed", 0),
+        ..Default::default()
+    };
+    let t = fig2_scaling(&cfg);
+    println!("{}", t.to_console());
+    for &m in &cfg.methods {
+        println!("  {:<10} empirical n-exponent: {}", m.name(), fnum(scaling_exponent(&t, m)));
+    }
+    maybe_csv(args, &t)
+}
+
+fn cmd_fig3(args: &Args) -> anyhow::Result<()> {
+    let n = args.get_usize("n", 4_000);
+    let seed = args.get_u64("seed", 0);
+    let mut rng = Rng::seeded(seed);
+    let ds = susy_like(n, &mut rng);
+    let (train, test) = ds.split(0.25, &mut rng);
+    let cfg = Fig3Config {
+        sigma: args.get_f64("sigma", 4.0),
+        lambda_bless: args.get_f64("lambda-bless", 1e-3),
+        iterations: args.get_usize("iters", 5),
+        seed,
+        ..Default::default()
+    };
+    let eng = build_engine(engine_kind(args), train.x.clone(), Gaussian::new(cfg.sigma))?;
+    let res = fig3_stability(eng.as_dyn(), &train.y, &test, &cfg)?;
+    println!("{}", res.table.to_console());
+    println!(
+        "95%-optimal region width: BLESS {} decades, UNI {} decades",
+        fnum(res.bless_region_decades),
+        fnum(res.uni_region_decades)
+    );
+    maybe_csv(args, &res.table)
+}
+
+fn cmd_fig45(args: &Args, higgs: bool) -> anyhow::Result<()> {
+    let n = args.get_usize("n", 8_000);
+    let seed = args.get_u64("seed", 0);
+    let mut rng = Rng::seeded(seed);
+    let ds = if higgs { higgs_like(n, &mut rng) } else { susy_like(n, &mut rng) };
+    let (train, test) = ds.split(0.25, &mut rng);
+    let mut cfg = if higgs { Fig45Config::higgs() } else { Fig45Config::susy() };
+    cfg.iterations = args.get_usize("iters", cfg.iterations);
+    cfg.lambda_bless = args.get_f64("lambda-bless", cfg.lambda_bless);
+    cfg.lambda_falkon = args.get_f64("lambda-falkon", cfg.lambda_falkon);
+    cfg.seed = seed;
+    let eng = build_engine(engine_kind(args), train.x.clone(), Gaussian::new(cfg.sigma))?;
+    println!("engine backend: {} | train n={} test n={}", eng.label(), train.n(), test.n());
+    let (b, u, table) = fig45_falkon(eng.as_dyn(), &train.y, &test, &cfg)?;
+    println!("{}", table.to_console());
+    println!(
+        "{}: M={} final AUC {} ({}s sampling)",
+        b.label,
+        b.centers,
+        fnum(b.final_auc()),
+        fnum(b.sampling_secs)
+    );
+    println!("{}: M={} final AUC {}", u.label, u.centers, fnum(u.final_auc()));
+    let target = u.final_auc();
+    if let Some(it) = b.iters_to_reach(target) {
+        println!(
+            "FALKON-BLESS reaches FALKON-UNI's final AUC ({}) at iteration {it}/{}",
+            fnum(target),
+            cfg.iterations
+        );
+    }
+    maybe_csv(args, &table)
+}
+
+fn cmd_table1(args: &Args) -> anyhow::Result<()> {
+    let cfg = Table1Config {
+        sizes: parse_sizes(args, &[1_000, 2_000, 4_000, 8_000]),
+        lambda: args.get_f64("lambda", 1e-3),
+        sigma: args.get_f64("sigma", 4.0),
+        seed: args.get_u64("seed", 0),
+        ..Default::default()
+    };
+    let (raw, summary) = table1_complexity(&cfg);
+    println!("{}", raw.to_console());
+    println!("{}", summary.to_console());
+    maybe_csv(args, &summary)
+}
+
+fn cmd_bless(args: &Args) -> anyhow::Result<()> {
+    let n = args.get_usize("n", 4_000);
+    let lambda = args.get_f64("lambda", 1e-4);
+    let method = Method::parse(&args.get_str("method", "bless"))
+        .ok_or_else(|| anyhow::anyhow!("unknown --method"))?;
+    let seed = args.get_u64("seed", 0);
+    let ds = susy_like(n, &mut Rng::seeded(seed));
+    let eng =
+        build_engine(engine_kind(args), ds.x, Gaussian::new(args.get_f64("sigma", 4.0)))?;
+    let mut rng = Rng::seeded(seed ^ 1);
+    let t0 = std::time::Instant::now();
+    let (set, evals) = bless::coordinator::run_method(
+        method,
+        eng.as_dyn(),
+        lambda,
+        (1.0 / lambda) as usize,
+        &mut rng,
+    );
+    println!(
+        "{} @ λ={lambda:.1e} n={n}: |J|={} score_evals={evals} time={:.2}s (engine {})",
+        method.name(),
+        set.len(),
+        t0.elapsed().as_secs_f64(),
+        eng.label()
+    );
+    Ok(())
+}
+
+fn cmd_info() -> anyhow::Result<()> {
+    match bless::runtime::find_artifact_dir() {
+        None => println!("artifacts: NOT FOUND (run `make artifacts`)"),
+        Some(dir) => {
+            println!("artifacts: {}", dir.display());
+            let rt = bless::runtime::PjrtRuntime::load(&dir)?;
+            println!("platform: {}", rt.platform());
+            println!(
+                "tile: {}x{} (feature dim {})",
+                rt.manifest.tile, rt.manifest.tile, rt.manifest.feature_dim
+            );
+            println!("artifacts compiled: {:?}", rt.artifact_names());
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,128 @@
+//! Walker's alias method for O(1) sampling from a discrete distribution.
+//!
+//! BLESS draws `M_h` multinomial samples from `R_h` categories each
+//! iteration (Alg. 1 line 9); the alias table makes the whole draw
+//! `O(R_h + M_h)` rather than `O(R_h · M_h)` for naive inverse-CDF.
+
+use super::Rng;
+
+/// Precomputed alias table over `n` categories.
+#[derive(Clone, Debug)]
+pub struct AliasTable {
+    prob: Vec<f64>,
+    alias: Vec<usize>,
+}
+
+impl AliasTable {
+    /// Build from unnormalized non-negative weights.
+    ///
+    /// Panics if all weights are zero or any weight is negative/non-finite.
+    pub fn new(weights: &[f64]) -> Self {
+        let n = weights.len();
+        assert!(n > 0, "empty weight vector");
+        let total: f64 = weights.iter().sum();
+        assert!(
+            total > 0.0 && total.is_finite(),
+            "weights must sum to a positive finite value"
+        );
+        for &w in weights {
+            assert!(w >= 0.0 && w.is_finite(), "negative or non-finite weight");
+        }
+        // scaled probabilities, mean 1
+        let mut scaled: Vec<f64> = weights.iter().map(|w| w * n as f64 / total).collect();
+        let mut prob = vec![0.0; n];
+        let mut alias = vec![0usize; n];
+        let mut small: Vec<usize> = Vec::with_capacity(n);
+        let mut large: Vec<usize> = Vec::with_capacity(n);
+        for (i, &s) in scaled.iter().enumerate() {
+            if s < 1.0 {
+                small.push(i);
+            } else {
+                large.push(i);
+            }
+        }
+        while let (Some(&s), Some(&l)) = (small.last(), large.last()) {
+            small.pop();
+            prob[s] = scaled[s];
+            alias[s] = l;
+            scaled[l] = (scaled[l] + scaled[s]) - 1.0;
+            if scaled[l] < 1.0 {
+                large.pop();
+                small.push(l);
+            }
+        }
+        // leftovers are numerically 1
+        for &i in small.iter().chain(large.iter()) {
+            prob[i] = 1.0;
+            alias[i] = i;
+        }
+        AliasTable { prob, alias }
+    }
+
+    /// Number of categories.
+    pub fn len(&self) -> usize {
+        self.prob.len()
+    }
+
+    /// True when the table has no categories (never, by construction).
+    pub fn is_empty(&self) -> bool {
+        self.prob.is_empty()
+    }
+
+    /// Draw one category index.
+    #[inline]
+    pub fn sample(&self, rng: &mut Rng) -> usize {
+        let i = rng.below(self.prob.len());
+        if rng.next_f64() < self.prob[i] {
+            i
+        } else {
+            self.alias[i]
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn single_category() {
+        let t = AliasTable::new(&[3.5]);
+        let mut r = Rng::seeded(0);
+        for _ in 0..10 {
+            assert_eq!(t.sample(&mut r), 0);
+        }
+    }
+
+    #[test]
+    fn zero_weight_never_sampled() {
+        let t = AliasTable::new(&[0.0, 1.0, 0.0, 2.0]);
+        let mut r = Rng::seeded(1);
+        for _ in 0..10_000 {
+            let s = t.sample(&mut r);
+            assert!(s == 1 || s == 3, "sampled zero-weight category {s}");
+        }
+    }
+
+    #[test]
+    fn skewed_distribution_frequencies() {
+        let w = [0.01, 0.09, 0.4, 0.5];
+        let t = AliasTable::new(&w);
+        let mut r = Rng::seeded(2);
+        let n = 200_000;
+        let mut counts = [0usize; 4];
+        for _ in 0..n {
+            counts[t.sample(&mut r)] += 1;
+        }
+        for i in 0..4 {
+            let got = counts[i] as f64 / n as f64;
+            assert!((got - w[i]).abs() < 0.005, "cat {i}: {got} vs {}", w[i]);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "positive finite")]
+    fn all_zero_weights_panic() {
+        AliasTable::new(&[0.0, 0.0]);
+    }
+}

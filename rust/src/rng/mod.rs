@@ -1,0 +1,231 @@
+//! Pseudo-random number generation and sampling substrate.
+//!
+//! The `rand` crate is not in the offline registry, so the crate ships its
+//! own generator: **xoshiro256\*\*** seeded through SplitMix64 — fast,
+//! high-quality, and reproducible across runs (every experiment takes an
+//! explicit seed).
+//!
+//! On top of the raw generator live the sampling primitives the paper's
+//! algorithms need: uniform subsets, Bernoulli thinning (BLESS-R),
+//! multinomial sampling with replacement via **Walker's alias method**
+//! (BLESS step 9: `J_h ~ Multinomial(P_h, U_h)` with `M_h` draws from
+//! `R_h` categories in `O(R_h + M_h)`), and Gaussian variates for the
+//! synthetic datasets.
+
+mod alias;
+
+pub use alias::AliasTable;
+
+/// xoshiro256** PRNG with SplitMix64 seeding.
+#[derive(Clone, Debug)]
+pub struct Rng {
+    s: [u64; 4],
+}
+
+impl Rng {
+    /// Deterministic generator from a 64-bit seed.
+    pub fn seeded(seed: u64) -> Self {
+        // SplitMix64 expansion of the seed into the xoshiro state.
+        let mut z = seed;
+        let mut next = move || {
+            z = z.wrapping_add(0x9E3779B97F4A7C15);
+            let mut x = z;
+            x = (x ^ (x >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+            x = (x ^ (x >> 27)).wrapping_mul(0x94D049BB133111EB);
+            x ^ (x >> 31)
+        };
+        let s = [next(), next(), next(), next()];
+        // avoid the all-zero state (probability ~0 but cheap to guard)
+        let s = if s == [0, 0, 0, 0] { [1, 2, 3, 4] } else { s };
+        Rng { s }
+    }
+
+    /// Next raw 64-bit value.
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let result = self.s[1]
+            .wrapping_mul(5)
+            .rotate_left(7)
+            .wrapping_mul(9);
+        let t = self.s[1] << 17;
+        self.s[2] ^= self.s[0];
+        self.s[3] ^= self.s[1];
+        self.s[1] ^= self.s[2];
+        self.s[0] ^= self.s[3];
+        self.s[2] ^= t;
+        self.s[3] = self.s[3].rotate_left(45);
+        result
+    }
+
+    /// Uniform `f64` in `[0, 1)`.
+    #[inline]
+    pub fn next_f64(&mut self) -> f64 {
+        // 53 random mantissa bits
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform integer in `[0, n)` (Lemire's multiply-shift rejection).
+    #[inline]
+    pub fn below(&mut self, n: usize) -> usize {
+        debug_assert!(n > 0);
+        let n = n as u64;
+        loop {
+            let x = self.next_u64();
+            let m = (x as u128) * (n as u128);
+            let lo = m as u64;
+            if lo >= n || lo >= lo.wrapping_neg() % n {
+                return (m >> 64) as usize;
+            }
+        }
+    }
+
+    /// Standard normal variate (Box–Muller, one value per call; the spare
+    /// is discarded for simplicity — generation is not a hot path).
+    pub fn gaussian(&mut self) -> f64 {
+        loop {
+            let u1 = self.next_f64();
+            if u1 > 1e-300 {
+                let u2 = self.next_f64();
+                return (-2.0 * u1.ln()).sqrt() * (2.0 * std::f64::consts::PI * u2).cos();
+            }
+        }
+    }
+
+    /// Bernoulli trial with success probability `p`.
+    #[inline]
+    pub fn bernoulli(&mut self, p: f64) -> bool {
+        self.next_f64() < p
+    }
+
+    /// `k` i.i.d. uniform draws from `[0, n)` **with** replacement.
+    pub fn uniform_indices(&mut self, n: usize, k: usize) -> Vec<usize> {
+        (0..k).map(|_| self.below(n)).collect()
+    }
+
+    /// `k` distinct uniform draws from `[0, n)` **without** replacement
+    /// (partial Fisher–Yates over an index array; O(n) memory, O(k) swaps —
+    /// used for dataset splits and the SQUEAK partition).
+    pub fn sample_without_replacement(&mut self, n: usize, k: usize) -> Vec<usize> {
+        assert!(k <= n);
+        let mut idx: Vec<usize> = (0..n).collect();
+        for i in 0..k {
+            let j = i + self.below(n - i);
+            idx.swap(i, j);
+        }
+        idx.truncate(k);
+        idx
+    }
+
+    /// Random permutation of `[0, n)`.
+    pub fn permutation(&mut self, n: usize) -> Vec<usize> {
+        self.sample_without_replacement(n, n)
+    }
+
+    /// `k` multinomial draws (with replacement) from unnormalized weights.
+    ///
+    /// Uses the alias method: `O(len + k)` instead of `O(len·k)`.
+    pub fn multinomial(&mut self, weights: &[f64], k: usize) -> Vec<usize> {
+        let table = AliasTable::new(weights);
+        (0..k).map(|_| table.sample(self)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_given_seed() {
+        let mut a = Rng::seeded(42);
+        let mut b = Rng::seeded(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+        let mut c = Rng::seeded(43);
+        assert_ne!(Rng::seeded(42).next_u64(), c.next_u64());
+    }
+
+    #[test]
+    fn uniform_mean_and_range() {
+        let mut r = Rng::seeded(1);
+        let n = 20_000;
+        let mut sum = 0.0;
+        for _ in 0..n {
+            let v = r.next_f64();
+            assert!((0.0..1.0).contains(&v));
+            sum += v;
+        }
+        let mean = sum / n as f64;
+        assert!((mean - 0.5).abs() < 0.01, "mean {mean}");
+    }
+
+    #[test]
+    fn below_is_in_range_and_roughly_uniform() {
+        let mut r = Rng::seeded(2);
+        let mut counts = [0usize; 7];
+        for _ in 0..70_000 {
+            counts[r.below(7)] += 1;
+        }
+        for &c in &counts {
+            assert!((c as f64 - 10_000.0).abs() < 600.0, "counts {counts:?}");
+        }
+    }
+
+    #[test]
+    fn gaussian_moments() {
+        let mut r = Rng::seeded(3);
+        let n = 50_000;
+        let (mut s, mut s2) = (0.0, 0.0);
+        for _ in 0..n {
+            let g = r.gaussian();
+            s += g;
+            s2 += g * g;
+        }
+        let mean = s / n as f64;
+        let var = s2 / n as f64 - mean * mean;
+        assert!(mean.abs() < 0.02, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.05, "var {var}");
+    }
+
+    #[test]
+    fn without_replacement_distinct_and_complete() {
+        let mut r = Rng::seeded(4);
+        let s = r.sample_without_replacement(100, 40);
+        assert_eq!(s.len(), 40);
+        let mut sorted = s.clone();
+        sorted.sort_unstable();
+        sorted.dedup();
+        assert_eq!(sorted.len(), 40, "duplicates found");
+        assert!(s.iter().all(|&i| i < 100));
+        // full permutation covers everything
+        let p = r.permutation(50);
+        let mut q = p.clone();
+        q.sort_unstable();
+        assert_eq!(q, (0..50).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn bernoulli_rate() {
+        let mut r = Rng::seeded(5);
+        let hits = (0..50_000).filter(|_| r.bernoulli(0.3)).count();
+        let rate = hits as f64 / 50_000.0;
+        assert!((rate - 0.3).abs() < 0.01, "rate {rate}");
+    }
+
+    #[test]
+    fn multinomial_follows_weights() {
+        let mut r = Rng::seeded(6);
+        let w = [1.0, 2.0, 3.0, 4.0];
+        let draws = r.multinomial(&w, 100_000);
+        let mut counts = [0usize; 4];
+        for d in draws {
+            counts[d] += 1;
+        }
+        let total: f64 = w.iter().sum();
+        for i in 0..4 {
+            let expect = w[i] / total;
+            let got = counts[i] as f64 / 100_000.0;
+            assert!((got - expect).abs() < 0.01, "cat {i}: {got} vs {expect}");
+        }
+    }
+}

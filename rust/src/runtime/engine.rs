@@ -1,0 +1,229 @@
+//! [`XlaEngine`] — the production [`KernelEngine`]: kernel blocks
+//! evaluated by the AOT-compiled Pallas tiles through PJRT.
+//!
+//! Dynamic shapes (`|J|`, `|U_h|`, `n`) are mapped onto the fixed
+//! `(T, D)` tile contract by zero-padding: padded feature columns are
+//! exact for the RBF kernel (they add 0 to ‖x−y‖²); padded *rows*
+//! produce garbage entries that are simply never copied out of the tile.
+
+use std::path::Path;
+
+use super::PjrtRuntime;
+use crate::kernels::{Gaussian, KernelEngine};
+use crate::linalg::Matrix;
+
+/// Kernel engine backed by PJRT-compiled Pallas tiles.
+pub struct XlaEngine {
+    runtime: PjrtRuntime,
+    kernel: Gaussian,
+    /// Original data (f64, for `points()` and out-of-sample queries).
+    x: Matrix,
+    /// f32 copy padded to the manifest feature dim, row-major.
+    xf: Vec<f32>,
+    dim: usize,
+    tile: usize,
+}
+
+impl XlaEngine {
+    /// Build from a loaded runtime and a dataset.
+    pub fn new(runtime: PjrtRuntime, x: Matrix, kernel: Gaussian) -> anyhow::Result<Self> {
+        let dim = runtime.manifest.feature_dim;
+        let tile = runtime.manifest.tile;
+        anyhow::ensure!(
+            x.cols() <= dim,
+            "dataset dim {} exceeds artifact feature_dim {dim}",
+            x.cols()
+        );
+        let mut xf = vec![0.0f32; x.rows() * dim];
+        for i in 0..x.rows() {
+            for (j, &v) in x.row(i).iter().enumerate() {
+                xf[i * dim + j] = v as f32;
+            }
+        }
+        Ok(XlaEngine { runtime, kernel, x, xf, dim, tile })
+    }
+
+    /// Convenience: load artifacts from `dir` and build the engine.
+    pub fn from_artifacts(dir: &Path, x: Matrix, kernel: Gaussian) -> anyhow::Result<Self> {
+        Ok(Self::new(PjrtRuntime::load(dir)?, x, kernel)?)
+    }
+
+    /// Tile size `T` of the artifact contract.
+    pub fn tile(&self) -> usize {
+        self.tile
+    }
+
+    /// Gather `idx` rows (padded f32) into a `(T, D)` tile buffer;
+    /// rows beyond `idx.len()` stay zero.
+    fn gather_tile(&self, idx: &[usize], out: &mut [f32]) {
+        debug_assert!(idx.len() <= self.tile);
+        out.fill(0.0);
+        for (r, &i) in idx.iter().enumerate() {
+            let src = &self.xf[i * self.dim..(i + 1) * self.dim];
+            out[r * self.dim..r * self.dim + self.dim].copy_from_slice(src);
+        }
+    }
+
+    /// Gather rows of an explicit query matrix into a tile buffer.
+    fn gather_query_tile(&self, q: &Matrix, rows: std::ops::Range<usize>, out: &mut [f32]) {
+        out.fill(0.0);
+        for (r, i) in rows.enumerate() {
+            for (j, &v) in q.row(i).iter().enumerate() {
+                out[r * self.dim + j] = v as f32;
+            }
+        }
+    }
+
+    /// Assemble a kernel block by looping `(T×T)` tile calls.
+    fn block_tiled(
+        &self,
+        row_tiles: &[&[usize]],
+        col_tiles: &[&[usize]],
+        out: &mut Matrix,
+    ) -> anyhow::Result<()> {
+        let t = self.tile;
+        let gamma = self.kernel.gamma() as f32;
+        let mut xbuf = vec![0.0f32; t * self.dim];
+        let mut ybuf = vec![0.0f32; t * self.dim];
+        let mut row_off = 0;
+        for rt in row_tiles {
+            self.gather_tile(rt, &mut xbuf);
+            let mut col_off = 0;
+            for ct in col_tiles {
+                self.gather_tile(ct, &mut ybuf);
+                let tile_out = self.runtime.rbf_block_tile(&xbuf, &ybuf, gamma)?;
+                for (r, _) in rt.iter().enumerate() {
+                    let dst = out.row_mut(row_off + r);
+                    for (c, _) in ct.iter().enumerate() {
+                        dst[col_off + c] = tile_out[r * t + c] as f64;
+                    }
+                }
+                col_off += ct.len();
+            }
+            row_off += rt.len();
+        }
+        Ok(())
+    }
+}
+
+impl KernelEngine for XlaEngine {
+    fn n(&self) -> usize {
+        self.x.rows()
+    }
+
+    fn kernel(&self) -> &Gaussian {
+        &self.kernel
+    }
+
+    fn points(&self) -> &Matrix {
+        &self.x
+    }
+
+    fn block(&self, rows: &[usize], cols: &[usize]) -> Matrix {
+        let t = self.tile;
+        let mut out = Matrix::zeros(rows.len(), cols.len());
+        let row_tiles: Vec<&[usize]> = rows.chunks(t).collect();
+        let col_tiles: Vec<&[usize]> = cols.chunks(t).collect();
+        self.block_tiled(&row_tiles, &col_tiles, &mut out)
+            .expect("XLA tile execution failed");
+        out
+    }
+
+    fn cross_block(&self, q: &Matrix, cols: &[usize]) -> Matrix {
+        assert!(q.cols() <= self.dim, "query dim exceeds artifact feature_dim");
+        let t = self.tile;
+        let gamma = self.kernel.gamma() as f32;
+        let mut out = Matrix::zeros(q.rows(), cols.len());
+        let mut xbuf = vec![0.0f32; t * self.dim];
+        let mut ybuf = vec![0.0f32; t * self.dim];
+        let col_tiles: Vec<&[usize]> = cols.chunks(t).collect();
+        let mut row_off = 0;
+        while row_off < q.rows() {
+            let row_end = (row_off + t).min(q.rows());
+            self.gather_query_tile(q, row_off..row_end, &mut xbuf);
+            let mut col_off = 0;
+            for ct in &col_tiles {
+                self.gather_tile(ct, &mut ybuf);
+                let tile_out = self
+                    .runtime
+                    .rbf_block_tile(&xbuf, &ybuf, gamma)
+                    .expect("XLA tile execution failed");
+                for r in 0..(row_end - row_off) {
+                    let dst = out.row_mut(row_off + r);
+                    for (c, _) in ct.iter().enumerate() {
+                        dst[col_off + c] = tile_out[r * t + c] as f64;
+                    }
+                }
+                col_off += ct.len();
+            }
+            row_off = row_end;
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::susy_like;
+    use crate::kernels::NativeEngine;
+    use crate::rng::Rng;
+    use crate::runtime::find_artifact_dir;
+
+    fn engines(n: usize) -> Option<(NativeEngine, XlaEngine)> {
+        let dir = find_artifact_dir()?;
+        let ds = susy_like(n, &mut Rng::seeded(123));
+        let kern = Gaussian::new(2.0);
+        let native = NativeEngine::new(ds.x.clone(), kern.clone());
+        let xla = XlaEngine::from_artifacts(&dir, ds.x, kern).ok()?;
+        Some((native, xla))
+    }
+
+    #[test]
+    fn xla_block_matches_native_f32_tolerance() {
+        let Some((native, xla)) = engines(600) else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        // sizes straddling tile boundaries: < T, = T, > T
+        for (nr, nc) in [(5usize, 7usize), (256, 100), (300, 300)] {
+            let rows: Vec<usize> = (0..nr).map(|i| (i * 601) % 600).collect();
+            let cols: Vec<usize> = (0..nc).map(|i| (i * 811) % 600).collect();
+            let a = native.block(&rows, &cols);
+            let b = xla.block(&rows, &cols);
+            assert!(
+                a.max_abs_diff(&b) < 1e-5,
+                "block {nr}x{nc} max diff {}",
+                a.max_abs_diff(&b)
+            );
+        }
+    }
+
+    #[test]
+    fn xla_cross_block_matches_native() {
+        let Some((native, xla)) = engines(400) else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let q = Matrix::from_fn(30, 18, |i, j| ((i * 18 + j) as f64 * 0.37).sin());
+        let cols: Vec<usize> = (0..90).map(|i| (i * 13) % 400).collect();
+        let a = native.cross_block(&q, &cols);
+        let b = xla.cross_block(&q, &cols);
+        assert!(a.max_abs_diff(&b) < 1e-5, "cross diff {}", a.max_abs_diff(&b));
+    }
+
+    #[test]
+    fn xla_streaming_matvec_matches_native() {
+        let Some((native, xla)) = engines(500) else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let centers: Vec<usize> = (0..40).map(|i| i * 12).collect();
+        let v: Vec<f64> = (0..40).map(|i| ((i as f64) * 0.3).cos()).collect();
+        let a = native.knm_t_knm_matvec(&centers, &v);
+        let b = xla.knm_t_knm_matvec(&centers, &v);
+        for (x, y) in a.iter().zip(&b) {
+            assert!((x - y).abs() < 1e-3 * x.abs().max(1.0), "{x} vs {y}");
+        }
+    }
+}

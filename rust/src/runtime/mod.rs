@@ -1,0 +1,43 @@
+//! PJRT runtime: load the AOT artifacts produced by `make artifacts`
+//! (`python/compile/aot.py`) and serve them to the L3 hot path.
+//!
+//! * [`Manifest`] — parsed `artifacts/manifest.json` (tile geometry +
+//!   artifact inventory), validated at load time.
+//! * [`PjrtRuntime`] — a PJRT CPU client with every artifact compiled
+//!   once (`HloModuleProto::from_text_file` → `client.compile`); exposes
+//!   typed tile calls.
+//! * [`XlaEngine`] — a [`crate::kernels::KernelEngine`] whose kernel
+//!   blocks are evaluated by the compiled Pallas/JAX tiles: the
+//!   production configuration of the three-layer stack. Python never
+//!   runs on this path.
+
+mod engine;
+mod pjrt;
+
+pub use engine::XlaEngine;
+pub use pjrt::{Manifest, PjrtRuntime};
+
+/// Default artifact directory relative to the repo root.
+pub const DEFAULT_ARTIFACT_DIR: &str = "artifacts";
+
+/// Locate the artifact directory: `$BLESS_ARTIFACTS`, or `artifacts/`
+/// relative to the current dir or its ancestors (so tests work from the
+/// crate root and binaries from anywhere in the repo).
+pub fn find_artifact_dir() -> Option<std::path::PathBuf> {
+    if let Ok(p) = std::env::var("BLESS_ARTIFACTS") {
+        let p = std::path::PathBuf::from(p);
+        if p.join("manifest.json").exists() {
+            return Some(p);
+        }
+    }
+    let mut dir = std::env::current_dir().ok()?;
+    loop {
+        let cand = dir.join(DEFAULT_ARTIFACT_DIR);
+        if cand.join("manifest.json").exists() {
+            return Some(cand);
+        }
+        if !dir.pop() {
+            return None;
+        }
+    }
+}

@@ -1,0 +1,189 @@
+//! PJRT client + compiled-artifact registry.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use crate::util::json::Json;
+
+/// Parsed `manifest.json`: tile geometry and artifact inventory.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub tile: usize,
+    pub feature_dim: usize,
+    pub files: BTreeMap<String, String>,
+}
+
+impl Manifest {
+    /// Load and validate a manifest from the artifact directory.
+    pub fn load(dir: &Path) -> anyhow::Result<Manifest> {
+        let text = std::fs::read_to_string(dir.join("manifest.json"))?;
+        let j = Json::parse(&text)?;
+        let tile = j
+            .get("tile")
+            .and_then(Json::as_usize)
+            .ok_or_else(|| anyhow::anyhow!("manifest missing 'tile'"))?;
+        let feature_dim = j
+            .get("feature_dim")
+            .and_then(Json::as_usize)
+            .ok_or_else(|| anyhow::anyhow!("manifest missing 'feature_dim'"))?;
+        let arts = j
+            .get("artifacts")
+            .and_then(Json::as_obj)
+            .ok_or_else(|| anyhow::anyhow!("manifest missing 'artifacts'"))?;
+        let mut files = BTreeMap::new();
+        for (name, meta) in arts {
+            let file = meta
+                .get("file")
+                .and_then(Json::as_str)
+                .ok_or_else(|| anyhow::anyhow!("artifact {name} missing 'file'"))?;
+            anyhow::ensure!(dir.join(file).exists(), "artifact file {file} missing");
+            files.insert(name.clone(), file.to_string());
+        }
+        anyhow::ensure!(!files.is_empty(), "manifest lists no artifacts");
+        Ok(Manifest { tile, feature_dim, files })
+    }
+}
+
+/// A PJRT CPU client holding every artifact compiled once.
+pub struct PjrtRuntime {
+    client: xla::PjRtClient,
+    executables: BTreeMap<String, xla::PjRtLoadedExecutable>,
+    pub manifest: Manifest,
+    pub dir: PathBuf,
+}
+
+impl PjrtRuntime {
+    /// Load + compile all artifacts in `dir`.
+    pub fn load(dir: &Path) -> anyhow::Result<Self> {
+        let manifest = Manifest::load(dir)?;
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| anyhow::anyhow!("PJRT CPU client: {e:?}"))?;
+        let mut executables = BTreeMap::new();
+        for (name, file) in &manifest.files {
+            let path = dir.join(file);
+            let proto = xla::HloModuleProto::from_text_file(&path)
+                .map_err(|e| anyhow::anyhow!("parse {file}: {e:?}"))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client
+                .compile(&comp)
+                .map_err(|e| anyhow::anyhow!("compile {name}: {e:?}"))?;
+            executables.insert(name.clone(), exe);
+        }
+        Ok(PjrtRuntime { client, executables, manifest, dir: dir.to_path_buf() })
+    }
+
+    /// PJRT platform name (diagnostics).
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Artifact names available.
+    pub fn artifact_names(&self) -> Vec<&str> {
+        self.executables.keys().map(|s| s.as_str()).collect()
+    }
+
+    /// Execute a named artifact on literal inputs; returns the flat f32
+    /// payload of the (1-tuple) result.
+    pub fn call(&self, name: &str, inputs: &[xla::Literal]) -> anyhow::Result<Vec<f32>> {
+        let exe = self
+            .executables
+            .get(name)
+            .ok_or_else(|| anyhow::anyhow!("unknown artifact {name}"))?;
+        let result = exe
+            .execute::<xla::Literal>(inputs)
+            .map_err(|e| anyhow::anyhow!("execute {name}: {e:?}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("fetch {name}: {e:?}"))?;
+        // aot.py lowers with return_tuple=True → unwrap the 1-tuple
+        let out = result
+            .to_tuple1()
+            .map_err(|e| anyhow::anyhow!("untuple {name}: {e:?}"))?;
+        out.to_vec::<f32>().map_err(|e| anyhow::anyhow!("read {name}: {e:?}"))
+    }
+
+    /// Build a `(rows, cols)` f32 literal from a flat slice.
+    pub fn literal_2d(&self, data: &[f32], rows: usize, cols: usize) -> anyhow::Result<xla::Literal> {
+        anyhow::ensure!(data.len() == rows * cols, "literal size mismatch");
+        xla::Literal::vec1(data)
+            .reshape(&[rows as i64, cols as i64])
+            .map_err(|e| anyhow::anyhow!("reshape: {e:?}"))
+    }
+
+    /// Build a 1-D f32 literal.
+    pub fn literal_1d(&self, data: &[f32]) -> xla::Literal {
+        xla::Literal::vec1(data)
+    }
+
+    /// Build an f32 scalar literal.
+    pub fn literal_scalar(&self, v: f32) -> xla::Literal {
+        xla::Literal::scalar(v)
+    }
+
+    /// Evaluate one `(T,D)x(T,D) → (T,T)` RBF tile.
+    pub fn rbf_block_tile(
+        &self,
+        x: &[f32],
+        y: &[f32],
+        gamma: f32,
+    ) -> anyhow::Result<Vec<f32>> {
+        let t = self.manifest.tile;
+        let d = self.manifest.feature_dim;
+        let lx = self.literal_2d(x, t, d)?;
+        let ly = self.literal_2d(y, t, d)?;
+        let lg = self.literal_scalar(gamma);
+        let out = self.call("rbf_block", &[lx, ly, lg])?;
+        anyhow::ensure!(out.len() == t * t, "bad tile output size {}", out.len());
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::find_artifact_dir;
+
+    #[test]
+    fn manifest_parses_real_artifacts() {
+        let Some(dir) = find_artifact_dir() else {
+            eprintln!("skipping: artifacts not built (run `make artifacts`)");
+            return;
+        };
+        let m = Manifest::load(&dir).unwrap();
+        assert!(m.tile >= 64);
+        assert!(m.feature_dim >= 2);
+        assert!(m.files.contains_key("rbf_block"));
+    }
+
+    #[test]
+    fn runtime_loads_and_executes_tile() {
+        let Some(dir) = find_artifact_dir() else {
+            eprintln!("skipping: artifacts not built (run `make artifacts`)");
+            return;
+        };
+        let rt = PjrtRuntime::load(&dir).unwrap();
+        assert!(rt.platform().to_lowercase().contains("cpu")
+            || rt.platform().to_lowercase().contains("host"));
+        let t = rt.manifest.tile;
+        let d = rt.manifest.feature_dim;
+        // identical x/y rows ⇒ unit diagonal
+        let mut x = vec![0.0f32; t * d];
+        for (i, v) in x.iter_mut().enumerate() {
+            *v = ((i % 17) as f32) * 0.1;
+        }
+        let k = rt.rbf_block_tile(&x, &x, 0.5).unwrap();
+        for i in 0..t {
+            assert!((k[i * t + i] - 1.0).abs() < 1e-5, "diag {} = {}", i, k[i * t + i]);
+        }
+        // symmetric
+        for i in 0..8 {
+            for j in 0..8 {
+                assert!((k[i * t + j] - k[j * t + i]).abs() < 1e-5);
+            }
+        }
+    }
+
+    #[test]
+    fn missing_dir_errors_cleanly() {
+        assert!(Manifest::load(Path::new("/nonexistent-dir-xyz")).is_err());
+    }
+}

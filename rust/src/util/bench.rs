@@ -1,0 +1,151 @@
+//! Minimal criterion-style benchmark harness.
+//!
+//! `criterion` is not in the offline registry; this module provides the
+//! subset the repo needs: named benchmarks with warm-up, repeated timed
+//! iterations, and mean/median/σ reporting, plus a `black_box` to defeat
+//! constant folding. Bench binaries are declared with `harness = false`
+//! in `Cargo.toml` and run under `cargo bench`.
+
+use std::hint::black_box as std_black_box;
+use std::time::Instant;
+
+/// Re-export of `std::hint::black_box` under the criterion-familiar name.
+pub fn black_box<T>(x: T) -> T {
+    std_black_box(x)
+}
+
+/// Statistics of one benchmark.
+#[derive(Clone, Debug)]
+pub struct BenchStats {
+    pub name: String,
+    pub iters: usize,
+    pub mean_s: f64,
+    pub median_s: f64,
+    pub std_s: f64,
+    pub min_s: f64,
+    pub max_s: f64,
+}
+
+impl BenchStats {
+    fn fmt_time(s: f64) -> String {
+        if s < 1e-6 {
+            format!("{:8.1} ns", s * 1e9)
+        } else if s < 1e-3 {
+            format!("{:8.2} µs", s * 1e6)
+        } else if s < 1.0 {
+            format!("{:8.2} ms", s * 1e3)
+        } else {
+            format!("{:8.3} s ", s)
+        }
+    }
+
+    /// One-line human-readable report.
+    pub fn report(&self) -> String {
+        format!(
+            "{:<44} {}  (median {}, σ {}, {} iters)",
+            self.name,
+            Self::fmt_time(self.mean_s),
+            Self::fmt_time(self.median_s),
+            Self::fmt_time(self.std_s),
+            self.iters
+        )
+    }
+}
+
+/// A group of benchmarks sharing warm-up / iteration policy.
+pub struct Bencher {
+    warmup_iters: usize,
+    min_iters: usize,
+    max_iters: usize,
+    target_secs: f64,
+    results: Vec<BenchStats>,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Bencher {
+            warmup_iters: 1,
+            min_iters: 3,
+            max_iters: 50,
+            target_secs: 2.0,
+            results: Vec::new(),
+        }
+    }
+}
+
+impl Bencher {
+    /// Harness with a per-benchmark time budget (seconds).
+    pub fn with_budget(target_secs: f64) -> Self {
+        Bencher { target_secs, ..Default::default() }
+    }
+
+    /// Quick harness for cheap micro-benchmarks.
+    pub fn quick() -> Self {
+        Bencher { warmup_iters: 3, min_iters: 10, max_iters: 1000, target_secs: 0.5, ..Default::default() }
+    }
+
+    /// Run `f` repeatedly and record stats under `name`.
+    /// The closure's return value is black-boxed so work is not elided.
+    pub fn bench<T>(&mut self, name: &str, mut f: impl FnMut() -> T) -> &BenchStats {
+        for _ in 0..self.warmup_iters {
+            black_box(f());
+        }
+        let mut times = Vec::new();
+        let budget_start = Instant::now();
+        while times.len() < self.min_iters
+            || (budget_start.elapsed().as_secs_f64() < self.target_secs
+                && times.len() < self.max_iters)
+        {
+            let t0 = Instant::now();
+            black_box(f());
+            times.push(t0.elapsed().as_secs_f64());
+        }
+        times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let stats = BenchStats {
+            name: name.to_string(),
+            iters: times.len(),
+            mean_s: super::mean(&times),
+            median_s: super::quantile(&times, 0.5),
+            std_s: super::std_dev(&times),
+            min_s: times[0],
+            max_s: *times.last().unwrap(),
+        };
+        println!("{}", stats.report());
+        self.results.push(stats);
+        self.results.last().unwrap()
+    }
+
+    /// All recorded results.
+    pub fn results(&self) -> &[BenchStats] {
+        &self.results
+    }
+
+    /// Print a closing summary table.
+    pub fn summary(&self, title: &str) {
+        println!("\n=== {title} ===");
+        for s in &self.results {
+            println!("{}", s.report());
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_records_stats() {
+        let mut b = Bencher { warmup_iters: 1, min_iters: 3, max_iters: 5, target_secs: 0.01, ..Default::default() };
+        let s = b.bench("noop", || 1 + 1).clone();
+        assert_eq!(s.name, "noop");
+        assert!(s.iters >= 3);
+        assert!(s.mean_s >= 0.0);
+        assert!(s.min_s <= s.median_s && s.median_s <= s.max_s);
+        assert_eq!(b.results().len(), 1);
+    }
+
+    #[test]
+    fn black_box_passes_value() {
+        assert_eq!(black_box(7), 7);
+    }
+}

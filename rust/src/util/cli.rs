@@ -1,0 +1,137 @@
+//! Tiny CLI argument parser (the offline registry has no `clap`).
+//!
+//! Supports `--key value`, `--key=value`, boolean `--flag`, and positional
+//! arguments, with typed getters and defaults. Used by `rust/src/main.rs`
+//! and the example binaries.
+
+use std::collections::BTreeMap;
+
+/// Parsed command-line arguments.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    opts: BTreeMap<String, String>,
+    flags: Vec<String>,
+    positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an explicit iterator (tests) — skips nothing.
+    pub fn parse_from<I: IntoIterator<Item = String>>(items: I) -> Self {
+        let mut out = Args::default();
+        let mut it = items.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(rest) = a.strip_prefix("--") {
+                if let Some((k, v)) = rest.split_once('=') {
+                    out.opts.insert(k.to_string(), v.to_string());
+                } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                    let v = it.next().unwrap();
+                    out.opts.insert(rest.to_string(), v);
+                } else {
+                    out.flags.push(rest.to_string());
+                }
+            } else {
+                out.positional.push(a);
+            }
+        }
+        out
+    }
+
+    /// Parse the process arguments (skipping argv[0]).
+    pub fn parse() -> Self {
+        Self::parse_from(std::env::args().skip(1))
+    }
+
+    /// Positional argument `i`.
+    pub fn pos(&self, i: usize) -> Option<&str> {
+        self.positional.get(i).map(|s| s.as_str())
+    }
+
+    /// All positional arguments.
+    pub fn positional(&self) -> &[String] {
+        &self.positional
+    }
+
+    /// Raw string option.
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.opts.get(key).map(|s| s.as_str())
+    }
+
+    /// String option with default.
+    pub fn get_str(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    /// Typed option with default; panics with a clear message on a
+    /// malformed value (user error should fail loudly).
+    pub fn get_parse<T: std::str::FromStr>(&self, key: &str, default: T) -> T
+    where
+        T::Err: std::fmt::Debug,
+    {
+        match self.get(key) {
+            None => default,
+            Some(v) => v
+                .parse()
+                .unwrap_or_else(|e| panic!("invalid value for --{key}: {v:?} ({e:?})")),
+        }
+    }
+
+    /// usize option.
+    pub fn get_usize(&self, key: &str, default: usize) -> usize {
+        self.get_parse(key, default)
+    }
+
+    /// f64 option.
+    pub fn get_f64(&self, key: &str, default: f64) -> f64 {
+        self.get_parse(key, default)
+    }
+
+    /// u64 option (seeds).
+    pub fn get_u64(&self, key: &str, default: u64) -> u64 {
+        self.get_parse(key, default)
+    }
+
+    /// Boolean flag presence.
+    pub fn has_flag(&self, key: &str) -> bool {
+        self.flags.iter().any(|f| f == key) || self.get(key).map(|v| v == "true").unwrap_or(false)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse_from(s.split_whitespace().map(|s| s.to_string()))
+    }
+
+    #[test]
+    fn key_value_styles() {
+        let a = parse("--n 100 --lambda=1e-3 run --verbose");
+        assert_eq!(a.get_usize("n", 0), 100);
+        assert!((a.get_f64("lambda", 0.0) - 1e-3).abs() < 1e-15);
+        assert_eq!(a.pos(0), Some("run"));
+        assert!(a.has_flag("verbose"));
+        assert!(!a.has_flag("quiet"));
+    }
+
+    #[test]
+    fn defaults_when_absent() {
+        let a = parse("cmd");
+        assert_eq!(a.get_usize("n", 7), 7);
+        assert_eq!(a.get_str("name", "x"), "x");
+        assert_eq!(a.get_u64("seed", 5), 5);
+    }
+
+    #[test]
+    fn flag_followed_by_flag() {
+        let a = parse("--fast --n 3");
+        assert!(a.has_flag("fast"));
+        assert_eq!(a.get_usize("n", 0), 3);
+    }
+
+    #[test]
+    #[should_panic(expected = "invalid value")]
+    fn malformed_value_panics() {
+        parse("--n abc").get_usize("n", 0);
+    }
+}

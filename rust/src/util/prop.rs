@@ -1,0 +1,124 @@
+//! Miniature property-based testing framework (no `proptest` offline).
+//!
+//! Provides seeded generators over the crate's own [`Rng`] and a
+//! `for_all`-style runner that reports the failing case index + seed so a
+//! failure is reproducible. No shrinking — cases are kept small instead.
+//!
+//! ```
+//! use bless::util::prop::{for_all, Gen};
+//! for_all(64, 0xC0FFEE, |g| {
+//!     let v = g.vec_f64(1..20, -10.0..10.0);
+//!     let s: f64 = v.iter().sum();
+//!     assert!(s.is_finite());
+//! });
+//! ```
+
+use crate::rng::Rng;
+use std::ops::Range;
+
+/// Case generator handed to each property iteration.
+pub struct Gen {
+    rng: Rng,
+    pub case: usize,
+}
+
+impl Gen {
+    /// Uniform usize in `range`.
+    pub fn usize_in(&mut self, range: Range<usize>) -> usize {
+        assert!(range.end > range.start);
+        range.start + self.rng.below(range.end - range.start)
+    }
+
+    /// Uniform f64 in `range`.
+    pub fn f64_in(&mut self, range: Range<f64>) -> f64 {
+        range.start + self.rng.next_f64() * (range.end - range.start)
+    }
+
+    /// Log-uniform f64 in `range` (both endpoints positive) — the natural
+    /// distribution for regularization parameters λ.
+    pub fn f64_log_in(&mut self, range: Range<f64>) -> f64 {
+        assert!(range.start > 0.0 && range.end > range.start);
+        (self.f64_in(range.start.ln()..range.end.ln())).exp()
+    }
+
+    /// Standard normal.
+    pub fn gaussian(&mut self) -> f64 {
+        self.rng.gaussian()
+    }
+
+    /// Bernoulli.
+    pub fn bool_with(&mut self, p: f64) -> bool {
+        self.rng.bernoulli(p)
+    }
+
+    /// Vector of uniform f64, random length in `len`.
+    pub fn vec_f64(&mut self, len: Range<usize>, range: Range<f64>) -> Vec<f64> {
+        let n = self.usize_in(len);
+        (0..n).map(|_| self.f64_in(range.clone())).collect()
+    }
+
+    /// Vector of positive weights (at least one strictly positive).
+    pub fn weights(&mut self, len: Range<usize>) -> Vec<f64> {
+        let mut w = self.vec_f64(len, 0.0..1.0);
+        if w.iter().all(|&v| v == 0.0) {
+            w[0] = 1.0;
+        }
+        w
+    }
+
+    /// Access to the underlying RNG for custom draws.
+    pub fn rng(&mut self) -> &mut Rng {
+        &mut self.rng
+    }
+}
+
+/// Run `prop` for `cases` generated inputs. Panics (bubbling the property's
+/// own assertion) with the case number and derived seed on failure.
+pub fn for_all(cases: usize, seed: u64, mut prop: impl FnMut(&mut Gen)) {
+    for case in 0..cases {
+        let case_seed = seed ^ (case as u64).wrapping_mul(0x9E3779B97F4A7C15);
+        let mut g = Gen { rng: Rng::seeded(case_seed), case };
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| prop(&mut g)));
+        if let Err(e) = result {
+            eprintln!("property failed at case {case} (seed {case_seed:#x})");
+            std::panic::resume_unwind(e);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn generators_stay_in_range() {
+        for_all(100, 1, |g| {
+            let u = g.usize_in(3..10);
+            assert!((3..10).contains(&u));
+            let f = g.f64_in(-1.0..1.0);
+            assert!((-1.0..1.0).contains(&f));
+            let l = g.f64_log_in(1e-6..1e-1);
+            assert!((1e-6..1e-1).contains(&l));
+            let v = g.vec_f64(1..5, 0.0..2.0);
+            assert!(!v.is_empty() && v.len() < 5);
+        });
+    }
+
+    #[test]
+    fn weights_never_all_zero() {
+        for_all(50, 2, |g| {
+            let w = g.weights(1..8);
+            assert!(w.iter().sum::<f64>() > 0.0);
+        });
+    }
+
+    #[test]
+    #[should_panic]
+    fn failing_property_propagates() {
+        for_all(10, 3, |g| {
+            let v = g.usize_in(0..100);
+            assert!(v < 101); // passes
+            assert!(g.case < 5, "fail on later cases");
+        });
+    }
+}

@@ -1,0 +1,223 @@
+//! Cross-module integration tests: the theorem-shaped guarantees of the
+//! paper checked end-to-end through the public API, plus property-based
+//! invariants via the in-repo mini-proptest (`util::prop`).
+
+use bless::baselines::{exact_rls, uniform};
+use bless::bless::{bless, bless_r, BlessConfig, BlessRConfig};
+use bless::data::{auc, susy_like};
+use bless::falkon::{nystrom_krr, Falkon};
+use bless::kernels::{Gaussian, KernelEngine, NativeEngine};
+use bless::leverage::{
+    effective_dimension, exact_leverage_scores, LsGenerator, RAccStats, WeightedSet,
+};
+use bless::rng::Rng;
+use bless::util::prop::for_all;
+
+fn engine(n: usize, sigma: f64, seed: u64) -> NativeEngine {
+    let ds = susy_like(n, &mut Rng::seeded(seed));
+    NativeEngine::new(ds.x, Gaussian::new(sigma))
+}
+
+/// Eq. (2): BLESS and BLESS-R scores lie in a multiplicative band around
+/// the exact scores for every point, at every path level we spot-check.
+#[test]
+fn thm1a_multiplicative_accuracy_band() {
+    let eng = engine(500, 3.0, 1);
+    let lambda = 2e-3;
+    let all: Vec<usize> = (0..500).collect();
+    let exact = exact_leverage_scores(&eng, lambda);
+
+    for (name, set) in [
+        ("bless", bless(&eng, lambda, &BlessConfig::default(), &mut Rng::seeded(2))
+            .final_set()
+            .clone()),
+        ("bless-r", bless_r(&eng, lambda, &BlessRConfig::default(), &mut Rng::seeded(3))
+            .final_set()
+            .clone()),
+    ] {
+        let gen = LsGenerator::new(&eng, &set, lambda).unwrap();
+        let stats = RAccStats::from_scores(&gen.scores(&all), &exact);
+        // practical-constant band (paper t with small q1/q2): [1/3, 3]
+        assert!(stats.min > 1.0 / 3.5, "{name}: min ratio {}", stats.min);
+        assert!(stats.max < 3.5, "{name}: max ratio {}", stats.max);
+        assert!((stats.mean - 1.0).abs() < 0.5, "{name}: mean {}", stats.mean);
+    }
+}
+
+/// Thm. 1(b): |J_h| = O(q₂ d_eff(λ_h)) along the whole path.
+#[test]
+fn thm1b_path_sizes_track_deff() {
+    let eng = engine(600, 3.0, 4);
+    let lambda = 1e-3;
+    let cfg = BlessConfig::default();
+    let path = bless(&eng, lambda, &cfg, &mut Rng::seeded(5));
+    // spot-check three levels (exact d_eff is O(n³) per level)
+    let levels = &path.levels;
+    for l in [&levels[0], &levels[levels.len() / 2], levels.last().unwrap()] {
+        let deff = effective_dimension(&exact_leverage_scores(&eng, l.lambda));
+        assert!(
+            (l.set.len() as f64) <= 5.0 * cfg.q2 * deff + cfg.min_m as f64,
+            "λ={}: |J|={} vs deff={deff}",
+            l.lambda,
+            l.set.len()
+        );
+    }
+}
+
+/// The whole-path property the paper advertises for cross-validation:
+/// every level's generator is accurate *at its own λ_h*.
+#[test]
+fn path_levels_are_each_accurate() {
+    let eng = engine(400, 3.0, 6);
+    let path = bless(&eng, 2e-3, &BlessConfig::default(), &mut Rng::seeded(7));
+    let all: Vec<usize> = (0..400).collect();
+    // check the last three levels (most relevant λs)
+    for l in path.levels.iter().rev().take(3) {
+        let exact = exact_leverage_scores(&eng, l.lambda);
+        let gen = LsGenerator::new(&eng, &l.set, l.lambda).unwrap();
+        let stats = RAccStats::from_scores(&gen.scores(&all), &exact);
+        assert!(
+            stats.mean > 0.5 && stats.mean < 2.0,
+            "level λ={} mean R-ACC {}",
+            l.lambda,
+            stats.mean
+        );
+    }
+}
+
+/// FALKON-BLESS end-to-end beats (or matches) FALKON-UNI with the same
+/// number of centers on held-out AUC — the Figure-4 claim in miniature.
+#[test]
+fn falkon_bless_competitive_with_uniform() {
+    let mut rng = Rng::seeded(8);
+    let ds = susy_like(1_500, &mut rng);
+    let (train, test) = ds.split(0.3, &mut rng);
+    let eng = NativeEngine::new(train.x.clone(), Gaussian::new(4.0));
+    let lambda_b = 1e-3;
+    let lambda_f = 1e-5;
+    let path = bless(&eng, lambda_b, &BlessConfig::default(), &mut rng);
+    let bset = path.final_set().clone();
+    let m = bset.len();
+
+    let bless_model = Falkon::new(&eng, &bset, lambda_f)
+        .unwrap()
+        .fit(&train.y, 12, None)
+        .unwrap();
+    let b_auc = auc(&bless_model.predict(&eng, &test.x), &test.y);
+
+    let uni = WeightedSet::uniform(rng.sample_without_replacement(train.n(), m), lambda_f);
+    let uni_model =
+        Falkon::new(&eng, &uni, lambda_f).unwrap().fit(&train.y, 12, None).unwrap();
+    let u_auc = auc(&uni_model.predict(&eng, &test.x), &test.y);
+
+    assert!(b_auc > 0.75, "FALKON-BLESS AUC {b_auc}");
+    assert!(b_auc >= u_auc - 0.03, "BLESS {b_auc} far below UNI {u_auc}");
+}
+
+/// Figure-1 structural claim, in the form that is robust at this scale:
+/// the importance-weighted LS-sampled generator is *centered* (mean
+/// R-ACC ≈ 1) while the unweighted uniform generator is systematically
+/// biased away from 1 (it can only overestimate scores, and the bias
+/// grows as λ shrinks) — i.e. uniform is the less faithful generator.
+#[test]
+fn uniform_generator_more_biased_than_exact_sampling() {
+    let eng = engine(400, 3.0, 9);
+    let lambda = 1e-3;
+    let all: Vec<usize> = (0..400).collect();
+    let exact = exact_leverage_scores(&eng, lambda);
+    let deff = effective_dimension(&exact);
+    let m = ((2.0 * deff) as usize).min(350).max(40);
+
+    let mean_racc = |set: &WeightedSet| {
+        let gen = LsGenerator::new(&eng, set, lambda).unwrap();
+        RAccStats::from_scores(&gen.scores(&all), &exact).mean
+    };
+    let (mut me_sum, mut mu_sum) = (0.0, 0.0);
+    let reps = 5;
+    for seed in 0..reps {
+        let mut rng = Rng::seeded(10 + seed);
+        me_sum += mean_racc(&exact_rls(&eng, lambda, m, &mut rng).set);
+        mu_sum += mean_racc(&uniform(&eng, lambda, m, &mut rng).set);
+    }
+    let (me, mu) = (me_sum / reps as f64, mu_sum / reps as f64);
+    assert!(
+        (me - 1.0).abs() < (mu - 1.0).abs() + 0.05,
+        "exact-LS mean {me} not closer to 1 than uniform mean {mu} (m={m}, deff={deff:.0})"
+    );
+    // uniform never *underestimates* at this m (its q05 stays ≥ ~1)
+    let mut rng = Rng::seeded(99);
+    let u = uniform(&eng, lambda, m, &mut rng).set;
+    let gen = LsGenerator::new(&eng, &u, lambda).unwrap();
+    let st = RAccStats::from_scores(&gen.scores(&all), &exact);
+    assert!(st.q05 > 0.9, "uniform q05 {}", st.q05);
+}
+
+/// Property: Lemma 3 monotonicity holds for the *estimated* scores of any
+/// weighted subset, not just exact ones.
+#[test]
+fn prop_lemma3_monotonicity_of_estimator() {
+    let eng = engine(200, 3.0, 11);
+    for_all(12, 0xBEEF, |g| {
+        let lam = g.f64_log_in(1e-4..1e-1);
+        let lam_p = lam * g.f64_in(1.5..10.0);
+        let m = g.usize_in(5..40);
+        let idx = g.rng().sample_without_replacement(200, m);
+        let set = WeightedSet::uniform(idx, lam);
+        let lo = LsGenerator::new(&eng, &set, lam_p).unwrap();
+        let hi = LsGenerator::new(&eng, &set, lam).unwrap();
+        let probe: Vec<usize> = (0..20).map(|i| i * 10).collect();
+        let s_lo = lo.scores(&probe);
+        let s_hi = hi.scores(&probe);
+        for (a, b) in s_lo.iter().zip(&s_hi) {
+            assert!(*a <= *b + 1e-12, "ℓ(λ') ≤ ℓ(λ) violated: {a} vs {b}");
+            assert!(*b <= (lam_p / lam) * *a + 1e-9, "(λ'/λ) bound violated");
+        }
+    });
+}
+
+/// Property: FALKON prediction is linear in the training labels
+/// (sanity of the whole solve path) and deterministic.
+#[test]
+fn prop_falkon_label_linearity() {
+    let eng = engine(150, 3.0, 12);
+    let centers: Vec<usize> = (0..30).map(|i| i * 5).collect();
+    let lambda = 1e-3;
+    for_all(6, 0xFACE, |g| {
+        let y1: Vec<f64> = (0..150).map(|_| g.gaussian()).collect();
+        let y2: Vec<f64> = (0..150).map(|_| g.gaussian()).collect();
+        let a = g.f64_in(-2.0..2.0);
+        let solve = |y: &[f64]| {
+            nystrom_krr(&eng, &centers, lambda, y).unwrap().alpha
+        };
+        let s1 = solve(&y1);
+        let s2 = solve(&y2);
+        let combo: Vec<f64> = y1.iter().zip(&y2).map(|(u, v)| a * u + v).collect();
+        let sc = solve(&combo);
+        for i in 0..30 {
+            let expect = a * s1[i] + s2[i];
+            assert!(
+                (sc[i] - expect).abs() < 1e-6 * expect.abs().max(1.0),
+                "linearity broken at {i}: {} vs {expect}",
+                sc[i]
+            );
+        }
+    });
+}
+
+/// Property: every sampler returns valid weighted sets for random (n, λ).
+#[test]
+fn prop_all_samplers_valid_outputs() {
+    for_all(8, 0xD00D, |g| {
+        let n = g.usize_in(60..220);
+        let lam = g.f64_log_in(1e-3..1e-1);
+        let ds = susy_like(n, g.rng());
+        let eng = NativeEngine::new(ds.x, Gaussian::new(g.f64_in(1.0..6.0)));
+        for &m in bless::coordinator::Method::all() {
+            let (set, _) =
+                bless::coordinator::run_method(m, &eng, lam, 30.min(n), g.rng());
+            set.validate().unwrap();
+            assert!(set.indices.iter().all(|&i| i < n), "{:?} out of range", m);
+            assert!(!set.is_empty());
+        }
+    });
+}

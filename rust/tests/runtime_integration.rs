@@ -1,0 +1,80 @@
+//! Integration tests for the PJRT/XLA production path: the full
+//! BLESS → FALKON pipeline running on the AOT-compiled Pallas tiles,
+//! compared against the native backend. Skipped (with a notice) when
+//! `make artifacts` has not been run.
+
+use bless::bless::{bless, BlessConfig};
+use bless::data::{auc, susy_like};
+use bless::falkon::Falkon;
+use bless::kernels::{Gaussian, KernelEngine, NativeEngine};
+use bless::leverage::{LsGenerator, WeightedSet};
+use bless::rng::Rng;
+use bless::runtime::{find_artifact_dir, XlaEngine};
+
+fn engines(n: usize, seed: u64) -> Option<(NativeEngine, XlaEngine, Vec<f64>)> {
+    let dir = find_artifact_dir()?;
+    let ds = susy_like(n, &mut Rng::seeded(seed));
+    let kern = Gaussian::new(4.0);
+    let native = NativeEngine::new(ds.x.clone(), kern.clone());
+    let xla = XlaEngine::from_artifacts(&dir, ds.x, kern).ok()?;
+    Some((native, xla, ds.y))
+}
+
+#[test]
+fn leverage_scores_agree_across_backends() {
+    let Some((native, xla, _)) = engines(500, 21) else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let lambda = 1e-3;
+    let set = WeightedSet::uniform((0..100).map(|i| i * 5).collect(), lambda);
+    let probe: Vec<usize> = (0..50).map(|i| i * 9).collect();
+    let sn = LsGenerator::new(&native, &set, lambda).unwrap().scores(&probe);
+    let sx = LsGenerator::new(&xla, &set, lambda).unwrap().scores(&probe);
+    for (a, b) in sn.iter().zip(&sx) {
+        // f32 tiles vs f64 native: agree to ~1e-4 relative
+        assert!(
+            (a - b).abs() < 2e-4 * a.abs().max(1e-6),
+            "score mismatch {a} vs {b}"
+        );
+    }
+}
+
+#[test]
+fn bless_on_xla_engine_selects_sane_set() {
+    let Some((_, xla, _)) = engines(400, 22) else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let path = bless(&xla, 2e-3, &BlessConfig::default(), &mut Rng::seeded(1));
+    let set = path.final_set();
+    set.validate().unwrap();
+    assert!(set.len() >= 8 && set.len() < 400);
+}
+
+#[test]
+fn full_pipeline_on_xla_matches_native_auc() {
+    let Some((native, xla, y)) = engines(800, 23) else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let lambda_f = 1e-4;
+    // same centers on both backends
+    let mut rng = Rng::seeded(2);
+    let centers = rng.sample_without_replacement(800, 80);
+    let set = WeightedSet::uniform(centers, lambda_f);
+
+    let q = native.points().clone();
+    let run = |eng: &dyn KernelEngine| {
+        let model = Falkon::new(eng, &set, lambda_f).unwrap().fit(&y, 10, None).unwrap();
+        let scores = model.predict(eng, &q);
+        auc(&scores, &y)
+    };
+    let a_native = run(&native);
+    let a_xla = run(&xla);
+    assert!(a_native > 0.7, "native AUC {a_native}");
+    assert!(
+        (a_native - a_xla).abs() < 0.01,
+        "backend AUC divergence: {a_native} vs {a_xla}"
+    );
+}
