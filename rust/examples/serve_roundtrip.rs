@@ -1,0 +1,75 @@
+//! Serve round-trip: train → save → load → serve → predict over TCP.
+//!
+//! The full deployment story in one file: BLESS picks centers, FALKON
+//! fits α, the model is packaged into a self-contained artifact, a
+//! prediction server is started from the *loaded* artifact, and a TCP
+//! client scores held-out points — checked against the in-process
+//! predictions.
+//!
+//! ```bash
+//! cargo run --release --example serve_roundtrip
+//! ```
+
+use bless::bless::{bless, BlessConfig};
+use bless::data::susy_like;
+use bless::falkon::Falkon;
+use bless::kernels::{Gaussian, NativeEngine};
+use bless::rng::Rng;
+use bless::serve::{self, Client, ModelArtifact, Predictor, ServeConfig};
+use std::time::Duration;
+
+fn main() -> anyhow::Result<()> {
+    // 1. train: BLESS centers + FALKON coefficients
+    let mut rng = Rng::seeded(42);
+    let ds = susy_like(2_000, &mut rng);
+    let (train, test) = ds.split(0.25, &mut rng);
+    let eng = NativeEngine::new(train.x.clone(), Gaussian::new(4.0));
+    let path = bless(&eng, 1e-3, &BlessConfig::default(), &mut rng);
+    let model = Falkon::new(&eng, path.final_set(), 1e-5)?.fit(&train.y, 12, None)?;
+    println!("trained: M={} centers on n={}", model.centers.len(), train.n());
+
+    // 2. save the self-contained artifact (centers + α + kernel config)
+    let artifact_path = std::env::temp_dir()
+        .join(format!("bless-serve-roundtrip-{}.json", std::process::id()));
+    ModelArtifact::from_fitted(&model, &eng, &train.name)?.save(&artifact_path)?;
+    println!("saved artifact: {}", artifact_path.display());
+
+    // 3. load it back — no training data needed from here on
+    let artifact = ModelArtifact::load(&artifact_path)?;
+    let reference = Predictor::new(&artifact);
+
+    // 4. serve it and score held-out points over TCP
+    let cfg = ServeConfig {
+        addr: "127.0.0.1:0".to_string(), // ephemeral port
+        workers: 2,
+        max_batch: 32,
+        linger: Duration::from_millis(2),
+        ..ServeConfig::default()
+    };
+    let handle = serve::start(artifact, &cfg)?;
+    println!("serving on {}", handle.addr());
+
+    let mut client = Client::connect(handle.addr())?;
+    let mut worst = 0.0f64;
+    for i in 0..10 {
+        let q = test.x.row(i);
+        let (served, cached) = client.predict(i as u64, q)?;
+        let direct = reference.predict_one(q)?;
+        worst = worst.max((served - direct).abs());
+        println!("query {i}: served {served:+.6} direct {direct:+.6} cached={cached}");
+    }
+    let stats = client.stats()?;
+    client.shutdown()?;
+    handle.join();
+    std::fs::remove_file(&artifact_path).ok();
+
+    println!(
+        "requests={} mean_batch={:.2} cache_hits={} | worst |served-direct| = {worst:.2e}",
+        stats.requests,
+        stats.mean_batch(),
+        stats.cache_hits
+    );
+    anyhow::ensure!(worst < 1e-10, "served predictions drifted from direct path");
+    println!("round trip OK");
+    Ok(())
+}

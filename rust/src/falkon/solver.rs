@@ -38,6 +38,14 @@ impl FalkonModel {
         }
         out
     }
+
+    /// Gather the center rows out of the training set (`M × d`): with
+    /// these and `α` the model predicts without the training data — the
+    /// basis of the [`crate::serve`] model artifact.
+    pub fn center_rows(&self, engine: &dyn KernelEngine) -> Matrix {
+        let x = engine.points();
+        Matrix::from_fn(self.centers.len(), x.cols(), |i, j| x.get(self.centers[i], j))
+    }
 }
 
 /// FALKON solver bound to an engine, a weighted center set and λ.

@@ -15,7 +15,13 @@
 //!   side loads the AOT artifacts through [`runtime`] (PJRT CPU client)
 //!   and never touches python at run time.
 //!
-//! ## Quick start
+//! On top of the training stack sits the **serving tier** ([`serve`]):
+//! a fitted model is packaged into a self-contained, checksummed JSON
+//! artifact (kernel config + center rows + `α` — no training data
+//! needed at inference) and served over TCP by a micro-batching,
+//! multi-threaded prediction server.
+//!
+//! ## Quick start: reproduce the paper
 //!
 //! ```no_run
 //! use bless::data::susy_like;
@@ -28,6 +34,21 @@
 //! let out = bless(&engine, 1e-3, &BlessConfig::default(), &mut Rng::seeded(1));
 //! println!("selected {} Nyström centers", out.final_set().indices.len());
 //! ```
+//!
+//! ## Quick start: train → save → serve → predict
+//!
+//! ```bash
+//! repro train --n 8000 --save model.json        # BLESS + FALKON, saved
+//! repro serve --model model.json --port 7878 \
+//!             --workers 4 --max-batch 64        # TCP prediction server
+//! repro predict --model model.json \
+//!             --query "0.1,-0.4,..."            # offline scoring
+//! ```
+//!
+//! Over the wire the server speaks line-delimited JSON
+//! (`{"id":1,"x":[…]}` → `{"id":1,"y":0.83,"cached":false}`); see
+//! [`serve::protocol`]. Concurrent single-point requests are coalesced
+//! into one kernel-block GEMM per tick by [`serve::batcher`].
 pub mod baselines;
 pub mod bless;
 pub mod coordinator;
@@ -38,4 +59,5 @@ pub mod leverage;
 pub mod linalg;
 pub mod rng;
 pub mod runtime;
+pub mod serve;
 pub mod util;

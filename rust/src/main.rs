@@ -11,6 +11,9 @@
 //! repro fig5   [--n 8000]            # HIGGS-like end-to-end
 //! repro table1 [--sizes ...] [--lambda 1e-3]
 //! repro bless  [--n 4000] [--lambda 1e-4] [--method bless|bless-r|...]
+//! repro train   [--n 8000] [--dataset susy|higgs] [--save model.json]
+//! repro predict --model model.json [--query "x1,x2,..."] [--queries file.csv]
+//! repro serve   --model model.json [--port 7878] [--workers 2] [--max-batch 64]
 //! repro info                         # runtime / artifact diagnostics
 //! ```
 
@@ -22,6 +25,7 @@ use bless::coordinator::{
 use bless::data::{higgs_like, susy_like};
 use bless::kernels::Gaussian;
 use bless::rng::Rng;
+use bless::serve::{ModelArtifact, Predictor, ServeConfig};
 use bless::util::cli::Args;
 use bless::util::table::fnum;
 
@@ -36,7 +40,16 @@ fn main() -> anyhow::Result<()> {
         "fig5" => cmd_fig45(&args, true),
         "table1" => cmd_table1(&args),
         "bless" => cmd_bless(&args),
-        "falkon" => cmd_fig45(&args, false),
+        "train" => cmd_train(&args),
+        "predict" => cmd_predict(&args),
+        "serve" => cmd_serve(&args),
+        "falkon" => {
+            eprintln!(
+                "note: `repro falkon` is deprecated (it used to alias fig4); \
+                 running `repro train` — use `train` directly"
+            );
+            cmd_train(&args)
+        }
         "info" => cmd_info(),
         _ => {
             print!("{HELP}");
@@ -55,10 +68,17 @@ repro — BLESS (NeurIPS 2018) reproduction CLI
   fig5    same on HIGGS-like data (paper Fig. 5)
   table1  empirical complexity exponents (paper Table 1)
   bless   run one sampler and report the selected set
+  train   BLESS + FALKON end-to-end; --save <path> writes a model artifact
+  predict score queries offline with a saved model (--model <path>)
+  serve   TCP prediction server over a saved model (--model <path>)
   info    PJRT runtime / artifact diagnostics
+
+  (`falkon` is a deprecated alias for `train`; it used to re-run fig4)
 
 common flags: --n --lambda --sigma --seed --reps --engine native|xla|auto
               --csv <path> (also save the result table as CSV)
+train flags:  --dataset susy|higgs --lambda-bless --lambda-falkon --iters --save
+serve flags:  --host --port --workers --max-batch --linger-us --cache --cache-quant
 ";
 
 fn engine_kind(args: &Args) -> EngineKind {
@@ -210,6 +230,155 @@ fn cmd_bless(args: &Args) -> anyhow::Result<()> {
         t0.elapsed().as_secs_f64(),
         eng.label()
     );
+    Ok(())
+}
+
+/// `repro train`: BLESS centers + FALKON fit on a synthetic dataset,
+/// report held-out AUC, and optionally save the self-contained model
+/// artifact for `repro serve` / `repro predict`.
+fn cmd_train(args: &Args) -> anyhow::Result<()> {
+    let n = args.get_usize("n", 8_000);
+    let seed = args.get_u64("seed", 0);
+    let dataset = args.get_str("dataset", "susy");
+    let mut rng = Rng::seeded(seed);
+    let ds = match dataset.as_str() {
+        "susy" => susy_like(n, &mut rng),
+        "higgs" => higgs_like(n, &mut rng),
+        other => anyhow::bail!("unknown --dataset {other:?} (want susy|higgs)"),
+    };
+    let sigma = args.get_f64("sigma", if dataset == "higgs" { 5.0 } else { 4.0 });
+    let lambda_bless = args.get_f64("lambda-bless", 1e-3);
+    let lambda_falkon = args.get_f64("lambda-falkon", 1e-5);
+    let iters = args.get_usize("iters", 15);
+
+    let (train, test) = ds.split(0.25, &mut rng);
+    let eng = build_engine(engine_kind(args), train.x.clone(), Gaussian::new(sigma))?;
+    println!(
+        "engine backend: {} | {} train n={} test n={} d={}",
+        eng.label(),
+        train.name,
+        train.n(),
+        test.n(),
+        train.d()
+    );
+
+    let t0 = std::time::Instant::now();
+    let path = bless::bless::bless(
+        eng.as_dyn(),
+        lambda_bless,
+        &bless::bless::BlessConfig::default(),
+        &mut rng,
+    );
+    let set = path.final_set().clone();
+    println!(
+        "BLESS: |J|={} at λ_bless={lambda_bless:.1e} ({:.2}s)",
+        set.len(),
+        t0.elapsed().as_secs_f64()
+    );
+
+    let solver = bless::falkon::Falkon::new(eng.as_dyn(), &set, lambda_falkon)?;
+    let model = solver.fit(&train.y, iters, None)?;
+    let test_auc = bless::data::auc(&model.predict(eng.as_dyn(), &test.x), &test.y);
+    println!(
+        "FALKON: M={} λ_falkon={lambda_falkon:.1e} {iters} iters | test AUC {}",
+        solver.m(),
+        fnum(test_auc)
+    );
+
+    if let Some(save) = args.get("save") {
+        let artifact = ModelArtifact::from_fitted(&model, eng.as_dyn(), &train.name)?;
+        artifact.save(save)?;
+        let bytes = std::fs::metadata(save).map(|m| m.len()).unwrap_or(0);
+        println!(
+            "saved model artifact: {save} (M={} d={} {:.1} KiB)",
+            artifact.m(),
+            artifact.d(),
+            bytes as f64 / 1024.0
+        );
+    }
+    Ok(())
+}
+
+/// Parse one comma-separated query row.
+fn parse_query_row(s: &str) -> anyhow::Result<Vec<f64>> {
+    s.split(',')
+        .map(|v| {
+            v.trim()
+                .parse::<f64>()
+                .map_err(|e| anyhow::anyhow!("bad query value {v:?}: {e}"))
+        })
+        .collect()
+}
+
+/// `repro predict`: offline scoring with a saved artifact. Queries come
+/// from `--query "x1,x2,..."`, from a CSV file (`--queries path`, one
+/// row per line), or default to `--n` standard-normal demo points.
+fn cmd_predict(args: &Args) -> anyhow::Result<()> {
+    let model_path =
+        args.get("model").ok_or_else(|| anyhow::anyhow!("predict needs --model <path>"))?;
+    let artifact = ModelArtifact::load(model_path)?;
+    let predictor = Predictor::new(&artifact);
+    println!(
+        "model: {} (M={} d={} σ={} trained on n={})",
+        model_path,
+        artifact.m(),
+        artifact.d(),
+        artifact.sigma,
+        artifact.trained_n
+    );
+
+    let rows: Vec<Vec<f64>> = if let Some(q) = args.get("query") {
+        vec![parse_query_row(q)?]
+    } else if let Some(path) = args.get("queries") {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow::anyhow!("reading {path}: {e}"))?;
+        text.lines()
+            .filter(|l| !l.trim().is_empty())
+            .map(parse_query_row)
+            .collect::<anyhow::Result<_>>()?
+    } else {
+        let k = args.get_usize("n", 5);
+        let mut rng = Rng::seeded(args.get_u64("seed", 0));
+        println!("(no --query/--queries given; scoring {k} standard-normal demo points)");
+        (0..k).map(|_| (0..artifact.d()).map(|_| rng.gaussian()).collect()).collect()
+    };
+
+    for (i, x) in rows.iter().enumerate() {
+        let y = predictor.predict_one(x)?;
+        println!("query {i}: score {}", fnum(y));
+    }
+    Ok(())
+}
+
+/// `repro serve`: the TCP prediction server over a saved artifact.
+/// Blocks until a client sends `{"op":"shutdown"}`.
+fn cmd_serve(args: &Args) -> anyhow::Result<()> {
+    let model_path =
+        args.get("model").ok_or_else(|| anyhow::anyhow!("serve needs --model <path>"))?;
+    let artifact = ModelArtifact::load(model_path)?;
+    let cfg = ServeConfig {
+        addr: format!("{}:{}", args.get_str("host", "127.0.0.1"), args.get_usize("port", 7878)),
+        workers: args.get_usize("workers", 2),
+        max_batch: args.get_usize("max-batch", 64),
+        linger: std::time::Duration::from_micros(args.get_u64("linger-us", 2_000)),
+        cache_capacity: args.get_usize("cache", 1024),
+        cache_quant: args.get_f64("cache-quant", 1e-9),
+    };
+    println!(
+        "serving {} (M={} d={}) on {} | workers={} max_batch={} linger={}µs cache={}",
+        model_path,
+        artifact.m(),
+        artifact.d(),
+        cfg.addr,
+        cfg.workers,
+        cfg.max_batch,
+        cfg.linger.as_micros(),
+        cfg.cache_capacity
+    );
+    let handle = bless::serve::start(artifact, &cfg)?;
+    println!("listening on {} — send {{\"op\":\"shutdown\"}} to stop", handle.addr());
+    handle.join();
+    println!("server stopped");
     Ok(())
 }
 

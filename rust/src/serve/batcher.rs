@@ -1,0 +1,224 @@
+//! Micro-batching: coalesce concurrent single-point requests into one
+//! `cross_block` GEMM per tick.
+//!
+//! The blocked row-norm kernel path makes a batch of 64 queries far
+//! cheaper than 64 singles (one gather of the center rows, one GEMM), so
+//! the server funnels every in-flight predict request through a
+//! [`BatchQueue`]. Engine workers block for the first request, *linger*
+//! a short window for stragglers, then drain up to `max_batch` items and
+//! answer them with a single batched predict.
+//!
+//! The queue is a plain `Mutex<VecDeque> + Condvar` pair: `std::sync::
+//! mpsc` receivers cannot be shared across workers without holding a lock
+//! through the blocking `recv`, which would serialize the worker pool.
+
+use std::collections::VecDeque;
+use std::sync::mpsc;
+use std::sync::{Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+/// One queued prediction request: the query row plus the channel the
+/// connection handler is blocked on.
+pub struct PredictJob {
+    /// Query point (length = model feature dimension; validated upstream).
+    pub x: Vec<f64>,
+    /// Where the batched score is delivered.
+    pub reply: mpsc::Sender<f64>,
+}
+
+struct QueueState<T> {
+    items: VecDeque<T>,
+    closed: bool,
+}
+
+/// A closable MPMC queue with batched, lingering pops.
+pub struct BatchQueue<T> {
+    state: Mutex<QueueState<T>>,
+    cv: Condvar,
+}
+
+impl<T> Default for BatchQueue<T> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<T> BatchQueue<T> {
+    /// Empty open queue.
+    pub fn new() -> Self {
+        BatchQueue {
+            state: Mutex::new(QueueState { items: VecDeque::new(), closed: false }),
+            cv: Condvar::new(),
+        }
+    }
+
+    /// Enqueue an item; returns `false` (dropping the item) if the queue
+    /// has been closed.
+    pub fn push(&self, item: T) -> bool {
+        let mut g = self.state.lock().unwrap();
+        if g.closed {
+            return false;
+        }
+        g.items.push_back(item);
+        drop(g);
+        self.cv.notify_all();
+        true
+    }
+
+    /// Close the queue: no further pushes succeed; blocked poppers drain
+    /// the remaining items and then observe `None`.
+    pub fn close(&self) {
+        self.state.lock().unwrap().closed = true;
+        self.cv.notify_all();
+    }
+
+    /// Number of currently queued items.
+    pub fn len(&self) -> usize {
+        self.state.lock().unwrap().items.len()
+    }
+
+    /// Whether the queue is currently empty.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Block until at least one item is available (or the queue is closed
+    /// and drained — then `None`). Once the first item arrives, wait up
+    /// to `linger` for the batch to fill to `max`, then drain up to `max`
+    /// items. `max` must be ≥ 1.
+    pub fn pop_batch(&self, max: usize, linger: Duration) -> Option<Vec<T>> {
+        assert!(max >= 1);
+        let mut g = self.state.lock().unwrap();
+        // phase 1: wait for the first item
+        while g.items.is_empty() {
+            if g.closed {
+                return None;
+            }
+            g = self.cv.wait(g).unwrap();
+        }
+        // phase 2: linger for stragglers to coalesce a batch
+        if linger > Duration::ZERO && g.items.len() < max && !g.closed {
+            let deadline = Instant::now() + linger;
+            loop {
+                let now = Instant::now();
+                if now >= deadline || g.items.len() >= max || g.closed {
+                    break;
+                }
+                let (g2, timeout) = self.cv.wait_timeout(g, deadline - now).unwrap();
+                g = g2;
+                if timeout.timed_out() {
+                    break;
+                }
+            }
+        }
+        let take = g.items.len().min(max);
+        Some(g.items.drain(..take).collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::susy_like;
+    use crate::falkon::nystrom_krr;
+    use crate::kernels::{Gaussian, NativeEngine};
+    use crate::linalg::Matrix;
+    use crate::rng::Rng;
+    use crate::serve::{ModelArtifact, Predictor};
+    use std::sync::Arc;
+
+    #[test]
+    fn pre_queued_items_come_out_as_one_batch() {
+        let q: BatchQueue<usize> = BatchQueue::new();
+        for i in 0..10 {
+            assert!(q.push(i));
+        }
+        let batch = q.pop_batch(64, Duration::ZERO).unwrap();
+        assert_eq!(batch, (0..10).collect::<Vec<_>>());
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn max_batch_is_respected() {
+        let q: BatchQueue<usize> = BatchQueue::new();
+        for i in 0..10 {
+            q.push(i);
+        }
+        assert_eq!(q.pop_batch(4, Duration::ZERO).unwrap().len(), 4);
+        assert_eq!(q.len(), 6);
+    }
+
+    #[test]
+    fn close_wakes_blocked_popper_and_drains() {
+        let q: Arc<BatchQueue<u32>> = Arc::new(BatchQueue::new());
+        let q2 = Arc::clone(&q);
+        let popper = std::thread::spawn(move || {
+            let mut seen = Vec::new();
+            while let Some(batch) = q2.pop_batch(8, Duration::from_millis(1)) {
+                seen.extend(batch);
+            }
+            seen
+        });
+        for i in 0..5 {
+            q.push(i);
+        }
+        q.close();
+        assert!(!q.push(99)); // closed queue refuses new work
+        let seen = popper.join().unwrap();
+        assert_eq!(seen, vec![0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn lingering_pop_collects_late_arrivals() {
+        let q: Arc<BatchQueue<u32>> = Arc::new(BatchQueue::new());
+        let q2 = Arc::clone(&q);
+        let popper = std::thread::spawn(move || q2.pop_batch(16, Duration::from_millis(200)));
+        // stagger a few pushes well inside the linger window
+        for i in 0..3 {
+            std::thread::sleep(Duration::from_millis(10));
+            q.push(i);
+        }
+        let batch = popper.join().unwrap().unwrap();
+        assert!(batch.len() >= 2, "linger failed to coalesce: got {batch:?}");
+    }
+
+    /// The ISSUE-mandated agreement check: answering jobs through the
+    /// batched path gives the same scores as one-at-a-time prediction.
+    #[test]
+    fn batched_predictions_match_sequential() {
+        let mut rng = Rng::seeded(33);
+        let ds = susy_like(250, &mut rng);
+        let eng = NativeEngine::new(ds.x.clone(), Gaussian::new(3.5));
+        let centers = rng.sample_without_replacement(250, 30);
+        let model = nystrom_krr(&eng, &centers, 1e-3, &ds.y).unwrap();
+        let art = ModelArtifact::from_fitted(&model, &eng, "susy-like").unwrap();
+        let p = Predictor::new(&art);
+
+        let queue: BatchQueue<PredictJob> = BatchQueue::new();
+        let queries: Vec<Vec<f64>> = (0..10).map(|i| ds.x.row(i * 7).to_vec()).collect();
+        let mut receivers = Vec::new();
+        for x in &queries {
+            let (tx, rx) = mpsc::channel();
+            queue.push(PredictJob { x: x.clone(), reply: tx });
+            receivers.push(rx);
+        }
+
+        // one worker tick: drain the whole batch, answer with one GEMM
+        let batch = queue.pop_batch(64, Duration::ZERO).unwrap();
+        assert_eq!(batch.len(), queries.len());
+        let q = Matrix::from_fn(batch.len(), p.dim(), |i, j| batch[i].x[j]);
+        let scores = p.predict_batch(&q).unwrap();
+        for (job, &s) in batch.iter().zip(&scores) {
+            job.reply.send(s).unwrap();
+        }
+
+        for (rx, x) in receivers.iter().zip(&queries) {
+            let batched = rx.recv().unwrap();
+            let sequential = p.predict_one(x).unwrap();
+            assert!(
+                (batched - sequential).abs() < 1e-12,
+                "batched {batched} vs sequential {sequential}"
+            );
+        }
+    }
+}

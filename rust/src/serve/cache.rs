@@ -1,0 +1,191 @@
+//! A bounded LRU cache over quantized query vectors.
+//!
+//! Repeated-query traffic (hot items, retries, dashboards polling the
+//! same point) shouldn't pay a kernel evaluation each time. Queries are
+//! quantized onto a grid of step `quant` (default 1e-9 — far below any
+//! meaningful feature resolution, so collisions only merge queries whose
+//! predictions agree to ~1e-9 anyway) and the grid coordinates are the
+//! hash key.
+//!
+//! Eviction is exact LRU via a monotone use-tick per entry; the evictee
+//! scan is `O(capacity)` but only runs on insert-after-full and costs
+//! microseconds against the milliseconds of the GEMM it saves.
+
+use std::collections::HashMap;
+
+/// Quantized query key: `round(x_i / quant)` per coordinate.
+pub type QueryKey = Vec<i64>;
+
+/// Bounded LRU of `query → score`.
+pub struct PredictionCache {
+    map: HashMap<QueryKey, (f64, u64)>,
+    capacity: usize,
+    quant: f64,
+    tick: u64,
+    hits: u64,
+    misses: u64,
+}
+
+impl PredictionCache {
+    /// Cache holding at most `capacity` entries, keys quantized with step
+    /// `quant` (`quant <= 0` falls back to the default 1e-9).
+    pub fn new(capacity: usize, quant: f64) -> Self {
+        PredictionCache {
+            map: HashMap::with_capacity(capacity.min(4096)),
+            capacity,
+            quant: if quant > 0.0 { quant } else { 1e-9 },
+            tick: 0,
+            hits: 0,
+            misses: 0,
+        }
+    }
+
+    /// Quantize a query vector into a cache key. Each coordinate
+    /// contributes a `(tag, value)` pair: tag 0 carries the grid cell
+    /// for in-range values; tag 1 carries the raw bit pattern for
+    /// coordinates whose quantized magnitude leaves the `i64` grid (or
+    /// are non-finite). The tag keeps the two value spaces disjoint —
+    /// without it a bit pattern could collide with a legitimate grid
+    /// cell and serve one query another query's cached score.
+    pub fn key(&self, x: &[f64]) -> QueryKey {
+        let inv = 1.0 / self.quant;
+        let mut key = Vec::with_capacity(2 * x.len());
+        for &v in x {
+            let q = (v * inv).round();
+            if q.abs() < 9.0e18 {
+                key.push(0); // comfortably inside i64's exact cast range
+                key.push(q as i64);
+            } else {
+                key.push(1);
+                key.push(v.to_bits() as i64);
+            }
+        }
+        key
+    }
+
+    /// Look up a key, refreshing its recency on hit.
+    pub fn get(&mut self, key: &[i64]) -> Option<f64> {
+        self.tick += 1;
+        let tick = self.tick;
+        match self.map.get_mut(key) {
+            Some((v, last)) => {
+                *last = tick;
+                self.hits += 1;
+                Some(*v)
+            }
+            None => {
+                self.misses += 1;
+                None
+            }
+        }
+    }
+
+    /// Insert (or refresh) a key, evicting the least-recently-used entry
+    /// when at capacity.
+    pub fn insert(&mut self, key: QueryKey, value: f64) {
+        if self.capacity == 0 {
+            return;
+        }
+        self.tick += 1;
+        if self.map.len() >= self.capacity && !self.map.contains_key(&key) {
+            if let Some(oldest) =
+                self.map.iter().min_by_key(|(_, (_, t))| *t).map(|(k, _)| k.clone())
+            {
+                self.map.remove(&oldest);
+            }
+        }
+        self.map.insert(key, (value, self.tick));
+    }
+
+    /// Current entry count.
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    /// Whether the cache holds no entries.
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+
+    /// `(hits, misses)` since construction.
+    pub fn stats(&self) -> (u64, u64) {
+        (self.hits, self.misses)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hit_after_insert_and_miss_before() {
+        let mut c = PredictionCache::new(8, 1e-9);
+        let k = c.key(&[1.0, -2.5]);
+        assert_eq!(c.get(&k), None);
+        c.insert(k.clone(), 0.75);
+        assert_eq!(c.get(&k), Some(0.75));
+        assert_eq!(c.stats(), (1, 1));
+    }
+
+    #[test]
+    fn nearby_queries_share_a_key_distant_do_not() {
+        let c = PredictionCache::new(8, 1e-9);
+        // within half a quantum → same cell
+        assert_eq!(c.key(&[1.0, 2.0]), c.key(&[1.0 + 4e-10, 2.0 - 4e-10]));
+        // two quanta away → different cell
+        assert_ne!(c.key(&[1.0, 2.0]), c.key(&[1.0 + 2e-9, 2.0]));
+        // and real-world-distinct points are far apart on the grid
+        assert_ne!(c.key(&[1.0, 2.0]), c.key(&[1.001, 2.0]));
+    }
+
+    #[test]
+    fn evicts_least_recently_used() {
+        let mut c = PredictionCache::new(2, 1.0);
+        let (ka, kb, kc) = (vec![1], vec![2], vec![3]);
+        c.insert(ka.clone(), 1.0);
+        c.insert(kb.clone(), 2.0);
+        assert_eq!(c.get(&ka), Some(1.0)); // refresh a → b is now LRU
+        c.insert(kc.clone(), 3.0); // evicts b
+        assert_eq!(c.len(), 2);
+        assert_eq!(c.get(&kb), None);
+        assert_eq!(c.get(&ka), Some(1.0));
+        assert_eq!(c.get(&kc), Some(3.0));
+    }
+
+    #[test]
+    fn reinsert_refreshes_without_eviction() {
+        let mut c = PredictionCache::new(2, 1.0);
+        c.insert(vec![1], 1.0);
+        c.insert(vec![2], 2.0);
+        c.insert(vec![1], 1.5); // same key: refresh, no eviction
+        assert_eq!(c.len(), 2);
+        assert_eq!(c.get(&[1]), Some(1.5));
+        assert_eq!(c.get(&[2]), Some(2.0));
+    }
+
+    #[test]
+    fn zero_capacity_disables_storage() {
+        let mut c = PredictionCache::new(0, 1.0);
+        c.insert(vec![1], 1.0);
+        assert!(c.is_empty());
+        assert_eq!(c.get(&[1]), None);
+    }
+
+    #[test]
+    fn extreme_inputs_stay_distinguishable() {
+        let c = PredictionCache::new(4, 1e-9);
+        // off-grid magnitudes must NOT collapse onto a shared key
+        assert_ne!(c.key(&[1e10]), c.key(&[2e10]));
+        assert_ne!(c.key(&[f64::MAX]), c.key(&[f64::MAX / 2.0]));
+        assert_ne!(c.key(&[1e300]), c.key(&[-1e300]));
+        assert_eq!(c.key(&[0.0]), vec![0, 0]);
+        // and a huge value still equals itself
+        assert_eq!(c.key(&[1e10]), c.key(&[1e10]));
+        // the off-grid bit-pattern space is tagged apart from the grid
+        // space, so it cannot alias a legitimately quantized coordinate
+        let off_grid = c.key(&[1e10]);
+        assert_eq!(off_grid[0], 1);
+        let bits_as_grid_value = off_grid[1] as f64 * 1e-9;
+        assert_ne!(off_grid, c.key(&[bits_as_grid_value]));
+    }
+}

@@ -1,0 +1,58 @@
+//! Serving tier: model persistence + a batched, multi-threaded FALKON
+//! prediction server.
+//!
+//! BLESS picks the Nyström centers and FALKON fits `α`; after that the
+//! deployable model is just `(σ, centers, α)` and prediction is
+//! `f(x) = Σ_j α_j K(x, x̃_j)` — cheap enough to serve at scale. This
+//! module takes a fitted [`crate::falkon::FalkonModel`] from training to
+//! traffic:
+//!
+//! * [`model_store`] — the self-contained, versioned + checksummed JSON
+//!   artifact ([`ModelArtifact`]) with the center *rows* gathered out of
+//!   the training set, and the inference-side [`Predictor`].
+//! * [`batcher`] — the [`BatchQueue`] that coalesces concurrent
+//!   single-point requests into one `cross_block` GEMM per tick.
+//! * [`protocol`] — the line-delimited JSON wire format.
+//! * [`server`] — the stdlib-only TCP server: accept loop, a worker
+//!   pool over one shared engine, request/latency counters, graceful
+//!   shutdown; plus the blocking [`Client`].
+//! * [`cache`] — a bounded LRU over quantized query vectors for
+//!   repeated-query traffic.
+//!
+//! ## Train → save → serve → predict
+//!
+//! ```no_run
+//! use bless::serve::{self, ModelArtifact, ServeConfig};
+//!
+//! # fn main() -> anyhow::Result<()> {
+//! # let (model, engine): (bless::falkon::FalkonModel, bless::kernels::NativeEngine) = todo!();
+//! // training side (any KernelEngine):
+//! let artifact = ModelArtifact::from_fitted(&model, &engine, "susy-like")?;
+//! artifact.save("model.json")?;
+//!
+//! // inference side (no training data needed):
+//! let loaded = ModelArtifact::load("model.json")?;
+//! let handle = serve::start(loaded, &ServeConfig::default())?;
+//! let mut client = serve::Client::connect(handle.addr())?;
+//! let (score, _cached) = client.predict(1, &vec![0.0; 18])?;
+//! # let _ = score;
+//! # Ok(())
+//! # }
+//! ```
+//!
+//! Or from the CLI: `repro train --save model.json`, then
+//! `repro serve --model model.json --port 7878`, then line-delimited
+//! JSON requests over TCP (`repro predict --model model.json` for
+//! offline scoring).
+
+pub mod batcher;
+pub mod cache;
+pub mod model_store;
+pub mod protocol;
+pub mod server;
+
+pub use batcher::{BatchQueue, PredictJob};
+pub use cache::PredictionCache;
+pub use model_store::{ModelArtifact, Predictor, FORMAT, VERSION};
+pub use protocol::{Request, StatsSnapshot};
+pub use server::{start, Client, ServeConfig, ServerHandle};

@@ -1,0 +1,419 @@
+//! Model persistence: a self-contained serialized FALKON artifact.
+//!
+//! The compressed model the paper motivates shipping to an inference tier
+//! is tiny: the M Nyström center *rows* (gathered out of the training set
+//! so inference needs no training data), the coefficient vector `α`, and
+//! the kernel configuration. This module defines that artifact, its
+//! versioned + checksummed JSON encoding (via [`crate::util::json`] — the
+//! offline registry has no `serde`), and the [`Predictor`] that serves it.
+//!
+//! Round-trip fidelity: every `f64` is written with Rust's shortest
+//! round-trip `Display` and re-read with `str::parse::<f64>`, so a
+//! save→load cycle reproduces predictions *bit-exactly*.
+
+use crate::falkon::FalkonModel;
+use crate::kernels::{Gaussian, KernelEngine, NativeEngine};
+use crate::linalg::Matrix;
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+use std::path::Path;
+
+/// Magic format tag in the artifact header.
+pub const FORMAT: &str = "bless-falkon-model";
+/// Current artifact schema version. Bump on incompatible layout changes.
+pub const VERSION: u64 = 1;
+
+/// A self-contained fitted model: everything `f(x) = Σ_j α_j K(x, x̃_j)`
+/// needs, independent of the training set and the training engine.
+#[derive(Clone, Debug)]
+pub struct ModelArtifact {
+    /// Gaussian kernel bandwidth σ.
+    pub sigma: f64,
+    /// The M center rows, gathered from the training set (`M × d`).
+    pub centers: Matrix,
+    /// Coefficients `α` (length M).
+    pub alpha: Vec<f64>,
+    /// Number of training points the model was fitted on (provenance).
+    pub trained_n: usize,
+    /// Human-readable dataset tag (provenance; free-form).
+    pub dataset: String,
+}
+
+impl ModelArtifact {
+    /// Package a fitted [`FalkonModel`] with the training engine it was
+    /// fitted on: gathers the center rows so the artifact stands alone.
+    pub fn from_fitted(
+        model: &FalkonModel,
+        engine: &dyn KernelEngine,
+        dataset: &str,
+    ) -> anyhow::Result<Self> {
+        anyhow::ensure!(!model.centers.is_empty(), "model has no centers");
+        anyhow::ensure!(
+            model.alpha.len() == model.centers.len(),
+            "alpha/centers length mismatch: {} vs {}",
+            model.alpha.len(),
+            model.centers.len()
+        );
+        let art = ModelArtifact {
+            sigma: engine.kernel().sigma(),
+            centers: model.center_rows(engine),
+            alpha: model.alpha.clone(),
+            trained_n: engine.n(),
+            dataset: dataset.to_string(),
+        };
+        art.validate()?;
+        Ok(art)
+    }
+
+    /// Number of centers M.
+    pub fn m(&self) -> usize {
+        self.centers.rows()
+    }
+
+    /// Feature dimension d.
+    pub fn d(&self) -> usize {
+        self.centers.cols()
+    }
+
+    fn validate(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(self.m() > 0, "artifact has no centers");
+        anyhow::ensure!(self.d() > 0, "artifact has zero feature dimension");
+        anyhow::ensure!(
+            self.alpha.len() == self.m(),
+            "alpha length {} != center count {}",
+            self.alpha.len(),
+            self.m()
+        );
+        anyhow::ensure!(self.sigma > 0.0, "non-positive bandwidth {}", self.sigma);
+        anyhow::ensure!(
+            self.alpha.iter().all(|v| v.is_finite()) && self.centers.is_finite(),
+            "artifact contains non-finite values"
+        );
+        Ok(())
+    }
+
+    /// Encode as a JSON document including the versioned header and a
+    /// checksum over the payload.
+    pub fn to_json(&self) -> Json {
+        let mut obj = BTreeMap::new();
+        obj.insert("format".to_string(), Json::Str(FORMAT.to_string()));
+        obj.insert("version".to_string(), Json::Num(VERSION as f64));
+        obj.insert("sigma".to_string(), Json::Num(self.sigma));
+        obj.insert("m".to_string(), Json::Num(self.m() as f64));
+        obj.insert("d".to_string(), Json::Num(self.d() as f64));
+        obj.insert("trained_n".to_string(), Json::Num(self.trained_n as f64));
+        obj.insert("dataset".to_string(), Json::Str(self.dataset.clone()));
+        obj.insert(
+            "alpha".to_string(),
+            Json::Arr(self.alpha.iter().map(|&v| Json::Num(v)).collect()),
+        );
+        let rows: Vec<Json> = (0..self.m())
+            .map(|i| Json::Arr(self.centers.row(i).iter().map(|&v| Json::Num(v)).collect()))
+            .collect();
+        obj.insert("centers".to_string(), Json::Arr(rows));
+        let sum = payload_checksum(&Json::Obj(obj.clone()));
+        obj.insert("checksum".to_string(), Json::Str(sum));
+        Json::Obj(obj)
+    }
+
+    /// Decode and fully validate a JSON document: format tag, schema
+    /// version, checksum, shape and finiteness — every failure is a clean
+    /// `Err`, never a panic.
+    pub fn from_json(j: &Json) -> anyhow::Result<Self> {
+        let obj = j.as_obj().ok_or_else(|| anyhow::anyhow!("artifact is not a JSON object"))?;
+        let format = j
+            .get("format")
+            .and_then(|v| v.as_str())
+            .ok_or_else(|| anyhow::anyhow!("missing format tag"))?;
+        anyhow::ensure!(format == FORMAT, "not a {FORMAT} file (format tag {format:?})");
+        let version = j
+            .get("version")
+            .and_then(|v| v.as_f64())
+            .ok_or_else(|| anyhow::anyhow!("missing version field"))? as u64;
+        anyhow::ensure!(
+            version == VERSION,
+            "unsupported artifact version {version} (this build reads version {VERSION})"
+        );
+
+        // checksum covers everything except the checksum field itself
+        let stored = j
+            .get("checksum")
+            .and_then(|v| v.as_str())
+            .ok_or_else(|| anyhow::anyhow!("missing checksum field"))?;
+        let mut payload = obj.clone();
+        payload.remove("checksum");
+        let computed = payload_checksum(&Json::Obj(payload));
+        anyhow::ensure!(
+            stored == computed,
+            "checksum mismatch (stored {stored}, computed {computed}) — artifact corrupted"
+        );
+
+        let sigma = j
+            .get("sigma")
+            .and_then(|v| v.as_f64())
+            .ok_or_else(|| anyhow::anyhow!("missing sigma"))?;
+        let m = j
+            .get("m")
+            .and_then(|v| v.as_usize())
+            .ok_or_else(|| anyhow::anyhow!("missing m"))?;
+        let d = j
+            .get("d")
+            .and_then(|v| v.as_usize())
+            .ok_or_else(|| anyhow::anyhow!("missing d"))?;
+        let trained_n = j.get("trained_n").and_then(|v| v.as_usize()).unwrap_or(0);
+        let dataset =
+            j.get("dataset").and_then(|v| v.as_str()).unwrap_or("unknown").to_string();
+
+        let alpha_j = j
+            .get("alpha")
+            .and_then(|v| v.as_arr())
+            .ok_or_else(|| anyhow::anyhow!("missing alpha array"))?;
+        anyhow::ensure!(alpha_j.len() == m, "alpha length {} != m {m}", alpha_j.len());
+        let mut alpha = Vec::with_capacity(m);
+        for v in alpha_j {
+            alpha.push(v.as_f64().ok_or_else(|| anyhow::anyhow!("non-numeric alpha entry"))?);
+        }
+
+        let rows_j = j
+            .get("centers")
+            .and_then(|v| v.as_arr())
+            .ok_or_else(|| anyhow::anyhow!("missing centers array"))?;
+        anyhow::ensure!(rows_j.len() == m, "centers row count {} != m {m}", rows_j.len());
+        // capacity is a hint only — don't trust the header's m×d before
+        // the per-row length checks below have run
+        let mut data = Vec::with_capacity(m.saturating_mul(d).min(1 << 24));
+        for (i, row) in rows_j.iter().enumerate() {
+            let row = row
+                .as_arr()
+                .ok_or_else(|| anyhow::anyhow!("center row {i} is not an array"))?;
+            anyhow::ensure!(row.len() == d, "center row {i} has {} cols, want {d}", row.len());
+            for v in row {
+                data.push(
+                    v.as_f64().ok_or_else(|| anyhow::anyhow!("non-numeric center entry"))?,
+                );
+            }
+        }
+
+        let art = ModelArtifact {
+            sigma,
+            centers: Matrix::from_vec(m, d, data),
+            alpha,
+            trained_n,
+            dataset,
+        };
+        art.validate()?;
+        Ok(art)
+    }
+
+    /// Save to disk as a single JSON document.
+    pub fn save(&self, path: impl AsRef<Path>) -> anyhow::Result<()> {
+        self.validate()?;
+        let path = path.as_ref();
+        if let Some(parent) = path.parent() {
+            if !parent.as_os_str().is_empty() {
+                std::fs::create_dir_all(parent)?;
+            }
+        }
+        std::fs::write(path, self.to_json().to_string())
+            .map_err(|e| anyhow::anyhow!("writing {}: {e}", path.display()))
+    }
+
+    /// Load and validate an artifact from disk. Truncated or corrupted
+    /// files and version mismatches all return errors.
+    pub fn load(path: impl AsRef<Path>) -> anyhow::Result<Self> {
+        let path = path.as_ref();
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow::anyhow!("reading {}: {e}", path.display()))?;
+        let j = Json::parse(&text)
+            .map_err(|e| anyhow::anyhow!("parsing {}: {e}", path.display()))?;
+        Self::from_json(&j)
+    }
+}
+
+/// FNV-1a 64-bit over the canonical payload serialization (`BTreeMap`
+/// field order is deterministic), rendered as 16 hex digits.
+fn payload_checksum(payload: &Json) -> String {
+    const OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+    const PRIME: u64 = 0x0000_0100_0000_01b3;
+    let mut h = OFFSET;
+    for b in payload.to_string().bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(PRIME);
+    }
+    format!("{h:016x}")
+}
+
+/// The inference-side engine: a loaded artifact bound to a
+/// [`NativeEngine`] built over the *center rows* (not the training set).
+/// The centers are rows `0..M` of that engine, so the artifact is
+/// exactly a [`FalkonModel`] again and prediction goes through
+/// [`FalkonModel::predict`] — one implementation of the tiled
+/// `K(Q, centers) · α` arithmetic, bit-identical on both sides.
+pub struct Predictor {
+    engine: NativeEngine,
+    model: FalkonModel,
+}
+
+impl Predictor {
+    /// Build from a (loaded or freshly packaged) artifact.
+    pub fn new(artifact: &ModelArtifact) -> Predictor {
+        Predictor {
+            engine: NativeEngine::new(artifact.centers.clone(), Gaussian::new(artifact.sigma)),
+            model: FalkonModel {
+                centers: (0..artifact.m()).collect(),
+                alpha: artifact.alpha.clone(),
+                iterations: vec![],
+            },
+        }
+    }
+
+    /// Feature dimension queries must have.
+    pub fn dim(&self) -> usize {
+        self.engine.points().cols()
+    }
+
+    /// Number of centers M.
+    pub fn m(&self) -> usize {
+        self.model.centers.len()
+    }
+
+    /// Predict scores for a batch of query rows (the training-side
+    /// [`FalkonModel::predict`] path, over the center-rows engine).
+    pub fn predict_batch(&self, q: &Matrix) -> anyhow::Result<Vec<f64>> {
+        anyhow::ensure!(
+            q.cols() == self.dim(),
+            "query dimension {} != model dimension {}",
+            q.cols(),
+            self.dim()
+        );
+        Ok(self.model.predict(&self.engine, q))
+    }
+
+    /// Predict a single query point.
+    pub fn predict_one(&self, x: &[f64]) -> anyhow::Result<f64> {
+        anyhow::ensure!(
+            x.len() == self.dim(),
+            "query dimension {} != model dimension {}",
+            x.len(),
+            self.dim()
+        );
+        let q = Matrix::from_vec(1, x.len(), x.to_vec());
+        Ok(self.predict_batch(&q)?[0])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::susy_like;
+    use crate::falkon::nystrom_krr;
+    use crate::rng::Rng;
+
+    fn tmp_path(tag: &str) -> std::path::PathBuf {
+        std::env::temp_dir().join(format!("bless-model-{}-{tag}.json", std::process::id()))
+    }
+
+    fn fitted() -> (NativeEngine, FalkonModel, Matrix) {
+        let mut rng = Rng::seeded(21);
+        let ds = susy_like(300, &mut rng);
+        let queries = Matrix::from_fn(40, ds.d(), |i, j| ds.x.get(200 + i, j));
+        let eng = NativeEngine::new(ds.x.clone(), Gaussian::new(3.0));
+        let centers = rng.sample_without_replacement(300, 40);
+        let model = nystrom_krr(&eng, &centers, 1e-3, &ds.y).unwrap();
+        (eng, model, queries)
+    }
+
+    #[test]
+    fn save_load_round_trip_is_bit_exact() {
+        let (eng, model, q) = fitted();
+        let art = ModelArtifact::from_fitted(&model, &eng, "susy-like").unwrap();
+        let path = tmp_path("roundtrip");
+        art.save(&path).unwrap();
+        let loaded = ModelArtifact::load(&path).unwrap();
+        std::fs::remove_file(&path).ok();
+
+        assert_eq!(loaded.m(), art.m());
+        assert_eq!(loaded.d(), art.d());
+        assert_eq!(loaded.trained_n, 300);
+        assert_eq!(loaded.dataset, "susy-like");
+        // every stored f64 survives the text round trip bit-for-bit
+        for (a, b) in art.alpha.iter().zip(&loaded.alpha) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        for (a, b) in art.centers.as_slice().iter().zip(loaded.centers.as_slice()) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        // and so do the predictions vs the training-side predict path
+        let direct = model.predict(&eng, &q);
+        let served = Predictor::new(&loaded).predict_batch(&q).unwrap();
+        assert_eq!(direct.len(), served.len());
+        for (a, b) in direct.iter().zip(&served) {
+            assert_eq!(a.to_bits(), b.to_bits(), "prediction drifted: {a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn truncated_artifact_errors_cleanly() {
+        let (eng, model, _) = fitted();
+        let art = ModelArtifact::from_fitted(&model, &eng, "susy-like").unwrap();
+        let path = tmp_path("truncated");
+        art.save(&path).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        std::fs::write(&path, &text[..text.len() / 2]).unwrap();
+        let err = ModelArtifact::load(&path).unwrap_err();
+        std::fs::remove_file(&path).ok();
+        assert!(err.to_string().contains("parsing"), "unexpected error: {err}");
+    }
+
+    #[test]
+    fn corrupted_artifact_fails_checksum() {
+        let (eng, model, _) = fitted();
+        let art = ModelArtifact::from_fitted(&model, &eng, "susy-like").unwrap();
+        let path = tmp_path("corrupt");
+        art.save(&path).unwrap();
+        // flip one digit inside the alpha payload, keeping valid JSON
+        let text = std::fs::read_to_string(&path).unwrap();
+        let k = text.find("\"alpha\":[").unwrap() + "\"alpha\":[".len();
+        let mut bytes = text.into_bytes();
+        let digit = (k..bytes.len())
+            .find(|&i| bytes[i].is_ascii_digit() && bytes[i] != b'9')
+            .unwrap();
+        bytes[digit] = b'9';
+        std::fs::write(&path, &bytes).unwrap();
+        let err = ModelArtifact::load(&path).unwrap_err();
+        std::fs::remove_file(&path).ok();
+        assert!(err.to_string().contains("checksum"), "unexpected error: {err}");
+    }
+
+    #[test]
+    fn version_mismatch_rejected() {
+        let (eng, model, _) = fitted();
+        let art = ModelArtifact::from_fitted(&model, &eng, "susy-like").unwrap();
+        let mut obj = match art.to_json() {
+            Json::Obj(m) => m,
+            _ => unreachable!(),
+        };
+        obj.insert("version".to_string(), Json::Num(99.0));
+        let err = ModelArtifact::from_json(&Json::Obj(obj)).unwrap_err();
+        assert!(err.to_string().contains("version 99"), "unexpected error: {err}");
+    }
+
+    #[test]
+    fn wrong_format_and_shapes_rejected() {
+        assert!(ModelArtifact::from_json(&Json::parse("{\"format\":\"nope\"}").unwrap())
+            .is_err());
+        assert!(ModelArtifact::from_json(&Json::Num(3.0)).is_err());
+        let (eng, mut model, _) = fitted();
+        model.alpha.pop();
+        assert!(ModelArtifact::from_fitted(&model, &eng, "x").is_err());
+    }
+
+    #[test]
+    fn predictor_rejects_bad_dimension() {
+        let (eng, model, _) = fitted();
+        let art = ModelArtifact::from_fitted(&model, &eng, "susy-like").unwrap();
+        let p = Predictor::new(&art);
+        assert!(p.predict_one(&vec![0.0; p.dim() + 1]).is_err());
+        assert!(p.predict_batch(&Matrix::zeros(3, p.dim() + 2)).is_err());
+    }
+}

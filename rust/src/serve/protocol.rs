@@ -1,0 +1,268 @@
+//! Wire protocol: line-delimited JSON over TCP.
+//!
+//! One request per line, one response line per request, in order. The
+//! serialized forms never contain raw newlines ([`Json`]'s `Display`
+//! escapes them inside strings), so framing is a plain `\n` split.
+//!
+//! ```text
+//! → {"id":1,"x":[0.12,-1.4,…]}        predict one point
+//! ← {"id":1,"y":0.8315,"cached":false}
+//! → {"op":"stats"}                    server counters
+//! ← {"requests":128,"batches":19,"mean_batch":6.7,…}
+//! → {"op":"ping"}                     liveness
+//! ← {"ok":true}
+//! → {"op":"shutdown"}                 graceful stop
+//! ← {"ok":true}
+//! ```
+//!
+//! Malformed lines get `{"error":"…"}` and the connection stays open.
+//!
+//! Numbers ride JSON's `f64` lane, so correlation `id`s (and counters)
+//! are exact only up to 2⁵³ — the standard JSON interop bound. Clients
+//! should use sequential or bounded ids, not random full-range `u64`s.
+
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+
+/// A parsed client request.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Request {
+    /// Score one query point.
+    Predict {
+        /// Client-chosen correlation id, echoed back in the response.
+        id: u64,
+        /// The query row.
+        x: Vec<f64>,
+    },
+    /// Report server counters.
+    Stats,
+    /// Liveness probe.
+    Ping,
+    /// Graceful server stop.
+    Shutdown,
+}
+
+impl Request {
+    /// Parse one request line.
+    pub fn parse(line: &str) -> anyhow::Result<Request> {
+        let j = Json::parse(line)?;
+        anyhow::ensure!(j.as_obj().is_some(), "request must be a JSON object");
+        if let Some(op) = j.get("op").and_then(|v| v.as_str()) {
+            return match op {
+                "stats" => Ok(Request::Stats),
+                "ping" => Ok(Request::Ping),
+                "shutdown" => Ok(Request::Shutdown),
+                other => anyhow::bail!("unknown op {other:?}"),
+            };
+        }
+        let x_j = j
+            .get("x")
+            .and_then(|v| v.as_arr())
+            .ok_or_else(|| anyhow::anyhow!("predict request needs an \"x\" array"))?;
+        anyhow::ensure!(!x_j.is_empty(), "empty query vector");
+        let mut x = Vec::with_capacity(x_j.len());
+        for v in x_j {
+            let f = v.as_f64().ok_or_else(|| anyhow::anyhow!("non-numeric query entry"))?;
+            anyhow::ensure!(f.is_finite(), "non-finite query entry");
+            x.push(f);
+        }
+        let id = j.get("id").and_then(|v| v.as_f64()).unwrap_or(0.0) as u64;
+        Ok(Request::Predict { id, x })
+    }
+
+    /// Serialize a request to its wire line (no trailing newline) —
+    /// used by clients and tests.
+    pub fn to_line(&self) -> String {
+        let mut obj = BTreeMap::new();
+        match self {
+            Request::Predict { id, x } => {
+                obj.insert("id".to_string(), Json::Num(*id as f64));
+                obj.insert(
+                    "x".to_string(),
+                    Json::Arr(x.iter().map(|&v| Json::Num(v)).collect()),
+                );
+            }
+            Request::Stats => {
+                obj.insert("op".to_string(), Json::Str("stats".to_string()));
+            }
+            Request::Ping => {
+                obj.insert("op".to_string(), Json::Str("ping".to_string()));
+            }
+            Request::Shutdown => {
+                obj.insert("op".to_string(), Json::Str("shutdown".to_string()));
+            }
+        }
+        Json::Obj(obj).to_string()
+    }
+}
+
+/// Point-in-time server counters, as reported over the wire.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct StatsSnapshot {
+    /// Predict requests accepted.
+    pub requests: u64,
+    /// Batches executed by the engine workers.
+    pub batches: u64,
+    /// Total requests answered through batches (`batched / batches` =
+    /// mean batch size).
+    pub batched: u64,
+    /// Requests answered from the prediction cache.
+    pub cache_hits: u64,
+    /// Requests rejected with an error response.
+    pub errors: u64,
+    /// Total predict latency in microseconds (enqueue → reply).
+    pub latency_us: u64,
+}
+
+impl StatsSnapshot {
+    /// Mean coalesced batch size (0 when no batch has run).
+    pub fn mean_batch(&self) -> f64 {
+        if self.batches == 0 {
+            0.0
+        } else {
+            self.batched as f64 / self.batches as f64
+        }
+    }
+
+    /// Mean enqueue→reply latency in microseconds (0 when idle).
+    pub fn mean_latency_us(&self) -> f64 {
+        if self.requests == 0 {
+            0.0
+        } else {
+            self.latency_us as f64 / self.requests as f64
+        }
+    }
+
+    /// Serialize to the wire line. The exact `latency_us` total goes on
+    /// the wire (the derived `mean_*` fields are for humans) so a parsed
+    /// snapshot reproduces the server's counters without drift.
+    pub fn to_line(&self) -> String {
+        let mut obj = BTreeMap::new();
+        obj.insert("requests".to_string(), Json::Num(self.requests as f64));
+        obj.insert("batches".to_string(), Json::Num(self.batches as f64));
+        obj.insert("batched".to_string(), Json::Num(self.batched as f64));
+        obj.insert("mean_batch".to_string(), Json::Num(self.mean_batch()));
+        obj.insert("cache_hits".to_string(), Json::Num(self.cache_hits as f64));
+        obj.insert("errors".to_string(), Json::Num(self.errors as f64));
+        obj.insert("latency_us".to_string(), Json::Num(self.latency_us as f64));
+        obj.insert("mean_latency_us".to_string(), Json::Num(self.mean_latency_us()));
+        Json::Obj(obj).to_string()
+    }
+
+    /// Parse a stats response line (client side).
+    pub fn parse(line: &str) -> anyhow::Result<StatsSnapshot> {
+        let j = Json::parse(line)?;
+        let field = |k: &str| j.get(k).and_then(|v| v.as_f64()).unwrap_or(0.0) as u64;
+        Ok(StatsSnapshot {
+            requests: field("requests"),
+            batches: field("batches"),
+            batched: field("batched"),
+            cache_hits: field("cache_hits"),
+            errors: field("errors"),
+            latency_us: field("latency_us"),
+        })
+    }
+}
+
+/// Serialize a successful prediction response.
+pub fn predict_response(id: u64, y: f64, cached: bool) -> String {
+    let mut obj = BTreeMap::new();
+    obj.insert("id".to_string(), Json::Num(id as f64));
+    obj.insert("y".to_string(), Json::Num(y));
+    obj.insert("cached".to_string(), Json::Bool(cached));
+    Json::Obj(obj).to_string()
+}
+
+/// Serialize an error response (with the correlation id when known).
+pub fn error_response(id: Option<u64>, message: &str) -> String {
+    let mut obj = BTreeMap::new();
+    if let Some(id) = id {
+        obj.insert("id".to_string(), Json::Num(id as f64));
+    }
+    obj.insert("error".to_string(), Json::Str(message.to_string()));
+    Json::Obj(obj).to_string()
+}
+
+/// Serialize the bare-acknowledgement response (ping/shutdown).
+pub fn ok_response() -> String {
+    let mut obj = BTreeMap::new();
+    obj.insert("ok".to_string(), Json::Bool(true));
+    Json::Obj(obj).to_string()
+}
+
+/// Parse a prediction response line (client side): `(id, score, cached)`.
+pub fn parse_predict_response(line: &str) -> anyhow::Result<(u64, f64, bool)> {
+    let j = Json::parse(line)?;
+    if let Some(err) = j.get("error").and_then(|v| v.as_str()) {
+        anyhow::bail!("server error: {err}");
+    }
+    let id = j.get("id").and_then(|v| v.as_f64()).unwrap_or(0.0) as u64;
+    let y = j
+        .get("y")
+        .and_then(|v| v.as_f64())
+        .ok_or_else(|| anyhow::anyhow!("response missing \"y\": {line}"))?;
+    let cached = matches!(j.get("cached"), Some(Json::Bool(true)));
+    Ok((id, y, cached))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn predict_request_round_trips() {
+        let req = Request::Predict { id: 42, x: vec![0.5, -1.25, 3.0] };
+        let line = req.to_line();
+        assert!(!line.contains('\n'));
+        assert_eq!(Request::parse(&line).unwrap(), req);
+    }
+
+    #[test]
+    fn ops_round_trip() {
+        for req in [Request::Stats, Request::Ping, Request::Shutdown] {
+            assert_eq!(Request::parse(&req.to_line()).unwrap(), req);
+        }
+    }
+
+    #[test]
+    fn malformed_requests_are_errors() {
+        assert!(Request::parse("not json").is_err());
+        assert!(Request::parse("[1,2]").is_err());
+        assert!(Request::parse("{\"op\":\"nope\"}").is_err());
+        assert!(Request::parse("{\"x\":[]}").is_err());
+        assert!(Request::parse("{\"x\":[1,\"two\"]}").is_err());
+        assert!(Request::parse("{\"id\":1}").is_err());
+    }
+
+    #[test]
+    fn responses_parse_back() {
+        let (id, y, cached) = parse_predict_response(&predict_response(7, 0.125, true)).unwrap();
+        assert_eq!(id, 7);
+        assert_eq!(y, 0.125);
+        assert!(cached);
+        assert!(parse_predict_response(&error_response(Some(7), "boom")).is_err());
+        assert!(parse_predict_response(&ok_response()).is_err());
+    }
+
+    #[test]
+    fn stats_line_round_trips_counts() {
+        let s = StatsSnapshot {
+            requests: 100,
+            batches: 20,
+            batched: 100,
+            cache_hits: 3,
+            errors: 1,
+            latency_us: 12_000,
+        };
+        let line = s.to_line();
+        let back = StatsSnapshot::parse(&line).unwrap();
+        assert_eq!(back.requests, 100);
+        assert_eq!(back.batches, 20);
+        assert_eq!(back.batched, 100);
+        assert_eq!(back.cache_hits, 3);
+        assert_eq!(back.errors, 1);
+        assert_eq!(back.latency_us, 12_000, "exact total must survive the wire");
+        assert!((back.mean_batch() - 5.0).abs() < 1e-12);
+        assert!((back.mean_latency_us() - 120.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,452 @@
+//! The TCP prediction server: stdlib-only (`std::net` + threads).
+//!
+//! Topology:
+//!
+//! ```text
+//! accept loop ──spawns──▶ connection threads (parse, cache, enqueue)
+//!                              │ PredictJob
+//!                              ▼
+//!                        BatchQueue  ◀─ micro-batching (linger + max)
+//!                              │ batch
+//!                              ▼
+//!                 engine workers (sharing one immutable Predictor —
+//!                 one cross_block GEMM per batch)
+//! ```
+//!
+//! Shutdown (`{"op":"shutdown"}` or [`ServerHandle::shutdown`]) closes
+//! the queue (in-flight work drains, new work is refused), pokes the
+//! accept loop and joins the worker pool. Idle keep-alive connections
+//! are dropped when the process exits.
+
+use crate::linalg::Matrix;
+use crate::serve::batcher::{BatchQueue, PredictJob};
+use crate::serve::cache::PredictionCache;
+use crate::serve::model_store::{ModelArtifact, Predictor};
+use crate::serve::protocol::{self, Request, StatsSnapshot};
+use std::io::{BufRead, BufReader, BufWriter, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+/// Server tuning knobs.
+#[derive(Clone, Debug)]
+pub struct ServeConfig {
+    /// Bind address; use port 0 for an ephemeral port (tests).
+    pub addr: String,
+    /// Engine worker threads (all sharing one immutable [`Predictor`]).
+    pub workers: usize,
+    /// Largest coalesced batch per GEMM.
+    pub max_batch: usize,
+    /// How long a worker lingers for stragglers after the first request.
+    pub linger: Duration,
+    /// Prediction-cache capacity in entries (0 disables the cache).
+    pub cache_capacity: usize,
+    /// Cache quantization step for query coordinates.
+    pub cache_quant: f64,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            addr: "127.0.0.1:7878".to_string(),
+            workers: 2,
+            max_batch: 64,
+            linger: Duration::from_millis(2),
+            cache_capacity: 1024,
+            cache_quant: 1e-9,
+        }
+    }
+}
+
+/// Monotone server counters (lock-free; read via [`StatsSnapshot`]).
+#[derive(Default)]
+struct ServerStats {
+    requests: AtomicU64,
+    batches: AtomicU64,
+    batched: AtomicU64,
+    cache_hits: AtomicU64,
+    errors: AtomicU64,
+    latency_us: AtomicU64,
+}
+
+impl ServerStats {
+    fn snapshot(&self) -> StatsSnapshot {
+        StatsSnapshot {
+            requests: self.requests.load(Ordering::Relaxed),
+            batches: self.batches.load(Ordering::Relaxed),
+            batched: self.batched.load(Ordering::Relaxed),
+            cache_hits: self.cache_hits.load(Ordering::Relaxed),
+            errors: self.errors.load(Ordering::Relaxed),
+            latency_us: self.latency_us.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// State shared by the accept loop, connection threads and workers.
+struct Shared {
+    queue: BatchQueue<PredictJob>,
+    stats: ServerStats,
+    cache: Option<Mutex<PredictionCache>>,
+    shutdown: AtomicBool,
+    dim: usize,
+    addr: SocketAddr,
+}
+
+impl Shared {
+    fn request_shutdown(&self) {
+        if self.shutdown.swap(true, Ordering::SeqCst) {
+            return; // already shutting down
+        }
+        self.queue.close();
+        // poke the accept loop so it re-checks the flag
+        let _ = TcpStream::connect(self.addr);
+    }
+}
+
+/// A running server; dropping (or calling [`shutdown`](Self::shutdown))
+/// stops it and joins its threads.
+pub struct ServerHandle {
+    shared: Arc<Shared>,
+    accept: Option<JoinHandle<()>>,
+    workers: Vec<JoinHandle<()>>,
+}
+
+impl ServerHandle {
+    /// The bound address (resolves port 0 to the actual ephemeral port).
+    pub fn addr(&self) -> SocketAddr {
+        self.shared.addr
+    }
+
+    /// Current counters.
+    pub fn stats(&self) -> StatsSnapshot {
+        self.shared.stats.snapshot()
+    }
+
+    /// Whether a shutdown has been requested (locally or over the wire).
+    pub fn is_shut_down(&self) -> bool {
+        self.shared.shutdown.load(Ordering::SeqCst)
+    }
+
+    /// Stop accepting, drain in-flight work and join all threads.
+    pub fn shutdown(mut self) {
+        self.shared.request_shutdown();
+        self.join_threads();
+    }
+
+    /// Block until the server shuts down (e.g. a client sends
+    /// `{"op":"shutdown"}`) — the `repro serve` foreground mode.
+    pub fn join(mut self) {
+        self.join_threads();
+    }
+
+    fn join_threads(&mut self) {
+        if let Some(a) = self.accept.take() {
+            let _ = a.join();
+        }
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+impl Drop for ServerHandle {
+    fn drop(&mut self) {
+        self.shared.request_shutdown();
+        self.join_threads();
+    }
+}
+
+/// Start serving `artifact` with the given config. Returns once the
+/// listener is bound and the worker pool is up.
+pub fn start(artifact: ModelArtifact, cfg: &ServeConfig) -> anyhow::Result<ServerHandle> {
+    anyhow::ensure!(cfg.max_batch >= 1, "max_batch must be at least 1");
+    let listener = TcpListener::bind(&cfg.addr)
+        .map_err(|e| anyhow::anyhow!("binding {}: {e}", cfg.addr))?;
+    let addr = listener.local_addr()?;
+    let shared = Arc::new(Shared {
+        queue: BatchQueue::new(),
+        stats: ServerStats::default(),
+        cache: (cfg.cache_capacity > 0)
+            .then(|| Mutex::new(PredictionCache::new(cfg.cache_capacity, cfg.cache_quant))),
+        shutdown: AtomicBool::new(false),
+        dim: artifact.d(),
+        addr,
+    });
+
+    // the predictor is immutable after construction, so one engine
+    // (centers matrix + row norms) serves every worker thread
+    let predictor = Arc::new(Predictor::new(&artifact));
+    let mut workers = Vec::new();
+    for _ in 0..cfg.workers.max(1) {
+        let predictor = Arc::clone(&predictor);
+        let shared = Arc::clone(&shared);
+        let (max_batch, linger) = (cfg.max_batch, cfg.linger);
+        workers.push(std::thread::spawn(move || {
+            worker_loop(&predictor, &shared, max_batch, linger);
+        }));
+    }
+
+    let accept_shared = Arc::clone(&shared);
+    let accept = std::thread::spawn(move || accept_loop(listener, &accept_shared));
+    Ok(ServerHandle { shared, accept: Some(accept), workers })
+}
+
+fn worker_loop(predictor: &Predictor, shared: &Shared, max_batch: usize, linger: Duration) {
+    while let Some(batch) = shared.queue.pop_batch(max_batch, linger) {
+        if batch.is_empty() {
+            continue;
+        }
+        shared.stats.batches.fetch_add(1, Ordering::Relaxed);
+        shared.stats.batched.fetch_add(batch.len() as u64, Ordering::Relaxed);
+        let q = Matrix::from_fn(batch.len(), predictor.dim(), |i, j| batch[i].x[j]);
+        match predictor.predict_batch(&q) {
+            Ok(scores) => {
+                for (job, &score) in batch.iter().zip(&scores) {
+                    // a disconnected client is not a worker error
+                    let _ = job.reply.send(score);
+                }
+            }
+            // dims are validated before enqueue; dropping the batch (and
+            // its reply senders) surfaces an error on each waiting
+            // connection
+            Err(_) => {}
+        }
+    }
+}
+
+fn accept_loop(listener: TcpListener, shared: &Arc<Shared>) {
+    for stream in listener.incoming() {
+        if shared.shutdown.load(Ordering::SeqCst) {
+            break;
+        }
+        match stream {
+            Ok(stream) => {
+                let shared = Arc::clone(shared);
+                std::thread::spawn(move || {
+                    let _ = handle_conn(stream, &shared);
+                });
+            }
+            Err(_) => continue,
+        }
+    }
+}
+
+fn handle_conn(stream: TcpStream, shared: &Shared) -> std::io::Result<()> {
+    let reader = BufReader::new(stream.try_clone()?);
+    let mut writer = BufWriter::new(stream);
+    for line in reader.lines() {
+        let line = line?;
+        if line.trim().is_empty() {
+            continue;
+        }
+        let response = match Request::parse(&line) {
+            Err(e) => {
+                shared.stats.errors.fetch_add(1, Ordering::Relaxed);
+                protocol::error_response(None, &e.to_string())
+            }
+            Ok(Request::Ping) => protocol::ok_response(),
+            Ok(Request::Stats) => shared.stats.snapshot().to_line(),
+            Ok(Request::Shutdown) => {
+                // flip the flag before acking so a client that saw the
+                // ack observes is_shut_down() == true
+                shared.request_shutdown();
+                writeln!(writer, "{}", protocol::ok_response())?;
+                writer.flush()?;
+                return Ok(());
+            }
+            Ok(Request::Predict { id, x }) => handle_predict(shared, id, x),
+        };
+        writeln!(writer, "{response}")?;
+        writer.flush()?;
+    }
+    Ok(())
+}
+
+fn handle_predict(shared: &Shared, id: u64, x: Vec<f64>) -> String {
+    let t0 = Instant::now();
+    shared.stats.requests.fetch_add(1, Ordering::Relaxed);
+    if x.len() != shared.dim {
+        shared.stats.errors.fetch_add(1, Ordering::Relaxed);
+        return protocol::error_response(
+            Some(id),
+            &format!("query dimension {} != model dimension {}", x.len(), shared.dim),
+        );
+    }
+
+    // one lock acquisition covers both the key quantization and the
+    // hit check; the key is kept for the post-predict insert
+    let mut key = None;
+    if let Some(cache) = &shared.cache {
+        let mut c = cache.lock().unwrap();
+        let k = c.key(&x);
+        if let Some(y) = c.get(&k) {
+            drop(c);
+            shared.stats.cache_hits.fetch_add(1, Ordering::Relaxed);
+            bump_latency(shared, t0);
+            return protocol::predict_response(id, y, true);
+        }
+        key = Some(k);
+    }
+
+    let (tx, rx) = mpsc::channel();
+    if !shared.queue.push(PredictJob { x, reply: tx }) {
+        shared.stats.errors.fetch_add(1, Ordering::Relaxed);
+        return protocol::error_response(Some(id), "server is shutting down");
+    }
+    match rx.recv() {
+        Ok(y) => {
+            if let (Some(cache), Some(key)) = (&shared.cache, key) {
+                cache.lock().unwrap().insert(key, y);
+            }
+            bump_latency(shared, t0);
+            protocol::predict_response(id, y, false)
+        }
+        Err(_) => {
+            shared.stats.errors.fetch_add(1, Ordering::Relaxed);
+            protocol::error_response(Some(id), "prediction failed (server stopping?)")
+        }
+    }
+}
+
+fn bump_latency(shared: &Shared, t0: Instant) {
+    let us = t0.elapsed().as_micros().min(u64::MAX as u128) as u64;
+    shared.stats.latency_us.fetch_add(us, Ordering::Relaxed);
+}
+
+/// A minimal blocking client for the line protocol — used by the CLI,
+/// the integration tests and the `serve_roundtrip` example.
+pub struct Client {
+    reader: BufReader<TcpStream>,
+    writer: BufWriter<TcpStream>,
+}
+
+impl Client {
+    /// Connect to a running server.
+    pub fn connect(addr: impl ToSocketAddrs) -> anyhow::Result<Client> {
+        let stream = TcpStream::connect(addr)?;
+        let reader = BufReader::new(stream.try_clone()?);
+        Ok(Client { reader, writer: BufWriter::new(stream) })
+    }
+
+    fn round_trip(&mut self, line: &str) -> anyhow::Result<String> {
+        writeln!(self.writer, "{line}")?;
+        self.writer.flush()?;
+        let mut buf = String::new();
+        let n = self.reader.read_line(&mut buf)?;
+        anyhow::ensure!(n > 0, "server closed the connection");
+        Ok(buf.trim_end().to_string())
+    }
+
+    /// Score one query point; returns `(score, served_from_cache)`.
+    pub fn predict(&mut self, id: u64, x: &[f64]) -> anyhow::Result<(f64, bool)> {
+        let req = Request::Predict { id, x: x.to_vec() };
+        let line = self.round_trip(&req.to_line())?;
+        let (rid, y, cached) = protocol::parse_predict_response(&line)?;
+        anyhow::ensure!(rid == id, "response id {rid} != request id {id}");
+        Ok((y, cached))
+    }
+
+    /// Fetch server counters.
+    pub fn stats(&mut self) -> anyhow::Result<StatsSnapshot> {
+        let line = self.round_trip(&Request::Stats.to_line())?;
+        StatsSnapshot::parse(&line)
+    }
+
+    /// Liveness probe.
+    pub fn ping(&mut self) -> anyhow::Result<()> {
+        let line = self.round_trip(&Request::Ping.to_line())?;
+        anyhow::ensure!(line.contains("\"ok\""), "unexpected ping response: {line}");
+        Ok(())
+    }
+
+    /// Ask the server to shut down gracefully.
+    pub fn shutdown(&mut self) -> anyhow::Result<()> {
+        let line = self.round_trip(&Request::Shutdown.to_line())?;
+        anyhow::ensure!(line.contains("\"ok\""), "unexpected shutdown response: {line}");
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_artifact() -> ModelArtifact {
+        ModelArtifact {
+            sigma: 1.0,
+            centers: Matrix::from_vec(3, 2, vec![0.0, 0.0, 1.0, 0.5, -0.5, 1.0]),
+            alpha: vec![0.5, -0.25, 1.0],
+            trained_n: 3,
+            dataset: "tiny".to_string(),
+        }
+    }
+
+    fn test_config() -> ServeConfig {
+        ServeConfig {
+            addr: "127.0.0.1:0".to_string(),
+            workers: 1,
+            linger: Duration::from_millis(1),
+            ..ServeConfig::default()
+        }
+    }
+
+    #[test]
+    fn serves_predictions_matching_direct_predictor() {
+        let art = tiny_artifact();
+        let direct = Predictor::new(&art);
+        let handle = start(art, &test_config()).unwrap();
+        let mut client = Client::connect(handle.addr()).unwrap();
+        client.ping().unwrap();
+        for (i, q) in [[0.2, 0.1], [1.0, 0.5], [-3.0, 2.0]].iter().enumerate() {
+            let (y, cached) = client.predict(i as u64, q).unwrap();
+            assert!(!cached);
+            let want = direct.predict_one(q).unwrap();
+            assert!((y - want).abs() < 1e-12, "served {y} vs direct {want}");
+        }
+        let stats = handle.stats();
+        assert_eq!(stats.requests, 3);
+        assert_eq!(stats.errors, 0);
+        handle.shutdown();
+    }
+
+    #[test]
+    fn repeated_query_hits_the_cache() {
+        let art = tiny_artifact();
+        let handle = start(art, &test_config()).unwrap();
+        let mut client = Client::connect(handle.addr()).unwrap();
+        let q = [0.4, -0.6];
+        let (y1, c1) = client.predict(1, &q).unwrap();
+        let (y2, c2) = client.predict(2, &q).unwrap();
+        assert!(!c1);
+        assert!(c2, "second identical query should be served from cache");
+        assert_eq!(y1.to_bits(), y2.to_bits());
+        assert_eq!(handle.stats().cache_hits, 1);
+        handle.shutdown();
+    }
+
+    #[test]
+    fn bad_requests_get_error_lines_and_are_counted() {
+        let handle = start(tiny_artifact(), &test_config()).unwrap();
+        let mut client = Client::connect(handle.addr()).unwrap();
+        // wrong dimension
+        assert!(client.predict(1, &[1.0, 2.0, 3.0]).is_err());
+        // raw garbage line
+        let resp = client.round_trip("this is not json").unwrap();
+        assert!(resp.contains("\"error\""), "got {resp}");
+        // connection still usable afterwards
+        client.ping().unwrap();
+        assert_eq!(handle.stats().errors, 2);
+        handle.shutdown();
+    }
+
+    #[test]
+    fn wire_shutdown_unblocks_join() {
+        let handle = start(tiny_artifact(), &test_config()).unwrap();
+        let mut client = Client::connect(handle.addr()).unwrap();
+        client.shutdown().unwrap();
+        assert!(handle.is_shut_down());
+        handle.join(); // returns because the client stopped the server
+    }
+}

@@ -80,7 +80,11 @@ impl fmt::Display for Json {
             Json::Null => write!(f, "null"),
             Json::Bool(b) => write!(f, "{b}"),
             Json::Num(n) => {
-                if n.fract() == 0.0 && n.abs() < 1e15 {
+                if *n == 0.0 && n.is_sign_negative() {
+                    // `0.0 as i64` would drop the sign bit; -0.0 must
+                    // survive a Display→parse round trip bit-exactly
+                    write!(f, "-0")
+                } else if n.fract() == 0.0 && n.abs() < 1e15 {
                     write!(f, "{}", *n as i64)
                 } else {
                     write!(f, "{n}")
@@ -185,35 +189,41 @@ impl<'a> Parser<'a> {
 
     fn string(&mut self) -> anyhow::Result<String> {
         self.expect(b'"')?;
-        let mut out = String::new();
+        // accumulate raw bytes: the input is UTF-8, and copying the
+        // bytes through (rather than `byte as char`, which decodes
+        // Latin-1 and mangles multi-byte sequences) keeps non-ASCII
+        // content intact
+        let mut out: Vec<u8> = Vec::new();
         loop {
             let c = self.peek()?;
             self.i += 1;
             match c {
-                b'"' => return Ok(out),
+                b'"' => return Ok(String::from_utf8(out)?),
                 b'\\' => {
                     let e = self.peek()?;
                     self.i += 1;
                     match e {
-                        b'"' => out.push('"'),
-                        b'\\' => out.push('\\'),
-                        b'/' => out.push('/'),
-                        b'n' => out.push('\n'),
-                        b't' => out.push('\t'),
-                        b'r' => out.push('\r'),
-                        b'b' => out.push('\u{8}'),
-                        b'f' => out.push('\u{c}'),
+                        b'"' => out.push(b'"'),
+                        b'\\' => out.push(b'\\'),
+                        b'/' => out.push(b'/'),
+                        b'n' => out.push(b'\n'),
+                        b't' => out.push(b'\t'),
+                        b'r' => out.push(b'\r'),
+                        b'b' => out.push(0x08),
+                        b'f' => out.push(0x0c),
                         b'u' => {
                             anyhow::ensure!(self.i + 4 <= self.b.len(), "bad \\u escape");
                             let hex = std::str::from_utf8(&self.b[self.i..self.i + 4])?;
                             let code = u32::from_str_radix(hex, 16)?;
-                            out.push(char::from_u32(code).unwrap_or('\u{fffd}'));
+                            let ch = char::from_u32(code).unwrap_or('\u{fffd}');
+                            let mut buf = [0u8; 4];
+                            out.extend_from_slice(ch.encode_utf8(&mut buf).as_bytes());
                             self.i += 4;
                         }
                         _ => anyhow::bail!("bad escape at byte {}", self.i),
                     }
                 }
-                c => out.push(c as char),
+                c => out.push(c),
             }
         }
     }
@@ -322,6 +332,27 @@ mod tests {
         let j = Json::parse(doc).unwrap();
         let j2 = Json::parse(&j.to_string()).unwrap();
         assert_eq!(j, j2);
+    }
+
+    #[test]
+    fn non_ascii_strings_survive_parse_and_display() {
+        let j = Json::parse(r#""données – ümlaut 数据""#).unwrap();
+        assert_eq!(j.as_str(), Some("données – ümlaut 数据"));
+        // and the Display form re-parses to the same string
+        let j2 = Json::parse(&j.to_string()).unwrap();
+        assert_eq!(j, j2);
+    }
+
+    #[test]
+    fn negative_zero_round_trips_bit_exactly() {
+        // f64 PartialEq can't tell -0.0 from 0.0; compare the bits
+        let neg = Json::Num(-0.0);
+        assert_eq!(neg.to_string(), "-0");
+        match Json::parse(&neg.to_string()).unwrap() {
+            Json::Num(v) => assert_eq!(v.to_bits(), (-0.0f64).to_bits()),
+            other => panic!("expected number, got {other:?}"),
+        }
+        assert_eq!(Json::Num(0.0).to_string(), "0");
     }
 
     #[test]
