@@ -1,0 +1,158 @@
+//! Serving-tier benchmark: artifact codec (size + load time, JSON vs
+//! binary) and end-to-end server latency under concurrent traffic.
+//!
+//! Prints a human-readable report and, with `--out <path>`, writes the
+//! repo-root `BENCH_*.json` schema (one flat JSON object of named
+//! metrics) so CI can track the perf trajectory as a workflow artifact:
+//!
+//! ```bash
+//! cargo bench --bench serve_load                       # full size (M=2000)
+//! cargo bench --bench serve_load -- --m 500 \
+//!     --clients 4 --per 25 --out ../BENCH_serve.json   # CI smoke size
+//! ```
+
+use bless::linalg::Matrix;
+use bless::rng::Rng;
+use bless::serve::{self, codec, Client, Format, ModelArtifact, ServeConfig};
+use bless::util::cli::Args;
+use bless::util::json::Json;
+use bless::util::quantile;
+use std::collections::BTreeMap;
+use std::time::{Duration, Instant};
+
+/// A deterministic artifact with trained-weight-like (full-mantissa)
+/// values — the honest worst case for both codecs.
+fn synthetic_artifact(m: usize, d: usize) -> ModelArtifact {
+    let mut rng = Rng::seeded(17);
+    ModelArtifact {
+        sigma: 4.0,
+        centers: Matrix::from_fn(m, d, |_, _| rng.gaussian()),
+        alpha: (0..m).map(|_| rng.gaussian() * 1e-3).collect(),
+        trained_n: m * 4,
+        dataset: "serve-bench".to_string(),
+    }
+}
+
+/// Best-of-k wall time for `f`, in milliseconds.
+fn best_ms(k: usize, mut f: impl FnMut()) -> f64 {
+    let mut best = f64::INFINITY;
+    for _ in 0..k {
+        let t0 = Instant::now();
+        f();
+        best = best.min(t0.elapsed().as_secs_f64() * 1e3);
+    }
+    best
+}
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse();
+    let m = args.get_usize("m", 2_000);
+    let d = args.get_usize("d", 18);
+    let clients = args.get_usize("clients", 8);
+    let per_client = args.get_usize("per", 50);
+    let load_reps = args.get_usize("load-reps", 3);
+
+    println!("== serve_load bench: M={m} d={d}, {clients} clients × {per_client} requests ==");
+    let art = synthetic_artifact(m, d);
+    let dir = std::env::temp_dir();
+    let json_path = dir.join(format!("bless-serve-bench-{}.json", std::process::id()));
+    let bin_path = dir.join(format!("bless-serve-bench-{}.bin", std::process::id()));
+
+    // --- codec: artifact size and load time
+    art.save_as(&json_path, Format::Json)?;
+    art.save_as(&bin_path, Format::Binary)?;
+    let json_bytes = std::fs::metadata(&json_path)?.len();
+    let bin_bytes = std::fs::metadata(&bin_path)?.len();
+    let json_load_ms = best_ms(load_reps, || {
+        ModelArtifact::load(&json_path).expect("json load");
+    });
+    let bin_load_ms = best_ms(load_reps, || {
+        ModelArtifact::load(&bin_path).expect("binary load");
+    });
+    let size_ratio = json_bytes as f64 / bin_bytes as f64;
+    let load_speedup = json_load_ms / bin_load_ms;
+    println!(
+        "artifact bytes : JSON {json_bytes}  binary {bin_bytes}  ({size_ratio:.2}× smaller)"
+    );
+    println!(
+        "artifact load  : JSON {json_load_ms:.2} ms  binary {bin_load_ms:.2} ms  ({load_speedup:.1}× faster)"
+    );
+
+    // sanity: the two encodings serve bit-identical models
+    let a = ModelArtifact::load(&json_path)?;
+    let b = ModelArtifact::load(&bin_path)?;
+    assert_eq!(a.alpha.len(), b.alpha.len());
+    for (x, y) in a.alpha.iter().zip(&b.alpha) {
+        assert_eq!(x.to_bits(), y.to_bits(), "codec drift");
+    }
+
+    // --- end-to-end predict latency under concurrent traffic
+    let loaded = ModelArtifact::load(&bin_path)?;
+    let cfg = ServeConfig {
+        addr: "127.0.0.1:0".to_string(),
+        workers: 2,
+        max_batch: 64,
+        linger: Duration::from_millis(2),
+        cache_capacity: 0, // every request exercises the GEMM path
+        ..ServeConfig::default()
+    };
+    let handle = serve::start(loaded, &cfg)?;
+    let addr = handle.addr();
+
+    let mut joins = Vec::new();
+    for c in 0..clients {
+        let seed = 1000 + c as u64;
+        joins.push(std::thread::spawn(move || -> anyhow::Result<Vec<f64>> {
+            let mut rng = Rng::seeded(seed);
+            let mut client = Client::connect(addr)?;
+            let mut lat_us = Vec::with_capacity(per_client);
+            for k in 0..per_client {
+                let x: Vec<f64> = (0..d).map(|_| rng.gaussian()).collect();
+                let t0 = Instant::now();
+                client.predict(k as u64, &x)?;
+                lat_us.push(t0.elapsed().as_secs_f64() * 1e6);
+            }
+            Ok(lat_us)
+        }));
+    }
+    let mut lat_us: Vec<f64> = Vec::new();
+    for j in joins {
+        lat_us.extend(j.join().expect("client thread panicked")?);
+    }
+    lat_us.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let (p50, p99) = (quantile(&lat_us, 0.5), quantile(&lat_us, 0.99));
+    let stats = handle.stats();
+    let mean_batch = stats.mean_batch();
+    println!(
+        "predict latency: p50 {p50:.0} µs  p99 {p99:.0} µs  over {} requests (mean batch {mean_batch:.2})",
+        stats.requests
+    );
+    handle.shutdown();
+    std::fs::remove_file(&json_path).ok();
+    std::fs::remove_file(&bin_path).ok();
+
+    // --- BENCH_*.json (repo-root schema: flat object of named metrics)
+    if let Some(out) = args.get("out") {
+        let mut obj = BTreeMap::new();
+        let mut put = |k: &str, v: f64| {
+            obj.insert(k.to_string(), Json::Num(v));
+        };
+        put("m", m as f64);
+        put("d", d as f64);
+        put("json_bytes", json_bytes as f64);
+        put("bin_bytes", bin_bytes as f64);
+        put("size_ratio", size_ratio);
+        put("json_load_ms", json_load_ms);
+        put("bin_load_ms", bin_load_ms);
+        put("load_speedup", load_speedup);
+        put("p50_predict_us", p50);
+        put("p99_predict_us", p99);
+        put("mean_batch", mean_batch);
+        put("requests", stats.requests as f64);
+        put("binary_version", codec::BINARY_VERSION as f64);
+        obj.insert("bench".to_string(), Json::Str("serve".to_string()));
+        std::fs::write(out, Json::Obj(obj).to_string())?;
+        println!("wrote {out}");
+    }
+    Ok(())
+}

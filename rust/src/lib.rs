@@ -16,10 +16,12 @@
 //!   and never touches python at run time.
 //!
 //! On top of the training stack sits the **serving tier** ([`serve`]):
-//! a fitted model is packaged into a self-contained, checksummed JSON
+//! a fitted model is packaged into a self-contained, checksummed
 //! artifact (kernel config + center rows + `α` — no training data
-//! needed at inference) and served over TCP by a micro-batching,
-//! multi-threaded prediction server.
+//! needed at inference) in either a human-readable JSON or a raw
+//! little-endian binary codec, and served over TCP by a micro-batching,
+//! multi-threaded prediction server hosting a registry of named models
+//! with hot reload and queue-depth backpressure.
 //!
 //! ## Quick start: reproduce the paper
 //!
@@ -38,17 +40,23 @@
 //! ## Quick start: train → save → serve → predict
 //!
 //! ```bash
-//! repro train --n 8000 --save model.json        # BLESS + FALKON, saved
-//! repro serve --model model.json --port 7878 \
-//!             --workers 4 --max-batch 64        # TCP prediction server
-//! repro predict --model model.json \
+//! repro train --n 8000 --save model.bin         # BLESS + FALKON, saved
+//! #   .bin/.bless → binary codec; other extensions → JSON
+//! repro convert --in model.bin --out model.json # re-encode either way
+//! repro serve --models susy=model.bin,higgs=other.bin \
+//!             --port 7878 --workers 4 \
+//!             --max-batch 64 --max-queue 1024   # TCP prediction server
+//! repro predict --model model.bin \
 //!             --query "0.1,-0.4,..."            # offline scoring
 //! ```
 //!
 //! Over the wire the server speaks line-delimited JSON
-//! (`{"id":1,"x":[…]}` → `{"id":1,"y":0.83,"cached":false}`); see
-//! [`serve::protocol`]. Concurrent single-point requests are coalesced
-//! into one kernel-block GEMM per tick by [`serve::batcher`].
+//! (`{"id":1,"model":"susy","x":[…]}` → `{"id":1,"y":0.83,"cached":false}`);
+//! see [`serve::protocol`]. Concurrent single-point requests are
+//! coalesced into one kernel-block GEMM per tick by [`serve::batcher`];
+//! `{"op":"admin","cmd":"reload",…}` hot-swaps one model without
+//! dropping in-flight requests ([`serve::registry`]), and a full model
+//! queue sheds load with a structured `overloaded` reply.
 pub mod baselines;
 pub mod bless;
 pub mod coordinator;

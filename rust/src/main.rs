@@ -11,9 +11,11 @@
 //! repro fig5   [--n 8000]            # HIGGS-like end-to-end
 //! repro table1 [--sizes ...] [--lambda 1e-3]
 //! repro bless  [--n 4000] [--lambda 1e-4] [--method bless|bless-r|...]
-//! repro train   [--n 8000] [--dataset susy|higgs] [--save model.json]
-//! repro predict --model model.json [--query "x1,x2,..."] [--queries file.csv]
-//! repro serve   --model model.json [--port 7878] [--workers 2] [--max-batch 64]
+//! repro train   [--n 8000] [--dataset susy|higgs] [--save model.bin]
+//! repro predict --model model.bin [--query "x1,x2,..."] [--queries file.csv]
+//! repro serve   --models susy=a.bin,higgs=b.bin [--port 7878] [--workers 2]
+//!               [--max-batch 64] [--max-queue 1024]
+//! repro convert --in model.json --out model.bin   # JSON ↔ binary
 //! repro info                         # runtime / artifact diagnostics
 //! ```
 
@@ -25,7 +27,7 @@ use bless::coordinator::{
 use bless::data::{higgs_like, susy_like};
 use bless::kernels::Gaussian;
 use bless::rng::Rng;
-use bless::serve::{ModelArtifact, Predictor, ServeConfig};
+use bless::serve::{Format, ModelArtifact, ModelSpec, Predictor, ServeConfig};
 use bless::util::cli::Args;
 use bless::util::table::fnum;
 
@@ -43,6 +45,7 @@ fn main() -> anyhow::Result<()> {
         "train" => cmd_train(&args),
         "predict" => cmd_predict(&args),
         "serve" => cmd_serve(&args),
+        "convert" => cmd_convert(&args),
         "falkon" => {
             eprintln!(
                 "note: `repro falkon` is deprecated (it used to alias fig4); \
@@ -69,16 +72,22 @@ repro — BLESS (NeurIPS 2018) reproduction CLI
   table1  empirical complexity exponents (paper Table 1)
   bless   run one sampler and report the selected set
   train   BLESS + FALKON end-to-end; --save <path> writes a model artifact
+          (.bin/.bless → binary codec, anything else → JSON)
   predict score queries offline with a saved model (--model <path>)
-  serve   TCP prediction server over a saved model (--model <path>)
+  serve   TCP prediction server: one model (--model <path>) or a named
+          registry (--models name=path,name2=path2) with hot reload
+  convert re-encode an artifact between JSON and binary (--in --out)
   info    PJRT runtime / artifact diagnostics
 
   (`falkon` is a deprecated alias for `train`; it used to re-run fig4)
 
-common flags: --n --lambda --sigma --seed --reps --engine native|xla|auto
-              --csv <path> (also save the result table as CSV)
-train flags:  --dataset susy|higgs --lambda-bless --lambda-falkon --iters --save
-serve flags:  --host --port --workers --max-batch --linger-us --cache --cache-quant
+common flags:  --n --lambda --sigma --seed --reps --engine native|xla|auto
+               --csv <path> (also save the result table as CSV)
+train flags:   --dataset susy|higgs --lambda-bless --lambda-falkon --iters --save
+serve flags:   --host --port --workers --max-batch --linger-us --cache
+               --cache-quant --max-queue (0 = unbounded; default 1024)
+convert flags: --in <path> --out <path> [--format json|binary] (default: by
+               --out extension)
 ";
 
 fn engine_kind(args: &Args) -> EngineKind {
@@ -350,12 +359,24 @@ fn cmd_predict(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
-/// `repro serve`: the TCP prediction server over a saved artifact.
-/// Blocks until a client sends `{"op":"shutdown"}`.
+/// `repro serve`: the TCP prediction server. One artifact (`--model`,
+/// registered as "default") or a named registry (`--models a=p1,b=p2`);
+/// blocks until a client sends `{"op":"shutdown"}`.
 fn cmd_serve(args: &Args) -> anyhow::Result<()> {
-    let model_path =
-        args.get("model").ok_or_else(|| anyhow::anyhow!("serve needs --model <path>"))?;
-    let artifact = ModelArtifact::load(model_path)?;
+    let specs: Vec<ModelSpec> = if let Some(list) = args.get("models") {
+        list.split(',')
+            .map(|item| ModelSpec::from_cli_arg(item.trim()))
+            .collect::<anyhow::Result<_>>()?
+    } else {
+        let model_path = args.get("model").ok_or_else(|| {
+            anyhow::anyhow!("serve needs --model <path> or --models name=path,name2=path2")
+        })?;
+        vec![ModelSpec {
+            name: "default".to_string(),
+            artifact: ModelArtifact::load(model_path)?,
+            source: Some(model_path.into()),
+        }]
+    };
     let cfg = ServeConfig {
         addr: format!("{}:{}", args.get_str("host", "127.0.0.1"), args.get_usize("port", 7878)),
         workers: args.get_usize("workers", 2),
@@ -363,22 +384,59 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
         linger: std::time::Duration::from_micros(args.get_u64("linger-us", 2_000)),
         cache_capacity: args.get_usize("cache", 1024),
         cache_quant: args.get_f64("cache-quant", 1e-9),
+        max_queue: args.get_usize("max-queue", 1024),
     };
+    for spec in &specs {
+        println!(
+            "model {:?}: M={} d={} ({})",
+            spec.name,
+            spec.artifact.m(),
+            spec.artifact.d(),
+            spec.source.as_deref().map(|p| p.display().to_string()).unwrap_or_default()
+        );
+    }
     println!(
-        "serving {} (M={} d={}) on {} | workers={} max_batch={} linger={}µs cache={}",
-        model_path,
-        artifact.m(),
-        artifact.d(),
+        "serving {} model(s) on {} | workers={}/model max_batch={} linger={}µs cache={} max_queue={}",
+        specs.len(),
         cfg.addr,
         cfg.workers,
         cfg.max_batch,
         cfg.linger.as_micros(),
-        cfg.cache_capacity
+        cfg.cache_capacity,
+        cfg.max_queue
     );
-    let handle = bless::serve::start(artifact, &cfg)?;
-    println!("listening on {} — send {{\"op\":\"shutdown\"}} to stop", handle.addr());
+    let handle = bless::serve::start_registry(specs, &cfg)?;
+    println!(
+        "listening on {} — send {{\"op\":\"shutdown\"}} to stop, \
+         {{\"op\":\"admin\",\"cmd\":\"reload\",\"model\":…}} to hot-swap",
+        handle.addr()
+    );
     handle.join();
     println!("server stopped");
+    Ok(())
+}
+
+/// `repro convert`: re-encode a model artifact between JSON and binary
+/// (format chosen by `--format`, else by the output extension).
+fn cmd_convert(args: &Args) -> anyhow::Result<()> {
+    let input = args.get("in").ok_or_else(|| anyhow::anyhow!("convert needs --in <path>"))?;
+    let output = args.get("out").ok_or_else(|| anyhow::anyhow!("convert needs --out <path>"))?;
+    let artifact = ModelArtifact::load(input)?;
+    let format = match args.get("format") {
+        None => Format::from_path(std::path::Path::new(output)),
+        Some("json") => Format::Json,
+        Some("binary") | Some("bin") => Format::Binary,
+        Some(other) => anyhow::bail!("unknown --format {other:?} (want json|binary)"),
+    };
+    artifact.save_as(output, format)?;
+    let in_bytes = std::fs::metadata(input)?.len();
+    let out_bytes = std::fs::metadata(output)?.len();
+    println!(
+        "{input} ({:.1} KiB) → {output} ({:.1} KiB, {format:?}): {:.2}× the input size",
+        in_bytes as f64 / 1024.0,
+        out_bytes as f64 / 1024.0,
+        out_bytes as f64 / in_bytes as f64
+    );
     Ok(())
 }
 

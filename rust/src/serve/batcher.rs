@@ -22,8 +22,23 @@ use std::time::{Duration, Instant};
 pub struct PredictJob {
     /// Query point (length = model feature dimension; validated upstream).
     pub x: Vec<f64>,
-    /// Where the batched score is delivered.
-    pub reply: mpsc::Sender<f64>,
+    /// Where the batched score — or a structured failure (e.g. the model
+    /// was hot-reloaded to a different dimension mid-flight) — is
+    /// delivered.
+    pub reply: mpsc::Sender<Result<f64, String>>,
+}
+
+/// Outcome of a bounded enqueue attempt.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Push {
+    /// The item was queued.
+    Accepted,
+    /// The queue was closed (server shutting down); the item was dropped.
+    Closed,
+    /// The queue was at its depth cap (backpressure); the item was
+    /// dropped so the caller can shed load with a structured error
+    /// instead of buffering without bound.
+    Full,
 }
 
 struct QueueState<T> {
@@ -55,14 +70,24 @@ impl<T> BatchQueue<T> {
     /// Enqueue an item; returns `false` (dropping the item) if the queue
     /// has been closed.
     pub fn push(&self, item: T) -> bool {
+        self.push_bounded(item, 0) == Push::Accepted
+    }
+
+    /// Enqueue with a depth cap: `cap == 0` means unbounded, otherwise
+    /// an item arriving while `cap` items are already queued is dropped
+    /// and [`Push::Full`] returned — the server's backpressure signal.
+    pub fn push_bounded(&self, item: T, cap: usize) -> Push {
         let mut g = self.state.lock().unwrap();
         if g.closed {
-            return false;
+            return Push::Closed;
+        }
+        if cap > 0 && g.items.len() >= cap {
+            return Push::Full;
         }
         g.items.push_back(item);
         drop(g);
         self.cv.notify_all();
-        true
+        Push::Accepted
     }
 
     /// Close the queue: no further pushes succeed; blocked poppers drain
@@ -169,6 +194,25 @@ mod tests {
     }
 
     #[test]
+    fn bounded_push_sheds_at_the_cap_and_recovers() {
+        let q: BatchQueue<usize> = BatchQueue::new();
+        assert_eq!(q.push_bounded(0, 2), Push::Accepted);
+        assert_eq!(q.push_bounded(1, 2), Push::Accepted);
+        // at the cap: the third item is shed, not buffered
+        assert_eq!(q.push_bounded(2, 2), Push::Full);
+        assert_eq!(q.len(), 2);
+        // draining frees capacity again
+        assert_eq!(q.pop_batch(8, Duration::ZERO).unwrap(), vec![0, 1]);
+        assert_eq!(q.push_bounded(3, 2), Push::Accepted);
+        // cap 0 = unbounded
+        for i in 0..100 {
+            assert_eq!(q.push_bounded(i, 0), Push::Accepted);
+        }
+        q.close();
+        assert_eq!(q.push_bounded(9, 2), Push::Closed);
+    }
+
+    #[test]
     fn lingering_pop_collects_late_arrivals() {
         let q: Arc<BatchQueue<u32>> = Arc::new(BatchQueue::new());
         let q2 = Arc::clone(&q);
@@ -209,11 +253,11 @@ mod tests {
         let q = Matrix::from_fn(batch.len(), p.dim(), |i, j| batch[i].x[j]);
         let scores = p.predict_batch(&q).unwrap();
         for (job, &s) in batch.iter().zip(&scores) {
-            job.reply.send(s).unwrap();
+            job.reply.send(Ok(s)).unwrap();
         }
 
         for (rx, x) in receivers.iter().zip(&queries) {
-            let batched = rx.recv().unwrap();
+            let batched = rx.recv().unwrap().unwrap();
             let sequential = p.predict_one(x).unwrap();
             assert!(
                 (batched - sequential).abs() < 1e-12,

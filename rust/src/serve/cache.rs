@@ -97,6 +97,12 @@ impl PredictionCache {
         self.map.insert(key, (value, self.tick));
     }
 
+    /// Drop every entry (hit/miss counters survive). Called when a model
+    /// is hot-reloaded: cached scores belong to the replaced predictor.
+    pub fn clear(&mut self) {
+        self.map.clear();
+    }
+
     /// Current entry count.
     pub fn len(&self) -> usize {
         self.map.len()
@@ -161,6 +167,17 @@ mod tests {
         assert_eq!(c.len(), 2);
         assert_eq!(c.get(&[1]), Some(1.5));
         assert_eq!(c.get(&[2]), Some(2.0));
+    }
+
+    #[test]
+    fn clear_empties_but_keeps_counters() {
+        let mut c = PredictionCache::new(4, 1.0);
+        c.insert(vec![1], 1.0);
+        assert_eq!(c.get(&[1]), Some(1.0));
+        c.clear();
+        assert!(c.is_empty());
+        assert_eq!(c.get(&[1]), None);
+        assert_eq!(c.stats(), (1, 1));
     }
 
     #[test]

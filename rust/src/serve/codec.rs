@@ -1,0 +1,366 @@
+//! Binary model artifact codec: the large-M companion to the JSON format.
+//!
+//! The JSON artifact ([`crate::serve::model_store`]) prints every `f64`
+//! of the `M × d` center matrix and the `α` vector as shortest
+//! round-trip decimal text (~20 bytes per value) and re-parses it on
+//! load — exactly the wrong trade once BLESS makes large-M models cheap
+//! to fit. This module defines a versioned, checksummed little-endian
+//! binary layout that stores each `f64` as its raw 8 bit-pattern bytes:
+//! load is a bounds-checked `memcpy`, the roundtrip is bit-exact by
+//! construction (NaN payloads, −0.0 and subnormals included), and the
+//! artifact is a fraction of the JSON size.
+//!
+//! ## Layout (all integers little-endian)
+//!
+//! ```text
+//! offset        size  field
+//! 0             8     magic  b"BLESSBIN"
+//! 8             4     format version (u32, currently 1)
+//! 12            4     reserved flags (u32, written 0, ignored on read)
+//! 16            8     sigma (f64 bit pattern)
+//! 24            8     m  — number of centers (u64)
+//! 32            8     d  — feature dimension (u64)
+//! 40            8     trained_n (u64)
+//! 48            4     dataset tag length L (u32)
+//! 52            L     dataset tag (UTF-8)
+//! 52+L          8·m   α section        (f64 bit patterns)
+//! 52+L+8m       8·m·d center rows, row-major (f64 bit patterns)
+//! end−8         8     FNV-1a 64 checksum over every preceding byte
+//! ```
+//!
+//! [`Format::detect`] sniffs the magic so `ModelArtifact::load` reads
+//! either encoding from any path; [`Format::from_path`] picks the
+//! encoding `save` writes (`.bin` / `.bless` → binary, anything else →
+//! JSON, so small models stay human-readable).
+//!
+//! Truncated files, flipped bits, a wrong magic and an unknown version
+//! all fail with a clean error — never a panic, never a partial model.
+
+use crate::linalg::Matrix;
+use crate::serve::model_store::ModelArtifact;
+use std::path::Path;
+
+/// Leading magic bytes of a binary artifact.
+pub const MAGIC: [u8; 8] = *b"BLESSBIN";
+/// Current binary layout version. Bump on incompatible changes.
+pub const BINARY_VERSION: u32 = 1;
+
+/// Fixed-size part of the header (through the dataset-length field).
+const HEADER_LEN: usize = 52;
+/// Smallest syntactically possible artifact: header + checksum.
+const MIN_LEN: usize = HEADER_LEN + 8;
+
+/// On-disk artifact encoding.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Format {
+    /// Human-readable JSON (the PR-1 format; good for small M).
+    Json,
+    /// Raw little-endian binary (this module; good for large M).
+    Binary,
+}
+
+impl Format {
+    /// Encoding chosen by file extension — what `save` writes.
+    pub fn from_path(path: &Path) -> Format {
+        match path.extension().and_then(|e| e.to_str()) {
+            Some("bin") | Some("bless") => Format::Binary,
+            _ => Format::Json,
+        }
+    }
+
+    /// Encoding sniffed from leading file bytes — what `load` reads.
+    /// Anything that does not start with the binary magic is treated as
+    /// JSON (whose parser then reports its own errors).
+    pub fn detect(bytes: &[u8]) -> Format {
+        if bytes.starts_with(&MAGIC) {
+            Format::Binary
+        } else {
+            Format::Json
+        }
+    }
+}
+
+/// FNV-1a 64-bit over a byte slice.
+pub(crate) fn fnv1a(bytes: &[u8]) -> u64 {
+    const OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+    const PRIME: u64 = 0x0000_0100_0000_01b3;
+    let mut h = OFFSET;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(PRIME);
+    }
+    h
+}
+
+/// Serialize an artifact into the binary layout (header + raw f64
+/// sections + trailing checksum). Infallible: any in-memory artifact
+/// has a representation, including non-finite values — finiteness
+/// policy lives in `ModelArtifact::validate`, not in the codec.
+pub fn encode(art: &ModelArtifact) -> Vec<u8> {
+    let name = art.dataset.as_bytes();
+    let values = art.alpha.len() + art.centers.as_slice().len();
+    let mut out = Vec::with_capacity(HEADER_LEN + name.len() + 8 * values + 8);
+    out.extend_from_slice(&MAGIC);
+    out.extend_from_slice(&BINARY_VERSION.to_le_bytes());
+    out.extend_from_slice(&0u32.to_le_bytes()); // reserved flags
+    out.extend_from_slice(&art.sigma.to_bits().to_le_bytes());
+    out.extend_from_slice(&(art.m() as u64).to_le_bytes());
+    out.extend_from_slice(&(art.d() as u64).to_le_bytes());
+    out.extend_from_slice(&(art.trained_n as u64).to_le_bytes());
+    out.extend_from_slice(&(name.len() as u32).to_le_bytes());
+    out.extend_from_slice(name);
+    for &v in &art.alpha {
+        out.extend_from_slice(&v.to_bits().to_le_bytes());
+    }
+    for &v in art.centers.as_slice() {
+        out.extend_from_slice(&v.to_bits().to_le_bytes());
+    }
+    let sum = fnv1a(&out);
+    out.extend_from_slice(&sum.to_le_bytes());
+    out
+}
+
+/// Bounds-checked cursor over the payload bytes.
+struct Reader<'a> {
+    b: &'a [u8],
+    i: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn take(&mut self, n: usize) -> anyhow::Result<&'a [u8]> {
+        let end = self
+            .i
+            .checked_add(n)
+            .filter(|&e| e <= self.b.len())
+            .ok_or_else(|| anyhow::anyhow!("truncated binary artifact (at byte {})", self.i))?;
+        let s = &self.b[self.i..end];
+        self.i = end;
+        Ok(s)
+    }
+
+    fn u32(&mut self) -> anyhow::Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> anyhow::Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn f64_section(&mut self, count: usize) -> anyhow::Result<Vec<f64>> {
+        let bytes = count
+            .checked_mul(8)
+            .ok_or_else(|| anyhow::anyhow!("binary artifact section overflow"))?;
+        let raw = self.take(bytes)?;
+        Ok(raw
+            .chunks_exact(8)
+            .map(|c| f64::from_bits(u64::from_le_bytes(c.try_into().unwrap())))
+            .collect())
+    }
+}
+
+/// Decode a binary artifact. Checks, in order: magic, minimum length,
+/// checksum over the full payload, layout version, header/section
+/// shape consistency against the actual byte count. Does **not** apply
+/// the finiteness policy — `ModelArtifact::load` does that — so the
+/// codec itself roundtrips NaN, −0.0 and subnormal payloads bit-exactly.
+pub fn decode(bytes: &[u8]) -> anyhow::Result<ModelArtifact> {
+    anyhow::ensure!(
+        bytes.starts_with(&MAGIC),
+        "not a binary model artifact (bad magic; want {:?})",
+        std::str::from_utf8(&MAGIC).unwrap()
+    );
+    anyhow::ensure!(
+        bytes.len() >= MIN_LEN,
+        "truncated binary artifact: {} bytes, header alone needs {MIN_LEN}",
+        bytes.len()
+    );
+    let (payload, sum_bytes) = bytes.split_at(bytes.len() - 8);
+    let stored = u64::from_le_bytes(sum_bytes.try_into().unwrap());
+    let computed = fnv1a(payload);
+    anyhow::ensure!(
+        stored == computed,
+        "checksum mismatch (stored {stored:016x}, computed {computed:016x}) — artifact corrupted"
+    );
+
+    let mut r = Reader { b: payload, i: MAGIC.len() };
+    let version = r.u32()?;
+    anyhow::ensure!(
+        version == BINARY_VERSION,
+        "unsupported binary artifact version {version} (this build reads version {BINARY_VERSION})"
+    );
+    let _flags = r.u32()?;
+    let sigma = f64::from_bits(r.u64()?);
+    let m = r.u64()? as usize;
+    let d = r.u64()? as usize;
+    let trained_n = r.u64()? as usize;
+    let name_len = r.u32()? as usize;
+    let dataset = String::from_utf8(r.take(name_len)?.to_vec())
+        .map_err(|_| anyhow::anyhow!("dataset tag is not valid UTF-8"))?;
+
+    let cells = m
+        .checked_mul(d)
+        .ok_or_else(|| anyhow::anyhow!("binary artifact header overflow: m={m} d={d}"))?;
+    let body = m
+        .checked_add(cells)
+        .and_then(|v| v.checked_mul(8))
+        .ok_or_else(|| anyhow::anyhow!("binary artifact header overflow: m={m} d={d}"))?;
+    anyhow::ensure!(
+        payload.len() - r.i == body,
+        "binary artifact length mismatch: {} section bytes for m={m} d={d} (want {body})",
+        payload.len() - r.i
+    );
+    let alpha = r.f64_section(m)?;
+    let data = r.f64_section(cells)?;
+    Ok(ModelArtifact { sigma, centers: Matrix::from_vec(m, d, data), alpha, trained_n, dataset })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serve::model_store::Predictor;
+
+    /// Deterministic artifact with full-mantissa (trained-weight-like)
+    /// values: every value is an irrational-ish expression so its decimal
+    /// form needs the whole 17 significant digits.
+    fn dense_artifact(m: usize, d: usize) -> ModelArtifact {
+        ModelArtifact {
+            sigma: std::f64::consts::PI,
+            centers: Matrix::from_fn(m, d, |i, j| {
+                ((i * d + j) as f64 * 0.618_033_988_749_894_9).sin() * 2.5
+            }),
+            alpha: (0..m).map(|i| (i as f64 * 1.414_213_562_373_095_1).cos() * 1e-3).collect(),
+            trained_n: 12_345,
+            dataset: "dense-test".to_string(),
+        }
+    }
+
+    #[test]
+    fn binary_roundtrip_is_bit_exact() {
+        let art = dense_artifact(37, 5);
+        let back = decode(&encode(&art)).unwrap();
+        assert_eq!(back.m(), 37);
+        assert_eq!(back.d(), 5);
+        assert_eq!(back.trained_n, 12_345);
+        assert_eq!(back.dataset, "dense-test");
+        assert_eq!(back.sigma.to_bits(), art.sigma.to_bits());
+        for (a, b) in art.alpha.iter().zip(&back.alpha) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        for (a, b) in art.centers.as_slice().iter().zip(back.centers.as_slice()) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn binary_matches_json_predictions_bit_exactly() {
+        let art = dense_artifact(23, 4);
+        let via_bin = decode(&encode(&art)).unwrap();
+        let via_json = ModelArtifact::from_json(&art.to_json()).unwrap();
+        let q = Matrix::from_fn(9, 4, |i, j| ((i * 4 + j) as f64 * 0.37).cos());
+        let a = Predictor::new(&via_bin).predict_batch(&q).unwrap();
+        let b = Predictor::new(&via_json).predict_batch(&q).unwrap();
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.to_bits(), y.to_bits(), "codec paths disagree: {x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn nan_negative_zero_and_subnormals_survive_the_codec() {
+        let mut art = dense_artifact(4, 3);
+        // a NaN with a distinctive payload, −0.0 and a subnormal: the
+        // codec must carry all three bit patterns through untouched
+        let weird_nan = f64::from_bits(0x7ff8_dead_beef_0001);
+        art.alpha[0] = weird_nan;
+        art.alpha[1] = -0.0;
+        art.alpha[2] = f64::from_bits(1); // smallest positive subnormal
+        art.centers.set(0, 0, f64::NEG_INFINITY);
+        art.centers.set(1, 1, -4.9e-324_f64);
+        let back = decode(&encode(&art)).unwrap();
+        assert_eq!(back.alpha[0].to_bits(), weird_nan.to_bits());
+        assert_eq!(back.alpha[1].to_bits(), (-0.0f64).to_bits());
+        assert_eq!(back.alpha[2].to_bits(), 1);
+        assert_eq!(back.centers.get(0, 0).to_bits(), f64::NEG_INFINITY.to_bits());
+        assert_eq!(back.centers.get(1, 1).to_bits(), (-4.9e-324_f64).to_bits());
+    }
+
+    #[test]
+    fn truncated_artifact_errors_cleanly() {
+        let full = encode(&dense_artifact(6, 3));
+        for cut in [0, 4, MIN_LEN - 1, full.len() / 2, full.len() - 1] {
+            let err = decode(&full[..cut]).unwrap_err().to_string();
+            assert!(
+                err.contains("truncated")
+                    || err.contains("checksum")
+                    || err.contains("bad magic")
+                    || err.contains("length mismatch"),
+                "cut at {cut}: unexpected error {err}"
+            );
+        }
+    }
+
+    #[test]
+    fn bit_flip_fails_checksum() {
+        let mut bytes = encode(&dense_artifact(6, 3));
+        let mid = HEADER_LEN + 20; // inside the α section
+        bytes[mid] ^= 0x40;
+        let err = decode(&bytes).unwrap_err().to_string();
+        assert!(err.contains("checksum"), "unexpected error: {err}");
+    }
+
+    #[test]
+    fn bad_magic_rejected() {
+        let mut bytes = encode(&dense_artifact(4, 2));
+        bytes[0] = b'X';
+        let err = decode(&bytes).unwrap_err().to_string();
+        assert!(err.contains("magic"), "unexpected error: {err}");
+        // and a JSON artifact fed to the binary decoder is a magic error
+        let json = dense_artifact(4, 2).to_json().to_string();
+        assert!(decode(json.as_bytes()).unwrap_err().to_string().contains("magic"));
+    }
+
+    #[test]
+    fn version_mismatch_rejected() {
+        let mut bytes = encode(&dense_artifact(4, 2));
+        bytes[8..12].copy_from_slice(&9u32.to_le_bytes());
+        // keep the checksum honest so the *version* check is what fires
+        let n = bytes.len();
+        let sum = fnv1a(&bytes[..n - 8]);
+        bytes[n - 8..].copy_from_slice(&sum.to_le_bytes());
+        let err = decode(&bytes).unwrap_err().to_string();
+        assert!(err.contains("version 9"), "unexpected error: {err}");
+    }
+
+    #[test]
+    fn header_section_mismatch_rejected() {
+        let mut bytes = encode(&dense_artifact(4, 2));
+        // claim m=5 while the sections still hold m=4 worth of values
+        bytes[24..32].copy_from_slice(&5u64.to_le_bytes());
+        let n = bytes.len();
+        let sum = fnv1a(&bytes[..n - 8]);
+        bytes[n - 8..].copy_from_slice(&sum.to_le_bytes());
+        let err = decode(&bytes).unwrap_err().to_string();
+        assert!(err.contains("length mismatch"), "unexpected error: {err}");
+    }
+
+    #[test]
+    fn format_detection_by_path_and_magic() {
+        assert_eq!(Format::from_path(Path::new("m.bin")), Format::Binary);
+        assert_eq!(Format::from_path(Path::new("m.bless")), Format::Binary);
+        assert_eq!(Format::from_path(Path::new("m.json")), Format::Json);
+        assert_eq!(Format::from_path(Path::new("model")), Format::Json);
+        assert_eq!(Format::detect(&encode(&dense_artifact(2, 2))), Format::Binary);
+        assert_eq!(Format::detect(b"{\"format\":\"bless-falkon-model\"}"), Format::Json);
+        assert_eq!(Format::detect(b""), Format::Json);
+    }
+
+    #[test]
+    fn binary_is_smaller_than_json_on_dense_values() {
+        let art = dense_artifact(64, 8);
+        let bin = encode(&art).len();
+        let json = art.to_json().to_string().len();
+        assert!(
+            json >= 2 * bin,
+            "binary not smaller: {bin} bytes binary vs {json} bytes JSON"
+        );
+    }
+}

@@ -1,23 +1,55 @@
-//! Serving tier: model persistence + a batched, multi-threaded FALKON
-//! prediction server.
+//! Serving tier: model persistence (JSON + binary), a multi-model
+//! registry with hot reload and backpressure, and a batched,
+//! multi-threaded FALKON prediction server.
 //!
 //! BLESS picks the Nyström centers and FALKON fits `α`; after that the
 //! deployable model is just `(σ, centers, α)` and prediction is
 //! `f(x) = Σ_j α_j K(x, x̃_j)` — cheap enough to serve at scale. This
-//! module takes a fitted [`crate::falkon::FalkonModel`] from training to
+//! module takes fitted [`crate::falkon::FalkonModel`]s from training to
 //! traffic:
 //!
-//! * [`model_store`] — the self-contained, versioned + checksummed JSON
+//! * [`model_store`] — the self-contained, versioned + checksummed
 //!   artifact ([`ModelArtifact`]) with the center *rows* gathered out of
 //!   the training set, and the inference-side [`Predictor`].
+//! * [`codec`] — the two on-disk encodings: human-readable JSON for
+//!   small models, and a raw little-endian **binary** layout for large M
+//!   (magic `BLESSBIN`, version, header, raw `f64` sections for `α` and
+//!   the center rows, trailing FNV-1a checksum). `save` picks by
+//!   extension (`.bin`/`.bless` → binary), `load` sniffs the magic, and
+//!   both roundtrip every `f64` bit-exactly.
+//! * [`registry`] — one process, N named models: per-model batching
+//!   queue, LRU cache, counters and queue-depth cap around a
+//!   hot-swappable predictor.
 //! * [`batcher`] — the [`BatchQueue`] that coalesces concurrent
-//!   single-point requests into one `cross_block` GEMM per tick.
+//!   single-point requests into one `cross_block` GEMM per tick, with a
+//!   bounded-push mode for load shedding.
 //! * [`protocol`] — the line-delimited JSON wire format.
-//! * [`server`] — the stdlib-only TCP server: accept loop, a worker
-//!   pool over one shared engine, request/latency counters, graceful
-//!   shutdown; plus the blocking [`Client`].
+//! * [`server`] — the stdlib-only TCP server: accept loop, per-model
+//!   worker pools, request/latency counters, graceful shutdown; plus the
+//!   blocking [`Client`].
 //! * [`cache`] — a bounded LRU over quantized query vectors for
 //!   repeated-query traffic.
+//!
+//! ## Routing, hot reload, backpressure
+//!
+//! Predict requests carry an optional `"model"` name
+//! (`{"id":1,"model":"higgs-v2","x":[…]}`); with a single loaded model
+//! the name may be omitted. The `admin` verb manages the registry at
+//! run time:
+//!
+//! ```text
+//! → {"op":"admin","cmd":"list"}
+//! → {"op":"admin","cmd":"reload","model":"higgs-v2","path":"v3.bin"}
+//! ```
+//!
+//! Reload loads the artifact (either encoding), builds the new predictor
+//! off-lock, and swaps it atomically: engine workers snapshot the
+//! predictor per batch, so every in-flight request completes against a
+//! consistent model and none are dropped; the model's query cache is
+//! cleared under the same swap. Each model's queue has a depth cap
+//! (`ServeConfig::max_queue`); a request arriving at a full queue is
+//! shed immediately with `{"error":…,"code":"overloaded"}` rather than
+//! buffered without bound — clients should back off and retry.
 //!
 //! ## Train → save → serve → predict
 //!
@@ -28,10 +60,10 @@
 //! # let (model, engine): (bless::falkon::FalkonModel, bless::kernels::NativeEngine) = todo!();
 //! // training side (any KernelEngine):
 //! let artifact = ModelArtifact::from_fitted(&model, &engine, "susy-like")?;
-//! artifact.save("model.json")?;
+//! artifact.save("model.bin")?;              // .bin/.bless → binary codec
 //!
 //! // inference side (no training data needed):
-//! let loaded = ModelArtifact::load("model.json")?;
+//! let loaded = ModelArtifact::load("model.bin")?;   // format auto-detected
 //! let handle = serve::start(loaded, &ServeConfig::default())?;
 //! let mut client = serve::Client::connect(handle.addr())?;
 //! let (score, _cached) = client.predict(1, &vec![0.0; 18])?;
@@ -40,19 +72,24 @@
 //! # }
 //! ```
 //!
-//! Or from the CLI: `repro train --save model.json`, then
-//! `repro serve --model model.json --port 7878`, then line-delimited
-//! JSON requests over TCP (`repro predict --model model.json` for
-//! offline scoring).
+//! Or from the CLI: `repro train --save model.bin`, then
+//! `repro serve --models susy=model.bin,higgs=other.bin --max-queue 512`,
+//! then line-delimited JSON requests over TCP (`repro predict` for
+//! offline scoring, `repro convert` to move artifacts between JSON and
+//! binary).
 
 pub mod batcher;
 pub mod cache;
+pub mod codec;
 pub mod model_store;
 pub mod protocol;
+pub mod registry;
 pub mod server;
 
-pub use batcher::{BatchQueue, PredictJob};
+pub use batcher::{BatchQueue, PredictJob, Push};
 pub use cache::PredictionCache;
+pub use codec::Format;
 pub use model_store::{ModelArtifact, Predictor, FORMAT, VERSION};
 pub use protocol::{Request, StatsSnapshot};
-pub use server::{start, Client, ServeConfig, ServerHandle};
+pub use registry::{ModelEntry, ModelSpec, ModelStats, Registry};
+pub use server::{start, start_registry, Client, ServeConfig, ServerHandle};

@@ -7,13 +7,21 @@
 //! versioned + checksummed JSON encoding (via [`crate::util::json`] — the
 //! offline registry has no `serde`), and the [`Predictor`] that serves it.
 //!
-//! Round-trip fidelity: every `f64` is written with Rust's shortest
-//! round-trip `Display` and re-read with `str::parse::<f64>`, so a
-//! save→load cycle reproduces predictions *bit-exactly*.
+//! Two on-disk encodings share the artifact ([`crate::serve::codec`]):
+//! human-readable JSON for small models, and a raw little-endian binary
+//! layout for large M. [`ModelArtifact::save`] picks by extension
+//! (`.bin`/`.bless` → binary), [`ModelArtifact::load`] sniffs the magic
+//! bytes, so every consumer reads both transparently.
+//!
+//! Round-trip fidelity: the binary format stores raw `f64` bit patterns;
+//! the JSON format writes Rust's shortest round-trip `Display` and
+//! re-reads with `str::parse::<f64>`. Either way a save→load cycle
+//! reproduces predictions *bit-exactly*.
 
 use crate::falkon::FalkonModel;
 use crate::kernels::{Gaussian, KernelEngine, NativeEngine};
 use crate::linalg::Matrix;
+use crate::serve::codec::{self, Format};
 use crate::util::json::Json;
 use std::collections::BTreeMap;
 use std::path::Path;
@@ -205,8 +213,15 @@ impl ModelArtifact {
         Ok(art)
     }
 
-    /// Save to disk as a single JSON document.
+    /// Save to disk, choosing the encoding by extension: `.bin` /
+    /// `.bless` write the binary layout, anything else writes JSON.
     pub fn save(&self, path: impl AsRef<Path>) -> anyhow::Result<()> {
+        let format = Format::from_path(path.as_ref());
+        self.save_as(path, format)
+    }
+
+    /// Save to disk in an explicit encoding (the `repro convert` path).
+    pub fn save_as(&self, path: impl AsRef<Path>, format: Format) -> anyhow::Result<()> {
         self.validate()?;
         let path = path.as_ref();
         if let Some(parent) = path.parent() {
@@ -214,33 +229,45 @@ impl ModelArtifact {
                 std::fs::create_dir_all(parent)?;
             }
         }
-        std::fs::write(path, self.to_json().to_string())
+        let bytes = match format {
+            Format::Json => self.to_json().to_string().into_bytes(),
+            Format::Binary => codec::encode(self),
+        };
+        std::fs::write(path, bytes)
             .map_err(|e| anyhow::anyhow!("writing {}: {e}", path.display()))
     }
 
-    /// Load and validate an artifact from disk. Truncated or corrupted
-    /// files and version mismatches all return errors.
+    /// Load and validate an artifact from disk, auto-detecting the
+    /// encoding from the leading bytes. Truncated or corrupted files
+    /// and version mismatches all return errors.
     pub fn load(path: impl AsRef<Path>) -> anyhow::Result<Self> {
         let path = path.as_ref();
-        let text = std::fs::read_to_string(path)
-            .map_err(|e| anyhow::anyhow!("reading {}: {e}", path.display()))?;
-        let j = Json::parse(&text)
-            .map_err(|e| anyhow::anyhow!("parsing {}: {e}", path.display()))?;
-        Self::from_json(&j)
+        let bytes =
+            std::fs::read(path).map_err(|e| anyhow::anyhow!("reading {}: {e}", path.display()))?;
+        match Format::detect(&bytes) {
+            Format::Binary => {
+                let art = codec::decode(&bytes)
+                    .map_err(|e| anyhow::anyhow!("decoding {}: {e}", path.display()))?;
+                // the codec deliberately skips the finiteness policy (it
+                // must roundtrip NaN payloads); loads enforce it
+                art.validate()?;
+                Ok(art)
+            }
+            Format::Json => {
+                let text = String::from_utf8(bytes)
+                    .map_err(|e| anyhow::anyhow!("parsing {}: {e}", path.display()))?;
+                let j = Json::parse(&text)
+                    .map_err(|e| anyhow::anyhow!("parsing {}: {e}", path.display()))?;
+                Self::from_json(&j) // from_json validates
+            }
+        }
     }
 }
 
 /// FNV-1a 64-bit over the canonical payload serialization (`BTreeMap`
 /// field order is deterministic), rendered as 16 hex digits.
 fn payload_checksum(payload: &Json) -> String {
-    const OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
-    const PRIME: u64 = 0x0000_0100_0000_01b3;
-    let mut h = OFFSET;
-    for b in payload.to_string().bytes() {
-        h ^= b as u64;
-        h = h.wrapping_mul(PRIME);
-    }
-    format!("{h:016x}")
+    format!("{:016x}", codec::fnv1a(payload.to_string().as_bytes()))
 }
 
 /// The inference-side engine: a loaded artifact bound to a
@@ -313,6 +340,10 @@ mod tests {
         std::env::temp_dir().join(format!("bless-model-{}-{tag}.json", std::process::id()))
     }
 
+    fn tmp_path_ext(tag: &str, ext: &str) -> std::path::PathBuf {
+        std::env::temp_dir().join(format!("bless-model-{}-{tag}.{ext}", std::process::id()))
+    }
+
     fn fitted() -> (NativeEngine, FalkonModel, Matrix) {
         let mut rng = Rng::seeded(21);
         let ds = susy_like(300, &mut rng);
@@ -350,6 +381,43 @@ mod tests {
         for (a, b) in direct.iter().zip(&served) {
             assert_eq!(a.to_bits(), b.to_bits(), "prediction drifted: {a} vs {b}");
         }
+    }
+
+    #[test]
+    fn binary_save_load_round_trip_is_bit_exact() {
+        let (eng, model, q) = fitted();
+        let art = ModelArtifact::from_fitted(&model, &eng, "susy-like").unwrap();
+        let path = tmp_path_ext("binroundtrip", "bin");
+        art.save(&path).unwrap(); // .bin extension → binary encoding
+        let bytes = std::fs::read(&path).unwrap();
+        assert!(bytes.starts_with(&codec::MAGIC), "save did not pick the binary codec");
+        let loaded = ModelArtifact::load(&path).unwrap();
+        std::fs::remove_file(&path).ok();
+
+        for (a, b) in art.alpha.iter().zip(&loaded.alpha) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        for (a, b) in art.centers.as_slice().iter().zip(loaded.centers.as_slice()) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        let direct = model.predict(&eng, &q);
+        let served = Predictor::new(&loaded).predict_batch(&q).unwrap();
+        for (a, b) in direct.iter().zip(&served) {
+            assert_eq!(a.to_bits(), b.to_bits(), "binary artifact drifted: {a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn truncated_binary_artifact_errors_cleanly() {
+        let (eng, model, _) = fitted();
+        let art = ModelArtifact::from_fitted(&model, &eng, "susy-like").unwrap();
+        let path = tmp_path_ext("bintrunc", "bin");
+        art.save(&path).unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        std::fs::write(&path, &bytes[..bytes.len() / 3]).unwrap();
+        let err = ModelArtifact::load(&path).unwrap_err().to_string();
+        std::fs::remove_file(&path).ok();
+        assert!(err.contains("decoding"), "unexpected error: {err}");
     }
 
     #[test]

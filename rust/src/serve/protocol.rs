@@ -5,17 +5,26 @@
 //! escapes them inside strings), so framing is a plain `\n` split.
 //!
 //! ```text
-//! → {"id":1,"x":[0.12,-1.4,…]}        predict one point
+//! → {"id":1,"x":[0.12,-1.4,…]}              predict (single model, or
+//! → {"id":1,"model":"higgs-v2","x":[…]}      routed by name)
 //! ← {"id":1,"y":0.8315,"cached":false}
-//! → {"op":"stats"}                    server counters
-//! ← {"requests":128,"batches":19,"mean_batch":6.7,…}
-//! → {"op":"ping"}                     liveness
+//! → {"op":"stats"}                           aggregate counters
+//! → {"op":"stats","model":"higgs-v2"}        one model's counters
+//! ← {"requests":128,"batches":19,"mean_batch":6.7,"shed":0,…}
+//! → {"op":"admin","cmd":"list"}              loaded models
+//! ← {"models":[{"name":"higgs-v2","m":2000,"d":28,"version":1},…]}
+//! → {"op":"admin","cmd":"reload","model":"higgs-v2","path":"new.bin"}
+//! ← {"ok":true,"model":"higgs-v2","m":2500,"d":28,"version":2}
+//! → {"op":"ping"}                            liveness
 //! ← {"ok":true}
-//! → {"op":"shutdown"}                 graceful stop
+//! → {"op":"shutdown"}                        graceful stop
 //! ← {"ok":true}
 //! ```
 //!
-//! Malformed lines get `{"error":"…"}` and the connection stays open.
+//! Malformed lines get `{"error":"…","code":"…"}` and the connection
+//! stays open. The `code` field is machine-readable: `bad_request`,
+//! `unknown_model`, `overloaded` (queue-depth backpressure — retry
+//! later), `reload_failed`, `internal`, `shutting_down`.
 //!
 //! Numbers ride JSON's `f64` lane, so correlation `id`s (and counters)
 //! are exact only up to 2⁵³ — the standard JSON interop bound. Clients
@@ -31,15 +40,30 @@ pub enum Request {
     Predict {
         /// Client-chosen correlation id, echoed back in the response.
         id: u64,
+        /// Target model name; omitted when exactly one model is loaded.
+        model: Option<String>,
         /// The query row.
         x: Vec<f64>,
     },
-    /// Report server counters.
-    Stats,
+    /// Report counters — aggregate, or one model's when `model` is set.
+    Stats {
+        /// Restrict to one model.
+        model: Option<String>,
+    },
     /// Liveness probe.
     Ping,
     /// Graceful server stop.
     Shutdown,
+    /// Hot-reload a model's artifact, atomically swapping its predictor
+    /// (from `path` when given, else from the model's recorded source).
+    AdminReload {
+        /// Which registry entry to swap.
+        model: String,
+        /// Optional new artifact path (JSON or binary, auto-detected).
+        path: Option<String>,
+    },
+    /// List the loaded models with shape, version and traffic counters.
+    AdminList,
 }
 
 impl Request {
@@ -49,9 +73,31 @@ impl Request {
         anyhow::ensure!(j.as_obj().is_some(), "request must be a JSON object");
         if let Some(op) = j.get("op").and_then(|v| v.as_str()) {
             return match op {
-                "stats" => Ok(Request::Stats),
+                "stats" => Ok(Request::Stats {
+                    model: j.get("model").and_then(|v| v.as_str()).map(str::to_string),
+                }),
                 "ping" => Ok(Request::Ping),
                 "shutdown" => Ok(Request::Shutdown),
+                "admin" => {
+                    let cmd = j
+                        .get("cmd")
+                        .and_then(|v| v.as_str())
+                        .ok_or_else(|| anyhow::anyhow!("admin request needs a \"cmd\""))?;
+                    match cmd {
+                        "reload" => Ok(Request::AdminReload {
+                            model: j
+                                .get("model")
+                                .and_then(|v| v.as_str())
+                                .ok_or_else(|| {
+                                    anyhow::anyhow!("admin reload needs a \"model\" name")
+                                })?
+                                .to_string(),
+                            path: j.get("path").and_then(|v| v.as_str()).map(str::to_string),
+                        }),
+                        "list" => Ok(Request::AdminList),
+                        other => anyhow::bail!("unknown admin cmd {other:?}"),
+                    }
+                }
                 other => anyhow::bail!("unknown op {other:?}"),
             };
         }
@@ -67,7 +113,8 @@ impl Request {
             x.push(f);
         }
         let id = j.get("id").and_then(|v| v.as_f64()).unwrap_or(0.0) as u64;
-        Ok(Request::Predict { id, x })
+        let model = j.get("model").and_then(|v| v.as_str()).map(str::to_string);
+        Ok(Request::Predict { id, model, x })
     }
 
     /// Serialize a request to its wire line (no trailing newline) —
@@ -75,15 +122,21 @@ impl Request {
     pub fn to_line(&self) -> String {
         let mut obj = BTreeMap::new();
         match self {
-            Request::Predict { id, x } => {
+            Request::Predict { id, model, x } => {
                 obj.insert("id".to_string(), Json::Num(*id as f64));
+                if let Some(m) = model {
+                    obj.insert("model".to_string(), Json::Str(m.clone()));
+                }
                 obj.insert(
                     "x".to_string(),
                     Json::Arr(x.iter().map(|&v| Json::Num(v)).collect()),
                 );
             }
-            Request::Stats => {
+            Request::Stats { model } => {
                 obj.insert("op".to_string(), Json::Str("stats".to_string()));
+                if let Some(m) = model {
+                    obj.insert("model".to_string(), Json::Str(m.clone()));
+                }
             }
             Request::Ping => {
                 obj.insert("op".to_string(), Json::Str("ping".to_string()));
@@ -91,12 +144,25 @@ impl Request {
             Request::Shutdown => {
                 obj.insert("op".to_string(), Json::Str("shutdown".to_string()));
             }
+            Request::AdminReload { model, path } => {
+                obj.insert("op".to_string(), Json::Str("admin".to_string()));
+                obj.insert("cmd".to_string(), Json::Str("reload".to_string()));
+                obj.insert("model".to_string(), Json::Str(model.clone()));
+                if let Some(p) = path {
+                    obj.insert("path".to_string(), Json::Str(p.clone()));
+                }
+            }
+            Request::AdminList => {
+                obj.insert("op".to_string(), Json::Str("admin".to_string()));
+                obj.insert("cmd".to_string(), Json::Str("list".to_string()));
+            }
         }
         Json::Obj(obj).to_string()
     }
 }
 
-/// Point-in-time server counters, as reported over the wire.
+/// Point-in-time server counters, as reported over the wire — either one
+/// model's, or the sum across the registry.
 #[derive(Clone, Debug, Default, PartialEq)]
 pub struct StatsSnapshot {
     /// Predict requests accepted.
@@ -110,6 +176,11 @@ pub struct StatsSnapshot {
     pub cache_hits: u64,
     /// Requests rejected with an error response.
     pub errors: u64,
+    /// Requests shed by queue-depth backpressure (`overloaded` replies;
+    /// counted separately from `errors`).
+    pub shed: u64,
+    /// Hot reloads applied (per model; summed in the aggregate view).
+    pub reloads: u64,
     /// Total predict latency in microseconds (enqueue → reply).
     pub latency_us: u64,
 }
@@ -133,6 +204,18 @@ impl StatsSnapshot {
         }
     }
 
+    /// Accumulate another snapshot (registry aggregation).
+    pub fn add(&mut self, other: &StatsSnapshot) {
+        self.requests += other.requests;
+        self.batches += other.batches;
+        self.batched += other.batched;
+        self.cache_hits += other.cache_hits;
+        self.errors += other.errors;
+        self.shed += other.shed;
+        self.reloads += other.reloads;
+        self.latency_us += other.latency_us;
+    }
+
     /// Serialize to the wire line. The exact `latency_us` total goes on
     /// the wire (the derived `mean_*` fields are for humans) so a parsed
     /// snapshot reproduces the server's counters without drift.
@@ -144,12 +227,15 @@ impl StatsSnapshot {
         obj.insert("mean_batch".to_string(), Json::Num(self.mean_batch()));
         obj.insert("cache_hits".to_string(), Json::Num(self.cache_hits as f64));
         obj.insert("errors".to_string(), Json::Num(self.errors as f64));
+        obj.insert("shed".to_string(), Json::Num(self.shed as f64));
+        obj.insert("reloads".to_string(), Json::Num(self.reloads as f64));
         obj.insert("latency_us".to_string(), Json::Num(self.latency_us as f64));
         obj.insert("mean_latency_us".to_string(), Json::Num(self.mean_latency_us()));
         Json::Obj(obj).to_string()
     }
 
-    /// Parse a stats response line (client side).
+    /// Parse a stats response line (client side). Fields absent on the
+    /// wire (older servers) read as 0.
     pub fn parse(line: &str) -> anyhow::Result<StatsSnapshot> {
         let j = Json::parse(line)?;
         let field = |k: &str| j.get(k).and_then(|v| v.as_f64()).unwrap_or(0.0) as u64;
@@ -159,6 +245,8 @@ impl StatsSnapshot {
             batched: field("batched"),
             cache_hits: field("cache_hits"),
             errors: field("errors"),
+            shed: field("shed"),
+            reloads: field("reloads"),
             latency_us: field("latency_us"),
         })
     }
@@ -173,12 +261,14 @@ pub fn predict_response(id: u64, y: f64, cached: bool) -> String {
     Json::Obj(obj).to_string()
 }
 
-/// Serialize an error response (with the correlation id when known).
-pub fn error_response(id: Option<u64>, message: &str) -> String {
+/// Serialize an error response: a human-readable `error` message, a
+/// machine-readable `code`, and the correlation id when known.
+pub fn error_response(id: Option<u64>, code: &str, message: &str) -> String {
     let mut obj = BTreeMap::new();
     if let Some(id) = id {
         obj.insert("id".to_string(), Json::Num(id as f64));
     }
+    obj.insert("code".to_string(), Json::Str(code.to_string()));
     obj.insert("error".to_string(), Json::Str(message.to_string()));
     Json::Obj(obj).to_string()
 }
@@ -191,10 +281,13 @@ pub fn ok_response() -> String {
 }
 
 /// Parse a prediction response line (client side): `(id, score, cached)`.
+/// Error replies surface as `Err` whose message carries the wire `code`
+/// in square brackets (e.g. `server error [overloaded]: …`).
 pub fn parse_predict_response(line: &str) -> anyhow::Result<(u64, f64, bool)> {
     let j = Json::parse(line)?;
     if let Some(err) = j.get("error").and_then(|v| v.as_str()) {
-        anyhow::bail!("server error: {err}");
+        let code = j.get("code").and_then(|v| v.as_str()).unwrap_or("unknown");
+        anyhow::bail!("server error [{code}]: {err}");
     }
     let id = j.get("id").and_then(|v| v.as_f64()).unwrap_or(0.0) as u64;
     let y = j
@@ -211,15 +304,35 @@ mod tests {
 
     #[test]
     fn predict_request_round_trips() {
-        let req = Request::Predict { id: 42, x: vec![0.5, -1.25, 3.0] };
+        let req = Request::Predict { id: 42, model: None, x: vec![0.5, -1.25, 3.0] };
         let line = req.to_line();
         assert!(!line.contains('\n'));
         assert_eq!(Request::parse(&line).unwrap(), req);
+
+        let routed = Request::Predict {
+            id: 7,
+            model: Some("higgs-v2".to_string()),
+            x: vec![1.0, 2.0],
+        };
+        let line = routed.to_line();
+        assert!(line.contains("\"model\":\"higgs-v2\""));
+        assert_eq!(Request::parse(&line).unwrap(), routed);
     }
 
     #[test]
     fn ops_round_trip() {
-        for req in [Request::Stats, Request::Ping, Request::Shutdown] {
+        for req in [
+            Request::Stats { model: None },
+            Request::Stats { model: Some("a".to_string()) },
+            Request::Ping,
+            Request::Shutdown,
+            Request::AdminReload { model: "a".to_string(), path: None },
+            Request::AdminReload {
+                model: "a".to_string(),
+                path: Some("m.bin".to_string()),
+            },
+            Request::AdminList,
+        ] {
             assert_eq!(Request::parse(&req.to_line()).unwrap(), req);
         }
     }
@@ -232,6 +345,9 @@ mod tests {
         assert!(Request::parse("{\"x\":[]}").is_err());
         assert!(Request::parse("{\"x\":[1,\"two\"]}").is_err());
         assert!(Request::parse("{\"id\":1}").is_err());
+        assert!(Request::parse("{\"op\":\"admin\"}").is_err());
+        assert!(Request::parse("{\"op\":\"admin\",\"cmd\":\"nope\"}").is_err());
+        assert!(Request::parse("{\"op\":\"admin\",\"cmd\":\"reload\"}").is_err());
     }
 
     #[test]
@@ -240,7 +356,9 @@ mod tests {
         assert_eq!(id, 7);
         assert_eq!(y, 0.125);
         assert!(cached);
-        assert!(parse_predict_response(&error_response(Some(7), "boom")).is_err());
+        let err = parse_predict_response(&error_response(Some(7), "overloaded", "queue full"))
+            .unwrap_err();
+        assert!(err.to_string().contains("[overloaded]"), "got {err}");
         assert!(parse_predict_response(&ok_response()).is_err());
     }
 
@@ -252,17 +370,26 @@ mod tests {
             batched: 100,
             cache_hits: 3,
             errors: 1,
+            shed: 2,
+            reloads: 4,
             latency_us: 12_000,
         };
         let line = s.to_line();
         let back = StatsSnapshot::parse(&line).unwrap();
-        assert_eq!(back.requests, 100);
-        assert_eq!(back.batches, 20);
-        assert_eq!(back.batched, 100);
-        assert_eq!(back.cache_hits, 3);
-        assert_eq!(back.errors, 1);
-        assert_eq!(back.latency_us, 12_000, "exact total must survive the wire");
+        assert_eq!(back, s, "exact counters must survive the wire");
         assert!((back.mean_batch() - 5.0).abs() < 1e-12);
         assert!((back.mean_latency_us() - 120.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn stats_aggregation_sums_fields() {
+        let mut a = StatsSnapshot { requests: 3, shed: 1, latency_us: 10, ..Default::default() };
+        let b = StatsSnapshot { requests: 2, errors: 4, reloads: 1, ..Default::default() };
+        a.add(&b);
+        assert_eq!(a.requests, 5);
+        assert_eq!(a.errors, 4);
+        assert_eq!(a.shed, 1);
+        assert_eq!(a.reloads, 1);
+        assert_eq!(a.latency_us, 10);
     }
 }

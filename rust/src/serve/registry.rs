@@ -1,0 +1,469 @@
+//! Multi-model registry: N named models served by one process.
+//!
+//! Each [`ModelEntry`] owns its own micro-batching queue, LRU cache,
+//! counters and queue-depth cap, around a hot-swappable predictor:
+//!
+//! * **Routing** — requests carry `"model":"name"`; with exactly one
+//!   model loaded the name may be omitted ([`Registry::resolve`]).
+//! * **Hot reload** — [`ModelEntry::reload`] loads a new artifact (JSON
+//!   or binary, auto-detected) and swaps the predictor behind an
+//!   `RwLock<Arc<…>>`. Engine workers snapshot the `Arc` per batch, so
+//!   in-flight requests complete against whichever predictor they
+//!   started with and nothing is dropped; the query cache is cleared
+//!   under the same swap (a stale score must not outlive its model) and
+//!   a monotone version counter fences late cache inserts from batches
+//!   that ran against the replaced predictor.
+//! * **Backpressure** — [`ModelEntry::enqueue`] applies the per-model
+//!   depth cap; beyond it the request is shed with [`Push::Full`] and
+//!   the server answers a structured `overloaded` error instead of
+//!   buffering without bound.
+
+use crate::serve::batcher::{BatchQueue, PredictJob, Push};
+use crate::serve::cache::{PredictionCache, QueryKey};
+use crate::serve::model_store::{ModelArtifact, Predictor};
+use crate::serve::protocol::StatsSnapshot;
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, RwLock};
+
+/// Per-model monotone counters (lock-free; read via [`StatsSnapshot`]).
+#[derive(Default)]
+pub struct ModelStats {
+    /// Predict requests routed to this model.
+    pub requests: AtomicU64,
+    /// Batches executed by this model's workers.
+    pub batches: AtomicU64,
+    /// Requests answered through batches.
+    pub batched: AtomicU64,
+    /// Requests answered from the cache.
+    pub cache_hits: AtomicU64,
+    /// Requests answered with an error.
+    pub errors: AtomicU64,
+    /// Requests shed by the queue-depth cap.
+    pub shed: AtomicU64,
+    /// Hot reloads applied.
+    pub reloads: AtomicU64,
+    /// Total predict latency in microseconds.
+    pub latency_us: AtomicU64,
+}
+
+impl ModelStats {
+    /// Point-in-time copy of the counters.
+    pub fn snapshot(&self) -> StatsSnapshot {
+        StatsSnapshot {
+            requests: self.requests.load(Ordering::Relaxed),
+            batches: self.batches.load(Ordering::Relaxed),
+            batched: self.batched.load(Ordering::Relaxed),
+            cache_hits: self.cache_hits.load(Ordering::Relaxed),
+            errors: self.errors.load(Ordering::Relaxed),
+            shed: self.shed.load(Ordering::Relaxed),
+            reloads: self.reloads.load(Ordering::Relaxed),
+            latency_us: self.latency_us.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// Cache-lookup outcome: either a served score, or the key + model
+/// version to use for the post-predict insert (`None` when caching is
+/// off for this entry).
+pub enum CacheProbe {
+    /// The quantized query was cached; serve this score.
+    Hit(f64),
+    /// Miss — insert with [`ModelEntry::cache_insert`] after predicting.
+    Miss(Option<(QueryKey, u64)>),
+}
+
+/// One named model: hot-swappable predictor + queue + cache + counters.
+pub struct ModelEntry {
+    name: String,
+    source: Mutex<Option<PathBuf>>,
+    predictor: RwLock<Arc<Predictor>>,
+    /// Bumped on every swap; fences stale cache inserts.
+    version: AtomicU64,
+    /// This model's micro-batching queue (workers pop, handlers push).
+    pub queue: BatchQueue<PredictJob>,
+    cache: Option<Mutex<PredictionCache>>,
+    /// This model's traffic counters.
+    pub stats: ModelStats,
+    max_queue: usize,
+}
+
+impl ModelEntry {
+    fn new(
+        name: String,
+        artifact: &ModelArtifact,
+        source: Option<PathBuf>,
+        cache_capacity: usize,
+        cache_quant: f64,
+        max_queue: usize,
+    ) -> ModelEntry {
+        ModelEntry {
+            name,
+            source: Mutex::new(source),
+            predictor: RwLock::new(Arc::new(Predictor::new(artifact))),
+            version: AtomicU64::new(1),
+            queue: BatchQueue::new(),
+            cache: (cache_capacity > 0)
+                .then(|| Mutex::new(PredictionCache::new(cache_capacity, cache_quant))),
+            stats: ModelStats::default(),
+            max_queue,
+        }
+    }
+
+    /// The registry name requests route on.
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    /// Snapshot of the current predictor (workers hold this across a
+    /// whole batch, so a concurrent reload never invalidates it).
+    pub fn predictor(&self) -> Arc<Predictor> {
+        Arc::clone(&self.predictor.read().unwrap())
+    }
+
+    /// Current feature dimension.
+    pub fn dim(&self) -> usize {
+        self.predictor.read().unwrap().dim()
+    }
+
+    /// Current number of centers M.
+    pub fn m(&self) -> usize {
+        self.predictor.read().unwrap().m()
+    }
+
+    /// Monotone model version: 1 at load, +1 per reload.
+    pub fn version(&self) -> u64 {
+        self.version.load(Ordering::SeqCst)
+    }
+
+    /// Queue-depth cap (0 = unbounded).
+    pub fn max_queue(&self) -> usize {
+        self.max_queue
+    }
+
+    /// Enqueue a job under this model's depth cap.
+    pub fn enqueue(&self, job: PredictJob) -> Push {
+        self.queue.push_bounded(job, self.max_queue)
+    }
+
+    /// Probe the cache for a query.
+    pub fn cache_probe(&self, x: &[f64]) -> CacheProbe {
+        match &self.cache {
+            None => CacheProbe::Miss(None),
+            Some(cache) => {
+                let mut c = cache.lock().unwrap();
+                let key = c.key(x);
+                match c.get(&key) {
+                    Some(y) => CacheProbe::Hit(y),
+                    // capture the version under the cache lock: a swap
+                    // bumps it under the same lock, so a stale insert is
+                    // reliably fenced
+                    None => CacheProbe::Miss(Some((key, self.version.load(Ordering::SeqCst)))),
+                }
+            }
+        }
+    }
+
+    /// Insert a freshly computed score, unless the model was swapped
+    /// since the probe (the score may belong to the replaced predictor).
+    pub fn cache_insert(&self, key: QueryKey, version: u64, y: f64) {
+        if let Some(cache) = &self.cache {
+            let mut c = cache.lock().unwrap();
+            if self.version.load(Ordering::SeqCst) == version {
+                c.insert(key, y);
+            }
+        }
+    }
+
+    /// Atomically swap in a new artifact. In-flight batches keep their
+    /// predictor snapshot; new batches see the replacement; the cache is
+    /// emptied under the swap so no stale score survives.
+    pub fn swap(&self, artifact: &ModelArtifact) {
+        let next = Arc::new(Predictor::new(artifact)); // built outside the lock
+        let mut guard = self.predictor.write().unwrap();
+        *guard = next;
+        match &self.cache {
+            Some(cache) => {
+                let mut c = cache.lock().unwrap();
+                self.version.fetch_add(1, Ordering::SeqCst);
+                c.clear();
+            }
+            None => {
+                self.version.fetch_add(1, Ordering::SeqCst);
+            }
+        }
+        drop(guard);
+        self.stats.reloads.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Hot-reload from `path`, or from the recorded source path when
+    /// `None`. On success the source is updated and `(m, d, version)`
+    /// of the new model returned; on failure the old model keeps
+    /// serving untouched.
+    pub fn reload(&self, path: Option<&Path>) -> anyhow::Result<(usize, usize, u64)> {
+        // hold the source lock across resolve+load+swap+record: two
+        // concurrent reloads serialize, so the recorded source always
+        // names the artifact the active predictor actually came from
+        let mut source = self.source.lock().unwrap();
+        let target: PathBuf = match path {
+            Some(p) => p.to_path_buf(),
+            None => source.clone().ok_or_else(|| {
+                anyhow::anyhow!(
+                    "model {:?} was not loaded from a file; pass \"path\" in the reload request",
+                    self.name
+                )
+            })?,
+        };
+        let artifact = ModelArtifact::load(&target)?;
+        let (m, d) = (artifact.m(), artifact.d());
+        self.swap(&artifact);
+        *source = Some(target);
+        Ok((m, d, self.version()))
+    }
+}
+
+/// A model to register at server start.
+pub struct ModelSpec {
+    /// Registry name requests route on.
+    pub name: String,
+    /// The loaded artifact.
+    pub artifact: ModelArtifact,
+    /// Where it came from (enables path-less hot reload).
+    pub source: Option<PathBuf>,
+}
+
+impl ModelSpec {
+    /// Load a spec from a `name=path` CLI argument (`--models a=x.bin,…`).
+    pub fn from_cli_arg(arg: &str) -> anyhow::Result<ModelSpec> {
+        let (name, path) = arg
+            .split_once('=')
+            .ok_or_else(|| anyhow::anyhow!("bad model spec {arg:?} (want name=path)"))?;
+        let (name, path) = (name.trim(), path.trim());
+        anyhow::ensure!(!name.is_empty() && !path.is_empty(), "bad model spec {arg:?}");
+        Ok(ModelSpec {
+            name: name.to_string(),
+            artifact: ModelArtifact::load(path)?,
+            source: Some(PathBuf::from(path)),
+        })
+    }
+}
+
+/// The immutable model table: names are fixed at startup, each entry's
+/// predictor is hot-swappable.
+pub struct Registry {
+    models: BTreeMap<String, Arc<ModelEntry>>,
+}
+
+impl Registry {
+    /// Build from the startup specs; names must be unique and nonempty.
+    pub fn new(
+        specs: Vec<ModelSpec>,
+        cache_capacity: usize,
+        cache_quant: f64,
+        max_queue: usize,
+    ) -> anyhow::Result<Registry> {
+        anyhow::ensure!(!specs.is_empty(), "registry needs at least one model");
+        let mut models = BTreeMap::new();
+        for spec in specs {
+            anyhow::ensure!(!spec.name.is_empty(), "empty model name");
+            let entry = Arc::new(ModelEntry::new(
+                spec.name.clone(),
+                &spec.artifact,
+                spec.source,
+                cache_capacity,
+                cache_quant,
+                max_queue,
+            ));
+            anyhow::ensure!(
+                models.insert(spec.name.clone(), entry).is_none(),
+                "duplicate model name {:?}",
+                spec.name
+            );
+        }
+        Ok(Registry { models })
+    }
+
+    /// Number of registered models.
+    pub fn len(&self) -> usize {
+        self.models.len()
+    }
+
+    /// Whether the registry is empty (never true after `new`).
+    pub fn is_empty(&self) -> bool {
+        self.models.is_empty()
+    }
+
+    /// Registered names, sorted.
+    pub fn names(&self) -> Vec<String> {
+        self.models.keys().cloned().collect()
+    }
+
+    /// Look up a model by exact name.
+    pub fn get(&self, name: &str) -> Option<&Arc<ModelEntry>> {
+        self.models.get(name)
+    }
+
+    /// All entries (cloned handles, for spawning per-model workers).
+    pub fn entries(&self) -> Vec<Arc<ModelEntry>> {
+        self.models.values().cloned().collect()
+    }
+
+    /// Route a request: an explicit name must exist; no name is allowed
+    /// only when exactly one model is loaded.
+    pub fn resolve(&self, name: Option<&str>) -> anyhow::Result<&Arc<ModelEntry>> {
+        match name {
+            Some(n) => self.models.get(n).ok_or_else(|| {
+                anyhow::anyhow!("unknown model {n:?} (loaded: {})", self.names().join(", "))
+            }),
+            None if self.models.len() == 1 => Ok(self.models.values().next().unwrap()),
+            None => anyhow::bail!(
+                "{} models loaded ({}); set \"model\" in the request",
+                self.models.len(),
+                self.names().join(", ")
+            ),
+        }
+    }
+
+    /// Close every model queue (shutdown: drain then stop workers).
+    pub fn close_all(&self) {
+        for entry in self.models.values() {
+            entry.queue.close();
+        }
+    }
+
+    /// Sum of all per-model counters.
+    pub fn aggregate_stats(&self) -> StatsSnapshot {
+        let mut total = StatsSnapshot::default();
+        for entry in self.models.values() {
+            total.add(&entry.stats.snapshot());
+        }
+        total
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::Matrix;
+
+    fn artifact(scale: f64, d: usize) -> ModelArtifact {
+        ModelArtifact {
+            sigma: 1.5,
+            centers: Matrix::from_fn(5, d, |i, j| ((i * d + j) as f64 * 0.37).sin()),
+            alpha: (0..5).map(|i| scale * (0.3 + i as f64 * 0.11)).collect(),
+            trained_n: 5,
+            dataset: "unit".to_string(),
+        }
+    }
+
+    fn spec(name: &str, scale: f64) -> ModelSpec {
+        ModelSpec { name: name.to_string(), artifact: artifact(scale, 3), source: None }
+    }
+
+    #[test]
+    fn resolve_routes_by_name_and_defaults_when_unambiguous() {
+        let one = Registry::new(vec![spec("only", 1.0)], 0, 1e-9, 0).unwrap();
+        assert_eq!(one.resolve(None).unwrap().name(), "only");
+        assert_eq!(one.resolve(Some("only")).unwrap().name(), "only");
+        let err = one.resolve(Some("nope")).err().unwrap().to_string();
+        assert!(err.contains("unknown model"), "got {err}");
+
+        let two = Registry::new(vec![spec("a", 1.0), spec("b", 2.0)], 0, 1e-9, 0).unwrap();
+        assert_eq!(two.resolve(Some("b")).unwrap().name(), "b");
+        let err = two.resolve(None).err().unwrap().to_string();
+        assert!(err.contains("set \"model\""), "got {err}");
+        assert_eq!(two.names(), vec!["a".to_string(), "b".to_string()]);
+    }
+
+    #[test]
+    fn duplicate_and_empty_registries_rejected() {
+        assert!(Registry::new(vec![], 0, 1e-9, 0).is_err());
+        assert!(Registry::new(vec![spec("a", 1.0), spec("a", 2.0)], 0, 1e-9, 0)
+            .err()
+            .unwrap()
+            .to_string()
+            .contains("duplicate"));
+    }
+
+    #[test]
+    fn swap_changes_predictions_bumps_version_and_clears_cache() {
+        let reg = Registry::new(vec![spec("a", 1.0)], 16, 1e-9, 0).unwrap();
+        let entry = reg.get("a").unwrap();
+        let q = [0.1, -0.2, 0.3];
+        let before = entry.predictor().predict_one(&q).unwrap();
+        assert_eq!(entry.version(), 1);
+
+        // prime the cache
+        let probe = entry.cache_probe(&q);
+        let pending = match probe {
+            CacheProbe::Miss(p) => p.expect("cache enabled"),
+            CacheProbe::Hit(_) => panic!("cold cache cannot hit"),
+        };
+        entry.cache_insert(pending.0.clone(), pending.1, before);
+        assert!(matches!(entry.cache_probe(&q), CacheProbe::Hit(_)));
+
+        entry.swap(&artifact(3.0, 3));
+        assert_eq!(entry.version(), 2);
+        assert_eq!(entry.stats.reloads.load(Ordering::Relaxed), 1);
+        // cache was cleared with the swap
+        assert!(matches!(entry.cache_probe(&q), CacheProbe::Miss(_)));
+        let after = entry.predictor().predict_one(&q).unwrap();
+        assert!(
+            (after - 3.0 * before).abs() <= 1e-12 * before.abs().max(1.0),
+            "α scaled by 3 should triple the score: {before} → {after}"
+        );
+
+        // a stale insert carrying the pre-swap version is fenced out
+        entry.cache_insert(pending.0.clone(), pending.1, before);
+        assert!(matches!(entry.cache_probe(&q), CacheProbe::Miss(_)));
+    }
+
+    #[test]
+    fn reload_reads_either_format_from_disk_and_updates_source() {
+        let reg = Registry::new(vec![spec("a", 1.0)], 0, 1e-9, 0).unwrap();
+        let entry = reg.get("a").unwrap();
+        // no source recorded and no path given → clean error, model intact
+        let err = entry.reload(None).unwrap_err().to_string();
+        assert!(err.contains("path"), "got {err}");
+        assert_eq!(entry.version(), 1);
+
+        let path = std::env::temp_dir()
+            .join(format!("bless-registry-reload-{}.bin", std::process::id()));
+        artifact(2.0, 3).save(&path).unwrap();
+        let (m, d, version) = entry.reload(Some(path.as_path())).unwrap();
+        assert_eq!((m, d, version), (5, 3, 2));
+        // source is now recorded: path-less reload works
+        let (_, _, version) = entry.reload(None).unwrap();
+        assert_eq!(version, 3);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn enqueue_applies_the_depth_cap() {
+        let reg = Registry::new(vec![spec("a", 1.0)], 0, 1e-9, 2).unwrap();
+        let entry = reg.get("a").unwrap();
+        let job = |x: f64| {
+            let (tx, rx) = std::sync::mpsc::channel();
+            (PredictJob { x: vec![x, 0.0, 0.0], reply: tx }, rx)
+        };
+        let (j1, _r1) = job(0.1);
+        let (j2, _r2) = job(0.2);
+        let (j3, _r3) = job(0.3);
+        assert_eq!(entry.enqueue(j1), Push::Accepted);
+        assert_eq!(entry.enqueue(j2), Push::Accepted);
+        assert_eq!(entry.enqueue(j3), Push::Full);
+        assert_eq!(entry.queue.len(), 2);
+    }
+
+    #[test]
+    fn aggregate_stats_sums_models() {
+        let reg = Registry::new(vec![spec("a", 1.0), spec("b", 2.0)], 0, 1e-9, 0).unwrap();
+        reg.get("a").unwrap().stats.requests.fetch_add(3, Ordering::Relaxed);
+        reg.get("b").unwrap().stats.requests.fetch_add(4, Ordering::Relaxed);
+        reg.get("b").unwrap().stats.shed.fetch_add(1, Ordering::Relaxed);
+        let total = reg.aggregate_stats();
+        assert_eq!(total.requests, 7);
+        assert_eq!(total.shed, 1);
+    }
+}

@@ -1,32 +1,40 @@
 //! The TCP prediction server: stdlib-only (`std::net` + threads).
 //!
-//! Topology:
+//! Topology (one process, N registered models):
 //!
 //! ```text
-//! accept loop ──spawns──▶ connection threads (parse, cache, enqueue)
-//!                              │ PredictJob
+//! accept loop ──spawns──▶ connection threads (parse, route, cache,
+//!                              │              bounded enqueue)
+//!                              │ PredictJob (per model)
 //!                              ▼
-//!                        BatchQueue  ◀─ micro-batching (linger + max)
+//!                  ModelEntry.queue  ◀─ micro-batching (linger + max)
+//!                              │      ◀─ depth cap → `overloaded` shed
 //!                              │ batch
 //!                              ▼
-//!                 engine workers (sharing one immutable Predictor —
-//!                 one cross_block GEMM per batch)
+//!                 per-model engine workers (snapshot the entry's
+//!                 Arc<Predictor> per batch — one cross_block GEMM)
 //! ```
 //!
+//! Hot reload (`{"op":"admin","cmd":"reload",…}`) swaps one entry's
+//! predictor atomically: queued jobs are answered by whichever predictor
+//! the worker snapshots, nothing in flight is dropped.
+//!
 //! Shutdown (`{"op":"shutdown"}` or [`ServerHandle::shutdown`]) closes
-//! the queue (in-flight work drains, new work is refused), pokes the
-//! accept loop and joins the worker pool. Idle keep-alive connections
-//! are dropped when the process exits.
+//! every model queue (in-flight work drains, new work is refused), pokes
+//! the accept loop and joins the worker pool. Idle keep-alive
+//! connections are dropped when the process exits.
 
 use crate::linalg::Matrix;
-use crate::serve::batcher::{BatchQueue, PredictJob};
-use crate::serve::cache::PredictionCache;
-use crate::serve::model_store::{ModelArtifact, Predictor};
+use crate::serve::batcher::{PredictJob, Push};
+use crate::serve::model_store::ModelArtifact;
 use crate::serve::protocol::{self, Request, StatsSnapshot};
+use crate::serve::registry::{CacheProbe, ModelEntry, ModelSpec, Registry};
+use crate::util::json::Json;
+use std::collections::BTreeMap;
 use std::io::{BufRead, BufReader, BufWriter, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::{mpsc, Arc, Mutex};
+use std::sync::{mpsc, Arc};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
@@ -35,16 +43,21 @@ use std::time::{Duration, Instant};
 pub struct ServeConfig {
     /// Bind address; use port 0 for an ephemeral port (tests).
     pub addr: String,
-    /// Engine worker threads (all sharing one immutable [`Predictor`]).
+    /// Engine worker threads **per model** (each model batches
+    /// independently; workers share that model's hot-swappable predictor).
     pub workers: usize,
     /// Largest coalesced batch per GEMM.
     pub max_batch: usize,
     /// How long a worker lingers for stragglers after the first request.
     pub linger: Duration,
-    /// Prediction-cache capacity in entries (0 disables the cache).
+    /// Prediction-cache capacity in entries per model (0 disables).
     pub cache_capacity: usize,
     /// Cache quantization step for query coordinates.
     pub cache_quant: f64,
+    /// Max queued (not yet batched) requests per model; beyond this the
+    /// request is shed with a structured `overloaded` error. 0 =
+    /// unbounded (the PR-1 behaviour).
+    pub max_queue: usize,
 }
 
 impl Default for ServeConfig {
@@ -56,41 +69,17 @@ impl Default for ServeConfig {
             linger: Duration::from_millis(2),
             cache_capacity: 1024,
             cache_quant: 1e-9,
-        }
-    }
-}
-
-/// Monotone server counters (lock-free; read via [`StatsSnapshot`]).
-#[derive(Default)]
-struct ServerStats {
-    requests: AtomicU64,
-    batches: AtomicU64,
-    batched: AtomicU64,
-    cache_hits: AtomicU64,
-    errors: AtomicU64,
-    latency_us: AtomicU64,
-}
-
-impl ServerStats {
-    fn snapshot(&self) -> StatsSnapshot {
-        StatsSnapshot {
-            requests: self.requests.load(Ordering::Relaxed),
-            batches: self.batches.load(Ordering::Relaxed),
-            batched: self.batched.load(Ordering::Relaxed),
-            cache_hits: self.cache_hits.load(Ordering::Relaxed),
-            errors: self.errors.load(Ordering::Relaxed),
-            latency_us: self.latency_us.load(Ordering::Relaxed),
+            max_queue: 1024,
         }
     }
 }
 
 /// State shared by the accept loop, connection threads and workers.
 struct Shared {
-    queue: BatchQueue<PredictJob>,
-    stats: ServerStats,
-    cache: Option<Mutex<PredictionCache>>,
+    registry: Registry,
+    /// Errors not attributable to a model (parse failures, bad routes).
+    conn_errors: AtomicU64,
     shutdown: AtomicBool,
-    dim: usize,
     addr: SocketAddr,
 }
 
@@ -99,9 +88,16 @@ impl Shared {
         if self.shutdown.swap(true, Ordering::SeqCst) {
             return; // already shutting down
         }
-        self.queue.close();
+        self.registry.close_all();
         // poke the accept loop so it re-checks the flag
         let _ = TcpStream::connect(self.addr);
+    }
+
+    /// Aggregate counters: every model plus the connection-level errors.
+    fn aggregate_stats(&self) -> StatsSnapshot {
+        let mut s = self.registry.aggregate_stats();
+        s.errors += self.conn_errors.load(Ordering::Relaxed);
+        s
     }
 }
 
@@ -119,9 +115,19 @@ impl ServerHandle {
         self.shared.addr
     }
 
-    /// Current counters.
+    /// Aggregate counters across all models.
     pub fn stats(&self) -> StatsSnapshot {
-        self.shared.stats.snapshot()
+        self.shared.aggregate_stats()
+    }
+
+    /// One model's counters (None for an unknown name).
+    pub fn model_stats(&self, name: &str) -> Option<StatsSnapshot> {
+        self.shared.registry.get(name).map(|e| e.stats.snapshot())
+    }
+
+    /// Registered model names.
+    pub fn model_names(&self) -> Vec<String> {
+        self.shared.registry.names()
     }
 
     /// Whether a shutdown has been requested (locally or over the wire).
@@ -158,34 +164,42 @@ impl Drop for ServerHandle {
     }
 }
 
-/// Start serving `artifact` with the given config. Returns once the
-/// listener is bound and the worker pool is up.
+/// Serve a single anonymous model (registered as `"default"`) — the
+/// PR-1 entry point, now a thin wrapper over [`start_registry`].
 pub fn start(artifact: ModelArtifact, cfg: &ServeConfig) -> anyhow::Result<ServerHandle> {
+    start_registry(
+        vec![ModelSpec { name: "default".to_string(), artifact, source: None }],
+        cfg,
+    )
+}
+
+/// Start serving a registry of named models with the given config.
+/// Returns once the listener is bound and every worker pool is up.
+pub fn start_registry(
+    models: Vec<ModelSpec>,
+    cfg: &ServeConfig,
+) -> anyhow::Result<ServerHandle> {
     anyhow::ensure!(cfg.max_batch >= 1, "max_batch must be at least 1");
+    let registry = Registry::new(models, cfg.cache_capacity, cfg.cache_quant, cfg.max_queue)?;
     let listener = TcpListener::bind(&cfg.addr)
         .map_err(|e| anyhow::anyhow!("binding {}: {e}", cfg.addr))?;
     let addr = listener.local_addr()?;
     let shared = Arc::new(Shared {
-        queue: BatchQueue::new(),
-        stats: ServerStats::default(),
-        cache: (cfg.cache_capacity > 0)
-            .then(|| Mutex::new(PredictionCache::new(cfg.cache_capacity, cfg.cache_quant))),
+        registry,
+        conn_errors: AtomicU64::new(0),
         shutdown: AtomicBool::new(false),
-        dim: artifact.d(),
         addr,
     });
 
-    // the predictor is immutable after construction, so one engine
-    // (centers matrix + row norms) serves every worker thread
-    let predictor = Arc::new(Predictor::new(&artifact));
     let mut workers = Vec::new();
-    for _ in 0..cfg.workers.max(1) {
-        let predictor = Arc::clone(&predictor);
-        let shared = Arc::clone(&shared);
-        let (max_batch, linger) = (cfg.max_batch, cfg.linger);
-        workers.push(std::thread::spawn(move || {
-            worker_loop(&predictor, &shared, max_batch, linger);
-        }));
+    for entry in shared.registry.entries() {
+        for _ in 0..cfg.workers.max(1) {
+            let entry = Arc::clone(&entry);
+            let (max_batch, linger) = (cfg.max_batch, cfg.linger);
+            workers.push(std::thread::spawn(move || {
+                worker_loop(&entry, max_batch, linger);
+            }));
+        }
     }
 
     let accept_shared = Arc::clone(&shared);
@@ -193,25 +207,43 @@ pub fn start(artifact: ModelArtifact, cfg: &ServeConfig) -> anyhow::Result<Serve
     Ok(ServerHandle { shared, accept: Some(accept), workers })
 }
 
-fn worker_loop(predictor: &Predictor, shared: &Shared, max_batch: usize, linger: Duration) {
-    while let Some(batch) = shared.queue.pop_batch(max_batch, linger) {
+fn worker_loop(entry: &ModelEntry, max_batch: usize, linger: Duration) {
+    while let Some(batch) = entry.queue.pop_batch(max_batch, linger) {
         if batch.is_empty() {
             continue;
         }
-        shared.stats.batches.fetch_add(1, Ordering::Relaxed);
-        shared.stats.batched.fetch_add(batch.len() as u64, Ordering::Relaxed);
-        let q = Matrix::from_fn(batch.len(), predictor.dim(), |i, j| batch[i].x[j]);
+        // snapshot the predictor once per batch: a concurrent hot reload
+        // swaps the entry's Arc but cannot invalidate this one
+        let predictor = entry.predictor();
+        let dim = predictor.dim();
+        let (good, stale): (Vec<_>, Vec<_>) =
+            batch.into_iter().partition(|job| job.x.len() == dim);
+        for job in stale {
+            // only possible when a reload changed the feature dimension
+            // between enqueue-time validation and this batch
+            let _ = job
+                .reply
+                .send(Err("model was reloaded with a different dimension".to_string()));
+        }
+        if good.is_empty() {
+            continue;
+        }
+        entry.stats.batches.fetch_add(1, Ordering::Relaxed);
+        entry.stats.batched.fetch_add(good.len() as u64, Ordering::Relaxed);
+        let q = Matrix::from_fn(good.len(), dim, |i, j| good[i].x[j]);
         match predictor.predict_batch(&q) {
             Ok(scores) => {
-                for (job, &score) in batch.iter().zip(&scores) {
+                for (job, &score) in good.iter().zip(&scores) {
                     // a disconnected client is not a worker error
-                    let _ = job.reply.send(score);
+                    let _ = job.reply.send(Ok(score));
                 }
             }
-            // dims are validated before enqueue; dropping the batch (and
-            // its reply senders) surfaces an error on each waiting
-            // connection
-            Err(_) => {}
+            Err(e) => {
+                let msg = e.to_string();
+                for job in &good {
+                    let _ = job.reply.send(Err(msg.clone()));
+                }
+            }
         }
     }
 }
@@ -243,11 +275,15 @@ fn handle_conn(stream: TcpStream, shared: &Shared) -> std::io::Result<()> {
         }
         let response = match Request::parse(&line) {
             Err(e) => {
-                shared.stats.errors.fetch_add(1, Ordering::Relaxed);
-                protocol::error_response(None, &e.to_string())
+                shared.conn_errors.fetch_add(1, Ordering::Relaxed);
+                protocol::error_response(None, "bad_request", &e.to_string())
             }
             Ok(Request::Ping) => protocol::ok_response(),
-            Ok(Request::Stats) => shared.stats.snapshot().to_line(),
+            Ok(Request::Stats { model }) => handle_stats(shared, model.as_deref()),
+            Ok(Request::AdminList) => admin_list_response(shared),
+            Ok(Request::AdminReload { model, path }) => {
+                handle_reload(shared, &model, path.as_deref())
+            }
             Ok(Request::Shutdown) => {
                 // flip the flag before acking so a client that saw the
                 // ack observes is_shut_down() == true
@@ -256,7 +292,9 @@ fn handle_conn(stream: TcpStream, shared: &Shared) -> std::io::Result<()> {
                 writer.flush()?;
                 return Ok(());
             }
-            Ok(Request::Predict { id, x }) => handle_predict(shared, id, x),
+            Ok(Request::Predict { id, model, x }) => {
+                handle_predict(shared, id, model.as_deref(), x)
+            }
         };
         writeln!(writer, "{response}")?;
         writer.flush()?;
@@ -264,55 +302,146 @@ fn handle_conn(stream: TcpStream, shared: &Shared) -> std::io::Result<()> {
     Ok(())
 }
 
-fn handle_predict(shared: &Shared, id: u64, x: Vec<f64>) -> String {
-    let t0 = Instant::now();
-    shared.stats.requests.fetch_add(1, Ordering::Relaxed);
-    if x.len() != shared.dim {
-        shared.stats.errors.fetch_add(1, Ordering::Relaxed);
-        return protocol::error_response(
-            Some(id),
-            &format!("query dimension {} != model dimension {}", x.len(), shared.dim),
-        );
-    }
-
-    // one lock acquisition covers both the key quantization and the
-    // hit check; the key is kept for the post-predict insert
-    let mut key = None;
-    if let Some(cache) = &shared.cache {
-        let mut c = cache.lock().unwrap();
-        let k = c.key(&x);
-        if let Some(y) = c.get(&k) {
-            drop(c);
-            shared.stats.cache_hits.fetch_add(1, Ordering::Relaxed);
-            bump_latency(shared, t0);
-            return protocol::predict_response(id, y, true);
-        }
-        key = Some(k);
-    }
-
-    let (tx, rx) = mpsc::channel();
-    if !shared.queue.push(PredictJob { x, reply: tx }) {
-        shared.stats.errors.fetch_add(1, Ordering::Relaxed);
-        return protocol::error_response(Some(id), "server is shutting down");
-    }
-    match rx.recv() {
-        Ok(y) => {
-            if let (Some(cache), Some(key)) = (&shared.cache, key) {
-                cache.lock().unwrap().insert(key, y);
+fn handle_stats(shared: &Shared, model: Option<&str>) -> String {
+    match model {
+        None => shared.aggregate_stats().to_line(),
+        Some(name) => match shared.registry.get(name) {
+            Some(entry) => entry.stats.snapshot().to_line(),
+            None => {
+                shared.conn_errors.fetch_add(1, Ordering::Relaxed);
+                protocol::error_response(None, "unknown_model", &format!("unknown model {name:?}"))
             }
-            bump_latency(shared, t0);
-            protocol::predict_response(id, y, false)
+        },
+    }
+}
+
+fn admin_list_response(shared: &Shared) -> String {
+    let models: Vec<Json> = shared
+        .registry
+        .entries()
+        .iter()
+        .map(|entry| {
+            let stats = entry.stats.snapshot();
+            let mut obj = BTreeMap::new();
+            obj.insert("name".to_string(), Json::Str(entry.name().to_string()));
+            obj.insert("m".to_string(), Json::Num(entry.m() as f64));
+            obj.insert("d".to_string(), Json::Num(entry.dim() as f64));
+            obj.insert("version".to_string(), Json::Num(entry.version() as f64));
+            obj.insert("requests".to_string(), Json::Num(stats.requests as f64));
+            obj.insert("shed".to_string(), Json::Num(stats.shed as f64));
+            Json::Obj(obj)
+        })
+        .collect();
+    let mut obj = BTreeMap::new();
+    obj.insert("models".to_string(), Json::Arr(models));
+    Json::Obj(obj).to_string()
+}
+
+fn handle_reload(shared: &Shared, model: &str, path: Option<&str>) -> String {
+    let entry = match shared.registry.get(model) {
+        Some(e) => e,
+        None => {
+            shared.conn_errors.fetch_add(1, Ordering::Relaxed);
+            let loaded = shared.registry.names().join(", ");
+            return protocol::error_response(
+                None,
+                "unknown_model",
+                &format!("unknown model {model:?} (loaded: {loaded})"),
+            );
         }
-        Err(_) => {
-            shared.stats.errors.fetch_add(1, Ordering::Relaxed);
-            protocol::error_response(Some(id), "prediction failed (server stopping?)")
+    };
+    match entry.reload(path.map(std::path::Path::new)) {
+        Ok((m, d, version)) => {
+            let mut obj = BTreeMap::new();
+            obj.insert("ok".to_string(), Json::Bool(true));
+            obj.insert("model".to_string(), Json::Str(model.to_string()));
+            obj.insert("m".to_string(), Json::Num(m as f64));
+            obj.insert("d".to_string(), Json::Num(d as f64));
+            obj.insert("version".to_string(), Json::Num(version as f64));
+            Json::Obj(obj).to_string()
+        }
+        Err(e) => {
+            shared.conn_errors.fetch_add(1, Ordering::Relaxed);
+            protocol::error_response(None, "reload_failed", &e.to_string())
         }
     }
 }
 
-fn bump_latency(shared: &Shared, t0: Instant) {
+fn handle_predict(shared: &Shared, id: u64, model: Option<&str>, x: Vec<f64>) -> String {
+    let t0 = Instant::now();
+    let entry = match shared.registry.resolve(model) {
+        Ok(e) => e,
+        Err(e) => {
+            shared.conn_errors.fetch_add(1, Ordering::Relaxed);
+            return protocol::error_response(Some(id), "unknown_model", &e.to_string());
+        }
+    };
+    entry.stats.requests.fetch_add(1, Ordering::Relaxed);
+    let dim = entry.dim();
+    if x.len() != dim {
+        entry.stats.errors.fetch_add(1, Ordering::Relaxed);
+        return protocol::error_response(
+            Some(id),
+            "bad_request",
+            &format!("query dimension {} != model dimension {dim}", x.len()),
+        );
+    }
+
+    let pending = match entry.cache_probe(&x) {
+        CacheProbe::Hit(y) => {
+            entry.stats.cache_hits.fetch_add(1, Ordering::Relaxed);
+            bump_latency(entry, t0);
+            return protocol::predict_response(id, y, true);
+        }
+        CacheProbe::Miss(pending) => pending,
+    };
+
+    let (tx, rx) = mpsc::channel();
+    match entry.enqueue(PredictJob { x, reply: tx }) {
+        Push::Accepted => {}
+        Push::Full => {
+            entry.stats.shed.fetch_add(1, Ordering::Relaxed);
+            return protocol::error_response(
+                Some(id),
+                "overloaded",
+                &format!(
+                    "model {:?} queue is full ({} pending); retry later",
+                    entry.name(),
+                    entry.max_queue()
+                ),
+            );
+        }
+        Push::Closed => {
+            entry.stats.errors.fetch_add(1, Ordering::Relaxed);
+            return protocol::error_response(Some(id), "shutting_down", "server is shutting down");
+        }
+    }
+    match rx.recv() {
+        Ok(Ok(y)) => {
+            if let Some((key, version)) = pending {
+                entry.cache_insert(key, version, y);
+            }
+            bump_latency(entry, t0);
+            protocol::predict_response(id, y, false)
+        }
+        Ok(Err(msg)) => {
+            entry.stats.errors.fetch_add(1, Ordering::Relaxed);
+            protocol::error_response(Some(id), "internal", &msg)
+        }
+        Err(_) => {
+            entry.stats.errors.fetch_add(1, Ordering::Relaxed);
+            protocol::error_response(
+                Some(id),
+                "shutting_down",
+                "prediction failed (server stopping?)",
+            )
+        }
+    }
+}
+
+fn bump_latency(entry: &ModelEntry, t0: Instant) {
     let us = t0.elapsed().as_micros().min(u64::MAX as u128) as u64;
-    shared.stats.latency_us.fetch_add(us, Ordering::Relaxed);
+    entry.stats.latency_us.fetch_add(us, Ordering::Relaxed);
 }
 
 /// A minimal blocking client for the line protocol — used by the CLI,
@@ -339,19 +468,77 @@ impl Client {
         Ok(buf.trim_end().to_string())
     }
 
-    /// Score one query point; returns `(score, served_from_cache)`.
-    pub fn predict(&mut self, id: u64, x: &[f64]) -> anyhow::Result<(f64, bool)> {
-        let req = Request::Predict { id, x: x.to_vec() };
+    fn predict_req(&mut self, req: Request, id: u64) -> anyhow::Result<(f64, bool)> {
         let line = self.round_trip(&req.to_line())?;
         let (rid, y, cached) = protocol::parse_predict_response(&line)?;
         anyhow::ensure!(rid == id, "response id {rid} != request id {id}");
         Ok((y, cached))
     }
 
-    /// Fetch server counters.
+    /// Score one query point against the only loaded model; returns
+    /// `(score, served_from_cache)`.
+    pub fn predict(&mut self, id: u64, x: &[f64]) -> anyhow::Result<(f64, bool)> {
+        self.predict_req(Request::Predict { id, model: None, x: x.to_vec() }, id)
+    }
+
+    /// Score one query point against a named model.
+    pub fn predict_on(
+        &mut self,
+        model: &str,
+        id: u64,
+        x: &[f64],
+    ) -> anyhow::Result<(f64, bool)> {
+        self.predict_req(
+            Request::Predict { id, model: Some(model.to_string()), x: x.to_vec() },
+            id,
+        )
+    }
+
+    /// Fetch aggregate server counters.
     pub fn stats(&mut self) -> anyhow::Result<StatsSnapshot> {
-        let line = self.round_trip(&Request::Stats.to_line())?;
+        let line = self.round_trip(&Request::Stats { model: None }.to_line())?;
         StatsSnapshot::parse(&line)
+    }
+
+    /// Fetch one model's counters.
+    pub fn stats_for(&mut self, model: &str) -> anyhow::Result<StatsSnapshot> {
+        let line =
+            self.round_trip(&Request::Stats { model: Some(model.to_string()) }.to_line())?;
+        anyhow::ensure!(!line.contains("\"error\""), "stats failed: {line}");
+        StatsSnapshot::parse(&line)
+    }
+
+    /// Hot-reload a model (optionally from a new artifact path); returns
+    /// the model's new version counter.
+    pub fn admin_reload(&mut self, model: &str, path: Option<&str>) -> anyhow::Result<u64> {
+        let req = Request::AdminReload {
+            model: model.to_string(),
+            path: path.map(str::to_string),
+        };
+        let line = self.round_trip(&req.to_line())?;
+        let j = Json::parse(&line)?;
+        if let Some(err) = j.get("error").and_then(|v| v.as_str()) {
+            let code = j.get("code").and_then(|v| v.as_str()).unwrap_or("unknown");
+            anyhow::bail!("reload failed [{code}]: {err}");
+        }
+        j.get("version")
+            .and_then(|v| v.as_f64())
+            .map(|v| v as u64)
+            .ok_or_else(|| anyhow::anyhow!("reload response missing version: {line}"))
+    }
+
+    /// List loaded model names (sorted).
+    pub fn admin_list(&mut self) -> anyhow::Result<Vec<String>> {
+        let line = self.round_trip(&Request::AdminList.to_line())?;
+        let j = Json::parse(&line)?;
+        let arr = j
+            .get("models")
+            .and_then(|v| v.as_arr())
+            .ok_or_else(|| anyhow::anyhow!("bad admin list response: {line}"))?;
+        Ok(arr
+            .iter()
+            .filter_map(|m| m.get("name").and_then(|v| v.as_str()).map(str::to_string))
+            .collect())
     }
 
     /// Liveness probe.
@@ -383,6 +570,14 @@ mod tests {
         }
     }
 
+    fn scaled_artifact(scale: f64) -> ModelArtifact {
+        let mut art = tiny_artifact();
+        for a in &mut art.alpha {
+            *a *= scale;
+        }
+        art
+    }
+
     fn test_config() -> ServeConfig {
         ServeConfig {
             addr: "127.0.0.1:0".to_string(),
@@ -391,6 +586,8 @@ mod tests {
             ..ServeConfig::default()
         }
     }
+
+    use crate::serve::model_store::Predictor;
 
     #[test]
     fn serves_predictions_matching_direct_predictor() {
@@ -435,6 +632,7 @@ mod tests {
         // raw garbage line
         let resp = client.round_trip("this is not json").unwrap();
         assert!(resp.contains("\"error\""), "got {resp}");
+        assert!(resp.contains("bad_request"), "got {resp}");
         // connection still usable afterwards
         client.ping().unwrap();
         assert_eq!(handle.stats().errors, 2);
@@ -448,5 +646,102 @@ mod tests {
         client.shutdown().unwrap();
         assert!(handle.is_shut_down());
         handle.join(); // returns because the client stopped the server
+    }
+
+    #[test]
+    fn two_models_route_by_name_and_admin_lists_them() {
+        let specs = vec![
+            ModelSpec { name: "one".to_string(), artifact: tiny_artifact(), source: None },
+            ModelSpec { name: "two".to_string(), artifact: scaled_artifact(2.0), source: None },
+        ];
+        let handle = start_registry(specs, &test_config()).unwrap();
+        let mut client = Client::connect(handle.addr()).unwrap();
+
+        let q = [0.3, -0.4];
+        let (y1, _) = client.predict_on("one", 1, &q).unwrap();
+        let (y2, _) = client.predict_on("two", 2, &q).unwrap();
+        assert!((y2 - 2.0 * y1).abs() < 1e-12, "scaled model should double: {y1} vs {y2}");
+
+        // nameless predict is ambiguous with two models
+        let err = client.predict(3, &q).unwrap_err().to_string();
+        assert!(err.contains("model"), "got {err}");
+        // unknown name is a structured error
+        let err = client.predict_on("nope", 4, &q).unwrap_err().to_string();
+        assert!(err.contains("[unknown_model]"), "got {err}");
+
+        assert_eq!(client.admin_list().unwrap(), vec!["one".to_string(), "two".to_string()]);
+        // per-model stats counted the routed traffic
+        assert_eq!(client.stats_for("one").unwrap().requests, 1);
+        assert_eq!(client.stats_for("two").unwrap().requests, 1);
+        handle.shutdown();
+    }
+
+    #[test]
+    fn wire_reload_swaps_predictions_and_bumps_version() {
+        let path = std::env::temp_dir()
+            .join(format!("bless-server-reload-{}.bin", std::process::id()));
+        scaled_artifact(4.0).save(&path).unwrap();
+
+        let handle = start(tiny_artifact(), &test_config()).unwrap();
+        let mut client = Client::connect(handle.addr()).unwrap();
+        let q = [0.25, 0.75];
+        let (before, _) = client.predict(1, &q).unwrap();
+        let version = client.admin_reload("default", path.to_str()).unwrap();
+        assert_eq!(version, 2);
+        let (after, cached) = client.predict(2, &q).unwrap();
+        assert!(!cached, "reload must clear the cache");
+        assert!(
+            (after - 4.0 * before).abs() < 1e-12,
+            "reloaded α×4 should quadruple: {before} → {after}"
+        );
+        assert_eq!(client.stats().unwrap().reloads, 1);
+        // reloading an unknown model fails cleanly
+        let err = client.admin_reload("nope", None).unwrap_err().to_string();
+        assert!(err.contains("unknown_model"), "got {err}");
+        std::fs::remove_file(&path).ok();
+        handle.shutdown();
+    }
+
+    #[test]
+    fn queue_cap_sheds_with_overloaded_error() {
+        let cfg = ServeConfig {
+            addr: "127.0.0.1:0".to_string(),
+            workers: 1,
+            max_batch: 4,
+            linger: Duration::from_millis(800),
+            cache_capacity: 0,
+            cache_quant: 1e-9,
+            max_queue: 1,
+        };
+        let handle = start(tiny_artifact(), &cfg).unwrap();
+        let addr = handle.addr();
+
+        // first request sits in the queue through the worker's linger
+        // window; the second arrives while the depth cap is reached
+        let blocker = std::thread::spawn(move || {
+            let mut c = Client::connect(addr).unwrap();
+            c.predict(1, &[0.1, 0.2]).unwrap()
+        });
+        // deterministic sync: wait until the blocker's job is actually
+        // queued (depth cap reached) instead of racing a sleep
+        let queue_len =
+            || handle.shared.registry.get("default").unwrap().queue.len();
+        let t0 = Instant::now();
+        while queue_len() == 0 {
+            assert!(t0.elapsed() < Duration::from_secs(10), "blocker never enqueued");
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        let mut client = Client::connect(addr).unwrap();
+        let err = client.predict(2, &[0.3, 0.4]).unwrap_err().to_string();
+        assert!(err.contains("[overloaded]"), "got {err}");
+
+        // the in-flight request still completes successfully
+        let (y, _) = blocker.join().unwrap();
+        assert!(y.is_finite());
+        let stats = handle.stats();
+        assert_eq!(stats.shed, 1);
+        assert_eq!(stats.errors, 0, "shed load is not an error");
+        assert_eq!(stats.requests, 2);
+        handle.shutdown();
     }
 }

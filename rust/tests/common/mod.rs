@@ -1,0 +1,30 @@
+//! Shared helpers for the integration-test binaries.
+
+use std::sync::mpsc;
+use std::time::Duration;
+
+/// Run `f` on a helper thread and panic if it has not finished within
+/// `secs`. A timed-out test leaks its helper thread (the process is
+/// about to die anyway) — the point is that CI fails fast with the
+/// test's name instead of hanging for hours on a wedged socket. A
+/// panicking test body is *not* a timeout: its sender drops on unwind
+/// (`Disconnected`), and the original panic is re-raised unchanged.
+pub fn with_timeout(secs: u64, f: impl FnOnce() + Send + 'static) {
+    let (tx, rx) = mpsc::channel();
+    let runner = std::thread::spawn(move || {
+        f();
+        let _ = tx.send(());
+    });
+    match rx.recv_timeout(Duration::from_secs(secs)) {
+        Err(mpsc::RecvTimeoutError::Timeout) => {
+            panic!("test timed out after {secs}s (server wedged?)")
+        }
+        // Ok = clean finish; Disconnected = the body panicked — join and
+        // propagate the real panic payload instead of mislabeling it
+        Ok(()) | Err(mpsc::RecvTimeoutError::Disconnected) => {
+            if let Err(payload) = runner.join() {
+                std::panic::resume_unwind(payload);
+            }
+        }
+    }
+}

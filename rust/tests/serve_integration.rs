@@ -1,6 +1,12 @@
 //! End-to-end tests of the serving tier: train → save → load → serve →
 //! concurrent TCP traffic, checked against the direct in-process predict
 //! path (ISSUE 1 acceptance criteria).
+//!
+//! Every test body runs under [`common::with_timeout`]: a wedged server
+//! fails the suite in seconds instead of hanging CI until the job
+//! timeout.
+
+mod common;
 
 use bless::bless::{bless, BlessConfig};
 use bless::data::susy_like;
@@ -9,6 +15,7 @@ use bless::kernels::{Gaussian, NativeEngine};
 use bless::linalg::Matrix;
 use bless::rng::Rng;
 use bless::serve::{self, Client, ModelArtifact, Predictor, ServeConfig};
+use common::with_timeout;
 use std::sync::Arc;
 use std::time::Duration;
 
@@ -36,8 +43,8 @@ fn trained_artifact() -> (ModelArtifact, Matrix) {
     (art, test.x)
 }
 
-fn tmp_path(tag: &str) -> std::path::PathBuf {
-    std::env::temp_dir().join(format!("bless-serve-it-{}-{tag}.json", std::process::id()))
+fn tmp_path(tag: &str, ext: &str) -> std::path::PathBuf {
+    std::env::temp_dir().join(format!("bless-serve-it-{}-{tag}.{ext}", std::process::id()))
 }
 
 /// The headline test: `train --save` → `serve` in-process, 8 concurrent
@@ -45,129 +52,141 @@ fn tmp_path(tag: &str) -> std::path::PathBuf {
 /// the server stats show real coalescing (mean batch size > 1).
 #[test]
 fn concurrent_clients_match_direct_predictions_and_coalesce() {
-    let (art, queries) = trained_artifact();
+    with_timeout(120, || {
+        let (art, queries) = trained_artifact();
 
-    // persist + reload: the server must run off the loaded artifact
-    let path = tmp_path("e2e");
-    art.save(&path).unwrap();
-    let loaded = ModelArtifact::load(&path).unwrap();
-    std::fs::remove_file(&path).ok();
+        // persist + reload through the *binary* codec: the server must
+        // run off the loaded artifact
+        let path = tmp_path("e2e", "bin");
+        art.save(&path).unwrap();
+        let loaded = ModelArtifact::load(&path).unwrap();
+        std::fs::remove_file(&path).ok();
 
-    let reference = Predictor::new(&loaded);
-    let expected = Arc::new(reference.predict_batch(&queries).unwrap());
-    let queries = Arc::new(queries);
+        let reference = Predictor::new(&loaded);
+        let expected = Arc::new(reference.predict_batch(&queries).unwrap());
+        let queries = Arc::new(queries);
 
-    let cfg = ServeConfig {
-        addr: "127.0.0.1:0".to_string(),
-        workers: 2,
-        max_batch: 16,
-        linger: Duration::from_millis(5),
-        cache_capacity: 0, // cache off: every request exercises the GEMM path
-        cache_quant: 1e-9,
-    };
-    let handle = serve::start(loaded, &cfg).unwrap();
-    let addr = handle.addr();
+        let cfg = ServeConfig {
+            addr: "127.0.0.1:0".to_string(),
+            workers: 2,
+            max_batch: 16,
+            linger: Duration::from_millis(5),
+            cache_capacity: 0, // cache off: every request exercises the GEMM path
+            cache_quant: 1e-9,
+            max_queue: 0, // unbounded: this test is about coalescing, not shedding
+        };
+        let handle = serve::start(loaded, &cfg).unwrap();
+        let addr = handle.addr();
 
-    const CLIENTS: usize = 8;
-    const PER_CLIENT: usize = 25;
-    let mut joins = Vec::new();
-    for c in 0..CLIENTS {
-        let queries = Arc::clone(&queries);
-        let expected = Arc::clone(&expected);
-        joins.push(std::thread::spawn(move || {
-            let mut client = Client::connect(addr).unwrap();
-            for k in 0..PER_CLIENT {
-                let row = (c * 31 + k * 7) % queries.rows();
-                let id = (c * PER_CLIENT + k) as u64;
-                let (y, _cached) = client.predict(id, queries.row(row)).unwrap();
-                let want = expected[row];
-                assert!(
-                    (y - want).abs() <= 1e-10,
-                    "client {c} req {k}: served {y} vs direct {want}"
-                );
-            }
-        }));
-    }
-    for j in joins {
-        j.join().unwrap();
-    }
+        const CLIENTS: usize = 8;
+        const PER_CLIENT: usize = 25;
+        let mut joins = Vec::new();
+        for c in 0..CLIENTS {
+            let queries = Arc::clone(&queries);
+            let expected = Arc::clone(&expected);
+            joins.push(std::thread::spawn(move || {
+                let mut client = Client::connect(addr).unwrap();
+                for k in 0..PER_CLIENT {
+                    let row = (c * 31 + k * 7) % queries.rows();
+                    let id = (c * PER_CLIENT + k) as u64;
+                    let (y, _cached) = client.predict(id, queries.row(row)).unwrap();
+                    let want = expected[row];
+                    assert!(
+                        (y - want).abs() <= 1e-10,
+                        "client {c} req {k}: served {y} vs direct {want}"
+                    );
+                }
+            }));
+        }
+        for j in joins {
+            j.join().unwrap();
+        }
 
-    let stats = handle.stats();
-    assert_eq!(stats.requests, (CLIENTS * PER_CLIENT) as u64);
-    assert_eq!(stats.errors, 0);
-    assert_eq!(stats.batched, stats.requests, "every request must flow through a batch");
-    assert!(
-        stats.mean_batch() > 1.0,
-        "requests were not coalesced: {} batches for {} requests (mean {:.2})",
-        stats.batches,
-        stats.requests,
-        stats.mean_batch()
-    );
+        let stats = handle.stats();
+        assert_eq!(stats.requests, (CLIENTS * PER_CLIENT) as u64);
+        assert_eq!(stats.errors, 0);
+        assert_eq!(stats.shed, 0);
+        assert_eq!(stats.batched, stats.requests, "every request must flow through a batch");
+        assert!(
+            stats.mean_batch() > 1.0,
+            "requests were not coalesced: {} batches for {} requests (mean {:.2})",
+            stats.batches,
+            stats.requests,
+            stats.mean_batch()
+        );
 
-    // the wire-level stats agree with the in-process counters
-    let mut client = Client::connect(addr).unwrap();
-    let wire = client.stats().unwrap();
-    assert_eq!(wire.requests, stats.requests);
-    assert_eq!(wire.batches, stats.batches);
-    drop(client);
-    handle.shutdown();
+        // the wire-level stats agree with the in-process counters
+        let mut client = Client::connect(addr).unwrap();
+        let wire = client.stats().unwrap();
+        assert_eq!(wire.requests, stats.requests);
+        assert_eq!(wire.batches, stats.batches);
+        drop(client);
+        handle.shutdown();
+    });
 }
 
 /// Repeated-query traffic is served from the LRU cache and flagged so.
 #[test]
 fn repeated_queries_hit_cache_over_the_wire() {
-    let (art, queries) = trained_artifact();
-    let cfg = ServeConfig {
-        addr: "127.0.0.1:0".to_string(),
-        workers: 1,
-        max_batch: 8,
-        linger: Duration::from_millis(1),
-        cache_capacity: 64,
-        cache_quant: 1e-9,
-    };
-    let handle = serve::start(art, &cfg).unwrap();
-    let mut client = Client::connect(handle.addr()).unwrap();
+    with_timeout(120, || {
+        let (art, queries) = trained_artifact();
+        let cfg = ServeConfig {
+            addr: "127.0.0.1:0".to_string(),
+            workers: 1,
+            max_batch: 8,
+            linger: Duration::from_millis(1),
+            cache_capacity: 64,
+            cache_quant: 1e-9,
+            max_queue: 0,
+        };
+        let handle = serve::start(art, &cfg).unwrap();
+        let mut client = Client::connect(handle.addr()).unwrap();
 
-    let q = queries.row(3);
-    let (y1, c1) = client.predict(1, q).unwrap();
-    let (y2, c2) = client.predict(2, q).unwrap();
-    assert!(!c1, "first query cannot be a cache hit");
-    assert!(c2, "identical repeat should be a cache hit");
-    assert_eq!(y1.to_bits(), y2.to_bits());
-    assert_eq!(handle.stats().cache_hits, 1);
-    handle.shutdown();
+        let q = queries.row(3);
+        let (y1, c1) = client.predict(1, q).unwrap();
+        let (y2, c2) = client.predict(2, q).unwrap();
+        assert!(!c1, "first query cannot be a cache hit");
+        assert!(c2, "identical repeat should be a cache hit");
+        assert_eq!(y1.to_bits(), y2.to_bits());
+        assert_eq!(handle.stats().cache_hits, 1);
+        handle.shutdown();
+    });
 }
 
 /// A client asking for the wrong dimensionality gets an error response
 /// (not a hang, not a panic), and valid traffic continues afterwards.
 #[test]
 fn dimension_mismatch_is_rejected_per_request() {
-    let (art, queries) = trained_artifact();
-    let d = art.d();
-    let handle = serve::start(
-        art,
-        &ServeConfig { addr: "127.0.0.1:0".to_string(), ..ServeConfig::default() },
-    )
-    .unwrap();
-    let mut client = Client::connect(handle.addr()).unwrap();
-    assert!(client.predict(1, &vec![0.0; d + 1]).is_err());
-    client.predict(2, queries.row(0)).unwrap(); // connection survives
-    assert_eq!(handle.stats().errors, 1);
-    handle.shutdown();
+    with_timeout(120, || {
+        let (art, queries) = trained_artifact();
+        let d = art.d();
+        let handle = serve::start(
+            art,
+            &ServeConfig { addr: "127.0.0.1:0".to_string(), ..ServeConfig::default() },
+        )
+        .unwrap();
+        let mut client = Client::connect(handle.addr()).unwrap();
+        assert!(client.predict(1, &vec![0.0; d + 1]).is_err());
+        client.predict(2, queries.row(0)).unwrap(); // connection survives
+        assert_eq!(handle.stats().errors, 1);
+        handle.shutdown();
+    });
 }
 
 /// `{"op":"shutdown"}` over the wire stops the server: `join` returns
 /// and the queue refuses new work.
 #[test]
 fn wire_shutdown_stops_the_server() {
-    let (art, _) = trained_artifact();
-    let handle = serve::start(
-        art,
-        &ServeConfig { addr: "127.0.0.1:0".to_string(), ..ServeConfig::default() },
-    )
-    .unwrap();
-    let mut client = Client::connect(handle.addr()).unwrap();
-    client.shutdown().unwrap();
-    assert!(handle.is_shut_down());
-    handle.join();
+    with_timeout(120, || {
+        let (art, _) = trained_artifact();
+        let handle = serve::start(
+            art,
+            &ServeConfig { addr: "127.0.0.1:0".to_string(), ..ServeConfig::default() },
+        )
+        .unwrap();
+        let mut client = Client::connect(handle.addr()).unwrap();
+        client.shutdown().unwrap();
+        assert!(handle.is_shut_down());
+        handle.join();
+    });
 }
