@@ -5,10 +5,15 @@ use bless::coordinator::{build_engine, fig45_falkon, EngineKind, Fig45Config};
 use bless::data::higgs_like;
 use bless::kernels::Gaussian;
 use bless::rng::Rng;
+use bless::util::cli::Args;
+use bless::util::pool;
 
 fn main() {
+    let args = Args::parse();
+    pool::set_threads(args.get_usize("threads", 0));
+    println!("threads: {}", pool::threads());
     let mut rng = Rng::seeded(0);
-    let ds = higgs_like(6_000, &mut rng);
+    let ds = higgs_like(args.get_usize("n", 6_000), &mut rng);
     let (train, test) = ds.split(0.25, &mut rng);
     let eng = build_engine(EngineKind::Native, train.x.clone(), Gaussian::new(5.0)).unwrap();
     let cfg = Fig45Config { iterations: 15, ..Fig45Config::higgs() };

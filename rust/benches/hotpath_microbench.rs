@@ -1,6 +1,18 @@
 //! Hot-path microbenchmarks for the perf pass (EXPERIMENTS.md §Perf):
 //! GEMM, Cholesky, kernel-block evaluation (native + XLA tile), the
-//! LsGenerator batch scoring, and the FALKON fused CG matvec.
+//! LsGenerator batch scoring, and the FALKON fused CG matvec — plus a
+//! serial-vs-parallel scaling section for the shared threadpool.
+//!
+//! ```bash
+//! cargo bench --bench hotpath_microbench                   # all cores
+//! cargo bench --bench hotpath_microbench -- --threads 4
+//! cargo bench --bench hotpath_microbench -- \
+//!     --out ../BENCH_parallel.json     # emit the repo-root BENCH schema
+//! ```
+//!
+//! With `--out`, writes `BENCH_parallel.json` (flat object of named
+//! metrics: 1-thread vs N-thread GEMM and kernel-block GFLOP/s and the
+//! speedups) so CI can track the parallel core's trajectory.
 
 use bless::data::susy_like;
 use bless::kernels::{Gaussian, KernelEngine, NativeEngine};
@@ -8,8 +20,15 @@ use bless::leverage::{LsGenerator, WeightedSet};
 use bless::linalg::{cholesky, gemm, Matrix};
 use bless::rng::Rng;
 use bless::util::bench::Bencher;
+use bless::util::cli::Args;
+use bless::util::json::Json;
+use bless::util::pool;
+use std::collections::BTreeMap;
 
 fn main() {
+    let args = Args::parse();
+    pool::set_threads(args.get_usize("threads", 0));
+    let nthreads = pool::threads();
     let mut b = Bencher::with_budget(3.0);
 
     // --- GEMM (the engine's inner loop shape: tall × small-d and square)
@@ -56,5 +75,70 @@ fn main() {
     let v: Vec<f64> = (0..256).map(|i| ((i as f64) * 0.1).sin()).collect();
     b.bench("knm_t_knm_matvec n=4096 M=256", || eng.knm_t_knm_matvec(&centers, &v));
 
+    // --- serial vs parallel scaling (the shared threadpool)
+    println!("\n-- threadpool scaling: 1 vs {nthreads} threads --");
+    pool::set_threads(1);
+    let gemm_s = b.bench("gemm 512x512x512 (1 thread)", || gemm(&a512, &b512)).clone();
+    let kblk_s =
+        b.bench("native kernel block 1024x512 (1 thread)", || eng.block(&rows, &cols)).clone();
+    let reference = gemm(&a512, &b512);
+    let ref_block = eng.block(&rows, &cols);
+    pool::set_threads(nthreads);
+    let gemm_p = b
+        .bench(&format!("gemm 512x512x512 ({nthreads} threads)"), || gemm(&a512, &b512))
+        .clone();
+    let kblk_p = b
+        .bench(&format!("native kernel block 1024x512 ({nthreads} threads)"), || {
+            eng.block(&rows, &cols)
+        })
+        .clone();
+    // determinism spot-check: the parallel results must be bit-identical
+    let par = gemm(&a512, &b512);
+    for (x, y) in reference.as_slice().iter().zip(par.as_slice()) {
+        assert_eq!(x.to_bits(), y.to_bits(), "parallel gemm diverged from serial");
+    }
+    let par_block = eng.block(&rows, &cols);
+    for (x, y) in ref_block.as_slice().iter().zip(par_block.as_slice()) {
+        assert_eq!(x.to_bits(), y.to_bits(), "parallel kernel block diverged from serial");
+    }
+
+    // GFLOP/s: gemm = 2·m·n·k; kernel block ≈ cross-term gemm (2·r·c·d)
+    // plus the norm/exp pass (~3 flops/cell; the exp itself is counted
+    // as one).
+    let gemm_flops = 2.0 * 512.0 * 512.0 * 512.0;
+    let kblk_flops = (1024 * 512) as f64 * (2.0 * 18.0 + 3.0);
+    let gemm_gfs_serial = gemm_flops / gemm_s.median_s / 1e9;
+    let gemm_gfs_par = gemm_flops / gemm_p.median_s / 1e9;
+    let kblk_gfs_serial = kblk_flops / kblk_s.median_s / 1e9;
+    let kblk_gfs_par = kblk_flops / kblk_p.median_s / 1e9;
+    println!(
+        "gemm 512³      : {gemm_gfs_serial:.2} → {gemm_gfs_par:.2} GFLOP/s  \
+         ({:.2}× on {nthreads} threads)",
+        gemm_s.median_s / gemm_p.median_s
+    );
+    println!(
+        "kernel block   : {kblk_gfs_serial:.2} → {kblk_gfs_par:.2} GFLOP/s  \
+         ({:.2}× on {nthreads} threads)",
+        kblk_s.median_s / kblk_p.median_s
+    );
+
     b.summary("hot-path microbenchmarks");
+
+    // --- BENCH_*.json (repo-root schema: flat object of named metrics)
+    if let Some(out) = args.get("out") {
+        let mut obj = BTreeMap::new();
+        let mut put = |k: &str, v: f64| {
+            obj.insert(k.to_string(), Json::Num(v));
+        };
+        put("threads", nthreads as f64);
+        put("gemm_gflops_serial", gemm_gfs_serial);
+        put("gemm_gflops_parallel", gemm_gfs_par);
+        put("gemm_speedup", gemm_s.median_s / gemm_p.median_s);
+        put("kblock_gflops_serial", kblk_gfs_serial);
+        put("kblock_gflops_parallel", kblk_gfs_par);
+        put("kblock_speedup", kblk_s.median_s / kblk_p.median_s);
+        obj.insert("bench".to_string(), Json::Str("parallel".to_string()));
+        std::fs::write(out, Json::Obj(obj).to_string()).expect("writing BENCH json");
+        println!("wrote {out}");
+    }
 }

@@ -2,7 +2,10 @@
 //! exact RLS sampling, Two-Pass sampling [6], Recursive-RLS [9] and
 //! SQUEAK [8]. All return the same [`WeightedSet`] shape as BLESS so the
 //! downstream consumers (Figure-1 accuracy harness, FALKON) are agnostic
-//! to the sampler.
+//! to the sampler. Their kernel-column block products go through the same
+//! parallel [`crate::leverage::LsGenerator`] scoring path as BLESS, so
+//! every baseline shares the [`crate::util::pool`] speedup — the Table-1
+//! timing comparison stays apples-to-apples at any thread count.
 
 mod rrls;
 mod squeak;

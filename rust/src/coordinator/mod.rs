@@ -2,6 +2,11 @@
 //! figure of the paper's evaluation section (see DESIGN.md §4 for the
 //! experiment index). Each submodule returns [`crate::util::table::Table`]s
 //! so the CLI, the examples and the benches share one implementation.
+//!
+//! All experiments inherit the process-wide thread policy
+//! ([`crate::util::pool`], CLI `--threads`): timings scale with cores
+//! while every reported number stays bit-identical to the serial run, so
+//! figures regenerated on different machines remain comparable.
 
 mod engines;
 mod fig1;

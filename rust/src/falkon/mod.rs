@@ -13,6 +13,11 @@
 //!
 //! FALKON-BLESS = `Falkon::fit` with centers/weights from
 //! [`crate::bless::bless`]; FALKON-UNI = the same with uniform centers.
+//!
+//! The hot paths — the `K_MM` block behind the preconditioner and the
+//! per-tile kernel blocks + matvecs of every CG iteration — run
+//! data-parallel on the shared [`crate::util::pool`] with bit-identical
+//! results at any `--threads` setting.
 
 mod cg;
 mod precond;

@@ -2,6 +2,7 @@
 
 use super::Gaussian;
 use crate::linalg::{self, Matrix};
+use crate::util::pool;
 
 /// Row-tile size for streaming matvecs (`K_nM` is never materialized).
 pub const DEFAULT_ROW_TILE: usize = 1024;
@@ -130,20 +131,41 @@ impl NativeEngine {
     }
 
     /// Kernel block between two explicit point sets with precomputed
-    /// squared norms.
+    /// squared norms. The cross-term GEMM is parallel inside
+    /// [`linalg::gemm`]; the exp pass below is parallelized over
+    /// fixed-size row blocks (elementwise, hence bit-identical to the
+    /// serial sweep at any thread count).
     fn block_impl(&self, a: &Matrix, a_sq: &[f64], b: &Matrix, b_sq: &[f64]) -> Matrix {
+        /// Row-block height of the parallel exp pass.
+        const EXP_RB: usize = 64;
+        /// Minimum block cells before the exp pass dispatches.
+        const PAR_MIN_EXP: usize = 1 << 14;
         // cross = A · Bᵀ, evaluated as gemm against the transposed gather
         let mut k = linalg::gemm(a, &b.transpose());
-        let kd = k.as_mut_slice();
         let cols = b_sq.len();
-        for (i, &ai) in a_sq.iter().enumerate() {
-            let row = &mut kd[i * cols..(i + 1) * cols];
-            for (v, &bj) in row.iter_mut().zip(b_sq.iter()) {
-                let d2 = ai + bj - 2.0 * *v;
-                *v = self.kernel.from_sq_dist(d2);
-            }
+        if cols == 0 || a_sq.is_empty() {
+            return k;
         }
+        let kd = k.as_mut_slice();
+        let parallel = a_sq.len() * cols >= PAR_MIN_EXP;
+        pool::par_chunks_mut_gated(kd, EXP_RB * cols, parallel, |blk, chunk| {
+            exp_pass(&self.kernel, a_sq, b_sq, blk * EXP_RB, chunk);
+        });
         k
+    }
+}
+
+/// Turn a chunk of cross-term rows (starting at global row `r0`) into
+/// kernel values in place: `v ← k(‖a_i‖² + ‖b_j‖² − 2·v)`. Elementwise,
+/// so any row partition yields bit-identical results.
+fn exp_pass(kernel: &Gaussian, a_sq: &[f64], b_sq: &[f64], r0: usize, chunk: &mut [f64]) {
+    let cols = b_sq.len();
+    for (local, row) in chunk.chunks_mut(cols).enumerate() {
+        let ai = a_sq[r0 + local];
+        for (v, &bj) in row.iter_mut().zip(b_sq.iter()) {
+            let d2 = ai + bj - 2.0 * *v;
+            *v = kernel.from_sq_dist(d2);
+        }
     }
 }
 

@@ -1,6 +1,10 @@
 //! Ridge leverage scores: exact computation (Eq. 1), the subset-based
 //! estimator `ℓ̃_J` (Eq. 3) with its weight matrix `A`, and the R-ACC
 //! accuracy statistics used by the paper's Figure 1.
+//!
+//! [`LsGenerator`] batch scoring — the `K_{J,U}` block evaluation and the
+//! `L⁻¹ K_{J,U}` triangular solve — is the inner loop of every sampler;
+//! both pieces run data-parallel on the shared [`crate::util::pool`].
 
 mod estimator;
 mod exact;

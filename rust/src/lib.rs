@@ -15,6 +15,14 @@
 //!   side loads the AOT artifacts through [`runtime`] (PJRT CPU client)
 //!   and never touches python at run time.
 //!
+//! Underneath both stacks sits the **parallel compute core**
+//! ([`util::pool`]): one process-wide threadpool (CLI `--threads`,
+//! default all cores) that GEMM, Gaussian kernel blocks, triangular
+//! solves — and through them BLESS, the baselines, FALKON and the
+//! serving batches — dispatch onto. Work is split into fixed blocks
+//! whose boundaries never depend on the thread count, so every result
+//! is bit-identical to the single-threaded path.
+//!
 //! On top of the training stack sits the **serving tier** ([`serve`]):
 //! a fitted model is packaged into a self-contained, checksummed
 //! artifact (kernel config + center rows + `α` — no training data

@@ -4,13 +4,23 @@
 //! streams a row of `B` into a row of `C` with a scalar multiplier, which
 //! auto-vectorizes well and keeps all accesses sequential. Outer blocking
 //! on the `p` (inner) dimension keeps the active slab of `B` in cache.
+//!
+//! All heavy routines here are parallelized over **fixed-size output
+//! blocks** through [`crate::util::pool`]: block boundaries depend only
+//! on the problem shape (never on the thread count) and every block runs
+//! the identical floating-point sequence the serial code would, so the
+//! parallel result is bit-identical to the 1-thread path. Small problems
+//! stay on an inline serial path to avoid dispatch overhead.
 
 use super::Matrix;
+use crate::util::pool;
 
 /// Inner-dimension block size (tuned in the perf pass, see EXPERIMENTS.md §Perf).
 const KC: usize = 256;
-/// Row block size.
+/// Row block size — also the unit of parallel work distribution.
 const MC: usize = 64;
+/// Below this many multiply-adds a dispatch is not worth its overhead.
+const PAR_MIN_WORK: usize = 1 << 15;
 
 /// `C = A * B` for row-major matrices.
 pub fn gemm(a: &Matrix, b: &Matrix) -> Matrix {
@@ -21,113 +31,160 @@ pub fn gemm(a: &Matrix, b: &Matrix) -> Matrix {
 }
 
 /// `C += A * B`, writing into an existing buffer (no allocation).
+///
+/// Parallelized over `MC`-row blocks of `C`; each worker runs the full
+/// `p`-panel loop for its rows, so per-element accumulation order — and
+/// with it the bit pattern of the result — matches the serial code.
 pub fn gemm_into(a: &Matrix, b: &Matrix, c: &mut Matrix) {
     let (m, k, n) = (a.rows(), a.cols(), b.cols());
     assert_eq!(b.rows(), k);
     assert_eq!(c.rows(), m);
     assert_eq!(c.cols(), n);
+    if m == 0 || n == 0 {
+        return;
+    }
     let (ad, bd) = (a.as_slice(), b.as_slice());
     let cd = c.as_mut_slice();
+    let work = m.saturating_mul(k).saturating_mul(n);
+    pool::par_chunks_mut_gated(cd, MC * n, work >= PAR_MIN_WORK, |blk, chunk| {
+        gemm_row_block(ad, bd, chunk, blk * MC, k, n);
+    });
+}
+
+/// One `MC`-row block of `C += A * B`: rows `[i0, i0 + rows)` of `A`/`C`,
+/// with `chunk` holding exactly those rows of `C`. The 4×8 register
+/// micro-kernel keeps a 4-row × 8-col C tile in registers across the
+/// whole `p`-panel, so C is read/written once per panel instead of once
+/// per `p` (the k=d≈18 kernel cross-term shape was C-bandwidth-bound;
+/// §Perf).
+fn gemm_row_block(ad: &[f64], bd: &[f64], chunk: &mut [f64], i0: usize, k: usize, n: usize) {
+    let rows = chunk.len() / n;
     for pb in (0..k).step_by(KC) {
         let pe = (pb + KC).min(k);
-        for ib in (0..m).step_by(MC) {
-            let ie = (ib + MC).min(m);
-            // 4×8 register micro-kernel: a 4-row × 8-col C tile lives in
-            // registers across the whole p-panel, so C is read/written
-            // once per panel instead of once per p (the k=d≈18 kernel
-            // cross-term shape was C-bandwidth-bound; §Perf).
-            let mut i = ib;
-            while i + 4 <= ie {
-                let a0 = &ad[i * k..(i + 1) * k];
-                let a1 = &ad[(i + 1) * k..(i + 2) * k];
-                let a2 = &ad[(i + 2) * k..(i + 3) * k];
-                let a3 = &ad[(i + 3) * k..(i + 4) * k];
-                let mut j = 0;
-                while j + 8 <= n {
-                    let mut acc = [[0.0f64; 8]; 4];
-                    for p in pb..pe {
-                        let b8 = &bd[p * n + j..p * n + j + 8];
-                        let w = [a0[p], a1[p], a2[p], a3[p]];
-                        for (r, acc_r) in acc.iter_mut().enumerate() {
-                            let wr = w[r];
-                            for (c, av) in acc_r.iter_mut().enumerate() {
-                                *av += wr * b8[c];
-                            }
-                        }
-                    }
-                    for (r, acc_r) in acc.iter().enumerate() {
-                        let crow = &mut cd[(i + r) * n + j..(i + r) * n + j + 8];
-                        for (cv, av) in crow.iter_mut().zip(acc_r.iter()) {
-                            *cv += av;
-                        }
-                    }
-                    j += 8;
-                }
-                // column remainder
-                while j < n {
-                    let mut acc = [0.0f64; 4];
-                    for p in pb..pe {
-                        let bv = bd[p * n + j];
-                        acc[0] += a0[p] * bv;
-                        acc[1] += a1[p] * bv;
-                        acc[2] += a2[p] * bv;
-                        acc[3] += a3[p] * bv;
-                    }
-                    for (r, av) in acc.iter().enumerate() {
-                        cd[(i + r) * n + j] += av;
-                    }
-                    j += 1;
-                }
-                i += 4;
-            }
-            // remainder rows: plain row-streaming kernel
-            while i < ie {
-                let arow = &ad[i * k..(i + 1) * k];
-                let crow = &mut cd[i * n..(i + 1) * n];
+        let mut r = 0;
+        while r + 4 <= rows {
+            let i = i0 + r;
+            let a0 = &ad[i * k..(i + 1) * k];
+            let a1 = &ad[(i + 1) * k..(i + 2) * k];
+            let a2 = &ad[(i + 2) * k..(i + 3) * k];
+            let a3 = &ad[(i + 3) * k..(i + 4) * k];
+            let mut j = 0;
+            while j + 8 <= n {
+                let mut acc = [[0.0f64; 8]; 4];
                 for p in pb..pe {
-                    let aip = arow[p];
-                    if aip == 0.0 {
-                        continue;
-                    }
-                    let brow = &bd[p * n..(p + 1) * n];
-                    for (cv, bv) in crow.iter_mut().zip(brow.iter()) {
-                        *cv += aip * bv;
+                    let b8 = &bd[p * n + j..p * n + j + 8];
+                    let w = [a0[p], a1[p], a2[p], a3[p]];
+                    for (rr, acc_r) in acc.iter_mut().enumerate() {
+                        let wr = w[rr];
+                        for (c, bv) in acc_r.iter_mut().zip(b8.iter()) {
+                            *c += wr * bv;
+                        }
                     }
                 }
-                i += 1;
+                for (rr, acc_r) in acc.iter().enumerate() {
+                    let crow = &mut chunk[(r + rr) * n + j..(r + rr) * n + j + 8];
+                    for (cv, av) in crow.iter_mut().zip(acc_r.iter()) {
+                        *cv += av;
+                    }
+                }
+                j += 8;
             }
+            // column remainder
+            while j < n {
+                let mut acc = [0.0f64; 4];
+                for p in pb..pe {
+                    let bv = bd[p * n + j];
+                    acc[0] += a0[p] * bv;
+                    acc[1] += a1[p] * bv;
+                    acc[2] += a2[p] * bv;
+                    acc[3] += a3[p] * bv;
+                }
+                for (rr, av) in acc.iter().enumerate() {
+                    chunk[(r + rr) * n + j] += av;
+                }
+                j += 1;
+            }
+            r += 4;
+        }
+        // remainder rows: plain row-streaming kernel
+        while r < rows {
+            let arow = &ad[(i0 + r) * k..(i0 + r + 1) * k];
+            let crow = &mut chunk[r * n..(r + 1) * n];
+            for p in pb..pe {
+                let aip = arow[p];
+                if aip == 0.0 {
+                    continue;
+                }
+                let brow = &bd[p * n..(p + 1) * n];
+                for (cv, bv) in crow.iter_mut().zip(brow.iter()) {
+                    *cv += aip * bv;
+                }
+            }
+            r += 1;
         }
     }
 }
 
+/// Row block size for [`gemm_tn`]'s output (columns of `A`).
+const TN_RB: usize = 64;
+
 /// `C = Aᵀ * B` without materializing `Aᵀ` (A is k×m, B is k×n, C is m×n).
+///
+/// Parallelized over `TN_RB`-row blocks of `C`; within a block, panels of
+/// the shared dimension `p` stream rank-1 contributions in ascending `p`
+/// order — the same per-element order as the serial rank-1 formulation,
+/// so the result is bit-identical.
 pub fn gemm_tn(a: &Matrix, b: &Matrix) -> Matrix {
     assert_eq!(a.rows(), b.rows(), "gemm_tn dimension mismatch");
     let (k, m, n) = (a.rows(), a.cols(), b.cols());
     let mut c = Matrix::zeros(m, n);
+    if m == 0 || n == 0 {
+        return c;
+    }
     let (ad, bd) = (a.as_slice(), b.as_slice());
     let cd = c.as_mut_slice();
-    // Loop over the shared dimension p (rows of both A and B): rank-1
-    // updates C += a_p ⊗ b_p. Sequential access on all three matrices.
+    let work = m.saturating_mul(k).saturating_mul(n);
+    pool::par_chunks_mut_gated(cd, TN_RB * n, work >= PAR_MIN_WORK, |blk, chunk| {
+        gemm_tn_row_block(ad, bd, chunk, blk * TN_RB, k, m, n);
+    });
+    c
+}
+
+/// One `TN_RB`-row block of `C = Aᵀ B`: output rows `[i0, i0 + rows)`
+/// (= columns of `A`), with `chunk` holding exactly those rows of `C`.
+fn gemm_tn_row_block(
+    ad: &[f64],
+    bd: &[f64],
+    chunk: &mut [f64],
+    i0: usize,
+    k: usize,
+    m: usize,
+    n: usize,
+) {
+    let rows = chunk.len() / n;
     for pb in (0..k).step_by(KC) {
         let pe = (pb + KC).min(k);
         for p in pb..pe {
-            let arow = &ad[p * m..(p + 1) * m];
+            let aseg = &ad[p * m + i0..p * m + i0 + rows];
             let brow = &bd[p * n..(p + 1) * n];
-            for i in 0..m {
-                let aip = arow[i];
+            for (r, &aip) in aseg.iter().enumerate() {
                 if aip == 0.0 {
                     continue;
                 }
-                let crow = &mut cd[i * n..(i + 1) * n];
+                let crow = &mut chunk[r * n..(r + 1) * n];
                 for (cv, bv) in crow.iter_mut().zip(brow.iter()) {
                     *cv += aip * bv;
                 }
             }
         }
     }
-    c
 }
+
+/// Output block sizes for the parallel matvec paths.
+const MV_RB: usize = 128;
+const MT_CB: usize = 256;
+/// Minimum `rows × cols` before a matvec dispatches to the pool.
+const PAR_MIN_MV: usize = 1 << 16;
 
 /// `y = A * x`.
 pub fn matvec(a: &Matrix, x: &[f64]) -> Vec<f64> {
@@ -137,22 +194,50 @@ pub fn matvec(a: &Matrix, x: &[f64]) -> Vec<f64> {
     y
 }
 
-/// `y = A * x` into an existing buffer.
+/// `y = A * x` into an existing buffer. Rows of `y` are independent, so
+/// the parallel path chunks `y` and computes the identical per-row dot.
 pub fn matvec_into(a: &Matrix, x: &[f64], y: &mut [f64]) {
     assert_eq!(a.cols(), x.len());
     assert_eq!(a.rows(), y.len());
-    for i in 0..a.rows() {
-        y[i] = super::dot(a.row(i), x);
-    }
+    let (rows, cols) = (a.rows(), a.cols());
+    let ad = a.as_slice();
+    let parallel = rows.saturating_mul(cols) >= PAR_MIN_MV;
+    pool::par_chunks_mut_gated(y, MV_RB, parallel, |blk, ych| {
+        let i0 = blk * MV_RB;
+        for (r, yi) in ych.iter_mut().enumerate() {
+            let i = i0 + r;
+            *yi = super::dot(&ad[i * cols..(i + 1) * cols], x);
+        }
+    });
 }
 
 /// `y = Aᵀ * x` without materializing `Aᵀ`.
+///
+/// The serial path accumulates row `i`'s contribution into all of `y` in
+/// ascending `i` order; the parallel path chunks `y` by *columns* of `A`
+/// and accumulates the same ascending-`i` sequence per element, so both
+/// paths agree bitwise.
 pub fn matvec_t(a: &Matrix, x: &[f64]) -> Vec<f64> {
     assert_eq!(a.rows(), x.len());
-    let mut y = vec![0.0; a.cols()];
-    for i in 0..a.rows() {
-        super::axpy(x[i], a.row(i), &mut y);
+    let (rows, cols) = (a.rows(), a.cols());
+    let mut y = vec![0.0; cols];
+    if rows.saturating_mul(cols) < PAR_MIN_MV || cols <= MT_CB {
+        for (i, &xi) in x.iter().enumerate() {
+            super::axpy(xi, a.row(i), &mut y);
+        }
+        return y;
     }
+    let ad = a.as_slice();
+    pool::par_chunks_mut(&mut y, MT_CB, |blk, ych| {
+        let j0 = blk * MT_CB;
+        let w = ych.len();
+        for (i, &xi) in x.iter().enumerate() {
+            let aseg = &ad[i * cols + j0..i * cols + j0 + w];
+            for (yj, av) in ych.iter_mut().zip(aseg.iter()) {
+                *yj += xi * av;
+            }
+        }
+    });
     y
 }
 
@@ -184,9 +269,25 @@ mod tests {
     }
 
     #[test]
+    fn gemm_large_enough_to_dispatch_matches_naive() {
+        // above PAR_MIN_WORK and more than one MC row block, so this
+        // exercises the pool path (inline when the runner has one core)
+        let a = Matrix::from_fn(150, 70, |i, j| ((i * 5 + j * 11) % 13) as f64 * 0.25 - 1.0);
+        let b = Matrix::from_fn(70, 90, |i, j| ((i * 7 + j * 3) % 17) as f64 * 0.125 - 1.0);
+        let c = gemm(&a, &b);
+        assert!(c.max_abs_diff(&naive_gemm(&a, &b)) < 1e-9);
+    }
+
+    #[test]
     fn gemm_tn_matches_transpose_then_gemm() {
         let a = Matrix::from_fn(31, 17, |i, j| (i as f64 - j as f64) * 0.25);
         let b = Matrix::from_fn(31, 23, |i, j| ((i + j) % 7) as f64);
+        let c1 = gemm_tn(&a, &b);
+        let c2 = gemm(&a.transpose(), &b);
+        assert!(c1.max_abs_diff(&c2) < 1e-10);
+        // and a shape that crosses the TN_RB block boundary
+        let a = Matrix::from_fn(40, 150, |i, j| ((i * 3 + j) % 5) as f64 - 2.0);
+        let b = Matrix::from_fn(40, 60, |i, j| ((i + 2 * j) % 9) as f64 * 0.5);
         let c1 = gemm_tn(&a, &b);
         let c2 = gemm(&a.transpose(), &b);
         assert!(c1.max_abs_diff(&c2) < 1e-10);
@@ -207,6 +308,19 @@ mod tests {
         let t2 = matvec(&a.transpose(), &z);
         for (u, v) in t1.iter().zip(&t2) {
             assert!((u - v).abs() < 1e-10);
+        }
+    }
+
+    #[test]
+    fn matvec_t_parallel_shape_matches_transpose() {
+        // wide enough (cols > MT_CB, rows*cols > PAR_MIN_MV) to take the
+        // column-chunked path
+        let a = Matrix::from_fn(200, 400, |i, j| ((i * 13 + j * 7) % 23) as f64 * 0.1 - 1.0);
+        let x: Vec<f64> = (0..200).map(|i| ((i * i) as f64).sin()).collect();
+        let t1 = matvec_t(&a, &x);
+        let t2 = matvec(&a.transpose(), &x);
+        for (u, v) in t1.iter().zip(&t2) {
+            assert!((u - v).abs() < 1e-9);
         }
     }
 

@@ -5,9 +5,13 @@
 //! triangular solves, SPD solves — is implemented here from scratch in
 //! `f64` (the paper's experiments ran in double precision).
 //!
-//! Performance-critical routines ([`Matrix::matmul`], [`cholesky`]) are
-//! cache-blocked and register-blocked; see `EXPERIMENTS.md §Perf` for the
-//! measured iteration log.
+//! Performance-critical routines ([`gemm`], [`cholesky`],
+//! [`solve_lower_matrix`]) are cache-blocked and register-blocked; see
+//! `EXPERIMENTS.md §Perf` for the measured iteration log. GEMM, the
+//! matvecs and the matrix triangular solve additionally run data-parallel
+//! over fixed output blocks on the shared [`crate::util::pool`] —
+//! partitioning is independent of the thread count, so parallel results
+//! are bit-identical to the serial path.
 
 mod chol;
 mod gemm;

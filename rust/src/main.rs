@@ -33,6 +33,11 @@ use bless::util::table::fnum;
 
 fn main() -> anyhow::Result<()> {
     let args = Args::parse();
+    // One process, one thread policy: every compute kernel (GEMM, kernel
+    // blocks, triangular solves) dispatches through the shared pool.
+    // Default (0) = all available cores; results are bit-identical at
+    // any thread count.
+    bless::util::pool::set_threads(args.get_usize("threads", 0));
     let cmd = args.pos(0).unwrap_or("help").to_string();
     match cmd.as_str() {
         "fig1" => cmd_fig1(&args),
@@ -82,10 +87,14 @@ repro — BLESS (NeurIPS 2018) reproduction CLI
   (`falkon` is a deprecated alias for `train`; it used to re-run fig4)
 
 common flags:  --n --lambda --sigma --seed --reps --engine native|xla|auto
+               --threads N (compute threadpool width; default = all cores;
+               output is bit-identical at any N)
                --csv <path> (also save the result table as CSV)
 train flags:   --dataset susy|higgs --lambda-bless --lambda-falkon --iters --save
 serve flags:   --host --port --workers --max-batch --linger-us --cache
                --cache-quant --max-queue (0 = unbounded; default 1024)
+               --threads (shared compute pool for all models' batch GEMMs;
+               --workers controls batching concurrency per model)
 convert flags: --in <path> --out <path> [--format json|binary] (default: by
                --out extension)
 ";
@@ -178,7 +187,13 @@ fn cmd_fig45(args: &Args, higgs: bool) -> anyhow::Result<()> {
     cfg.lambda_falkon = args.get_f64("lambda-falkon", cfg.lambda_falkon);
     cfg.seed = seed;
     let eng = build_engine(engine_kind(args), train.x.clone(), Gaussian::new(cfg.sigma))?;
-    println!("engine backend: {} | train n={} test n={}", eng.label(), train.n(), test.n());
+    println!(
+        "engine backend: {} | threads {} | train n={} test n={}",
+        eng.label(),
+        bless::util::pool::threads(),
+        train.n(),
+        test.n()
+    );
     let (b, u, table) = fig45_falkon(eng.as_dyn(), &train.y, &test, &cfg)?;
     println!("{}", table.to_console());
     println!(
@@ -263,8 +278,9 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
     let (train, test) = ds.split(0.25, &mut rng);
     let eng = build_engine(engine_kind(args), train.x.clone(), Gaussian::new(sigma))?;
     println!(
-        "engine backend: {} | {} train n={} test n={} d={}",
+        "engine backend: {} | threads {} | {} train n={} test n={} d={}",
         eng.label(),
+        bless::util::pool::threads(),
         train.name,
         train.n(),
         test.n(),
@@ -385,6 +401,7 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
         cache_capacity: args.get_usize("cache", 1024),
         cache_quant: args.get_f64("cache-quant", 1e-9),
         max_queue: args.get_usize("max-queue", 1024),
+        threads: args.get_usize("threads", 0),
     };
     for spec in &specs {
         println!(
@@ -396,14 +413,16 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
         );
     }
     println!(
-        "serving {} model(s) on {} | workers={}/model max_batch={} linger={}µs cache={} max_queue={}",
+        "serving {} model(s) on {} | workers={}/model max_batch={} linger={}µs cache={} \
+         max_queue={} compute_threads={}",
         specs.len(),
         cfg.addr,
         cfg.workers,
         cfg.max_batch,
         cfg.linger.as_micros(),
         cfg.cache_capacity,
-        cfg.max_queue
+        cfg.max_queue,
+        bless::util::pool::threads()
     );
     let handle = bless::serve::start_registry(specs, &cfg)?;
     println!(

@@ -58,6 +58,21 @@ pub struct ServeConfig {
     /// request is shed with a structured `overloaded` error. 0 =
     /// unbounded (the PR-1 behaviour).
     pub max_queue: usize,
+    /// Width of the process-wide compute pool
+    /// ([`crate::util::pool`]) that every model's batch GEMMs run on —
+    /// one thread policy per process, shared with training if both run
+    /// in-process. `0` leaves the global setting untouched (default:
+    /// all available cores). `workers` controls per-model batching
+    /// concurrency; this controls per-batch compute parallelism.
+    ///
+    /// Two deliberate consequences of "one global policy": (1) a
+    /// non-zero value is applied with `set_threads` and **persists after
+    /// this server stops** — the pool has no per-server scope; (2)
+    /// concurrent dispatches from independent worker threads are not
+    /// coordinated, so keep `workers × threads` within the machine's
+    /// core budget when batches are large enough to dispatch (> 64
+    /// rows).
+    pub threads: usize,
 }
 
 impl Default for ServeConfig {
@@ -70,6 +85,7 @@ impl Default for ServeConfig {
             cache_capacity: 1024,
             cache_quant: 1e-9,
             max_queue: 1024,
+            threads: 0,
         }
     }
 }
@@ -180,6 +196,11 @@ pub fn start_registry(
     cfg: &ServeConfig,
 ) -> anyhow::Result<ServerHandle> {
     anyhow::ensure!(cfg.max_batch >= 1, "max_batch must be at least 1");
+    if cfg.threads > 0 {
+        // serve passes its compute budget to the shared pool so the
+        // whole process runs one thread policy
+        crate::util::pool::set_threads(cfg.threads);
+    }
     let registry = Registry::new(models, cfg.cache_capacity, cfg.cache_quant, cfg.max_queue)?;
     let listener = TcpListener::bind(&cfg.addr)
         .map_err(|e| anyhow::anyhow!("binding {}: {e}", cfg.addr))?;
@@ -712,6 +733,7 @@ mod tests {
             cache_capacity: 0,
             cache_quant: 1e-9,
             max_queue: 1,
+            threads: 0,
         };
         let handle = start(tiny_artifact(), &cfg).unwrap();
         let addr = handle.addr();

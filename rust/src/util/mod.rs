@@ -1,10 +1,14 @@
 //! Cross-cutting utilities: bench harness, CLI parsing, property testing,
-//! result tables. These replace `criterion`, `clap` and `proptest`, none of
-//! which exist in the offline crate registry.
+//! result tables, and the shared compute threadpool. The first four
+//! replace `criterion`, `clap` and `proptest` (none of which exist in
+//! the offline crate registry); [`pool`] is the process-wide thread
+//! policy every parallel kernel in [`crate::linalg`] and
+//! [`crate::kernels`] dispatches through.
 
 pub mod bench;
 pub mod cli;
 pub mod json;
+pub mod pool;
 pub mod prop;
 pub mod table;
 

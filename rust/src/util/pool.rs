@@ -1,0 +1,287 @@
+//! The shared compute threadpool: deterministic data-parallel loops for
+//! the GEMM / kernel-block / triangular-solve hot paths.
+//!
+//! Every training-side hot loop in this crate — blocked GEMM, Gaussian
+//! kernel-block evaluation, the `K_nM` column-block products inside
+//! BLESS/RRLS/SQUEAK, FALKON's preconditioner and CG iterations — is a
+//! loop over *independent blocks* that write disjoint slices of one
+//! output buffer. This module parallelizes exactly that shape and
+//! nothing else:
+//!
+//! * **One process, one thread policy.** The pool width is a single
+//!   process-global knob ([`set_threads`], read by [`threads`]), set
+//!   once by the CLI `--threads` flag (default: all available cores) or
+//!   by `serve`'s [`crate::serve::ServeConfig::threads`]. Library code
+//!   never spawns its own ad-hoc compute threads.
+//! * **Deterministic by construction.** Work is split into *fixed-size*
+//!   blocks whose boundaries depend only on the problem shape, never on
+//!   the thread count; each block performs the identical floating-point
+//!   sequence the serial code would, and blocks write disjoint output
+//!   ranges. Parallel results are therefore **bit-identical** to the
+//!   1-thread path (asserted by `tests/parallel_determinism.rs`).
+//! * **Work-stealing-free.** Workers pull the next block index from one
+//!   shared atomic counter — no per-worker deques, no stealing, no
+//!   re-ordering of anything observable.
+//! * **Scoped, not persistent.** [`par_for`] dispatches a crew of scoped
+//!   threads per call (`std::thread::scope`) rather than parking a
+//!   persistent pool: the blocked kernels it serves run for hundreds of
+//!   microseconds to seconds per call, so a scoped spawn (tens of µs) is
+//!   noise, and in exchange closures may borrow the stack freely (no
+//!   `'static` bound), worker panics propagate to the caller exactly
+//!   like serial panics, and there is no shutdown/teardown state to get
+//!   wrong.
+//! * **Nested-use safe.** A `par_for` issued from inside a pool worker
+//!   (e.g. a parallel GEMM called from a parallelized outer loop) runs
+//!   inline on that worker instead of spawning a second crew, so nesting
+//!   cannot oversubscribe or deadlock.
+//!
+//! Call sites choose between [`par_for`] (block indices; the caller
+//! handles disjointness, e.g. strided column blocks) and
+//! [`par_chunks_mut`] (contiguous chunks of a mutable slice; disjointness
+//! by construction).
+
+use std::cell::Cell;
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Configured pool width; 0 means "default to available parallelism".
+static CONFIGURED: AtomicUsize = AtomicUsize::new(0);
+
+thread_local! {
+    /// Set while the current thread is executing blocks for a `par_for`,
+    /// so nested dispatches run inline instead of spawning a new crew.
+    static IN_POOL: Cell<bool> = const { Cell::new(false) };
+}
+
+/// Number of hardware threads available to this process (≥ 1).
+pub fn available() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+/// Set the process-global pool width. `0` restores the default
+/// (= [`available`]). Takes effect for every subsequent [`par_for`];
+/// in-flight dispatches are unaffected.
+pub fn set_threads(n: usize) {
+    CONFIGURED.store(n, Ordering::SeqCst);
+}
+
+/// The current pool width (≥ 1): the value set by [`set_threads`], or
+/// [`available`] when unset.
+pub fn threads() -> usize {
+    match CONFIGURED.load(Ordering::SeqCst) {
+        0 => available(),
+        n => n,
+    }
+}
+
+/// Restores the thread-local nesting flag even if a block panics.
+struct NestGuard(bool);
+
+impl NestGuard {
+    fn enter() -> NestGuard {
+        NestGuard(IN_POOL.with(|c| c.replace(true)))
+    }
+}
+
+impl Drop for NestGuard {
+    fn drop(&mut self) {
+        let prev = self.0;
+        IN_POOL.with(|c| c.set(prev));
+    }
+}
+
+/// Run `f(block)` for every `block` in `0..blocks`, distributing blocks
+/// over the pool via a shared atomic counter.
+///
+/// `f` must treat distinct block indices as fully independent units that
+/// touch disjoint output state — that is what makes the parallel result
+/// bit-identical to running `for b in 0..blocks { f(b) }` serially.
+/// Runs inline (in ascending block order) when the pool width is 1,
+/// when there is a single block, or when called from inside another
+/// `par_for`. A panic in any block propagates to the caller; the pool
+/// is stateless, so later calls are unaffected.
+pub fn par_for(blocks: usize, f: impl Fn(usize) + Sync) {
+    if blocks == 0 {
+        return;
+    }
+    let crew = threads().min(blocks);
+    if crew <= 1 || IN_POOL.with(|c| c.get()) {
+        let _guard = NestGuard::enter();
+        for b in 0..blocks {
+            f(b);
+        }
+        return;
+    }
+    let next = AtomicUsize::new(0);
+    let fref = &f;
+    let nref = &next;
+    std::thread::scope(|s| {
+        for _ in 1..crew {
+            s.spawn(move || {
+                let _guard = NestGuard::enter();
+                loop {
+                    let b = nref.fetch_add(1, Ordering::Relaxed);
+                    if b >= blocks {
+                        break;
+                    }
+                    fref(b);
+                }
+            });
+        }
+        // the dispatching thread works too (crew of N = N-1 spawns)
+        let _guard = NestGuard::enter();
+        loop {
+            let b = next.fetch_add(1, Ordering::Relaxed);
+            if b >= blocks {
+                break;
+            }
+            f(b);
+        }
+    });
+}
+
+/// Raw-pointer wrapper so a `par_for` closure can hand disjoint regions
+/// of one buffer to different workers. The *user* of this type asserts
+/// disjointness; keep every use next to a SAFETY comment.
+pub(crate) struct SendPtr<T>(pub(crate) *mut T);
+
+unsafe impl<T> Send for SendPtr<T> {}
+unsafe impl<T> Sync for SendPtr<T> {}
+
+/// Run `f(chunk_index, chunk)` over consecutive `chunk_len`-sized pieces
+/// of `data` in parallel (the last chunk may be shorter). Chunk
+/// boundaries depend only on `data.len()` and `chunk_len`, so the
+/// partition — and with it the floating-point result — is independent of
+/// the thread count.
+pub fn par_chunks_mut<T: Send>(
+    data: &mut [T],
+    chunk_len: usize,
+    f: impl Fn(usize, &mut [T]) + Sync,
+) {
+    assert!(chunk_len > 0, "chunk_len must be positive");
+    let len = data.len();
+    if len == 0 {
+        return;
+    }
+    let blocks = len.div_ceil(chunk_len);
+    let base = SendPtr(data.as_mut_ptr());
+    par_for(blocks, |b| {
+        let s = b * chunk_len;
+        let e = (s + chunk_len).min(len);
+        // SAFETY: `[s, e)` ranges are pairwise disjoint across block
+        // indices and lie inside `data`, which is exclusively borrowed
+        // for the whole dispatch; each block touches only its own range.
+        let chunk = unsafe { std::slice::from_raw_parts_mut(base.0.add(s), e - s) };
+        f(b, chunk);
+    });
+}
+
+/// [`par_chunks_mut`] with an explicit dispatch gate: when `parallel` is
+/// `false` (e.g. the problem is below a call site's work threshold) the
+/// same chunks run inline on the calling thread in ascending order —
+/// identical partition, identical floating-point sequence, identical
+/// bits — without touching the pool. Keeping both branches behind one
+/// helper means a call site cannot accidentally give the serial and
+/// parallel paths different partitions.
+pub fn par_chunks_mut_gated<T: Send>(
+    data: &mut [T],
+    chunk_len: usize,
+    parallel: bool,
+    f: impl Fn(usize, &mut [T]) + Sync,
+) {
+    assert!(chunk_len > 0, "chunk_len must be positive");
+    if parallel {
+        par_chunks_mut(data, chunk_len, f);
+    } else {
+        for (b, chunk) in data.chunks_mut(chunk_len).enumerate() {
+            f(b, chunk);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicUsize;
+
+    #[test]
+    fn par_for_runs_every_block_exactly_once() {
+        let n = 97;
+        let counts: Vec<AtomicUsize> = (0..n).map(|_| AtomicUsize::new(0)).collect();
+        par_for(n, |b| {
+            counts[b].fetch_add(1, Ordering::SeqCst);
+        });
+        for (b, c) in counts.iter().enumerate() {
+            assert_eq!(c.load(Ordering::SeqCst), 1, "block {b} ran a wrong number of times");
+        }
+        // zero blocks is a no-op
+        par_for(0, |_| panic!("must not run"));
+    }
+
+    #[test]
+    fn par_chunks_mut_covers_the_slice_disjointly() {
+        let mut data = vec![usize::MAX; 1003];
+        par_chunks_mut(&mut data, 64, |blk, chunk| {
+            for v in chunk.iter_mut() {
+                *v = blk;
+            }
+        });
+        for (i, &v) in data.iter().enumerate() {
+            assert_eq!(v, i / 64, "element {i} written by the wrong chunk");
+        }
+    }
+
+    #[test]
+    fn gated_serial_and_parallel_paths_agree() {
+        let fill = |parallel: bool| {
+            let mut data = vec![0usize; 517];
+            par_chunks_mut_gated(&mut data, 32, parallel, |blk, chunk| {
+                for (i, v) in chunk.iter_mut().enumerate() {
+                    *v = blk * 1000 + i;
+                }
+            });
+            data
+        };
+        assert_eq!(fill(false), fill(true));
+    }
+
+    #[test]
+    fn nested_par_for_runs_inline_and_completes() {
+        let total = AtomicUsize::new(0);
+        par_for(4, |_| {
+            // nested dispatch: must not deadlock or oversubscribe
+            par_for(5, |_| {
+                total.fetch_add(1, Ordering::SeqCst);
+            });
+        });
+        assert_eq!(total.load(Ordering::SeqCst), 20);
+    }
+
+    #[test]
+    fn worker_panic_propagates_and_pool_stays_usable() {
+        let result = std::panic::catch_unwind(|| {
+            par_for(8, |b| {
+                if b == 5 {
+                    panic!("boom in block 5");
+                }
+            });
+        });
+        assert!(result.is_err(), "panic in a block must reach the caller");
+        // stateless: the next dispatch works normally
+        let ran = AtomicUsize::new(0);
+        par_for(6, |_| {
+            ran.fetch_add(1, Ordering::SeqCst);
+        });
+        assert_eq!(ran.load(Ordering::SeqCst), 6);
+    }
+
+    #[test]
+    fn thread_count_configuration_round_trips() {
+        let before = CONFIGURED.load(Ordering::SeqCst);
+        set_threads(3);
+        assert_eq!(threads(), 3);
+        set_threads(0);
+        assert_eq!(threads(), available());
+        assert!(threads() >= 1);
+        CONFIGURED.store(before, Ordering::SeqCst);
+    }
+}

@@ -1,0 +1,144 @@
+//! Determinism of the parallel compute core: every parallel kernel must
+//! produce **bit-identical** output to the 1-thread path, because the
+//! pool partitions work into fixed blocks whose boundaries and
+//! per-element floating-point order never depend on the thread count.
+//!
+//! Tests in this binary mutate the process-global pool width, so they
+//! serialize through one mutex.
+
+use bless::data::susy_like;
+use bless::falkon::Falkon;
+use bless::kernels::{Gaussian, KernelEngine, NativeEngine};
+use bless::leverage::WeightedSet;
+use bless::linalg::{self, Matrix};
+use bless::rng::Rng;
+use bless::util::pool;
+use std::sync::{Mutex, MutexGuard, OnceLock};
+
+/// Serialize tests that flip the global thread count.
+fn lock() -> MutexGuard<'static, ()> {
+    static GATE: OnceLock<Mutex<()>> = OnceLock::new();
+    GATE.get_or_init(|| Mutex::new(())).lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Run `f` at the given pool width, restoring the default afterwards.
+fn at_threads<T>(n: usize, f: impl FnOnce() -> T) -> T {
+    pool::set_threads(n);
+    let out = f();
+    pool::set_threads(0);
+    out
+}
+
+fn bits_of(v: &[f64]) -> Vec<u64> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+#[test]
+fn gemm_bit_identical_across_thread_counts() {
+    let _g = lock();
+    // full-mantissa values and sizes above every dispatch threshold
+    let a = Matrix::from_fn(200, 150, |i, j| ((i * 150 + j) as f64 * 0.618).sin() * 2.0);
+    let b = Matrix::from_fn(150, 130, |i, j| ((i * 130 + j) as f64 * 1.414).cos() * 0.5);
+    let serial = at_threads(1, || linalg::gemm(&a, &b));
+    for t in [2usize, 4, 8] {
+        let par = at_threads(t, || linalg::gemm(&a, &b));
+        assert_eq!(
+            bits_of(serial.as_slice()),
+            bits_of(par.as_slice()),
+            "gemm diverged at {t} threads"
+        );
+    }
+}
+
+#[test]
+fn gemm_tn_and_matvecs_bit_identical() {
+    let _g = lock();
+    let a = Matrix::from_fn(300, 280, |i, j| ((i * 280 + j) as f64 * 0.37).sin());
+    let b = Matrix::from_fn(300, 90, |i, j| ((i * 90 + j) as f64 * 0.73).cos());
+    let x: Vec<f64> = (0..280).map(|i| ((i * i) as f64 * 0.11).sin()).collect();
+    let u: Vec<f64> = (0..300).map(|i| (i as f64 * 0.29).cos()).collect();
+    let (tn1, mv1, mt1) = at_threads(1, || {
+        (linalg::gemm_tn(&a, &b), linalg::matvec(&a, &x), linalg::matvec_t(&a, &u))
+    });
+    for t in [2usize, 4] {
+        let (tnp, mvp, mtp) = at_threads(t, || {
+            (linalg::gemm_tn(&a, &b), linalg::matvec(&a, &x), linalg::matvec_t(&a, &u))
+        });
+        assert_eq!(bits_of(tn1.as_slice()), bits_of(tnp.as_slice()), "gemm_tn @ {t}");
+        assert_eq!(bits_of(&mv1), bits_of(&mvp), "matvec @ {t}");
+        assert_eq!(bits_of(&mt1), bits_of(&mtp), "matvec_t @ {t}");
+    }
+}
+
+#[test]
+fn solve_lower_matrix_bit_identical() {
+    let _g = lock();
+    // a well-conditioned lower-triangular factor and a wide RHS (wider
+    // than the parallel path's column block)
+    let n = 120;
+    let l = Matrix::from_fn(n, n, |i, j| {
+        if j > i {
+            0.0
+        } else if i == j {
+            2.0 + ((i * 7) % 5) as f64 * 0.25
+        } else {
+            (((i * 13 + j * 5) % 9) as f64 - 4.0) * 0.05
+        }
+    });
+    let b = Matrix::from_fn(n, 700, |i, j| ((i * 700 + j) as f64 * 0.21).sin());
+    let serial = at_threads(1, || linalg::solve_lower_matrix(&l, &b));
+    for t in [2usize, 4] {
+        let par = at_threads(t, || linalg::solve_lower_matrix(&l, &b));
+        assert_eq!(
+            bits_of(serial.as_slice()),
+            bits_of(par.as_slice()),
+            "solve_lower_matrix diverged at {t} threads"
+        );
+    }
+}
+
+#[test]
+fn kernel_block_and_fused_matvec_bit_identical() {
+    let _g = lock();
+    let ds = susy_like(600, &mut Rng::seeded(11));
+    let eng = NativeEngine::new(ds.x, Gaussian::new(3.0));
+    let rows: Vec<usize> = (0..500).collect();
+    let cols: Vec<usize> = (0..120).map(|i| i * 5).collect();
+    let v: Vec<f64> = (0..120).map(|i| ((i as f64) * 0.17).sin()).collect();
+    let (blk1, fused1) =
+        at_threads(1, || (eng.block(&rows, &cols), eng.knm_t_knm_matvec(&cols, &v)));
+    for t in [2usize, 4, 8] {
+        let (blkp, fusedp) =
+            at_threads(t, || (eng.block(&rows, &cols), eng.knm_t_knm_matvec(&cols, &v)));
+        assert_eq!(
+            bits_of(blk1.as_slice()),
+            bits_of(blkp.as_slice()),
+            "kernel block diverged at {t} threads"
+        );
+        assert_eq!(bits_of(&fused1), bits_of(&fusedp), "fused CG matvec @ {t}");
+    }
+}
+
+#[test]
+fn falkon_training_and_predictions_bit_identical() {
+    let _g = lock();
+    let mut rng = Rng::seeded(42);
+    let ds = susy_like(600, &mut rng);
+    let (train, test) = ds.split(0.25, &mut rng);
+    let centers = Rng::seeded(7).sample_without_replacement(train.n(), 80);
+    let lambda = 1e-3;
+    let set = WeightedSet::uniform(centers, lambda);
+
+    let fit_once = || {
+        let eng = NativeEngine::new(train.x.clone(), Gaussian::new(3.0));
+        let model = Falkon::new(&eng, &set, lambda).unwrap().fit(&train.y, 6, None).unwrap();
+        let preds = model.predict(&eng, &test.x);
+        (model.alpha, preds)
+    };
+    let (alpha1, preds1) = at_threads(1, fit_once);
+    for t in [2usize, 4] {
+        let (alphap, predsp) = at_threads(t, fit_once);
+        assert_eq!(bits_of(&alpha1), bits_of(&alphap), "FALKON α diverged at {t} threads");
+        assert_eq!(bits_of(&preds1), bits_of(&predsp), "predictions diverged at {t} threads");
+    }
+}

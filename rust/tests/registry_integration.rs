@@ -65,6 +65,7 @@ fn two_models_and_hot_reload_under_traffic_with_zero_failures() {
             cache_capacity: 0, // keep served-value provenance unambiguous
             cache_quant: 1e-9,
             max_queue: 0,
+            threads: 0,
         };
         let specs = vec![
             ModelSpec { name: "a".to_string(), artifact: a_v1, source: None },
@@ -162,6 +163,7 @@ fn queue_cap_sheds_one_model_without_touching_the_other() {
             cache_capacity: 0,
             cache_quant: 1e-9,
             max_queue: 1,
+            threads: 0,
         };
         let specs = vec![
             ModelSpec { name: "a".to_string(), artifact: artifact(5, 10, D, 1.0), source: None },

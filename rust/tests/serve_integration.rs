@@ -74,6 +74,7 @@ fn concurrent_clients_match_direct_predictions_and_coalesce() {
             cache_capacity: 0, // cache off: every request exercises the GEMM path
             cache_quant: 1e-9,
             max_queue: 0, // unbounded: this test is about coalescing, not shedding
+            threads: 0,
         };
         let handle = serve::start(loaded, &cfg).unwrap();
         let addr = handle.addr();
@@ -138,6 +139,7 @@ fn repeated_queries_hit_cache_over_the_wire() {
             cache_capacity: 64,
             cache_quant: 1e-9,
             max_queue: 0,
+            threads: 0,
         };
         let handle = serve::start(art, &cfg).unwrap();
         let mut client = Client::connect(handle.addr()).unwrap();
