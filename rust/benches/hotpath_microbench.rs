@@ -1,25 +1,35 @@
 //! Hot-path microbenchmarks for the perf pass (EXPERIMENTS.md §Perf):
-//! GEMM, Cholesky, kernel-block evaluation (native + XLA tile), the
+//! GEMM (including the transpose-free `gemm_nt` kernel cross-term),
+//! Cholesky, kernel-block evaluation (native + XLA tile), the
 //! LsGenerator batch scoring, and the FALKON fused CG matvec — plus a
-//! serial-vs-parallel scaling section for the shared threadpool.
+//! serial-vs-parallel scaling section for the shared threadpool and a
+//! CG-iteration-throughput section comparing streamed vs panel-cached
+//! FALKON training.
 //!
 //! ```bash
 //! cargo bench --bench hotpath_microbench                   # all cores
 //! cargo bench --bench hotpath_microbench -- --threads 4
 //! cargo bench --bench hotpath_microbench -- \
-//!     --out ../BENCH_parallel.json     # emit the repo-root BENCH schema
+//!     --out ../BENCH_parallel.json \
+//!     --falkon-out ../BENCH_falkon.json  # emit the repo-root schemas
 //! ```
 //!
 //! With `--out`, writes `BENCH_parallel.json` (flat object of named
 //! metrics: 1-thread vs N-thread GEMM and kernel-block GFLOP/s and the
-//! speedups) so CI can track the parallel core's trajectory.
+//! speedups). With `--falkon-out`, writes `BENCH_falkon.json` (FALKON
+//! train wall-clock + kernel-eval counts streamed vs cached, and
+//! `gemm_nt` vs gemm-plus-transpose GFLOP/s) so CI can track the panel
+//! cache's trajectory. `--falkon-n/--falkon-m/--falkon-iters` resize the
+//! training shape (default n=8000, M=800, t=10 — the SUSY-like shape of
+//! the ISSUE acceptance bar).
 
 use bless::data::susy_like;
+use bless::falkon::Falkon;
 use bless::kernels::{Gaussian, KernelEngine, NativeEngine};
 use bless::leverage::{LsGenerator, WeightedSet};
-use bless::linalg::{cholesky, gemm, Matrix};
+use bless::linalg::{cholesky, gemm, gemm_nt, Matrix};
 use bless::rng::Rng;
-use bless::util::bench::Bencher;
+use bless::util::bench::{black_box, Bencher};
 use bless::util::cli::Args;
 use bless::util::json::Json;
 use bless::util::pool;
@@ -38,6 +48,20 @@ fn main() {
     let tall = Matrix::from_fn(4_096, 18, |i, j| ((i + j) % 11) as f64 * 0.1);
     let wide = tall.transpose();
     b.bench("gemm 4096x18 · 18x4096 (kernel cross-term)", || gemm(&tall, &wide));
+
+    // --- transpose-free kernel cross-term: gemm_nt vs gemm + transpose
+    let cmat = Matrix::from_fn(512, 18, |i, j| ((i * 5 + j * 3) % 13) as f64 * 0.07);
+    let nt_t = b
+        .bench("gemm 4096x18 · (512x18)ᵀ (explicit transpose)", || {
+            gemm(&tall, &cmat.transpose())
+        })
+        .clone();
+    let nt_d =
+        b.bench("gemm_nt 4096x18 · 512x18 (transpose-free)", || gemm_nt(&tall, &cmat)).clone();
+    assert!(
+        gemm(&tall, &cmat.transpose()).max_abs_diff(&gemm_nt(&tall, &cmat)) < 1e-9,
+        "gemm_nt disagrees with gemm + transpose"
+    );
 
     // --- Cholesky (LsGenerator / preconditioner factorizations)
     let mut spd = gemm(&a512, &a512.transpose());
@@ -122,7 +146,73 @@ fn main() {
         kblk_s.median_s / kblk_p.median_s
     );
 
+    // --- FALKON CG-iteration throughput: streamed vs cached K_nM panel.
+    // Whole-train wall-clock (solver construction + t CG iterations), so
+    // the cached side pays for its one materialization sweep up front.
+    let fk_n = args.get_usize("falkon-n", 8_000);
+    let fk_m = args.get_usize("falkon-m", 800).min(fk_n);
+    let fk_iters = args.get_usize("falkon-iters", 10);
+    println!(
+        "\n-- FALKON CG throughput (n={fk_n}, M={fk_m}, t={fk_iters}): \
+         streamed vs panel-cached K_nM --"
+    );
+    let fk_ds = susy_like(fk_n, &mut Rng::seeded(5));
+    let fk_eng = NativeEngine::new(fk_ds.x.clone(), Gaussian::new(4.0));
+    let fk_centers = Rng::seeded(6).sample_without_replacement(fk_n, fk_m);
+    let fk_set = WeightedSet::uniform(fk_centers, 1e-5);
+    let train_at = |budget: usize| {
+        let t0 = std::time::Instant::now();
+        let solver = Falkon::with_budget(&fk_eng, &fk_set, 1e-5, budget).unwrap();
+        let model = solver.fit(&fk_ds.y, fk_iters, None).unwrap();
+        let secs = t0.elapsed().as_secs_f64();
+        black_box(model.alpha.len());
+        (secs, solver.panel().stats().entries_evaluated)
+    };
+    let (fk_streamed_s, fk_streamed_evals) = train_at(0);
+    let (fk_cached_s, fk_cached_evals) = train_at(usize::MAX);
+    let fk_speedup = fk_streamed_s / fk_cached_s;
+    println!(
+        "streamed (budget 0)  : {fk_streamed_s:8.2}s  ({fk_streamed_evals} kernel evals)"
+    );
+    println!(
+        "cached (unbounded)   : {fk_cached_s:8.2}s  ({fk_cached_evals} kernel evals)  \
+         {fk_speedup:.2}× faster"
+    );
+
     b.summary("hot-path microbenchmarks");
+
+    // GFLOP/s of the transpose-free cross-term vs gemm + transpose
+    let nt_flops = 2.0 * 4_096.0 * 512.0 * 18.0;
+    let nt_gfs_transpose = nt_flops / nt_t.median_s / 1e9;
+    let nt_gfs_direct = nt_flops / nt_d.median_s / 1e9;
+    println!(
+        "gemm_nt cross-term: {nt_gfs_transpose:.2} (via transpose) → {nt_gfs_direct:.2} \
+         GFLOP/s ({:.2}×, zero transpose allocations)",
+        nt_t.median_s / nt_d.median_s
+    );
+
+    // --- BENCH_falkon.json (repo-root schema: flat object of metrics)
+    if let Some(out) = args.get("falkon-out") {
+        let mut obj = BTreeMap::new();
+        let mut put = |k: &str, v: f64| {
+            obj.insert(k.to_string(), Json::Num(v));
+        };
+        put("threads", nthreads as f64);
+        put("falkon_n", fk_n as f64);
+        put("falkon_m", fk_m as f64);
+        put("falkon_iters", fk_iters as f64);
+        put("falkon_train_streamed_s", fk_streamed_s);
+        put("falkon_train_cached_s", fk_cached_s);
+        put("falkon_cached_speedup", fk_speedup);
+        put("kernel_evals_streamed", fk_streamed_evals as f64);
+        put("kernel_evals_cached", fk_cached_evals as f64);
+        put("gemm_nt_gflops", nt_gfs_direct);
+        put("gemm_transpose_gflops", nt_gfs_transpose);
+        put("gemm_nt_speedup", nt_t.median_s / nt_d.median_s);
+        obj.insert("bench".to_string(), Json::Str("falkon".to_string()));
+        std::fs::write(out, Json::Obj(obj).to_string()).expect("writing BENCH json");
+        println!("wrote {out}");
+    }
 
     // --- BENCH_*.json (repo-root schema: flat object of named metrics)
     if let Some(out) = args.get("out") {

@@ -5,7 +5,10 @@
 //! Eq.-3 convention stores `A_ii = p_i`, matching BLESS-R).
 //!
 //! Cost is dominated by the top level: `n` score evaluations against a
-//! dictionary of size `O(d_eff)` ⇒ `O(n·d_eff²)` (Table 1).
+//! dictionary of size `O(d_eff)` ⇒ `O(n·d_eff²)` (Table 1). That
+//! full-dataset sweep runs through [`LsGenerator::scores_all`] — the
+//! dictionary rows are gathered once per level (the cached-center path)
+//! and the `n` cross-kernel columns stream in row tiles.
 
 use super::SamplerOutput;
 use crate::kernels::KernelEngine;
@@ -60,9 +63,21 @@ fn recurse(
     let half = if half.is_empty() { vec![pool[0]] } else { half };
     let inner = recurse(engine, &half, lambda, cfg, rng, evals);
 
-    // score the whole pool against the inner dictionary
+    // score the whole pool against the inner dictionary; the top level
+    // (pool = the full dataset) takes the streamed full-sweep path.
+    // scores_all returns identity order, so the fast path is only valid
+    // for the ascending 0..n pool — which any full-length pool is today
+    // (halving is an order-preserving filter of 0..n), guarded below.
     let gen = LsGenerator::new(engine, &inner, lambda).expect("rrls generator must factor");
-    let scores = gen.scores(pool);
+    let scores = if pool.len() == engine.n() {
+        debug_assert!(
+            pool.iter().enumerate().all(|(k, &i)| k == i),
+            "full-length rrls pool must be the identity ordering"
+        );
+        gen.scores_all()
+    } else {
+        gen.scores(pool)
+    };
     *evals += pool.len();
 
     // Bernoulli keeps with p = min(q2·ℓ̃, 1); A_ii = p_i
@@ -110,9 +125,8 @@ mod tests {
         // top level scores all n points
         assert!(out.score_evals >= 400);
         let gen = LsGenerator::new(&eng, &out.set, lambda).unwrap();
-        let all: Vec<usize> = (0..400).collect();
         let stats =
-            RAccStats::from_scores(&gen.scores(&all), &exact_leverage_scores(&eng, lambda));
+            RAccStats::from_scores(&gen.scores_all(), &exact_leverage_scores(&eng, lambda));
         assert!(stats.mean > 0.5 && stats.mean < 2.0, "mean {}", stats.mean);
     }
 

@@ -1,5 +1,10 @@
 //! Algorithm 1 — **BLESS**: bottom-up leverage-score sampling *with*
 //! replacement (multinomial resampling of a uniform candidate pool).
+//!
+//! Per level the candidate scores run through one [`LsGenerator`], which
+//! gathers the dictionary rows `X[J_{h-1}]` once (the cached-center path
+//! of [`crate::kernels::Centers`]) and reuses them for the `K_JJ`
+//! factorization and the whole `K_{J,U_h}` score batch.
 
 use super::{lambda_path, BlessPath, LevelOutput};
 use crate::kernels::KernelEngine;
@@ -131,8 +136,7 @@ mod tests {
         let lambda = 5e-3;
         let out = bless(&eng, lambda, &BlessConfig::default(), &mut Rng::seeded(2));
         let gen = LsGenerator::new(&eng, out.final_set(), lambda).unwrap();
-        let all: Vec<usize> = (0..400).collect();
-        let approx = gen.scores(&all);
+        let approx = gen.scores_all();
         let exact = exact_leverage_scores(&eng, lambda);
         let stats = RAccStats::from_scores(&approx, &exact);
         assert!(

@@ -7,6 +7,10 @@
 //! where `p_{h,j} = min(q₂·ℓ̃_{J_{h-1}}(x_j, λ_{h-1}), 1)`, so that the
 //! unconditional acceptance probability is exactly `p_{h,j}` — leverage
 //! score sampling without ever touching most of the data.
+//!
+//! Like Algorithm 1, each level's survivor scores flow through one
+//! [`LsGenerator`] whose dictionary rows are gathered once per level
+//! (the [`crate::kernels::Centers`] cached-center path).
 
 use super::{lambda_path, BlessPath, LevelOutput};
 use crate::kernels::KernelEngine;
@@ -135,8 +139,7 @@ mod tests {
         let lambda = 5e-3;
         let out = bless_r(&eng, lambda, &BlessRConfig::default(), &mut Rng::seeded(2));
         let gen = LsGenerator::new(&eng, out.final_set(), lambda).unwrap();
-        let all: Vec<usize> = (0..400).collect();
-        let approx = gen.scores(&all);
+        let approx = gen.scores_all();
         let exact = exact_leverage_scores(&eng, lambda);
         let stats = RAccStats::from_scores(&approx, &exact);
         assert!(

@@ -53,7 +53,6 @@ impl Default for Fig1Config {
 /// (method, time, mean R-ACC, 5ᵗʰ/95ᵗʰ quantiles, |J|).
 pub fn fig1_accuracy(engine: &dyn KernelEngine, cfg: &Fig1Config) -> Table {
     let n = engine.n();
-    let all: Vec<usize> = (0..n).collect();
     // exact reference once (shared across methods and reps)
     let (exact, exact_secs) = timed(|| exact_leverage_scores(engine, cfg.lambda));
     let mut table = Table::new(
@@ -75,7 +74,7 @@ pub fn fig1_accuracy(engine: &dyn KernelEngine, cfg: &Fig1Config) -> Table {
             let ((set, _), secs) =
                 timed(|| run_method(m, engine, cfg.lambda, cfg.uniform_m, &mut rng));
             let gen = LsGenerator::new(engine, &set, cfg.lambda).expect("generator");
-            let approx = gen.scores(&all);
+            let approx = gen.scores_all();
             let stats = RAccStats::from_scores(&approx, &exact);
             times.push(secs);
             means.push(stats.mean);

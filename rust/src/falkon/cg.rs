@@ -13,12 +13,18 @@ pub struct CgTrace {
 /// Callback invoked after each CG iteration with `(iter, current β)`.
 pub type CgCallback<'a> = dyn FnMut(usize, &[f64]) + 'a;
 
-/// Solve `W β = b` by CG, where `matvec` applies the SPD operator `W`.
+/// Solve `W β = b` by CG, where `matvec` applies the SPD operator `W`,
+/// writing `W·p` into the provided output buffer.
+///
+/// The buffer-passing operator shape lets the solver hold **one** scratch
+/// vector for the whole run instead of allocating a fresh `W·p` every
+/// iteration (together with the iterate/residual/direction vectors, all
+/// CG state is allocated once up front and reused across iterations).
 ///
 /// Runs exactly `max_iter` iterations unless the relative residual drops
 /// below `tol` first. Returns `(β, trace)`.
 pub fn cg_solve(
-    mut matvec: impl FnMut(&[f64]) -> Vec<f64>,
+    mut matvec: impl FnMut(&[f64], &mut [f64]),
     b: &[f64],
     max_iter: usize,
     tol: f64,
@@ -28,6 +34,7 @@ pub fn cg_solve(
     let mut x = vec![0.0; n];
     let mut r = b.to_vec();
     let mut p = r.clone();
+    let mut wp = vec![0.0; n];
     let b_norm = crate::linalg::norm2(b).max(1e-300);
     let mut rs_old = crate::linalg::dot(&r, &r);
     let mut trace = Vec::with_capacity(max_iter);
@@ -36,7 +43,7 @@ pub fn cg_solve(
         if rs_old.sqrt() / b_norm < tol {
             break;
         }
-        let wp = matvec(&p);
+        matvec(&p, &mut wp);
         let p_wp = crate::linalg::dot(&p, &wp);
         if p_wp <= 0.0 || !p_wp.is_finite() {
             // operator numerically lost positive-definiteness — stop with
@@ -63,7 +70,7 @@ pub fn cg_solve(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::linalg::{gemm, matvec, Matrix};
+    use crate::linalg::{gemm, matvec, matvec_into, Matrix};
 
     fn spd(n: usize) -> Matrix {
         let m = Matrix::from_fn(n, n, |i, j| (((i * 7 + j * 3) % 13) as f64 - 6.0) * 0.1);
@@ -77,7 +84,7 @@ mod tests {
         let n = 40;
         let a = spd(n);
         let b: Vec<f64> = (0..n).map(|i| (i as f64).sin()).collect();
-        let (x, trace) = cg_solve(|v| matvec(&a, v), &b, 200, 1e-12, None);
+        let (x, trace) = cg_solve(|v, out| matvec_into(&a, v, out), &b, 200, 1e-12, None);
         let ax = matvec(&a, &x);
         for (u, v) in ax.iter().zip(&b) {
             assert!((u - v).abs() < 1e-7);
@@ -96,7 +103,7 @@ mod tests {
             calls += 1;
             assert_eq!(x.len(), n);
         };
-        let (_, trace) = cg_solve(|v| matvec(&a, v), &b, 15, 0.0, Some(&mut cb));
+        let (_, trace) = cg_solve(|v, out| matvec_into(&a, v, out), &b, 15, 0.0, Some(&mut cb));
         assert_eq!(calls, trace.len());
         assert_eq!(trace.len(), 15);
         // residual at end lower than at start
@@ -109,7 +116,7 @@ mod tests {
         let n = 12;
         let a = spd(n);
         let b: Vec<f64> = (0..n).map(|i| i as f64 - 3.0).collect();
-        let (x, _) = cg_solve(|v| matvec(&a, v), &b, n + 2, 0.0, None);
+        let (x, _) = cg_solve(|v, out| matvec_into(&a, v, out), &b, n + 2, 0.0, None);
         let ax = matvec(&a, &x);
         for (u, v) in ax.iter().zip(&b) {
             assert!((u - v).abs() < 1e-8);
@@ -119,7 +126,7 @@ mod tests {
     #[test]
     fn identity_converges_in_one_step() {
         let b = vec![3.0, -1.0, 2.0];
-        let (x, trace) = cg_solve(|v| v.to_vec(), &b, 10, 1e-14, None);
+        let (x, trace) = cg_solve(|v, out: &mut [f64]| out.copy_from_slice(v), &b, 10, 1e-14, None);
         assert_eq!(trace.len(), 1);
         for (u, v) in x.iter().zip(&b) {
             assert!((u - v).abs() < 1e-14);

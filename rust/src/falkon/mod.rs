@@ -6,8 +6,12 @@
 //!   the BLESS weight matrix `A` (Eq. 15); uniform centers are the
 //!   special case `A = I` (Eq. 14).
 //! * [`Falkon`] — the solver: CG on `Wβ = b` with
-//!   `W = Bᵀ(K_nMᵀK_nM + λnK_MM)B`, streaming `K_nM` in row tiles so the
-//!   `n × M` matrix is never materialized (`O(M²)` memory, Eq. 16).
+//!   `W = Bᵀ(K_nMᵀK_nM + λnK_MM)B`. `K_nM` flows through the
+//!   memory-budgeted [`crate::kernels::PanelCache`]: row tiles within
+//!   the `--mem-budget` are evaluated **once per fit** and streamed from
+//!   memory on every CG iteration; tiles beyond it are recomputed, and
+//!   budget `0` recovers the pure-streaming `O(M²)`-memory path of
+//!   Eq. 16 — bit-identical either way.
 //! * [`nystrom_krr`] — the direct `O(nM² + M³)` Nyström solver (Def. 4),
 //!   used as the convergence oracle in tests.
 //!

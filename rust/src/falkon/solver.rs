@@ -1,10 +1,17 @@
 //! The FALKON estimator (Def. 3) and the direct Nyström-KRR oracle
 //! (Def. 4).
+//!
+//! The solver executes against the [`PanelCache`] layer: the `K_nM`
+//! panel is planned once per fit (`--mem-budget`), the cached prefix is
+//! evaluated exactly once, and the preconditioner right-hand side, every
+//! CG iteration and training-set prediction stream the same bit-identical
+//! tiles — so training costs ~1 kernel sweep instead of `t` of them.
 
 use super::{cg_solve, Preconditioner};
-use crate::kernels::{tile_indices, KernelEngine};
+use crate::kernels::{tile_indices, Centers, KernelEngine, PanelCache};
 use crate::leverage::WeightedSet;
 use crate::linalg::{self, Matrix};
+use std::sync::Arc;
 
 /// Statistics captured after each CG iteration via the fit callback.
 #[derive(Clone, Debug)]
@@ -16,6 +23,10 @@ pub struct IterationStat {
 }
 
 /// A fitted FALKON model: centers + coefficients.
+///
+/// The center **rows** are gathered out of the training set once at
+/// construction and shared (cheaply, via [`Arc`]) by every snapshot and
+/// clone — prediction never re-gathers them per call.
 #[derive(Clone, Debug)]
 pub struct FalkonModel {
     /// Center indices into the training set.
@@ -24,48 +35,85 @@ pub struct FalkonModel {
     pub alpha: Vec<f64>,
     /// Per-iteration statistics from the fit.
     pub iterations: Vec<IterationStat>,
+    /// The gathered center rows + norms (shared, gathered once).
+    pub(crate) center_set: Arc<Centers>,
 }
 
 impl FalkonModel {
+    /// Assemble a model from raw parts, gathering the center rows from
+    /// `engine` once (the only gather this model will ever perform).
+    pub fn from_parts(
+        engine: &dyn KernelEngine,
+        centers: Vec<usize>,
+        alpha: Vec<f64>,
+    ) -> FalkonModel {
+        let center_set = Arc::new(engine.gather_centers(&centers));
+        FalkonModel { centers, alpha, iterations: vec![], center_set }
+    }
+
     /// Predict scores for query points: `f(x) = Σ_j α_j K(x, x̃_j)`,
-    /// streamed in row tiles of the query matrix.
+    /// streamed in row tiles of the query matrix against the model's
+    /// pre-gathered center rows (no per-call, per-tile center gather).
+    ///
+    /// `engine` supplies the kernel function and the cross-block
+    /// evaluator; it must be built over the training dataset (or any
+    /// dataset whose rows at `self.centers` equal the training rows) —
+    /// backends without a pre-gathered-centers fast path resolve the
+    /// center indices against `engine`'s own data.
     pub fn predict(&self, engine: &dyn KernelEngine, q: &Matrix) -> Vec<f64> {
         let mut out = vec![0.0; q.rows()];
         for (s, e) in tile_indices(q.rows(), crate::kernels::DEFAULT_ROW_TILE) {
-            let tile = Matrix::from_fn(e - s, q.cols(), |i, j| q.get(s + i, j));
-            let k = engine.cross_block(&tile, &self.centers);
+            let k = engine.cross_block_range(q, s, e, &self.center_set);
             linalg::matvec_into(&k, &self.alpha, &mut out[s..e]);
         }
         out
     }
 
-    /// Gather the center rows out of the training set (`M × d`): with
-    /// these and `α` the model predicts without the training data — the
-    /// basis of the [`crate::serve`] model artifact.
-    pub fn center_rows(&self, engine: &dyn KernelEngine) -> Matrix {
-        let x = engine.points();
-        Matrix::from_fn(self.centers.len(), x.cols(), |i, j| x.get(self.centers[i], j))
+    /// The center rows (`M × d`), gathered once at model construction:
+    /// with these and `α` the model predicts without the training data —
+    /// the basis of the [`crate::serve`] model artifact.
+    pub fn center_rows(&self) -> &Matrix {
+        &self.center_set.points
     }
 }
 
 /// FALKON solver bound to an engine, a weighted center set and λ.
+///
+/// Holds one [`PanelCache`] for its whole lifetime: the right-hand side,
+/// all CG iterations and [`Falkon::predict_train`] serve `K_nM` tiles
+/// from it instead of re-evaluating the kernel.
 pub struct Falkon<'a> {
     engine: &'a dyn KernelEngine,
-    centers: Vec<usize>,
+    panel: PanelCache<'a>,
     precond: Preconditioner,
     kmm: Matrix,
     lambda: f64,
 }
 
 impl<'a> Falkon<'a> {
-    /// Prepare the solver: dedupe centers (with-replacement samplers can
-    /// repeat them — a repeated center adds nothing to the model span),
-    /// evaluate `K_MM` once, and factor the Def.-2 preconditioner with
-    /// the BLESS weights (Eq. 15). Uniform weights give FALKON-UNI (Eq. 14).
+    /// Prepare the solver with the process-default panel budget
+    /// ([`crate::kernels::default_budget_bytes`]); see
+    /// [`Falkon::with_budget`].
     pub fn new(
         engine: &'a dyn KernelEngine,
         set: &WeightedSet,
         lambda: f64,
+    ) -> anyhow::Result<Self> {
+        Self::with_budget(engine, set, lambda, crate::kernels::default_budget_bytes())
+    }
+
+    /// Prepare the solver: dedupe centers (with-replacement samplers can
+    /// repeat them — a repeated center adds nothing to the model span),
+    /// build the `K_nM` panel cache within `budget_bytes` (`0` = pure
+    /// streaming; results are bit-identical at any budget), evaluate
+    /// `K_MM` once from the cached center gather, and factor the Def.-2
+    /// preconditioner with the BLESS weights (Eq. 15). Uniform weights
+    /// give FALKON-UNI (Eq. 14).
+    pub fn with_budget(
+        engine: &'a dyn KernelEngine,
+        set: &WeightedSet,
+        lambda: f64,
+        budget_bytes: usize,
     ) -> anyhow::Result<Self> {
         set.validate()?;
         anyhow::ensure!(!set.is_empty(), "FALKON needs at least one center");
@@ -78,19 +126,32 @@ impl<'a> Falkon<'a> {
         let centers: Vec<usize> = seen.keys().copied().collect();
         let weights: Vec<f64> = seen.values().map(|&inv| 1.0 / inv).collect();
 
-        let kmm = engine.block(&centers, &centers);
+        let panel = PanelCache::new(engine, &centers, budget_bytes);
+        let kmm = engine.centers_square(panel.centers());
         let precond = Preconditioner::new(&kmm, &weights, engine.n(), lambda)?;
-        Ok(Falkon { engine, centers, precond, kmm, lambda })
+        Ok(Falkon { engine, panel, precond, kmm, lambda })
     }
 
     /// Number of (deduplicated) centers.
     pub fn m(&self) -> usize {
-        self.centers.len()
+        self.panel.m()
     }
 
     /// The deduplicated center indices.
     pub fn centers(&self) -> &[usize] {
-        &self.centers
+        &self.panel.centers().indices
+    }
+
+    /// The panel cache backing this solver (plan + work counters).
+    pub fn panel(&self) -> &PanelCache<'a> {
+        &self.panel
+    }
+
+    /// Training-set predictions for a coefficient vector: `K_nM · α`
+    /// served from the panel cache (no kernel re-evaluation within
+    /// budget).
+    pub fn predict_train(&self, alpha: &[f64]) -> Vec<f64> {
+        self.panel.knm_matvec(alpha)
     }
 
     /// Run `t` CG iterations on `Wβ = b` (Def. 3) and return the model.
@@ -107,18 +168,22 @@ impl<'a> Falkon<'a> {
         anyhow::ensure!(y.len() == self.engine.n(), "label length mismatch");
         anyhow::ensure!(t > 0, "need at least one iteration");
         let lam_n = self.lambda * self.engine.n() as f64;
+        let m = self.m();
 
-        // b = Bᵀ K_nMᵀ y — one streaming pass over the data
-        let kty = self.engine.knm_t_matvec(&self.centers, y);
+        // b = Bᵀ K_nMᵀ y — one pass over the panel
+        let kty = self.panel.knm_t_matvec(y);
         let b = self.precond.apply_bt(&kty);
 
-        // W β = Bᵀ (K_nMᵀ K_nM + λn K_MM) B β
-        let matvec = |beta: &[f64]| -> Vec<f64> {
+        // W β = Bᵀ (K_nMᵀ K_nM + λn K_MM) B β — the K_nM products stream
+        // from the panel cache; `reg` is reused across iterations.
+        let mut reg = vec![0.0; m];
+        let matvec = |beta: &[f64], out: &mut [f64]| {
             let alpha = self.precond.apply_b(beta);
-            let mut z = self.engine.knm_t_knm_matvec(&self.centers, &alpha);
-            let reg = linalg::matvec(&self.kmm, &alpha);
-            linalg::axpy(lam_n, &reg, &mut z);
-            self.precond.apply_bt(&z)
+            self.panel.knm_t_knm_matvec_into(&alpha, out);
+            linalg::matvec_into(&self.kmm, &alpha, &mut reg);
+            linalg::axpy(lam_n, &reg, out);
+            let z = self.precond.apply_bt(out);
+            out.copy_from_slice(&z);
         };
 
         let mut stats: Vec<IterationStat> = Vec::with_capacity(t);
@@ -127,9 +192,10 @@ impl<'a> Falkon<'a> {
             let secs = t0.elapsed().as_secs_f64();
             let metric = per_iter.as_deref_mut().map(|f| {
                 let snapshot = FalkonModel {
-                    centers: self.centers.clone(),
+                    centers: self.centers().to_vec(),
                     alpha: self.precond.apply_b(beta),
                     iterations: vec![],
+                    center_set: self.panel.centers_arc(),
                 };
                 f(it, &snapshot)
             });
@@ -138,9 +204,10 @@ impl<'a> Falkon<'a> {
         let (beta, _trace) = cg_solve(matvec, &b, t, 0.0, Some(&mut cb));
 
         Ok(FalkonModel {
-            centers: self.centers.clone(),
+            centers: self.centers().to_vec(),
             alpha: self.precond.apply_b(&beta),
             iterations: stats,
+            center_set: self.panel.centers_arc(),
         })
     }
 }
@@ -148,7 +215,9 @@ impl<'a> Falkon<'a> {
 /// Direct Nyström-KRR (Def. 4): `α = (K_nMᵀK_nM + λn·K_MM)⁻¹ K_nMᵀ y`.
 ///
 /// `O(nM²)` to build the Gram block + `O(M³)` to solve — the convergence
-/// oracle FALKON must approach as `t → ∞` (Thm. 6).
+/// oracle FALKON must approach as `t → ∞` (Thm. 6). Streams `K_nM` row
+/// tiles through the cached-center range evaluator (single pass, so no
+/// panel cache is needed).
 pub fn nystrom_krr(
     engine: &dyn KernelEngine,
     centers: &[usize],
@@ -159,20 +228,19 @@ pub fn nystrom_krr(
     anyhow::ensure!(y.len() == engine.n(), "label length mismatch");
     let n = engine.n();
     let m = centers.len();
-    let kmm = engine.block(centers, centers);
+    let center_set = Arc::new(engine.gather_centers(centers));
+    let kmm = engine.centers_square(&center_set);
 
     // H = K_nMᵀ K_nM accumulated over row tiles; rhs = K_nMᵀ y
     let mut h = Matrix::zeros(m, m);
     let mut rhs = vec![0.0; m];
-    let all: Vec<usize> = (0..n).collect();
     for (s, e) in tile_indices(n, crate::kernels::DEFAULT_ROW_TILE) {
-        let blk = engine.block(&all[s..e], centers);
+        let blk = engine.block_range(s, e, &center_set);
         let ht = linalg::gemm_tn(&blk, &blk);
         for (hv, tv) in h.as_mut_slice().iter_mut().zip(ht.as_slice()) {
             *hv += tv;
         }
-        let part = linalg::matvec_t(&blk, &y[s..e]);
-        linalg::axpy(1.0, &part, &mut rhs);
+        linalg::matvec_t_acc(&blk, &y[s..e], &mut rhs);
     }
     let lam_n = lambda * n as f64;
     for (hv, kv) in h.as_mut_slice().iter_mut().zip(kmm.as_slice()) {
@@ -193,7 +261,7 @@ pub fn nystrom_krr(
         anyhow::ensure!(jitter < trace.max(1.0), "normal equations singular");
     };
     let alpha = f.solve(&rhs);
-    Ok(FalkonModel { centers: centers.to_vec(), alpha, iterations: vec![] })
+    Ok(FalkonModel { centers: centers.to_vec(), alpha, iterations: vec![], center_set })
 }
 
 #[cfg(test)]
@@ -265,6 +333,49 @@ mod tests {
         // timing is monotone
         for w in model.iterations.windows(2) {
             assert!(w[1].seconds >= w[0].seconds);
+        }
+    }
+
+    #[test]
+    fn budgets_do_not_change_the_model() {
+        // streaming (0), partial (one tile) and unbounded budgets must
+        // produce bitwise-identical coefficients and predictions.
+        let (eng, y, centers) = setup(260);
+        let lambda = 1e-3;
+        let set = WeightedSet::uniform(centers, lambda);
+        let fit_at = |budget: usize| {
+            let f = Falkon::with_budget(&eng, &set, lambda, budget).unwrap();
+            let model = f.fit(&y, 6, None).unwrap();
+            let preds = model.predict(&eng, eng.points());
+            (model.alpha, preds)
+        };
+        let (a0, p0) = fit_at(0);
+        for budget in [1 << 20, usize::MAX] {
+            let (a, p) = fit_at(budget);
+            assert_eq!(
+                a0.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                a.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                "α diverged at budget {budget}"
+            );
+            assert_eq!(
+                p0.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                p.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                "predictions diverged at budget {budget}"
+            );
+        }
+    }
+
+    #[test]
+    fn predict_train_matches_predict_on_training_points() {
+        let (eng, y, centers) = setup(220);
+        let lambda = 1e-3;
+        let set = WeightedSet::uniform(centers, lambda);
+        let f = Falkon::new(&eng, &set, lambda).unwrap();
+        let model = f.fit(&y, 6, None).unwrap();
+        let via_panel = f.predict_train(&model.alpha);
+        let via_cross = model.predict(&eng, eng.points());
+        for (a, b) in via_panel.iter().zip(&via_cross) {
+            assert!((a - b).abs() < 1e-10, "{a} vs {b}");
         }
     }
 

@@ -20,11 +20,44 @@ pub fn tile_indices(n: usize, tile: usize) -> Vec<(usize, usize)> {
     out
 }
 
+/// A center set gathered out of the dataset **once**: the indices, the
+/// dense `M × d` row matrix, and the per-center squared norms.
+///
+/// Every `K_nM`-shaped product touches the same `M` center rows on every
+/// row tile of every iteration; before this struct existed the engine
+/// re-gathered (and transposed) them per tile per call. Build a
+/// `Centers` once per center set ([`KernelEngine::gather_centers`]) and
+/// pass it to the `*_range`/`centers_*` block evaluators — the
+/// [`crate::kernels::PanelCache`] holds one for the whole FALKON fit.
+#[derive(Clone, Debug)]
+pub struct Centers {
+    /// Row indices into the engine's dataset.
+    pub indices: Vec<usize>,
+    /// The gathered center rows (`M × d`, row-major).
+    pub points: Matrix,
+    /// `‖x̃_j‖²` per center (the row-norm trick's `b_sq`).
+    pub sq_norms: Vec<f64>,
+}
+
+impl Centers {
+    /// Number of centers `M`.
+    pub fn m(&self) -> usize {
+        self.indices.len()
+    }
+}
+
 /// Abstraction over who evaluates Gaussian-kernel blocks of the (implicit)
 /// `n × n` kernel matrix of a fixed dataset.
 ///
 /// Implementations: [`NativeEngine`] (pure rust) and
 /// [`crate::runtime::XlaEngine`] (PJRT-compiled Pallas tiles).
+///
+/// The `*_range` / `centers_*` family takes a pre-gathered [`Centers`]
+/// so that repeated products against a fixed center set (FALKON CG,
+/// BLESS score batches) pay the gather once. Default implementations
+/// fall back to the index-based [`block`](Self::block)/
+/// [`cross_block`](Self::cross_block), so backends only opt in where it
+/// pays.
 pub trait KernelEngine {
     /// Number of data points.
     fn n(&self) -> usize;
@@ -51,14 +84,64 @@ pub trait KernelEngine {
         self.kernel().kappa_sq()
     }
 
+    /// Gather a center set once (rows + squared norms) for the
+    /// `*_range`/`centers_*` evaluators.
+    fn gather_centers(&self, idx: &[usize]) -> Centers {
+        let x = self.points();
+        let d = x.cols();
+        let mut points = Matrix::zeros(idx.len(), d);
+        for (r, &i) in idx.iter().enumerate() {
+            points.row_mut(r).copy_from_slice(x.row(i));
+        }
+        let sq_norms = (0..points.rows()).map(|r| linalg::norm2_sq(points.row(r))).collect();
+        Centers { indices: idx.to_vec(), points, sq_norms }
+    }
+
+    /// Identity-range row tile `K(X[s..e], centers)` — the streaming
+    /// `K_nM` evaluator. No row-index vector is built; native backends
+    /// read the row range straight out of the dataset.
+    fn block_range(&self, s: usize, e: usize, centers: &Centers) -> Matrix {
+        let rows: Vec<usize> = (s..e).collect();
+        self.block(&rows, &centers.indices)
+    }
+
+    /// [`block_range`](Self::block_range) into a reusable buffer: `out`
+    /// is reshaped by the implementation, so callers can hand the same
+    /// workspace to every tile of a sweep. Must produce bit-identical
+    /// values to `block_range` — the panel cache relies on it.
+    fn block_range_into(&self, s: usize, e: usize, centers: &Centers, out: &mut Matrix) {
+        *out = self.block_range(s, e, centers);
+    }
+
+    /// `K(centers, X[cols])` (`M × |cols|`) with the row side
+    /// pre-gathered — the LsGenerator score-batch shape.
+    fn centers_block(&self, centers: &Centers, cols: &[usize]) -> Matrix {
+        self.block(&centers.indices, cols)
+    }
+
+    /// `K(centers, centers)` (`M × M`) — `K_MM` for the FALKON
+    /// preconditioner and the LsGenerator factorization.
+    fn centers_square(&self, centers: &Centers) -> Matrix {
+        self.block(&centers.indices, &centers.indices)
+    }
+
+    /// Cross block `K(Q[s..e], centers)` for a row range of an
+    /// out-of-sample query matrix — the prediction tile shape, with
+    /// neither the query tile nor the center rows re-copied by native
+    /// backends.
+    fn cross_block_range(&self, q: &Matrix, s: usize, e: usize, centers: &Centers) -> Matrix {
+        let tile = Matrix::from_fn(e - s, q.cols(), |i, j| q.get(s + i, j));
+        self.cross_block(&tile, &centers.indices)
+    }
+
     /// Streaming `y = K_nM · v` where `M` indexes `centers` (length-n out).
     fn knm_matvec(&self, centers: &[usize], v: &[f64]) -> Vec<f64> {
         assert_eq!(centers.len(), v.len());
         let n = self.n();
+        let c = self.gather_centers(centers);
         let mut y = vec![0.0; n];
-        let rows: Vec<usize> = (0..n).collect();
         for (s, e) in tile_indices(n, DEFAULT_ROW_TILE) {
-            let blk = self.block(&rows[s..e], centers);
+            let blk = self.block_range(s, e, &c);
             linalg::matvec_into(&blk, v, &mut y[s..e]);
         }
         y
@@ -68,12 +151,11 @@ pub trait KernelEngine {
     fn knm_t_matvec(&self, centers: &[usize], u: &[f64]) -> Vec<f64> {
         assert_eq!(u.len(), self.n());
         let n = self.n();
+        let c = self.gather_centers(centers);
         let mut z = vec![0.0; centers.len()];
-        let rows: Vec<usize> = (0..n).collect();
         for (s, e) in tile_indices(n, DEFAULT_ROW_TILE) {
-            let blk = self.block(&rows[s..e], centers);
-            let partial = linalg::matvec_t(&blk, &u[s..e]);
-            linalg::axpy(1.0, &partial, &mut z);
+            let blk = self.block_range(s, e, &c);
+            linalg::matvec_t_acc(&blk, &u[s..e], &mut z);
         }
         z
     }
@@ -84,13 +166,13 @@ pub trait KernelEngine {
     fn knm_t_knm_matvec(&self, centers: &[usize], v: &[f64]) -> Vec<f64> {
         assert_eq!(centers.len(), v.len());
         let n = self.n();
+        let c = self.gather_centers(centers);
         let mut z = vec![0.0; centers.len()];
-        let rows: Vec<usize> = (0..n).collect();
+        let mut w = vec![0.0; DEFAULT_ROW_TILE.min(n.max(1))];
         for (s, e) in tile_indices(n, DEFAULT_ROW_TILE) {
-            let blk = self.block(&rows[s..e], centers);
-            let w = linalg::matvec(&blk, v);
-            let partial = linalg::matvec_t(&blk, &w);
-            linalg::axpy(1.0, &partial, &mut z);
+            let blk = self.block_range(s, e, &c);
+            linalg::matvec_into(&blk, v, &mut w[..e - s]);
+            linalg::matvec_t_acc(&blk, &w[..e - s], &mut z);
         }
         z
     }
@@ -131,27 +213,45 @@ impl NativeEngine {
     }
 
     /// Kernel block between two explicit point sets with precomputed
-    /// squared norms. The cross-term GEMM is parallel inside
-    /// [`linalg::gemm`]; the exp pass below is parallelized over
-    /// fixed-size row blocks (elementwise, hence bit-identical to the
-    /// serial sweep at any thread count).
-    fn block_impl(&self, a: &Matrix, a_sq: &[f64], b: &Matrix, b_sq: &[f64]) -> Matrix {
+    /// squared norms, written into a reusable buffer (`out` is reshaped
+    /// to `|a_sq| × |b_sq|`). `a` and `b` are row-major point slices of
+    /// width `d` — borrowed ranges of the dataset or a gathered
+    /// [`Centers`] work equally, so no side is ever copied just to feed
+    /// the product.
+    ///
+    /// The cross term runs through the transpose-free
+    /// [`linalg::gemm_nt_acc`] (`A·Bᵀ` over dot-product panels — no
+    /// `d × M` transpose is materialized); the exp pass below is
+    /// parallelized over fixed-size row blocks. Both partitions depend
+    /// only on the shape, so the result is bit-identical at any thread
+    /// count.
+    fn block_pair_into(&self, a: &[f64], a_sq: &[f64], b: &[f64], b_sq: &[f64], out: &mut Matrix) {
         /// Row-block height of the parallel exp pass.
         const EXP_RB: usize = 64;
         /// Minimum block cells before the exp pass dispatches.
         const PAR_MIN_EXP: usize = 1 << 14;
-        // cross = A · Bᵀ, evaluated as gemm against the transposed gather
-        let mut k = linalg::gemm(a, &b.transpose());
-        let cols = b_sq.len();
-        if cols == 0 || a_sq.is_empty() {
-            return k;
+        let (rows, cols) = (a_sq.len(), b_sq.len());
+        if out.rows() != rows || out.cols() != cols {
+            *out = Matrix::zeros(rows, cols);
+        } else {
+            out.as_mut_slice().fill(0.0);
         }
-        let kd = k.as_mut_slice();
-        let parallel = a_sq.len() * cols >= PAR_MIN_EXP;
+        if rows == 0 || cols == 0 {
+            return;
+        }
+        linalg::gemm_nt_acc(a, b, self.x.cols(), out.as_mut_slice(), cols);
+        let kd = out.as_mut_slice();
+        let parallel = rows * cols >= PAR_MIN_EXP;
         pool::par_chunks_mut_gated(kd, EXP_RB * cols, parallel, |blk, chunk| {
             exp_pass(&self.kernel, a_sq, b_sq, blk * EXP_RB, chunk);
         });
-        k
+    }
+
+    /// Allocating wrapper around [`Self::block_pair_into`].
+    fn block_pair(&self, a: &[f64], a_sq: &[f64], b: &[f64], b_sq: &[f64]) -> Matrix {
+        let mut out = Matrix::zeros(a_sq.len(), b_sq.len());
+        self.block_pair_into(a, a_sq, b, b_sq, &mut out);
+        out
     }
 }
 
@@ -187,7 +287,7 @@ impl KernelEngine for NativeEngine {
         let b = self.gather(cols);
         let a_sq: Vec<f64> = rows.iter().map(|&i| self.sq_norms[i]).collect();
         let b_sq: Vec<f64> = cols.iter().map(|&j| self.sq_norms[j]).collect();
-        self.block_impl(&a, &a_sq, &b, &b_sq)
+        self.block_pair(a.as_slice(), &a_sq, b.as_slice(), &b_sq)
     }
 
     fn cross_block(&self, q: &Matrix, cols: &[usize]) -> Matrix {
@@ -195,7 +295,60 @@ impl KernelEngine for NativeEngine {
         let q_sq: Vec<f64> = (0..q.rows()).map(|i| linalg::norm2_sq(q.row(i))).collect();
         let b = self.gather(cols);
         let b_sq: Vec<f64> = cols.iter().map(|&j| self.sq_norms[j]).collect();
-        self.block_impl(q, &q_sq, &b, &b_sq)
+        self.block_pair(q.as_slice(), &q_sq, b.as_slice(), &b_sq)
+    }
+
+    /// Reuses the engine's precomputed row norms instead of re-deriving
+    /// them from the gathered rows.
+    fn gather_centers(&self, idx: &[usize]) -> Centers {
+        let points = self.gather(idx);
+        let sq_norms: Vec<f64> = idx.iter().map(|&i| self.sq_norms[i]).collect();
+        Centers { indices: idx.to_vec(), points, sq_norms }
+    }
+
+    /// Zero-copy row side: the tile `X[s..e]` and its norms are read
+    /// straight out of the dataset — no index vector, no gather.
+    fn block_range(&self, s: usize, e: usize, centers: &Centers) -> Matrix {
+        let mut out = Matrix::zeros(e - s, centers.m());
+        self.block_range_into(s, e, centers, &mut out);
+        out
+    }
+
+    fn block_range_into(&self, s: usize, e: usize, centers: &Centers, out: &mut Matrix) {
+        assert!(s <= e && e <= self.x.rows(), "row range out of bounds");
+        let d = self.x.cols();
+        let a = &self.x.as_slice()[s * d..e * d];
+        self.block_pair_into(
+            a,
+            &self.sq_norms[s..e],
+            centers.points.as_slice(),
+            &centers.sq_norms,
+            out,
+        );
+    }
+
+    fn centers_block(&self, centers: &Centers, cols: &[usize]) -> Matrix {
+        let b = self.gather(cols);
+        let b_sq: Vec<f64> = cols.iter().map(|&j| self.sq_norms[j]).collect();
+        self.block_pair(centers.points.as_slice(), &centers.sq_norms, b.as_slice(), &b_sq)
+    }
+
+    fn centers_square(&self, centers: &Centers) -> Matrix {
+        self.block_pair(
+            centers.points.as_slice(),
+            &centers.sq_norms,
+            centers.points.as_slice(),
+            &centers.sq_norms,
+        )
+    }
+
+    fn cross_block_range(&self, q: &Matrix, s: usize, e: usize, centers: &Centers) -> Matrix {
+        assert_eq!(q.cols(), self.x.cols(), "query dimension mismatch");
+        assert!(s <= e && e <= q.rows(), "query row range out of bounds");
+        let d = q.cols();
+        let qa = &q.as_slice()[s * d..e * d];
+        let q_sq: Vec<f64> = (s..e).map(|i| linalg::norm2_sq(q.row(i))).collect();
+        self.block_pair(qa, &q_sq, centers.points.as_slice(), &centers.sq_norms)
     }
 }
 
@@ -253,6 +406,49 @@ mod tests {
         let via_cross = eng.cross_block(&q, &cols);
         let via_block = eng.block(&rows, &cols);
         assert!(via_cross.max_abs_diff(&via_block) < 1e-12);
+    }
+
+    #[test]
+    fn cached_center_paths_match_index_paths() {
+        let eng = engine(120);
+        let cols: Vec<usize> = vec![3, 10, 20, 33, 47, 90, 119];
+        let c = eng.gather_centers(&cols);
+        assert_eq!(c.m(), cols.len());
+        // block_range == block on the same identity range (bitwise)
+        let rows: Vec<usize> = (40..100).collect();
+        let via_idx = eng.block(&rows, &cols);
+        let via_range = eng.block_range(40, 100, &c);
+        assert_eq!(via_idx.as_slice().len(), via_range.as_slice().len());
+        for (a, b) in via_idx.as_slice().iter().zip(via_range.as_slice()) {
+            assert_eq!(a.to_bits(), b.to_bits(), "block_range diverged from block");
+        }
+        // block_range_into reuses a workspace of the wrong shape
+        let mut ws = Matrix::zeros(3, 2);
+        eng.block_range_into(40, 100, &c, &mut ws);
+        for (a, b) in via_range.as_slice().iter().zip(ws.as_slice()) {
+            assert_eq!(a.to_bits(), b.to_bits(), "block_range_into diverged");
+        }
+        // centers_block == block(centers, cols)
+        let other: Vec<usize> = vec![0, 7, 55];
+        let cb = eng.centers_block(&c, &other);
+        let cb_ref = eng.block(&cols, &other);
+        for (a, b) in cb.as_slice().iter().zip(cb_ref.as_slice()) {
+            assert_eq!(a.to_bits(), b.to_bits(), "centers_block diverged");
+        }
+        // centers_square == block(centers, centers)
+        let sq = eng.centers_square(&c);
+        let sq_ref = eng.block(&cols, &cols);
+        for (a, b) in sq.as_slice().iter().zip(sq_ref.as_slice()) {
+            assert_eq!(a.to_bits(), b.to_bits(), "centers_square diverged");
+        }
+        // cross_block_range == cross_block on the same query rows
+        let q = Matrix::from_fn(9, eng.points().cols(), |i, j| eng.points().get(2 * i, j));
+        let cr = eng.cross_block_range(&q, 2, 8, &c);
+        let q_sub = Matrix::from_fn(6, q.cols(), |i, j| q.get(2 + i, j));
+        let cr_ref = eng.cross_block(&q_sub, &cols);
+        for (a, b) in cr.as_slice().iter().zip(cr_ref.as_slice()) {
+            assert_eq!(a.to_bits(), b.to_bits(), "cross_block_range diverged");
+        }
     }
 
     #[test]

@@ -12,12 +12,19 @@
 //!
 //! All downstream algorithms (BLESS, baselines, FALKON) are generic over
 //! the engine, so switching the compute backend is a one-line change.
+//!
+//! On top of the engines sits the [`panel`] execution layer: a
+//! memory-budgeted cache of `K_nM` row tiles ([`PanelCache`]) that lets
+//! FALKON pay for kernel evaluation once per fit instead of once per CG
+//! iteration, bit-identical to pure streaming at any budget.
 
 mod engine;
 mod gaussian;
+pub mod panel;
 
-pub use engine::{tile_indices, KernelEngine, NativeEngine, DEFAULT_ROW_TILE};
+pub use engine::{tile_indices, Centers, KernelEngine, NativeEngine, DEFAULT_ROW_TILE};
 pub use gaussian::{fast_exp_neg, Gaussian};
+pub use panel::{default_budget_bytes, PanelCache, PanelPlan, PanelStats};
 
 #[cfg(test)]
 mod tests {

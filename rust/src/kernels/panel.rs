@@ -1,0 +1,427 @@
+//! Memory-budgeted `K_nM` panel cache: pay for kernel evaluation once,
+//! not once per CG iteration.
+//!
+//! FALKON's `O(n·M·t)` training cost assumes applying `K_nM` is cheap,
+//! but a purely streaming solver re-evaluates every kernel tile — gather,
+//! GEMM, exp — on every CG iteration, making training `t×` the cost of
+//! one kernel sweep. The center set is **fixed** for the whole fit, so
+//! row tiles of `K_nM` can be materialized once and streamed from memory
+//! many times — if they fit. This module makes that trade explicit:
+//!
+//! * [`PanelPlan`] — given `n`, `M`, `d` and a byte budget (CLI
+//!   `--mem-budget <MB>`; `0` = pure streaming), decides per row tile
+//!   whether to **materialize once and reuse** or **recompute per use**.
+//!   Tiles are the same fixed [`DEFAULT_ROW_TILE`] partition the
+//!   streaming path uses, and the decision is a greedy prefix (tiles are
+//!   interchangeable — each is touched exactly once per sweep), so the
+//!   plan depends only on `(n, M, d, budget)`.
+//! * [`PanelCache`] — holds the pre-gathered [`Centers`], the
+//!   materialized tiles, and one reusable per-tile workspace for the
+//!   recomputed remainder; serves the `K_nM` matvec family
+//!   ([`knm_matvec`](PanelCache::knm_matvec),
+//!   [`knm_t_matvec`](PanelCache::knm_t_matvec),
+//!   [`knm_t_knm_matvec`](PanelCache::knm_t_knm_matvec)).
+//!
+//! **Determinism invariant:** a cached tile holds exactly the bytes the
+//! streaming evaluator produces ([`KernelEngine::block_range_into`] is
+//! required to match [`KernelEngine::block_range`] bitwise), the tile
+//! partition never depends on the budget, and every downstream product
+//! consumes tiles in the same order — so any budget (0, partial,
+//! unbounded) and any thread count yield **bit-identical** results.
+//! `rust/tests/panel_cache.rs` and `rust/tests/parallel_determinism.rs`
+//! enforce this end-to-end through FALKON training and prediction.
+
+use std::cell::{Cell, RefCell};
+
+use super::{tile_indices, Centers, KernelEngine, DEFAULT_ROW_TILE};
+use crate::linalg::{self, Matrix};
+
+/// Fallback budget when total memory cannot be determined (1 GiB).
+const FALLBACK_BUDGET: usize = 1 << 30;
+
+/// Default panel budget: a quarter of physical RAM (read from
+/// `/proc/meminfo`), falling back to 1 GiB when that is unavailable.
+/// A quarter leaves room for the dataset, the preconditioner and the
+/// serving tier while still caching the full `K_nM` panel for every
+/// paper-scale shape (n=8000, M=2000 ⇒ 128 MiB).
+pub fn default_budget_bytes() -> usize {
+    total_memory_bytes().map(|t| t / 4).unwrap_or(FALLBACK_BUDGET)
+}
+
+/// `MemTotal` from `/proc/meminfo` (linux); `None` elsewhere.
+fn total_memory_bytes() -> Option<usize> {
+    let text = std::fs::read_to_string("/proc/meminfo").ok()?;
+    let line = text.lines().find(|l| l.starts_with("MemTotal:"))?;
+    let kb: usize = line.split_whitespace().nth(1)?.parse().ok()?;
+    Some(kb.saturating_mul(1024))
+}
+
+/// The materialize-vs-recompute decision for every row tile of `K_nM`.
+#[derive(Clone, Debug)]
+pub struct PanelPlan {
+    /// Dataset rows `n`.
+    pub n: usize,
+    /// Center count `M`.
+    pub m: usize,
+    /// Feature dimension `d` (drives the fixed gather overhead).
+    pub d: usize,
+    /// Row-tile height (the streaming partition; fixed).
+    pub tile_rows: usize,
+    /// Number of leading tiles materialized; the rest are recomputed.
+    pub cached_tiles: usize,
+    /// Bytes the materialized tiles occupy.
+    pub cached_bytes: usize,
+    /// The budget the plan was built against.
+    pub budget_bytes: usize,
+}
+
+impl PanelPlan {
+    /// Plan for an `n × M` panel over features of dimension `d` within
+    /// `budget_bytes`. Budget `0` disables caching (pure streaming);
+    /// `usize::MAX` caches everything. The gathered center matrix and
+    /// its norms (`M·(d+2)·8` bytes, always held) are charged against
+    /// the budget first; remaining bytes are filled with a greedy prefix
+    /// of [`DEFAULT_ROW_TILE`]-row tiles.
+    pub fn new(n: usize, m: usize, d: usize, budget_bytes: usize) -> PanelPlan {
+        let tile_rows = DEFAULT_ROW_TILE;
+        let overhead = m.saturating_mul(d + 2).saturating_mul(8);
+        let mut remaining = budget_bytes.saturating_sub(overhead);
+        let mut cached_tiles = 0;
+        let mut cached_bytes = 0usize;
+        for (s, e) in tile_indices(n, tile_rows) {
+            let bytes = (e - s).saturating_mul(m).saturating_mul(8);
+            if bytes > remaining {
+                break;
+            }
+            remaining -= bytes;
+            cached_tiles += 1;
+            cached_bytes += bytes;
+        }
+        PanelPlan { n, m, d, tile_rows, cached_tiles, cached_bytes, budget_bytes }
+    }
+
+    /// Total number of row tiles.
+    pub fn tiles(&self) -> usize {
+        self.n.div_ceil(self.tile_rows)
+    }
+
+    /// Whether tile `t` is materialized under this plan.
+    pub fn is_cached(&self, t: usize) -> bool {
+        t < self.cached_tiles
+    }
+
+    /// Whether every tile is materialized (no recomputation at all).
+    pub fn fully_cached(&self) -> bool {
+        self.cached_tiles == self.tiles()
+    }
+}
+
+/// Counters describing how much kernel work a [`PanelCache`] performed.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct PanelStats {
+    /// Kernel entries evaluated (materialization + streamed recomputes).
+    pub entries_evaluated: u64,
+    /// Tile serves answered from the materialized store.
+    pub cached_hits: u64,
+    /// Tile serves that recomputed into the workspace.
+    pub streamed: u64,
+}
+
+/// Per-sweep scratch reused by every recomputed tile, plus the
+/// tile-local product vector of the fused matvec. Full-height and tail
+/// tiles get separate workspaces (their shapes differ whenever `n` is
+/// not a multiple of the tile height, and one buffer would be reshaped
+/// twice per sweep), so after the first sweep the streaming path
+/// allocates nothing per tile. Living inside the cache, all three
+/// survive across CG iterations.
+struct Scratch {
+    full_ws: Matrix,
+    tail_ws: Matrix,
+    w: Vec<f64>,
+}
+
+/// A `K_nM` panel bound to one engine + center set, serving bit-identical
+/// tiles from memory (within budget) or by recomputation (beyond it).
+///
+/// Construction eagerly materializes the planned tiles — one kernel
+/// sweep — so the preconditioner right-hand side, every CG iteration and
+/// training-set prediction all stream from memory afterwards. See the
+/// [module docs](self) for the budget heuristic and the determinism
+/// invariant.
+pub struct PanelCache<'a> {
+    engine: &'a dyn KernelEngine,
+    centers: std::sync::Arc<Centers>,
+    plan: PanelPlan,
+    tiles: Vec<Option<Matrix>>,
+    scratch: RefCell<Scratch>,
+    entries_evaluated: Cell<u64>,
+    cached_hits: Cell<u64>,
+    streamed: Cell<u64>,
+}
+
+impl<'a> PanelCache<'a> {
+    /// Build a cache for `centers` within `budget_bytes` (see
+    /// [`PanelPlan::new`]); materializes the planned tiles eagerly.
+    pub fn new(engine: &'a dyn KernelEngine, centers: &[usize], budget_bytes: usize) -> Self {
+        let centers = std::sync::Arc::new(engine.gather_centers(centers));
+        let m = centers.m();
+        let n = engine.n();
+        let plan = PanelPlan::new(n, m, engine.points().cols(), budget_bytes);
+        let mut cache = PanelCache {
+            engine,
+            centers,
+            tiles: vec![None; plan.tiles()],
+            plan,
+            scratch: RefCell::new(Scratch {
+                full_ws: Matrix::zeros(0, 0),
+                tail_ws: Matrix::zeros(0, 0),
+                w: Vec::new(),
+            }),
+            entries_evaluated: Cell::new(0),
+            cached_hits: Cell::new(0),
+            streamed: Cell::new(0),
+        };
+        // Materialize the planned prefix eagerly — one kernel sweep over
+        // the cached tiles, through the *same* evaluator the streaming
+        // path uses, so stored and recomputed tiles agree bitwise.
+        for (t, (s, e)) in tile_indices(n, cache.plan.tile_rows).into_iter().enumerate() {
+            if !cache.plan.is_cached(t) {
+                break;
+            }
+            let blk = cache.engine.block_range(s, e, &cache.centers);
+            let evals = ((e - s) * m) as u64;
+            cache.entries_evaluated.set(cache.entries_evaluated.get() + evals);
+            cache.tiles[t] = Some(blk);
+        }
+        cache
+    }
+
+    /// Build with the process default budget ([`default_budget_bytes`]).
+    pub fn with_default_budget(engine: &'a dyn KernelEngine, centers: &[usize]) -> Self {
+        Self::new(engine, centers, default_budget_bytes())
+    }
+
+    /// The pre-gathered center set (shared with fitted models).
+    pub fn centers(&self) -> &Centers {
+        &self.centers
+    }
+
+    /// A cheaply clonable handle to the center set.
+    pub fn centers_arc(&self) -> std::sync::Arc<Centers> {
+        std::sync::Arc::clone(&self.centers)
+    }
+
+    /// The materialize-vs-recompute plan in force.
+    pub fn plan(&self) -> &PanelPlan {
+        &self.plan
+    }
+
+    /// Number of centers `M`.
+    pub fn m(&self) -> usize {
+        self.centers.m()
+    }
+
+    /// Dataset rows `n`.
+    pub fn n(&self) -> usize {
+        self.plan.n
+    }
+
+    /// Work counters accumulated since construction.
+    pub fn stats(&self) -> PanelStats {
+        PanelStats {
+            entries_evaluated: self.entries_evaluated.get(),
+            cached_hits: self.cached_hits.get(),
+            streamed: self.streamed.get(),
+        }
+    }
+
+    /// `y = K_nM · v` (length-`n` out) — prediction on the training set.
+    pub fn knm_matvec(&self, v: &[f64]) -> Vec<f64> {
+        assert_eq!(v.len(), self.m());
+        let mut y = vec![0.0; self.n()];
+        let mut guard = self.scratch.borrow_mut();
+        let Scratch { full_ws, tail_ws, .. } = &mut *guard;
+        for (t, (s, e)) in tile_indices(self.n(), self.plan.tile_rows).into_iter().enumerate() {
+            let ws = if e - s == self.plan.tile_rows { &mut *full_ws } else { &mut *tail_ws };
+            let blk = self.tile(t, s, e, ws);
+            linalg::matvec_into(blk, v, &mut y[s..e]);
+        }
+        y
+    }
+
+    /// `z = K_nMᵀ · u` (length-`M` out) — the FALKON right-hand side.
+    pub fn knm_t_matvec(&self, u: &[f64]) -> Vec<f64> {
+        assert_eq!(u.len(), self.n());
+        let mut z = vec![0.0; self.m()];
+        let mut guard = self.scratch.borrow_mut();
+        let Scratch { full_ws, tail_ws, .. } = &mut *guard;
+        for (t, (s, e)) in tile_indices(self.n(), self.plan.tile_rows).into_iter().enumerate() {
+            let ws = if e - s == self.plan.tile_rows { &mut *full_ws } else { &mut *tail_ws };
+            let blk = self.tile(t, s, e, ws);
+            linalg::matvec_t_acc(blk, &u[s..e], &mut z);
+        }
+        z
+    }
+
+    /// Fused `z = K_nMᵀ (K_nM v)` — the CG hot loop. Each tile is served
+    /// once per call and used for both products.
+    pub fn knm_t_knm_matvec(&self, v: &[f64]) -> Vec<f64> {
+        let mut z = vec![0.0; self.m()];
+        self.knm_t_knm_matvec_into(v, &mut z);
+        z
+    }
+
+    /// [`Self::knm_t_knm_matvec`] into a caller buffer (zeroed first) —
+    /// lets the CG loop reuse one output vector across iterations.
+    pub fn knm_t_knm_matvec_into(&self, v: &[f64], z: &mut [f64]) {
+        assert_eq!(v.len(), self.m());
+        assert_eq!(z.len(), self.m());
+        z.fill(0.0);
+        let mut guard = self.scratch.borrow_mut();
+        let Scratch { full_ws, tail_ws, w } = &mut *guard;
+        if w.len() < self.plan.tile_rows {
+            w.resize(self.plan.tile_rows, 0.0);
+        }
+        for (t, (s, e)) in tile_indices(self.n(), self.plan.tile_rows).into_iter().enumerate() {
+            let ws = if e - s == self.plan.tile_rows { &mut *full_ws } else { &mut *tail_ws };
+            let blk = self.tile(t, s, e, ws);
+            linalg::matvec_into(blk, v, &mut w[..e - s]);
+            linalg::matvec_t_acc(blk, &w[..e - s], z);
+        }
+    }
+
+    /// Serve tile `t` (rows `s..e`): from the materialized store when the
+    /// plan cached it, otherwise recomputed into `ws`. Either way the
+    /// returned tile is bitwise the streaming evaluator's output.
+    fn tile<'w>(&'w self, t: usize, s: usize, e: usize, ws: &'w mut Matrix) -> &'w Matrix {
+        match &self.tiles[t] {
+            Some(m) => {
+                self.cached_hits.set(self.cached_hits.get() + 1);
+                m
+            }
+            None => {
+                self.engine.block_range_into(s, e, &self.centers, ws);
+                self.entries_evaluated
+                    .set(self.entries_evaluated.get() + ((e - s) * self.m()) as u64);
+                self.streamed.set(self.streamed.get() + 1);
+                ws
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::susy_like;
+    use crate::kernels::{Gaussian, NativeEngine};
+    use crate::rng::Rng;
+
+    fn engine(n: usize) -> NativeEngine {
+        let ds = susy_like(n, &mut Rng::seeded(17));
+        NativeEngine::new(ds.x, Gaussian::new(2.0))
+    }
+
+    fn bits_of(v: &[f64]) -> Vec<u64> {
+        v.iter().map(|x| x.to_bits()).collect()
+    }
+
+    #[test]
+    fn plan_budget_extremes() {
+        let p0 = PanelPlan::new(5_000, 300, 18, 0);
+        assert_eq!(p0.cached_tiles, 0);
+        assert_eq!(p0.cached_bytes, 0);
+        assert!(!p0.fully_cached());
+        let pall = PanelPlan::new(5_000, 300, 18, usize::MAX);
+        assert!(pall.fully_cached());
+        assert_eq!(pall.tiles(), 5);
+        assert_eq!(pall.cached_bytes, 5_000 * 300 * 8);
+    }
+
+    #[test]
+    fn plan_partial_budget_is_greedy_prefix() {
+        // budget for the center overhead + exactly two full tiles
+        let (n, m, d) = (5_000, 300, 18);
+        let overhead = m * (d + 2) * 8;
+        let tile_bytes = DEFAULT_ROW_TILE * m * 8;
+        let p = PanelPlan::new(n, m, d, overhead + 2 * tile_bytes + tile_bytes / 2);
+        assert_eq!(p.cached_tiles, 2);
+        assert!(p.is_cached(0) && p.is_cached(1) && !p.is_cached(2));
+        assert_eq!(p.cached_bytes, 2 * tile_bytes);
+    }
+
+    #[test]
+    fn cached_and_streaming_matvecs_agree_bitwise() {
+        let eng = engine(2_500); // 3 tiles: 1024 + 1024 + 452
+        let centers: Vec<usize> = (0..60).map(|i| i * 41).collect();
+        let v: Vec<f64> = (0..60).map(|i| ((i as f64) * 0.23).sin()).collect();
+        let u: Vec<f64> = (0..2_500).map(|i| ((i as f64) * 0.017).cos()).collect();
+        let streaming = PanelCache::new(&eng, &centers, 0);
+        let partial = {
+            let overhead = centers.len() * (18 + 2) * 8;
+            PanelCache::new(&eng, &centers, overhead + DEFAULT_ROW_TILE * centers.len() * 8)
+        };
+        let cached = PanelCache::new(&eng, &centers, usize::MAX);
+        assert_eq!(streaming.plan().cached_tiles, 0);
+        assert_eq!(partial.plan().cached_tiles, 1);
+        assert!(cached.plan().fully_cached());
+        for cache in [&streaming, &partial, &cached] {
+            assert_eq!(bits_of(&cache.knm_matvec(&v)), bits_of(&eng.knm_matvec(&centers, &v)));
+            assert_eq!(
+                bits_of(&cache.knm_t_matvec(&u)),
+                bits_of(&eng.knm_t_matvec(&centers, &u))
+            );
+            assert_eq!(
+                bits_of(&cache.knm_t_knm_matvec(&v)),
+                bits_of(&eng.knm_t_knm_matvec(&centers, &v))
+            );
+        }
+    }
+
+    #[test]
+    fn fully_cached_panel_evaluates_each_entry_once() {
+        let eng = engine(2_000);
+        let centers: Vec<usize> = (0..40).map(|i| i * 17).collect();
+        let cache = PanelCache::new(&eng, &centers, usize::MAX);
+        let after_build = cache.stats();
+        assert_eq!(after_build.entries_evaluated, (2_000 * 40) as u64);
+        let v: Vec<f64> = (0..40).map(|i| i as f64 * 0.1).collect();
+        for _ in 0..5 {
+            let _ = cache.knm_t_knm_matvec(&v);
+        }
+        let after_sweeps = cache.stats();
+        assert_eq!(
+            after_sweeps.entries_evaluated, after_build.entries_evaluated,
+            "cached sweeps must not re-evaluate the kernel"
+        );
+        assert_eq!(after_sweeps.streamed, 0);
+        assert_eq!(after_sweeps.cached_hits, 5 * 2); // 2 tiles × 5 sweeps
+    }
+
+    #[test]
+    fn streaming_panel_reevaluates_each_sweep() {
+        let eng = engine(1_500);
+        let centers: Vec<usize> = (0..30).map(|i| i * 11).collect();
+        let cache = PanelCache::new(&eng, &centers, 0);
+        assert_eq!(cache.stats().entries_evaluated, 0, "budget 0 must not materialize");
+        let v: Vec<f64> = vec![0.5; 30];
+        for _ in 0..3 {
+            let _ = cache.knm_t_knm_matvec(&v);
+        }
+        assert_eq!(cache.stats().entries_evaluated, (3 * 1_500 * 30) as u64);
+        assert_eq!(cache.stats().cached_hits, 0);
+        assert_eq!(cache.stats().streamed, 3 * 2); // 2 tiles × 3 sweeps
+    }
+
+    #[test]
+    fn into_variant_reuses_output() {
+        let eng = engine(900);
+        let centers: Vec<usize> = (0..25).map(|i| i * 7).collect();
+        let cache = PanelCache::with_default_budget(&eng, &centers);
+        let v: Vec<f64> = (0..25).map(|i| (i as f64 * 0.3).sin()).collect();
+        let direct = cache.knm_t_knm_matvec(&v);
+        let mut out = vec![123.0; 25];
+        cache.knm_t_knm_matvec_into(&v, &mut out);
+        assert_eq!(bits_of(&direct), bits_of(&out));
+    }
+}

@@ -7,14 +7,21 @@
 //! inner object every sampling algorithm (BLESS, baselines) builds once
 //! per iteration and queries many times.
 
-use crate::kernels::KernelEngine;
+use crate::kernels::{tile_indices, Centers, KernelEngine, DEFAULT_ROW_TILE};
 use crate::leverage::WeightedSet;
 use crate::linalg::{cholesky, CholeskyFactor, Matrix};
 
 /// Leverage-score generator for a fixed `(J, A, λ)`.
+///
+/// The dictionary rows `X[J]` are gathered **once** at construction
+/// ([`Centers`]) and shared by the factorization and every score batch —
+/// BLESS/BLESS-R/RRLS query one generator many times per level, which
+/// previously re-gathered (and transposed) the `|J| × d` block per call.
 pub struct LsGenerator<'a> {
     engine: &'a dyn KernelEngine,
     set: WeightedSet,
+    /// The dictionary rows + norms, gathered once for all score batches.
+    centers: Centers,
     lambda: f64,
     /// Cholesky of `K_{J,J} + λnA`; `None` when `J = ∅` (then
     /// `ℓ̃_∅(i,λ) = K_ii/(λn)`, Def. 1 of the appendix).
@@ -32,10 +39,11 @@ impl<'a> LsGenerator<'a> {
     ) -> anyhow::Result<Self> {
         anyhow::ensure!(lambda > 0.0, "lambda must be positive");
         set.validate()?;
+        let centers = engine.gather_centers(&set.indices);
         let factor = if set.is_empty() {
             None
         } else {
-            let mut kjj = engine.block(&set.indices, &set.indices);
+            let mut kjj = engine.centers_square(&centers);
             let lam_n = lambda * engine.n() as f64;
             kjj.add_scaled_diag(lam_n, &set.weights);
             // With-replacement samplers can hand us duplicate indices,
@@ -45,7 +53,7 @@ impl<'a> LsGenerator<'a> {
                 .ok_or_else(|| anyhow::anyhow!("K_JJ + λnA not SPD (λ={lambda})"))?;
             Some(f)
         };
-        Ok(LsGenerator { engine, set: set.clone(), lambda, factor })
+        Ok(LsGenerator { engine, set: set.clone(), centers, lambda, factor })
     }
 
     /// The `(J, A)` pair this generator was built from.
@@ -67,11 +75,37 @@ impl<'a> LsGenerator<'a> {
                 diag.iter().map(|&kii| kii / lam_n).collect()
             }
             Some(f) => {
-                // K_{J,idx}: |J| × |idx|
-                let kju = self.engine.block(&self.set.indices, idx);
+                // K_{J,idx}: |J| × |idx|, dictionary side pre-gathered
+                let kju = self.engine.centers_block(&self.centers, idx);
                 self.scores_from_cross(&kju, &diag, f)
             }
         }
+    }
+
+    /// Approximate scores for **every** dataset point (`0..n`), streamed
+    /// in row tiles — the full-sweep shape at the top of RRLS and the
+    /// end-to-end accuracy checks, without materializing one `0..n`
+    /// index vector or one `|J| × n` cross block.
+    pub fn scores_all(&self) -> Vec<f64> {
+        let n = self.engine.n();
+        let lam_n = self.lambda * n as f64;
+        let mut out = Vec::with_capacity(n);
+        let mut idx = Vec::with_capacity(DEFAULT_ROW_TILE.min(n));
+        for (s, e) in tile_indices(n, DEFAULT_ROW_TILE) {
+            idx.clear();
+            idx.extend(s..e);
+            let diag = self.engine.diag(&idx);
+            match &self.factor {
+                None => out.extend(diag.iter().map(|&kii| kii / lam_n)),
+                Some(f) => {
+                    // centers_block yields the |J| × (e-s) orientation the
+                    // triangular solve consumes directly — no transpose
+                    let kju = self.engine.centers_block(&self.centers, &idx);
+                    out.extend_from_slice(&self.scores_from_cross(&kju, &diag, f));
+                }
+            }
+        }
+        out
     }
 
     /// Out-of-sample scores `ℓ̂_J(x,λ)` for explicit query points
@@ -84,7 +118,8 @@ impl<'a> LsGenerator<'a> {
                 diag.iter().map(|&kii| kii / lam_n).collect()
             }
             Some(f) => {
-                let kjq = self.engine.cross_block(q, &self.set.indices).transpose();
+                let kjq =
+                    self.engine.cross_block_range(q, 0, q.rows(), &self.centers).transpose();
                 self.scores_from_cross(&kjq, &diag, f)
             }
         }
@@ -165,6 +200,26 @@ mod tests {
         for (i, (a, e)) in approx.iter().zip(&exact).enumerate() {
             assert!(*a >= *e - 1e-9, "point {i}: approx {a} < exact {e}");
         }
+    }
+
+    #[test]
+    fn scores_all_matches_indexed_batch() {
+        let eng = engine(50);
+        let lambda = 1e-2;
+        let set = WeightedSet::uniform(vec![1, 8, 15, 22, 29, 41], lambda);
+        let gen = LsGenerator::new(&eng, &set, lambda).unwrap();
+        let all_idx: Vec<usize> = (0..50).collect();
+        let batched = gen.scores(&all_idx);
+        let streamed = gen.scores_all();
+        assert_eq!(streamed.len(), 50);
+        for (a, b) in batched.iter().zip(&streamed) {
+            assert!((a - b).abs() < 1e-12, "{a} vs {b}");
+        }
+        // empty dictionary: flat K_ii/(λn)
+        let empty = WeightedSet { indices: vec![], weights: vec![], lambda };
+        let gen = LsGenerator::new(&eng, &empty, lambda).unwrap();
+        let s = gen.scores_all();
+        assert!(s.iter().all(|&v| (v - 1.0 / (lambda * 50.0)).abs() < 1e-12));
     }
 
     #[test]

@@ -23,6 +23,13 @@
 //! whose boundaries never depend on the thread count, so every result
 //! is bit-identical to the single-threaded path.
 //!
+//! FALKON's `K_nM` products additionally run through the
+//! **memory-budgeted panel cache** ([`kernels::PanelCache`], CLI
+//! `--mem-budget`): row tiles of `K_nM` within the budget are evaluated
+//! once per fit and streamed from memory on every CG iteration; tiles
+//! beyond it are recomputed — bit-identical at any budget, so training
+//! pays for kernel evaluation ~once instead of once per iteration.
+//!
 //! On top of the training stack sits the **serving tier** ([`serve`]):
 //! a fitted model is packaged into a self-contained, checksummed
 //! artifact (kernel config + center rows + `α` — no training data

@@ -125,6 +125,114 @@ fn gemm_row_block(ad: &[f64], bd: &[f64], chunk: &mut [f64], i0: usize, k: usize
     }
 }
 
+/// `C = A * Bᵀ` without materializing `Bᵀ` (A is m×k, B is n×k, C is m×n).
+///
+/// This is the kernel cross-term shape: a tall row tile of the dataset
+/// against a fixed (row-major) center matrix. Because both operands are
+/// traversed along their rows, every inner-loop access is sequential and
+/// no `n × k` transpose buffer is ever allocated. Parallelized over the
+/// same fixed `MC`-row output blocks as [`gemm`], so the result is
+/// bit-identical at any thread count.
+pub fn gemm_nt(a: &Matrix, b: &Matrix) -> Matrix {
+    let mut c = Matrix::zeros(a.rows(), b.rows());
+    gemm_nt_into(a, b, &mut c);
+    c
+}
+
+/// `C += A * Bᵀ` into an existing buffer (no allocation).
+pub fn gemm_nt_into(a: &Matrix, b: &Matrix, c: &mut Matrix) {
+    assert_eq!(a.cols(), b.cols(), "gemm_nt dimension mismatch");
+    assert_eq!(c.rows(), a.rows());
+    assert_eq!(c.cols(), b.rows());
+    gemm_nt_acc(a.as_slice(), b.as_slice(), a.cols(), c.as_mut_slice(), b.rows());
+}
+
+/// `C += A * Bᵀ` over raw row-major slices: `A` is `(c.len()/n) × k`,
+/// `B` is `n × k`, `C` is `(c.len()/n) × n`.
+///
+/// The slice form exists so callers holding borrowed row ranges (e.g.
+/// the kernel engine streaming contiguous dataset tiles) can feed the
+/// product without copying into a fresh [`Matrix`]. Same fixed-block
+/// parallel partition as [`gemm_nt`].
+pub fn gemm_nt_acc(a: &[f64], b: &[f64], k: usize, c: &mut [f64], n: usize) {
+    assert!(k > 0, "gemm_nt_acc needs a positive inner dimension");
+    assert_eq!(b.len(), n * k, "B shape mismatch");
+    assert_eq!(c.len() % n.max(1), 0, "C shape mismatch");
+    if n == 0 || c.is_empty() {
+        return;
+    }
+    let m = c.len() / n;
+    assert_eq!(a.len(), m * k, "A shape mismatch");
+    let work = m.saturating_mul(k).saturating_mul(n);
+    pool::par_chunks_mut_gated(c, MC * n, work >= PAR_MIN_WORK, |blk, chunk| {
+        gemm_nt_row_block(a, b, chunk, blk * MC, k, n);
+    });
+}
+
+/// One `MC`-row block of `C += A * Bᵀ`: rows `[i0, i0 + rows)` of `A`/`C`.
+/// 4×8 micro-kernel over dot-product panels: 4 rows of `A` against 8
+/// rows of `B`, all 12 streams read sequentially in `p`, 32 accumulators
+/// live in registers across the whole `KC` panel.
+fn gemm_nt_row_block(ad: &[f64], bd: &[f64], chunk: &mut [f64], i0: usize, k: usize, n: usize) {
+    let rows = chunk.len() / n;
+    for pb in (0..k).step_by(KC) {
+        let pe = (pb + KC).min(k);
+        let pl = pe - pb;
+        let mut r = 0;
+        while r + 4 <= rows {
+            let arow = |rr: usize| &ad[(i0 + r + rr) * k + pb..(i0 + r + rr) * k + pe];
+            let a4 = [arow(0), arow(1), arow(2), arow(3)];
+            let mut j = 0;
+            while j + 8 <= n {
+                let b8: [&[f64]; 8] =
+                    std::array::from_fn(|cc| &bd[(j + cc) * k + pb..(j + cc) * k + pe]);
+                let mut acc = [[0.0f64; 8]; 4];
+                for p in 0..pl {
+                    for (acc_r, ar) in acc.iter_mut().zip(a4.iter()) {
+                        let av = ar[p];
+                        for (cv, br) in acc_r.iter_mut().zip(b8.iter()) {
+                            *cv += av * br[p];
+                        }
+                    }
+                }
+                for (rr, acc_r) in acc.iter().enumerate() {
+                    let crow = &mut chunk[(r + rr) * n + j..(r + rr) * n + j + 8];
+                    for (cv, av) in crow.iter_mut().zip(acc_r.iter()) {
+                        *cv += av;
+                    }
+                }
+                j += 8;
+            }
+            // column remainder: single B rows against the 4 A rows
+            while j < n {
+                let brow = &bd[j * k + pb..j * k + pe];
+                for (rr, ar) in a4.iter().enumerate() {
+                    let mut s = 0.0;
+                    for (av, bv) in ar.iter().zip(brow.iter()) {
+                        s += av * bv;
+                    }
+                    chunk[(r + rr) * n + j] += s;
+                }
+                j += 1;
+            }
+            r += 4;
+        }
+        // remainder rows: plain dot products
+        while r < rows {
+            let arow = &ad[(i0 + r) * k + pb..(i0 + r) * k + pe];
+            for j in 0..n {
+                let brow = &bd[j * k + pb..j * k + pe];
+                let mut s = 0.0;
+                for (av, bv) in arow.iter().zip(brow.iter()) {
+                    s += av * bv;
+                }
+                chunk[r * n + j] += s;
+            }
+            r += 1;
+        }
+    }
+}
+
 /// Row block size for [`gemm_tn`]'s output (columns of `A`).
 const TN_RB: usize = 64;
 
@@ -218,17 +326,30 @@ pub fn matvec_into(a: &Matrix, x: &[f64], y: &mut [f64]) {
 /// and accumulates the same ascending-`i` sequence per element, so both
 /// paths agree bitwise.
 pub fn matvec_t(a: &Matrix, x: &[f64]) -> Vec<f64> {
+    let mut y = vec![0.0; a.cols()];
+    matvec_t_acc(a, x, &mut y);
+    y
+}
+
+/// `y += Aᵀ * x` into an existing buffer (no allocation, no transpose).
+///
+/// The streaming `K_nMᵀ·u` paths accumulate one row tile after another
+/// into the same length-`M` output; this routine is that building block.
+/// Per element the accumulation order is ascending row index `i` on both
+/// the serial and the column-chunked parallel path, so the result is
+/// bit-identical at any thread count.
+pub fn matvec_t_acc(a: &Matrix, x: &[f64], y: &mut [f64]) {
     assert_eq!(a.rows(), x.len());
+    assert_eq!(a.cols(), y.len());
     let (rows, cols) = (a.rows(), a.cols());
-    let mut y = vec![0.0; cols];
     if rows.saturating_mul(cols) < PAR_MIN_MV || cols <= MT_CB {
         for (i, &xi) in x.iter().enumerate() {
-            super::axpy(xi, a.row(i), &mut y);
+            super::axpy(xi, a.row(i), y);
         }
-        return y;
+        return;
     }
     let ad = a.as_slice();
-    pool::par_chunks_mut(&mut y, MT_CB, |blk, ych| {
+    pool::par_chunks_mut(y, MT_CB, |blk, ych| {
         let j0 = blk * MT_CB;
         let w = ych.len();
         for (i, &xi) in x.iter().enumerate() {
@@ -238,7 +359,6 @@ pub fn matvec_t(a: &Matrix, x: &[f64]) -> Vec<f64> {
             }
         }
     });
-    y
 }
 
 #[cfg(test)]
@@ -291,6 +411,65 @@ mod tests {
         let c1 = gemm_tn(&a, &b);
         let c2 = gemm(&a.transpose(), &b);
         assert!(c1.max_abs_diff(&c2) < 1e-10);
+    }
+
+    #[test]
+    fn gemm_nt_matches_gemm_with_transpose() {
+        // kernel cross-term shape: tall × small-d against a center panel
+        let a = Matrix::from_fn(67, 18, |i, j| ((i * 7 + j * 13) % 11) as f64 * 0.3 - 1.0);
+        let b = Matrix::from_fn(45, 18, |i, j| ((i * 3 + j * 17) % 9) as f64 * 0.25 - 1.0);
+        let c1 = gemm_nt(&a, &b);
+        let c2 = gemm(&a, &b.transpose());
+        assert!(c1.max_abs_diff(&c2) < 1e-10);
+        // square shape crossing KC and the parallel-dispatch threshold
+        let a = Matrix::from_fn(150, 300, |i, j| ((i * 300 + j) as f64 * 0.37).sin());
+        let b = Matrix::from_fn(90, 300, |i, j| ((i * 90 + j) as f64 * 0.73).cos());
+        let c1 = gemm_nt(&a, &b);
+        let c2 = gemm(&a, &b.transpose());
+        assert!(c1.max_abs_diff(&c2) < 1e-9);
+    }
+
+    #[test]
+    fn gemm_nt_into_accumulates() {
+        let a = Matrix::from_fn(9, 5, |i, j| (i + j) as f64);
+        let b = Matrix::from_fn(7, 5, |i, j| (i as f64 - j as f64) * 0.5);
+        let mut c = Matrix::from_fn(9, 7, |i, j| (i * 7 + j) as f64);
+        let expect = {
+            let mut e = c.clone();
+            let p = gemm(&a, &b.transpose());
+            for (ev, pv) in e.as_mut_slice().iter_mut().zip(p.as_slice()) {
+                *ev += pv;
+            }
+            e
+        };
+        gemm_nt_into(&a, &b, &mut c);
+        assert!(c.max_abs_diff(&expect) < 1e-12);
+    }
+
+    #[test]
+    fn gemm_nt_odd_remainders() {
+        // rows not divisible by 4, cols not divisible by 8
+        let a = Matrix::from_fn(13, 29, |i, j| ((i * 29 + j) % 7) as f64 - 3.0);
+        let b = Matrix::from_fn(11, 29, |i, j| ((i * 11 + j) % 5) as f64 - 2.0);
+        let c1 = gemm_nt(&a, &b);
+        let c2 = gemm(&a, &b.transpose());
+        assert!(c1.max_abs_diff(&c2) < 1e-11);
+    }
+
+    #[test]
+    fn matvec_t_acc_accumulates_tiles() {
+        // two stacked tiles accumulated into one output equal the full product
+        let full = Matrix::from_fn(60, 24, |i, j| ((i * 24 + j) as f64 * 0.19).sin());
+        let top = Matrix::from_fn(35, 24, |i, j| full.get(i, j));
+        let bot = Matrix::from_fn(25, 24, |i, j| full.get(35 + i, j));
+        let x: Vec<f64> = (0..60).map(|i| (i as f64 * 0.41).cos()).collect();
+        let mut acc = vec![0.0; 24];
+        matvec_t_acc(&top, &x[..35], &mut acc);
+        matvec_t_acc(&bot, &x[35..], &mut acc);
+        let direct = matvec_t(&full, &x);
+        for (a, b) in acc.iter().zip(&direct) {
+            assert!((a - b).abs() < 1e-10);
+        }
     }
 
     #[test]

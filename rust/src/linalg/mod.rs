@@ -19,7 +19,10 @@ mod matrix;
 mod triangular;
 
 pub use chol::{cholesky, cholesky_in_place, CholeskyFactor};
-pub use gemm::{gemm, gemm_into, gemm_tn, matvec, matvec_into, matvec_t};
+pub use gemm::{
+    gemm, gemm_into, gemm_nt, gemm_nt_acc, gemm_nt_into, gemm_tn, matvec, matvec_into, matvec_t,
+    matvec_t_acc,
+};
 pub use matrix::Matrix;
 pub use triangular::{solve_lower, solve_lower_matrix, solve_upper, solve_upper_matrix};
 

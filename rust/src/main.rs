@@ -91,6 +91,10 @@ common flags:  --n --lambda --sigma --seed --reps --engine native|xla|auto
                output is bit-identical at any N)
                --csv <path> (also save the result table as CSV)
 train flags:   --dataset susy|higgs --lambda-bless --lambda-falkon --iters --save
+               --mem-budget MB (K_nM panel-cache budget; cached tiles are
+               evaluated once per fit instead of once per CG iteration;
+               0 = pure streaming; default = RAM/4 — results are
+               bit-identical at any budget)
 serve flags:   --host --port --workers --max-batch --linger-us --cache
                --cache-quant --max-queue (0 = unbounded; default 1024)
                --threads (shared compute pool for all models' batch GEMMs;
@@ -301,7 +305,22 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
         t0.elapsed().as_secs_f64()
     );
 
-    let solver = bless::falkon::Falkon::new(eng.as_dyn(), &set, lambda_falkon)?;
+    // K_nM panel budget: --mem-budget in MiB (0 = pure streaming);
+    // default = a quarter of RAM. Bit-identical output at any budget.
+    let budget_bytes = match args.get("mem-budget") {
+        Some(_) => args.get_usize("mem-budget", 0).saturating_mul(1 << 20),
+        None => bless::kernels::default_budget_bytes(),
+    };
+    let solver =
+        bless::falkon::Falkon::with_budget(eng.as_dyn(), &set, lambda_falkon, budget_bytes)?;
+    let plan = solver.panel().plan();
+    println!(
+        "panel cache: {}/{} tiles materialized ({:.1} MiB of {:.1} MiB budget)",
+        plan.cached_tiles,
+        plan.tiles(),
+        plan.cached_bytes as f64 / (1 << 20) as f64,
+        plan.budget_bytes as f64 / (1 << 20) as f64
+    );
     let model = solver.fit(&train.y, iters, None)?;
     let test_auc = bless::data::auc(&model.predict(eng.as_dyn(), &test.x), &test.y);
     println!(

@@ -64,7 +64,7 @@ impl ModelArtifact {
         );
         let art = ModelArtifact {
             sigma: engine.kernel().sigma(),
-            centers: model.center_rows(engine),
+            centers: model.center_rows().clone(),
             alpha: model.alpha.clone(),
             trained_n: engine.n(),
             dataset: dataset.to_string(),
@@ -284,14 +284,15 @@ pub struct Predictor {
 impl Predictor {
     /// Build from a (loaded or freshly packaged) artifact.
     pub fn new(artifact: &ModelArtifact) -> Predictor {
-        Predictor {
-            engine: NativeEngine::new(artifact.centers.clone(), Gaussian::new(artifact.sigma)),
-            model: FalkonModel {
-                centers: (0..artifact.m()).collect(),
-                alpha: artifact.alpha.clone(),
-                iterations: vec![],
-            },
-        }
+        let engine = NativeEngine::new(artifact.centers.clone(), Gaussian::new(artifact.sigma));
+        // `from_parts` gathers the center rows once; every batch predict
+        // afterwards reuses that gather instead of re-copying M×d rows.
+        // The engine's dataset here *is* the center matrix, so the model
+        // holds a second M×d copy — accepted: it is small (a few hundred
+        // KiB at M=2000, d=18) and keeps predict engine-agnostic.
+        let model =
+            FalkonModel::from_parts(&engine, (0..artifact.m()).collect(), artifact.alpha.clone());
+        Predictor { engine, model }
     }
 
     /// Feature dimension queries must have.

@@ -1,0 +1,107 @@
+//! End-to-end determinism of the memory-budgeted `K_nM` panel cache:
+//! FALKON training and prediction must be **bit-identical** whether the
+//! panel is fully streamed (`--mem-budget 0`), partially cached (budget
+//! covers only a prefix of the row tiles), or fully materialized —
+//! because cached tiles hold exactly the bytes the streaming evaluator
+//! produces and the tile partition never depends on the budget.
+
+use bless::data::susy_like;
+use bless::falkon::Falkon;
+use bless::kernels::{Gaussian, KernelEngine, NativeEngine, PanelCache, DEFAULT_ROW_TILE};
+use bless::leverage::WeightedSet;
+use bless::rng::Rng;
+
+fn bits_of(v: &[f64]) -> Vec<u64> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+/// A multi-tile problem: n crosses two tile boundaries so a partial
+/// budget genuinely mixes cached and recomputed tiles.
+fn setup() -> (NativeEngine, Vec<f64>, WeightedSet, usize) {
+    let n = 2 * DEFAULT_ROW_TILE + 400; // 3 tiles: full, full, partial
+    let mut rng = Rng::seeded(404);
+    let ds = susy_like(n, &mut rng);
+    let eng = NativeEngine::new(ds.x, Gaussian::new(4.0));
+    let centers = rng.sample_without_replacement(n, 96);
+    let m = centers.len();
+    (eng, ds.y, WeightedSet::uniform(centers, 1e-4), m)
+}
+
+/// Budget that caches exactly `tiles` leading tiles for `m` centers.
+fn budget_for_tiles(tiles: usize, m: usize, d: usize) -> usize {
+    m * (d + 2) * 8 + tiles * DEFAULT_ROW_TILE * m * 8
+}
+
+#[test]
+fn falkon_bitwise_identical_across_budgets() {
+    let (eng, y, set, m) = setup();
+    let d = eng.points().cols();
+    let fit_at = |budget: usize| {
+        let solver = Falkon::with_budget(&eng, &set, 1e-4, budget).unwrap();
+        let model = solver.fit(&y, 8, None).unwrap();
+        let train_preds = model.predict(&eng, eng.points());
+        (solver.panel().plan().cached_tiles, model.alpha, train_preds)
+    };
+
+    let (t0, alpha0, preds0) = fit_at(0);
+    assert_eq!(t0, 0, "budget 0 must stream everything");
+    let (t1, alpha1, preds1) = fit_at(budget_for_tiles(1, m, d));
+    assert_eq!(t1, 1, "partial budget must cache exactly one tile");
+    let (t2, alpha2, preds2) = fit_at(usize::MAX);
+    assert_eq!(t2, 3, "unbounded budget must cache all tiles");
+
+    for (label, alpha, preds) in
+        [("partial", &alpha1, &preds1), ("unbounded", &alpha2, &preds2)]
+    {
+        assert_eq!(bits_of(&alpha0), bits_of(alpha), "α diverged on the {label} budget");
+        assert_eq!(
+            bits_of(&preds0),
+            bits_of(preds),
+            "training predictions diverged on the {label} budget"
+        );
+    }
+}
+
+#[test]
+fn panel_matvecs_bitwise_identical_across_budgets() {
+    let (eng, _y, set, m) = setup();
+    let d = eng.points().cols();
+    let v: Vec<f64> = (0..m).map(|i| ((i as f64) * 0.37).sin()).collect();
+    let u: Vec<f64> = (0..eng.n()).map(|i| ((i as f64) * 0.013).cos()).collect();
+    let reference = PanelCache::new(&eng, &set.indices, 0);
+    let r_knm = reference.knm_matvec(&v);
+    let r_t = reference.knm_t_matvec(&u);
+    let r_fused = reference.knm_t_knm_matvec(&v);
+    for tiles in [1usize, 2, 3] {
+        let cache = PanelCache::new(&eng, &set.indices, budget_for_tiles(tiles, m, d));
+        assert_eq!(cache.plan().cached_tiles, tiles);
+        assert_eq!(bits_of(&r_knm), bits_of(&cache.knm_matvec(&v)), "K·v @ {tiles} tiles");
+        assert_eq!(bits_of(&r_t), bits_of(&cache.knm_t_matvec(&u)), "Kᵀ·u @ {tiles} tiles");
+        assert_eq!(
+            bits_of(&r_fused),
+            bits_of(&cache.knm_t_knm_matvec(&v)),
+            "KᵀK·v @ {tiles} tiles"
+        );
+    }
+}
+
+#[test]
+fn cached_panel_stops_paying_for_kernel_evaluations() {
+    let (eng, y, set, _m) = setup();
+    let iters = 6;
+
+    let streamed = Falkon::with_budget(&eng, &set, 1e-4, 0).unwrap();
+    streamed.fit(&y, iters, None).unwrap();
+    let s = streamed.panel().stats();
+
+    let cached = Falkon::with_budget(&eng, &set, 1e-4, usize::MAX).unwrap();
+    cached.fit(&y, iters, None).unwrap();
+    let c = cached.panel().stats();
+
+    let panel_entries = (eng.n() * streamed.m()) as u64;
+    // streaming: one RHS pass + one pass per CG iteration
+    assert_eq!(s.entries_evaluated, (iters as u64 + 1) * panel_entries);
+    assert_eq!(c.entries_evaluated, panel_entries, "cached path must evaluate once");
+    assert_eq!(c.streamed, 0);
+    assert!(c.cached_hits > 0);
+}

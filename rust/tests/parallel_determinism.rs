@@ -8,7 +8,7 @@
 
 use bless::data::susy_like;
 use bless::falkon::Falkon;
-use bless::kernels::{Gaussian, KernelEngine, NativeEngine};
+use bless::kernels::{Gaussian, KernelEngine, NativeEngine, PanelCache, DEFAULT_ROW_TILE};
 use bless::leverage::WeightedSet;
 use bless::linalg::{self, Matrix};
 use bless::rng::Rng;
@@ -140,5 +140,72 @@ fn falkon_training_and_predictions_bit_identical() {
         let (alphap, predsp) = at_threads(t, fit_once);
         assert_eq!(bits_of(&alpha1), bits_of(&alphap), "FALKON α diverged at {t} threads");
         assert_eq!(bits_of(&preds1), bits_of(&predsp), "predictions diverged at {t} threads");
+    }
+}
+
+#[test]
+fn panel_cache_bit_identical_across_threads_and_budgets() {
+    let _g = lock();
+    // multi-tile shape so a partial budget mixes cached + streamed tiles
+    let n = DEFAULT_ROW_TILE + 300;
+    let ds = susy_like(n, &mut Rng::seeded(13));
+    let eng = NativeEngine::new(ds.x, Gaussian::new(3.0));
+    let centers: Vec<usize> = (0..70).map(|i| i * 17).collect();
+    let m = centers.len();
+    let d = eng.points().cols();
+    let partial_budget = m * (d + 2) * 8 + DEFAULT_ROW_TILE * m * 8; // 1 of 2 tiles
+    let v: Vec<f64> = (0..m).map(|i| ((i as f64) * 0.29).sin()).collect();
+    let u: Vec<f64> = (0..n).map(|i| ((i as f64) * 0.011).cos()).collect();
+
+    let sweep = |budget: usize| {
+        let cache = PanelCache::new(&eng, &centers, budget);
+        (cache.knm_matvec(&v), cache.knm_t_matvec(&u), cache.knm_t_knm_matvec(&v))
+    };
+    let (y1, z1, f1) = at_threads(1, || sweep(0));
+    for t in [1usize, 2, 4, 8] {
+        for budget in [0usize, partial_budget, usize::MAX] {
+            let (yp, zp, fp) = at_threads(t, || sweep(budget));
+            assert_eq!(bits_of(&y1), bits_of(&yp), "K·v @ {t} threads, budget {budget}");
+            assert_eq!(bits_of(&z1), bits_of(&zp), "Kᵀ·u @ {t} threads, budget {budget}");
+            assert_eq!(bits_of(&f1), bits_of(&fp), "KᵀK·v @ {t} threads, budget {budget}");
+        }
+    }
+}
+
+#[test]
+fn falkon_cached_and_streamed_paths_bit_identical_across_threads() {
+    let _g = lock();
+    let mut rng = Rng::seeded(77);
+    let n = DEFAULT_ROW_TILE + 250;
+    let ds = susy_like(n, &mut rng);
+    let (train, test) = ds.split(0.25, &mut rng);
+    let centers = Rng::seeded(9).sample_without_replacement(train.n(), 64);
+    let lambda = 1e-3;
+    let set = WeightedSet::uniform(centers, lambda);
+
+    let fit_at = |budget: usize| {
+        let eng = NativeEngine::new(train.x.clone(), Gaussian::new(3.0));
+        let model = Falkon::with_budget(&eng, &set, lambda, budget)
+            .unwrap()
+            .fit(&train.y, 5, None)
+            .unwrap();
+        let preds = model.predict(&eng, &test.x);
+        (model.alpha, preds)
+    };
+    let (alpha1, preds1) = at_threads(1, || fit_at(0));
+    for t in [1usize, 2, 4, 8] {
+        for budget in [0usize, usize::MAX] {
+            let (alphap, predsp) = at_threads(t, || fit_at(budget));
+            assert_eq!(
+                bits_of(&alpha1),
+                bits_of(&alphap),
+                "FALKON α diverged at {t} threads, budget {budget}"
+            );
+            assert_eq!(
+                bits_of(&preds1),
+                bits_of(&predsp),
+                "predictions diverged at {t} threads, budget {budget}"
+            );
+        }
     }
 }
