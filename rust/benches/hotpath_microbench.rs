@@ -11,7 +11,8 @@
 //! cargo bench --bench hotpath_microbench -- --threads 4
 //! cargo bench --bench hotpath_microbench -- \
 //!     --out ../BENCH_parallel.json \
-//!     --falkon-out ../BENCH_falkon.json  # emit the repo-root schemas
+//!     --falkon-out ../BENCH_falkon.json \
+//!     --chol-out ../BENCH_chol.json  # emit the repo-root schemas
 //! ```
 //!
 //! With `--out`, writes `BENCH_parallel.json` (flat object of named
@@ -21,13 +22,18 @@
 //! `gemm_nt` vs gemm-plus-transpose GFLOP/s) so CI can track the panel
 //! cache's trajectory. `--falkon-n/--falkon-m/--falkon-iters` resize the
 //! training shape (default n=8000, M=800, t=10 — the SUSY-like shape of
-//! the ISSUE acceptance bar).
+//! the ISSUE acceptance bar). With `--chol-out`, writes `BENCH_chol.json`
+//! (serial-vs-N-thread Cholesky GF/s at M=512/1024/2048, the
+//! `syrk_tn_of_lower` vs `gemm_tn` G-build, preconditioner build
+//! wall-clock, and the multi-RHS `LᵀX=B` TRSM).
 
 use bless::data::susy_like;
-use bless::falkon::Falkon;
+use bless::falkon::{Falkon, Preconditioner};
 use bless::kernels::{Gaussian, KernelEngine, NativeEngine};
 use bless::leverage::{LsGenerator, WeightedSet};
-use bless::linalg::{cholesky, gemm, gemm_nt, Matrix};
+use bless::linalg::{
+    cholesky, gemm, gemm_nt, gemm_tn, solve_upper_from_lower_matrix, syrk_tn_of_lower, Matrix,
+};
 use bless::rng::Rng;
 use bless::util::bench::{black_box, Bencher};
 use bless::util::cli::Args;
@@ -63,10 +69,8 @@ fn main() {
         "gemm_nt disagrees with gemm + transpose"
     );
 
-    // --- Cholesky (LsGenerator / preconditioner factorizations)
-    let mut spd = gemm(&a512, &a512.transpose());
-    spd.add_scaled_identity(600.0);
-    b.bench("cholesky 512", || cholesky(&spd).unwrap());
+    // (Cholesky moved to the factorization-tier section below: serial
+    //  and parallel rows at 512/1024/2048 on the shared SPD probe.)
 
     // --- kernel block evaluation
     let ds = susy_like(4_096, &mut Rng::seeded(3));
@@ -146,6 +150,93 @@ fn main() {
         kblk_s.median_s / kblk_p.median_s
     );
 
+    // --- factorization tier: blocked Cholesky / syrk / TRSM, serial vs
+    //     parallel (the chol-2048 row is the ISSUE-5 acceptance bar).
+    println!("\n-- factorization tier: serial vs {nthreads} threads --");
+    let spd_of = Matrix::spd_probe;
+    // (n, serial GF/s, parallel GF/s, speedup)
+    let mut chol_rows: Vec<(usize, f64, f64, f64)> = Vec::new();
+    for &cn in &[512usize, 1024, 2048] {
+        let a = spd_of(cn);
+        pool::set_threads(1);
+        let s = b.bench(&format!("cholesky {cn} (1 thread)"), || cholesky(&a).unwrap()).clone();
+        let f_serial = cholesky(&a).unwrap();
+        pool::set_threads(nthreads);
+        let p = b
+            .bench(&format!("cholesky {cn} ({nthreads} threads)"), || cholesky(&a).unwrap())
+            .clone();
+        let f_par = cholesky(&a).unwrap();
+        for (x, y) in f_serial.l().as_slice().iter().zip(f_par.l().as_slice()) {
+            assert_eq!(x.to_bits(), y.to_bits(), "parallel cholesky diverged at n={cn}");
+        }
+        // standard Cholesky flop count: n³/3
+        let flops = (cn as f64).powi(3) / 3.0;
+        let gfs = flops / s.median_s / 1e9;
+        let gfp = flops / p.median_s / 1e9;
+        let speedup = s.median_s / p.median_s;
+        println!(
+            "cholesky {cn:<5}: {gfs:.2} → {gfp:.2} GF/s  ({speedup:.2}× on {nthreads} threads)"
+        );
+        chol_rows.push((cn, gfs, gfp, speedup));
+    }
+
+    // G-build for the FALKON preconditioner: triangular rank-k update vs
+    // the dense gemm_tn(L, L) it replaced, plus whole-precond wall-clock.
+    let gm = 1024usize;
+    let spd_g = spd_of(gm);
+    let lfac = cholesky(&spd_g).unwrap();
+    let g_gemm = b.bench("G build: gemm_tn(L, L) 1024 (dense)", || gemm_tn(lfac.l(), lfac.l()));
+    let g_gemm_ms = g_gemm.median_s * 1e3;
+    let g_syrk =
+        b.bench("G build: syrk_tn_of_lower(L) 1024", || syrk_tn_of_lower(lfac.l())).clone();
+    let g_syrk_ms = g_syrk.median_s * 1e3;
+    assert!(
+        syrk_tn_of_lower(lfac.l()).max_abs_diff(&gemm_tn(lfac.l(), lfac.l())) < 1e-8,
+        "syrk_tn_of_lower disagrees with gemm_tn"
+    );
+    let weights = vec![1.0; gm];
+    pool::set_threads(1);
+    let pre_s = b
+        .bench("Preconditioner::new M=1024 (1 thread)", || {
+            Preconditioner::new(&spd_g, &weights, 8 * gm, 1e-3).unwrap()
+        })
+        .clone();
+    pool::set_threads(nthreads);
+    let pre_p = b
+        .bench(&format!("Preconditioner::new M=1024 ({nthreads} threads)"), || {
+            Preconditioner::new(&spd_g, &weights, 8 * gm, 1e-3).unwrap()
+        })
+        .clone();
+    println!(
+        "precond build  : {:.1} ms → {:.1} ms  ({:.2}× on {nthreads} threads; \
+         G via syrk {g_syrk_ms:.1} ms vs gemm_tn {g_gemm_ms:.1} ms)",
+        pre_s.median_s * 1e3,
+        pre_p.median_s * 1e3,
+        pre_s.median_s / pre_p.median_s
+    );
+
+    // multi-RHS back substitution Lᵀ X = B off the stored lower factor
+    let rhs = Matrix::from_fn(gm, 512, |i, j| ((i * 512 + j) as f64 * 0.11).sin());
+    pool::set_threads(1);
+    let trsm_s = b
+        .bench("solve LᵀX=B 1024×512 (1 thread)", || {
+            solve_upper_from_lower_matrix(lfac.l(), &rhs)
+        })
+        .clone();
+    pool::set_threads(nthreads);
+    let trsm_p = b
+        .bench(&format!("solve LᵀX=B 1024×512 ({nthreads} threads)"), || {
+            solve_upper_from_lower_matrix(lfac.l(), &rhs)
+        })
+        .clone();
+    let trsm_flops = (gm * gm) as f64 * 512.0; // n²/2 madds × 2 flops, per RHS column
+    let trsm_gfs = trsm_flops / trsm_s.median_s / 1e9;
+    let trsm_gfp = trsm_flops / trsm_p.median_s / 1e9;
+    println!(
+        "trsm LᵀX=B     : {trsm_gfs:.2} → {trsm_gfp:.2} GF/s  ({:.2}× on {nthreads} threads)",
+        trsm_s.median_s / trsm_p.median_s
+    );
+
     // --- FALKON CG-iteration throughput: streamed vs cached K_nM panel.
     // Whole-train wall-clock (solver construction + t CG iterations), so
     // the cached side pays for its one materialization sweep up front.
@@ -190,6 +281,32 @@ fn main() {
          GFLOP/s ({:.2}×, zero transpose allocations)",
         nt_t.median_s / nt_d.median_s
     );
+
+    // --- BENCH_chol.json (repo-root schema: flat object of metrics)
+    if let Some(out) = args.get("chol-out") {
+        let mut obj = BTreeMap::new();
+        let mut put = |k: &str, v: f64| {
+            obj.insert(k.to_string(), Json::Num(v));
+        };
+        put("threads", nthreads as f64);
+        for &(cn, gfs, gfp, speedup) in &chol_rows {
+            put(&format!("chol{cn}_gflops_serial"), gfs);
+            put(&format!("chol{cn}_gflops_parallel"), gfp);
+            put(&format!("chol{cn}_speedup"), speedup);
+        }
+        put("g_syrk_ms", g_syrk_ms);
+        put("g_gemm_tn_ms", g_gemm_ms);
+        put("g_syrk_speedup", g_gemm_ms / g_syrk_ms);
+        put("precond_build_serial_ms", pre_s.median_s * 1e3);
+        put("precond_build_parallel_ms", pre_p.median_s * 1e3);
+        put("precond_build_speedup", pre_s.median_s / pre_p.median_s);
+        put("trsm_gflops_serial", trsm_gfs);
+        put("trsm_gflops_parallel", trsm_gfp);
+        put("trsm_speedup", trsm_s.median_s / trsm_p.median_s);
+        obj.insert("bench".to_string(), Json::Str("chol".to_string()));
+        std::fs::write(out, Json::Obj(obj).to_string()).expect("writing BENCH json");
+        println!("wrote {out}");
+    }
 
     // --- BENCH_falkon.json (repo-root schema: flat object of metrics)
     if let Some(out) = args.get("falkon-out") {

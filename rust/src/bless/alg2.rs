@@ -86,11 +86,23 @@ pub fn bless_r(
         }
 
         // Degenerate-level guard: top up with uniform columns at weight 1.
-        while indices.len() < cfg.min_m.min(n) {
-            let j = rng.below(n);
-            if !indices.contains(&j) {
-                indices.push(j);
-                weights.push(1.0);
+        // Membership is tracked in a bitvec — O(1) per draw instead of the
+        // O(m) `indices.contains` scan (O(m²) per level) — with the exact
+        // same accept/reject decisions, so the RNG draw sequence is
+        // unchanged (the rejection-sampled `indices` are duplicate-free).
+        let floor = cfg.min_m.min(n);
+        if indices.len() < floor {
+            let mut seen = vec![false; n];
+            for &j in &indices {
+                seen[j] = true;
+            }
+            while indices.len() < floor {
+                let j = rng.below(n);
+                if !seen[j] {
+                    seen[j] = true;
+                    indices.push(j);
+                    weights.push(1.0);
+                }
             }
         }
 

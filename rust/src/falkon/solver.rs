@@ -231,35 +231,30 @@ pub fn nystrom_krr(
     let center_set = Arc::new(engine.gather_centers(centers));
     let kmm = engine.centers_square(&center_set);
 
-    // H = K_nMᵀ K_nM accumulated over row tiles; rhs = K_nMᵀ y
+    // H = K_nMᵀ K_nM accumulated over row tiles via the symmetric
+    // rank-k update (half the multiply-adds of a dense `gemm_tn`, no
+    // per-tile M×M temporary): lower triangles per tile, one mirror at
+    // the end — the jittered factorization below relies on H being
+    // exactly symmetric. rhs = K_nMᵀ y.
     let mut h = Matrix::zeros(m, m);
     let mut rhs = vec![0.0; m];
     for (s, e) in tile_indices(n, crate::kernels::DEFAULT_ROW_TILE) {
         let blk = engine.block_range(s, e, &center_set);
-        let ht = linalg::gemm_tn(&blk, &blk);
-        for (hv, tv) in h.as_mut_slice().iter_mut().zip(ht.as_slice()) {
-            *hv += tv;
-        }
+        linalg::syrk_tn_into(&blk, &mut h);
         linalg::matvec_t_acc(&blk, &y[s..e], &mut rhs);
     }
+    h.mirror_lower_to_upper();
     let lam_n = lambda * n as f64;
     for (hv, kv) in h.as_mut_slice().iter_mut().zip(kmm.as_slice()) {
         *hv += lam_n * kv;
     }
-    // jittered Cholesky (K_MM may be numerically rank-deficient)
+    // jittered Cholesky (K_MM may be numerically rank-deficient): factor
+    // in place, rebuilding the lower triangle from the intact strict
+    // upper (H is exactly symmetric) between attempts instead of cloning
+    // the M×M matrix per attempt.
     let trace: f64 = h.diagonal().iter().sum();
-    let mut jitter = 0.0;
-    let f = loop {
-        let mut hj = h.clone();
-        if jitter > 0.0 {
-            hj.add_scaled_identity(jitter);
-        }
-        if let Some(f) = linalg::cholesky(&hj) {
-            break f;
-        }
-        jitter = if jitter == 0.0 { trace * 1e-12 / m as f64 } else { jitter * 100.0 };
-        anyhow::ensure!(jitter < trace.max(1.0), "normal equations singular");
-    };
+    let (f, _jitter) = linalg::cholesky_jittered(h, trace * 1e-12 / m as f64, trace.max(1.0))
+        .ok_or_else(|| anyhow::anyhow!("normal equations singular"))?;
     let alpha = f.solve(&rhs);
     Ok(FalkonModel { centers: centers.to_vec(), alpha, iterations: vec![], center_set })
 }

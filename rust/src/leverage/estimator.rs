@@ -9,7 +9,7 @@
 
 use crate::kernels::{tile_indices, Centers, KernelEngine, DEFAULT_ROW_TILE};
 use crate::leverage::WeightedSet;
-use crate::linalg::{cholesky, CholeskyFactor, Matrix};
+use crate::linalg::{cholesky_take, CholeskyFactor, Matrix};
 
 /// Leverage-score generator for a fixed `(J, A, λ)`.
 ///
@@ -48,9 +48,10 @@ impl<'a> LsGenerator<'a> {
             kjj.add_scaled_diag(lam_n, &set.weights);
             // With-replacement samplers can hand us duplicate indices,
             // which keeps K_JJ PSD but can make the factorization
-            // borderline; the λnA shift keeps it SPD for A > 0.
-            let f = cholesky(&kjj)
-                .ok_or_else(|| anyhow::anyhow!("K_JJ + λnA not SPD (λ={lambda})"))?;
+            // borderline; the λnA shift keeps it SPD for A > 0. The
+            // in-place factorization takes ownership — no |J|² clone.
+            let f = cholesky_take(kjj)
+                .map_err(|_| anyhow::anyhow!("K_JJ + λnA not SPD (λ={lambda})"))?;
             Some(f)
         };
         Ok(LsGenerator { engine, set: set.clone(), centers, lambda, factor })
@@ -126,17 +127,15 @@ impl<'a> LsGenerator<'a> {
     }
 
     /// Shared tail: given `K_{J,·}` (|J| × m) and the kernel diagonal,
-    /// compute `(K_ii − ‖L⁻¹ k_i‖²)/(λn)` column-wise.
+    /// compute `(K_ii − ‖L⁻¹ k_i‖²)/(λn)` column-wise. Both stages run
+    /// on the pool over fixed column blocks of the batch: the triangular
+    /// solve through [`CholeskyFactor::solve_l_matrix`] and the
+    /// `‖L⁻¹ k_i‖²` contraction through
+    /// [`crate::linalg::column_sq_norms`] — bit-identical at any thread
+    /// count.
     fn scores_from_cross(&self, kju: &Matrix, diag: &[f64], f: &CholeskyFactor) -> Vec<f64> {
         let z = f.solve_l_matrix(kju);
-        let m = kju.cols();
-        let mut col_sq = vec![0.0; m];
-        for r in 0..z.rows() {
-            let row = z.row(r);
-            for (c, v) in row.iter().enumerate() {
-                col_sq[c] += v * v;
-            }
-        }
+        let col_sq = crate::linalg::column_sq_norms(&z);
         let lam_n = self.lambda * self.engine.n() as f64;
         // exact arithmetic guarantees positivity; clamp the float residue
         diag.iter()

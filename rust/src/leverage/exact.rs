@@ -6,12 +6,15 @@
 //! solve instead of a full inverse.
 
 use crate::kernels::KernelEngine;
-use crate::linalg::cholesky;
+use crate::linalg::{cholesky_take, column_sq_norms};
 
 /// Exact leverage scores for all `n` points at regularization `λ`.
 ///
 /// Cost: `O(n³)` time, `O(n²)` memory — only feasible for moderate `n`;
-/// used as the Figure-1 accuracy reference and in tests.
+/// used as the Figure-1 accuracy reference and in tests. The
+/// factorization, the `n`-column triangular solve and the `‖Z e_i‖²`
+/// contraction all run on the shared pool (fixed-block partitions, so
+/// the scores are bit-identical at any thread count).
 pub fn exact_leverage_scores(engine: &dyn KernelEngine, lambda: f64) -> Vec<f64> {
     let n = engine.n();
     assert!(n > 0 && lambda > 0.0);
@@ -20,16 +23,13 @@ pub fn exact_leverage_scores(engine: &dyn KernelEngine, lambda: f64) -> Vec<f64>
     let lam_n = lambda * n as f64;
     let mut reg = k.clone();
     reg.add_scaled_identity(lam_n);
-    let f = cholesky(&reg).expect("K + λnI must be SPD");
+    let f = match cholesky_take(reg) {
+        Ok(f) => f,
+        Err(_) => panic!("K + λnI must be SPD"),
+    };
     // Z = L⁻¹ K ; ℓ_i = (K_ii − ‖Z e_i‖²)/(λn) = (K_ii − Σ_r Z_ri²)/(λn)
     let z = f.solve_l_matrix(&k);
-    let mut col_sq = vec![0.0; n];
-    for r in 0..n {
-        let row = z.row(r);
-        for (c, v) in row.iter().enumerate() {
-            col_sq[c] += v * v;
-        }
-    }
+    let col_sq = column_sq_norms(&z);
     (0..n).map(|i| ((k.get(i, i) - col_sq[i]) / lam_n).max(0.0)).collect()
 }
 
@@ -66,9 +66,9 @@ mod tests {
         reg.add_scaled_identity(lambda * n as f64);
         let f = crate::linalg::cholesky(&reg).unwrap();
         // X = (K+λnI)⁻¹ K, ℓ_i = (K X)… — use symmetric form: ℓ_i = (K A⁻¹)_ii
-        // = Σ_j K_ij (A⁻¹K)_ji ; compute A⁻¹K column-block and contract.
-        let y = f.solve_l_matrix(&k);
-        let ainv_k = crate::linalg::solve_upper_matrix(f.l(), &y);
+        // = Σ_j K_ij (A⁻¹K)_ji ; compute A⁻¹K via the fused SPD solve
+        // and contract.
+        let ainv_k = f.solve_matrix(&k);
         let prod = gemm(&k, &ainv_k);
         // note: leverage = diag(K (K+λnI)^{-1}); K(K+λnI)^{-1} and
         // (K+λnI)^{-1}K share the diagonal by symmetry — but `prod`

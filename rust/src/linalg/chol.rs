@@ -1,19 +1,37 @@
 //! Cholesky factorization of symmetric positive-definite matrices.
 //!
-//! Blocked right-looking algorithm: factor a diagonal panel, triangular-
-//! solve the column panel below it, then a (lower-triangle-only) Schur
-//! complement update. The update is the GEMM-shaped hot loop and uses the
-//! same streaming inner loop as [`super::gemm`].
+//! Blocked **right-looking** algorithm on the shared
+//! [`crate::util::pool`]: factor an `NB × NB` diagonal block serially
+//! (unblocked), triangular-solve the column panel below it in parallel
+//! over fixed row blocks, then apply a parallel lower-triangle-only
+//! rank-`NB` Schur-complement update (`A₂₂ −= L₂₁ L₂₁ᵀ`) through the
+//! same 4×8 dot-product micro-kernel as [`super::gemm_nt`]
+//! ([`super::gemm`]'s `syrk` engine). Work partitions are fixed `MC`-row
+//! blocks independent of the thread count, so the factor is
+//! **bit-identical** at any `--threads` (asserted by
+//! `tests/parallel_determinism.rs`).
 
-use super::{solve_lower, solve_lower_matrix, Matrix};
+use super::{
+    solve_llt_matrix, solve_lower, solve_lower_matrix, solve_upper_from_lower,
+    solve_upper_from_lower_matrix, Matrix,
+};
+use crate::util::pool;
 
 /// Panel width for the blocked factorization.
 const NB: usize = 96;
+/// Row-block height of the parallel panel-TRSM / Schur stages (the unit
+/// of work distribution; a multiple of the 4-row micro-kernel groups so
+/// the tile/ragged split is partition-independent).
+const MC: usize = 64;
+/// Minimum multiply-adds in a stage before it dispatches to the pool.
+const PAR_MIN_STAGE: usize = 1 << 15;
 
 /// A lower-triangular Cholesky factor `L` with `L Lᵀ = A`.
 ///
 /// Wraps the factor together with the solve routines the leverage-score
-/// and FALKON code paths need (`A⁻¹ b`, `L⁻¹ B`, quadratic forms).
+/// and FALKON code paths need (`A⁻¹ b`, `L⁻¹ B`, quadratic forms). All
+/// matrix solves run blocked and data-parallel over fixed column blocks
+/// of the right-hand side (see [`super::solve_lower_matrix`]).
 #[derive(Clone, Debug)]
 pub struct CholeskyFactor {
     l: Matrix,
@@ -51,6 +69,19 @@ impl CholeskyFactor {
         solve_lower_matrix(&self.l, b)
     }
 
+    /// Solve `Lᵀ X = B` column-block-wise against the stored lower
+    /// factor (no transpose is ever materialized).
+    pub fn solve_lt_matrix(&self, b: &Matrix) -> Matrix {
+        solve_upper_from_lower_matrix(&self.l, b)
+    }
+
+    /// Fused SPD solve `A X = B` (`= L⁻ᵀ L⁻¹ B`) for a matrix right-hand
+    /// side: both triangular sweeps run per column block on one gathered
+    /// buffer, so each block is copied in and out exactly once.
+    pub fn solve_matrix(&self, b: &Matrix) -> Matrix {
+        solve_llt_matrix(&self.l, b)
+    }
+
     /// Quadratic form `bᵀ A⁻¹ b = ‖L⁻¹ b‖²`.
     pub fn quad_form(&self, b: &[f64]) -> f64 {
         let y = solve_lower(&self.l, b);
@@ -63,24 +94,6 @@ impl CholeskyFactor {
     }
 }
 
-/// Back substitution `Lᵀ x = b` reading the *lower* factor row-wise.
-fn solve_upper_from_lower(l: &Matrix, b: &[f64]) -> Vec<f64> {
-    let n = l.rows();
-    debug_assert_eq!(b.len(), n);
-    let mut x = b.to_vec();
-    let ld = l.as_slice();
-    for i in (0..n).rev() {
-        let xi = x[i] / ld[i * n + i];
-        x[i] = xi;
-        // propagate: x[j] -= L[i][j] * xi for j < i  (column i of Lᵀ)
-        let row = &ld[i * n..i * n + i];
-        for (xj, lij) in x[..i].iter_mut().zip(row.iter()) {
-            *xj -= lij * xi;
-        }
-    }
-    x
-}
-
 /// Cholesky factorization `A = L Lᵀ`; returns `None` if `A` is not
 /// numerically positive definite.
 pub fn cholesky(a: &Matrix) -> Option<CholeskyFactor> {
@@ -89,52 +102,151 @@ pub fn cholesky(a: &Matrix) -> Option<CholeskyFactor> {
     Some(CholeskyFactor { l })
 }
 
+/// Cholesky factorization taking ownership of the input — no clone on
+/// the success path.
+///
+/// On failure the partially-overwritten matrix is handed back: the
+/// factorization only writes the **lower** triangle (the strict upper is
+/// zeroed only on success), so for a symmetric input the caller can
+/// rebuild the matrix from the intact strict upper triangle plus a saved
+/// diagonal and retry — the jittered-retry loops of the FALKON
+/// preconditioner and Nyström-KRR do exactly that instead of cloning the
+/// `M × M` matrix per attempt.
+pub fn cholesky_take(mut a: Matrix) -> Result<CholeskyFactor, Matrix> {
+    match cholesky_in_place(&mut a) {
+        Some(()) => Ok(CholeskyFactor { l: a }),
+        None => Err(a),
+    }
+}
+
+/// Cholesky with escalating diagonal jitter, entirely in place.
+///
+/// Factors `a` (symmetric, **exactly** — upper triangle mirrors lower);
+/// if the factorization fails, the matrix is rebuilt from its intact
+/// strict upper triangle plus the saved diagonal (see [`cholesky_take`])
+/// with `jitter` added — starting at `base` (floored at `1e-300`) and
+/// multiplying by 100 per attempt — so no `n × n` clone is ever made.
+/// Returns the factor and the jitter that succeeded (`0.0` when none was
+/// needed), or `None` once the jitter reaches `limit`. This is the
+/// shared retry loop of the FALKON preconditioner (`K_MM` from close-by
+/// or duplicate centers can be numerically rank-deficient) and the
+/// Nyström-KRR normal equations.
+///
+/// **Precondition:** `a` must be *bitwise* symmetric — the retry path
+/// reconstructs the lower triangle from the upper, so any asymmetry
+/// would silently change the matrix being factored (checked by a
+/// `debug_assert`).
+pub fn cholesky_jittered(mut a: Matrix, base: f64, limit: f64) -> Option<(CholeskyFactor, f64)> {
+    let n = a.rows();
+    debug_assert!(
+        {
+            let ad = a.as_slice();
+            (0..n).all(|i| (0..i).all(|j| ad[i * n + j].to_bits() == ad[j * n + i].to_bits()))
+        },
+        "cholesky_jittered requires a bitwise-symmetric matrix"
+    );
+    let diag0 = a.diagonal();
+    let mut jitter = 0.0;
+    loop {
+        match cholesky_take(a) {
+            Ok(f) => return Some((f, jitter)),
+            Err(mut spoiled) => {
+                jitter = if jitter == 0.0 { base.max(1e-300) } else { jitter * 100.0 };
+                if jitter >= limit {
+                    return None;
+                }
+                let sd = spoiled.as_mut_slice();
+                for i in 0..n {
+                    for j in 0..i {
+                        sd[i * n + j] = sd[j * n + i];
+                    }
+                    sd[i * n + i] = diag0[i] + jitter;
+                }
+                a = spoiled;
+            }
+        }
+    }
+}
+
 /// In-place blocked Cholesky: on success the lower triangle of `a` holds
 /// `L` and the strict upper triangle is zeroed.
+///
+/// Right-looking blocked sweep, one `NB`-wide panel at a time:
+///
+/// 1. **diagonal factor** (serial): unblocked Cholesky of
+///    `A[kb..ke, kb..ke]`, rejecting non-SPD pivots;
+/// 2. **panel TRSM** (parallel): `L₂₁ = A₂₁ L₁₁⁻ᵀ` — each trailing row
+///    forward-substitutes against the diagonal block independently,
+///    distributed over fixed `MC`-row blocks;
+/// 3. **Schur update** (parallel): `A₂₂ −= L₂₁ L₂₁ᵀ`, lower triangle
+///    only, through the 4×8 register micro-kernel
+///    ([`super::gemm`]'s `syrk` engine) with the panel staged
+///    contiguously once per sweep.
+///
+/// Every element's floating-point sequence is a pure function of the
+/// problem shape — never of the thread count — so parallel factors are
+/// bit-identical to `--threads 1`. On failure (non-SPD) only the lower
+/// triangle has been modified; see [`cholesky_take`].
 pub fn cholesky_in_place(a: &mut Matrix) -> Option<()> {
     let n = a.rows();
     assert_eq!(n, a.cols(), "cholesky requires a square matrix");
     let ad = a.as_mut_slice();
+    // contiguous staging for the current L₂₁ panel, reused across sweeps
+    let mut panel: Vec<f64> = Vec::new();
     let mut kb = 0;
     while kb < n {
         let ke = (kb + NB).min(n);
-        // 1. factor the diagonal panel A[kb..ke, kb..ke] (unblocked)
+        let w = ke - kb;
+        // 1. unblocked factor of the diagonal block A[kb..ke, kb..ke]
         for j in kb..ke {
-            let mut d = ad[j * n + j];
-            for p in kb..j {
-                d -= ad[j * n + p] * ad[j * n + p];
-            }
+            let rj = j * n;
+            let d = ad[rj + j] - super::dot(&ad[rj + kb..rj + j], &ad[rj + kb..rj + j]);
             if d <= 0.0 || !d.is_finite() {
                 return None;
             }
             let djj = d.sqrt();
-            ad[j * n + j] = djj;
-            // update column j below the diagonal with the panel
-            // contribution [kb..j), then divide by the pivot
-            for i in (j + 1)..n {
-                let mut s = ad[i * n + j];
-                for p in kb..j {
-                    s -= ad[i * n + p] * ad[j * n + p];
+            ad[rj + j] = djj;
+            for i in (j + 1)..ke {
+                let ri = i * n;
+                let s = super::dot(&ad[ri + kb..ri + j], &ad[rj + kb..rj + j]);
+                ad[ri + j] = (ad[ri + j] - s) / djj;
+            }
+        }
+        let trailing = n - ke;
+        if trailing == 0 {
+            break;
+        }
+        // 2. panel TRSM: rows ke..n forward-substitute columns kb..ke
+        //    against L₁₁ — rows are independent, so the pool distributes
+        //    fixed MC-row blocks of the trailing rows.
+        {
+            let (head, tail) = ad.split_at_mut(ke * n);
+            let trsm_work = trailing * w * w / 2;
+            pool::par_chunks_mut_gated(tail, MC * n, trsm_work >= PAR_MIN_STAGE, |_, chunk| {
+                for row in chunk.chunks_mut(n) {
+                    for j in kb..ke {
+                        let rj = j * n;
+                        let s = super::dot(&row[kb..j], &head[rj + kb..rj + j]);
+                        row[j] = (row[j] - s) / head[rj + j];
+                    }
                 }
-                ad[i * n + j] = s / djj;
-            }
+            });
         }
-        // 2. Schur complement update of the trailing matrix:
-        //    A[ke.., ke..] -= L[ke.., kb..ke] * L[ke.., kb..ke]ᵀ
-        //    (lower triangle only). Row i's panel segment is staged in a
-        //    local buffer so the inner product runs through the 4-way
-        //    unrolled `dot` kernel (§Perf: 1.9 → 4.6 GF/s on chol-512).
-        let w = ke - kb;
-        let mut rowi = [0.0f64; NB];
+        // 3. Schur complement: A[ke.., ke..] −= L₂₁ L₂₁ᵀ (lower triangle
+        //    only). The panel is staged contiguously so every micro-kernel
+        //    stream is sequential; each output element is its own dot
+        //    product of two panel rows, so any fixed partition yields the
+        //    serial bits.
+        panel.clear();
+        panel.reserve(trailing * w);
         for i in ke..n {
-            let ri = i * n;
-            rowi[..w].copy_from_slice(&ad[ri + kb..ri + ke]);
-            for j in ke..=i {
-                let rj = j * n;
-                let s = super::dot(&rowi[..w], &ad[rj + kb..rj + ke]);
-                ad[ri + j] -= s;
-            }
+            panel.extend_from_slice(&ad[i * n + kb..i * n + ke]);
         }
+        let tail = &mut ad[ke * n..];
+        let schur_work = trailing * trailing * w / 2;
+        pool::par_chunks_mut_gated(tail, MC * n, schur_work >= PAR_MIN_STAGE, |blk, chunk| {
+            super::gemm::syrk_ln_panel(&panel, chunk, blk * MC, w, n, ke, -1.0);
+        });
         kb = ke;
     }
     // zero the strict upper triangle so the factor is clean
@@ -168,12 +280,40 @@ mod tests {
 
     #[test]
     fn factor_reconstructs_spd() {
-        for &n in &[1usize, 2, 5, 17, 48, 49, 100, 131] {
+        // sizes straddling the NB panel boundary (95/96/97) and with a
+        // multi-panel tail (131, 200)
+        for &n in &[1usize, 2, 5, 17, 48, 49, 95, 96, 97, 100, 131, 200] {
             let a = spd(n, n as u64);
             let f = cholesky(&a).expect("SPD must factor");
             let rec = gemm(f.l(), &f.l().transpose());
             let err = rec.max_abs_diff(&a) / a.fro_norm().max(1.0);
             assert!(err < 1e-10, "n={n}: reconstruction error {err}");
+        }
+    }
+
+    #[test]
+    fn factor_matches_unblocked_reference() {
+        // textbook unblocked Cholesky as an independent oracle
+        for &n in &[33usize, 96, 113] {
+            let a = spd(n, 1000 + n as u64);
+            let f = cholesky(&a).unwrap();
+            let mut r = Matrix::zeros(n, n);
+            for j in 0..n {
+                let mut d = a.get(j, j);
+                for p in 0..j {
+                    d -= r.get(j, p) * r.get(j, p);
+                }
+                let djj = d.sqrt();
+                r.set(j, j, djj);
+                for i in (j + 1)..n {
+                    let mut s = a.get(i, j);
+                    for p in 0..j {
+                        s -= r.get(i, p) * r.get(j, p);
+                    }
+                    r.set(i, j, s / djj);
+                }
+            }
+            assert!(f.l().max_abs_diff(&r) < 1e-9, "n={n}");
         }
     }
 
@@ -192,6 +332,25 @@ mod tests {
     }
 
     #[test]
+    fn solve_matrix_is_fused_two_stage_solve() {
+        let n = 57;
+        let a = spd(n, 13);
+        let f = cholesky(&a).unwrap();
+        let b = Matrix::from_fn(n, 9, |i, j| ((i * 9 + j) as f64 * 0.31).sin());
+        let x = f.solve_matrix(&b);
+        // matches the vector solve column by column
+        for j in 0..9 {
+            let xj = f.solve(&b.col(j));
+            for i in 0..n {
+                assert!((x.get(i, j) - xj[i]).abs() < 1e-9, "col {j} row {i}");
+            }
+        }
+        // and A X ≈ B
+        let ax = gemm(&a, &x);
+        assert!(ax.max_abs_diff(&b) < 1e-7);
+    }
+
+    #[test]
     fn quad_form_is_bt_ainv_b() {
         let n = 29;
         let a = spd(n, 7);
@@ -206,6 +365,54 @@ mod tests {
     fn non_spd_rejected() {
         let a = Matrix::from_vec(2, 2, vec![1.0, 2.0, 2.0, 1.0]); // indefinite
         assert!(cholesky(&a).is_none());
+    }
+
+    #[test]
+    fn cholesky_take_failure_preserves_strict_upper() {
+        // a symmetric matrix that fails mid-factorization (SPD leading
+        // block, then an indefinite trailing part)
+        let n = 120;
+        let mut a = spd(n, 17);
+        let v = a.get(n - 1, n - 1);
+        a.set(n - 1, n - 1, -v); // break positive definiteness at the end
+        let orig = a.clone();
+        match cholesky_take(a) {
+            Ok(_) => panic!("must not factor"),
+            Err(ruined) => {
+                // strict upper triangle is untouched by the failed attempt
+                for i in 0..n {
+                    for j in (i + 1)..n {
+                        assert_eq!(
+                            ruined.get(i, j).to_bits(),
+                            orig.get(i, j).to_bits(),
+                            "({i},{j}) modified"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn jittered_rescues_singular_and_gives_up_at_limit() {
+        // exactly singular PSD: duplicate first and last rows/columns
+        let n = 40;
+        let mut a = spd(n, 5);
+        for j in 0..n {
+            a.set(n - 1, j, a.get(0, j));
+        }
+        for i in 0..n {
+            a.set(i, n - 1, a.get(i, 0));
+        }
+        a.set(n - 1, n - 1, a.get(0, 0));
+        let trace: f64 = a.diagonal().iter().sum();
+        let (f, _jitter) =
+            cholesky_jittered(a, trace * 1e-12 / n as f64, trace).expect("jitter must rescue");
+        assert!(f.l().as_slice().iter().all(|v| v.is_finite()));
+        // hopeless: −I needs jitter > 1, but the limit caps it at 1
+        let mut neg = Matrix::eye(6);
+        neg.scale(-1.0);
+        assert!(cholesky_jittered(neg, 1e-12, 1.0).is_none());
     }
 
     #[test]
@@ -227,6 +434,21 @@ mod tests {
         let x2 = f.solve(&b);
         for (u, v) in x.iter().zip(&x2) {
             assert!((u - v).abs() < 1e-10);
+        }
+    }
+
+    #[test]
+    fn solve_lt_matrix_matches_vector_solves() {
+        let n = 41;
+        let a = spd(n, 19);
+        let f = cholesky(&a).unwrap();
+        let b = Matrix::from_fn(n, 7, |i, j| ((i + 2 * j) % 13) as f64 * 0.5 - 3.0);
+        let x = f.solve_lt_matrix(&b);
+        for j in 0..7 {
+            let xj = f.solve_lt(&b.col(j));
+            for i in 0..n {
+                assert!((x.get(i, j) - xj[i]).abs() < 1e-10, "col {j} row {i}");
+            }
         }
     }
 }

@@ -233,6 +233,115 @@ fn gemm_nt_row_block(ad: &[f64], bd: &[f64], chunk: &mut [f64], i0: usize, k: us
     }
 }
 
+/// `C = A·Aᵀ` (symmetric rank-k update, `A` is `m × k`, `C` is `m × m`).
+///
+/// Only the lower triangle is computed — each element through the same
+/// 4×8 dot-product micro-kernel as [`gemm_nt`], parallelized over fixed
+/// `MC`-row blocks of `C` — and then mirrored into the upper triangle,
+/// so the result is exactly symmetric and costs half the multiply-adds
+/// of `gemm_nt(a, a)`. Bit-identical at any thread count.
+pub fn syrk(a: &Matrix) -> Matrix {
+    let (m, k) = (a.rows(), a.cols());
+    let mut c = Matrix::zeros(m, m);
+    if m == 0 {
+        return c;
+    }
+    let ad = a.as_slice();
+    let work = m.saturating_mul(m).saturating_mul(k.max(1)) / 2;
+    pool::par_chunks_mut_gated(c.as_mut_slice(), MC * m, work >= PAR_MIN_WORK, |blk, chunk| {
+        syrk_ln_panel(ad, chunk, blk * MC, k, m, 0, 1.0);
+    });
+    c.mirror_lower_to_upper();
+    c
+}
+
+/// One `MC`-row block of the lower-triangle-only rank-`w` update
+/// `C[t, 0..=t] += sign · A_t · A_jᵀ` (`A` = `panel`, row-major `p × w`;
+/// `chunk` holds rows `[t0, t0+rows)` of a matrix with row stride `ldc`
+/// whose triangle starts at column offset `c0`, i.e. the diagonal
+/// element of trailing row `t` lives at column `c0 + t`).
+///
+/// This is the shared engine of [`syrk`] (`c0 = 0`, `sign = +1`) and the
+/// Cholesky Schur-complement update (`c0 = ke`, `sign = −1`): full 4×8
+/// register tiles up to the group's first diagonal, then scalar dots for
+/// the ragged triangle edge. The tile/ragged split depends only on the
+/// global trailing-row index `t` (chunks are `MC`-row aligned, `MC` a
+/// multiple of 4), so every element takes the same code path — and gets
+/// the same bits — at any thread count.
+pub(crate) fn syrk_ln_panel(
+    panel: &[f64],
+    chunk: &mut [f64],
+    t0: usize,
+    w: usize,
+    ldc: usize,
+    c0: usize,
+    sign: f64,
+) {
+    if w == 0 {
+        return;
+    }
+    let rows = chunk.len() / ldc;
+    for pb in (0..w).step_by(KC) {
+        let pe = (pb + KC).min(w);
+        let pl = pe - pb;
+        let mut r = 0;
+        while r + 4 <= rows {
+            let t = t0 + r;
+            let arow = |rr: usize| &panel[(t + rr) * w + pb..(t + rr) * w + pe];
+            let a4 = [arow(0), arow(1), arow(2), arow(3)];
+            let mut j = 0;
+            // full 4×8 tiles up to the first row's diagonal column
+            while j + 8 <= t + 1 {
+                let b8: [&[f64]; 8] =
+                    std::array::from_fn(|cc| &panel[(j + cc) * w + pb..(j + cc) * w + pe]);
+                let mut acc = [[0.0f64; 8]; 4];
+                for p in 0..pl {
+                    for (acc_r, ar) in acc.iter_mut().zip(a4.iter()) {
+                        let av = ar[p];
+                        for (cv, br) in acc_r.iter_mut().zip(b8.iter()) {
+                            *cv += av * br[p];
+                        }
+                    }
+                }
+                for (rr, acc_r) in acc.iter().enumerate() {
+                    let base = (r + rr) * ldc + c0 + j;
+                    let crow = &mut chunk[base..base + 8];
+                    for (cv, av) in crow.iter_mut().zip(acc_r.iter()) {
+                        *cv += sign * av;
+                    }
+                }
+                j += 8;
+            }
+            // ragged triangle edge: scalar dots out to each row's diagonal
+            for (rr, ar) in a4.iter().enumerate() {
+                for jj in j..=(t + rr) {
+                    let brow = &panel[jj * w + pb..jj * w + pe];
+                    let mut s = 0.0;
+                    for (av, bv) in ar.iter().zip(brow.iter()) {
+                        s += av * bv;
+                    }
+                    chunk[(r + rr) * ldc + c0 + jj] += sign * s;
+                }
+            }
+            r += 4;
+        }
+        // remainder rows: plain dots along the whole row prefix
+        while r < rows {
+            let t = t0 + r;
+            let ar = &panel[t * w + pb..t * w + pe];
+            for jj in 0..=t {
+                let brow = &panel[jj * w + pb..jj * w + pe];
+                let mut s = 0.0;
+                for (av, bv) in ar.iter().zip(brow.iter()) {
+                    s += av * bv;
+                }
+                chunk[r * ldc + c0 + jj] += sign * s;
+            }
+            r += 1;
+        }
+    }
+}
+
 /// Row block size for [`gemm_tn`]'s output (columns of `A`).
 const TN_RB: usize = 64;
 
@@ -286,6 +395,131 @@ fn gemm_tn_row_block(
             }
         }
     }
+}
+
+/// `C = AᵀA` (`A` is `k × m`, `C` is `m × m`) without materializing `Aᵀ`.
+///
+/// Computes only the lower triangle — half the multiply-adds of
+/// `gemm_tn(a, a)` — and mirrors it, so the result is exactly symmetric.
+/// See [`syrk_tn_into`] for the partition/determinism contract.
+pub fn syrk_tn(a: &Matrix) -> Matrix {
+    let mut c = Matrix::zeros(a.cols(), a.cols());
+    syrk_tn_into(a, &mut c);
+    c.mirror_lower_to_upper();
+    c
+}
+
+/// `C += AᵀA`, accumulating into the **lower triangle only** of an
+/// existing buffer (no allocation; the strict upper triangle is left
+/// untouched).
+///
+/// The accumulation is rank-1 over rows `p` of `A` in ascending order,
+/// parallelized over fixed `TN_RB`-row blocks of `C` (the same partition
+/// as [`gemm_tn`]) — bit-identical at any thread count. This is the
+/// `H += K_tileᵀ K_tile` Gram-accumulation shape of Nyström-KRR:
+/// accumulate tile after tile, then call
+/// [`Matrix::mirror_lower_to_upper`] once at the end if a fully
+/// symmetric matrix is needed ([`syrk_tn`] does exactly that).
+pub fn syrk_tn_into(a: &Matrix, c: &mut Matrix) {
+    let (k, m) = (a.rows(), a.cols());
+    assert_eq!(c.rows(), m, "syrk_tn output shape mismatch");
+    assert_eq!(c.cols(), m, "syrk_tn output shape mismatch");
+    if m == 0 {
+        return;
+    }
+    let ad = a.as_slice();
+    let work = k.saturating_mul(m).saturating_mul(m) / 2;
+    pool::par_chunks_mut_gated(c.as_mut_slice(), TN_RB * m, work >= PAR_MIN_WORK, |blk, chunk| {
+        syrk_tn_row_block(ad, chunk, blk * TN_RB, 0, k, m);
+    });
+}
+
+/// `C = LᵀL` for a **lower-triangular** `L`, exploiting both the
+/// symmetry of the output and the triangularity of the input.
+///
+/// `(LᵀL)_{ij} = Σ_{p ≥ max(i,j)} L_{pi} L_{pj}`, so a `TN_RB`-row block
+/// of `C` starting at row `i0` only needs rows `p ≥ i0` of `L` — the
+/// rank-1 sweep is truncated per block and the zero-skip drops the rest,
+/// leaving ~`n³/6` multiply-adds versus `n³/2` for `gemm_tn(l, l)`.
+/// This is the `G = (n/M)·LᵀL + λn·I` build of the FALKON
+/// preconditioner (Def. 2 / Eq. 15). Bit-identical at any thread count:
+/// each element accumulates `p = i..n` in ascending order regardless of
+/// the partition.
+pub fn syrk_tn_of_lower(l: &Matrix) -> Matrix {
+    let n = l.rows();
+    assert_eq!(l.cols(), n, "syrk_tn_of_lower requires a square factor");
+    let mut c = Matrix::zeros(n, n);
+    if n == 0 {
+        return c;
+    }
+    let ld = l.as_slice();
+    let work = n.saturating_mul(n).saturating_mul(n) / 6;
+    pool::par_chunks_mut_gated(c.as_mut_slice(), TN_RB * n, work >= PAR_MIN_WORK, |blk, chunk| {
+        syrk_tn_row_block(ld, chunk, blk * TN_RB, blk * TN_RB, n, n);
+    });
+    c.mirror_lower_to_upper();
+    c
+}
+
+/// One `TN_RB`-row block of the lower-triangle-only `C += AᵀA` update:
+/// rows `[i0, i0 + rows)` of `C`, rank-1 contributions from rows
+/// `p ∈ [p_start, k)` of `A` in ascending order. `p_start > 0` is only
+/// sound when `A[p, i] = 0` for all `p < p_start`, `i ≥ i0` (the
+/// lower-triangular-input case of [`syrk_tn_of_lower`]).
+fn syrk_tn_row_block(
+    ad: &[f64],
+    chunk: &mut [f64],
+    i0: usize,
+    p_start: usize,
+    k: usize,
+    m: usize,
+) {
+    let rows = chunk.len() / m;
+    for pb in (p_start..k).step_by(KC) {
+        let pe = (pb + KC).min(k);
+        for p in pb..pe {
+            let prow = &ad[p * m..(p + 1) * m];
+            for r in 0..rows {
+                let i = i0 + r;
+                let aip = prow[i];
+                if aip == 0.0 {
+                    continue;
+                }
+                let crow = &mut chunk[r * m..r * m + i + 1];
+                for (cv, av) in crow.iter_mut().zip(prow[..=i].iter()) {
+                    *cv += aip * av;
+                }
+            }
+        }
+    }
+}
+
+/// Per-column squared norms: `out[j] = Σ_i A_ij²`.
+///
+/// This is the `‖L⁻¹ k_i‖²` contraction at the tail of every
+/// leverage-score batch (Eq. 3) and of [`crate::leverage::exact_leverage_scores`].
+/// Parallelized over fixed `MT_CB`-column blocks; each element
+/// accumulates rows in ascending order, so the result is bit-identical
+/// at any thread count.
+pub fn column_sq_norms(a: &Matrix) -> Vec<f64> {
+    let (rows, cols) = (a.rows(), a.cols());
+    let mut out = vec![0.0; cols];
+    if rows == 0 || cols == 0 {
+        return out;
+    }
+    let ad = a.as_slice();
+    let parallel = rows.saturating_mul(cols) >= PAR_MIN_MV && cols > MT_CB;
+    pool::par_chunks_mut_gated(&mut out, MT_CB, parallel, |blk, och| {
+        let j0 = blk * MT_CB;
+        let w = och.len();
+        for i in 0..rows {
+            let aseg = &ad[i * cols + j0..i * cols + j0 + w];
+            for (oj, av) in och.iter_mut().zip(aseg.iter()) {
+                *oj += av * av;
+            }
+        }
+    });
+    out
 }
 
 /// Output block sizes for the parallel matvec paths.
@@ -508,5 +742,79 @@ mod tests {
         let a = Matrix::from_fn(10, 10, |i, j| (i * j) as f64);
         let c = gemm(&a, &Matrix::eye(10));
         assert!(c.max_abs_diff(&a) < 1e-12);
+    }
+
+    #[test]
+    fn syrk_matches_gemm_nt_self() {
+        // odd shapes exercise the ragged triangle edge and remainder rows
+        for &(m, k) in &[(1usize, 3usize), (5, 7), (13, 29), (67, 18), (96, 40), (150, 70)] {
+            let a = Matrix::from_fn(m, k, |i, j| ((i * 31 + j * 7) % 13) as f64 * 0.3 - 1.5);
+            let c = syrk(&a);
+            let dense = gemm(&a, &a.transpose());
+            assert!(c.max_abs_diff(&dense) < 1e-9, "syrk {m}x{k}");
+            // exactly symmetric by construction
+            for i in 0..m {
+                for j in 0..i {
+                    assert_eq!(c.get(i, j).to_bits(), c.get(j, i).to_bits());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn syrk_tn_matches_gemm_tn_self() {
+        for &(k, m) in &[(3usize, 1usize), (7, 5), (29, 13), (40, 63), (40, 64), (40, 65)] {
+            let a = Matrix::from_fn(k, m, |i, j| ((i * 5 + j * 11) % 9) as f64 * 0.25 - 1.0);
+            let c = syrk_tn(&a);
+            let dense = gemm_tn(&a, &a);
+            assert!(c.max_abs_diff(&dense) < 1e-10, "syrk_tn {k}x{m}");
+        }
+    }
+
+    #[test]
+    fn syrk_tn_into_accumulates_tiles() {
+        // two stacked tiles accumulated (lower triangle), mirrored once
+        // at the end, equal the full-product Gram
+        let full = Matrix::from_fn(90, 21, |i, j| ((i * 21 + j) as f64 * 0.23).sin());
+        let top = Matrix::from_fn(50, 21, |i, j| full.get(i, j));
+        let bot = Matrix::from_fn(40, 21, |i, j| full.get(50 + i, j));
+        let mut acc = Matrix::zeros(21, 21);
+        syrk_tn_into(&top, &mut acc);
+        syrk_tn_into(&bot, &mut acc);
+        acc.mirror_lower_to_upper();
+        let direct = gemm_tn(&full, &full);
+        assert!(acc.max_abs_diff(&direct) < 1e-10);
+    }
+
+    #[test]
+    fn syrk_tn_of_lower_matches_dense_gemm_tn() {
+        // sizes straddling the TN_RB block boundary
+        for &n in &[1usize, 5, 63, 64, 65, 97, 150] {
+            let l = Matrix::from_fn(n, n, |i, j| {
+                if j > i {
+                    0.0
+                } else if i == j {
+                    1.0 + (i % 4) as f64 * 0.5
+                } else {
+                    (((i * 7 + j * 3) % 11) as f64 - 5.0) * 0.1
+                }
+            });
+            let c = syrk_tn_of_lower(&l);
+            let dense = gemm_tn(&l, &l);
+            assert!(c.max_abs_diff(&dense) < 1e-9, "syrk_tn_of_lower n={n}");
+        }
+    }
+
+    #[test]
+    fn column_sq_norms_matches_naive() {
+        // narrow (serial path) and wide (column-chunked parallel path)
+        for &(rows, cols) in &[(13usize, 7usize), (60, 24), (200, 400)] {
+            let a = Matrix::from_fn(rows, cols, |i, j| ((i * cols + j) as f64 * 0.13).sin());
+            let fast = column_sq_norms(&a);
+            for (j, &v) in fast.iter().enumerate() {
+                let naive: f64 = (0..rows).map(|i| a.get(i, j) * a.get(i, j)).sum();
+                assert!((v - naive).abs() < 1e-10, "col {j}: {v} vs {naive}");
+            }
+        }
     }
 }

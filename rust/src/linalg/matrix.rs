@@ -45,6 +45,21 @@ impl Matrix {
         Matrix { rows, cols, data }
     }
 
+    /// Deterministic, exactly symmetric, diagonally dominant — hence SPD
+    /// — probe matrix: the shared input of the factorization benches and
+    /// the cross-thread determinism tests (built serially via
+    /// [`Matrix::from_fn`], so it is identical at any pool width).
+    pub fn spd_probe(n: usize) -> Self {
+        Matrix::from_fn(n, n, |i, j| {
+            if i == j {
+                0.25 * n as f64 + (i % 7) as f64 * 0.125
+            } else {
+                let (lo, hi) = (i.min(j), i.max(j));
+                (((lo * 31 + hi * 17) % 23) as f64 - 11.0) * 0.01
+            }
+        })
+    }
+
     /// Diagonal matrix from a slice.
     pub fn diag(d: &[f64]) -> Self {
         let n = d.len();
@@ -127,6 +142,19 @@ impl Matrix {
             }
         }
         t
+    }
+
+    /// Copy the lower triangle over the strict upper triangle, making a
+    /// square matrix exactly symmetric (the tail of the lower-triangle-only
+    /// symmetric rank-k updates in [`crate::linalg::syrk`] and friends).
+    pub fn mirror_lower_to_upper(&mut self) {
+        assert_eq!(self.rows, self.cols);
+        let n = self.rows;
+        for i in 0..n {
+            for j in (i + 1)..n {
+                self.data[i * n + j] = self.data[j * n + i];
+            }
+        }
     }
 
     /// `self + alpha * I` (square matrices only).

@@ -8,23 +8,27 @@
 //! Performance-critical routines ([`gemm`], [`cholesky`],
 //! [`solve_lower_matrix`]) are cache-blocked and register-blocked; see
 //! `EXPERIMENTS.md §Perf` for the measured iteration log. GEMM, the
-//! matvecs and the matrix triangular solve additionally run data-parallel
-//! over fixed output blocks on the shared [`crate::util::pool`] —
-//! partitioning is independent of the thread count, so parallel results
-//! are bit-identical to the serial path.
+//! symmetric rank-k updates ([`syrk`], [`syrk_tn`]), the matvecs, the
+//! matrix triangular solves **and the blocked Cholesky factorization
+//! itself** run data-parallel over fixed output blocks on the shared
+//! [`crate::util::pool`] — partitioning is independent of the thread
+//! count, so parallel results are bit-identical to the serial path.
 
 mod chol;
 mod gemm;
 mod matrix;
 mod triangular;
 
-pub use chol::{cholesky, cholesky_in_place, CholeskyFactor};
+pub use chol::{cholesky, cholesky_in_place, cholesky_jittered, cholesky_take, CholeskyFactor};
 pub use gemm::{
-    gemm, gemm_into, gemm_nt, gemm_nt_acc, gemm_nt_into, gemm_tn, matvec, matvec_into, matvec_t,
-    matvec_t_acc,
+    column_sq_norms, gemm, gemm_into, gemm_nt, gemm_nt_acc, gemm_nt_into, gemm_tn, matvec,
+    matvec_into, matvec_t, matvec_t_acc, syrk, syrk_tn, syrk_tn_into, syrk_tn_of_lower,
 };
 pub use matrix::Matrix;
-pub use triangular::{solve_lower, solve_lower_matrix, solve_upper, solve_upper_matrix};
+pub use triangular::{
+    solve_llt_matrix, solve_lower, solve_lower_matrix, solve_upper, solve_upper_from_lower,
+    solve_upper_from_lower_matrix,
+};
 
 /// Dot product of two equal-length slices.
 #[inline]

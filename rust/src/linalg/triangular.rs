@@ -1,11 +1,15 @@
 //! Triangular solves (forward / back substitution), vector and matrix RHS.
 //!
-//! [`solve_lower_matrix`] — the single hottest routine of the BLESS path
-//! — parallelizes over fixed-width **column blocks** of the right-hand
-//! side: columns of `L X = B` are independent, every row operation of the
-//! blocked solve is elementwise across columns, and the block boundaries
-//! depend only on the shape, so the parallel result is bit-identical to
-//! the serial one (see [`crate::util::pool`]).
+//! The matrix solves — [`solve_lower_matrix`] (`L X = B`, the single
+//! hottest routine of the BLESS path), [`solve_upper_from_lower_matrix`]
+//! (`Lᵀ X = B` read off the stored *lower* factor, no transpose ever
+//! materialized) and the fused [`solve_llt_matrix`] (`L Lᵀ X = B`) — all
+//! run through one parallel driver: fixed-width **column blocks** of the
+//! right-hand side are gathered contiguously, solved in place with the
+//! serial blocked kernels, and scattered back. Columns are independent
+//! and every row operation is elementwise across them, and the block
+//! boundaries depend only on the shape, so the parallel result is
+//! bit-identical to the serial one (see [`crate::util::pool`]).
 
 use super::Matrix;
 use crate::util::pool;
@@ -40,27 +44,48 @@ pub fn solve_upper(u: &Matrix, b: &[f64]) -> Vec<f64> {
     x
 }
 
-/// Column-block width of the parallel [`solve_lower_matrix`] path.
-const CB: usize = 256;
-/// Minimum `n²·ncols/2` multiply-adds before the solve dispatches.
-const PAR_MIN_SOLVE: usize = 1 << 18;
-
-/// Solve `L X = B` for a matrix right-hand side.
-///
-/// Wide right-hand sides (the `LsGenerator` batch-scoring shape, `ncols`
-/// up to `n`) are split into `CB`-column blocks solved in parallel; each
-/// block gathers its columns, runs the serial blocked TRSM on them, and
-/// scatters the solution back into its disjoint column range. Since the
-/// solve acts elementwise per column, every element sees the identical
-/// operation sequence either way — bit-identical output.
-pub fn solve_lower_matrix(l: &Matrix, b: &Matrix) -> Matrix {
+/// Back substitution `Lᵀ x = b` reading the *lower* factor row-wise —
+/// no `n × n` transpose is ever built.
+pub fn solve_upper_from_lower(l: &Matrix, b: &[f64]) -> Vec<f64> {
     let n = l.rows();
     assert_eq!(l.cols(), n);
-    assert_eq!(b.rows(), n);
-    let ncols = b.cols();
-    let work = n.saturating_mul(n).saturating_mul(ncols) / 2;
-    if pool::threads() <= 1 || ncols <= CB || work < PAR_MIN_SOLVE {
-        return solve_lower_matrix_serial(l, b);
+    assert_eq!(b.len(), n);
+    let mut x = b.to_vec();
+    let ld = l.as_slice();
+    for i in (0..n).rev() {
+        let xi = x[i] / ld[i * n + i];
+        x[i] = xi;
+        // propagate: x[j] -= L[i][j] * xi for j < i  (column i of Lᵀ)
+        let row = &ld[i * n..i * n + i];
+        for (xj, lij) in x[..i].iter_mut().zip(row.iter()) {
+            *xj -= lij * xi;
+        }
+    }
+    x
+}
+
+/// Column-block width of the parallel matrix-solve paths.
+const CB: usize = 256;
+/// Minimum multiply-adds before a matrix solve dispatches to the pool.
+const PAR_MIN_SOLVE: usize = 1 << 18;
+
+/// Shared driver for the matrix triangular solves: the right-hand side
+/// is split into fixed `CB`-column blocks; each block is gathered into a
+/// contiguous buffer, solved in place by `core`, and scattered into its
+/// disjoint column range of the output. When `parallel` is false (below
+/// a call site's work threshold, or the RHS fits in one block) `core`
+/// runs once over the whole RHS inline — the solves act elementwise per
+/// column, so both paths produce identical bits.
+fn par_solve_columns(
+    b: &Matrix,
+    parallel: bool,
+    core: impl Fn(&mut [f64], usize) + Sync,
+) -> Matrix {
+    let (n, ncols) = (b.rows(), b.cols());
+    if !parallel || ncols <= CB || pool::threads() <= 1 {
+        let mut x = b.clone();
+        core(x.as_mut_slice(), ncols);
+        return x;
     }
     let mut x = Matrix::zeros(n, ncols);
     let bd = b.as_slice();
@@ -75,7 +100,7 @@ pub fn solve_lower_matrix(l: &Matrix, b: &Matrix) -> Matrix {
         for (i, srow) in sub.chunks_mut(w).enumerate() {
             srow.copy_from_slice(&bd[i * ncols + c0..i * ncols + c0 + w]);
         }
-        solve_lower_in_place(l, &mut sub, w);
+        core(&mut sub, w);
         for i in 0..n {
             // SAFETY: block `blk` owns exactly columns `[c0, c0 + w)` of
             // `x`; ranges are disjoint across blocks and in-bounds, and
@@ -92,20 +117,52 @@ pub fn solve_lower_matrix(l: &Matrix, b: &Matrix) -> Matrix {
     x
 }
 
-/// Serial right-looking blocked TRSM (§Perf): solve a `PB`-row panel in
-/// place, then push its contribution into all remaining rows with the
-/// same 4×8 register micro-kernel shape as [`super::gemm`] — this is the
-/// single hottest routine of the whole BLESS path (`LsGenerator` batch
-/// scoring) and runs ~3× faster than the row-by-row formulation.
-fn solve_lower_matrix_serial(l: &Matrix, b: &Matrix) -> Matrix {
-    assert_eq!(b.rows(), l.rows());
-    let mut x = b.clone();
-    solve_lower_in_place(l, x.as_mut_slice(), b.cols());
-    x
+/// Solve `L X = B` for a matrix right-hand side.
+///
+/// Wide right-hand sides (the `LsGenerator` batch-scoring shape, `ncols`
+/// up to `n`) are split into `CB`-column blocks solved in parallel on
+/// the shared pool; each block runs the serial blocked TRSM.
+pub fn solve_lower_matrix(l: &Matrix, b: &Matrix) -> Matrix {
+    let n = l.rows();
+    assert_eq!(l.cols(), n);
+    assert_eq!(b.rows(), n);
+    let work = n.saturating_mul(n).saturating_mul(b.cols()) / 2;
+    par_solve_columns(b, work >= PAR_MIN_SOLVE, |xd, w| solve_lower_in_place(l, xd, w))
 }
 
-/// The in-place core of the serial TRSM: `xd` holds the `n × ncols`
-/// right-hand side row-major on entry and the solution on exit.
+/// Solve `Lᵀ X = B` against a stored *lower* factor, matrix RHS — the
+/// blocked back-substitution mirror of [`solve_lower_matrix`], same
+/// parallel column-block driver, no transpose materialized.
+pub fn solve_upper_from_lower_matrix(l: &Matrix, b: &Matrix) -> Matrix {
+    let n = l.rows();
+    assert_eq!(l.cols(), n);
+    assert_eq!(b.rows(), n);
+    let work = n.saturating_mul(n).saturating_mul(b.cols()) / 2;
+    par_solve_columns(b, work >= PAR_MIN_SOLVE, |xd, w| {
+        solve_upper_from_lower_in_place(l, xd, w)
+    })
+}
+
+/// Fused SPD solve `(L Lᵀ) X = B`: forward then back substitution per
+/// column block on one gathered buffer, so each block pays the
+/// gather/scatter copies once for both sweeps.
+pub fn solve_llt_matrix(l: &Matrix, b: &Matrix) -> Matrix {
+    let n = l.rows();
+    assert_eq!(l.cols(), n);
+    assert_eq!(b.rows(), n);
+    let work = n.saturating_mul(n).saturating_mul(b.cols());
+    par_solve_columns(b, work >= PAR_MIN_SOLVE, |xd, w| {
+        solve_lower_in_place(l, xd, w);
+        solve_upper_from_lower_in_place(l, xd, w);
+    })
+}
+
+/// The in-place core of the serial TRSM (§Perf): `xd` holds the
+/// `n × ncols` right-hand side row-major on entry and the solution of
+/// `L X = B` on exit. Solve a `PB`-row panel in place, then push its
+/// contribution into all remaining rows with the same 4-row blocked
+/// shape as [`super::gemm`] — ~3× faster than the row-by-row
+/// formulation.
 fn solve_lower_in_place(l: &Matrix, xd: &mut [f64], ncols: usize) {
     let n = l.rows();
     assert_eq!(l.cols(), n);
@@ -161,39 +218,68 @@ fn solve_lower_in_place(l: &Matrix, xd: &mut [f64], ncols: usize) {
     }
 }
 
-/// Solve `Lᵀ X = B` against a stored *lower* factor, matrix RHS.
-pub fn solve_upper_matrix(l: &Matrix, b: &Matrix) -> Matrix {
+/// The in-place core of the blocked back substitution: `xd` holds the
+/// `n × ncols` right-hand side on entry and the solution of `Lᵀ X = B`
+/// (reading the *lower* factor) on exit — the bottom-up mirror of
+/// [`solve_lower_in_place`]: solve a `PB`-row panel, then push its
+/// contribution up into all rows above it.
+fn solve_upper_from_lower_in_place(l: &Matrix, xd: &mut [f64], ncols: usize) {
     let n = l.rows();
     assert_eq!(l.cols(), n);
-    assert_eq!(b.rows(), n);
-    let ncols = b.cols();
-    let mut x = b.clone();
+    assert_eq!(xd.len(), n * ncols);
     let ld = l.as_slice();
-    let xd = x.as_mut_slice();
-    for i in (0..n).rev() {
-        let inv = 1.0 / ld[i * n + i];
-        // finish row i
-        {
-            let xrow = &mut xd[i * ncols..(i + 1) * ncols];
+    const PB: usize = 64;
+    let mut e = n;
+    while e > 0 {
+        let s = e.saturating_sub(PB);
+        // 1. in-panel back substitution, rows e-1 down to s: row i picks
+        //    up −L[p,i]·X[p,:] from the already-solved rows p > i of the
+        //    panel (L[p,i] is column i of Lᵀ read along row p of L).
+        for i in (s..e).rev() {
+            let (low, high) = xd.split_at_mut((i + 1) * ncols);
+            let xrow = &mut low[i * ncols..];
+            for p in (i + 1)..e {
+                let lpi = ld[p * n + i];
+                if lpi == 0.0 {
+                    continue;
+                }
+                let xp = &high[(p - i - 1) * ncols..(p - i) * ncols];
+                for (xv, xpv) in xrow.iter_mut().zip(xp.iter()) {
+                    *xv -= lpi * xpv;
+                }
+            }
+            let inv = 1.0 / ld[i * n + i];
             for v in xrow.iter_mut() {
                 *v *= inv;
             }
         }
-        // propagate to rows j < i : X[j,:] -= L[i,j] * X[i,:]
-        let (head, tail) = xd.split_at_mut(i * ncols);
-        let xrow = &tail[..ncols];
-        for j in 0..i {
-            let lij = ld[i * n + j];
-            if lij == 0.0 {
-                continue;
-            }
-            let xj = &mut head[j * ncols..(j + 1) * ncols];
-            for (xv, xr) in xj.iter_mut().zip(xrow.iter()) {
-                *xv -= lij * xr;
+        // 2. propagate the solved panel upward:
+        //    X[j, :] -= Σ_{p ∈ [s,e)} L[p, j] · X[p, :]  for j < s
+        //    (4-row target blocks reuse each solved panel row)
+        if s > 0 {
+            let (head, rest) = xd.split_at_mut(s * ncols);
+            let panel = &rest[..(e - s) * ncols];
+            let mut j = 0;
+            while j < s {
+                let rows = (s - j).min(4);
+                for p in s..e {
+                    let xp = &panel[(p - s) * ncols..(p - s + 1) * ncols];
+                    for r in 0..rows {
+                        let lpj = ld[p * n + j + r];
+                        if lpj == 0.0 {
+                            continue;
+                        }
+                        let xrow = &mut head[(j + r) * ncols..(j + r + 1) * ncols];
+                        for (xv, xpv) in xrow.iter_mut().zip(xp.iter()) {
+                            *xv -= lpj * xpv;
+                        }
+                    }
+                }
+                j += rows;
             }
         }
+        e = s;
     }
-    x
 }
 
 #[cfg(test)]
@@ -238,6 +324,18 @@ mod tests {
     }
 
     #[test]
+    fn solve_upper_from_lower_matches_explicit_transpose() {
+        let n = 29;
+        let l = lower(n);
+        let b: Vec<f64> = (0..n).map(|i| ((i * 3) % 7) as f64 - 2.5).collect();
+        let x1 = solve_upper_from_lower(&l, &b);
+        let x2 = solve_upper(&l.transpose(), &b);
+        for (u, v) in x1.iter().zip(&x2) {
+            assert!((u - v).abs() < 1e-10);
+        }
+    }
+
+    #[test]
     fn matrix_solves_match_columnwise() {
         let n = 19;
         let l = lower(n);
@@ -250,12 +348,29 @@ mod tests {
             }
         }
         // upper (Lᵀ) version
-        let xu = solve_upper_matrix(&l, &b);
+        let xu = solve_upper_from_lower_matrix(&l, &b);
         let lt = l.transpose();
         for j in 0..6 {
             let xj = solve_upper(&lt, &b.col(j));
             for i in 0..n {
                 assert!((xu.get(i, j) - xj[i]).abs() < 1e-10);
+            }
+        }
+    }
+
+    #[test]
+    fn upper_from_lower_matrix_straddles_panel_boundaries() {
+        // sizes around the PB=64 back-substitution panel boundary
+        for &n in &[63usize, 64, 65, 130] {
+            let l = lower(n);
+            let b = Matrix::from_fn(n, 5, |i, j| ((i * 5 + j) % 11) as f64 * 0.4 - 2.0);
+            let x = solve_upper_from_lower_matrix(&l, &b);
+            let lt = l.transpose();
+            for j in 0..5 {
+                let xj = solve_upper(&lt, &b.col(j));
+                for i in 0..n {
+                    assert!((x.get(i, j) - xj[i]).abs() < 1e-9, "n={n} col {j} row {i}");
+                }
             }
         }
     }
@@ -275,6 +390,15 @@ mod tests {
                 assert!((x.get(i, j) - xj[i]).abs() < 1e-9, "col {j} row {i}");
             }
         }
+        // and the back-substitution twin on the same wide RHS
+        let xu = solve_upper_from_lower_matrix(&l, &b);
+        let lt = l.transpose();
+        for j in [0usize, super::CB, ncols - 1] {
+            let xj = solve_upper(&lt, &b.col(j));
+            for i in 0..n {
+                assert!((xu.get(i, j) - xj[i]).abs() < 1e-9, "upper col {j} row {i}");
+            }
+        }
     }
 
     #[test]
@@ -285,8 +409,13 @@ mod tests {
         let a = gemm(&l, &l.transpose());
         let b = Matrix::from_fn(n, 3, |i, j| (i + j) as f64);
         let y = solve_lower_matrix(&l, &b);
-        let x = solve_upper_matrix(&l, &y);
+        let x = solve_upper_from_lower_matrix(&l, &y);
         let ax = gemm(&a, &x);
         assert!(ax.max_abs_diff(&b) < 1e-8);
+        // the fused solve produces the same bits as the two-stage path
+        let fused = solve_llt_matrix(&l, &b);
+        for (u, v) in fused.as_slice().iter().zip(x.as_slice()) {
+            assert_eq!(u.to_bits(), v.to_bits(), "fused vs two-stage");
+        }
     }
 }

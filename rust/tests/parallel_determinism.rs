@@ -7,9 +7,9 @@
 //! serialize through one mutex.
 
 use bless::data::susy_like;
-use bless::falkon::Falkon;
+use bless::falkon::{Falkon, Preconditioner};
 use bless::kernels::{Gaussian, KernelEngine, NativeEngine, PanelCache, DEFAULT_ROW_TILE};
-use bless::leverage::WeightedSet;
+use bless::leverage::{LsGenerator, WeightedSet};
 use bless::linalg::{self, Matrix};
 use bless::rng::Rng;
 use bless::util::pool;
@@ -116,6 +116,93 @@ fn kernel_block_and_fused_matvec_bit_identical() {
             "kernel block diverged at {t} threads"
         );
         assert_eq!(bits_of(&fused1), bits_of(&fusedp), "fused CG matvec @ {t}");
+    }
+}
+
+/// Deterministic, exactly-symmetric, diagonally-dominant SPD test matrix
+/// (shared with the factorization benches).
+fn spd(n: usize) -> Matrix {
+    Matrix::spd_probe(n)
+}
+
+#[test]
+fn cholesky_bit_identical_across_thread_counts() {
+    let _g = lock();
+    // sizes straddling the NB=96 panel boundary, plus a multi-panel one
+    for &n in &[95usize, 96, 97, 513] {
+        let a = spd(n);
+        let serial = at_threads(1, || linalg::cholesky(&a).expect("SPD"));
+        for t in [2usize, 4, 8] {
+            let par = at_threads(t, || linalg::cholesky(&a).expect("SPD"));
+            assert_eq!(
+                bits_of(serial.l().as_slice()),
+                bits_of(par.l().as_slice()),
+                "cholesky n={n} diverged at {t} threads"
+            );
+        }
+    }
+}
+
+#[test]
+fn triangular_tier_solves_bit_identical() {
+    let _g = lock();
+    let n = 260;
+    let a = spd(n);
+    let b = Matrix::from_fn(n, 600, |i, j| ((i * 600 + j) as f64 * 0.17).sin());
+    let run = || {
+        let f = linalg::cholesky(&a).expect("SPD");
+        let lt = f.solve_lt_matrix(&b);
+        let fused = f.solve_matrix(&b);
+        (lt, fused)
+    };
+    let (lt1, fu1) = at_threads(1, run);
+    for t in [2usize, 4, 8] {
+        let (ltp, fup) = at_threads(t, run);
+        assert_eq!(bits_of(lt1.as_slice()), bits_of(ltp.as_slice()), "solve_lt_matrix @ {t}");
+        assert_eq!(bits_of(fu1.as_slice()), bits_of(fup.as_slice()), "solve_matrix @ {t}");
+    }
+}
+
+#[test]
+fn preconditioner_build_and_applies_bit_identical() {
+    let _g = lock();
+    let ds = susy_like(400, &mut Rng::seeded(23));
+    let eng = NativeEngine::new(ds.x, Gaussian::new(3.0));
+    let m = 130; // straddles the NB-panel remainder inside the factor
+    let idx: Vec<usize> = (0..m).map(|i| i * 3).collect();
+    let kmm = eng.block(&idx, &idx);
+    let weights: Vec<f64> = (0..m).map(|i| 0.5 + (i % 9) as f64 * 0.25).collect();
+    let v: Vec<f64> = (0..m).map(|i| ((i as f64) * 0.37).sin()).collect();
+    let run = || {
+        let p = Preconditioner::new(&kmm, &weights, 400, 1e-3).expect("precond");
+        (p.apply_b(&v), p.apply_bt(&v), p.solve_lt(&v))
+    };
+    let (b1, bt1, lt1) = at_threads(1, run);
+    for t in [2usize, 4, 8] {
+        let (bp, btp, ltp) = at_threads(t, run);
+        assert_eq!(bits_of(&b1), bits_of(&bp), "apply_b @ {t} threads");
+        assert_eq!(bits_of(&bt1), bits_of(&btp), "apply_bt @ {t} threads");
+        assert_eq!(bits_of(&lt1), bits_of(&ltp), "solve_lt @ {t} threads");
+    }
+}
+
+#[test]
+fn ls_generator_scores_bit_identical() {
+    let _g = lock();
+    let ds = susy_like(600, &mut Rng::seeded(31));
+    let eng = NativeEngine::new(ds.x, Gaussian::new(3.0));
+    let lambda = 1e-3;
+    let set = WeightedSet::uniform((0..150).map(|i| i * 4).collect(), lambda);
+    let batch: Vec<usize> = (0..600).collect();
+    let run = || {
+        let gen = LsGenerator::new(&eng, &set, lambda).expect("generator");
+        (gen.scores(&batch), gen.scores_all())
+    };
+    let (s1, a1) = at_threads(1, run);
+    for t in [2usize, 4, 8] {
+        let (sp, ap) = at_threads(t, run);
+        assert_eq!(bits_of(&s1), bits_of(&sp), "scores @ {t} threads");
+        assert_eq!(bits_of(&a1), bits_of(&ap), "scores_all @ {t} threads");
     }
 }
 
