@@ -1,0 +1,163 @@
+//! Observability overhead benchmark: what instrumentation costs.
+//!
+//! Three measurements:
+//!
+//! 1. **Primitive costs** — one disabled span, one enabled span, one
+//!    histogram record, in nanoseconds.
+//! 2. **Serve-path overhead** — mean end-to-end predict latency with
+//!    histogram recording on vs off, interleaved in alternating phases
+//!    on one server so drift hits both sides equally. The ISSUE budget
+//!    is ≤2% overhead; the measured number lands in `BENCH_obs.json`.
+//! 3. **Scrape sanity** — a raw `GET /metrics` against the same server
+//!    must return the per-model latency and batch-size histogram series.
+//!
+//! ```bash
+//! cargo bench --bench obs_overhead
+//! cargo bench --bench obs_overhead -- --per 100 --out ../BENCH_obs.json
+//! ```
+
+use bless::linalg::Matrix;
+use bless::rng::Rng;
+use bless::serve::{self, Client, ModelArtifact, ServeConfig};
+use bless::util::cli::Args;
+use bless::util::json::Json;
+use std::collections::BTreeMap;
+use std::hint::black_box;
+use std::time::Instant;
+
+fn synthetic_artifact(m: usize, d: usize) -> ModelArtifact {
+    let mut rng = Rng::seeded(17);
+    ModelArtifact {
+        sigma: 4.0,
+        centers: Matrix::from_fn(m, d, |_, _| rng.gaussian()),
+        alpha: (0..m).map(|_| rng.gaussian() * 1e-3).collect(),
+        trained_n: m * 4,
+        dataset: "obs-bench".to_string(),
+    }
+}
+
+/// Mean nanoseconds per span enter/drop at the current enable state.
+fn span_ns(iters: usize) -> f64 {
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        black_box(bless::obs::span("bench.noop"));
+    }
+    t0.elapsed().as_nanos() as f64 / iters as f64
+}
+
+/// Run `per` fresh (uncacheable) predicts; mean latency in µs.
+fn phase(client: &mut Client, d: usize, per: usize, rng: &mut Rng, id: &mut u64) -> f64 {
+    let t0 = Instant::now();
+    for _ in 0..per {
+        let x: Vec<f64> = (0..d).map(|_| rng.gaussian()).collect();
+        *id += 1;
+        client.predict(*id, &x).expect("predict");
+    }
+    t0.elapsed().as_secs_f64() * 1e6 / per as f64
+}
+
+/// Minimal HTTP GET → (status line, body).
+fn http_get(addr: std::net::SocketAddr, path: &str) -> anyhow::Result<(String, String)> {
+    use std::io::{Read as _, Write as _};
+    let mut s = std::net::TcpStream::connect(addr)?;
+    write!(s, "GET {path} HTTP/1.1\r\nHost: bench\r\nConnection: close\r\n\r\n")?;
+    let mut buf = String::new();
+    s.read_to_string(&mut buf)?;
+    let (head, body) = buf
+        .split_once("\r\n\r\n")
+        .ok_or_else(|| anyhow::anyhow!("malformed HTTP response"))?;
+    Ok((head.lines().next().unwrap_or("").to_string(), body.to_string()))
+}
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse();
+    let m = args.get_usize("m", 500);
+    let d = args.get_usize("d", 18);
+    let rounds = args.get_usize("rounds", 4);
+    let per = args.get_usize("per", 200);
+    let prim_iters = args.get_usize("prim-iters", 2_000_000);
+
+    println!("== obs_overhead bench: M={m} d={d}, {rounds}×2 phases × {per} requests ==");
+
+    // --- primitive costs
+    bless::obs::span::set_enabled(false);
+    let span_disabled_ns = span_ns(prim_iters);
+    bless::obs::span::set_enabled(true);
+    let span_enabled_ns = span_ns(prim_iters / 10);
+    bless::obs::span::set_enabled(false);
+    bless::obs::span::reset();
+    let h = bless::obs::Histogram::new();
+    let t0 = Instant::now();
+    for i in 0..prim_iters {
+        h.record(i as u64 & 0xFFFF);
+    }
+    let hist_record_ns = t0.elapsed().as_nanos() as f64 / prim_iters as f64;
+    println!(
+        "primitives     : span off {span_disabled_ns:.1} ns  span on {span_enabled_ns:.1} ns  \
+         hist record {hist_record_ns:.1} ns"
+    );
+
+    // --- serve-path overhead: alternating recording-on/off phases
+    let cfg = ServeConfig {
+        addr: "127.0.0.1:0".to_string(),
+        cache_capacity: 0, // every request exercises the full path
+        metrics_addr: Some("127.0.0.1:0".to_string()),
+        ..ServeConfig::default()
+    };
+    let handle = serve::start(synthetic_artifact(m, d), &cfg)?;
+    let mut client = Client::connect(handle.addr())?;
+    let mut rng = Rng::seeded(4242);
+    let mut id = 0u64;
+    phase(&mut client, d, per, &mut rng, &mut id); // warmup
+
+    let (mut on_us, mut off_us) = (Vec::new(), Vec::new());
+    for _ in 0..rounds {
+        for on in [true, false] {
+            bless::obs::metrics::set_serve_recording(on);
+            let mean = phase(&mut client, d, per, &mut rng, &mut id);
+            let dst = if on { &mut on_us } else { &mut off_us };
+            dst.push(mean);
+        }
+    }
+    bless::obs::metrics::set_serve_recording(true);
+    let serve_mean_us_on = on_us.iter().sum::<f64>() / on_us.len() as f64;
+    let serve_mean_us_off = off_us.iter().sum::<f64>() / off_us.len() as f64;
+    let overhead_pct = (serve_mean_us_on - serve_mean_us_off) / serve_mean_us_off * 100.0;
+    println!(
+        "serve latency  : recording on {serve_mean_us_on:.1} µs  off {serve_mean_us_off:.1} µs  \
+         overhead {overhead_pct:+.2}%"
+    );
+
+    // --- scrape sanity against the live server
+    let maddr = handle.metrics_addr().expect("metrics listener configured");
+    let (status, body) = http_get(maddr, "/metrics")?;
+    assert!(status.contains("200"), "scrape failed: {status}");
+    assert!(body.contains("bless_serve_latency_us_bucket"), "missing latency series:\n{body}");
+    assert!(body.contains("bless_serve_batch_size_bucket"), "missing batch series:\n{body}");
+    let metrics_lines = body.lines().count();
+    let (status, _) = http_get(maddr, "/healthz")?;
+    assert!(status.contains("200"), "healthz failed: {status}");
+    println!("scrape         : /metrics OK ({metrics_lines} lines), /healthz OK");
+    let requests = handle.stats().requests;
+    handle.shutdown();
+
+    // --- BENCH_*.json (repo-root schema: flat object of named metrics)
+    if let Some(out) = args.get("out") {
+        let mut obj = BTreeMap::new();
+        let mut put = |k: &str, v: f64| {
+            obj.insert(k.to_string(), Json::Num(v));
+        };
+        put("span_disabled_ns", span_disabled_ns);
+        put("span_enabled_ns", span_enabled_ns);
+        put("hist_record_ns", hist_record_ns);
+        put("serve_mean_us_on", serve_mean_us_on);
+        put("serve_mean_us_off", serve_mean_us_off);
+        put("overhead_pct", overhead_pct);
+        put("metrics_lines", metrics_lines as f64);
+        put("requests", requests as f64);
+        obj.insert("bench".to_string(), Json::Str("obs".to_string()));
+        std::fs::write(out, Json::Obj(obj).to_string())?;
+        println!("wrote {out}");
+    }
+    Ok(())
+}

@@ -127,6 +127,12 @@ fn main() -> anyhow::Result<()> {
         "predict latency: p50 {p50:.0} µs  p99 {p99:.0} µs  over {} requests (mean batch {mean_batch:.2})",
         stats.requests
     );
+    // server-side view: derived from the per-model latency histogram,
+    // excludes client/TCP round-trip time
+    println!(
+        "server-side    : p50 {:.0} µs  p95 {:.0} µs  p99 {:.0} µs (from the latency histogram)",
+        stats.latency_p50_us, stats.latency_p95_us, stats.latency_p99_us
+    );
     handle.shutdown();
     std::fs::remove_file(&json_path).ok();
     std::fs::remove_file(&bin_path).ok();
@@ -147,6 +153,9 @@ fn main() -> anyhow::Result<()> {
         put("load_speedup", load_speedup);
         put("p50_predict_us", p50);
         put("p99_predict_us", p99);
+        put("server_p50_us", stats.latency_p50_us);
+        put("server_p95_us", stats.latency_p95_us);
+        put("server_p99_us", stats.latency_p99_us);
         put("mean_batch", mean_batch);
         put("requests", stats.requests as f64);
         put("binary_version", codec::BINARY_VERSION as f64);

@@ -60,15 +60,22 @@ pub fn bless(
     let mut levels = Vec::with_capacity(path.len());
     let mut score_evals = 0usize;
 
-    for &lambda_h in &path {
+    for (h, &lambda_h) in path.iter().enumerate() {
+        // zero-padded so the span profile lists levels in order
+        let _level = crate::obs::span(&format!("bless.level{h:02}"));
         // Step 4-5: uniform candidate pool U_h, R_h = q1·min(κ²/λ_h, n).
         let r_h = ((cfg.q1 * kappa_sq / lambda_h).ceil() as usize).clamp(1, n);
         let u_h = rng.uniform_indices(n, r_h);
 
         // Step 6: approximate scores of the candidates w.r.t. (J_{h-1}, A_{h-1}).
-        let gen = LsGenerator::new(engine, &current, lambda_h)
-            .expect("BLESS generator must factor");
-        let scores = gen.scores(&u_h);
+        let gen = {
+            let _s = crate::obs::span("factor");
+            LsGenerator::new(engine, &current, lambda_h).expect("BLESS generator must factor")
+        };
+        let scores = {
+            let _s = crate::obs::span("scores");
+            gen.scores(&u_h)
+        };
         score_evals += u_h.len();
 
         // Step 7-8: selection probabilities and d_h estimate.
@@ -87,6 +94,11 @@ pub fn bless(
             indices.push(u_h[k]);
             weights.push(coeff * scores[k] / total);
         }
+        let mreg = crate::obs::metrics::global();
+        mreg.counter("bless_levels_total").inc();
+        mreg.counter("bless_score_evals_total").add(u_h.len() as u64);
+        mreg.counter("bless_samples_total").add(indices.len() as u64);
+
         current = WeightedSet { indices, weights, lambda: lambda_h };
         levels.push(LevelOutput {
             lambda: lambda_h,

@@ -57,7 +57,9 @@ pub fn bless_r(
     let mut score_evals = 0usize;
     let mut lambda_prev = lambda0;
 
-    for &lambda_h in &path {
+    for (h, &lambda_h) in path.iter().enumerate() {
+        // zero-padded so the span profile lists levels in order
+        let _level = crate::obs::span(&format!("bless.level{h:02}"));
         // Step 4-7: Bernoulli(β_h) pre-filter of all n columns.
         let beta_h = (cfg.q2 * kappa_sq / (lambda_h * n as f64)).min(1.0);
         let mut u_h: Vec<usize> = Vec::new();
@@ -69,9 +71,14 @@ pub fn bless_r(
 
         // Step 9-12: acceptance probabilities from the *previous* level's
         // generator at λ_{h-1} (Alg. 2 line 10 uses λ_{h-1}).
-        let gen = LsGenerator::new(engine, &current, lambda_prev)
-            .expect("BLESS-R generator must factor");
-        let scores = gen.scores(&u_h);
+        let gen = {
+            let _s = crate::obs::span("factor");
+            LsGenerator::new(engine, &current, lambda_prev).expect("BLESS-R generator must factor")
+        };
+        let scores = {
+            let _s = crate::obs::span("scores");
+            gen.scores(&u_h)
+        };
         score_evals += u_h.len();
 
         let mut indices = Vec::new();
@@ -105,6 +112,11 @@ pub fn bless_r(
                 }
             }
         }
+
+        let mreg = crate::obs::metrics::global();
+        mreg.counter("bless_levels_total").inc();
+        mreg.counter("bless_score_evals_total").add(u_h.len() as u64);
+        mreg.counter("bless_samples_total").add(indices.len() as u64);
 
         let d_est: f64 = weights.iter().sum::<f64>() / cfg.q2;
         current = WeightedSet { indices, weights, lambda: lambda_h };

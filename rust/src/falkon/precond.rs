@@ -41,6 +41,7 @@ impl Preconditioner {
         // S = A^{-1/2} K_MM A^{-1/2}
         let mut s = kmm.clone();
         {
+            let _span = crate::obs::span("scale");
             let sd = s.as_mut_slice();
             for i in 0..m {
                 for j in 0..m {
@@ -56,17 +57,26 @@ impl Preconditioner {
         // is made per escalation.
         let trace: f64 = (0..m).map(|i| s.get(i, i)).sum();
         let base = (trace / m as f64) * 1e-12;
-        let (l, jitter) = cholesky_jittered(s, base, trace.max(1.0))
-            .ok_or_else(|| anyhow::anyhow!("K_MM hopelessly singular"))?;
+        let (l, jitter) = {
+            let _span = crate::obs::span("chol_kmm");
+            cholesky_jittered(s, base, trace.max(1.0))
+                .ok_or_else(|| anyhow::anyhow!("K_MM hopelessly singular"))?
+        };
 
         // G = (n/M)·LᵀL + λn·I — LᵀL through the triangular rank-k
         // update (symmetry + triangularity ⇒ ~n³/6 multiply-adds versus
         // n³/2 for the dense `gemm_tn(L, L)` it replaces).
-        let mut g = syrk_tn_of_lower(l.l());
+        let mut g = {
+            let _span = crate::obs::span("syrk_g");
+            syrk_tn_of_lower(l.l())
+        };
         g.scale(n as f64 / m as f64);
         g.add_scaled_identity(lambda * n as f64);
-        let lg = cholesky_take(g)
-            .map_err(|_| anyhow::anyhow!("preconditioner G not SPD (λ={lambda})"))?;
+        let lg = {
+            let _span = crate::obs::span("chol_g");
+            cholesky_take(g)
+                .map_err(|_| anyhow::anyhow!("preconditioner G not SPD (λ={lambda})"))?
+        };
 
         Ok(Preconditioner { l, lg, a_isqrt, jitter })
     }

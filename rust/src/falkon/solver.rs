@@ -18,6 +18,9 @@ use std::sync::Arc;
 pub struct IterationStat {
     pub iter: usize,
     pub seconds: f64,
+    /// Relative residual `‖r‖/‖b‖` after this iteration (from
+    /// [`super::CgTrace`]; `train --verbose` prints the table).
+    pub rel_residual: f64,
     /// Optional user metric (e.g. test AUC) computed by the callback.
     pub metric: Option<f64>,
 }
@@ -126,9 +129,19 @@ impl<'a> Falkon<'a> {
         let centers: Vec<usize> = seen.keys().copied().collect();
         let weights: Vec<f64> = seen.values().map(|&inv| 1.0 / inv).collect();
 
-        let panel = PanelCache::new(engine, &centers, budget_bytes);
-        let kmm = engine.centers_square(panel.centers());
-        let precond = Preconditioner::new(&kmm, &weights, engine.n(), lambda)?;
+        let _setup = crate::obs::span("falkon.setup");
+        let panel = {
+            let _s = crate::obs::span("panel");
+            PanelCache::new(engine, &centers, budget_bytes)
+        };
+        let kmm = {
+            let _s = crate::obs::span("kmm");
+            engine.centers_square(panel.centers())
+        };
+        let precond = {
+            let _s = crate::obs::span("precond");
+            Preconditioner::new(&kmm, &weights, engine.n(), lambda)?
+        };
         Ok(Falkon { engine, panel, precond, kmm, lambda })
     }
 
@@ -167,17 +180,22 @@ impl<'a> Falkon<'a> {
     ) -> anyhow::Result<FalkonModel> {
         anyhow::ensure!(y.len() == self.engine.n(), "label length mismatch");
         anyhow::ensure!(t > 0, "need at least one iteration");
+        let _fit = crate::obs::span("falkon.fit");
         let lam_n = self.lambda * self.engine.n() as f64;
         let m = self.m();
 
         // b = Bᵀ K_nMᵀ y — one pass over the panel
-        let kty = self.panel.knm_t_matvec(y);
+        let kty = {
+            let _s = crate::obs::span("rhs");
+            self.panel.knm_t_matvec(y)
+        };
         let b = self.precond.apply_bt(&kty);
 
         // W β = Bᵀ (K_nMᵀ K_nM + λn K_MM) B β — the K_nM products stream
         // from the panel cache; `reg` is reused across iterations.
         let mut reg = vec![0.0; m];
         let matvec = |beta: &[f64], out: &mut [f64]| {
+            let _s = crate::obs::span("cg_iter");
             let alpha = self.precond.apply_b(beta);
             self.panel.knm_t_knm_matvec_into(&alpha, out);
             linalg::matvec_into(&self.kmm, &alpha, &mut reg);
@@ -199,9 +217,22 @@ impl<'a> Falkon<'a> {
                 };
                 f(it, &snapshot)
             });
-            stats.push(IterationStat { iter: it, seconds: secs, metric: metric.flatten() });
+            stats.push(IterationStat {
+                iter: it,
+                seconds: secs,
+                rel_residual: f64::NAN,
+                metric: metric.flatten(),
+            });
         };
-        let (beta, _trace) = cg_solve(matvec, &b, t, 0.0, Some(&mut cb));
+        let (beta, trace) = cg_solve(matvec, &b, t, 0.0, Some(&mut cb));
+        // `cg_solve` pushes its trace entry immediately before invoking
+        // the callback each iteration, so the vectors align one-to-one
+        for (stat, tr) in stats.iter_mut().zip(&trace) {
+            stat.rel_residual = tr.rel_residual;
+        }
+        let mreg = crate::obs::metrics::global();
+        mreg.counter("falkon_fits_total").inc();
+        mreg.counter("falkon_cg_iterations_total").add(trace.len() as u64);
 
         Ok(FalkonModel {
             centers: self.centers().to_vec(),
@@ -325,6 +356,15 @@ mod tests {
         // training AUC should improve over iterations (first vs last)
         assert!(aucs.last().unwrap() >= aucs.first().unwrap());
         assert!(model.iterations.iter().all(|s| s.metric.is_some()));
+        // the CG trace is zipped into the stats: finite residuals, and
+        // the last one no worse than the first (CG minimizes in A-norm;
+        // the 2-norm residual can wiggle, but not explode)
+        assert!(model.iterations.iter().all(|s| s.rel_residual.is_finite()));
+        let (first, last) = (
+            model.iterations.first().unwrap().rel_residual,
+            model.iterations.last().unwrap().rel_residual,
+        );
+        assert!(last <= first * 10.0, "residual exploded: {first} → {last}");
         // timing is monotone
         for w in model.iterations.windows(2) {
             assert!(w[1].seconds >= w[0].seconds);

@@ -125,6 +125,9 @@ pub struct PanelStats {
     pub cached_hits: u64,
     /// Tile serves that recomputed into the workspace.
     pub streamed: u64,
+    /// Bytes of tile data produced by streamed recomputes (`/metrics`
+    /// and `train --trace` report this as recompute traffic).
+    pub streamed_bytes: u64,
 }
 
 /// Per-sweep scratch reused by every recomputed tile, plus the
@@ -157,6 +160,7 @@ pub struct PanelCache<'a> {
     entries_evaluated: Cell<u64>,
     cached_hits: Cell<u64>,
     streamed: Cell<u64>,
+    streamed_bytes: Cell<u64>,
 }
 
 impl<'a> PanelCache<'a> {
@@ -180,6 +184,7 @@ impl<'a> PanelCache<'a> {
             entries_evaluated: Cell::new(0),
             cached_hits: Cell::new(0),
             streamed: Cell::new(0),
+            streamed_bytes: Cell::new(0),
         };
         // Materialize the planned prefix eagerly — one kernel sweep over
         // the cached tiles, through the *same* evaluator the streaming
@@ -232,6 +237,7 @@ impl<'a> PanelCache<'a> {
             entries_evaluated: self.entries_evaluated.get(),
             cached_hits: self.cached_hits.get(),
             streamed: self.streamed.get(),
+            streamed_bytes: self.streamed_bytes.get(),
         }
     }
 
@@ -301,9 +307,10 @@ impl<'a> PanelCache<'a> {
             }
             None => {
                 self.engine.block_range_into(s, e, &self.centers, ws);
-                self.entries_evaluated
-                    .set(self.entries_evaluated.get() + ((e - s) * self.m()) as u64);
+                let entries = ((e - s) * self.m()) as u64;
+                self.entries_evaluated.set(self.entries_evaluated.get() + entries);
                 self.streamed.set(self.streamed.get() + 1);
+                self.streamed_bytes.set(self.streamed_bytes.get() + entries * 8);
                 ws
             }
         }
@@ -395,6 +402,7 @@ mod tests {
             "cached sweeps must not re-evaluate the kernel"
         );
         assert_eq!(after_sweeps.streamed, 0);
+        assert_eq!(after_sweeps.streamed_bytes, 0);
         assert_eq!(after_sweeps.cached_hits, 5 * 2); // 2 tiles × 5 sweeps
     }
 
@@ -411,6 +419,7 @@ mod tests {
         assert_eq!(cache.stats().entries_evaluated, (3 * 1_500 * 30) as u64);
         assert_eq!(cache.stats().cached_hits, 0);
         assert_eq!(cache.stats().streamed, 3 * 2); // 2 tiles × 3 sweeps
+        assert_eq!(cache.stats().streamed_bytes, (3 * 1_500 * 30 * 8) as u64);
     }
 
     #[test]

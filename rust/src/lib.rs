@@ -72,6 +72,14 @@
 //! `{"op":"admin","cmd":"reload",…}` hot-swaps one model without
 //! dropping in-flight requests ([`serve::registry`]), and a full model
 //! queue sheds load with a structured `overloaded` reply.
+//!
+//! Everything above is observable through the **observability tier**
+//! ([`obs`]): a global registry of counters, gauges, and lock-free
+//! log-bucket latency histograms (p50/p95/p99 per model), a span timer
+//! over the training pipeline (`train --trace`), and an HTTP scrape
+//! endpoint (`serve --metrics-addr` → `GET /metrics` in Prometheus text
+//! format, plus `/healthz` and `/varz`). Instrumentation observes and
+//! never partitions, so enabling it changes no computed bit.
 pub mod baselines;
 pub mod bless;
 pub mod coordinator;
@@ -80,6 +88,7 @@ pub mod falkon;
 pub mod kernels;
 pub mod leverage;
 pub mod linalg;
+pub mod obs;
 pub mod rng;
 pub mod runtime;
 pub mod serve;

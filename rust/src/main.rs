@@ -29,6 +29,7 @@ use bless::kernels::Gaussian;
 use bless::rng::Rng;
 use bless::serve::{Format, ModelArtifact, ModelSpec, Predictor, ServeConfig};
 use bless::util::cli::Args;
+use bless::util::json::Json;
 use bless::util::table::fnum;
 
 fn main() -> anyhow::Result<()> {
@@ -95,10 +96,17 @@ train flags:   --dataset susy|higgs --lambda-bless --lambda-falkon --iters --sav
                evaluated once per fit instead of once per CG iteration;
                0 = pure streaming; default = RAM/4 — results are
                bit-identical at any budget)
+               --trace [--trace-out trace.json] (span profile over BLESS
+               levels, preconditioner phases and CG iterations, plus
+               counters; observation only — results stay bit-identical)
+               --verbose (per-iteration CG residual table + panel traffic)
 serve flags:   --host --port --workers --max-batch --linger-us --cache
                --cache-quant --max-queue (0 = unbounded; default 1024)
                --threads (shared compute pool for all models' batch GEMMs;
                --workers controls batching concurrency per model)
+               --metrics-addr host:port | --metrics-port N (HTTP GET
+               /metrics, /healthz, /varz on a separate listener; off by
+               default)
 convert flags: --in <path> --out <path> [--format json|binary] (default: by
                --out extension)
 ";
@@ -279,6 +287,17 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
     let lambda_falkon = args.get_f64("lambda-falkon", 1e-5);
     let iters = args.get_usize("iters", 15);
 
+    // --trace / --trace-out switch on span timing; --verbose adds the CG
+    // residual table. Tracing only observes — the fitted model is
+    // bit-identical either way (tests/parallel_determinism.rs).
+    let trace_out = args.get("trace-out").map(str::to_string);
+    let trace = args.has_flag("trace") || trace_out.is_some();
+    let verbose = args.has_flag("verbose");
+    if trace {
+        bless::obs::span::reset();
+        bless::obs::span::set_enabled(true);
+    }
+
     let (train, test) = ds.split(0.25, &mut rng);
     let eng = build_engine(engine_kind(args), train.x.clone(), Gaussian::new(sigma))?;
     println!(
@@ -329,6 +348,35 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
         fnum(test_auc)
     );
 
+    if verbose || trace {
+        println!("CG trace:");
+        println!("  {:>4}  {:>12}  {:>9}", "iter", "rel-resid", "ms");
+        let mut prev = 0.0;
+        for s in &model.iterations {
+            let ms = (s.seconds - prev) * 1e3;
+            prev = s.seconds;
+            println!("  {:>4}  {:>12.3e}  {:>9.2}", s.iter, s.rel_residual, ms);
+        }
+    }
+
+    // panel traffic: printed with --verbose/--trace and folded into the
+    // global counters so `serve --metrics-addr` exposes it after an
+    // in-process train
+    let pstats = solver.panel().stats();
+    let mreg = bless::obs::metrics::global();
+    mreg.counter("panel_cached_hits_total").add(pstats.cached_hits);
+    mreg.counter("panel_streamed_tiles_total").add(pstats.streamed);
+    mreg.counter("panel_streamed_bytes_total").add(pstats.streamed_bytes);
+    mreg.counter("panel_entries_evaluated_total").add(pstats.entries_evaluated);
+    if verbose || trace {
+        println!(
+            "panel traffic: {} cached tile hits, {} streamed tiles ({:.1} MiB recomputed)",
+            pstats.cached_hits,
+            pstats.streamed,
+            pstats.streamed_bytes as f64 / (1 << 20) as f64
+        );
+    }
+
     if let Some(save) = args.get("save") {
         let artifact = ModelArtifact::from_fitted(&model, eng.as_dyn(), &train.name)?;
         artifact.save(save)?;
@@ -339,6 +387,25 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
             artifact.d(),
             bytes as f64 / 1024.0
         );
+    }
+
+    if trace {
+        bless::obs::span::set_enabled(false);
+        let profile = bless::obs::span::profile();
+        print!("{}", profile.to_console());
+        if let Some(path) = &trace_out {
+            let counters = mreg
+                .counter_values()
+                .into_iter()
+                .map(|(k, v)| (k, Json::Num(v as f64)))
+                .collect();
+            let mut root = std::collections::BTreeMap::new();
+            root.insert("spans".to_string(), profile.to_json());
+            root.insert("counters".to_string(), Json::Obj(counters));
+            std::fs::write(path, Json::Obj(root).to_string())
+                .map_err(|e| anyhow::anyhow!("writing {path}: {e}"))?;
+            println!("wrote trace to {path}");
+        }
     }
     Ok(())
 }
@@ -412,6 +479,17 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
             source: Some(model_path.into()),
         }]
     };
+    // --metrics-addr takes a full host:port; --metrics-port reuses the
+    // serve host. Neither given → no observability listener.
+    let metrics_addr = args.get("metrics-addr").map(str::to_string).or_else(|| {
+        args.get("metrics-port").map(|_| {
+            format!(
+                "{}:{}",
+                args.get_str("host", "127.0.0.1"),
+                args.get_usize("metrics-port", 9100)
+            )
+        })
+    });
     let cfg = ServeConfig {
         addr: format!("{}:{}", args.get_str("host", "127.0.0.1"), args.get_usize("port", 7878)),
         workers: args.get_usize("workers", 2),
@@ -421,6 +499,7 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
         cache_quant: args.get_f64("cache-quant", 1e-9),
         max_queue: args.get_usize("max-queue", 1024),
         threads: args.get_usize("threads", 0),
+        metrics_addr,
     };
     for spec in &specs {
         println!(
@@ -449,6 +528,9 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
          {{\"op\":\"admin\",\"cmd\":\"reload\",\"model\":…}} to hot-swap",
         handle.addr()
     );
+    if let Some(m) = handle.metrics_addr() {
+        println!("metrics: http://{m}/metrics (also /healthz, /varz)");
+    }
     handle.join();
     println!("server stopped");
     Ok(())

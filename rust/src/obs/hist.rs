@@ -1,0 +1,368 @@
+//! Lock-free fixed-log-bucket latency histograms.
+//!
+//! A [`Histogram`] is a fixed array of 252 atomic bucket counters plus a
+//! running sum and count: recording a value is three relaxed atomic adds,
+//! with no locks, no allocation, and no floating point — cheap enough for
+//! the serve hot path. Buckets follow a base-2 octave layout with 4 linear
+//! sub-buckets per octave, so any recorded value lands in a bucket whose
+//! width is at most 25% of its lower bound; derived percentiles inherit
+//! that relative-error bound. Bucket counts themselves are *exact* (every
+//! recorded value increments exactly one bucket), which makes snapshot
+//! merging an element-wise integer add — exactly associative, unlike
+//! sampled or compressed sketches.
+
+use std::sync::atomic::{AtomicU64, Ordering::Relaxed};
+
+/// Number of buckets: values 0..=3 get unit buckets, then octaves
+/// \[2^e, 2^(e+1)) for e in 2..=63, each split into 4 linear sub-buckets:
+/// 4 + 62 * 4 = 252. Every `u64` maps to exactly one bucket.
+pub const HIST_BUCKETS: usize = 252;
+
+/// Bucket index for a recorded value (total map from `u64` onto
+/// `0..HIST_BUCKETS`, monotone in `v`).
+#[inline]
+pub fn bucket_index(v: u64) -> usize {
+    if v < 4 {
+        v as usize
+    } else {
+        let e = 63 - v.leading_zeros() as usize; // 2..=63
+        let sub = ((v >> (e - 2)) & 3) as usize; // linear quarter within the octave
+        4 + (e - 2) * 4 + sub
+    }
+}
+
+/// Inclusive lower bound of bucket `b`.
+#[inline]
+pub fn bucket_lo(b: usize) -> u64 {
+    debug_assert!(b < HIST_BUCKETS);
+    if b < 4 {
+        b as u64
+    } else {
+        let e = 2 + (b - 4) / 4;
+        let sub = ((b - 4) % 4) as u64;
+        (1u64 << e) + sub * (1u64 << (e - 2))
+    }
+}
+
+/// Exclusive upper bound of bucket `b` (saturating at `u64::MAX` for the
+/// final bucket, whose true bound 2^64 does not fit).
+#[inline]
+pub fn bucket_hi(b: usize) -> u64 {
+    debug_assert!(b < HIST_BUCKETS);
+    if b < 4 {
+        b as u64 + 1
+    } else {
+        let e = 2 + (b - 4) / 4;
+        bucket_lo(b).saturating_add(1u64 << (e - 2))
+    }
+}
+
+/// Concurrent histogram: record from any thread, snapshot from any thread.
+pub struct Histogram {
+    buckets: Vec<AtomicU64>, // HIST_BUCKETS long
+    count: AtomicU64,
+    sum: AtomicU64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Histogram {
+    /// An empty histogram.
+    pub fn new() -> Self {
+        Histogram {
+            buckets: (0..HIST_BUCKETS).map(|_| AtomicU64::new(0)).collect(),
+            count: AtomicU64::new(0),
+            sum: AtomicU64::new(0),
+        }
+    }
+
+    /// Record one value: three relaxed atomic adds.
+    #[inline]
+    pub fn record(&self, v: u64) {
+        self.buckets[bucket_index(v)].fetch_add(1, Relaxed);
+        self.count.fetch_add(1, Relaxed);
+        self.sum.fetch_add(v, Relaxed);
+    }
+
+    /// Exact sum of all recorded values.
+    pub fn sum(&self) -> u64 {
+        self.sum.load(Relaxed)
+    }
+
+    /// Number of recorded values.
+    pub fn count(&self) -> u64 {
+        self.count.load(Relaxed)
+    }
+
+    /// Copy the current counters out. Under concurrent recording the
+    /// snapshot may lag in-flight records by a few counts; each counter
+    /// is individually exact and monotone.
+    pub fn snapshot(&self) -> HistSnapshot {
+        HistSnapshot {
+            buckets: self.buckets.iter().map(|b| b.load(Relaxed)).collect(),
+            count: self.count.load(Relaxed),
+            sum: self.sum.load(Relaxed),
+        }
+    }
+}
+
+/// A plain-integer copy of a [`Histogram`]: mergeable, comparable, and
+/// the basis for percentile estimates and Prometheus exposition.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct HistSnapshot {
+    /// Exact per-bucket counts (`HIST_BUCKETS` entries).
+    pub buckets: Vec<u64>,
+    /// Total number of recorded values.
+    pub count: u64,
+    /// Exact sum of recorded values.
+    pub sum: u64,
+}
+
+impl Default for HistSnapshot {
+    fn default() -> Self {
+        HistSnapshot { buckets: vec![0; HIST_BUCKETS], count: 0, sum: 0 }
+    }
+}
+
+impl HistSnapshot {
+    /// Record into a snapshot directly (offline aggregation, tests).
+    pub fn record(&mut self, v: u64) {
+        self.buckets[bucket_index(v)] += 1;
+        self.count += 1;
+        self.sum += v;
+    }
+
+    /// Element-wise merge; exactly associative and commutative.
+    pub fn merge(&mut self, other: &HistSnapshot) {
+        for (a, b) in self.buckets.iter_mut().zip(&other.buckets) {
+            *a += b;
+        }
+        self.count += other.count;
+        self.sum += other.sum;
+    }
+
+    /// True when nothing has been recorded.
+    pub fn is_empty(&self) -> bool {
+        self.count == 0
+    }
+
+    /// Mean of recorded values (0 when empty).
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum as f64 / self.count as f64
+        }
+    }
+
+    /// Estimated `q`-quantile (`q` in \[0,1\]), linearly interpolated
+    /// within the containing bucket. Monotone in `q`; exact to within the
+    /// bucket width (≤25% relative). Returns 0 for an empty histogram.
+    pub fn percentile(&self, q: f64) -> f64 {
+        let total: u64 = self.buckets.iter().sum();
+        if total == 0 {
+            return 0.0;
+        }
+        let target = q.clamp(0.0, 1.0) * total as f64;
+        let mut cum = 0u64;
+        for (b, &c) in self.buckets.iter().enumerate() {
+            if c == 0 {
+                continue;
+            }
+            let next = cum + c;
+            if next as f64 >= target {
+                let lo = bucket_lo(b) as f64;
+                let hi = bucket_hi(b) as f64;
+                let frac = ((target - cum as f64) / c as f64).clamp(0.0, 1.0);
+                return lo + (hi - lo) * frac;
+            }
+            cum = next;
+        }
+        // q == 1.0 lands here only by floating-point slack: report the
+        // top of the last occupied bucket
+        let last = self.buckets.iter().rposition(|&c| c > 0).unwrap_or(0);
+        bucket_hi(last) as f64
+    }
+
+    /// Append this histogram in Prometheus text exposition format:
+    /// cumulative `_bucket{le=...}` lines for occupied buckets plus
+    /// `+Inf`, then `_sum` and `_count`. `labels` is a comma-joined
+    /// `k="v"` list without braces, or empty.
+    pub fn render_prometheus(&self, name: &str, labels: &str, out: &mut String) {
+        use std::fmt::Write as _;
+        let mut cum = 0u64;
+        for (b, &c) in self.buckets.iter().enumerate() {
+            if c == 0 {
+                continue;
+            }
+            cum += c;
+            // `le` is the inclusive upper bound of the bucket
+            let le = bucket_hi(b) - 1;
+            if labels.is_empty() {
+                let _ = writeln!(out, "{name}_bucket{{le=\"{le}\"}} {cum}");
+            } else {
+                let _ = writeln!(out, "{name}_bucket{{{labels},le=\"{le}\"}} {cum}");
+            }
+        }
+        if labels.is_empty() {
+            let _ = writeln!(out, "{name}_bucket{{le=\"+Inf\"}} {cum}");
+            let _ = writeln!(out, "{name}_sum {}", self.sum);
+            let _ = writeln!(out, "{name}_count {cum}");
+        } else {
+            let _ = writeln!(out, "{name}_bucket{{{labels},le=\"+Inf\"}} {cum}");
+            let _ = writeln!(out, "{name}_sum{{{labels}}} {}", self.sum);
+            let _ = writeln!(out, "{name}_count{{{labels}}} {cum}");
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    #[test]
+    fn bucket_boundaries_are_a_partition_of_u64() {
+        // lo is the first value of its bucket, hi-1 the last, and
+        // consecutive buckets tile without gap or overlap
+        for b in 0..HIST_BUCKETS {
+            assert_eq!(bucket_index(bucket_lo(b)), b, "lo of bucket {b}");
+            assert_eq!(bucket_index(bucket_hi(b) - 1), b, "hi-1 of bucket {b}");
+            if b + 1 < HIST_BUCKETS {
+                assert_eq!(bucket_hi(b), bucket_lo(b + 1), "gap after bucket {b}");
+            }
+        }
+        assert_eq!(bucket_index(0), 0);
+        assert_eq!(bucket_index(u64::MAX), HIST_BUCKETS - 1);
+    }
+
+    #[test]
+    fn bucket_relative_width_is_bounded() {
+        // every bucket past the unit range is at most 25% of its lower
+        // bound wide — the percentile error bound
+        for b in 4..HIST_BUCKETS - 1 {
+            let (lo, hi) = (bucket_lo(b), bucket_hi(b));
+            assert!(hi - lo <= lo / 4, "bucket {b}: [{lo},{hi}) wider than 25%");
+        }
+    }
+
+    fn random_snapshot(rng: &mut Rng, n: usize) -> HistSnapshot {
+        let mut s = HistSnapshot::default();
+        for _ in 0..n {
+            // span many octaves
+            let v = rng.next_u64() >> (rng.below(60) as u32);
+            s.record(v);
+        }
+        s
+    }
+
+    #[test]
+    fn merge_is_associative_and_commutative() {
+        let mut rng = Rng::seeded(11);
+        let a = random_snapshot(&mut rng, 500);
+        let b = random_snapshot(&mut rng, 300);
+        let c = random_snapshot(&mut rng, 700);
+
+        let mut ab_c = a.clone();
+        ab_c.merge(&b);
+        ab_c.merge(&c);
+
+        let mut bc = b.clone();
+        bc.merge(&c);
+        let mut a_bc = a.clone();
+        a_bc.merge(&bc);
+        assert_eq!(ab_c, a_bc, "merge must be associative");
+
+        let mut ba = b.clone();
+        ba.merge(&a);
+        let mut ab = a.clone();
+        ab.merge(&b);
+        assert_eq!(ab, ba, "merge must be commutative");
+    }
+
+    #[test]
+    fn percentiles_are_monotone_in_q() {
+        let mut rng = Rng::seeded(23);
+        let s = random_snapshot(&mut rng, 2000);
+        let mut prev = f64::NEG_INFINITY;
+        for i in 0..=100 {
+            let p = s.percentile(i as f64 / 100.0);
+            assert!(p >= prev, "p({}) = {p} < p({}) = {prev}", i, i - 1);
+            prev = p;
+        }
+    }
+
+    #[test]
+    fn percentiles_bound_the_data_within_bucket_width() {
+        let mut h = HistSnapshot::default();
+        for v in 1..=1000u64 {
+            h.record(v);
+        }
+        // p50 of 1..=1000 is ~500; bucket width at 500 is ≤ 25%
+        let p50 = h.percentile(0.5);
+        assert!((p50 - 500.0).abs() <= 130.0, "p50 {p50} too far from 500");
+        let p99 = h.percentile(0.99);
+        assert!((p99 - 990.0).abs() <= 260.0, "p99 {p99} too far from 990");
+        assert!(h.percentile(0.0) <= h.percentile(1.0));
+        assert!(h.percentile(1.0) >= 1000.0 * 0.75);
+    }
+
+    #[test]
+    fn concurrent_records_are_all_counted() {
+        use std::sync::Arc;
+        let h = Arc::new(Histogram::new());
+        let threads: Vec<_> = (0..4u64)
+            .map(|t| {
+                let h = Arc::clone(&h);
+                std::thread::spawn(move || {
+                    for i in 0..10_000u64 {
+                        h.record(t * 1_000 + i % 997);
+                    }
+                })
+            })
+            .collect();
+        for t in threads {
+            t.join().unwrap();
+        }
+        let s = h.snapshot();
+        assert_eq!(s.count, 40_000);
+        assert_eq!(s.buckets.iter().sum::<u64>(), 40_000);
+    }
+
+    #[test]
+    fn empty_histogram_is_benign() {
+        let s = Histogram::new().snapshot();
+        assert!(s.is_empty());
+        assert_eq!(s.percentile(0.5), 0.0);
+        assert_eq!(s.mean(), 0.0);
+        let mut out = String::new();
+        s.render_prometheus("x", "", &mut out);
+        assert!(out.contains("x_bucket{le=\"+Inf\"} 0"));
+        assert!(out.contains("x_count 0"));
+    }
+
+    #[test]
+    fn prometheus_lines_are_cumulative_and_labelled() {
+        let mut s = HistSnapshot::default();
+        for v in [1u64, 1, 5, 100, 100, 100] {
+            s.record(v);
+        }
+        let mut out = String::new();
+        s.render_prometheus("lat", "model=\"m\"", &mut out);
+        assert!(out.contains("lat_bucket{model=\"m\",le=\"1\"} 2"));
+        assert!(out.contains("lat_bucket{model=\"m\",le=\"+Inf\"} 6"));
+        assert!(out.contains("lat_sum{model=\"m\"} 307"));
+        assert!(out.contains("lat_count{model=\"m\"} 6"));
+        // cumulative counts never decrease down the page
+        let mut prev = 0u64;
+        for line in out.lines().filter(|l| l.contains("_bucket")) {
+            let v: u64 = line.rsplit(' ').next().unwrap().parse().unwrap();
+            assert!(v >= prev, "non-cumulative bucket line: {line}");
+            prev = v;
+        }
+    }
+}

@@ -1,0 +1,198 @@
+//! Minimal HTTP/1.1 listener for `/metrics`, `/healthz`, and `/varz`.
+//!
+//! Scrape traffic is low-rate and read-only, so the listener is a
+//! deliberately small thread-per-connection loop over the stdlib
+//! `TcpListener` — no framework, no keep-alive (every response closes
+//! the connection), GET only. The routes are served from a
+//! [`MetricsProvider`] implementation owned by the caller (the serving
+//! tier bridges its registry in `serve/server.rs`).
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering::SeqCst};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use crate::util::json::Json;
+
+/// Source of the three scrape documents.
+pub trait MetricsProvider: Send + Sync {
+    /// Body for `GET /metrics` (Prometheus text exposition format).
+    fn metrics_text(&self) -> String;
+    /// Body for `GET /varz` (JSON mirror of the metrics).
+    fn varz(&self) -> Json;
+    /// Readiness and body for `GET /healthz`; `false` yields a 503.
+    fn healthz(&self) -> (bool, Json);
+}
+
+/// Handle to a running metrics listener; stops on [`HttpHandle::stop`]
+/// or drop.
+pub struct HttpHandle {
+    addr: SocketAddr,
+    shutdown: Arc<AtomicBool>,
+    accept: Option<JoinHandle<()>>,
+}
+
+impl HttpHandle {
+    /// The bound address (useful with a `:0` request).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Stop the listener and join the accept thread (idempotent).
+    pub fn stop(&mut self) {
+        self.shutdown.store(true, SeqCst);
+        // poke the blocking accept so it observes the flag
+        let _ = TcpStream::connect(self.addr);
+        if let Some(t) = self.accept.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+impl Drop for HttpHandle {
+    fn drop(&mut self) {
+        self.stop();
+    }
+}
+
+/// Bind `addr` and serve `/metrics`, `/healthz`, `/varz` from
+/// `provider` until the handle is stopped.
+pub fn serve_http(addr: &str, provider: Arc<dyn MetricsProvider>) -> anyhow::Result<HttpHandle> {
+    let listener = TcpListener::bind(addr)
+        .map_err(|e| anyhow::anyhow!("metrics listener bind {addr}: {e}"))?;
+    let bound = listener.local_addr()?;
+    let shutdown = Arc::new(AtomicBool::new(false));
+    let flag = Arc::clone(&shutdown);
+    let accept = std::thread::spawn(move || {
+        for stream in listener.incoming() {
+            if flag.load(SeqCst) {
+                break;
+            }
+            let Ok(stream) = stream else { continue };
+            let provider = Arc::clone(&provider);
+            std::thread::spawn(move || {
+                let _ = handle_conn(stream, provider.as_ref());
+            });
+        }
+    });
+    Ok(HttpHandle { addr: bound, shutdown, accept: Some(accept) })
+}
+
+fn handle_conn(stream: TcpStream, provider: &dyn MetricsProvider) -> std::io::Result<()> {
+    stream.set_read_timeout(Some(Duration::from_secs(5)))?;
+    let mut reader = BufReader::new(stream.try_clone()?);
+    let mut request_line = String::new();
+    reader.read_line(&mut request_line)?;
+    // drain headers up to the blank line; the bodyless GETs we serve
+    // need nothing from them
+    loop {
+        let mut line = String::new();
+        if reader.read_line(&mut line)? == 0 || line == "\r\n" || line == "\n" {
+            break;
+        }
+    }
+    let mut stream = reader.into_inner();
+    let mut parts = request_line.split_whitespace();
+    let (method, target) = (parts.next().unwrap_or(""), parts.next().unwrap_or(""));
+    if method != "GET" {
+        return respond(&mut stream, "405 Method Not Allowed", "text/plain", "GET only\n");
+    }
+    let path = target.split('?').next().unwrap_or(target);
+    match path {
+        "/metrics" => {
+            let body = provider.metrics_text();
+            respond(&mut stream, "200 OK", "text/plain; version=0.0.4; charset=utf-8", &body)
+        }
+        "/varz" => {
+            let body = provider.varz().to_string();
+            respond(&mut stream, "200 OK", "application/json", &body)
+        }
+        "/healthz" => {
+            let (ready, body) = provider.healthz();
+            let status = if ready { "200 OK" } else { "503 Service Unavailable" };
+            respond(&mut stream, status, "application/json", &body.to_string())
+        }
+        _ => respond(&mut stream, "404 Not Found", "text/plain", "not found\n"),
+    }
+}
+
+fn respond(
+    stream: &mut TcpStream,
+    status: &str,
+    content_type: &str,
+    body: &str,
+) -> std::io::Result<()> {
+    write!(
+        stream,
+        "HTTP/1.1 {status}\r\nContent-Type: {content_type}\r\nContent-Length: {}\r\n\
+         Connection: close\r\n\r\n{body}",
+        body.len()
+    )?;
+    stream.flush()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Read;
+
+    struct Fixed;
+
+    impl MetricsProvider for Fixed {
+        fn metrics_text(&self) -> String {
+            "# TYPE t counter\nt 1\n".to_string()
+        }
+        fn varz(&self) -> Json {
+            Json::parse(r#"{"t": 1}"#).unwrap()
+        }
+        fn healthz(&self) -> (bool, Json) {
+            (true, Json::parse(r#"{"ok": true}"#).unwrap())
+        }
+    }
+
+    fn get(addr: SocketAddr, path: &str) -> (String, String) {
+        let mut s = TcpStream::connect(addr).unwrap();
+        write!(s, "GET {path} HTTP/1.1\r\nHost: test\r\nConnection: close\r\n\r\n").unwrap();
+        let mut buf = String::new();
+        s.read_to_string(&mut buf).unwrap();
+        let (head, body) = buf.split_once("\r\n\r\n").unwrap();
+        (head.lines().next().unwrap().to_string(), body.to_string())
+    }
+
+    #[test]
+    fn routes_and_shutdown() {
+        let mut h = serve_http("127.0.0.1:0", Arc::new(Fixed)).unwrap();
+        let addr = h.addr();
+
+        let (status, body) = get(addr, "/metrics");
+        assert!(status.contains("200"), "{status}");
+        assert_eq!(body, "# TYPE t counter\nt 1\n");
+
+        let (status, body) = get(addr, "/healthz");
+        assert!(status.contains("200"), "{status}");
+        assert!(body.contains("\"ok\":true"));
+
+        let (status, body) = get(addr, "/varz");
+        assert!(status.contains("200"), "{status}");
+        assert_eq!(Json::parse(&body).unwrap().get("t").unwrap().as_f64(), Some(1.0));
+
+        let (status, _) = get(addr, "/nope");
+        assert!(status.contains("404"), "{status}");
+
+        h.stop();
+        h.stop(); // idempotent
+    }
+
+    #[test]
+    fn non_get_is_rejected() {
+        let mut h = serve_http("127.0.0.1:0", Arc::new(Fixed)).unwrap();
+        let mut s = TcpStream::connect(h.addr()).unwrap();
+        write!(s, "POST /metrics HTTP/1.1\r\n\r\n").unwrap();
+        let mut buf = String::new();
+        s.read_to_string(&mut buf).unwrap();
+        assert!(buf.starts_with("HTTP/1.1 405"), "{buf}");
+        h.stop();
+    }
+}

@@ -1,0 +1,289 @@
+//! Global metrics registry: named counters, gauges, and histograms.
+//!
+//! The registry is a process-wide, stdlib-only store keyed by metric
+//! name. Handles ([`Counter`], [`Gauge`], [`crate::obs::Histogram`]) are
+//! `Arc`s to atomics: callers look them up once (a short `RwLock` read)
+//! and then update them with relaxed atomic ops, so the steady-state
+//! cost is independent of the registry. Everything here *observes* —
+//! no computation reads a metric back to make a decision, preserving
+//! the fixed-partition determinism invariant.
+//!
+//! Names use Prometheus conventions (`snake_case`, `_total` suffix for
+//! counters); [`MetricsRegistry::render_prometheus`] emits the text
+//! exposition format and [`MetricsRegistry::varz`] a JSON mirror.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicBool, AtomicI64, AtomicU64, Ordering::Relaxed};
+use std::sync::{Arc, OnceLock, RwLock};
+
+use super::hist::{HistSnapshot, Histogram};
+use crate::util::json::Json;
+
+/// Monotone event counter.
+#[derive(Default)]
+pub struct Counter(AtomicU64);
+
+impl Counter {
+    /// Add `n` events.
+    #[inline]
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Relaxed);
+    }
+
+    /// Add one event.
+    #[inline]
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    /// Current value.
+    pub fn get(&self) -> u64 {
+        self.0.load(Relaxed)
+    }
+
+    /// Reset to zero (trace runs, tests).
+    pub fn reset(&self) {
+        self.0.store(0, Relaxed);
+    }
+}
+
+/// Instantaneous signed value.
+#[derive(Default)]
+pub struct Gauge(AtomicI64);
+
+impl Gauge {
+    /// Set the current value.
+    #[inline]
+    pub fn set(&self, v: i64) {
+        self.0.store(v, Relaxed);
+    }
+
+    /// Adjust by a signed delta.
+    #[inline]
+    pub fn add(&self, d: i64) {
+        self.0.fetch_add(d, Relaxed);
+    }
+
+    /// Current value.
+    pub fn get(&self) -> i64 {
+        self.0.load(Relaxed)
+    }
+}
+
+/// A named collection of counters, gauges, and histograms.
+#[derive(Default)]
+pub struct MetricsRegistry {
+    counters: RwLock<BTreeMap<String, Arc<Counter>>>,
+    gauges: RwLock<BTreeMap<String, Arc<Gauge>>>,
+    histograms: RwLock<BTreeMap<String, Arc<Histogram>>>,
+}
+
+fn get_or_insert<T: Default>(map: &RwLock<BTreeMap<String, Arc<T>>>, name: &str) -> Arc<T> {
+    if let Some(v) = map.read().unwrap_or_else(|e| e.into_inner()).get(name) {
+        return Arc::clone(v);
+    }
+    let mut w = map.write().unwrap_or_else(|e| e.into_inner());
+    Arc::clone(w.entry(name.to_string()).or_default())
+}
+
+impl MetricsRegistry {
+    /// An empty registry (the process-wide one is [`global`]).
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Look up or create a counter.
+    pub fn counter(&self, name: &str) -> Arc<Counter> {
+        get_or_insert(&self.counters, name)
+    }
+
+    /// Look up or create a gauge.
+    pub fn gauge(&self, name: &str) -> Arc<Gauge> {
+        get_or_insert(&self.gauges, name)
+    }
+
+    /// Look up or create a histogram.
+    pub fn histogram(&self, name: &str) -> Arc<Histogram> {
+        get_or_insert(&self.histograms, name)
+    }
+
+    /// Current value of every counter.
+    pub fn counter_values(&self) -> BTreeMap<String, u64> {
+        let map = self.counters.read().unwrap_or_else(|e| e.into_inner());
+        map.iter().map(|(k, v)| (k.clone(), v.get())).collect()
+    }
+
+    /// Current value of every gauge.
+    pub fn gauge_values(&self) -> BTreeMap<String, i64> {
+        let map = self.gauges.read().unwrap_or_else(|e| e.into_inner());
+        map.iter().map(|(k, v)| (k.clone(), v.get())).collect()
+    }
+
+    /// Snapshot of every histogram.
+    pub fn histogram_snapshots(&self) -> BTreeMap<String, HistSnapshot> {
+        let map = self.histograms.read().unwrap_or_else(|e| e.into_inner());
+        map.iter().map(|(k, v)| (k.clone(), v.snapshot())).collect()
+    }
+
+    /// Zero every counter in place (handles stay valid). Used between
+    /// trace runs.
+    pub fn reset_counters(&self) {
+        for c in self.counters.read().unwrap_or_else(|e| e.into_inner()).values() {
+            c.reset();
+        }
+    }
+
+    /// Append every metric in Prometheus text exposition format, each
+    /// name prefixed by `prefix` (e.g. `bless_`).
+    pub fn render_prometheus(&self, prefix: &str, out: &mut String) {
+        use std::fmt::Write as _;
+        for (name, v) in self.counter_values() {
+            let _ = writeln!(out, "# TYPE {prefix}{name} counter");
+            let _ = writeln!(out, "{prefix}{name} {v}");
+        }
+        for (name, v) in self.gauge_values() {
+            let _ = writeln!(out, "# TYPE {prefix}{name} gauge");
+            let _ = writeln!(out, "{prefix}{name} {v}");
+        }
+        for (name, snap) in self.histogram_snapshots() {
+            let _ = writeln!(out, "# TYPE {prefix}{name} histogram");
+            snap.render_prometheus(&format!("{prefix}{name}"), "", out);
+        }
+    }
+
+    /// JSON mirror of the registry: `{counters, gauges, histograms}`
+    /// with per-histogram count/sum/mean/p50/p95/p99.
+    pub fn varz(&self) -> Json {
+        let counters = self
+            .counter_values()
+            .into_iter()
+            .map(|(k, v)| (k, Json::Num(v as f64)))
+            .collect();
+        let gauges = self
+            .gauge_values()
+            .into_iter()
+            .map(|(k, v)| (k, Json::Num(v as f64)))
+            .collect();
+        let hists = self
+            .histogram_snapshots()
+            .into_iter()
+            .map(|(k, s)| {
+                let mut o = BTreeMap::new();
+                o.insert("count".to_string(), Json::Num(s.count as f64));
+                o.insert("sum".to_string(), Json::Num(s.sum as f64));
+                o.insert("mean".to_string(), Json::Num(s.mean()));
+                o.insert("p50".to_string(), Json::Num(s.percentile(0.50)));
+                o.insert("p95".to_string(), Json::Num(s.percentile(0.95)));
+                o.insert("p99".to_string(), Json::Num(s.percentile(0.99)));
+                (k, Json::Obj(o))
+            })
+            .collect();
+        let mut root = BTreeMap::new();
+        root.insert("counters".to_string(), Json::Obj(counters));
+        root.insert("gauges".to_string(), Json::Obj(gauges));
+        root.insert("histograms".to_string(), Json::Obj(hists));
+        Json::Obj(root)
+    }
+}
+
+/// The process-wide registry used by training and serving
+/// instrumentation.
+pub fn global() -> &'static MetricsRegistry {
+    static GLOBAL: OnceLock<MetricsRegistry> = OnceLock::new();
+    GLOBAL.get_or_init(MetricsRegistry::new)
+}
+
+// The serve-path recording gate exists so `benches/obs_overhead.rs` can
+// measure an honest instrumented-vs-uninstrumented latency delta on one
+// process. It defaults to on and nothing in the product turns it off.
+static SERVE_RECORDING: AtomicBool = AtomicBool::new(true);
+
+/// Enable/disable serve-path histogram recording (bench-only knob).
+pub fn set_serve_recording(on: bool) {
+    SERVE_RECORDING.store(on, Relaxed);
+}
+
+/// Whether serve-path histogram recording is on (default: yes).
+#[inline]
+pub fn serve_recording() -> bool {
+    SERVE_RECORDING.load(Relaxed)
+}
+
+/// Escape a string for use inside a Prometheus label value: backslash,
+/// double quote, and newline.
+pub fn escape_label(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '\\' => out.push_str("\\\\"),
+            '"' => out.push_str("\\\""),
+            '\n' => out.push_str("\\n"),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn handles_are_shared_and_persistent() {
+        let reg = MetricsRegistry::new();
+        let a = reg.counter("events_total");
+        let b = reg.counter("events_total");
+        a.inc();
+        b.add(2);
+        assert_eq!(reg.counter("events_total").get(), 3);
+        assert_eq!(reg.counter_values()["events_total"], 3);
+
+        let g = reg.gauge("depth");
+        g.set(5);
+        g.add(-2);
+        assert_eq!(reg.gauge_values()["depth"], 3);
+
+        let h = reg.histogram("lat_us");
+        h.record(10);
+        h.record(1000);
+        assert_eq!(reg.histogram_snapshots()["lat_us"].count, 2);
+    }
+
+    #[test]
+    fn prometheus_rendering_covers_all_kinds() {
+        let reg = MetricsRegistry::new();
+        reg.counter("reqs_total").add(7);
+        reg.gauge("queue_depth").set(-1);
+        reg.histogram("lat_us").record(42);
+        let mut out = String::new();
+        reg.render_prometheus("bless_", &mut out);
+        assert!(out.contains("# TYPE bless_reqs_total counter"));
+        assert!(out.contains("bless_reqs_total 7"));
+        assert!(out.contains("bless_queue_depth -1"));
+        assert!(out.contains("# TYPE bless_lat_us histogram"));
+        assert!(out.contains("bless_lat_us_count 1"));
+    }
+
+    #[test]
+    fn varz_is_valid_json_with_percentiles() {
+        let reg = MetricsRegistry::new();
+        reg.counter("c_total").inc();
+        let h = reg.histogram("lat_us");
+        for v in 1..=100u64 {
+            h.record(v);
+        }
+        let j = Json::parse(&reg.varz().to_string()).unwrap();
+        assert_eq!(j.get("counters").unwrap().get("c_total").unwrap().as_f64(), Some(1.0));
+        let lat = j.get("histograms").unwrap().get("lat_us").unwrap();
+        let p50 = lat.get("p50").unwrap().as_f64().unwrap();
+        let p99 = lat.get("p99").unwrap().as_f64().unwrap();
+        assert!(p50 <= p99);
+        assert!(p50 > 0.0);
+    }
+
+    #[test]
+    fn label_escaping() {
+        assert_eq!(escape_label("plain"), "plain");
+        assert_eq!(escape_label("a\"b\\c\nd"), "a\\\"b\\\\c\\nd");
+    }
+}

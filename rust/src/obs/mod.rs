@@ -1,0 +1,37 @@
+//! Observability tier: metrics registry, latency histograms, span
+//! tracing, and the HTTP scrape endpoint.
+//!
+//! Four pieces, all stdlib-only:
+//!
+//! - [`hist`] — lock-free fixed-log-bucket histograms (252 buckets,
+//!   ≤25% relative bucket width) with exact counts, associative merge,
+//!   and derived p50/p95/p99;
+//! - [`metrics`] — a process-wide registry of named counters, gauges,
+//!   and histograms with Prometheus and JSON renderings;
+//! - [`span`] — a hierarchical span timer for the training pipeline
+//!   (`train --trace`), gated by one atomic flag;
+//! - [`http`] — a minimal HTTP/1.1 listener serving `GET /metrics`
+//!   (Prometheus text exposition), `/healthz`, and `/varz` (JSON),
+//!   enabled with `serve --metrics-addr`.
+//!
+//! The cardinal rule of the tier: instrumentation **observes, never
+//! partitions**. No timer or counter feeds back into how work is split
+//! or scheduled, so enabling any of it leaves every computed bit
+//! unchanged (`tests/parallel_determinism.rs` enforces this for span
+//! tracing), and the serve-path cost is three relaxed atomic adds per
+//! request (measured in `BENCH_obs.json`).
+
+pub mod hist;
+pub mod http;
+pub mod metrics;
+pub mod span;
+
+pub use hist::{HistSnapshot, Histogram, HIST_BUCKETS};
+pub use http::{serve_http, HttpHandle, MetricsProvider};
+pub use metrics::{escape_label, Counter, Gauge, MetricsRegistry};
+pub use span::{SpanProfile, SpanStat};
+
+/// Open a span on the calling thread (see [`span::enter`]).
+pub fn span(name: &str) -> span::Span {
+    span::enter(name)
+}

@@ -1,0 +1,219 @@
+//! Hierarchical span timer for the training pipeline.
+//!
+//! A span is a named, scoped timer: [`enter`] returns a guard, dropping
+//! it records the elapsed wall time under the slash-joined path of all
+//! spans currently open *on this thread* (`falkon.fit/cg_iter`). Paths
+//! aggregate into a global profile — calls and total nanoseconds per
+//! path — that [`profile`] snapshots for console or JSON output.
+//!
+//! Tracing is off by default and gated by a single atomic flag: a
+//! disabled [`enter`] is one relaxed load and no clock read, cheap
+//! enough to leave in release hot paths. Spans *observe* work, they
+//! never partition it — enabling tracing must not change a single bit
+//! of any computed result (enforced by `tests/parallel_determinism.rs`).
+//! By convention spans are placed on the coordinating thread only, above
+//! the pool-dispatch level, so worker threads never see a dangling path.
+
+use std::cell::RefCell;
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicBool, Ordering::Relaxed};
+use std::sync::{Mutex, OnceLock};
+use std::time::Instant;
+
+use crate::util::json::Json;
+
+static ENABLED: AtomicBool = AtomicBool::new(false);
+
+fn table() -> &'static Mutex<BTreeMap<String, SpanStat>> {
+    static TABLE: OnceLock<Mutex<BTreeMap<String, SpanStat>>> = OnceLock::new();
+    TABLE.get_or_init(|| Mutex::new(BTreeMap::new()))
+}
+
+thread_local! {
+    static STACK: RefCell<Vec<String>> = const { RefCell::new(Vec::new()) };
+}
+
+/// Turn span recording on or off globally.
+pub fn set_enabled(on: bool) {
+    ENABLED.store(on, Relaxed);
+}
+
+/// Whether span recording is currently on.
+pub fn enabled() -> bool {
+    ENABLED.load(Relaxed)
+}
+
+/// Clear all recorded spans.
+pub fn reset() {
+    table().lock().unwrap_or_else(|e| e.into_inner()).clear();
+}
+
+/// Aggregated statistics for one span path.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct SpanStat {
+    /// Number of times the span was entered.
+    pub calls: u64,
+    /// Total wall time across all calls, in nanoseconds.
+    pub nanos: u64,
+}
+
+/// RAII guard returned by [`enter`]; records on drop.
+pub struct Span {
+    start: Option<Instant>,
+}
+
+/// Open a span. When tracing is disabled this is one atomic load and
+/// returns an inert guard; when enabled, the name is pushed onto the
+/// calling thread's span stack until the guard drops.
+pub fn enter(name: &str) -> Span {
+    if !ENABLED.load(Relaxed) {
+        return Span { start: None };
+    }
+    STACK.with(|s| s.borrow_mut().push(name.to_string()));
+    Span { start: Some(Instant::now()) }
+}
+
+impl Drop for Span {
+    fn drop(&mut self) {
+        let Some(start) = self.start else { return };
+        let nanos = start.elapsed().as_nanos() as u64;
+        let path = STACK.with(|s| {
+            let mut stack = s.borrow_mut();
+            let path = stack.join("/");
+            stack.pop();
+            path
+        });
+        let mut table = table().lock().unwrap_or_else(|e| e.into_inner());
+        let stat = table.entry(path).or_default();
+        stat.calls += 1;
+        stat.nanos += nanos;
+    }
+}
+
+/// A sorted snapshot of every recorded span path.
+#[derive(Clone, Debug, Default)]
+pub struct SpanProfile {
+    /// `(path, stat)` pairs in lexicographic path order, which nests
+    /// children directly under their parents.
+    pub entries: Vec<(String, SpanStat)>,
+}
+
+/// Snapshot the global span table.
+pub fn profile() -> SpanProfile {
+    let table = table().lock().unwrap_or_else(|e| e.into_inner());
+    SpanProfile { entries: table.iter().map(|(k, v)| (k.clone(), *v)).collect() }
+}
+
+impl SpanProfile {
+    /// True when no spans were recorded.
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Stats for an exact path, if recorded.
+    pub fn get(&self, path: &str) -> Option<SpanStat> {
+        self.entries.iter().find(|(p, _)| p == path).map(|(_, s)| *s)
+    }
+
+    /// Indented console rendering: one line per path, total wall
+    /// milliseconds and call count, children indented under parents.
+    pub fn to_console(&self) -> String {
+        use std::fmt::Write as _;
+        let mut out = String::from("span profile (total wall ms × calls)\n");
+        for (path, stat) in &self.entries {
+            let depth = path.matches('/').count();
+            let name = path.rsplit('/').next().unwrap_or(path);
+            let ms = stat.nanos as f64 / 1e6;
+            let indent = "  ".repeat(depth + 1);
+            let label = format!("{indent}{name}");
+            let _ = writeln!(out, "{label:<40} {ms:>10.2} ms  ×{}", stat.calls);
+        }
+        out
+    }
+
+    /// JSON rendering: an array of `{path, calls, ms}` objects.
+    pub fn to_json(&self) -> Json {
+        Json::Arr(
+            self.entries
+                .iter()
+                .map(|(path, stat)| {
+                    let mut obj = BTreeMap::new();
+                    obj.insert("path".to_string(), Json::Str(path.clone()));
+                    obj.insert("calls".to_string(), Json::Num(stat.calls as f64));
+                    obj.insert("ms".to_string(), Json::Num(stat.nanos as f64 / 1e6));
+                    Json::Obj(obj)
+                })
+                .collect(),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // span state is global; serialize the tests that toggle it
+    fn guard() -> std::sync::MutexGuard<'static, ()> {
+        static LOCK: OnceLock<Mutex<()>> = OnceLock::new();
+        LOCK.get_or_init(|| Mutex::new(()))
+            .lock()
+            .unwrap_or_else(|e| e.into_inner())
+    }
+
+    #[test]
+    fn disabled_spans_record_nothing() {
+        let _g = guard();
+        set_enabled(false);
+        reset();
+        {
+            let _a = enter("off.outer");
+            let _b = enter("off.inner");
+        }
+        assert!(profile().is_empty());
+    }
+
+    #[test]
+    fn nested_spans_build_slash_paths() {
+        let _g = guard();
+        set_enabled(true);
+        reset();
+        {
+            let _a = enter("outer");
+            for _ in 0..3 {
+                let _b = enter("inner");
+            }
+        }
+        set_enabled(false);
+        let p = profile();
+        let outer = p.get("outer").expect("outer span recorded");
+        let inner = p.get("outer/inner").expect("nested path recorded");
+        assert_eq!(outer.calls, 1);
+        assert_eq!(inner.calls, 3);
+        assert!(outer.nanos >= inner.nanos, "parent includes child time");
+        assert!(p.get("inner").is_none(), "child must not appear at the root");
+        reset();
+        assert!(profile().is_empty());
+    }
+
+    #[test]
+    fn profile_renders_console_and_json() {
+        let _g = guard();
+        set_enabled(true);
+        reset();
+        {
+            let _a = enter("render");
+            let _b = enter("child");
+        }
+        set_enabled(false);
+        let p = profile();
+        let console = p.to_console();
+        assert!(console.contains("render"));
+        assert!(console.contains("child"));
+        let json = p.to_json().to_string();
+        let parsed = Json::parse(&json).unwrap();
+        let arr = parsed.as_arr().unwrap();
+        assert_eq!(arr.len(), 2);
+        assert!(arr.iter().any(|e| e.get("path").unwrap().as_str() == Some("render/child")));
+        reset();
+    }
+}

@@ -50,6 +50,20 @@
 //! (`ServeConfig::max_queue`); a request arriving at a full queue is
 //! shed immediately with `{"error":…,"code":"overloaded"}` rather than
 //! buffered without bound — clients should back off and retry.
+//! [`Client::predict_with_retry`] packages that loop: jittered
+//! exponential backoff under a [`RetryPolicy`], retrying only
+//! `overloaded` replies.
+//!
+//! ## Observability
+//!
+//! With `ServeConfig::metrics_addr` set (CLI: `repro serve
+//! --metrics-port 9100`), a separate HTTP listener exposes `GET
+//! /metrics` (Prometheus text format: per-model request counters,
+//! latency and batch-size histograms, queue-depth gauges, plus the
+//! training-side [`crate::obs`] registry), `GET /healthz` (readiness;
+//! 503 once shutdown begins) and `GET /varz` (the same data as JSON).
+//! The `stats` wire verb carries derived p50/p95/p99 fields alongside
+//! the exact counters.
 //!
 //! ## Train → save → serve → predict
 //!
@@ -92,4 +106,4 @@ pub use codec::Format;
 pub use model_store::{ModelArtifact, Predictor, FORMAT, VERSION};
 pub use protocol::{Request, StatsSnapshot};
 pub use registry::{ModelEntry, ModelSpec, ModelStats, Registry};
-pub use server::{start, start_registry, Client, ServeConfig, ServerHandle};
+pub use server::{start, start_registry, Client, RetryPolicy, ServeConfig, ServerHandle};

@@ -183,6 +183,19 @@ pub struct StatsSnapshot {
     pub reloads: u64,
     /// Total predict latency in microseconds (enqueue → reply).
     pub latency_us: u64,
+    /// Median predict latency in microseconds, from the server-side
+    /// histogram (0 when idle or talking to a pre-histogram server).
+    pub latency_p50_us: f64,
+    /// 95th-percentile predict latency in microseconds.
+    pub latency_p95_us: f64,
+    /// 99th-percentile predict latency in microseconds.
+    pub latency_p99_us: f64,
+    /// Median coalesced batch size.
+    pub batch_p50: f64,
+    /// 95th-percentile coalesced batch size.
+    pub batch_p95: f64,
+    /// 99th-percentile coalesced batch size.
+    pub batch_p99: f64,
 }
 
 impl StatsSnapshot {
@@ -204,7 +217,9 @@ impl StatsSnapshot {
         }
     }
 
-    /// Accumulate another snapshot (registry aggregation).
+    /// Accumulate another snapshot (registry aggregation). Sums only the
+    /// `u64` counters — percentiles don't add, so the aggregation path in
+    /// the registry recomputes them from merged histograms instead.
     pub fn add(&mut self, other: &StatsSnapshot) {
         self.requests += other.requests;
         self.batches += other.batches;
@@ -231,6 +246,12 @@ impl StatsSnapshot {
         obj.insert("reloads".to_string(), Json::Num(self.reloads as f64));
         obj.insert("latency_us".to_string(), Json::Num(self.latency_us as f64));
         obj.insert("mean_latency_us".to_string(), Json::Num(self.mean_latency_us()));
+        obj.insert("latency_p50_us".to_string(), Json::Num(self.latency_p50_us));
+        obj.insert("latency_p95_us".to_string(), Json::Num(self.latency_p95_us));
+        obj.insert("latency_p99_us".to_string(), Json::Num(self.latency_p99_us));
+        obj.insert("batch_p50".to_string(), Json::Num(self.batch_p50));
+        obj.insert("batch_p95".to_string(), Json::Num(self.batch_p95));
+        obj.insert("batch_p99".to_string(), Json::Num(self.batch_p99));
         Json::Obj(obj).to_string()
     }
 
@@ -239,6 +260,7 @@ impl StatsSnapshot {
     pub fn parse(line: &str) -> anyhow::Result<StatsSnapshot> {
         let j = Json::parse(line)?;
         let field = |k: &str| j.get(k).and_then(|v| v.as_f64()).unwrap_or(0.0) as u64;
+        let ffield = |k: &str| j.get(k).and_then(|v| v.as_f64()).unwrap_or(0.0);
         Ok(StatsSnapshot {
             requests: field("requests"),
             batches: field("batches"),
@@ -248,6 +270,12 @@ impl StatsSnapshot {
             shed: field("shed"),
             reloads: field("reloads"),
             latency_us: field("latency_us"),
+            latency_p50_us: ffield("latency_p50_us"),
+            latency_p95_us: ffield("latency_p95_us"),
+            latency_p99_us: ffield("latency_p99_us"),
+            batch_p50: ffield("batch_p50"),
+            batch_p95: ffield("batch_p95"),
+            batch_p99: ffield("batch_p99"),
         })
     }
 }
@@ -373,6 +401,12 @@ mod tests {
             shed: 2,
             reloads: 4,
             latency_us: 12_000,
+            latency_p50_us: 104.0,
+            latency_p95_us: 240.5,
+            latency_p99_us: 512.0,
+            batch_p50: 5.0,
+            batch_p95: 8.0,
+            batch_p99: 8.0,
         };
         let line = s.to_line();
         let back = StatsSnapshot::parse(&line).unwrap();

@@ -18,6 +18,7 @@
 //!   the server answers a structured `overloaded` error instead of
 //!   buffering without bound.
 
+use crate::obs::{HistSnapshot, Histogram};
 use crate::serve::batcher::{BatchQueue, PredictJob, Push};
 use crate::serve::cache::{PredictionCache, QueryKey};
 use crate::serve::model_store::{ModelArtifact, Predictor};
@@ -27,7 +28,8 @@ use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex, RwLock};
 
-/// Per-model monotone counters (lock-free; read via [`StatsSnapshot`]).
+/// Per-model monotone counters and latency/batch-size histograms
+/// (lock-free; read via [`StatsSnapshot`]).
 #[derive(Default)]
 pub struct ModelStats {
     /// Predict requests routed to this model.
@@ -44,13 +46,20 @@ pub struct ModelStats {
     pub shed: AtomicU64,
     /// Hot reloads applied.
     pub reloads: AtomicU64,
-    /// Total predict latency in microseconds.
-    pub latency_us: AtomicU64,
+    /// Per-request predict latency in microseconds. The histogram's
+    /// exact running sum is what the wire protocol still reports as
+    /// `latency_us`, so pre-histogram clients keep working.
+    pub latency: Histogram,
+    /// Executed batch sizes (requests per batch).
+    pub batch_sizes: Histogram,
 }
 
 impl ModelStats {
-    /// Point-in-time copy of the counters.
+    /// Point-in-time copy of the counters, with p50/p95/p99 derived
+    /// from the latency and batch-size histograms.
     pub fn snapshot(&self) -> StatsSnapshot {
+        let lat = self.latency.snapshot();
+        let batch = self.batch_sizes.snapshot();
         StatsSnapshot {
             requests: self.requests.load(Ordering::Relaxed),
             batches: self.batches.load(Ordering::Relaxed),
@@ -59,7 +68,13 @@ impl ModelStats {
             errors: self.errors.load(Ordering::Relaxed),
             shed: self.shed.load(Ordering::Relaxed),
             reloads: self.reloads.load(Ordering::Relaxed),
-            latency_us: self.latency_us.load(Ordering::Relaxed),
+            latency_us: lat.sum,
+            latency_p50_us: lat.percentile(0.50),
+            latency_p95_us: lat.percentile(0.95),
+            latency_p99_us: lat.percentile(0.99),
+            batch_p50: batch.percentile(0.50),
+            batch_p95: batch.percentile(0.95),
+            batch_p99: batch.percentile(0.99),
         }
     }
 }
@@ -332,12 +347,25 @@ impl Registry {
         }
     }
 
-    /// Sum of all per-model counters.
+    /// Sum of all per-model counters. Percentiles are recomputed from
+    /// the *merged* histograms (summing per-model percentiles would be
+    /// meaningless), so the aggregate p50/p95/p99 are exactly what one
+    /// histogram over all traffic would report.
     pub fn aggregate_stats(&self) -> StatsSnapshot {
         let mut total = StatsSnapshot::default();
+        let mut lat = HistSnapshot::default();
+        let mut batch = HistSnapshot::default();
         for entry in self.models.values() {
             total.add(&entry.stats.snapshot());
+            lat.merge(&entry.stats.latency.snapshot());
+            batch.merge(&entry.stats.batch_sizes.snapshot());
         }
+        total.latency_p50_us = lat.percentile(0.50);
+        total.latency_p95_us = lat.percentile(0.95);
+        total.latency_p99_us = lat.percentile(0.99);
+        total.batch_p50 = batch.percentile(0.50);
+        total.batch_p95 = batch.percentile(0.95);
+        total.batch_p99 = batch.percentile(0.99);
         total
     }
 }
@@ -465,5 +493,29 @@ mod tests {
         let total = reg.aggregate_stats();
         assert_eq!(total.requests, 7);
         assert_eq!(total.shed, 1);
+    }
+
+    #[test]
+    fn snapshot_derives_percentiles_and_aggregate_merges_histograms() {
+        let reg = Registry::new(vec![spec("a", 1.0), spec("b", 2.0)], 0, 1e-9, 0).unwrap();
+        let a = reg.get("a").unwrap();
+        let b = reg.get("b").unwrap();
+        // model a: fast (≈100 µs), model b: slow (≈10 ms)
+        for _ in 0..100 {
+            a.stats.latency.record(100);
+            b.stats.latency.record(10_000);
+        }
+        let sa = a.stats.snapshot();
+        assert_eq!(sa.latency_us, 100 * 100, "wire sum must stay exact");
+        assert!(sa.latency_p50_us >= 100.0 && sa.latency_p50_us <= 125.0);
+        assert!(sa.latency_p50_us <= sa.latency_p95_us);
+        assert!(sa.latency_p95_us <= sa.latency_p99_us);
+        // the aggregate percentiles come from the merged histogram: p50
+        // of 100 fast + 100 slow requests sits at the fast/slow boundary,
+        // not at the sum of per-model medians
+        let total = reg.aggregate_stats();
+        assert_eq!(total.latency_us, 100 * 100 + 100 * 10_000);
+        assert!(total.latency_p50_us < 10_000.0, "p50 {}", total.latency_p50_us);
+        assert!(total.latency_p99_us >= 10_000.0, "p99 {}", total.latency_p99_us);
     }
 }

@@ -23,12 +23,18 @@
 //! every model queue (in-flight work drains, new work is refused), pokes
 //! the accept loop and joins the worker pool. Idle keep-alive
 //! connections are dropped when the process exits.
+//!
+//! With [`ServeConfig::metrics_addr`] set, a second listener serves
+//! `GET /metrics` (Prometheus), `/healthz` and `/varz` through
+//! [`MetricsBridge`]-over-[`crate::obs::serve_http`] — scrape traffic
+//! never touches the prediction socket.
 
 use crate::linalg::Matrix;
+use crate::obs::{escape_label, serve_http, HttpHandle, MetricsProvider};
 use crate::serve::batcher::{PredictJob, Push};
 use crate::serve::model_store::ModelArtifact;
 use crate::serve::protocol::{self, Request, StatsSnapshot};
-use crate::serve::registry::{CacheProbe, ModelEntry, ModelSpec, Registry};
+use crate::serve::registry::{CacheProbe, ModelEntry, ModelSpec, ModelStats, Registry};
 use crate::util::json::Json;
 use std::collections::BTreeMap;
 use std::io::{BufRead, BufReader, BufWriter, Write};
@@ -73,6 +79,10 @@ pub struct ServeConfig {
     /// core budget when batches are large enough to dispatch (> 64
     /// rows).
     pub threads: usize,
+    /// Optional bind address for the HTTP observability listener
+    /// (`GET /metrics`, `/healthz`, `/varz`). `None` (the default)
+    /// disables it; use port 0 for an ephemeral port (tests).
+    pub metrics_addr: Option<String>,
 }
 
 impl Default for ServeConfig {
@@ -86,6 +96,7 @@ impl Default for ServeConfig {
             cache_quant: 1e-9,
             max_queue: 1024,
             threads: 0,
+            metrics_addr: None,
         }
     }
 }
@@ -117,18 +128,149 @@ impl Shared {
     }
 }
 
+/// Bridges the serving registry into the scrape endpoints: `/metrics`
+/// renders per-model counters and histograms (each series carries a
+/// `model="…"` label) followed by the process-wide
+/// [`crate::obs::metrics::global`] registry, `/varz` mirrors the same
+/// data as JSON, and `/healthz` reports per-model readiness.
+struct MetricsBridge {
+    shared: Arc<Shared>,
+}
+
+impl MetricsProvider for MetricsBridge {
+    fn metrics_text(&self) -> String {
+        use std::fmt::Write as _;
+        let mut out = String::new();
+        let entries = self.shared.registry.entries();
+        type StatGetter = fn(&ModelStats) -> u64;
+        let kinds: [(&str, StatGetter); 7] = [
+            ("bless_serve_requests_total", |s| s.requests.load(Ordering::Relaxed)),
+            ("bless_serve_batches_total", |s| s.batches.load(Ordering::Relaxed)),
+            ("bless_serve_batched_total", |s| s.batched.load(Ordering::Relaxed)),
+            ("bless_serve_cache_hits_total", |s| s.cache_hits.load(Ordering::Relaxed)),
+            ("bless_serve_errors_total", |s| s.errors.load(Ordering::Relaxed)),
+            ("bless_serve_shed_total", |s| s.shed.load(Ordering::Relaxed)),
+            ("bless_serve_reloads_total", |s| s.reloads.load(Ordering::Relaxed)),
+        ];
+        for (name, get) in kinds {
+            let _ = writeln!(out, "# TYPE {name} counter");
+            for e in &entries {
+                let model = escape_label(e.name());
+                let _ = writeln!(out, "{name}{{model=\"{model}\"}} {}", get(&e.stats));
+            }
+        }
+        let _ = writeln!(out, "# TYPE bless_serve_queue_depth gauge");
+        for e in &entries {
+            let model = escape_label(e.name());
+            let depth = e.queue.len();
+            let _ = writeln!(out, "bless_serve_queue_depth{{model=\"{model}\"}} {depth}");
+        }
+        let _ = writeln!(out, "# TYPE bless_serve_model_version gauge");
+        for e in &entries {
+            let model = escape_label(e.name());
+            let v = e.version();
+            let _ = writeln!(out, "bless_serve_model_version{{model=\"{model}\"}} {v}");
+        }
+        let _ = writeln!(out, "# TYPE bless_serve_conn_errors_total counter");
+        let _ = writeln!(
+            out,
+            "bless_serve_conn_errors_total {}",
+            self.shared.conn_errors.load(Ordering::Relaxed)
+        );
+        let _ = writeln!(out, "# TYPE bless_serve_latency_us histogram");
+        for e in &entries {
+            let label = format!("model=\"{}\"", escape_label(e.name()));
+            e.stats
+                .latency
+                .snapshot()
+                .render_prometheus("bless_serve_latency_us", &label, &mut out);
+        }
+        let _ = writeln!(out, "# TYPE bless_serve_batch_size histogram");
+        for e in &entries {
+            let label = format!("model=\"{}\"", escape_label(e.name()));
+            e.stats
+                .batch_sizes
+                .snapshot()
+                .render_prometheus("bless_serve_batch_size", &label, &mut out);
+        }
+        let pool = crate::util::pool::stats();
+        let _ = writeln!(out, "# TYPE bless_pool_dispatches_total counter");
+        let _ = writeln!(out, "bless_pool_dispatches_total {}", pool.dispatches);
+        let _ = writeln!(out, "# TYPE bless_pool_inline_runs_total counter");
+        let _ = writeln!(out, "bless_pool_inline_runs_total {}", pool.inline_runs);
+        let _ = writeln!(out, "# TYPE bless_pool_blocks_run_total counter");
+        let _ = writeln!(out, "bless_pool_blocks_run_total {}", pool.blocks_run);
+        // training-side counters/histograms land in the global registry
+        crate::obs::metrics::global().render_prometheus("bless_", &mut out);
+        out
+    }
+
+    fn varz(&self) -> Json {
+        let mut models = BTreeMap::new();
+        for e in self.shared.registry.entries() {
+            let s = e.stats.snapshot();
+            let mut o = BTreeMap::new();
+            o.insert("requests".to_string(), Json::Num(s.requests as f64));
+            o.insert("cache_hits".to_string(), Json::Num(s.cache_hits as f64));
+            o.insert("errors".to_string(), Json::Num(s.errors as f64));
+            o.insert("shed".to_string(), Json::Num(s.shed as f64));
+            o.insert("reloads".to_string(), Json::Num(s.reloads as f64));
+            o.insert("latency_us".to_string(), Json::Num(s.latency_us as f64));
+            o.insert("latency_p50_us".to_string(), Json::Num(s.latency_p50_us));
+            o.insert("latency_p95_us".to_string(), Json::Num(s.latency_p95_us));
+            o.insert("latency_p99_us".to_string(), Json::Num(s.latency_p99_us));
+            o.insert("mean_batch".to_string(), Json::Num(s.mean_batch()));
+            o.insert("batch_p95".to_string(), Json::Num(s.batch_p95));
+            o.insert("queue_depth".to_string(), Json::Num(e.queue.len() as f64));
+            o.insert("version".to_string(), Json::Num(e.version() as f64));
+            models.insert(e.name().to_string(), Json::Obj(o));
+        }
+        let mut root = BTreeMap::new();
+        root.insert("models".to_string(), Json::Obj(models));
+        root.insert(
+            "conn_errors".to_string(),
+            Json::Num(self.shared.conn_errors.load(Ordering::Relaxed) as f64),
+        );
+        root.insert("registry".to_string(), crate::obs::metrics::global().varz());
+        Json::Obj(root)
+    }
+
+    fn healthz(&self) -> (bool, Json) {
+        let ready = !self.shared.shutdown.load(Ordering::SeqCst);
+        let mut models = BTreeMap::new();
+        for e in self.shared.registry.entries() {
+            let mut o = BTreeMap::new();
+            o.insert("ready".to_string(), Json::Bool(ready));
+            o.insert("version".to_string(), Json::Num(e.version() as f64));
+            o.insert("m".to_string(), Json::Num(e.m() as f64));
+            o.insert("d".to_string(), Json::Num(e.dim() as f64));
+            models.insert(e.name().to_string(), Json::Obj(o));
+        }
+        let mut root = BTreeMap::new();
+        root.insert("ok".to_string(), Json::Bool(ready));
+        root.insert("models".to_string(), Json::Obj(models));
+        (ready, Json::Obj(root))
+    }
+}
+
 /// A running server; dropping (or calling [`shutdown`](Self::shutdown))
 /// stops it and joins its threads.
 pub struct ServerHandle {
     shared: Arc<Shared>,
     accept: Option<JoinHandle<()>>,
     workers: Vec<JoinHandle<()>>,
+    metrics: Option<HttpHandle>,
 }
 
 impl ServerHandle {
     /// The bound address (resolves port 0 to the actual ephemeral port).
     pub fn addr(&self) -> SocketAddr {
         self.shared.addr
+    }
+
+    /// The `/metrics` listener's address, when one was configured.
+    pub fn metrics_addr(&self) -> Option<SocketAddr> {
+        self.metrics.as_ref().map(|m| m.addr())
     }
 
     /// Aggregate counters across all models.
@@ -169,6 +311,11 @@ impl ServerHandle {
         }
         for w in self.workers.drain(..) {
             let _ = w.join();
+        }
+        // only after the prediction side is down: the foreground `join`
+        // path must keep scrapes answering while the server runs
+        if let Some(mut m) = self.metrics.take() {
+            m.stop();
         }
     }
 }
@@ -212,6 +359,16 @@ pub fn start_registry(
         addr,
     });
 
+    // bind the observability listener before spawning workers so a bad
+    // metrics address fails the whole start cleanly
+    let metrics = match &cfg.metrics_addr {
+        Some(addr) => {
+            let bridge = MetricsBridge { shared: Arc::clone(&shared) };
+            Some(serve_http(addr, Arc::new(bridge))?)
+        }
+        None => None,
+    };
+
     let mut workers = Vec::new();
     for entry in shared.registry.entries() {
         for _ in 0..cfg.workers.max(1) {
@@ -225,7 +382,7 @@ pub fn start_registry(
 
     let accept_shared = Arc::clone(&shared);
     let accept = std::thread::spawn(move || accept_loop(listener, &accept_shared));
-    Ok(ServerHandle { shared, accept: Some(accept), workers })
+    Ok(ServerHandle { shared, accept: Some(accept), workers, metrics })
 }
 
 fn worker_loop(entry: &ModelEntry, max_batch: usize, linger: Duration) {
@@ -251,6 +408,9 @@ fn worker_loop(entry: &ModelEntry, max_batch: usize, linger: Duration) {
         }
         entry.stats.batches.fetch_add(1, Ordering::Relaxed);
         entry.stats.batched.fetch_add(good.len() as u64, Ordering::Relaxed);
+        if crate::obs::metrics::serve_recording() {
+            entry.stats.batch_sizes.record(good.len() as u64);
+        }
         let q = Matrix::from_fn(good.len(), dim, |i, j| good[i].x[j]);
         match predictor.predict_batch(&q) {
             Ok(scores) => {
@@ -461,8 +621,40 @@ fn handle_predict(shared: &Shared, id: u64, model: Option<&str>, x: Vec<f64>) ->
 }
 
 fn bump_latency(entry: &ModelEntry, t0: Instant) {
-    let us = t0.elapsed().as_micros().min(u64::MAX as u128) as u64;
-    entry.stats.latency_us.fetch_add(us, Ordering::Relaxed);
+    // gated so `benches/obs_overhead.rs` can compare recording on/off;
+    // the histogram's exact sum feeds the wire `latency_us` counter
+    if crate::obs::metrics::serve_recording() {
+        let us = t0.elapsed().as_micros().min(u64::MAX as u128) as u64;
+        entry.stats.latency.record(us);
+    }
+}
+
+/// Backoff policy for [`Client::predict_with_retry`]: shed
+/// (`overloaded`) replies are retried after a jittered exponential
+/// delay, so a fleet of clients hitting a saturated queue spreads out
+/// instead of hammering it in lockstep.
+#[derive(Clone, Debug)]
+pub struct RetryPolicy {
+    /// Retries after the first attempt (0 = plain `predict`).
+    pub max_retries: u32,
+    /// Delay before the first retry; doubles every retry.
+    pub base: Duration,
+    /// Cap on any single delay.
+    pub max_delay: Duration,
+    /// Seed for the jitter stream; mixed with the request id so
+    /// concurrent requests de-correlate while staying reproducible.
+    pub seed: u64,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> Self {
+        RetryPolicy {
+            max_retries: 8,
+            base: Duration::from_millis(1),
+            max_delay: Duration::from_millis(200),
+            seed: 0x5eed,
+        }
+    }
 }
 
 /// A minimal blocking client for the line protocol — used by the CLI,
@@ -500,6 +692,32 @@ impl Client {
     /// `(score, served_from_cache)`.
     pub fn predict(&mut self, id: u64, x: &[f64]) -> anyhow::Result<(f64, bool)> {
         self.predict_req(Request::Predict { id, model: None, x: x.to_vec() }, id)
+    }
+
+    /// Like [`predict`](Self::predict) but retries `overloaded` shed
+    /// replies under `policy` (jittered exponential backoff). Any other
+    /// error — and exhaustion of the retry budget — returns as-is.
+    pub fn predict_with_retry(
+        &mut self,
+        id: u64,
+        x: &[f64],
+        policy: &RetryPolicy,
+    ) -> anyhow::Result<(f64, bool)> {
+        let mut rng = crate::rng::Rng::seeded(policy.seed ^ id);
+        let mut delay = policy.base;
+        for _ in 0..policy.max_retries {
+            match self.predict(id, x) {
+                Err(e) if e.to_string().contains("[overloaded]") => {
+                    // "equal jitter": sleep a uniform fraction of
+                    // [delay/2, delay) so retry waves decohere
+                    let frac = 0.5 + 0.5 * (rng.below(1_000) as f64 / 1_000.0);
+                    std::thread::sleep(delay.mul_f64(frac).min(policy.max_delay));
+                    delay = (delay * 2).min(policy.max_delay);
+                }
+                other => return other,
+            }
+        }
+        self.predict(id, x)
     }
 
     /// Score one query point against a named model.
@@ -734,6 +952,7 @@ mod tests {
             cache_quant: 1e-9,
             max_queue: 1,
             threads: 0,
+            metrics_addr: None,
         };
         let handle = start(tiny_artifact(), &cfg).unwrap();
         let addr = handle.addr();
@@ -765,5 +984,81 @@ mod tests {
         assert_eq!(stats.errors, 0, "shed load is not an error");
         assert_eq!(stats.requests, 2);
         handle.shutdown();
+    }
+
+    #[test]
+    fn shed_requests_eventually_succeed_with_retry() {
+        // same saturation setup as queue_cap_sheds…, but the second
+        // client retries with backoff instead of giving up
+        let cfg = ServeConfig {
+            addr: "127.0.0.1:0".to_string(),
+            workers: 1,
+            max_batch: 4,
+            linger: Duration::from_millis(100),
+            cache_capacity: 0,
+            cache_quant: 1e-9,
+            max_queue: 1,
+            threads: 0,
+            metrics_addr: None,
+        };
+        let handle = start(tiny_artifact(), &cfg).unwrap();
+        let addr = handle.addr();
+
+        let blocker = std::thread::spawn(move || {
+            let mut c = Client::connect(addr).unwrap();
+            c.predict(1, &[0.1, 0.2]).unwrap()
+        });
+        let queue_len = || handle.shared.registry.get("default").unwrap().queue.len();
+        let t0 = Instant::now();
+        while queue_len() == 0 {
+            assert!(t0.elapsed() < Duration::from_secs(10), "blocker never enqueued");
+            std::thread::sleep(Duration::from_millis(2));
+        }
+
+        let mut client = Client::connect(addr).unwrap();
+        let policy = RetryPolicy {
+            max_retries: 50,
+            base: Duration::from_millis(5),
+            ..RetryPolicy::default()
+        };
+        let (y, _) = client.predict_with_retry(2, &[0.3, 0.4], &policy).unwrap();
+        assert!(y.is_finite());
+        let (y1, _) = blocker.join().unwrap();
+        assert!(y1.is_finite());
+
+        let stats = handle.stats();
+        assert!(stats.shed >= 1, "the retried request must actually have been shed first");
+        assert_eq!(stats.errors, 0);
+        handle.shutdown();
+    }
+
+    #[test]
+    fn metrics_bridge_renders_per_model_series_and_tracks_health() {
+        let cfg = ServeConfig {
+            metrics_addr: Some("127.0.0.1:0".to_string()),
+            ..test_config()
+        };
+        let handle = start(tiny_artifact(), &cfg).unwrap();
+        assert!(handle.metrics_addr().is_some(), "listener must be up");
+        let mut client = Client::connect(handle.addr()).unwrap();
+        client.predict(1, &[0.2, 0.1]).unwrap();
+
+        let bridge = MetricsBridge { shared: Arc::clone(&handle.shared) };
+        let text = bridge.metrics_text();
+        assert!(text.contains("bless_serve_requests_total{model=\"default\"} 1"), "{text}");
+        assert!(text.contains("# TYPE bless_serve_latency_us histogram"), "{text}");
+        assert!(text.contains("bless_serve_latency_us_count{model=\"default\"} 1"), "{text}");
+        assert!(text.contains("bless_serve_queue_depth{model=\"default\"}"), "{text}");
+
+        let varz = bridge.varz();
+        let default = varz.get("models").and_then(|m| m.get("default")).unwrap();
+        assert_eq!(default.get("requests").and_then(|v| v.as_f64()), Some(1.0));
+
+        let (ready, body) = bridge.healthz();
+        assert!(ready);
+        assert!(body.to_string().contains("\"ok\":true"));
+        handle.shutdown();
+        let (ready, _) = bridge.healthz();
+        assert!(!ready, "healthz must flip after shutdown");
     }
 }

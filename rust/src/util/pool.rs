@@ -41,10 +41,37 @@
 //! by construction).
 
 use std::cell::Cell;
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 
 /// Configured pool width; 0 means "default to available parallelism".
 static CONFIGURED: AtomicUsize = AtomicUsize::new(0);
+
+// Process-lifetime dispatch counters, exported through `/metrics` and
+// `train --trace`. Observability only: nothing in the pool reads them
+// back, so they cannot perturb partitioning or scheduling.
+static DISPATCHES: AtomicU64 = AtomicU64::new(0);
+static INLINE_RUNS: AtomicU64 = AtomicU64::new(0);
+static BLOCKS_RUN: AtomicU64 = AtomicU64::new(0);
+
+/// Cumulative [`par_for`] activity since process start.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct PoolStats {
+    /// `par_for` calls that spawned a crew of scoped threads.
+    pub dispatches: u64,
+    /// `par_for` calls that ran inline (width 1, one block, or nested).
+    pub inline_runs: u64,
+    /// Total blocks executed across all calls.
+    pub blocks_run: u64,
+}
+
+/// Snapshot the cumulative dispatch counters.
+pub fn stats() -> PoolStats {
+    PoolStats {
+        dispatches: DISPATCHES.load(Ordering::Relaxed),
+        inline_runs: INLINE_RUNS.load(Ordering::Relaxed),
+        blocks_run: BLOCKS_RUN.load(Ordering::Relaxed),
+    }
+}
 
 thread_local! {
     /// Set while the current thread is executing blocks for a `par_for`,
@@ -104,13 +131,16 @@ pub fn par_for(blocks: usize, f: impl Fn(usize) + Sync) {
         return;
     }
     let crew = threads().min(blocks);
+    BLOCKS_RUN.fetch_add(blocks as u64, Ordering::Relaxed);
     if crew <= 1 || IN_POOL.with(|c| c.get()) {
+        INLINE_RUNS.fetch_add(1, Ordering::Relaxed);
         let _guard = NestGuard::enter();
         for b in 0..blocks {
             f(b);
         }
         return;
     }
+    DISPATCHES.fetch_add(1, Ordering::Relaxed);
     let next = AtomicUsize::new(0);
     let fref = &f;
     let nref = &next;
@@ -272,6 +302,18 @@ mod tests {
             ran.fetch_add(1, Ordering::SeqCst);
         });
         assert_eq!(ran.load(Ordering::SeqCst), 6);
+    }
+
+    #[test]
+    fn dispatch_counters_are_monotone() {
+        let before = stats();
+        par_for(12, |_| {});
+        let after = stats();
+        assert!(after.blocks_run >= before.blocks_run + 12);
+        assert!(
+            after.dispatches + after.inline_runs > before.dispatches + before.inline_runs,
+            "a par_for call must count as either a dispatch or an inline run"
+        );
     }
 
     #[test]

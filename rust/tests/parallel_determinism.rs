@@ -230,6 +230,41 @@ fn falkon_training_and_predictions_bit_identical() {
     }
 }
 
+/// Span tracing must be observation-only: the full BLESS → FALKON →
+/// predict pipeline produces bit-identical numbers with tracing on and
+/// off, while the traced run still yields a non-trivial profile.
+#[test]
+fn tracing_on_and_off_bit_identical() {
+    let _g = lock();
+    let mut rng = Rng::seeded(55);
+    let ds = susy_like(500, &mut rng);
+    let (train, test) = ds.split(0.25, &mut rng);
+
+    let fit_once = || {
+        let mut rng = Rng::seeded(5);
+        let eng = NativeEngine::new(train.x.clone(), Gaussian::new(3.0));
+        let path = bless::bless::bless(&eng, 1e-3, &bless::bless::BlessConfig::default(), &mut rng);
+        let model =
+            Falkon::new(&eng, path.final_set(), 1e-5).unwrap().fit(&train.y, 6, None).unwrap();
+        let preds = model.predict(&eng, &test.x);
+        (model.alpha, preds)
+    };
+
+    let (alpha_off, preds_off) = at_threads(4, fit_once); // spans disabled (default)
+    bless::obs::span::reset();
+    bless::obs::span::set_enabled(true);
+    let (alpha_on, preds_on) = at_threads(4, fit_once);
+    bless::obs::span::set_enabled(false);
+    let profile = bless::obs::span::profile();
+    bless::obs::span::reset();
+
+    assert_eq!(bits_of(&alpha_off), bits_of(&alpha_on), "tracing changed FALKON α");
+    assert_eq!(bits_of(&preds_off), bits_of(&preds_on), "tracing changed predictions");
+    assert!(!profile.is_empty(), "traced run produced no spans");
+    assert!(profile.get("falkon.fit").is_some(), "missing falkon.fit span");
+    assert!(profile.get("falkon.fit/cg_iter").is_some(), "missing CG iteration span");
+}
+
 #[test]
 fn panel_cache_bit_identical_across_threads_and_budgets() {
     let _g = lock();

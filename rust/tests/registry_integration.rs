@@ -66,6 +66,7 @@ fn two_models_and_hot_reload_under_traffic_with_zero_failures() {
             cache_quant: 1e-9,
             max_queue: 0,
             threads: 0,
+            metrics_addr: None,
         };
         let specs = vec![
             ModelSpec { name: "a".to_string(), artifact: a_v1, source: None },
@@ -164,6 +165,7 @@ fn queue_cap_sheds_one_model_without_touching_the_other() {
             cache_quant: 1e-9,
             max_queue: 1,
             threads: 0,
+            metrics_addr: None,
         };
         let specs = vec![
             ModelSpec { name: "a".to_string(), artifact: artifact(5, 10, D, 1.0), source: None },

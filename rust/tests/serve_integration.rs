@@ -75,6 +75,7 @@ fn concurrent_clients_match_direct_predictions_and_coalesce() {
             cache_quant: 1e-9,
             max_queue: 0, // unbounded: this test is about coalescing, not shedding
             threads: 0,
+            metrics_addr: None,
         };
         let handle = serve::start(loaded, &cfg).unwrap();
         let addr = handle.addr();
@@ -140,6 +141,7 @@ fn repeated_queries_hit_cache_over_the_wire() {
             cache_quant: 1e-9,
             max_queue: 0,
             threads: 0,
+            metrics_addr: None,
         };
         let handle = serve::start(art, &cfg).unwrap();
         let mut client = Client::connect(handle.addr()).unwrap();
@@ -171,6 +173,77 @@ fn dimension_mismatch_is_rejected_per_request() {
         assert!(client.predict(1, &vec![0.0; d + 1]).is_err());
         client.predict(2, queries.row(0)).unwrap(); // connection survives
         assert_eq!(handle.stats().errors, 1);
+        handle.shutdown();
+    });
+}
+
+/// Minimal HTTP GET against the metrics listener → (status line, body).
+fn http_get(addr: std::net::SocketAddr, path: &str) -> (String, String) {
+    use std::io::{Read as _, Write as _};
+    let mut s = std::net::TcpStream::connect(addr).unwrap();
+    write!(s, "GET {path} HTTP/1.1\r\nHost: test\r\nConnection: close\r\n\r\n").unwrap();
+    let mut buf = String::new();
+    s.read_to_string(&mut buf).unwrap();
+    let (head, body) = buf.split_once("\r\n\r\n").expect("malformed HTTP response");
+    (head.lines().next().unwrap_or("").to_string(), body.to_string())
+}
+
+/// `/metrics` speaks well-formed Prometheus text exposition with the
+/// per-model series, `/healthz` and `/varz` parse as JSON, and unknown
+/// paths 404 — all on a listener separate from the prediction socket.
+#[test]
+fn metrics_and_healthz_scrape_well_formed() {
+    with_timeout(120, || {
+        let (art, queries) = trained_artifact();
+        let cfg = ServeConfig {
+            addr: "127.0.0.1:0".to_string(),
+            metrics_addr: Some("127.0.0.1:0".to_string()),
+            ..ServeConfig::default()
+        };
+        let handle = serve::start(art, &cfg).unwrap();
+        let maddr = handle.metrics_addr().expect("metrics listener is up");
+
+        let mut client = Client::connect(handle.addr()).unwrap();
+        for k in 0..5 {
+            client.predict(k as u64, queries.row(k)).unwrap();
+        }
+
+        let (status, body) = http_get(maddr, "/metrics");
+        assert!(status.contains("200"), "scrape failed: {status}");
+        // exposition-format grammar: every non-comment line is
+        // `name{labels} value` with a parseable numeric value
+        for line in body.lines().filter(|l| !l.is_empty() && !l.starts_with('#')) {
+            let (series, value) = line.rsplit_once(' ').expect("sample line has a value");
+            assert!(value.parse::<f64>().is_ok(), "non-numeric sample value in {line:?}");
+            assert!(
+                series.chars().all(|c| c.is_ascii_alphanumeric() || "_{}=\",.+:-".contains(c)),
+                "unexpected character in series {series:?}"
+            );
+        }
+        assert!(body.contains("bless_serve_requests_total{model=\"default\"} 5"), "{body}");
+        assert!(body.contains("# TYPE bless_serve_latency_us histogram"));
+        assert!(body.contains("bless_serve_latency_us_count{model=\"default\"} 5"));
+        assert!(body.contains("bless_serve_batch_size_bucket{model=\"default\""));
+        assert!(body.contains("bless_serve_queue_depth{model=\"default\"}"));
+
+        let (status, body) = http_get(maddr, "/healthz");
+        assert!(status.contains("200"), "healthz failed: {status}");
+        let health = bless::util::json::Json::parse(&body).expect("healthz is JSON");
+        assert_eq!(health.get("ok"), Some(&bless::util::json::Json::Bool(true)));
+
+        let (status, body) = http_get(maddr, "/varz");
+        assert!(status.contains("200"), "varz failed: {status}");
+        let varz = bless::util::json::Json::parse(&body).expect("varz is JSON");
+        let requests = varz
+            .get("models")
+            .and_then(|m| m.get("default"))
+            .and_then(|m| m.get("requests"))
+            .and_then(|v| v.as_f64());
+        assert_eq!(requests, Some(5.0));
+
+        let (status, _) = http_get(maddr, "/nope");
+        assert!(status.contains("404"), "unknown path must 404: {status}");
+
         handle.shutdown();
     });
 }
