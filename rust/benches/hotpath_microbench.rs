@@ -1,10 +1,11 @@
 //! Hot-path microbenchmarks for the perf pass (EXPERIMENTS.md §Perf):
-//! GEMM (including the transpose-free `gemm_nt` kernel cross-term),
+//! GEMM (including the transpose-free `MatMul::nt` kernel cross-term),
 //! Cholesky, kernel-block evaluation (native + XLA tile), the
 //! LsGenerator batch scoring, and the FALKON fused CG matvec — plus a
-//! serial-vs-parallel scaling section for the shared threadpool and a
+//! serial-vs-parallel scaling section for the shared threadpool, a
 //! CG-iteration-throughput section comparing streamed vs panel-cached
-//! FALKON training.
+//! FALKON training, and a scalar-vs-AVX2 section for the runtime-
+//! dispatched SIMD micro-kernel tier.
 //!
 //! ```bash
 //! cargo bench --bench hotpath_microbench                   # all cores
@@ -12,27 +13,31 @@
 //! cargo bench --bench hotpath_microbench -- \
 //!     --out ../BENCH_parallel.json \
 //!     --falkon-out ../BENCH_falkon.json \
-//!     --chol-out ../BENCH_chol.json  # emit the repo-root schemas
+//!     --chol-out ../BENCH_chol.json \
+//!     --simd-out ../BENCH_simd.json  # emit the repo-root schemas
 //! ```
 //!
 //! With `--out`, writes `BENCH_parallel.json` (flat object of named
 //! metrics: 1-thread vs N-thread GEMM and kernel-block GFLOP/s and the
 //! speedups). With `--falkon-out`, writes `BENCH_falkon.json` (FALKON
 //! train wall-clock + kernel-eval counts streamed vs cached, and
-//! `gemm_nt` vs gemm-plus-transpose GFLOP/s) so CI can track the panel
-//! cache's trajectory. `--falkon-n/--falkon-m/--falkon-iters` resize the
-//! training shape (default n=8000, M=800, t=10 — the SUSY-like shape of
-//! the ISSUE acceptance bar). With `--chol-out`, writes `BENCH_chol.json`
-//! (serial-vs-N-thread Cholesky GF/s at M=512/1024/2048, the
-//! `syrk_tn_of_lower` vs `gemm_tn` G-build, preconditioner build
-//! wall-clock, and the multi-RHS `LᵀX=B` TRSM).
+//! `MatMul::nt` vs gemm-plus-transpose GFLOP/s) so CI can track the
+//! panel cache's trajectory. `--falkon-n/--falkon-m/--falkon-iters`
+//! resize the training shape (default n=8000, M=800, t=10 — the
+//! SUSY-like shape of the ISSUE acceptance bar). With `--chol-out`,
+//! writes `BENCH_chol.json` (serial-vs-N-thread Cholesky GF/s at
+//! M=512/1024/2048, the `syrk_tn_of_lower` vs `MatMul::tn` G-build,
+//! preconditioner build wall-clock, and the multi-RHS `LᵀX=B` TRSM).
+//! With `--simd-out`, writes `BENCH_simd.json` (GEMM / SYRK / Cholesky /
+//! kernel-block GF/s under `linalg::set_isa(Scalar)` vs `Avx2` and the
+//! per-shape speedups; AVX2 rows are omitted on hosts without AVX2+FMA).
 
 use bless::data::susy_like;
 use bless::falkon::{Falkon, Preconditioner};
 use bless::kernels::{Gaussian, KernelEngine, NativeEngine};
 use bless::leverage::{LsGenerator, WeightedSet};
 use bless::linalg::{
-    cholesky, gemm, gemm_nt, gemm_tn, solve_upper_from_lower_matrix, syrk_tn_of_lower, Matrix,
+    self, cholesky, gemm, solve_upper_from_lower_matrix, syrk, syrk_tn_of_lower, MatMul, Matrix,
 };
 use bless::rng::Rng;
 use bless::util::bench::{black_box, Bencher};
@@ -55,18 +60,19 @@ fn main() {
     let wide = tall.transpose();
     b.bench("gemm 4096x18 · 18x4096 (kernel cross-term)", || gemm(&tall, &wide));
 
-    // --- transpose-free kernel cross-term: gemm_nt vs gemm + transpose
+    // --- transpose-free kernel cross-term: MatMul::nt vs gemm + transpose
     let cmat = Matrix::from_fn(512, 18, |i, j| ((i * 5 + j * 3) % 13) as f64 * 0.07);
     let nt_t = b
         .bench("gemm 4096x18 · (512x18)ᵀ (explicit transpose)", || {
             gemm(&tall, &cmat.transpose())
         })
         .clone();
-    let nt_d =
-        b.bench("gemm_nt 4096x18 · 512x18 (transpose-free)", || gemm_nt(&tall, &cmat)).clone();
+    let nt_d = b
+        .bench("MatMul::nt 4096x18 · 512x18 (transpose-free)", || MatMul::nt().run(&tall, &cmat))
+        .clone();
     assert!(
-        gemm(&tall, &cmat.transpose()).max_abs_diff(&gemm_nt(&tall, &cmat)) < 1e-9,
-        "gemm_nt disagrees with gemm + transpose"
+        gemm(&tall, &cmat.transpose()).max_abs_diff(&MatMul::nt().run(&tall, &cmat)) < 1e-9,
+        "MatMul::nt disagrees with gemm + transpose"
     );
 
     // (Cholesky moved to the factorization-tier section below: serial
@@ -181,18 +187,21 @@ fn main() {
     }
 
     // G-build for the FALKON preconditioner: triangular rank-k update vs
-    // the dense gemm_tn(L, L) it replaced, plus whole-precond wall-clock.
+    // the dense MatMul::tn(L, L) it replaced, plus whole-precond
+    // wall-clock.
     let gm = 1024usize;
     let spd_g = spd_of(gm);
     let lfac = cholesky(&spd_g).unwrap();
-    let g_gemm = b.bench("G build: gemm_tn(L, L) 1024 (dense)", || gemm_tn(lfac.l(), lfac.l()));
+    let g_gemm = b.bench("G build: MatMul::tn(L, L) 1024 (dense)", || {
+        MatMul::tn().run(lfac.l(), lfac.l())
+    });
     let g_gemm_ms = g_gemm.median_s * 1e3;
     let g_syrk =
         b.bench("G build: syrk_tn_of_lower(L) 1024", || syrk_tn_of_lower(lfac.l())).clone();
     let g_syrk_ms = g_syrk.median_s * 1e3;
     assert!(
-        syrk_tn_of_lower(lfac.l()).max_abs_diff(&gemm_tn(lfac.l(), lfac.l())) < 1e-8,
-        "syrk_tn_of_lower disagrees with gemm_tn"
+        syrk_tn_of_lower(lfac.l()).max_abs_diff(&MatMul::tn().run(lfac.l(), lfac.l())) < 1e-8,
+        "syrk_tn_of_lower disagrees with MatMul::tn"
     );
     let weights = vec![1.0; gm];
     pool::set_threads(1);
@@ -270,6 +279,75 @@ fn main() {
          {fk_speedup:.2}× faster"
     );
 
+    // --- SIMD micro-kernel tier: scalar vs AVX2 backend at a fixed
+    //     thread count. Thread-count determinism is asserted above;
+    //     cross-ISA accuracy is gated in tests/isa_dispatch.rs — here we
+    //     only measure what the explicit AVX2+FMA tiles buy per shape.
+    println!("\n-- SIMD dispatch: scalar vs avx2 micro-kernels ({nthreads} threads) --");
+    let have_avx2 = linalg::set_isa(linalg::Isa::Avx2).is_ok();
+    if !have_avx2 {
+        println!("(no AVX2+FMA on this host; scalar rows only)");
+    }
+    let syrk_a = Matrix::from_fn(1024, 256, |i, j| ((i * 7 + j * 3) % 17) as f64 * 0.06);
+    type Shape<'a> = (&'a str, f64, Box<dyn Fn() + 'a>);
+    let shapes: Vec<Shape<'_>> = vec![
+        (
+            "gemm_nn_512",
+            2.0 * 512.0f64.powi(3),
+            Box::new(|| {
+                black_box(gemm(&a512, &b512));
+            }),
+        ),
+        (
+            "gemm_nt_4096x512x18",
+            2.0 * 4_096.0 * 512.0 * 18.0,
+            Box::new(|| {
+                black_box(MatMul::nt().run(&tall, &cmat));
+            }),
+        ),
+        (
+            "syrk_1024x256",
+            (1024 * 1024) as f64 * 256.0,
+            Box::new(|| {
+                black_box(syrk(&syrk_a));
+            }),
+        ),
+        (
+            "chol_1024",
+            1024.0f64.powi(3) / 3.0,
+            Box::new(|| {
+                black_box(cholesky(&spd_g).unwrap());
+            }),
+        ),
+        (
+            "kernel_block_1024x512",
+            kblk_flops,
+            Box::new(|| {
+                black_box(eng.block(&rows, &cols));
+            }),
+        ),
+    ];
+    // (name, scalar GF/s, avx2 GF/s, speedup) — avx2 fields 0 when absent
+    let mut simd_rows: Vec<(&str, f64, f64, f64)> = Vec::new();
+    for (name, flops, f) in &shapes {
+        let (name, flops) = (*name, *flops);
+        linalg::set_isa(linalg::Isa::Scalar).unwrap();
+        let s = b.bench(&format!("{name} (scalar)"), f).clone();
+        let gf_s = flops / s.median_s / 1e9;
+        if have_avx2 {
+            linalg::set_isa(linalg::Isa::Avx2).unwrap();
+            let v = b.bench(&format!("{name} (avx2)"), f).clone();
+            let gf_v = flops / v.median_s / 1e9;
+            let speedup = s.median_s / v.median_s;
+            println!("{name:<22}: {gf_s:.2} → {gf_v:.2} GF/s  ({speedup:.2}× with avx2)");
+            simd_rows.push((name, gf_s, gf_v, speedup));
+        } else {
+            println!("{name:<22}: {gf_s:.2} GF/s (scalar only)");
+            simd_rows.push((name, gf_s, 0.0, 0.0));
+        }
+    }
+    linalg::set_isa_from_str("auto").expect("auto re-detect");
+
     b.summary("hot-path microbenchmarks");
 
     // GFLOP/s of the transpose-free cross-term vs gemm + transpose
@@ -345,6 +423,26 @@ fn main() {
         put("kblock_gflops_parallel", kblk_gfs_par);
         put("kblock_speedup", kblk_s.median_s / kblk_p.median_s);
         obj.insert("bench".to_string(), Json::Str("parallel".to_string()));
+        std::fs::write(out, Json::Obj(obj).to_string()).expect("writing BENCH json");
+        println!("wrote {out}");
+    }
+
+    // --- BENCH_simd.json (repo-root schema: flat object of metrics)
+    if let Some(out) = args.get("simd-out") {
+        let mut obj = BTreeMap::new();
+        let mut put = |k: &str, v: f64| {
+            obj.insert(k.to_string(), Json::Num(v));
+        };
+        put("threads", nthreads as f64);
+        put("avx2_available", if have_avx2 { 1.0 } else { 0.0 });
+        for &(name, gf_s, gf_v, speedup) in &simd_rows {
+            put(&format!("{name}_gflops_scalar"), gf_s);
+            if have_avx2 {
+                put(&format!("{name}_gflops_avx2"), gf_v);
+                put(&format!("{name}_simd_speedup"), speedup);
+            }
+        }
+        obj.insert("bench".to_string(), Json::Str("simd".to_string()));
         std::fs::write(out, Json::Obj(obj).to_string()).expect("writing BENCH json");
         println!("wrote {out}");
     }

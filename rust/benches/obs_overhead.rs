@@ -98,12 +98,11 @@ fn main() -> anyhow::Result<()> {
     );
 
     // --- serve-path overhead: alternating recording-on/off phases
-    let cfg = ServeConfig {
-        addr: "127.0.0.1:0".to_string(),
-        cache_capacity: 0, // every request exercises the full path
-        metrics_addr: Some("127.0.0.1:0".to_string()),
-        ..ServeConfig::default()
-    };
+    let cfg = ServeConfig::builder()
+        .addr("127.0.0.1:0")
+        .cache_capacity(0) // every request exercises the full path
+        .metrics_addr("127.0.0.1:0")
+        .build()?;
     let handle = serve::start(synthetic_artifact(m, d), &cfg)?;
     let mut client = Client::connect(handle.addr())?;
     let mut rng = Rng::seeded(4242);

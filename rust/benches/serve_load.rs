@@ -88,14 +88,13 @@ fn main() -> anyhow::Result<()> {
 
     // --- end-to-end predict latency under concurrent traffic
     let loaded = ModelArtifact::load(&bin_path)?;
-    let cfg = ServeConfig {
-        addr: "127.0.0.1:0".to_string(),
-        workers: 2,
-        max_batch: 64,
-        linger: Duration::from_millis(2),
-        cache_capacity: 0, // every request exercises the GEMM path
-        ..ServeConfig::default()
-    };
+    let cfg = ServeConfig::builder()
+        .addr("127.0.0.1:0")
+        .workers(2)
+        .max_batch(64)
+        .linger(Duration::from_millis(2))
+        .cache_capacity(0) // every request exercises the GEMM path
+        .build()?;
     let handle = serve::start(loaded, &cfg)?;
     let addr = handle.addr();
 

@@ -39,13 +39,12 @@ fn main() -> anyhow::Result<()> {
     let reference = Predictor::new(&artifact);
 
     // 4. serve it and score held-out points over TCP
-    let cfg = ServeConfig {
-        addr: "127.0.0.1:0".to_string(), // ephemeral port
-        workers: 2,
-        max_batch: 32,
-        linger: Duration::from_millis(2),
-        ..ServeConfig::default()
-    };
+    let cfg = ServeConfig::builder()
+        .addr("127.0.0.1:0") // ephemeral port
+        .workers(2)
+        .max_batch(32)
+        .linger(Duration::from_millis(2))
+        .build()?;
     let handle = serve::start(artifact, &cfg)?;
     println!("serving on {}", handle.addr());
 

@@ -271,7 +271,7 @@ pub fn nystrom_krr(
     let mut rhs = vec![0.0; m];
     for (s, e) in tile_indices(n, crate::kernels::DEFAULT_ROW_TILE) {
         let blk = engine.block_range(s, e, &center_set);
-        linalg::syrk_tn_into(&blk, &mut h);
+        linalg::MatMul::tn().accumulate().lower().run_into(&blk, &blk, &mut h);
         linalg::matvec_t_acc(&blk, &y[s..e], &mut rhs);
     }
     h.mirror_lower_to_upper();

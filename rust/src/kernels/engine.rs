@@ -219,9 +219,9 @@ impl NativeEngine {
     /// [`Centers`] work equally, so no side is ever copied just to feed
     /// the product.
     ///
-    /// The cross term runs through the transpose-free
-    /// [`linalg::gemm_nt_acc`] (`A·Bᵀ` over dot-product panels — no
-    /// `d × M` transpose is materialized); the exp pass below is
+    /// The cross term runs through the transpose-free NT product
+    /// ([`linalg::MatMul`] slice form, `A·Bᵀ` over dot-product panels —
+    /// no `d × M` transpose is materialized); the exp pass below is
     /// parallelized over fixed-size row blocks. Both partitions depend
     /// only on the shape, so the result is bit-identical at any thread
     /// count.
@@ -239,11 +239,19 @@ impl NativeEngine {
         if rows == 0 || cols == 0 {
             return;
         }
-        linalg::gemm_nt_acc(a, b, self.x.cols(), out.as_mut_slice(), cols);
+        linalg::MatMul::nt().accumulate().run_rows_into(
+            a,
+            b,
+            self.x.cols(),
+            out.as_mut_slice(),
+            cols,
+        );
         let kd = out.as_mut_slice();
+        let kern = linalg::kernels();
+        let gamma = self.kernel.gamma();
         let parallel = rows * cols >= PAR_MIN_EXP;
         pool::par_chunks_mut_gated(kd, EXP_RB * cols, parallel, |blk, chunk| {
-            exp_pass(&self.kernel, a_sq, b_sq, blk * EXP_RB, chunk);
+            exp_pass(kern, gamma, a_sq, b_sq, blk * EXP_RB, chunk);
         });
     }
 
@@ -256,16 +264,22 @@ impl NativeEngine {
 }
 
 /// Turn a chunk of cross-term rows (starting at global row `r0`) into
-/// kernel values in place: `v ← k(‖a_i‖² + ‖b_j‖² − 2·v)`. Elementwise,
+/// kernel values in place: `v ← exp(−γ(‖a_i‖² + ‖b_j‖² − 2·v))`, one row
+/// at a time through the dispatched [`linalg::MicroKernels::exp_row`]
+/// (scalar `f64::exp`, or the ≤4-ULP AVX2 polynomial path). Elementwise,
 /// so any row partition yields bit-identical results.
-fn exp_pass(kernel: &Gaussian, a_sq: &[f64], b_sq: &[f64], r0: usize, chunk: &mut [f64]) {
+fn exp_pass(
+    kern: &linalg::MicroKernels,
+    gamma: f64,
+    a_sq: &[f64],
+    b_sq: &[f64],
+    r0: usize,
+    chunk: &mut [f64],
+) {
     let cols = b_sq.len();
     for (local, row) in chunk.chunks_mut(cols).enumerate() {
         let ai = a_sq[r0 + local];
-        for (v, &bj) in row.iter_mut().zip(b_sq.iter()) {
-            let d2 = ai + bj - 2.0 * *v;
-            *v = kernel.from_sq_dist(d2);
-        }
+        (kern.exp_row)(gamma, ai, b_sq, row);
     }
 }
 

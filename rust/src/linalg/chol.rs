@@ -190,6 +190,7 @@ pub fn cholesky_jittered(mut a: Matrix, base: f64, limit: f64) -> Option<(Choles
 pub fn cholesky_in_place(a: &mut Matrix) -> Option<()> {
     let n = a.rows();
     assert_eq!(n, a.cols(), "cholesky requires a square matrix");
+    let kern = super::dispatch::kernels();
     let ad = a.as_mut_slice();
     // contiguous staging for the current L₂₁ panel, reused across sweeps
     let mut panel: Vec<f64> = Vec::new();
@@ -200,7 +201,7 @@ pub fn cholesky_in_place(a: &mut Matrix) -> Option<()> {
         // 1. unblocked factor of the diagonal block A[kb..ke, kb..ke]
         for j in kb..ke {
             let rj = j * n;
-            let d = ad[rj + j] - super::dot(&ad[rj + kb..rj + j], &ad[rj + kb..rj + j]);
+            let d = ad[rj + j] - (kern.dot)(&ad[rj + kb..rj + j], &ad[rj + kb..rj + j]);
             if d <= 0.0 || !d.is_finite() {
                 return None;
             }
@@ -208,7 +209,7 @@ pub fn cholesky_in_place(a: &mut Matrix) -> Option<()> {
             ad[rj + j] = djj;
             for i in (j + 1)..ke {
                 let ri = i * n;
-                let s = super::dot(&ad[ri + kb..ri + j], &ad[rj + kb..rj + j]);
+                let s = (kern.dot)(&ad[ri + kb..ri + j], &ad[rj + kb..rj + j]);
                 ad[ri + j] = (ad[ri + j] - s) / djj;
             }
         }
@@ -226,7 +227,7 @@ pub fn cholesky_in_place(a: &mut Matrix) -> Option<()> {
                 for row in chunk.chunks_mut(n) {
                     for j in kb..ke {
                         let rj = j * n;
-                        let s = super::dot(&row[kb..j], &head[rj + kb..rj + j]);
+                        let s = (kern.dot)(&row[kb..j], &head[rj + kb..rj + j]);
                         row[j] = (row[j] - s) / head[rj + j];
                     }
                 }
@@ -245,7 +246,7 @@ pub fn cholesky_in_place(a: &mut Matrix) -> Option<()> {
         let tail = &mut ad[ke * n..];
         let schur_work = trailing * trailing * w / 2;
         pool::par_chunks_mut_gated(tail, MC * n, schur_work >= PAR_MIN_STAGE, |blk, chunk| {
-            super::gemm::syrk_ln_panel(&panel, chunk, blk * MC, w, n, ke, -1.0);
+            super::gemm::syrk_ln_panel(kern, &panel, chunk, blk * MC, w, n, ke, -1.0);
         });
         kb = ke;
     }

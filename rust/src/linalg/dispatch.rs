@@ -1,0 +1,661 @@
+//! Runtime ISA dispatch for the dense micro-kernels.
+//!
+//! Every hot inner loop of the linalg tier — the 4×8 GEMM register
+//! tiles, the dot-product (NT) tiles shared by `gemm_nt`/`syrk`/the
+//! Cholesky Schur update, the axpy-shaped TRSM and rank-1 updates, and
+//! the Gaussian-kernel exp pass — funnels through one [`MicroKernels`]
+//! fn-pointer vtable. Two implementations exist:
+//!
+//! * **scalar** — portable Rust, byte-for-byte the loops the crate
+//!   shipped before this tier. Always available; the reference for the
+//!   accuracy gates in `tests/isa_dispatch.rs`.
+//! * **avx2** — explicit `std::arch` AVX2+FMA intrinsics
+//!   (`x86_64` only), selected at first use when
+//!   `is_x86_feature_detected!("avx2")` and `("fma")` both hold.
+//!
+//! Selection happens once, lazily, and can be forced with the
+//! `BLESS_ISA` environment variable (`scalar`, `avx2`, or `auto`) or the
+//! `repro --isa` CLI flag ([`set_isa`]). Tests flip backends in-process
+//! through [`set_isa`] as well.
+//!
+//! ## Determinism contract
+//!
+//! Output may vary **by ISA** (the AVX2 kernels use FMA and different
+//! reduction orders; they are accuracy-gated against scalar), but never
+//! **by thread count**: each vtable function is a pure function of its
+//! inputs, and the callers partition work into fixed-size blocks whose
+//! boundaries depend only on the problem shape. `tests/
+//! parallel_determinism.rs` asserts bit-identical results at 1/2/4/8
+//! threads under both backends.
+//!
+//! The vectorized exp ([`MicroKernels::exp_row`] on the AVX2 path)
+//! carries a documented **≤ 4 ULP** bound against `f64::exp` over the
+//! kernel-relevant range `[-708, 0]` (see the `avx2` module source for
+//! the error budget); inputs below −708 flush to `0.0` where `f64::exp`
+//! would return a subnormal.
+
+use std::sync::atomic::{AtomicU8, Ordering};
+
+/// Instruction-set backend of the active [`MicroKernels`] vtable.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum Isa {
+    /// Portable Rust loops (always available).
+    Scalar,
+    /// AVX2 + FMA `std::arch` intrinsics (`x86_64` with runtime support).
+    Avx2,
+}
+
+impl Isa {
+    /// Lower-case name as used by `BLESS_ISA` / `--isa`.
+    pub fn name(self) -> &'static str {
+        match self {
+            Isa::Scalar => "scalar",
+            Isa::Avx2 => "avx2",
+        }
+    }
+}
+
+/// The micro-kernel vtable: one fn pointer per hot inner-loop shape.
+///
+/// All functions are **safe** trampolines — the AVX2 entries are only
+/// ever installed after runtime feature detection, so the `unsafe`
+/// `target_feature` internals are sound to call.
+#[derive(Clone, Copy)]
+pub struct MicroKernels {
+    /// Which backend this table is.
+    pub isa: Isa,
+    /// 4×8 NN register tile: `acc[r][c] += Σ_p a[r][p] · bd[p·bstride + j + c]`
+    /// for `p ∈ [0, a[0].len())`, `c ∈ [0, 8)`. `bd` must hold at least
+    /// `a[0].len()` rows of stride `bstride` with `j + 8 ≤ bstride`.
+    /// `acc` is the caller's register tile (accumulated across `KC`
+    /// panels by the caller).
+    pub nn_4x8: fn(a: [&[f64]; 4], bd: &[f64], bstride: usize, j: usize, acc: &mut [[f64; 8]; 4]),
+    /// 4×8 NT (dot-product) register tile:
+    /// `acc[r][c] += Σ_p a[r][p] · b[c][p]` — the shared engine of
+    /// `gemm_nt`, `syrk` and the Cholesky Schur update (the caller
+    /// applies the `±` sign when folding `acc` into `C`).
+    pub nt_4x8: fn(a: [&[f64]; 4], b: [&[f64]; 8], acc: &mut [[f64; 8]; 4]),
+    /// Dot product of two equal-length slices (ragged tile edges,
+    /// remainder rows, matvecs, the triangular vector solves and the
+    /// unblocked Cholesky diagonal).
+    pub dot: fn(a: &[f64], b: &[f64]) -> f64,
+    /// `y += alpha · x` (rank-1 GEMM-TN updates, TRSM row updates,
+    /// streaming `Kᵀu` accumulation).
+    pub axpy: fn(alpha: f64, x: &[f64], y: &mut [f64]),
+    /// Gaussian-kernel exp pass over one row of a cross-term block:
+    /// `row[j] ← exp(−gamma · max(ai + b_sq[j] − 2·row[j], 0))`.
+    pub exp_row: fn(gamma: f64, ai: f64, b_sq: &[f64], row: &mut [f64]),
+}
+
+/// Portable scalar implementations — bitwise the pre-dispatch loops.
+mod scalar {
+    /// NN tile: identical loop order to the original `gemm_row_block`.
+    pub fn nn_4x8(a: [&[f64]; 4], bd: &[f64], bstride: usize, j: usize, acc: &mut [[f64; 8]; 4]) {
+        let pl = a[0].len();
+        for p in 0..pl {
+            let b8 = &bd[p * bstride + j..p * bstride + j + 8];
+            let w = [a[0][p], a[1][p], a[2][p], a[3][p]];
+            for (rr, acc_r) in acc.iter_mut().enumerate() {
+                let wr = w[rr];
+                for (c, bv) in acc_r.iter_mut().zip(b8.iter()) {
+                    *c += wr * bv;
+                }
+            }
+        }
+    }
+
+    /// NT tile: identical loop order to the original `gemm_nt_row_block`
+    /// / `syrk_ln_panel` full tile.
+    pub fn nt_4x8(a: [&[f64]; 4], b: [&[f64]; 8], acc: &mut [[f64; 8]; 4]) {
+        let pl = a[0].len();
+        for p in 0..pl {
+            for (acc_r, ar) in acc.iter_mut().zip(a.iter()) {
+                let av = ar[p];
+                for (cv, br) in acc_r.iter_mut().zip(b.iter()) {
+                    *cv += av * br[p];
+                }
+            }
+        }
+    }
+
+    /// 4-way-unrolled dot (the crate-wide [`crate::linalg::dot`]).
+    pub fn dot(a: &[f64], b: &[f64]) -> f64 {
+        crate::linalg::dot(a, b)
+    }
+
+    /// Plain fused loop (the crate-wide [`crate::linalg::axpy`]).
+    pub fn axpy(alpha: f64, x: &[f64], y: &mut [f64]) {
+        crate::linalg::axpy(alpha, x, y);
+    }
+
+    /// Reference exp pass through `f64::exp` (glibc, ~0.5 ULP).
+    pub fn exp_row(gamma: f64, ai: f64, b_sq: &[f64], row: &mut [f64]) {
+        for (v, &bj) in row.iter_mut().zip(b_sq.iter()) {
+            let d2 = (ai + bj - 2.0 * *v).max(0.0);
+            *v = (-gamma * d2).exp();
+        }
+    }
+}
+
+/// AVX2 + FMA implementations (`x86_64` only).
+///
+/// Safety pattern: each public entry is a safe `fn` that immediately
+/// calls an `#[target_feature(enable = "avx2", enable = "fma")]` inner
+/// function. The entries are only installed into the active vtable
+/// after `is_x86_feature_detected!` confirms both features, so the
+/// `unsafe` calls are sound.
+///
+/// ## `vexp` error budget (≤ 4 ULP over `[-708, 0]`)
+///
+/// `exp(x) = 2^k · e^z` with `k = ⌊x·log₂e + ½⌋` and
+/// `z = (x − k·LN2_HI) − k·LN2_LO`, `|z| ≤ 0.3466`:
+///
+/// * `k·LN2_HI` is exact (`|k| ≤ 1022` is 11 bits, `LN2_HI` carries a
+///   32-bit mantissa; the product fits in 53 bits), so the reduced
+///   argument carries only the one rounding of the `LN2_LO` term plus
+///   the `~1e-24` tail of the two-term constant: `< 0.1 ULP` on `e^z`.
+/// * degree-13 Taylor for `e^z`: truncation `z¹⁴/14! ≤ 4.2e-18`
+///   (`< 0.03` ULP of `e^z ≥ 0.707`); the FMA Horner chain accumulates
+///   `< 1.5` ULP.
+/// * the `2^k` scale is a power of two (exact); the final product
+///   rounds once (`≤ 0.5` ULP).
+///
+/// Total `< 2.5` ULP worst case; the property test in
+/// `tests/isa_dispatch.rs` gates a dense sweep at 4 ULP. Inputs below
+/// `−708` return `0.0` (the scalar path's subnormal tail is below every
+/// kernel tolerance in the crate).
+#[cfg(target_arch = "x86_64")]
+mod avx2 {
+    #[cfg(target_arch = "x86_64")]
+    use std::arch::x86_64::*;
+
+    pub fn nn_4x8(a: [&[f64]; 4], bd: &[f64], bstride: usize, j: usize, acc: &mut [[f64; 8]; 4]) {
+        // SAFETY: installed only after AVX2+FMA runtime detection.
+        unsafe { nn_4x8_inner(a, bd, bstride, j, acc) }
+    }
+
+    #[target_feature(enable = "avx2", enable = "fma")]
+    unsafe fn nn_4x8_inner(
+        a: [&[f64]; 4],
+        bd: &[f64],
+        bstride: usize,
+        j: usize,
+        acc: &mut [[f64; 8]; 4],
+    ) {
+        let pl = a[0].len();
+        debug_assert!(pl == 0 || (pl - 1) * bstride + j + 8 <= bd.len());
+        let mut c00 = _mm256_loadu_pd(acc[0].as_ptr());
+        let mut c01 = _mm256_loadu_pd(acc[0].as_ptr().add(4));
+        let mut c10 = _mm256_loadu_pd(acc[1].as_ptr());
+        let mut c11 = _mm256_loadu_pd(acc[1].as_ptr().add(4));
+        let mut c20 = _mm256_loadu_pd(acc[2].as_ptr());
+        let mut c21 = _mm256_loadu_pd(acc[2].as_ptr().add(4));
+        let mut c30 = _mm256_loadu_pd(acc[3].as_ptr());
+        let mut c31 = _mm256_loadu_pd(acc[3].as_ptr().add(4));
+        let bp = bd.as_ptr();
+        for p in 0..pl {
+            let brow = bp.add(p * bstride + j);
+            let b0 = _mm256_loadu_pd(brow);
+            let b1 = _mm256_loadu_pd(brow.add(4));
+            let a0 = _mm256_set1_pd(*a[0].get_unchecked(p));
+            c00 = _mm256_fmadd_pd(a0, b0, c00);
+            c01 = _mm256_fmadd_pd(a0, b1, c01);
+            let a1 = _mm256_set1_pd(*a[1].get_unchecked(p));
+            c10 = _mm256_fmadd_pd(a1, b0, c10);
+            c11 = _mm256_fmadd_pd(a1, b1, c11);
+            let a2 = _mm256_set1_pd(*a[2].get_unchecked(p));
+            c20 = _mm256_fmadd_pd(a2, b0, c20);
+            c21 = _mm256_fmadd_pd(a2, b1, c21);
+            let a3 = _mm256_set1_pd(*a[3].get_unchecked(p));
+            c30 = _mm256_fmadd_pd(a3, b0, c30);
+            c31 = _mm256_fmadd_pd(a3, b1, c31);
+        }
+        _mm256_storeu_pd(acc[0].as_mut_ptr(), c00);
+        _mm256_storeu_pd(acc[0].as_mut_ptr().add(4), c01);
+        _mm256_storeu_pd(acc[1].as_mut_ptr(), c10);
+        _mm256_storeu_pd(acc[1].as_mut_ptr().add(4), c11);
+        _mm256_storeu_pd(acc[2].as_mut_ptr(), c20);
+        _mm256_storeu_pd(acc[2].as_mut_ptr().add(4), c21);
+        _mm256_storeu_pd(acc[3].as_mut_ptr(), c30);
+        _mm256_storeu_pd(acc[3].as_mut_ptr().add(4), c31);
+    }
+
+    pub fn nt_4x8(a: [&[f64]; 4], b: [&[f64]; 8], acc: &mut [[f64; 8]; 4]) {
+        // SAFETY: installed only after AVX2+FMA runtime detection.
+        unsafe { nt_4x8_inner(a, b, acc) }
+    }
+
+    /// Dot-product tile, two B columns at a time: 8 vector accumulators
+    /// (4 A rows × 2 B rows), 6 loads per 8 FMAs, lanes reduced with a
+    /// deterministic `(l0+l2)+(l1+l3)` tree plus an ordered scalar tail.
+    #[target_feature(enable = "avx2", enable = "fma")]
+    unsafe fn nt_4x8_inner(a: [&[f64]; 4], b: [&[f64]; 8], acc: &mut [[f64; 8]; 4]) {
+        let pl = a[0].len();
+        let chunks = pl / 4;
+        let mut c = 0;
+        while c < 8 {
+            let b0 = b[c].as_ptr();
+            let b1 = b[c + 1].as_ptr();
+            let mut acc00 = _mm256_setzero_pd();
+            let mut acc01 = _mm256_setzero_pd();
+            let mut acc10 = _mm256_setzero_pd();
+            let mut acc11 = _mm256_setzero_pd();
+            let mut acc20 = _mm256_setzero_pd();
+            let mut acc21 = _mm256_setzero_pd();
+            let mut acc30 = _mm256_setzero_pd();
+            let mut acc31 = _mm256_setzero_pd();
+            for i in 0..chunks {
+                let p = i * 4;
+                let vb0 = _mm256_loadu_pd(b0.add(p));
+                let vb1 = _mm256_loadu_pd(b1.add(p));
+                let va0 = _mm256_loadu_pd(a[0].as_ptr().add(p));
+                acc00 = _mm256_fmadd_pd(va0, vb0, acc00);
+                acc01 = _mm256_fmadd_pd(va0, vb1, acc01);
+                let va1 = _mm256_loadu_pd(a[1].as_ptr().add(p));
+                acc10 = _mm256_fmadd_pd(va1, vb0, acc10);
+                acc11 = _mm256_fmadd_pd(va1, vb1, acc11);
+                let va2 = _mm256_loadu_pd(a[2].as_ptr().add(p));
+                acc20 = _mm256_fmadd_pd(va2, vb0, acc20);
+                acc21 = _mm256_fmadd_pd(va2, vb1, acc21);
+                let va3 = _mm256_loadu_pd(a[3].as_ptr().add(p));
+                acc30 = _mm256_fmadd_pd(va3, vb0, acc30);
+                acc31 = _mm256_fmadd_pd(va3, vb1, acc31);
+            }
+            let sums0 = [hsum(acc00), hsum(acc10), hsum(acc20), hsum(acc30)];
+            let sums1 = [hsum(acc01), hsum(acc11), hsum(acc21), hsum(acc31)];
+            for r in 0..4 {
+                let mut s0 = sums0[r];
+                let mut s1 = sums1[r];
+                for p in chunks * 4..pl {
+                    let av = *a[r].get_unchecked(p);
+                    s0 += av * *b[c].get_unchecked(p);
+                    s1 += av * *b[c + 1].get_unchecked(p);
+                }
+                acc[r][c] += s0;
+                acc[r][c + 1] += s1;
+            }
+            c += 2;
+        }
+    }
+
+    /// Deterministic lane reduction: `(l0 + l2) + (l1 + l3)`.
+    #[target_feature(enable = "avx2", enable = "fma")]
+    unsafe fn hsum(v: __m256d) -> f64 {
+        let hi = _mm256_extractf128_pd::<1>(v);
+        let lo = _mm256_castpd256_pd128(v);
+        let s = _mm_add_pd(lo, hi); // [l0+l2, l1+l3]
+        let sh = _mm_unpackhi_pd(s, s);
+        _mm_cvtsd_f64(_mm_add_sd(s, sh))
+    }
+
+    pub fn dot(a: &[f64], b: &[f64]) -> f64 {
+        // SAFETY: installed only after AVX2+FMA runtime detection.
+        unsafe { dot_inner(a, b) }
+    }
+
+    #[target_feature(enable = "avx2", enable = "fma")]
+    unsafe fn dot_inner(a: &[f64], b: &[f64]) -> f64 {
+        debug_assert_eq!(a.len(), b.len());
+        let n = a.len();
+        let chunks = n / 8;
+        let mut acc0 = _mm256_setzero_pd();
+        let mut acc1 = _mm256_setzero_pd();
+        let (ap, bp) = (a.as_ptr(), b.as_ptr());
+        for i in 0..chunks {
+            let p = i * 8;
+            acc0 = _mm256_fmadd_pd(_mm256_loadu_pd(ap.add(p)), _mm256_loadu_pd(bp.add(p)), acc0);
+            acc1 = _mm256_fmadd_pd(
+                _mm256_loadu_pd(ap.add(p + 4)),
+                _mm256_loadu_pd(bp.add(p + 4)),
+                acc1,
+            );
+        }
+        let mut s = hsum(_mm256_add_pd(acc0, acc1));
+        for p in chunks * 8..n {
+            s += *a.get_unchecked(p) * *b.get_unchecked(p);
+        }
+        s
+    }
+
+    pub fn axpy(alpha: f64, x: &[f64], y: &mut [f64]) {
+        // SAFETY: installed only after AVX2+FMA runtime detection.
+        unsafe { axpy_inner(alpha, x, y) }
+    }
+
+    #[target_feature(enable = "avx2", enable = "fma")]
+    unsafe fn axpy_inner(alpha: f64, x: &[f64], y: &mut [f64]) {
+        debug_assert_eq!(x.len(), y.len());
+        let n = x.len();
+        let chunks = n / 4;
+        let va = _mm256_set1_pd(alpha);
+        let xp = x.as_ptr();
+        let yp = y.as_mut_ptr();
+        for i in 0..chunks {
+            let p = i * 4;
+            let vy = _mm256_loadu_pd(yp.add(p));
+            let vx = _mm256_loadu_pd(xp.add(p));
+            _mm256_storeu_pd(yp.add(p), _mm256_fmadd_pd(va, vx, vy));
+        }
+        for p in chunks * 4..n {
+            *y.get_unchecked_mut(p) += alpha * *x.get_unchecked(p);
+        }
+    }
+
+    pub fn exp_row(gamma: f64, ai: f64, b_sq: &[f64], row: &mut [f64]) {
+        // SAFETY: installed only after AVX2+FMA runtime detection.
+        unsafe { exp_row_inner(gamma, ai, b_sq, row) }
+    }
+
+    /// Cody–Waite two-term range reduction (fdlibm constants).
+    const LN2_HI: f64 = 0.693_147_180_369_123_8;
+    const LN2_LO: f64 = 1.908_214_929_270_587_7e-10;
+
+    #[target_feature(enable = "avx2", enable = "fma")]
+    unsafe fn exp_row_inner(gamma: f64, ai: f64, b_sq: &[f64], row: &mut [f64]) {
+        let n = row.len();
+        debug_assert_eq!(b_sq.len(), n);
+        let chunks = n / 4;
+        let vg = _mm256_set1_pd(-gamma);
+        let vai = _mm256_set1_pd(ai);
+        let vtwo = _mm256_set1_pd(2.0);
+        let vzero = _mm256_setzero_pd();
+        let bp = b_sq.as_ptr();
+        let rp = row.as_mut_ptr();
+        for i in 0..chunks {
+            let p = i * 4;
+            let v = _mm256_loadu_pd(rp.add(p));
+            let bj = _mm256_loadu_pd(bp.add(p));
+            // d2 = max(ai + bj − 2v, 0); x = −gamma·d2 ≤ 0
+            let d2 = _mm256_fnmadd_pd(vtwo, v, _mm256_add_pd(vai, bj));
+            let d2 = _mm256_max_pd(d2, vzero);
+            let x = _mm256_mul_pd(vg, d2);
+            _mm256_storeu_pd(rp.add(p), vexp_nonpos(x));
+        }
+        for p in chunks * 4..n {
+            let v = *row.get_unchecked(p);
+            let d2 = (ai + *b_sq.get_unchecked(p) - 2.0 * v).max(0.0);
+            *row.get_unchecked_mut(p) = exp_nonpos_scalar(-gamma * d2);
+        }
+    }
+
+    /// Vectorized `exp(x)` for `x ≤ 0` — see the module docs for the
+    /// ≤ 4 ULP budget. Lanes below −708 flush to `0.0`.
+    #[target_feature(enable = "avx2", enable = "fma")]
+    unsafe fn vexp_nonpos(x: __m256d) -> __m256d {
+        let log2e = _mm256_set1_pd(std::f64::consts::LOG2_E);
+        let half = _mm256_set1_pd(0.5);
+        // k = floor(x·log2e + 1/2): round-to-nearest for non-positive x
+        let k = _mm256_floor_pd(_mm256_fmadd_pd(x, log2e, half));
+        // z = (x − k·LN2_HI) − k·LN2_LO ∈ [−0.3466, 0.3466]
+        let z = _mm256_fnmadd_pd(k, _mm256_set1_pd(LN2_HI), x);
+        let z = _mm256_fnmadd_pd(k, _mm256_set1_pd(LN2_LO), z);
+        // e^z by degree-13 Taylor, Horner with FMA
+        let mut p = _mm256_set1_pd(1.0 / 6_227_020_800.0); // 1/13!
+        p = _mm256_fmadd_pd(p, z, _mm256_set1_pd(1.0 / 479_001_600.0)); // 1/12!
+        p = _mm256_fmadd_pd(p, z, _mm256_set1_pd(1.0 / 39_916_800.0)); // 1/11!
+        p = _mm256_fmadd_pd(p, z, _mm256_set1_pd(1.0 / 3_628_800.0)); // 1/10!
+        p = _mm256_fmadd_pd(p, z, _mm256_set1_pd(1.0 / 362_880.0)); // 1/9!
+        p = _mm256_fmadd_pd(p, z, _mm256_set1_pd(1.0 / 40_320.0)); // 1/8!
+        p = _mm256_fmadd_pd(p, z, _mm256_set1_pd(1.0 / 5_040.0)); // 1/7!
+        p = _mm256_fmadd_pd(p, z, _mm256_set1_pd(1.0 / 720.0)); // 1/6!
+        p = _mm256_fmadd_pd(p, z, _mm256_set1_pd(1.0 / 120.0)); // 1/5!
+        p = _mm256_fmadd_pd(p, z, _mm256_set1_pd(1.0 / 24.0)); // 1/4!
+        p = _mm256_fmadd_pd(p, z, _mm256_set1_pd(1.0 / 6.0)); // 1/3!
+        p = _mm256_fmadd_pd(p, z, _mm256_set1_pd(0.5));
+        p = _mm256_fmadd_pd(p, z, _mm256_set1_pd(1.0));
+        p = _mm256_fmadd_pd(p, z, _mm256_set1_pd(1.0));
+        // 2^k via exponent-bit assembly: k ∈ [−1022, 1) after the
+        // underflow mask below, so (k + 1023) << 52 never wraps.
+        let kf = _mm256_max_pd(k, _mm256_set1_pd(-1022.0));
+        let k32 = _mm256_cvtpd_epi32(kf); // exact: kf is integral
+        let k64 = _mm256_cvtepi32_epi64(k32);
+        let bits = _mm256_slli_epi64::<52>(_mm256_add_epi64(k64, _mm256_set1_epi64x(1023)));
+        let scale = _mm256_castsi256_pd(bits);
+        let r = _mm256_mul_pd(p, scale);
+        // flush x < −708 to zero (f64::exp is subnormal there)
+        let underflow = _mm256_cmp_pd::<_CMP_LT_OQ>(x, _mm256_set1_pd(-708.0));
+        _mm256_andnot_pd(underflow, r)
+    }
+
+    /// Scalar twin of [`vexp_nonpos`] for the `n % 4` tail — the same
+    /// operation sequence (FMA via `mul_add`), so every element is the
+    /// identical function of its input regardless of which side of the
+    /// vector boundary it falls on.
+    #[target_feature(enable = "avx2", enable = "fma")]
+    unsafe fn exp_nonpos_scalar(x: f64) -> f64 {
+        if x < -708.0 {
+            return 0.0;
+        }
+        let k = f64::mul_add(x, std::f64::consts::LOG2_E, 0.5).floor();
+        let z = f64::mul_add(-k, LN2_LO, f64::mul_add(-k, LN2_HI, x));
+        let mut p = 1.0 / 6_227_020_800.0;
+        p = f64::mul_add(p, z, 1.0 / 479_001_600.0);
+        p = f64::mul_add(p, z, 1.0 / 39_916_800.0);
+        p = f64::mul_add(p, z, 1.0 / 3_628_800.0);
+        p = f64::mul_add(p, z, 1.0 / 362_880.0);
+        p = f64::mul_add(p, z, 1.0 / 40_320.0);
+        p = f64::mul_add(p, z, 1.0 / 5_040.0);
+        p = f64::mul_add(p, z, 1.0 / 720.0);
+        p = f64::mul_add(p, z, 1.0 / 120.0);
+        p = f64::mul_add(p, z, 1.0 / 24.0);
+        p = f64::mul_add(p, z, 1.0 / 6.0);
+        p = f64::mul_add(p, z, 0.5);
+        p = f64::mul_add(p, z, 1.0);
+        p = f64::mul_add(p, z, 1.0);
+        let bits = ((k.max(-1022.0) as i64 + 1023) as u64) << 52;
+        p * f64::from_bits(bits)
+    }
+}
+
+/// The scalar vtable (always available; the accuracy reference).
+static SCALAR: MicroKernels = MicroKernels {
+    isa: Isa::Scalar,
+    nn_4x8: scalar::nn_4x8,
+    nt_4x8: scalar::nt_4x8,
+    dot: scalar::dot,
+    axpy: scalar::axpy,
+    exp_row: scalar::exp_row,
+};
+
+/// The AVX2+FMA vtable (only reachable after runtime detection).
+#[cfg(target_arch = "x86_64")]
+static AVX2: MicroKernels = MicroKernels {
+    isa: Isa::Avx2,
+    nn_4x8: avx2::nn_4x8,
+    nt_4x8: avx2::nt_4x8,
+    dot: avx2::dot,
+    axpy: avx2::axpy,
+    exp_row: avx2::exp_row,
+};
+
+const ISA_UNINIT: u8 = 0;
+const ISA_SCALAR: u8 = 1;
+const ISA_AVX2: u8 = 2;
+
+/// Lazily-initialized active backend (see [`kernels`]). Runtime-
+/// switchable so tests and the bench harness can flip backends
+/// in-process via [`set_isa`].
+static ACTIVE: AtomicU8 = AtomicU8::new(ISA_UNINIT);
+
+/// True when the host supports the AVX2+FMA backend.
+pub fn avx2_available() -> bool {
+    #[cfg(target_arch = "x86_64")]
+    {
+        is_x86_feature_detected!("avx2") && is_x86_feature_detected!("fma")
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    {
+        false
+    }
+}
+
+fn init_from_env() -> u8 {
+    let pick = match std::env::var("BLESS_ISA").ok().as_deref() {
+        Some("scalar") => ISA_SCALAR,
+        Some("avx2") if avx2_available() => ISA_AVX2,
+        // unknown value, "auto", or unsupported request: auto-detect
+        _ => {
+            if avx2_available() {
+                ISA_AVX2
+            } else {
+                ISA_SCALAR
+            }
+        }
+    };
+    // racing initializers pick the same value, so any order is fine
+    ACTIVE.store(pick, Ordering::Relaxed);
+    pick
+}
+
+/// The active micro-kernel vtable.
+///
+/// First call selects a backend: `BLESS_ISA=scalar|avx2|auto` if set,
+/// otherwise AVX2+FMA when the host supports it, scalar elsewhere.
+/// Callers hoist this lookup out of their loops — one relaxed atomic
+/// load and no allocation.
+#[inline]
+pub fn kernels() -> &'static MicroKernels {
+    let mut tag = ACTIVE.load(Ordering::Relaxed);
+    if tag == ISA_UNINIT {
+        tag = init_from_env();
+    }
+    match tag {
+        ISA_SCALAR => &SCALAR,
+        #[cfg(target_arch = "x86_64")]
+        ISA_AVX2 => &AVX2,
+        _ => &SCALAR,
+    }
+}
+
+/// The active backend's identity.
+pub fn active_isa() -> Isa {
+    kernels().isa
+}
+
+/// Force a backend (CLI `--isa`, tests, the SIMD bench). Fails when the
+/// host lacks the requested ISA. Affects all subsequent linalg calls in
+/// the process; callers that flip backends mid-run are responsible for
+/// not doing so concurrently with in-flight factorizations if they need
+/// a whole result computed under one ISA.
+pub fn set_isa(isa: Isa) -> Result<(), String> {
+    match isa {
+        Isa::Scalar => {
+            ACTIVE.store(ISA_SCALAR, Ordering::Relaxed);
+            Ok(())
+        }
+        Isa::Avx2 => {
+            if avx2_available() {
+                ACTIVE.store(ISA_AVX2, Ordering::Relaxed);
+                Ok(())
+            } else {
+                Err("this host does not support the avx2 backend (need AVX2 and FMA)".to_string())
+            }
+        }
+    }
+}
+
+/// Parse and apply a `--isa` / `BLESS_ISA`-style name
+/// (`scalar` / `avx2` / `auto`).
+pub fn set_isa_from_str(name: &str) -> Result<(), String> {
+    match name {
+        "scalar" => set_isa(Isa::Scalar),
+        "avx2" => set_isa(Isa::Avx2),
+        "auto" => {
+            ACTIVE.store(ISA_UNINIT, Ordering::Relaxed);
+            kernels();
+            Ok(())
+        }
+        other => Err(format!("unknown ISA '{other}' (expected scalar, avx2, or auto)")),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn seq(n: usize, f: impl Fn(usize) -> f64) -> Vec<f64> {
+        (0..n).map(f).collect()
+    }
+
+    /// Run `f` under the given backend, restoring auto afterwards.
+    fn with_isa<T>(isa: Isa, f: impl FnOnce() -> T) -> Option<T> {
+        if set_isa(isa).is_err() {
+            return None;
+        }
+        let out = f();
+        set_isa_from_str("auto").unwrap();
+        Some(out)
+    }
+
+    #[test]
+    fn scalar_tiles_match_naive() {
+        let pl = 37;
+        let n = 24;
+        let a: [Vec<f64>; 4] =
+            std::array::from_fn(|r| seq(pl, |p| ((r * pl + p) as f64 * 0.37).sin()));
+        let bd = seq(pl * n, |i| ((i as f64) * 0.23).cos());
+        let j = 8;
+        let mut acc = [[0.0f64; 8]; 4];
+        (SCALAR.nn_4x8)([&a[0], &a[1], &a[2], &a[3]], &bd, n, j, &mut acc);
+        for (r, acc_r) in acc.iter().enumerate() {
+            for (c, got) in acc_r.iter().enumerate() {
+                let want: f64 = (0..pl).map(|p| a[r][p] * bd[p * n + j + c]).sum();
+                assert!((got - want).abs() < 1e-12, "nn r={r} c={c}");
+            }
+        }
+    }
+
+    #[test]
+    fn backends_agree_on_tiles() {
+        let Some(()) = with_isa(Isa::Avx2, || {}) else {
+            return; // no AVX2 on this host; the scalar path is the reference
+        };
+        let pl = 53; // odd: exercises the vector tail
+        let a: [Vec<f64>; 4] =
+            std::array::from_fn(|r| seq(pl, |p| ((r * 31 + p * 7) as f64 * 0.11).sin()));
+        let b: [Vec<f64>; 8] =
+            std::array::from_fn(|c| seq(pl, |p| ((c * 13 + p * 3) as f64 * 0.17).cos()));
+        let ar: [&[f64]; 4] = std::array::from_fn(|r| a[r].as_slice());
+        let br: [&[f64]; 8] = std::array::from_fn(|c| b[c].as_slice());
+        let mut s = [[0.0f64; 8]; 4];
+        let mut v = [[0.0f64; 8]; 4];
+        (SCALAR.nt_4x8)(ar, br, &mut s);
+        #[cfg(target_arch = "x86_64")]
+        (AVX2.nt_4x8)(ar, br, &mut v);
+        for r in 0..4 {
+            for c in 0..8 {
+                assert!((s[r][c] - v[r][c]).abs() <= 1e-12 * s[r][c].abs().max(1.0));
+            }
+        }
+        let x = seq(101, |i| (i as f64 * 0.7).sin());
+        let y = seq(101, |i| (i as f64 * 0.3).cos());
+        let ds = (SCALAR.dot)(&x, &y);
+        #[cfg(target_arch = "x86_64")]
+        {
+            let dv = (AVX2.dot)(&x, &y);
+            assert!((ds - dv).abs() <= 1e-12 * ds.abs().max(1.0));
+            let mut ys = y.clone();
+            let mut yv = y.clone();
+            (SCALAR.axpy)(0.37, &x, &mut ys);
+            (AVX2.axpy)(0.37, &x, &mut yv);
+            for (u, w) in ys.iter().zip(&yv) {
+                assert!((u - w).abs() < 1e-13);
+            }
+        }
+    }
+
+    #[test]
+    fn env_override_and_set_isa() {
+        // scalar is always settable
+        set_isa(Isa::Scalar).unwrap();
+        assert_eq!(active_isa(), Isa::Scalar);
+        set_isa_from_str("auto").unwrap();
+        if avx2_available() {
+            assert_eq!(active_isa(), Isa::Avx2);
+        } else {
+            assert_eq!(active_isa(), Isa::Scalar);
+            assert!(set_isa(Isa::Avx2).is_err());
+        }
+        assert!(set_isa_from_str("neon").is_err());
+    }
+}

@@ -11,7 +11,13 @@
 //! the identical floating-point sequence the serial code would, so the
 //! parallel result is bit-identical to the 1-thread path. Small problems
 //! stay on an inline serial path to avoid dispatch overhead.
+//!
+//! The register micro-kernels themselves (4×8 NN and NT tiles, the edge
+//! dots and axpys) are resolved once per call through
+//! [`super::dispatch::kernels`] — scalar or AVX2+FMA — so results may
+//! vary **by ISA** but never by thread count.
 
+use super::dispatch::{self, MicroKernels};
 use super::Matrix;
 use crate::util::pool;
 
@@ -45,9 +51,10 @@ pub fn gemm_into(a: &Matrix, b: &Matrix, c: &mut Matrix) {
     }
     let (ad, bd) = (a.as_slice(), b.as_slice());
     let cd = c.as_mut_slice();
+    let kern = dispatch::kernels();
     let work = m.saturating_mul(k).saturating_mul(n);
     pool::par_chunks_mut_gated(cd, MC * n, work >= PAR_MIN_WORK, |blk, chunk| {
-        gemm_row_block(ad, bd, chunk, blk * MC, k, n);
+        gemm_row_block(kern, ad, bd, chunk, blk * MC, k, n);
     });
 }
 
@@ -57,30 +64,30 @@ pub fn gemm_into(a: &Matrix, b: &Matrix, c: &mut Matrix) {
 /// whole `p`-panel, so C is read/written once per panel instead of once
 /// per `p` (the k=d≈18 kernel cross-term shape was C-bandwidth-bound;
 /// §Perf).
-fn gemm_row_block(ad: &[f64], bd: &[f64], chunk: &mut [f64], i0: usize, k: usize, n: usize) {
+fn gemm_row_block(
+    kern: &MicroKernels,
+    ad: &[f64],
+    bd: &[f64],
+    chunk: &mut [f64],
+    i0: usize,
+    k: usize,
+    n: usize,
+) {
     let rows = chunk.len() / n;
     for pb in (0..k).step_by(KC) {
         let pe = (pb + KC).min(k);
+        let bpanel = &bd[pb * n..pe * n];
         let mut r = 0;
         while r + 4 <= rows {
             let i = i0 + r;
-            let a0 = &ad[i * k..(i + 1) * k];
-            let a1 = &ad[(i + 1) * k..(i + 2) * k];
-            let a2 = &ad[(i + 2) * k..(i + 3) * k];
-            let a3 = &ad[(i + 3) * k..(i + 4) * k];
+            let a0 = &ad[i * k + pb..i * k + pe];
+            let a1 = &ad[(i + 1) * k + pb..(i + 1) * k + pe];
+            let a2 = &ad[(i + 2) * k + pb..(i + 2) * k + pe];
+            let a3 = &ad[(i + 3) * k + pb..(i + 3) * k + pe];
             let mut j = 0;
             while j + 8 <= n {
                 let mut acc = [[0.0f64; 8]; 4];
-                for p in pb..pe {
-                    let b8 = &bd[p * n + j..p * n + j + 8];
-                    let w = [a0[p], a1[p], a2[p], a3[p]];
-                    for (rr, acc_r) in acc.iter_mut().enumerate() {
-                        let wr = w[rr];
-                        for (c, bv) in acc_r.iter_mut().zip(b8.iter()) {
-                            *c += wr * bv;
-                        }
-                    }
-                }
+                (kern.nn_4x8)([a0, a1, a2, a3], bpanel, n, j, &mut acc);
                 for (rr, acc_r) in acc.iter().enumerate() {
                     let crow = &mut chunk[(r + rr) * n + j..(r + rr) * n + j + 8];
                     for (cv, av) in crow.iter_mut().zip(acc_r.iter()) {
@@ -92,8 +99,8 @@ fn gemm_row_block(ad: &[f64], bd: &[f64], chunk: &mut [f64], i0: usize, k: usize
             // column remainder
             while j < n {
                 let mut acc = [0.0f64; 4];
-                for p in pb..pe {
-                    let bv = bd[p * n + j];
+                for p in 0..pe - pb {
+                    let bv = bpanel[p * n + j];
                     acc[0] += a0[p] * bv;
                     acc[1] += a1[p] * bv;
                     acc[2] += a2[p] * bv;
@@ -133,18 +140,27 @@ fn gemm_row_block(ad: &[f64], bd: &[f64], chunk: &mut [f64], i0: usize, k: usize
 /// no `n × k` transpose buffer is ever allocated. Parallelized over the
 /// same fixed `MC`-row output blocks as [`gemm`], so the result is
 /// bit-identical at any thread count.
+#[deprecated(note = "use `MatMul::nt().run(a, b)` — same engine, one facade")]
 pub fn gemm_nt(a: &Matrix, b: &Matrix) -> Matrix {
     let mut c = Matrix::zeros(a.rows(), b.rows());
-    gemm_nt_into(a, b, &mut c);
+    nt_into_checked(a, b, &mut c);
     c
 }
 
 /// `C += A * Bᵀ` into an existing buffer (no allocation).
+#[deprecated(note = "use `MatMul::nt().accumulate().run_into(a, b, c)`")]
 pub fn gemm_nt_into(a: &Matrix, b: &Matrix, c: &mut Matrix) {
-    assert_eq!(a.cols(), b.cols(), "gemm_nt dimension mismatch");
+    nt_into_checked(a, b, c);
+}
+
+/// Shape-checked `C += A·Bᵀ` on [`Matrix`] operands (the shared body of
+/// the deprecated `gemm_nt`/`gemm_nt_into` wrappers and the
+/// [`super::MatMul`] facade).
+pub(crate) fn nt_into_checked(a: &Matrix, b: &Matrix, c: &mut Matrix) {
+    assert_eq!(a.cols(), b.cols(), "gemm nt dimension mismatch");
     assert_eq!(c.rows(), a.rows());
     assert_eq!(c.cols(), b.rows());
-    gemm_nt_acc(a.as_slice(), b.as_slice(), a.cols(), c.as_mut_slice(), b.rows());
+    nt_acc(a.as_slice(), b.as_slice(), a.cols(), c.as_mut_slice(), b.rows());
 }
 
 /// `C += A * Bᵀ` over raw row-major slices: `A` is `(c.len()/n) × k`,
@@ -153,9 +169,16 @@ pub fn gemm_nt_into(a: &Matrix, b: &Matrix, c: &mut Matrix) {
 /// The slice form exists so callers holding borrowed row ranges (e.g.
 /// the kernel engine streaming contiguous dataset tiles) can feed the
 /// product without copying into a fresh [`Matrix`]. Same fixed-block
-/// parallel partition as [`gemm_nt`].
+/// parallel partition as the `Matrix` forms.
+#[deprecated(note = "use `MatMul::nt().accumulate().run_rows_into(a, b, k, c, n)`")]
 pub fn gemm_nt_acc(a: &[f64], b: &[f64], k: usize, c: &mut [f64], n: usize) {
-    assert!(k > 0, "gemm_nt_acc needs a positive inner dimension");
+    nt_acc(a, b, k, c, n);
+}
+
+/// The raw-slice `C += A·Bᵀ` engine behind [`gemm_nt_acc`] and
+/// [`super::MatMul::run_rows_into`].
+pub(crate) fn nt_acc(a: &[f64], b: &[f64], k: usize, c: &mut [f64], n: usize) {
+    assert!(k > 0, "gemm nt needs a positive inner dimension");
     assert_eq!(b.len(), n * k, "B shape mismatch");
     assert_eq!(c.len() % n.max(1), 0, "C shape mismatch");
     if n == 0 || c.is_empty() {
@@ -163,9 +186,10 @@ pub fn gemm_nt_acc(a: &[f64], b: &[f64], k: usize, c: &mut [f64], n: usize) {
     }
     let m = c.len() / n;
     assert_eq!(a.len(), m * k, "A shape mismatch");
+    let kern = dispatch::kernels();
     let work = m.saturating_mul(k).saturating_mul(n);
     pool::par_chunks_mut_gated(c, MC * n, work >= PAR_MIN_WORK, |blk, chunk| {
-        gemm_nt_row_block(a, b, chunk, blk * MC, k, n);
+        gemm_nt_row_block(kern, a, b, chunk, blk * MC, k, n);
     });
 }
 
@@ -173,11 +197,18 @@ pub fn gemm_nt_acc(a: &[f64], b: &[f64], k: usize, c: &mut [f64], n: usize) {
 /// 4×8 micro-kernel over dot-product panels: 4 rows of `A` against 8
 /// rows of `B`, all 12 streams read sequentially in `p`, 32 accumulators
 /// live in registers across the whole `KC` panel.
-fn gemm_nt_row_block(ad: &[f64], bd: &[f64], chunk: &mut [f64], i0: usize, k: usize, n: usize) {
+fn gemm_nt_row_block(
+    kern: &MicroKernels,
+    ad: &[f64],
+    bd: &[f64],
+    chunk: &mut [f64],
+    i0: usize,
+    k: usize,
+    n: usize,
+) {
     let rows = chunk.len() / n;
     for pb in (0..k).step_by(KC) {
         let pe = (pb + KC).min(k);
-        let pl = pe - pb;
         let mut r = 0;
         while r + 4 <= rows {
             let arow = |rr: usize| &ad[(i0 + r + rr) * k + pb..(i0 + r + rr) * k + pe];
@@ -187,14 +218,7 @@ fn gemm_nt_row_block(ad: &[f64], bd: &[f64], chunk: &mut [f64], i0: usize, k: us
                 let b8: [&[f64]; 8] =
                     std::array::from_fn(|cc| &bd[(j + cc) * k + pb..(j + cc) * k + pe]);
                 let mut acc = [[0.0f64; 8]; 4];
-                for p in 0..pl {
-                    for (acc_r, ar) in acc.iter_mut().zip(a4.iter()) {
-                        let av = ar[p];
-                        for (cv, br) in acc_r.iter_mut().zip(b8.iter()) {
-                            *cv += av * br[p];
-                        }
-                    }
-                }
+                (kern.nt_4x8)(a4, b8, &mut acc);
                 for (rr, acc_r) in acc.iter().enumerate() {
                     let crow = &mut chunk[(r + rr) * n + j..(r + rr) * n + j + 8];
                     for (cv, av) in crow.iter_mut().zip(acc_r.iter()) {
@@ -207,11 +231,7 @@ fn gemm_nt_row_block(ad: &[f64], bd: &[f64], chunk: &mut [f64], i0: usize, k: us
             while j < n {
                 let brow = &bd[j * k + pb..j * k + pe];
                 for (rr, ar) in a4.iter().enumerate() {
-                    let mut s = 0.0;
-                    for (av, bv) in ar.iter().zip(brow.iter()) {
-                        s += av * bv;
-                    }
-                    chunk[(r + rr) * n + j] += s;
+                    chunk[(r + rr) * n + j] += (kern.dot)(ar, brow);
                 }
                 j += 1;
             }
@@ -222,11 +242,7 @@ fn gemm_nt_row_block(ad: &[f64], bd: &[f64], chunk: &mut [f64], i0: usize, k: us
             let arow = &ad[(i0 + r) * k + pb..(i0 + r) * k + pe];
             for j in 0..n {
                 let brow = &bd[j * k + pb..j * k + pe];
-                let mut s = 0.0;
-                for (av, bv) in arow.iter().zip(brow.iter()) {
-                    s += av * bv;
-                }
-                chunk[r * n + j] += s;
+                chunk[r * n + j] += (kern.dot)(arow, brow);
             }
             r += 1;
         }
@@ -236,23 +252,33 @@ fn gemm_nt_row_block(ad: &[f64], bd: &[f64], chunk: &mut [f64], i0: usize, k: us
 /// `C = A·Aᵀ` (symmetric rank-k update, `A` is `m × k`, `C` is `m × m`).
 ///
 /// Only the lower triangle is computed — each element through the same
-/// 4×8 dot-product micro-kernel as [`gemm_nt`], parallelized over fixed
-/// `MC`-row blocks of `C` — and then mirrored into the upper triangle,
-/// so the result is exactly symmetric and costs half the multiply-adds
-/// of `gemm_nt(a, a)`. Bit-identical at any thread count.
+/// 4×8 dot-product micro-kernel as the NT product, parallelized over
+/// fixed `MC`-row blocks of `C` — and then mirrored into the upper
+/// triangle, so the result is exactly symmetric and costs half the
+/// multiply-adds of the dense `A·Aᵀ`. Bit-identical at any thread count.
 pub fn syrk(a: &Matrix) -> Matrix {
-    let (m, k) = (a.rows(), a.cols());
-    let mut c = Matrix::zeros(m, m);
-    if m == 0 {
-        return c;
-    }
-    let ad = a.as_slice();
-    let work = m.saturating_mul(m).saturating_mul(k.max(1)) / 2;
-    pool::par_chunks_mut_gated(c.as_mut_slice(), MC * m, work >= PAR_MIN_WORK, |blk, chunk| {
-        syrk_ln_panel(ad, chunk, blk * MC, k, m, 0, 1.0);
-    });
+    let mut c = Matrix::zeros(a.rows(), a.rows());
+    nt_lower_acc_into(a, &mut c);
     c.mirror_lower_to_upper();
     c
+}
+
+/// Lower-triangle-only `C += A·Aᵀ` accumulation (the strict upper
+/// triangle is left untouched) — the engine behind [`syrk`] and the
+/// `Triangle::Lower` NT path of [`super::MatMul`].
+pub(crate) fn nt_lower_acc_into(a: &Matrix, c: &mut Matrix) {
+    let (m, k) = (a.rows(), a.cols());
+    assert_eq!(c.rows(), m, "syrk output shape mismatch");
+    assert_eq!(c.cols(), m, "syrk output shape mismatch");
+    if m == 0 {
+        return;
+    }
+    let ad = a.as_slice();
+    let kern = dispatch::kernels();
+    let work = m.saturating_mul(m).saturating_mul(k.max(1)) / 2;
+    pool::par_chunks_mut_gated(c.as_mut_slice(), MC * m, work >= PAR_MIN_WORK, |blk, chunk| {
+        syrk_ln_panel(kern, ad, chunk, blk * MC, k, m, 0, 1.0);
+    });
 }
 
 /// One `MC`-row block of the lower-triangle-only rank-`w` update
@@ -269,6 +295,7 @@ pub fn syrk(a: &Matrix) -> Matrix {
 /// multiple of 4), so every element takes the same code path — and gets
 /// the same bits — at any thread count.
 pub(crate) fn syrk_ln_panel(
+    kern: &MicroKernels,
     panel: &[f64],
     chunk: &mut [f64],
     t0: usize,
@@ -283,7 +310,6 @@ pub(crate) fn syrk_ln_panel(
     let rows = chunk.len() / ldc;
     for pb in (0..w).step_by(KC) {
         let pe = (pb + KC).min(w);
-        let pl = pe - pb;
         let mut r = 0;
         while r + 4 <= rows {
             let t = t0 + r;
@@ -295,14 +321,7 @@ pub(crate) fn syrk_ln_panel(
                 let b8: [&[f64]; 8] =
                     std::array::from_fn(|cc| &panel[(j + cc) * w + pb..(j + cc) * w + pe]);
                 let mut acc = [[0.0f64; 8]; 4];
-                for p in 0..pl {
-                    for (acc_r, ar) in acc.iter_mut().zip(a4.iter()) {
-                        let av = ar[p];
-                        for (cv, br) in acc_r.iter_mut().zip(b8.iter()) {
-                            *cv += av * br[p];
-                        }
-                    }
-                }
+                (kern.nt_4x8)(a4, b8, &mut acc);
                 for (rr, acc_r) in acc.iter().enumerate() {
                     let base = (r + rr) * ldc + c0 + j;
                     let crow = &mut chunk[base..base + 8];
@@ -312,15 +331,11 @@ pub(crate) fn syrk_ln_panel(
                 }
                 j += 8;
             }
-            // ragged triangle edge: scalar dots out to each row's diagonal
+            // ragged triangle edge: dots out to each row's diagonal
             for (rr, ar) in a4.iter().enumerate() {
                 for jj in j..=(t + rr) {
                     let brow = &panel[jj * w + pb..jj * w + pe];
-                    let mut s = 0.0;
-                    for (av, bv) in ar.iter().zip(brow.iter()) {
-                        s += av * bv;
-                    }
-                    chunk[(r + rr) * ldc + c0 + jj] += sign * s;
+                    chunk[(r + rr) * ldc + c0 + jj] += sign * (kern.dot)(ar, brow);
                 }
             }
             r += 4;
@@ -331,11 +346,7 @@ pub(crate) fn syrk_ln_panel(
             let ar = &panel[t * w + pb..t * w + pe];
             for jj in 0..=t {
                 let brow = &panel[jj * w + pb..jj * w + pe];
-                let mut s = 0.0;
-                for (av, bv) in ar.iter().zip(brow.iter()) {
-                    s += av * bv;
-                }
-                chunk[r * ldc + c0 + jj] += sign * s;
+                chunk[r * ldc + c0 + jj] += sign * (kern.dot)(ar, brow);
             }
             r += 1;
         }
@@ -351,25 +362,37 @@ const TN_RB: usize = 64;
 /// the shared dimension `p` stream rank-1 contributions in ascending `p`
 /// order — the same per-element order as the serial rank-1 formulation,
 /// so the result is bit-identical.
+#[deprecated(note = "use `MatMul::tn().run(a, b)` — same engine, one facade")]
 pub fn gemm_tn(a: &Matrix, b: &Matrix) -> Matrix {
-    assert_eq!(a.rows(), b.rows(), "gemm_tn dimension mismatch");
+    let mut c = Matrix::zeros(a.cols(), b.cols());
+    tn_acc_into(a, b, &mut c);
+    c
+}
+
+/// Shape-checked `C += Aᵀ·B` accumulation (the shared body of the
+/// deprecated `gemm_tn` wrapper and the TN path of [`super::MatMul`]).
+pub(crate) fn tn_acc_into(a: &Matrix, b: &Matrix, c: &mut Matrix) {
+    assert_eq!(a.rows(), b.rows(), "gemm tn dimension mismatch");
     let (k, m, n) = (a.rows(), a.cols(), b.cols());
-    let mut c = Matrix::zeros(m, n);
+    assert_eq!(c.rows(), m, "gemm tn output shape mismatch");
+    assert_eq!(c.cols(), n, "gemm tn output shape mismatch");
     if m == 0 || n == 0 {
-        return c;
+        return;
     }
     let (ad, bd) = (a.as_slice(), b.as_slice());
     let cd = c.as_mut_slice();
+    let kern = dispatch::kernels();
     let work = m.saturating_mul(k).saturating_mul(n);
     pool::par_chunks_mut_gated(cd, TN_RB * n, work >= PAR_MIN_WORK, |blk, chunk| {
-        gemm_tn_row_block(ad, bd, chunk, blk * TN_RB, k, m, n);
+        gemm_tn_row_block(kern, ad, bd, chunk, blk * TN_RB, k, m, n);
     });
-    c
 }
 
 /// One `TN_RB`-row block of `C = Aᵀ B`: output rows `[i0, i0 + rows)`
 /// (= columns of `A`), with `chunk` holding exactly those rows of `C`.
+#[allow(clippy::too_many_arguments)]
 fn gemm_tn_row_block(
+    kern: &MicroKernels,
     ad: &[f64],
     bd: &[f64],
     chunk: &mut [f64],
@@ -389,9 +412,7 @@ fn gemm_tn_row_block(
                     continue;
                 }
                 let crow = &mut chunk[r * n..(r + 1) * n];
-                for (cv, bv) in crow.iter_mut().zip(brow.iter()) {
-                    *cv += aip * bv;
-                }
+                (kern.axpy)(aip, brow, crow);
             }
         }
     }
@@ -399,12 +420,13 @@ fn gemm_tn_row_block(
 
 /// `C = AᵀA` (`A` is `k × m`, `C` is `m × m`) without materializing `Aᵀ`.
 ///
-/// Computes only the lower triangle — half the multiply-adds of
-/// `gemm_tn(a, a)` — and mirrors it, so the result is exactly symmetric.
-/// See [`syrk_tn_into`] for the partition/determinism contract.
+/// Computes only the lower triangle — half the multiply-adds of the
+/// dense `AᵀA` — and mirrors it, so the result is exactly symmetric.
+/// See [`tn_lower_acc_into`] for the partition/determinism contract.
+#[deprecated(note = "use `MatMul::tn().lower().run(a, a)` — same engine, one facade")]
 pub fn syrk_tn(a: &Matrix) -> Matrix {
     let mut c = Matrix::zeros(a.cols(), a.cols());
-    syrk_tn_into(a, &mut c);
+    tn_lower_acc_into(a, &mut c);
     c.mirror_lower_to_upper();
     c
 }
@@ -412,25 +434,32 @@ pub fn syrk_tn(a: &Matrix) -> Matrix {
 /// `C += AᵀA`, accumulating into the **lower triangle only** of an
 /// existing buffer (no allocation; the strict upper triangle is left
 /// untouched).
+#[deprecated(note = "use `MatMul::tn().accumulate().lower().run_into(a, a, c)`")]
+pub fn syrk_tn_into(a: &Matrix, c: &mut Matrix) {
+    tn_lower_acc_into(a, c);
+}
+
+/// Lower-triangle-only `C += AᵀA` accumulation.
 ///
 /// The accumulation is rank-1 over rows `p` of `A` in ascending order,
 /// parallelized over fixed `TN_RB`-row blocks of `C` (the same partition
-/// as [`gemm_tn`]) — bit-identical at any thread count. This is the
-/// `H += K_tileᵀ K_tile` Gram-accumulation shape of Nyström-KRR:
+/// as the dense TN product) — bit-identical at any thread count. This is
+/// the `H += K_tileᵀ K_tile` Gram-accumulation shape of Nyström-KRR:
 /// accumulate tile after tile, then call
 /// [`Matrix::mirror_lower_to_upper`] once at the end if a fully
-/// symmetric matrix is needed ([`syrk_tn`] does exactly that).
-pub fn syrk_tn_into(a: &Matrix, c: &mut Matrix) {
+/// symmetric matrix is needed (the allocating forms do exactly that).
+pub(crate) fn tn_lower_acc_into(a: &Matrix, c: &mut Matrix) {
     let (k, m) = (a.rows(), a.cols());
-    assert_eq!(c.rows(), m, "syrk_tn output shape mismatch");
-    assert_eq!(c.cols(), m, "syrk_tn output shape mismatch");
+    assert_eq!(c.rows(), m, "syrk tn output shape mismatch");
+    assert_eq!(c.cols(), m, "syrk tn output shape mismatch");
     if m == 0 {
         return;
     }
     let ad = a.as_slice();
+    let kern = dispatch::kernels();
     let work = k.saturating_mul(m).saturating_mul(m) / 2;
     pool::par_chunks_mut_gated(c.as_mut_slice(), TN_RB * m, work >= PAR_MIN_WORK, |blk, chunk| {
-        syrk_tn_row_block(ad, chunk, blk * TN_RB, 0, k, m);
+        syrk_tn_row_block(kern, ad, chunk, blk * TN_RB, 0, k, m);
     });
 }
 
@@ -453,9 +482,10 @@ pub fn syrk_tn_of_lower(l: &Matrix) -> Matrix {
         return c;
     }
     let ld = l.as_slice();
+    let kern = dispatch::kernels();
     let work = n.saturating_mul(n).saturating_mul(n) / 6;
     pool::par_chunks_mut_gated(c.as_mut_slice(), TN_RB * n, work >= PAR_MIN_WORK, |blk, chunk| {
-        syrk_tn_row_block(ld, chunk, blk * TN_RB, blk * TN_RB, n, n);
+        syrk_tn_row_block(kern, ld, chunk, blk * TN_RB, blk * TN_RB, n, n);
     });
     c.mirror_lower_to_upper();
     c
@@ -467,6 +497,7 @@ pub fn syrk_tn_of_lower(l: &Matrix) -> Matrix {
 /// sound when `A[p, i] = 0` for all `p < p_start`, `i ≥ i0` (the
 /// lower-triangular-input case of [`syrk_tn_of_lower`]).
 fn syrk_tn_row_block(
+    kern: &MicroKernels,
     ad: &[f64],
     chunk: &mut [f64],
     i0: usize,
@@ -486,9 +517,7 @@ fn syrk_tn_row_block(
                     continue;
                 }
                 let crow = &mut chunk[r * m..r * m + i + 1];
-                for (cv, av) in crow.iter_mut().zip(prow[..=i].iter()) {
-                    *cv += aip * av;
-                }
+                (kern.axpy)(aip, &prow[..=i], crow);
             }
         }
     }
@@ -543,12 +572,13 @@ pub fn matvec_into(a: &Matrix, x: &[f64], y: &mut [f64]) {
     assert_eq!(a.rows(), y.len());
     let (rows, cols) = (a.rows(), a.cols());
     let ad = a.as_slice();
+    let kern = dispatch::kernels();
     let parallel = rows.saturating_mul(cols) >= PAR_MIN_MV;
     pool::par_chunks_mut_gated(y, MV_RB, parallel, |blk, ych| {
         let i0 = blk * MV_RB;
         for (r, yi) in ych.iter_mut().enumerate() {
             let i = i0 + r;
-            *yi = super::dot(&ad[i * cols..(i + 1) * cols], x);
+            *yi = (kern.dot)(&ad[i * cols..(i + 1) * cols], x);
         }
     });
 }
@@ -576,9 +606,10 @@ pub fn matvec_t_acc(a: &Matrix, x: &[f64], y: &mut [f64]) {
     assert_eq!(a.rows(), x.len());
     assert_eq!(a.cols(), y.len());
     let (rows, cols) = (a.rows(), a.cols());
+    let kern = dispatch::kernels();
     if rows.saturating_mul(cols) < PAR_MIN_MV || cols <= MT_CB {
         for (i, &xi) in x.iter().enumerate() {
-            super::axpy(xi, a.row(i), y);
+            (kern.axpy)(xi, a.row(i), y);
         }
         return;
     }
@@ -588,14 +619,13 @@ pub fn matvec_t_acc(a: &Matrix, x: &[f64], y: &mut [f64]) {
         let w = ych.len();
         for (i, &xi) in x.iter().enumerate() {
             let aseg = &ad[i * cols + j0..i * cols + j0 + w];
-            for (yj, av) in ych.iter_mut().zip(aseg.iter()) {
-                *yj += xi * av;
-            }
+            (kern.axpy)(xi, aseg, ych);
         }
     });
 }
 
 #[cfg(test)]
+#[allow(deprecated)] // the thin wrappers stay covered until call sites finish migrating
 mod tests {
     use super::*;
 

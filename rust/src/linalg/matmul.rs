@@ -1,0 +1,264 @@
+//! Typed matrix-multiply facade over the blocked GEMM/SYRK engines.
+//!
+//! The linalg tier historically grew one free function per
+//! transpose × accumulate × triangle combination (`gemm_nt`,
+//! `gemm_nt_into`, `gemm_nt_acc`, `gemm_tn`, `syrk_tn`, `syrk_tn_into`,
+//! …). [`MatMul`] collapses that sprawl into one descriptor: pick the
+//! operand orientation with [`MatMul::nn`]/[`MatMul::nt`]/[`MatMul::tn`],
+//! opt into accumulation and/or symmetric lower-triangle output with the
+//! builder methods, and run it. Every path routes through the same
+//! pool-parallel engines — and through them the runtime-dispatched
+//! [`super::dispatch`] micro-kernels — as the legacy free functions, so
+//! results are bit-for-bit identical to the wrappers they replace.
+//!
+//! ```
+//! use bless::linalg::{MatMul, Matrix};
+//! let a = Matrix::from_fn(5, 3, |i, j| (i + j) as f64);
+//! let b = Matrix::from_fn(7, 3, |i, j| (i * 7 + j) as f64 * 0.5);
+//! let c = MatMul::nt().run(&a, &b); // A·Bᵀ, no transpose materialized
+//! assert_eq!(c.rows(), 5);
+//! assert_eq!(c.cols(), 7);
+//! let gram = MatMul::tn().lower().run(&a, &a); // AᵀA via the syrk engine
+//! assert_eq!(gram.rows(), 3);
+//! ```
+
+use super::{gemm, Matrix};
+
+/// Operand orientation of a [`MatMul`]: which sides are read transposed.
+///
+/// All operands are row-major and no transpose is ever materialized —
+/// `Nt`/`Tn` pick engines whose loop order streams the stored layout.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Transpose {
+    /// `C = A · B` (A is m×k, B is k×n).
+    Nn,
+    /// `C = A · Bᵀ` (A is m×k, B is n×k) — the kernel cross-term shape.
+    Nt,
+    /// `C = Aᵀ · B` (A is k×m, B is k×n) — the Gram-accumulation shape.
+    Tn,
+}
+
+/// Output shape of a [`MatMul`]: the full product or only the lower
+/// triangle of a symmetric one.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Triangle {
+    /// Every element of `C`.
+    Full,
+    /// Lower triangle only — valid when the product is symmetric, i.e.
+    /// both operands are the **same** matrix (`A·Aᵀ` or `AᵀA`); costs
+    /// half the multiply-adds of the full product.
+    Lower,
+}
+
+/// A typed matrix-multiply descriptor: orientation × accumulate ×
+/// triangle, routed through the runtime-dispatched micro-kernel tier.
+///
+/// Construct with [`MatMul::nn`]/[`MatMul::nt`]/[`MatMul::tn`], refine
+/// with [`MatMul::accumulate`] / [`MatMul::lower`], then [`MatMul::run`]
+/// (allocating) or [`MatMul::run_into`] (into an existing buffer). The
+/// struct is plain data — build it once and reuse it, or inline the
+/// chain at the call site.
+#[derive(Clone, Copy, Debug)]
+pub struct MatMul {
+    /// Which operands are read transposed.
+    pub transpose: Transpose,
+    /// `run_into` adds to the existing output instead of overwriting it.
+    pub accumulate: bool,
+    /// Full product, or lower triangle of a symmetric one.
+    pub triangle: Triangle,
+}
+
+impl MatMul {
+    /// `C = A · B`.
+    pub const fn nn() -> Self {
+        MatMul { transpose: Transpose::Nn, accumulate: false, triangle: Triangle::Full }
+    }
+
+    /// `C = A · Bᵀ` without materializing `Bᵀ`.
+    pub const fn nt() -> Self {
+        MatMul { transpose: Transpose::Nt, accumulate: false, triangle: Triangle::Full }
+    }
+
+    /// `C = Aᵀ · B` without materializing `Aᵀ`.
+    pub const fn tn() -> Self {
+        MatMul { transpose: Transpose::Tn, accumulate: false, triangle: Triangle::Full }
+    }
+
+    /// Accumulate into the existing output (`C += …`) instead of
+    /// overwriting it. Only affects [`MatMul::run_into`] /
+    /// [`MatMul::run_rows_into`].
+    pub const fn accumulate(mut self) -> Self {
+        self.accumulate = true;
+        self
+    }
+
+    /// Compute only the lower triangle of a **symmetric** product
+    /// (`A·Aᵀ` for [`MatMul::nt`], `AᵀA` for [`MatMul::tn`]); both
+    /// operand arguments must then be the same matrix. [`MatMul::run`]
+    /// mirrors the triangle so the returned matrix is exactly symmetric;
+    /// [`MatMul::run_into`] touches only the lower triangle.
+    pub const fn lower(mut self) -> Self {
+        self.triangle = Triangle::Lower;
+        self
+    }
+
+    /// Run the product into a freshly allocated output matrix.
+    ///
+    /// With [`Triangle::Lower`] the lower triangle is computed and then
+    /// mirrored, so the result is exactly symmetric (bitwise: the
+    /// strict upper equals the strict lower).
+    pub fn run(&self, a: &Matrix, b: &Matrix) -> Matrix {
+        let (rows, cols) = self.out_shape(a, b);
+        let mut c = Matrix::zeros(rows, cols);
+        self.dispatch_into(a, b, &mut c);
+        if self.triangle == Triangle::Lower {
+            c.mirror_lower_to_upper();
+        }
+        c
+    }
+
+    /// Run the product into an existing buffer: overwrite by default,
+    /// `C += …` after [`MatMul::accumulate`].
+    ///
+    /// With [`Triangle::Lower`] only the lower triangle is written (the
+    /// strict upper is untouched in accumulate mode and zeroed in
+    /// overwrite mode) — the Nyström Gram-accumulation shape: add tile
+    /// after tile, then mirror once at the end.
+    pub fn run_into(&self, a: &Matrix, b: &Matrix, c: &mut Matrix) {
+        if !self.accumulate {
+            c.as_mut_slice().fill(0.0);
+        }
+        self.dispatch_into(a, b, c);
+    }
+
+    /// Raw row-major slice form of the NT product: `C += A · Bᵀ` with
+    /// `A` = `(c.len()/n) × k`, `B` = `n × k`, `C` = `(c.len()/n) × n`
+    /// (overwrite first unless [`MatMul::accumulate`]).
+    ///
+    /// Exists so callers holding borrowed row ranges — the kernel engine
+    /// streaming contiguous dataset tiles — can feed the product without
+    /// copying into a fresh [`Matrix`]. Only [`MatMul::nt`] with
+    /// [`Triangle::Full`] is defined for slices.
+    pub fn run_rows_into(&self, a: &[f64], b: &[f64], k: usize, c: &mut [f64], n: usize) {
+        assert_eq!(
+            (self.transpose, self.triangle),
+            (Transpose::Nt, Triangle::Full),
+            "run_rows_into supports only the full NT product"
+        );
+        if !self.accumulate {
+            c.fill(0.0);
+        }
+        gemm::nt_acc(a, b, k, c, n);
+    }
+
+    /// Output shape for the given operands.
+    fn out_shape(&self, a: &Matrix, b: &Matrix) -> (usize, usize) {
+        match self.transpose {
+            Transpose::Nn => (a.rows(), b.cols()),
+            Transpose::Nt => (a.rows(), b.rows()),
+            Transpose::Tn => (a.cols(), b.cols()),
+        }
+    }
+
+    /// Route to the matching engine (always accumulating; `run`/
+    /// `run_into` handle the overwrite semantics).
+    fn dispatch_into(&self, a: &Matrix, b: &Matrix, c: &mut Matrix) {
+        match self.triangle {
+            Triangle::Full => match self.transpose {
+                Transpose::Nn => super::gemm_into(a, b, c),
+                Transpose::Nt => gemm::nt_into_checked(a, b, c),
+                Transpose::Tn => gemm::tn_acc_into(a, b, c),
+            },
+            Triangle::Lower => {
+                assert!(
+                    std::ptr::eq(a, b),
+                    "Triangle::Lower needs a symmetric product — pass the same matrix twice"
+                );
+                match self.transpose {
+                    Transpose::Nt => gemm::nt_lower_acc_into(a, c),
+                    Transpose::Tn => gemm::tn_lower_acc_into(a, c),
+                    Transpose::Nn => panic!("Triangle::Lower is undefined for the NN product"),
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+#[allow(deprecated)] // compares the facade bitwise against the legacy wrappers
+mod tests {
+    use super::super::{gemm_nt, gemm_nt_acc, gemm_tn, syrk, syrk_tn, syrk_tn_into};
+    use super::*;
+
+    fn bits(m: &Matrix) -> Vec<u64> {
+        m.as_slice().iter().map(|v| v.to_bits()).collect()
+    }
+
+    #[test]
+    fn facade_matches_legacy_wrappers_bitwise() {
+        let a = Matrix::from_fn(23, 17, |i, j| ((i * 17 + j) as f64 * 0.37).sin());
+        let b = Matrix::from_fn(19, 17, |i, j| ((i * 19 + j) as f64 * 0.73).cos());
+        assert_eq!(bits(&MatMul::nt().run(&a, &b)), bits(&gemm_nt(&a, &b)));
+        let t = Matrix::from_fn(17, 11, |i, j| ((i + 3 * j) % 7) as f64 - 3.0);
+        assert_eq!(bits(&MatMul::tn().run(&a, &t)), bits(&gemm_tn(&a, &t)));
+        assert_eq!(bits(&MatMul::nt().lower().run(&a, &a)), bits(&syrk(&a)));
+        assert_eq!(bits(&MatMul::tn().lower().run(&a, &a)), bits(&syrk_tn(&a)));
+        let nn = MatMul::nn().run(&a, &t);
+        assert_eq!(bits(&nn), bits(&super::super::gemm(&a, &t)));
+    }
+
+    #[test]
+    fn accumulate_and_overwrite_semantics() {
+        let a = Matrix::from_fn(9, 5, |i, j| (i + j) as f64);
+        let b = Matrix::from_fn(7, 5, |i, j| (i as f64 - j as f64) * 0.5);
+        // accumulate adds to the existing contents
+        let mut c1 = Matrix::from_fn(9, 7, |i, j| (i * 7 + j) as f64);
+        let mut c2 = c1.clone();
+        MatMul::nt().accumulate().run_into(&a, &b, &mut c1);
+        super::super::gemm_nt_into(&a, &b, &mut c2);
+        assert_eq!(bits(&c1), bits(&c2));
+        // overwrite ignores the existing contents
+        let mut c3 = Matrix::from_fn(9, 7, |_, _| 1e9);
+        MatMul::nt().run_into(&a, &b, &mut c3);
+        assert_eq!(bits(&c3), bits(&gemm_nt(&a, &b)));
+    }
+
+    #[test]
+    fn lower_run_into_leaves_strict_upper_alone_when_accumulating() {
+        let a = Matrix::from_fn(40, 21, |i, j| ((i * 21 + j) as f64 * 0.23).sin());
+        let mut acc = Matrix::from_fn(21, 21, |i, j| if j > i { 7.5 } else { 0.0 });
+        MatMul::tn().accumulate().lower().run_into(&a, &a, &mut acc);
+        let mut reference = Matrix::zeros(21, 21);
+        syrk_tn_into(&a, &mut reference);
+        for i in 0..21 {
+            for j in 0..21 {
+                if j > i {
+                    assert_eq!(acc.get(i, j), 7.5, "strict upper touched at ({i},{j})");
+                } else {
+                    assert_eq!(acc.get(i, j).to_bits(), reference.get(i, j).to_bits());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn slice_form_matches_legacy_acc() {
+        let a = Matrix::from_fn(13, 29, |i, j| ((i * 29 + j) % 7) as f64 - 3.0);
+        let b = Matrix::from_fn(11, 29, |i, j| ((i * 11 + j) % 5) as f64 - 2.0);
+        let mut c1 = vec![0.25; 13 * 11];
+        let mut c2 = c1.clone();
+        MatMul::nt().accumulate().run_rows_into(a.as_slice(), b.as_slice(), 29, &mut c1, 11);
+        gemm_nt_acc(a.as_slice(), b.as_slice(), 29, &mut c2, 11);
+        let b1: Vec<u64> = c1.iter().map(|v| v.to_bits()).collect();
+        let b2: Vec<u64> = c2.iter().map(|v| v.to_bits()).collect();
+        assert_eq!(b1, b2);
+    }
+
+    #[test]
+    #[should_panic(expected = "symmetric product")]
+    fn lower_rejects_distinct_operands() {
+        let a = Matrix::from_fn(4, 3, |i, j| (i + j) as f64);
+        let b = a.clone();
+        let _ = MatMul::nt().lower().run(&a, &b);
+    }
+}

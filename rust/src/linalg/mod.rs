@@ -8,22 +8,37 @@
 //! Performance-critical routines ([`gemm`], [`cholesky`],
 //! [`solve_lower_matrix`]) are cache-blocked and register-blocked; see
 //! `EXPERIMENTS.md §Perf` for the measured iteration log. GEMM, the
-//! symmetric rank-k updates ([`syrk`], [`syrk_tn`]), the matvecs, the
-//! matrix triangular solves **and the blocked Cholesky factorization
+//! symmetric rank-k updates ([`syrk`], [`MatMul::lower`]), the matvecs,
+//! the matrix triangular solves **and the blocked Cholesky factorization
 //! itself** run data-parallel over fixed output blocks on the shared
 //! [`crate::util::pool`] — partitioning is independent of the thread
 //! count, so parallel results are bit-identical to the serial path.
+//!
+//! The register micro-kernels under all of these (4×8 GEMM tiles, dots,
+//! axpys, the Gaussian exp row pass) are resolved once at startup by
+//! [`dispatch`] — scalar, or AVX2+FMA when the host supports it
+//! (`BLESS_ISA` overrides) — so results may vary **by ISA** (accuracy-
+//! gated against scalar) but never by thread count. Matrix products are
+//! described by the typed [`MatMul`] facade; the historical free
+//! functions (`gemm_nt`, `syrk_tn`, …) remain as thin deprecated
+//! wrappers over the same engines.
+
+pub mod dispatch;
 
 mod chol;
 mod gemm;
+mod matmul;
 mod matrix;
 mod triangular;
 
 pub use chol::{cholesky, cholesky_in_place, cholesky_jittered, cholesky_take, CholeskyFactor};
+pub use dispatch::{active_isa, kernels, set_isa, set_isa_from_str, Isa, MicroKernels};
+#[allow(deprecated)]
 pub use gemm::{
     column_sq_norms, gemm, gemm_into, gemm_nt, gemm_nt_acc, gemm_nt_into, gemm_tn, matvec,
     matvec_into, matvec_t, matvec_t_acc, syrk, syrk_tn, syrk_tn_into, syrk_tn_of_lower,
 };
+pub use matmul::{MatMul, Transpose, Triangle};
 pub use matrix::Matrix;
 pub use triangular::{
     solve_llt_matrix, solve_lower, solve_lower_matrix, solve_upper, solve_upper_from_lower,

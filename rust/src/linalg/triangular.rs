@@ -19,11 +19,12 @@ pub fn solve_lower(l: &Matrix, b: &[f64]) -> Vec<f64> {
     let n = l.rows();
     assert_eq!(l.cols(), n);
     assert_eq!(b.len(), n);
+    let kern = super::dispatch::kernels();
     let ld = l.as_slice();
     let mut x = vec![0.0; n];
     for i in 0..n {
         let row = &ld[i * n..i * n + i];
-        let s = super::dot(row, &x[..i]);
+        let s = (kern.dot)(row, &x[..i]);
         x[i] = (b[i] - s) / ld[i * n + i];
     }
     x
@@ -34,11 +35,12 @@ pub fn solve_upper(u: &Matrix, b: &[f64]) -> Vec<f64> {
     let n = u.rows();
     assert_eq!(u.cols(), n);
     assert_eq!(b.len(), n);
+    let kern = super::dispatch::kernels();
     let ud = u.as_slice();
     let mut x = vec![0.0; n];
     for i in (0..n).rev() {
         let row = &ud[i * n + i + 1..(i + 1) * n];
-        let s = super::dot(row, &x[i + 1..]);
+        let s = (kern.dot)(row, &x[i + 1..]);
         x[i] = (b[i] - s) / ud[i * n + i];
     }
     x
@@ -50,6 +52,7 @@ pub fn solve_upper_from_lower(l: &Matrix, b: &[f64]) -> Vec<f64> {
     let n = l.rows();
     assert_eq!(l.cols(), n);
     assert_eq!(b.len(), n);
+    let kern = super::dispatch::kernels();
     let mut x = b.to_vec();
     let ld = l.as_slice();
     for i in (0..n).rev() {
@@ -57,9 +60,7 @@ pub fn solve_upper_from_lower(l: &Matrix, b: &[f64]) -> Vec<f64> {
         x[i] = xi;
         // propagate: x[j] -= L[i][j] * xi for j < i  (column i of Lᵀ)
         let row = &ld[i * n..i * n + i];
-        for (xj, lij) in x[..i].iter_mut().zip(row.iter()) {
-            *xj -= lij * xi;
-        }
+        (kern.axpy)(-xi, row, &mut x[..i]);
     }
     x
 }
@@ -167,6 +168,7 @@ fn solve_lower_in_place(l: &Matrix, xd: &mut [f64], ncols: usize) {
     let n = l.rows();
     assert_eq!(l.cols(), n);
     assert_eq!(xd.len(), n * ncols);
+    let kern = super::dispatch::kernels();
     let ld = l.as_slice();
     const PB: usize = 64;
     let mut s = 0;
@@ -182,9 +184,7 @@ fn solve_lower_in_place(l: &Matrix, xd: &mut [f64], ncols: usize) {
                     continue;
                 }
                 let xp = &done[p * ncols..(p + 1) * ncols];
-                for (xi, xpv) in xrow.iter_mut().zip(xp.iter()) {
-                    *xi -= lip * xpv;
-                }
+                (kern.axpy)(-lip, xp, xrow);
             }
             let inv = 1.0 / ld[i * n + i];
             for v in xrow.iter_mut() {
@@ -207,9 +207,7 @@ fn solve_lower_in_place(l: &Matrix, xd: &mut [f64], ncols: usize) {
                         continue;
                     }
                     let xrow = &mut rest[base + r * ncols..base + (r + 1) * ncols];
-                    for (xi, xpv) in xrow.iter_mut().zip(xp.iter()) {
-                        *xi -= lip * xpv;
-                    }
+                    (kern.axpy)(-lip, xp, xrow);
                 }
             }
             i += rows;
@@ -227,6 +225,7 @@ fn solve_upper_from_lower_in_place(l: &Matrix, xd: &mut [f64], ncols: usize) {
     let n = l.rows();
     assert_eq!(l.cols(), n);
     assert_eq!(xd.len(), n * ncols);
+    let kern = super::dispatch::kernels();
     let ld = l.as_slice();
     const PB: usize = 64;
     let mut e = n;
@@ -244,9 +243,7 @@ fn solve_upper_from_lower_in_place(l: &Matrix, xd: &mut [f64], ncols: usize) {
                     continue;
                 }
                 let xp = &high[(p - i - 1) * ncols..(p - i) * ncols];
-                for (xv, xpv) in xrow.iter_mut().zip(xp.iter()) {
-                    *xv -= lpi * xpv;
-                }
+                (kern.axpy)(-lpi, xp, xrow);
             }
             let inv = 1.0 / ld[i * n + i];
             for v in xrow.iter_mut() {
@@ -270,9 +267,7 @@ fn solve_upper_from_lower_in_place(l: &Matrix, xd: &mut [f64], ncols: usize) {
                             continue;
                         }
                         let xrow = &mut head[(j + r) * ncols..(j + r + 1) * ncols];
-                        for (xv, xpv) in xrow.iter_mut().zip(xp.iter()) {
-                            *xv -= lpj * xpv;
-                        }
+                        (kern.axpy)(-lpj, xp, xrow);
                     }
                 }
                 j += rows;

@@ -39,6 +39,13 @@ fn main() -> anyhow::Result<()> {
     // Default (0) = all available cores; results are bit-identical at
     // any thread count.
     bless::util::pool::set_threads(args.get_usize("threads", 0));
+    // SIMD backend for the linalg micro-kernels: --isa scalar|avx2|auto
+    // beats the BLESS_ISA env var, which beats auto-detection. Results
+    // may differ by ISA within the documented accuracy gates, never by
+    // thread count.
+    if let Some(isa) = args.get("isa") {
+        bless::linalg::set_isa_from_str(isa).map_err(|e| anyhow::anyhow!("--isa: {e}"))?;
+    }
     let cmd = args.pos(0).unwrap_or("help").to_string();
     match cmd.as_str() {
         "fig1" => cmd_fig1(&args),
@@ -90,6 +97,10 @@ repro — BLESS (NeurIPS 2018) reproduction CLI
 common flags:  --n --lambda --sigma --seed --reps --engine native|xla|auto
                --threads N (compute threadpool width; default = all cores;
                output is bit-identical at any N)
+               --isa scalar|avx2|auto (linalg micro-kernel backend; also
+               the BLESS_ISA env var; default auto-detects AVX2+FMA —
+               results may differ by ISA within tested accuracy gates,
+               never by thread count)
                --csv <path> (also save the result table as CSV)
 train flags:   --dataset susy|higgs --lambda-bless --lambda-falkon --iters --save
                --mem-budget MB (K_nM panel-cache budget; cached tiles are
@@ -490,17 +501,19 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
             )
         })
     });
-    let cfg = ServeConfig {
-        addr: format!("{}:{}", args.get_str("host", "127.0.0.1"), args.get_usize("port", 7878)),
-        workers: args.get_usize("workers", 2),
-        max_batch: args.get_usize("max-batch", 64),
-        linger: std::time::Duration::from_micros(args.get_u64("linger-us", 2_000)),
-        cache_capacity: args.get_usize("cache", 1024),
-        cache_quant: args.get_f64("cache-quant", 1e-9),
-        max_queue: args.get_usize("max-queue", 1024),
-        threads: args.get_usize("threads", 0),
-        metrics_addr,
-    };
+    let mut builder = ServeConfig::builder()
+        .addr(format!("{}:{}", args.get_str("host", "127.0.0.1"), args.get_usize("port", 7878)))
+        .workers(args.get_usize("workers", 2))
+        .max_batch(args.get_usize("max-batch", 64))
+        .linger(std::time::Duration::from_micros(args.get_u64("linger-us", 2_000)))
+        .cache_capacity(args.get_usize("cache", 1024))
+        .cache_quant(args.get_f64("cache-quant", 1e-9))
+        .max_queue(args.get_usize("max-queue", 1024))
+        .threads(args.get_usize("threads", 0));
+    if let Some(addr) = metrics_addr {
+        builder = builder.metrics_addr(addr);
+    }
+    let cfg = builder.build()?;
     for spec in &specs {
         println!(
             "model {:?}: M={} d={} ({})",

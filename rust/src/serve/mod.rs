@@ -35,12 +35,19 @@
 //! Predict requests carry an optional `"model"` name
 //! (`{"id":1,"model":"higgs-v2","x":[…]}`); with a single loaded model
 //! the name may be omitted. The `admin` verb manages the registry at
-//! run time:
+//! run time — typed as [`AdminRequest`]/[`AdminResponse`] on the Rust
+//! side ([`Client::admin`] plus per-verb sugar):
 //!
 //! ```text
 //! → {"op":"admin","cmd":"list"}
 //! → {"op":"admin","cmd":"reload","model":"higgs-v2","path":"v3.bin"}
+//! → {"op":"admin","cmd":"add","model":"mnist","path":"mnist.bin"}
+//! → {"op":"admin","cmd":"remove","model":"mnist"}
 //! ```
+//!
+//! `add` loads the artifact, registers the model and spawns its batch
+//! queue + worker pool; `remove` retires them (queued requests drain,
+//! then the workers exit). Both serialize against shutdown.
 //!
 //! Reload loads the artifact (either encoding), builds the new predictor
 //! off-lock, and swaps it atomically: engine workers snapshot the
@@ -104,6 +111,8 @@ pub use batcher::{BatchQueue, PredictJob, Push};
 pub use cache::PredictionCache;
 pub use codec::Format;
 pub use model_store::{ModelArtifact, Predictor, FORMAT, VERSION};
-pub use protocol::{Request, StatsSnapshot};
+pub use protocol::{AdminRequest, AdminResponse, ModelInfo, Request, StatsSnapshot};
 pub use registry::{ModelEntry, ModelSpec, ModelStats, Registry};
-pub use server::{start, start_registry, Client, RetryPolicy, ServeConfig, ServerHandle};
+pub use server::{
+    start, start_registry, Client, RetryPolicy, ServeConfig, ServeConfigBuilder, ServerHandle,
+};

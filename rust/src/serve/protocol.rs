@@ -15,11 +15,19 @@
 //! ← {"models":[{"name":"higgs-v2","m":2000,"d":28,"version":1},…]}
 //! → {"op":"admin","cmd":"reload","model":"higgs-v2","path":"new.bin"}
 //! ← {"ok":true,"model":"higgs-v2","m":2500,"d":28,"version":2}
+//! → {"op":"admin","cmd":"add","model":"new","path":"new.bin"}
+//! ← {"ok":true,"model":"new","m":2500,"d":28,"version":1}
+//! → {"op":"admin","cmd":"remove","model":"old"}
+//! ← {"ok":true,"model":"old","removed":true}
 //! → {"op":"ping"}                            liveness
 //! ← {"ok":true}
 //! → {"op":"shutdown"}                        graceful stop
 //! ← {"ok":true}
 //! ```
+//!
+//! Client-side, the administrative surface is typed: build an
+//! [`AdminRequest`], get an [`AdminResponse`] back — the JSON above is
+//! the wire encoding those enums serialize to and parse from.
 //!
 //! Malformed lines get `{"error":"…","code":"…"}` and the connection
 //! stays open. The `code` field is machine-readable: `bad_request`,
@@ -54,16 +62,216 @@ pub enum Request {
     Ping,
     /// Graceful server stop.
     Shutdown,
+    /// Registry administration — see [`AdminRequest`] for the verbs.
+    Admin(AdminRequest),
+}
+
+/// A typed administrative request. One enum covers every verb that
+/// manages or inspects the registry; [`Client::admin`] sends any of
+/// them and returns the matching [`AdminResponse`] variant.
+///
+/// [`Client::admin`]: crate::serve::Client::admin
+#[derive(Clone, Debug, PartialEq)]
+pub enum AdminRequest {
     /// Hot-reload a model's artifact, atomically swapping its predictor
     /// (from `path` when given, else from the model's recorded source).
-    AdminReload {
+    Reload {
         /// Which registry entry to swap.
         model: String,
         /// Optional new artifact path (JSON or binary, auto-detected).
         path: Option<String>,
     },
     /// List the loaded models with shape, version and traffic counters.
-    AdminList,
+    List,
+    /// Load an artifact from disk and register it under a new name,
+    /// spawning its worker pool — the registry grows at run time.
+    Add {
+        /// New registry name (must not collide with a loaded model).
+        model: String,
+        /// Artifact path (JSON or binary, auto-detected).
+        path: String,
+    },
+    /// Unregister a model: its queue is closed (in-flight work drains),
+    /// new requests for the name get `unknown_model`.
+    Remove {
+        /// Which registry entry to drop.
+        model: String,
+    },
+    /// Fetch counters — aggregate, or one model's when `model` is set.
+    /// (Rides the `stats` wire op, not the `admin` one.)
+    Stats {
+        /// Restrict to one model.
+        model: Option<String>,
+    },
+}
+
+impl From<AdminRequest> for Request {
+    fn from(req: AdminRequest) -> Request {
+        match req {
+            // stats predates the admin verb family and keeps its own
+            // wire op for compatibility
+            AdminRequest::Stats { model } => Request::Stats { model },
+            other => Request::Admin(other),
+        }
+    }
+}
+
+/// One model's row in the [`AdminResponse::Models`] listing.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct ModelInfo {
+    /// Registry name.
+    pub name: String,
+    /// Number of centers M.
+    pub m: usize,
+    /// Feature dimension d.
+    pub d: usize,
+    /// Monotone model version (1 at load, +1 per reload).
+    pub version: u64,
+    /// Predict requests routed to this model.
+    pub requests: u64,
+    /// Requests shed by its queue-depth cap.
+    pub shed: u64,
+}
+
+impl ModelInfo {
+    fn to_json(&self) -> Json {
+        let mut obj = BTreeMap::new();
+        obj.insert("name".to_string(), Json::Str(self.name.clone()));
+        obj.insert("m".to_string(), Json::Num(self.m as f64));
+        obj.insert("d".to_string(), Json::Num(self.d as f64));
+        obj.insert("version".to_string(), Json::Num(self.version as f64));
+        obj.insert("requests".to_string(), Json::Num(self.requests as f64));
+        obj.insert("shed".to_string(), Json::Num(self.shed as f64));
+        Json::Obj(obj)
+    }
+
+    fn from_json(j: &Json) -> anyhow::Result<ModelInfo> {
+        let name = j
+            .get("name")
+            .and_then(|v| v.as_str())
+            .ok_or_else(|| anyhow::anyhow!("model entry missing \"name\""))?
+            .to_string();
+        let num = |k: &str| j.get(k).and_then(|v| v.as_f64()).unwrap_or(0.0) as u64;
+        Ok(ModelInfo {
+            name,
+            m: num("m") as usize,
+            d: num("d") as usize,
+            version: num("version"),
+            requests: num("requests"),
+            shed: num("shed"),
+        })
+    }
+}
+
+/// The typed reply to an [`AdminRequest`]. The server serializes these
+/// with [`to_line`](Self::to_line); the client recovers them with
+/// [`parse_for`](Self::parse_for) (the expected variant depends on the
+/// request sent, and error lines surface as `Err` carrying the wire
+/// `code` in square brackets).
+#[derive(Clone, Debug, PartialEq)]
+pub enum AdminResponse {
+    /// A predictor was (re)loaded: the model's shape and new version
+    /// (`1` for a fresh [`AdminRequest::Add`]).
+    Swapped {
+        /// The affected model.
+        model: String,
+        /// Number of centers M.
+        m: usize,
+        /// Feature dimension d.
+        d: usize,
+        /// Version after the swap.
+        version: u64,
+    },
+    /// The registry listing, sorted by name.
+    Models(Vec<ModelInfo>),
+    /// A model was unregistered.
+    Removed {
+        /// The dropped model.
+        model: String,
+    },
+    /// Counters, for [`AdminRequest::Stats`].
+    Stats(StatsSnapshot),
+}
+
+impl AdminResponse {
+    /// Serialize to the wire line (no trailing newline).
+    pub fn to_line(&self) -> String {
+        match self {
+            AdminResponse::Swapped { model, m, d, version } => {
+                let mut obj = BTreeMap::new();
+                obj.insert("ok".to_string(), Json::Bool(true));
+                obj.insert("model".to_string(), Json::Str(model.clone()));
+                obj.insert("m".to_string(), Json::Num(*m as f64));
+                obj.insert("d".to_string(), Json::Num(*d as f64));
+                obj.insert("version".to_string(), Json::Num(*version as f64));
+                Json::Obj(obj).to_string()
+            }
+            AdminResponse::Models(infos) => {
+                let mut obj = BTreeMap::new();
+                obj.insert(
+                    "models".to_string(),
+                    Json::Arr(infos.iter().map(ModelInfo::to_json).collect()),
+                );
+                Json::Obj(obj).to_string()
+            }
+            AdminResponse::Removed { model } => {
+                let mut obj = BTreeMap::new();
+                obj.insert("ok".to_string(), Json::Bool(true));
+                obj.insert("model".to_string(), Json::Str(model.clone()));
+                obj.insert("removed".to_string(), Json::Bool(true));
+                Json::Obj(obj).to_string()
+            }
+            AdminResponse::Stats(s) => s.to_line(),
+        }
+    }
+
+    /// Parse the reply to `req` (client side). Structured error lines
+    /// become `Err("admin request failed [code]: …")`.
+    pub fn parse_for(req: &AdminRequest, line: &str) -> anyhow::Result<AdminResponse> {
+        let j = Json::parse(line)?;
+        if let Some(err) = j.get("error").and_then(|v| v.as_str()) {
+            let code = j.get("code").and_then(|v| v.as_str()).unwrap_or("unknown");
+            anyhow::bail!("admin request failed [{code}]: {err}");
+        }
+        match req {
+            AdminRequest::Reload { .. } | AdminRequest::Add { .. } => {
+                let model = j
+                    .get("model")
+                    .and_then(|v| v.as_str())
+                    .ok_or_else(|| anyhow::anyhow!("admin response missing model: {line}"))?
+                    .to_string();
+                let num = |k: &str| j.get(k).and_then(|v| v.as_f64()).unwrap_or(0.0) as u64;
+                let version = j
+                    .get("version")
+                    .and_then(|v| v.as_f64())
+                    .map(|v| v as u64)
+                    .ok_or_else(|| anyhow::anyhow!("admin response missing version: {line}"))?;
+                Ok(AdminResponse::Swapped {
+                    model,
+                    m: num("m") as usize,
+                    d: num("d") as usize,
+                    version,
+                })
+            }
+            AdminRequest::List => {
+                let arr = j
+                    .get("models")
+                    .and_then(|v| v.as_arr())
+                    .ok_or_else(|| anyhow::anyhow!("bad admin list response: {line}"))?;
+                let infos = arr.iter().map(ModelInfo::from_json).collect::<Result<_, _>>()?;
+                Ok(AdminResponse::Models(infos))
+            }
+            AdminRequest::Remove { .. } => {
+                let model = j
+                    .get("model")
+                    .and_then(|v| v.as_str())
+                    .ok_or_else(|| anyhow::anyhow!("admin response missing model: {line}"))?
+                    .to_string();
+                Ok(AdminResponse::Removed { model })
+            }
+            AdminRequest::Stats { .. } => Ok(AdminResponse::Stats(StatsSnapshot::parse(line)?)),
+        }
+    }
 }
 
 impl Request {
@@ -83,20 +291,34 @@ impl Request {
                         .get("cmd")
                         .and_then(|v| v.as_str())
                         .ok_or_else(|| anyhow::anyhow!("admin request needs a \"cmd\""))?;
-                    match cmd {
-                        "reload" => Ok(Request::AdminReload {
-                            model: j
-                                .get("model")
-                                .and_then(|v| v.as_str())
-                                .ok_or_else(|| {
-                                    anyhow::anyhow!("admin reload needs a \"model\" name")
-                                })?
-                                .to_string(),
+                    let model = |verb: &str| {
+                        j.get("model")
+                            .and_then(|v| v.as_str())
+                            .map(str::to_string)
+                            .ok_or_else(|| {
+                                anyhow::anyhow!("admin {verb} needs a \"model\" name")
+                            })
+                    };
+                    let admin = match cmd {
+                        "reload" => AdminRequest::Reload {
+                            model: model("reload")?,
                             path: j.get("path").and_then(|v| v.as_str()).map(str::to_string),
-                        }),
-                        "list" => Ok(Request::AdminList),
+                        },
+                        "list" => AdminRequest::List,
+                        "add" => AdminRequest::Add {
+                            model: model("add")?,
+                            path: j
+                                .get("path")
+                                .and_then(|v| v.as_str())
+                                .map(str::to_string)
+                                .ok_or_else(|| {
+                                    anyhow::anyhow!("admin add needs an artifact \"path\"")
+                                })?,
+                        },
+                        "remove" => AdminRequest::Remove { model: model("remove")? },
                         other => anyhow::bail!("unknown admin cmd {other:?}"),
-                    }
+                    };
+                    Ok(Request::Admin(admin))
                 }
                 other => anyhow::bail!("unknown op {other:?}"),
             };
@@ -144,17 +366,37 @@ impl Request {
             Request::Shutdown => {
                 obj.insert("op".to_string(), Json::Str("shutdown".to_string()));
             }
-            Request::AdminReload { model, path } => {
-                obj.insert("op".to_string(), Json::Str("admin".to_string()));
-                obj.insert("cmd".to_string(), Json::Str("reload".to_string()));
-                obj.insert("model".to_string(), Json::Str(model.clone()));
-                if let Some(p) = path {
-                    obj.insert("path".to_string(), Json::Str(p.clone()));
+            Request::Admin(admin) => {
+                match admin {
+                    // stats sugar keeps its historical wire op
+                    AdminRequest::Stats { model } => {
+                        obj.insert("op".to_string(), Json::Str("stats".to_string()));
+                        if let Some(m) = model {
+                            obj.insert("model".to_string(), Json::Str(m.clone()));
+                        }
+                        return Json::Obj(obj).to_string();
+                    }
+                    AdminRequest::Reload { model, path } => {
+                        obj.insert("cmd".to_string(), Json::Str("reload".to_string()));
+                        obj.insert("model".to_string(), Json::Str(model.clone()));
+                        if let Some(p) = path {
+                            obj.insert("path".to_string(), Json::Str(p.clone()));
+                        }
+                    }
+                    AdminRequest::List => {
+                        obj.insert("cmd".to_string(), Json::Str("list".to_string()));
+                    }
+                    AdminRequest::Add { model, path } => {
+                        obj.insert("cmd".to_string(), Json::Str("add".to_string()));
+                        obj.insert("model".to_string(), Json::Str(model.clone()));
+                        obj.insert("path".to_string(), Json::Str(path.clone()));
+                    }
+                    AdminRequest::Remove { model } => {
+                        obj.insert("cmd".to_string(), Json::Str("remove".to_string()));
+                        obj.insert("model".to_string(), Json::Str(model.clone()));
+                    }
                 }
-            }
-            Request::AdminList => {
                 obj.insert("op".to_string(), Json::Str("admin".to_string()));
-                obj.insert("cmd".to_string(), Json::Str("list".to_string()));
             }
         }
         Json::Obj(obj).to_string()
@@ -354,15 +596,68 @@ mod tests {
             Request::Stats { model: Some("a".to_string()) },
             Request::Ping,
             Request::Shutdown,
-            Request::AdminReload { model: "a".to_string(), path: None },
-            Request::AdminReload {
+            Request::Admin(AdminRequest::Reload { model: "a".to_string(), path: None }),
+            Request::Admin(AdminRequest::Reload {
                 model: "a".to_string(),
                 path: Some("m.bin".to_string()),
-            },
-            Request::AdminList,
+            }),
+            Request::Admin(AdminRequest::List),
+            Request::Admin(AdminRequest::Add {
+                model: "b".to_string(),
+                path: "b.bin".to_string(),
+            }),
+            Request::Admin(AdminRequest::Remove { model: "a".to_string() }),
         ] {
             assert_eq!(Request::parse(&req.to_line()).unwrap(), req);
         }
+    }
+
+    #[test]
+    fn admin_stats_sugar_rides_the_stats_op() {
+        // the typed stats verb serializes to the historical wire op, so
+        // it parses back as Request::Stats — not Request::Admin
+        let typed: Request = AdminRequest::Stats { model: Some("a".to_string()) }.into();
+        assert_eq!(typed, Request::Stats { model: Some("a".to_string()) });
+        let line = Request::Admin(AdminRequest::Stats { model: None }).to_line();
+        assert_eq!(Request::parse(&line).unwrap(), Request::Stats { model: None });
+    }
+
+    #[test]
+    fn admin_responses_round_trip() {
+        let swapped = AdminResponse::Swapped {
+            model: "a".to_string(),
+            m: 2000,
+            d: 28,
+            version: 3,
+        };
+        let req = AdminRequest::Reload { model: "a".to_string(), path: None };
+        assert_eq!(AdminResponse::parse_for(&req, &swapped.to_line()).unwrap(), swapped);
+
+        let listing = AdminResponse::Models(vec![ModelInfo {
+            name: "a".to_string(),
+            m: 5,
+            d: 3,
+            version: 1,
+            requests: 7,
+            shed: 2,
+        }]);
+        assert_eq!(
+            AdminResponse::parse_for(&AdminRequest::List, &listing.to_line()).unwrap(),
+            listing
+        );
+
+        let removed = AdminResponse::Removed { model: "a".to_string() };
+        let req = AdminRequest::Remove { model: "a".to_string() };
+        assert_eq!(AdminResponse::parse_for(&req, &removed.to_line()).unwrap(), removed);
+
+        let stats = AdminResponse::Stats(StatsSnapshot { requests: 9, ..Default::default() });
+        let req = AdminRequest::Stats { model: None };
+        assert_eq!(AdminResponse::parse_for(&req, &stats.to_line()).unwrap(), stats);
+
+        // structured error lines surface the code in brackets
+        let err = AdminResponse::parse_for(&req, &error_response(None, "unknown_model", "nope"))
+            .unwrap_err();
+        assert!(err.to_string().contains("[unknown_model]"), "got {err}");
     }
 
     #[test]
@@ -376,6 +671,8 @@ mod tests {
         assert!(Request::parse("{\"op\":\"admin\"}").is_err());
         assert!(Request::parse("{\"op\":\"admin\",\"cmd\":\"nope\"}").is_err());
         assert!(Request::parse("{\"op\":\"admin\",\"cmd\":\"reload\"}").is_err());
+        assert!(Request::parse("{\"op\":\"admin\",\"cmd\":\"add\",\"model\":\"a\"}").is_err());
+        assert!(Request::parse("{\"op\":\"admin\",\"cmd\":\"remove\"}").is_err());
     }
 
     #[test]

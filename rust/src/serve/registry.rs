@@ -264,10 +264,20 @@ impl ModelSpec {
     }
 }
 
-/// The immutable model table: names are fixed at startup, each entry's
-/// predictor is hot-swappable.
+/// The model table. Names are seeded at startup and may grow or shrink
+/// at run time ([`add`](Self::add) / [`remove`](Self::remove), driven
+/// by the `admin add`/`admin remove` wire verbs); each entry's
+/// predictor is hot-swappable independently of the table.
 pub struct Registry {
-    models: BTreeMap<String, Arc<ModelEntry>>,
+    models: RwLock<BTreeMap<String, Arc<ModelEntry>>>,
+    /// Per-model knobs recorded at startup so dynamically added models
+    /// get the same cache and backpressure behaviour.
+    cache_capacity: usize,
+    cache_quant: f64,
+    max_queue: usize,
+    /// Set by [`close_all`](Self::close_all); fences late `add`s so no
+    /// model can join after shutdown closed every queue.
+    closed: std::sync::atomic::AtomicBool,
 }
 
 impl Registry {
@@ -279,70 +289,116 @@ impl Registry {
         max_queue: usize,
     ) -> anyhow::Result<Registry> {
         anyhow::ensure!(!specs.is_empty(), "registry needs at least one model");
-        let mut models = BTreeMap::new();
+        let registry = Registry {
+            models: RwLock::new(BTreeMap::new()),
+            cache_capacity,
+            cache_quant,
+            max_queue,
+            closed: std::sync::atomic::AtomicBool::new(false),
+        };
         for spec in specs {
-            anyhow::ensure!(!spec.name.is_empty(), "empty model name");
-            let entry = Arc::new(ModelEntry::new(
-                spec.name.clone(),
-                &spec.artifact,
-                spec.source,
-                cache_capacity,
-                cache_quant,
-                max_queue,
-            ));
-            anyhow::ensure!(
-                models.insert(spec.name.clone(), entry).is_none(),
-                "duplicate model name {:?}",
-                spec.name
-            );
+            registry.add(spec)?;
         }
-        Ok(Registry { models })
+        Ok(registry)
+    }
+
+    /// Register a new model at run time. Fails on a duplicate or empty
+    /// name, or once [`close_all`](Self::close_all) has run. Returns the
+    /// new entry so the caller can spawn its worker pool.
+    pub fn add(&self, spec: ModelSpec) -> anyhow::Result<Arc<ModelEntry>> {
+        anyhow::ensure!(!spec.name.is_empty(), "empty model name");
+        let mut models = self.models.write().unwrap();
+        // checked under the write lock: close_all takes the same lock,
+        // so an add serializes against shutdown
+        anyhow::ensure!(
+            !self.closed.load(Ordering::SeqCst),
+            "registry is shut down; cannot add {:?}",
+            spec.name
+        );
+        anyhow::ensure!(
+            !models.contains_key(&spec.name),
+            "duplicate model name {:?}",
+            spec.name
+        );
+        let entry = Arc::new(ModelEntry::new(
+            spec.name.clone(),
+            &spec.artifact,
+            spec.source,
+            self.cache_capacity,
+            self.cache_quant,
+            self.max_queue,
+        ));
+        models.insert(spec.name, Arc::clone(&entry));
+        Ok(entry)
+    }
+
+    /// Unregister a model and close its queue: in-flight jobs drain,
+    /// its workers exit, and the name immediately resolves to
+    /// `unknown model` for new requests.
+    pub fn remove(&self, name: &str) -> anyhow::Result<Arc<ModelEntry>> {
+        let entry = {
+            let mut models = self.models.write().unwrap();
+            models.remove(name).ok_or_else(|| {
+                anyhow::anyhow!(
+                    "unknown model {name:?} (loaded: {})",
+                    models.keys().cloned().collect::<Vec<_>>().join(", ")
+                )
+            })?
+        };
+        entry.queue.close();
+        Ok(entry)
     }
 
     /// Number of registered models.
     pub fn len(&self) -> usize {
-        self.models.len()
+        self.models.read().unwrap().len()
     }
 
-    /// Whether the registry is empty (never true after `new`).
+    /// Whether the registry is empty (only possible after `remove`).
     pub fn is_empty(&self) -> bool {
-        self.models.is_empty()
+        self.models.read().unwrap().is_empty()
     }
 
     /// Registered names, sorted.
     pub fn names(&self) -> Vec<String> {
-        self.models.keys().cloned().collect()
+        self.models.read().unwrap().keys().cloned().collect()
     }
 
     /// Look up a model by exact name.
-    pub fn get(&self, name: &str) -> Option<&Arc<ModelEntry>> {
-        self.models.get(name)
+    pub fn get(&self, name: &str) -> Option<Arc<ModelEntry>> {
+        self.models.read().unwrap().get(name).cloned()
     }
 
     /// All entries (cloned handles, for spawning per-model workers).
     pub fn entries(&self) -> Vec<Arc<ModelEntry>> {
-        self.models.values().cloned().collect()
+        self.models.read().unwrap().values().cloned().collect()
     }
 
     /// Route a request: an explicit name must exist; no name is allowed
     /// only when exactly one model is loaded.
-    pub fn resolve(&self, name: Option<&str>) -> anyhow::Result<&Arc<ModelEntry>> {
+    pub fn resolve(&self, name: Option<&str>) -> anyhow::Result<Arc<ModelEntry>> {
+        let models = self.models.read().unwrap();
+        let joined = || models.keys().cloned().collect::<Vec<_>>().join(", ");
         match name {
-            Some(n) => self.models.get(n).ok_or_else(|| {
-                anyhow::anyhow!("unknown model {n:?} (loaded: {})", self.names().join(", "))
-            }),
-            None if self.models.len() == 1 => Ok(self.models.values().next().unwrap()),
+            Some(n) => models
+                .get(n)
+                .cloned()
+                .ok_or_else(|| anyhow::anyhow!("unknown model {n:?} (loaded: {})", joined())),
+            None if models.len() == 1 => Ok(models.values().next().unwrap().clone()),
             None => anyhow::bail!(
                 "{} models loaded ({}); set \"model\" in the request",
-                self.models.len(),
-                self.names().join(", ")
+                models.len(),
+                joined()
             ),
         }
     }
 
-    /// Close every model queue (shutdown: drain then stop workers).
+    /// Close every model queue (shutdown: drain then stop workers) and
+    /// fence out further [`add`](Self::add)s.
     pub fn close_all(&self) {
-        for entry in self.models.values() {
+        let models = self.models.write().unwrap();
+        self.closed.store(true, Ordering::SeqCst);
+        for entry in models.values() {
             entry.queue.close();
         }
     }
@@ -355,7 +411,7 @@ impl Registry {
         let mut total = StatsSnapshot::default();
         let mut lat = HistSnapshot::default();
         let mut batch = HistSnapshot::default();
-        for entry in self.models.values() {
+        for entry in self.entries() {
             total.add(&entry.stats.snapshot());
             lat.merge(&entry.stats.latency.snapshot());
             batch.merge(&entry.stats.batch_sizes.snapshot());
@@ -465,6 +521,31 @@ mod tests {
         let (_, _, version) = entry.reload(None).unwrap();
         assert_eq!(version, 3);
         std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn add_and_remove_models_at_run_time() {
+        let reg = Registry::new(vec![spec("a", 1.0)], 0, 1e-9, 0).unwrap();
+        let entry = reg.add(spec("b", 2.0)).unwrap();
+        assert_eq!(entry.name(), "b");
+        assert_eq!(reg.names(), vec!["a".to_string(), "b".to_string()]);
+        assert!(reg.add(spec("b", 3.0)).unwrap_err().to_string().contains("duplicate"));
+
+        let removed = reg.remove("a").unwrap();
+        // the removed entry's queue is closed: new work is refused, so
+        // its workers drain and exit
+        let (tx, _rx) = std::sync::mpsc::channel();
+        assert_eq!(
+            removed.enqueue(PredictJob { x: vec![0.0; 3], reply: tx }),
+            Push::Closed
+        );
+        assert!(reg.remove("a").is_err(), "double remove must fail");
+        assert_eq!(reg.names(), vec!["b".to_string()]);
+
+        // after close_all, add is fenced out
+        reg.close_all();
+        let err = reg.add(spec("c", 1.0)).unwrap_err().to_string();
+        assert!(err.contains("shut down"), "got {err}");
     }
 
     #[test]

@@ -33,19 +33,29 @@ use crate::linalg::Matrix;
 use crate::obs::{escape_label, serve_http, HttpHandle, MetricsProvider};
 use crate::serve::batcher::{PredictJob, Push};
 use crate::serve::model_store::ModelArtifact;
-use crate::serve::protocol::{self, Request, StatsSnapshot};
+use crate::serve::protocol::{
+    self, AdminRequest, AdminResponse, ModelInfo, Request, StatsSnapshot,
+};
 use crate::serve::registry::{CacheProbe, ModelEntry, ModelSpec, ModelStats, Registry};
 use crate::util::json::Json;
 use std::collections::BTreeMap;
 use std::io::{BufRead, BufReader, BufWriter, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
+use std::path::PathBuf;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::{mpsc, Arc};
+use std::sync::{mpsc, Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 /// Server tuning knobs.
+///
+/// Construct with [`ServeConfig::builder`] — the builder validates the
+/// combination before handing back a config — or start from
+/// [`ServeConfig::default`] and override fields. The struct is
+/// `#[non_exhaustive]`: downstream crates cannot use struct literals,
+/// so new knobs can be added without breaking them.
 #[derive(Clone, Debug)]
+#[non_exhaustive]
 pub struct ServeConfig {
     /// Bind address; use port 0 for an ephemeral port (tests).
     pub addr: String,
@@ -72,8 +82,10 @@ pub struct ServeConfig {
     /// concurrency; this controls per-batch compute parallelism.
     ///
     /// Two deliberate consequences of "one global policy": (1) a
-    /// non-zero value is applied with `set_threads` and **persists after
-    /// this server stops** — the pool has no per-server scope; (2)
+    /// non-zero value is applied with `set_threads` for the server's
+    /// lifetime — the prior setting is snapshotted at start and restored
+    /// when the handle shuts down, joins or drops, so a stopped server
+    /// no longer leaks its width into later training runs; (2)
     /// concurrent dispatches from independent worker threads are not
     /// coordinated, so keep `workers × threads` within the machine's
     /// core budget when batches are large enough to dispatch (> 64
@@ -101,6 +113,108 @@ impl Default for ServeConfig {
     }
 }
 
+impl ServeConfig {
+    /// A builder seeded with the defaults; chain setters and finish with
+    /// [`ServeConfigBuilder::build`], which validates the combination.
+    pub fn builder() -> ServeConfigBuilder {
+        ServeConfigBuilder { cfg: ServeConfig::default() }
+    }
+}
+
+/// Fluent, validating constructor for [`ServeConfig`] — the only way
+/// for downstream crates to set fields the struct gains later (the
+/// config is `#[non_exhaustive]`).
+///
+/// ```
+/// use bless::serve::ServeConfig;
+/// use std::time::Duration;
+/// let cfg = ServeConfig::builder()
+///     .addr("127.0.0.1:0")
+///     .workers(1)
+///     .linger(Duration::from_millis(1))
+///     .build()
+///     .unwrap();
+/// assert_eq!(cfg.workers, 1);
+/// assert!(ServeConfig::builder().max_batch(0).build().is_err());
+/// ```
+#[derive(Clone, Debug)]
+pub struct ServeConfigBuilder {
+    cfg: ServeConfig,
+}
+
+impl ServeConfigBuilder {
+    /// Bind address (port 0 for an ephemeral port).
+    pub fn addr(mut self, addr: impl Into<String>) -> Self {
+        self.cfg.addr = addr.into();
+        self
+    }
+
+    /// Engine worker threads per model.
+    pub fn workers(mut self, n: usize) -> Self {
+        self.cfg.workers = n;
+        self
+    }
+
+    /// Largest coalesced batch per GEMM.
+    pub fn max_batch(mut self, n: usize) -> Self {
+        self.cfg.max_batch = n;
+        self
+    }
+
+    /// Straggler linger window per batch.
+    pub fn linger(mut self, d: Duration) -> Self {
+        self.cfg.linger = d;
+        self
+    }
+
+    /// Prediction-cache capacity in entries per model (0 disables).
+    pub fn cache_capacity(mut self, n: usize) -> Self {
+        self.cfg.cache_capacity = n;
+        self
+    }
+
+    /// Cache quantization step for query coordinates.
+    pub fn cache_quant(mut self, q: f64) -> Self {
+        self.cfg.cache_quant = q;
+        self
+    }
+
+    /// Queue-depth cap per model (0 = unbounded).
+    pub fn max_queue(mut self, n: usize) -> Self {
+        self.cfg.max_queue = n;
+        self
+    }
+
+    /// Process-wide compute-pool width (0 leaves the global setting).
+    pub fn threads(mut self, n: usize) -> Self {
+        self.cfg.threads = n;
+        self
+    }
+
+    /// Bind address for the HTTP observability listener.
+    pub fn metrics_addr(mut self, addr: impl Into<String>) -> Self {
+        self.cfg.metrics_addr = Some(addr.into());
+        self
+    }
+
+    /// Validate the combination and hand back the config.
+    pub fn build(self) -> anyhow::Result<ServeConfig> {
+        let cfg = self.cfg;
+        anyhow::ensure!(!cfg.addr.is_empty(), "addr must not be empty");
+        anyhow::ensure!(cfg.workers >= 1, "workers must be at least 1");
+        anyhow::ensure!(cfg.max_batch >= 1, "max_batch must be at least 1");
+        anyhow::ensure!(
+            cfg.cache_quant.is_finite() && cfg.cache_quant > 0.0,
+            "cache_quant must be a positive finite number (got {})",
+            cfg.cache_quant
+        );
+        if let Some(addr) = &cfg.metrics_addr {
+            anyhow::ensure!(!addr.is_empty(), "metrics_addr must not be empty when set");
+        }
+        Ok(cfg)
+    }
+}
+
 /// State shared by the accept loop, connection threads and workers.
 struct Shared {
     registry: Registry,
@@ -108,6 +222,14 @@ struct Shared {
     conn_errors: AtomicU64,
     shutdown: AtomicBool,
     addr: SocketAddr,
+    /// Per-model batching knobs, kept so `admin add` spawns worker
+    /// pools identical to the ones started at boot.
+    workers_per_model: usize,
+    max_batch: usize,
+    linger: Duration,
+    /// Engine worker threads — boot-time pools plus any spawned for
+    /// dynamically added models; joined by [`ServerHandle`].
+    workers: Mutex<Vec<JoinHandle<()>>>,
 }
 
 impl Shared {
@@ -258,8 +380,10 @@ impl MetricsProvider for MetricsBridge {
 pub struct ServerHandle {
     shared: Arc<Shared>,
     accept: Option<JoinHandle<()>>,
-    workers: Vec<JoinHandle<()>>,
     metrics: Option<HttpHandle>,
+    /// The pool width configured before this server applied
+    /// [`ServeConfig::threads`]; restored when the handle goes away.
+    prev_threads: Option<usize>,
 }
 
 impl ServerHandle {
@@ -309,13 +433,22 @@ impl ServerHandle {
         if let Some(a) = self.accept.take() {
             let _ = a.join();
         }
-        for w in self.workers.drain(..) {
+        // take the handles out before joining: a connection thread
+        // servicing `admin add` locks the same list to register new
+        // workers, and must never find us holding it across a join
+        let drained: Vec<_> = self.shared.workers.lock().unwrap().drain(..).collect();
+        for w in drained {
             let _ = w.join();
         }
         // only after the prediction side is down: the foreground `join`
         // path must keep scrapes answering while the server runs
         if let Some(mut m) = self.metrics.take() {
             m.stop();
+        }
+        // hand the compute pool back the way we found it, so a stopped
+        // server's `threads` setting does not leak into later training
+        if let Some(prev) = self.prev_threads.take() {
+            crate::util::pool::set_threads(prev);
         }
     }
 }
@@ -343,11 +476,14 @@ pub fn start_registry(
     cfg: &ServeConfig,
 ) -> anyhow::Result<ServerHandle> {
     anyhow::ensure!(cfg.max_batch >= 1, "max_batch must be at least 1");
-    if cfg.threads > 0 {
+    let prev_threads = (cfg.threads > 0).then(|| {
         // serve passes its compute budget to the shared pool so the
-        // whole process runs one thread policy
+        // whole process runs one thread policy; snapshot the raw prior
+        // setting (0 = "default") so shutdown can restore it exactly
+        let prev = crate::util::pool::configured_threads();
         crate::util::pool::set_threads(cfg.threads);
-    }
+        prev
+    });
     let registry = Registry::new(models, cfg.cache_capacity, cfg.cache_quant, cfg.max_queue)?;
     let listener = TcpListener::bind(&cfg.addr)
         .map_err(|e| anyhow::anyhow!("binding {}: {e}", cfg.addr))?;
@@ -357,6 +493,10 @@ pub fn start_registry(
         conn_errors: AtomicU64::new(0),
         shutdown: AtomicBool::new(false),
         addr,
+        workers_per_model: cfg.workers.max(1),
+        max_batch: cfg.max_batch,
+        linger: cfg.linger,
+        workers: Mutex::new(Vec::new()),
     });
 
     // bind the observability listener before spawning workers so a bad
@@ -369,20 +509,26 @@ pub fn start_registry(
         None => None,
     };
 
-    let mut workers = Vec::new();
     for entry in shared.registry.entries() {
-        for _ in 0..cfg.workers.max(1) {
-            let entry = Arc::clone(&entry);
-            let (max_batch, linger) = (cfg.max_batch, cfg.linger);
-            workers.push(std::thread::spawn(move || {
-                worker_loop(&entry, max_batch, linger);
-            }));
-        }
+        spawn_model_workers(&shared, &entry);
     }
 
     let accept_shared = Arc::clone(&shared);
     let accept = std::thread::spawn(move || accept_loop(listener, &accept_shared));
-    Ok(ServerHandle { shared, accept: Some(accept), workers, metrics })
+    Ok(ServerHandle { shared, accept: Some(accept), metrics, prev_threads })
+}
+
+/// Spawn one model's engine worker pool and register the handles for
+/// the eventual join — shared by boot and `admin add`.
+fn spawn_model_workers(shared: &Shared, entry: &Arc<ModelEntry>) {
+    let mut workers = shared.workers.lock().unwrap();
+    for _ in 0..shared.workers_per_model {
+        let entry = Arc::clone(entry);
+        let (max_batch, linger) = (shared.max_batch, shared.linger);
+        workers.push(std::thread::spawn(move || {
+            worker_loop(&entry, max_batch, linger);
+        }));
+    }
 }
 
 fn worker_loop(entry: &ModelEntry, max_batch: usize, linger: Duration) {
@@ -461,10 +607,17 @@ fn handle_conn(stream: TcpStream, shared: &Shared) -> std::io::Result<()> {
             }
             Ok(Request::Ping) => protocol::ok_response(),
             Ok(Request::Stats { model }) => handle_stats(shared, model.as_deref()),
-            Ok(Request::AdminList) => admin_list_response(shared),
-            Ok(Request::AdminReload { model, path }) => {
-                handle_reload(shared, &model, path.as_deref())
-            }
+            Ok(Request::Admin(admin)) => match admin {
+                AdminRequest::List => admin_list_response(shared),
+                AdminRequest::Reload { model, path } => {
+                    handle_reload(shared, &model, path.as_deref())
+                }
+                AdminRequest::Add { model, path } => handle_add(shared, &model, &path),
+                AdminRequest::Remove { model } => handle_remove(shared, &model),
+                // stats sugar never parses as an admin op, but the typed
+                // enum admits it — answer it the same as the stats verb
+                AdminRequest::Stats { model } => handle_stats(shared, model.as_deref()),
+            },
             Ok(Request::Shutdown) => {
                 // flip the flag before acking so a client that saw the
                 // ack observes is_shut_down() == true
@@ -497,25 +650,23 @@ fn handle_stats(shared: &Shared, model: Option<&str>) -> String {
 }
 
 fn admin_list_response(shared: &Shared) -> String {
-    let models: Vec<Json> = shared
+    let models: Vec<ModelInfo> = shared
         .registry
         .entries()
         .iter()
         .map(|entry| {
             let stats = entry.stats.snapshot();
-            let mut obj = BTreeMap::new();
-            obj.insert("name".to_string(), Json::Str(entry.name().to_string()));
-            obj.insert("m".to_string(), Json::Num(entry.m() as f64));
-            obj.insert("d".to_string(), Json::Num(entry.dim() as f64));
-            obj.insert("version".to_string(), Json::Num(entry.version() as f64));
-            obj.insert("requests".to_string(), Json::Num(stats.requests as f64));
-            obj.insert("shed".to_string(), Json::Num(stats.shed as f64));
-            Json::Obj(obj)
+            ModelInfo {
+                name: entry.name().to_string(),
+                m: entry.m(),
+                d: entry.dim(),
+                version: entry.version(),
+                requests: stats.requests,
+                shed: stats.shed,
+            }
         })
         .collect();
-    let mut obj = BTreeMap::new();
-    obj.insert("models".to_string(), Json::Arr(models));
-    Json::Obj(obj).to_string()
+    AdminResponse::Models(models).to_line()
 }
 
 fn handle_reload(shared: &Shared, model: &str, path: Option<&str>) -> String {
@@ -533,17 +684,54 @@ fn handle_reload(shared: &Shared, model: &str, path: Option<&str>) -> String {
     };
     match entry.reload(path.map(std::path::Path::new)) {
         Ok((m, d, version)) => {
-            let mut obj = BTreeMap::new();
-            obj.insert("ok".to_string(), Json::Bool(true));
-            obj.insert("model".to_string(), Json::Str(model.to_string()));
-            obj.insert("m".to_string(), Json::Num(m as f64));
-            obj.insert("d".to_string(), Json::Num(d as f64));
-            obj.insert("version".to_string(), Json::Num(version as f64));
-            Json::Obj(obj).to_string()
+            AdminResponse::Swapped { model: model.to_string(), m, d, version }.to_line()
         }
         Err(e) => {
             shared.conn_errors.fetch_add(1, Ordering::Relaxed);
             protocol::error_response(None, "reload_failed", &e.to_string())
+        }
+    }
+}
+
+fn handle_add(shared: &Shared, model: &str, path: &str) -> String {
+    let artifact = match ModelArtifact::load(path) {
+        Ok(a) => a,
+        Err(e) => {
+            shared.conn_errors.fetch_add(1, Ordering::Relaxed);
+            return protocol::error_response(None, "add_failed", &e.to_string());
+        }
+    };
+    let spec = ModelSpec {
+        name: model.to_string(),
+        artifact,
+        source: Some(PathBuf::from(path)),
+    };
+    match shared.registry.add(spec) {
+        Ok(entry) => {
+            // a shutdown racing in between add and here closes the new
+            // entry's queue via close_all, so these workers exit at once
+            spawn_model_workers(shared, &entry);
+            AdminResponse::Swapped {
+                model: model.to_string(),
+                m: entry.m(),
+                d: entry.dim(),
+                version: entry.version(),
+            }
+            .to_line()
+        }
+        Err(e) => {
+            shared.conn_errors.fetch_add(1, Ordering::Relaxed);
+            protocol::error_response(None, "add_failed", &e.to_string())
+        }
+    }
+}
+
+fn handle_remove(shared: &Shared, model: &str) -> String {
+    match shared.registry.remove(model) {
+        Ok(_entry) => AdminResponse::Removed { model: model.to_string() }.to_line(),
+        Err(e) => {
+            shared.conn_errors.fetch_add(1, Ordering::Relaxed);
+            protocol::error_response(None, "unknown_model", &e.to_string())
         }
     }
 }
@@ -733,51 +921,70 @@ impl Client {
         )
     }
 
+    /// Send any typed [`AdminRequest`] and get the matching
+    /// [`AdminResponse`] back — the single entry point every
+    /// administrative convenience method below routes through.
+    pub fn admin(&mut self, req: AdminRequest) -> anyhow::Result<AdminResponse> {
+        let line = self.round_trip(&Request::from(req.clone()).to_line())?;
+        AdminResponse::parse_for(&req, &line)
+    }
+
     /// Fetch aggregate server counters.
     pub fn stats(&mut self) -> anyhow::Result<StatsSnapshot> {
-        let line = self.round_trip(&Request::Stats { model: None }.to_line())?;
-        StatsSnapshot::parse(&line)
+        match self.admin(AdminRequest::Stats { model: None })? {
+            AdminResponse::Stats(s) => Ok(s),
+            other => anyhow::bail!("unexpected stats response: {other:?}"),
+        }
     }
 
     /// Fetch one model's counters.
     pub fn stats_for(&mut self, model: &str) -> anyhow::Result<StatsSnapshot> {
-        let line =
-            self.round_trip(&Request::Stats { model: Some(model.to_string()) }.to_line())?;
-        anyhow::ensure!(!line.contains("\"error\""), "stats failed: {line}");
-        StatsSnapshot::parse(&line)
+        match self.admin(AdminRequest::Stats { model: Some(model.to_string()) })? {
+            AdminResponse::Stats(s) => Ok(s),
+            other => anyhow::bail!("unexpected stats response: {other:?}"),
+        }
     }
 
     /// Hot-reload a model (optionally from a new artifact path); returns
     /// the model's new version counter.
     pub fn admin_reload(&mut self, model: &str, path: Option<&str>) -> anyhow::Result<u64> {
-        let req = Request::AdminReload {
+        let req = AdminRequest::Reload {
             model: model.to_string(),
             path: path.map(str::to_string),
         };
-        let line = self.round_trip(&req.to_line())?;
-        let j = Json::parse(&line)?;
-        if let Some(err) = j.get("error").and_then(|v| v.as_str()) {
-            let code = j.get("code").and_then(|v| v.as_str()).unwrap_or("unknown");
-            anyhow::bail!("reload failed [{code}]: {err}");
+        match self.admin(req)? {
+            AdminResponse::Swapped { version, .. } => Ok(version),
+            other => anyhow::bail!("unexpected reload response: {other:?}"),
         }
-        j.get("version")
-            .and_then(|v| v.as_f64())
-            .map(|v| v as u64)
-            .ok_or_else(|| anyhow::anyhow!("reload response missing version: {line}"))
     }
 
-    /// List loaded model names (sorted).
+    /// List loaded model names (sorted). For shapes, versions and
+    /// traffic counters, send [`AdminRequest::List`] through
+    /// [`admin`](Self::admin) and read the [`ModelInfo`] rows.
     pub fn admin_list(&mut self) -> anyhow::Result<Vec<String>> {
-        let line = self.round_trip(&Request::AdminList.to_line())?;
-        let j = Json::parse(&line)?;
-        let arr = j
-            .get("models")
-            .and_then(|v| v.as_arr())
-            .ok_or_else(|| anyhow::anyhow!("bad admin list response: {line}"))?;
-        Ok(arr
-            .iter()
-            .filter_map(|m| m.get("name").and_then(|v| v.as_str()).map(str::to_string))
-            .collect())
+        match self.admin(AdminRequest::List)? {
+            AdminResponse::Models(infos) => Ok(infos.into_iter().map(|i| i.name).collect()),
+            other => anyhow::bail!("unexpected list response: {other:?}"),
+        }
+    }
+
+    /// Register a new model from an artifact on the server's disk;
+    /// returns its `(centers, dimension)` shape.
+    pub fn admin_add(&mut self, model: &str, path: &str) -> anyhow::Result<(usize, usize)> {
+        let req = AdminRequest::Add { model: model.to_string(), path: path.to_string() };
+        match self.admin(req)? {
+            AdminResponse::Swapped { m, d, .. } => Ok((m, d)),
+            other => anyhow::bail!("unexpected add response: {other:?}"),
+        }
+    }
+
+    /// Unregister a model; in-flight work drains, new requests for the
+    /// name get `unknown_model`.
+    pub fn admin_remove(&mut self, model: &str) -> anyhow::Result<()> {
+        match self.admin(AdminRequest::Remove { model: model.to_string() })? {
+            AdminResponse::Removed { .. } => Ok(()),
+            other => anyhow::bail!("unexpected remove response: {other:?}"),
+        }
     }
 
     /// Liveness probe.
@@ -818,12 +1025,12 @@ mod tests {
     }
 
     fn test_config() -> ServeConfig {
-        ServeConfig {
-            addr: "127.0.0.1:0".to_string(),
-            workers: 1,
-            linger: Duration::from_millis(1),
-            ..ServeConfig::default()
-        }
+        ServeConfig::builder()
+            .addr("127.0.0.1:0")
+            .workers(1)
+            .linger(Duration::from_millis(1))
+            .build()
+            .unwrap()
     }
 
     use crate::serve::model_store::Predictor;
@@ -943,17 +1150,15 @@ mod tests {
 
     #[test]
     fn queue_cap_sheds_with_overloaded_error() {
-        let cfg = ServeConfig {
-            addr: "127.0.0.1:0".to_string(),
-            workers: 1,
-            max_batch: 4,
-            linger: Duration::from_millis(800),
-            cache_capacity: 0,
-            cache_quant: 1e-9,
-            max_queue: 1,
-            threads: 0,
-            metrics_addr: None,
-        };
+        let cfg = ServeConfig::builder()
+            .addr("127.0.0.1:0")
+            .workers(1)
+            .max_batch(4)
+            .linger(Duration::from_millis(800))
+            .cache_capacity(0)
+            .max_queue(1)
+            .build()
+            .unwrap();
         let handle = start(tiny_artifact(), &cfg).unwrap();
         let addr = handle.addr();
 
@@ -990,17 +1195,15 @@ mod tests {
     fn shed_requests_eventually_succeed_with_retry() {
         // same saturation setup as queue_cap_sheds…, but the second
         // client retries with backoff instead of giving up
-        let cfg = ServeConfig {
-            addr: "127.0.0.1:0".to_string(),
-            workers: 1,
-            max_batch: 4,
-            linger: Duration::from_millis(100),
-            cache_capacity: 0,
-            cache_quant: 1e-9,
-            max_queue: 1,
-            threads: 0,
-            metrics_addr: None,
-        };
+        let cfg = ServeConfig::builder()
+            .addr("127.0.0.1:0")
+            .workers(1)
+            .max_batch(4)
+            .linger(Duration::from_millis(100))
+            .cache_capacity(0)
+            .max_queue(1)
+            .build()
+            .unwrap();
         let handle = start(tiny_artifact(), &cfg).unwrap();
         let addr = handle.addr();
 
@@ -1033,11 +1236,107 @@ mod tests {
     }
 
     #[test]
+    fn builder_validates_and_rejects_bad_combinations() {
+        let cfg = ServeConfig::builder()
+            .addr("127.0.0.1:0")
+            .workers(3)
+            .max_batch(16)
+            .linger(Duration::from_millis(5))
+            .cache_capacity(64)
+            .cache_quant(1e-6)
+            .max_queue(32)
+            .threads(2)
+            .metrics_addr("127.0.0.1:0")
+            .build()
+            .unwrap();
+        assert_eq!(cfg.workers, 3);
+        assert_eq!(cfg.max_batch, 16);
+        assert_eq!(cfg.threads, 2);
+        assert_eq!(cfg.metrics_addr.as_deref(), Some("127.0.0.1:0"));
+
+        assert!(ServeConfig::builder().addr("").build().is_err());
+        assert!(ServeConfig::builder().workers(0).build().is_err());
+        assert!(ServeConfig::builder().max_batch(0).build().is_err());
+        assert!(ServeConfig::builder().cache_quant(0.0).build().is_err());
+        assert!(ServeConfig::builder().cache_quant(f64::NAN).build().is_err());
+        assert!(ServeConfig::builder().metrics_addr("").build().is_err());
+    }
+
+    #[test]
+    fn shutdown_restores_the_prior_pool_width() {
+        let _g = crate::util::pool::CONFIG_TEST_LOCK.lock().unwrap();
+        crate::util::pool::set_threads(11);
+        let cfg = ServeConfig::builder()
+            .addr("127.0.0.1:0")
+            .workers(1)
+            .linger(Duration::from_millis(1))
+            .threads(7)
+            .build()
+            .unwrap();
+        let handle = start(tiny_artifact(), &cfg).unwrap();
+        assert_eq!(crate::util::pool::threads(), 7, "server applies its width while up");
+        handle.shutdown();
+        assert_eq!(
+            crate::util::pool::configured_threads(),
+            11,
+            "shutdown must restore the pre-server pool width"
+        );
+
+        // threads == 0 leaves the global setting alone in both directions
+        let handle = start(tiny_artifact(), &test_config()).unwrap();
+        assert_eq!(crate::util::pool::threads(), 11);
+        handle.shutdown();
+        assert_eq!(crate::util::pool::configured_threads(), 11);
+        crate::util::pool::set_threads(0);
+    }
+
+    #[test]
+    fn admin_add_and_remove_grow_and_shrink_the_registry() {
+        let path =
+            std::env::temp_dir().join(format!("bless-server-add-{}.bin", std::process::id()));
+        scaled_artifact(2.0).save(&path).unwrap();
+
+        let handle = start(tiny_artifact(), &test_config()).unwrap();
+        let mut client = Client::connect(handle.addr()).unwrap();
+        let q = [0.2, 0.1];
+        let (base, _) = client.predict_on("default", 1, &q).unwrap();
+
+        let (m, d) = client.admin_add("doubled", path.to_str().unwrap()).unwrap();
+        assert_eq!((m, d), (3, 2));
+        assert_eq!(
+            client.admin_list().unwrap(),
+            vec!["default".to_string(), "doubled".to_string()]
+        );
+        // the added model serves through its own freshly spawned workers
+        let (y, _) = client.predict_on("doubled", 2, &q).unwrap();
+        assert!((y - 2.0 * base).abs() < 1e-12, "added α×2 model: {base} → {y}");
+
+        // duplicate adds and bad paths are structured errors
+        let err = client.admin_add("doubled", path.to_str().unwrap()).unwrap_err();
+        assert!(err.to_string().contains("[add_failed]"), "got {err}");
+        let err = client.admin_add("ghost", "/nonexistent.bin").unwrap_err();
+        assert!(err.to_string().contains("[add_failed]"), "got {err}");
+
+        client.admin_remove("doubled").unwrap();
+        assert_eq!(client.admin_list().unwrap(), vec!["default".to_string()]);
+        let err = client.predict_on("doubled", 3, &q).unwrap_err();
+        assert!(err.to_string().contains("[unknown_model]"), "got {err}");
+        let err = client.admin_remove("doubled").unwrap_err();
+        assert!(err.to_string().contains("[unknown_model]"), "got {err}");
+
+        std::fs::remove_file(&path).ok();
+        handle.shutdown();
+    }
+
+    #[test]
     fn metrics_bridge_renders_per_model_series_and_tracks_health() {
-        let cfg = ServeConfig {
-            metrics_addr: Some("127.0.0.1:0".to_string()),
-            ..test_config()
-        };
+        let cfg = ServeConfig::builder()
+            .addr("127.0.0.1:0")
+            .workers(1)
+            .linger(Duration::from_millis(1))
+            .metrics_addr("127.0.0.1:0")
+            .build()
+            .unwrap();
         let handle = start(tiny_artifact(), &cfg).unwrap();
         assert!(handle.metrics_addr().is_some(), "listener must be up");
         let mut client = Client::connect(handle.addr()).unwrap();

@@ -46,6 +46,11 @@ use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 /// Configured pool width; 0 means "default to available parallelism".
 static CONFIGURED: AtomicUsize = AtomicUsize::new(0);
 
+/// Serializes in-crate tests that mutate the process-global width, so
+/// concurrent test threads don't observe each other's settings.
+#[cfg(test)]
+pub(crate) static CONFIG_TEST_LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
+
 // Process-lifetime dispatch counters, exported through `/metrics` and
 // `train --trace`. Observability only: nothing in the pool reads them
 // back, so they cannot perturb partitioning or scheduling.
@@ -89,6 +94,14 @@ pub fn available() -> usize {
 /// in-flight dispatches are unaffected.
 pub fn set_threads(n: usize) {
     CONFIGURED.store(n, Ordering::SeqCst);
+}
+
+/// The raw configured pool width: whatever was last passed to
+/// [`set_threads`] (`0` = default). Lets callers that temporarily
+/// override the width (e.g. the serve tier) restore the exact prior
+/// setting, preserving "unset" as unset.
+pub fn configured_threads() -> usize {
+    CONFIGURED.load(Ordering::SeqCst)
 }
 
 /// The current pool width (≥ 1): the value set by [`set_threads`], or
@@ -318,6 +331,7 @@ mod tests {
 
     #[test]
     fn thread_count_configuration_round_trips() {
+        let _g = CONFIG_TEST_LOCK.lock().unwrap();
         let before = CONFIGURED.load(Ordering::SeqCst);
         set_threads(3);
         assert_eq!(threads(), 3);

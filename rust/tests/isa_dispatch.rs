@@ -1,0 +1,211 @@
+//! Accuracy gates for the runtime-dispatched micro-kernel tier.
+//!
+//! The dispatch contract (`linalg::dispatch`) allows results to vary
+//! **by ISA** but only within documented bounds against the scalar
+//! reference. This suite enforces those bounds on an AVX2 host and
+//! degrades to a no-op (beyond the scalar self-checks) elsewhere:
+//!
+//! * the vectorized exponential stays within 4 ULP of `f64::exp` over
+//!   the kernel-relevant domain `[-708, 0]`, and flushes below it;
+//! * GEMM / SYRK / matvec products agree between backends to a tight
+//!   relative tolerance at sizes that straddle the register-tile and
+//!   cache-block boundaries (4×8 tiles, NB = 96, MC = 64);
+//! * the blocked Cholesky factors the same SPD matrix to matching `L`
+//!   under both backends.
+//!
+//! Tests serialize on a file-local mutex: the active ISA is a process
+//! global, so concurrent flips would bleed between tests.
+
+use bless::linalg::{self, MatMul, Matrix};
+use std::sync::{Mutex, MutexGuard};
+
+static ISA_LOCK: Mutex<()> = Mutex::new(());
+
+fn lock() -> MutexGuard<'static, ()> {
+    ISA_LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Run `f` under `isa`, restoring auto-detection afterwards. `None`
+/// when the host cannot execute that backend.
+fn under_isa<T>(isa: linalg::Isa, f: impl FnOnce() -> T) -> Option<T> {
+    if linalg::set_isa(isa).is_err() {
+        return None;
+    }
+    let out = f();
+    linalg::set_isa_from_str("auto").unwrap();
+    Some(out)
+}
+
+fn ulp_diff(a: f64, b: f64) -> u64 {
+    // both operands are non-negative finite here, so the bit patterns
+    // order the same way the values do
+    (a.to_bits() as i64 - b.to_bits() as i64).unsigned_abs()
+}
+
+fn max_rel_err(a: &[f64], b: &[f64]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    a.iter()
+        .zip(b)
+        .map(|(x, y)| (x - y).abs() / x.abs().max(1.0))
+        .fold(0.0, f64::max)
+}
+
+fn test_matrix(rows: usize, cols: usize, seed: f64) -> Matrix {
+    Matrix::from_fn(rows, cols, |i, j| {
+        (seed + i as f64 * 0.7310 + j as f64 * 0.2913).sin() * 0.5
+    })
+}
+
+#[test]
+fn vexp_stays_within_4_ulp_of_f64_exp() {
+    let _g = lock();
+    let run = under_isa(linalg::Isa::Avx2, || {
+        let kern = linalg::kernels();
+        // dense sweep of the documented domain [-708, 0]: gamma = 1,
+        // ai = 0 and a zero row turn exp_row into x ↦ exp(-b_sq)
+        const N: usize = 200_000;
+        let b_sq: Vec<f64> = (0..N).map(|j| 708.0 * j as f64 / (N - 1) as f64).collect();
+        let mut row = vec![0.0; N];
+        (kern.exp_row)(1.0, 0.0, &b_sq, &mut row);
+        let mut worst = 0u64;
+        for (got, &d2) in row.iter().zip(&b_sq) {
+            let want = (-d2).exp();
+            worst = worst.max(ulp_diff(*got, want));
+        }
+        assert!(worst <= 4, "vexp drifted to {worst} ULP from f64::exp");
+
+        // endpoints: exp(0) is exact, −708 still computes, below flushes
+        let b_sq = [0.0, 708.0, 708.0000001, 710.0, 1.0e6];
+        let mut row = [0.0; 5];
+        (kern.exp_row)(1.0, 0.0, &b_sq, &mut row);
+        assert_eq!(row[0], 1.0, "exp(0) must be exact");
+        assert!(row[1] > 0.0, "exp(-708) is still a normal number");
+        assert_eq!(row[2], 0.0, "inputs below -708 flush to zero");
+        assert_eq!(row[3], 0.0);
+        assert_eq!(row[4], 0.0);
+    });
+    if run.is_none() {
+        eprintln!("skipping: no AVX2+FMA on this host");
+    }
+}
+
+#[test]
+fn exp_row_backends_agree_on_gaussian_kernel_rows() {
+    let _g = lock();
+    // realistic kernel-pass inputs: nonzero ai/b_sq/inner-product rows,
+    // odd length so the vector body and scalar tail both execute
+    const COLS: usize = 1003;
+    let gamma = 0.37;
+    let a_sq = 1.9;
+    let b_sq: Vec<f64> = (0..COLS).map(|j| 2.0 + (j as f64 * 0.113).sin()).collect();
+    let base: Vec<f64> = (0..COLS).map(|j| (j as f64 * 0.071).cos() * 0.8).collect();
+
+    let run = |isa| {
+        under_isa(isa, || {
+            let kern = linalg::kernels();
+            let mut row = base.clone();
+            (kern.exp_row)(gamma, a_sq, &b_sq, &mut row);
+            row
+        })
+    };
+    let scalar = run(linalg::Isa::Scalar).expect("scalar backend always available");
+    let Some(avx2) = run(linalg::Isa::Avx2) else {
+        eprintln!("skipping: no AVX2+FMA on this host");
+        return;
+    };
+    // the squared-distance arithmetic is bit-identical between the
+    // backends (2·v is exact, FNMADD rounds once like the scalar
+    // subtraction), so the whole gap is the ≤ 4 ULP exp bound
+    for (s, v) in scalar.iter().zip(&avx2) {
+        assert!(ulp_diff(*s, *v) <= 8, "kernel row drifted: {s} vs {v}");
+    }
+}
+
+#[test]
+fn gemm_and_syrk_backends_agree_at_block_straddling_sizes() {
+    let _g = lock();
+    // (m, k, n) chosen to straddle the 4×8 register tile, the KC = 256
+    // panel and the NB = 96 / MC = 64 cache blocks
+    for &(m, k, n) in &[(5, 9, 11), (65, 97, 129), (96, 256, 95), (33, 300, 64)] {
+        let a = test_matrix(m, k, 0.1);
+        let b = test_matrix(k, n, 0.2);
+        let bt = test_matrix(n, k, 0.3);
+
+        let run = |isa| {
+            under_isa(isa, || {
+                let nn = linalg::gemm(&a, &b);
+                let nt = MatMul::nt().run(&a, &bt);
+                let tn = MatMul::tn().run(&b, &b);
+                let lower = MatMul::tn().lower().run(&a, &a);
+                let syrk = linalg::syrk(&a);
+                let mut mv = vec![0.0; m];
+                linalg::matvec_into(&a, &b.col(0), &mut mv);
+                (nn, nt, tn, lower, syrk, mv)
+            })
+        };
+        let s = run(linalg::Isa::Scalar).expect("scalar backend always available");
+        let Some(v) = run(linalg::Isa::Avx2) else {
+            eprintln!("skipping: no AVX2+FMA on this host");
+            return;
+        };
+        let gate = |tag: &str, x: &Matrix, y: &Matrix| {
+            let err = max_rel_err(x.as_slice(), y.as_slice());
+            assert!(err < 1e-12, "{tag} @ {m}x{k}x{n}: rel err {err:.3e}");
+        };
+        gate("gemm_nn", &s.0, &v.0);
+        gate("gemm_nt", &s.1, &v.1);
+        gate("gemm_tn", &s.2, &v.2);
+        gate("syrk_tn_lower", &s.3, &v.3);
+        gate("syrk_nt", &s.4, &v.4);
+        let err = max_rel_err(&s.5, &v.5);
+        assert!(err < 1e-12, "matvec @ {m}x{k}: rel err {err:.3e}");
+    }
+}
+
+#[test]
+fn cholesky_and_solves_backends_agree() {
+    let _g = lock();
+    // NB = 96 and the MC = 64 panel both straddled
+    for &n in &[31usize, 95, 97, 160] {
+        let m = test_matrix(n, n + 7, 0.4);
+        let mut spd = linalg::syrk(&m);
+        for i in 0..n {
+            spd.set(i, i, spd.get(i, i) + n as f64);
+        }
+        let rhs: Vec<f64> = (0..n).map(|i| (i as f64 * 0.17).cos()).collect();
+
+        let run = |isa| {
+            under_isa(isa, || {
+                let chol = linalg::cholesky(&spd).expect("SPD by construction");
+                let x = chol.solve(&rhs);
+                (chol.l().clone(), x)
+            })
+        };
+        let s = run(linalg::Isa::Scalar).expect("scalar backend always available");
+        let Some(v) = run(linalg::Isa::Avx2) else {
+            eprintln!("skipping: no AVX2+FMA on this host");
+            return;
+        };
+        let err = max_rel_err(s.0.as_slice(), v.0.as_slice());
+        assert!(err < 1e-11, "cholesky L @ n={n}: rel err {err:.3e}");
+        let err = max_rel_err(&s.1, &v.1);
+        assert!(err < 1e-9, "llt solve @ n={n}: rel err {err:.3e}");
+    }
+}
+
+#[test]
+fn isa_override_api_round_trips() {
+    let _g = lock();
+    // scalar is always selectable
+    linalg::set_isa(linalg::Isa::Scalar).unwrap();
+    assert_eq!(linalg::active_isa(), linalg::Isa::Scalar);
+    assert_eq!(linalg::kernels().isa, linalg::Isa::Scalar);
+    // unknown strings are rejected without changing the active backend
+    assert!(linalg::set_isa_from_str("sse9").is_err());
+    assert_eq!(linalg::active_isa(), linalg::Isa::Scalar);
+    // auto re-detects (and is what every other test restores)
+    linalg::set_isa_from_str("auto").unwrap();
+    let detected = linalg::active_isa();
+    assert!(linalg::set_isa(detected).is_ok(), "detected ISA must be selectable");
+    linalg::set_isa_from_str("auto").unwrap();
+}

@@ -3,14 +3,20 @@
 //! pool partitions work into fixed blocks whose boundaries and
 //! per-element floating-point order never depend on the thread count.
 //!
-//! Tests in this binary mutate the process-global pool width, so they
-//! serialize through one mutex.
+//! Since the micro-kernel dispatch tier, the contract is **per ISA**:
+//! bits may differ between the scalar and AVX2 backends (accuracy-gated
+//! in `tests/isa_dispatch.rs`), but within one backend the thread count
+//! must never change a single bit. Every sweep here therefore runs under
+//! each backend the host supports (see [`for_each_isa`]).
+//!
+//! Tests in this binary mutate the process-global pool width and the
+//! process-global ISA selection, so they serialize through one mutex.
 
 use bless::data::susy_like;
 use bless::falkon::{Falkon, Preconditioner};
 use bless::kernels::{Gaussian, KernelEngine, NativeEngine, PanelCache, DEFAULT_ROW_TILE};
 use bless::leverage::{LsGenerator, WeightedSet};
-use bless::linalg::{self, Matrix};
+use bless::linalg::{self, MatMul, Matrix};
 use bless::rng::Rng;
 use bless::util::pool;
 use std::sync::{Mutex, MutexGuard, OnceLock};
@@ -29,6 +35,20 @@ fn at_threads<T>(n: usize, f: impl FnOnce() -> T) -> T {
     out
 }
 
+/// Run the whole thread-count sweep `f` under every micro-kernel backend
+/// this host supports — always scalar, plus AVX2 where available — then
+/// restore auto-detection. `BLESS_ISA=scalar` in CI exercises the same
+/// scalar path at the process level; this helper additionally covers the
+/// SIMD backend in-process on capable hosts.
+fn for_each_isa(f: impl Fn(linalg::Isa)) {
+    for isa in [linalg::Isa::Scalar, linalg::Isa::Avx2] {
+        if linalg::set_isa(isa).is_ok() {
+            f(isa);
+        }
+    }
+    linalg::set_isa_from_str("auto").unwrap();
+}
+
 fn bits_of(v: &[f64]) -> Vec<u64> {
     v.iter().map(|x| x.to_bits()).collect()
 }
@@ -39,15 +59,18 @@ fn gemm_bit_identical_across_thread_counts() {
     // full-mantissa values and sizes above every dispatch threshold
     let a = Matrix::from_fn(200, 150, |i, j| ((i * 150 + j) as f64 * 0.618).sin() * 2.0);
     let b = Matrix::from_fn(150, 130, |i, j| ((i * 130 + j) as f64 * 1.414).cos() * 0.5);
-    let serial = at_threads(1, || linalg::gemm(&a, &b));
-    for t in [2usize, 4, 8] {
-        let par = at_threads(t, || linalg::gemm(&a, &b));
-        assert_eq!(
-            bits_of(serial.as_slice()),
-            bits_of(par.as_slice()),
-            "gemm diverged at {t} threads"
-        );
-    }
+    for_each_isa(|isa| {
+        let serial = at_threads(1, || linalg::gemm(&a, &b));
+        for t in [2usize, 4, 8] {
+            let par = at_threads(t, || linalg::gemm(&a, &b));
+            assert_eq!(
+                bits_of(serial.as_slice()),
+                bits_of(par.as_slice()),
+                "gemm diverged at {t} threads ({})",
+                isa.name()
+            );
+        }
+    });
 }
 
 #[test]
@@ -57,17 +80,17 @@ fn gemm_tn_and_matvecs_bit_identical() {
     let b = Matrix::from_fn(300, 90, |i, j| ((i * 90 + j) as f64 * 0.73).cos());
     let x: Vec<f64> = (0..280).map(|i| ((i * i) as f64 * 0.11).sin()).collect();
     let u: Vec<f64> = (0..300).map(|i| (i as f64 * 0.29).cos()).collect();
-    let (tn1, mv1, mt1) = at_threads(1, || {
-        (linalg::gemm_tn(&a, &b), linalg::matvec(&a, &x), linalg::matvec_t(&a, &u))
+    let run = || (MatMul::tn().run(&a, &b), linalg::matvec(&a, &x), linalg::matvec_t(&a, &u));
+    for_each_isa(|isa| {
+        let (tn1, mv1, mt1) = at_threads(1, run);
+        for t in [2usize, 4] {
+            let (tnp, mvp, mtp) = at_threads(t, run);
+            let tag = isa.name();
+            assert_eq!(bits_of(tn1.as_slice()), bits_of(tnp.as_slice()), "gemm tn @ {t} ({tag})");
+            assert_eq!(bits_of(&mv1), bits_of(&mvp), "matvec @ {t} ({tag})");
+            assert_eq!(bits_of(&mt1), bits_of(&mtp), "matvec_t @ {t} ({tag})");
+        }
     });
-    for t in [2usize, 4] {
-        let (tnp, mvp, mtp) = at_threads(t, || {
-            (linalg::gemm_tn(&a, &b), linalg::matvec(&a, &x), linalg::matvec_t(&a, &u))
-        });
-        assert_eq!(bits_of(tn1.as_slice()), bits_of(tnp.as_slice()), "gemm_tn @ {t}");
-        assert_eq!(bits_of(&mv1), bits_of(&mvp), "matvec @ {t}");
-        assert_eq!(bits_of(&mt1), bits_of(&mtp), "matvec_t @ {t}");
-    }
 }
 
 #[test]
@@ -86,15 +109,18 @@ fn solve_lower_matrix_bit_identical() {
         }
     });
     let b = Matrix::from_fn(n, 700, |i, j| ((i * 700 + j) as f64 * 0.21).sin());
-    let serial = at_threads(1, || linalg::solve_lower_matrix(&l, &b));
-    for t in [2usize, 4] {
-        let par = at_threads(t, || linalg::solve_lower_matrix(&l, &b));
-        assert_eq!(
-            bits_of(serial.as_slice()),
-            bits_of(par.as_slice()),
-            "solve_lower_matrix diverged at {t} threads"
-        );
-    }
+    for_each_isa(|isa| {
+        let serial = at_threads(1, || linalg::solve_lower_matrix(&l, &b));
+        for t in [2usize, 4] {
+            let par = at_threads(t, || linalg::solve_lower_matrix(&l, &b));
+            assert_eq!(
+                bits_of(serial.as_slice()),
+                bits_of(par.as_slice()),
+                "solve_lower_matrix diverged at {t} threads ({})",
+                isa.name()
+            );
+        }
+    });
 }
 
 #[test]
@@ -105,18 +131,21 @@ fn kernel_block_and_fused_matvec_bit_identical() {
     let rows: Vec<usize> = (0..500).collect();
     let cols: Vec<usize> = (0..120).map(|i| i * 5).collect();
     let v: Vec<f64> = (0..120).map(|i| ((i as f64) * 0.17).sin()).collect();
-    let (blk1, fused1) =
-        at_threads(1, || (eng.block(&rows, &cols), eng.knm_t_knm_matvec(&cols, &v)));
-    for t in [2usize, 4, 8] {
-        let (blkp, fusedp) =
-            at_threads(t, || (eng.block(&rows, &cols), eng.knm_t_knm_matvec(&cols, &v)));
-        assert_eq!(
-            bits_of(blk1.as_slice()),
-            bits_of(blkp.as_slice()),
-            "kernel block diverged at {t} threads"
-        );
-        assert_eq!(bits_of(&fused1), bits_of(&fusedp), "fused CG matvec @ {t}");
-    }
+    for_each_isa(|isa| {
+        let (blk1, fused1) =
+            at_threads(1, || (eng.block(&rows, &cols), eng.knm_t_knm_matvec(&cols, &v)));
+        for t in [2usize, 4, 8] {
+            let (blkp, fusedp) =
+                at_threads(t, || (eng.block(&rows, &cols), eng.knm_t_knm_matvec(&cols, &v)));
+            assert_eq!(
+                bits_of(blk1.as_slice()),
+                bits_of(blkp.as_slice()),
+                "kernel block diverged at {t} threads ({})",
+                isa.name()
+            );
+            assert_eq!(bits_of(&fused1), bits_of(&fusedp), "fused CG matvec @ {t}");
+        }
+    });
 }
 
 /// Deterministic, exactly-symmetric, diagonally-dominant SPD test matrix
@@ -131,15 +160,18 @@ fn cholesky_bit_identical_across_thread_counts() {
     // sizes straddling the NB=96 panel boundary, plus a multi-panel one
     for &n in &[95usize, 96, 97, 513] {
         let a = spd(n);
-        let serial = at_threads(1, || linalg::cholesky(&a).expect("SPD"));
-        for t in [2usize, 4, 8] {
-            let par = at_threads(t, || linalg::cholesky(&a).expect("SPD"));
-            assert_eq!(
-                bits_of(serial.l().as_slice()),
-                bits_of(par.l().as_slice()),
-                "cholesky n={n} diverged at {t} threads"
-            );
-        }
+        for_each_isa(|isa| {
+            let serial = at_threads(1, || linalg::cholesky(&a).expect("SPD"));
+            for t in [2usize, 4, 8] {
+                let par = at_threads(t, || linalg::cholesky(&a).expect("SPD"));
+                assert_eq!(
+                    bits_of(serial.l().as_slice()),
+                    bits_of(par.l().as_slice()),
+                    "cholesky n={n} diverged at {t} threads ({})",
+                    isa.name()
+                );
+            }
+        });
     }
 }
 
@@ -155,12 +187,23 @@ fn triangular_tier_solves_bit_identical() {
         let fused = f.solve_matrix(&b);
         (lt, fused)
     };
-    let (lt1, fu1) = at_threads(1, run);
-    for t in [2usize, 4, 8] {
-        let (ltp, fup) = at_threads(t, run);
-        assert_eq!(bits_of(lt1.as_slice()), bits_of(ltp.as_slice()), "solve_lt_matrix @ {t}");
-        assert_eq!(bits_of(fu1.as_slice()), bits_of(fup.as_slice()), "solve_matrix @ {t}");
-    }
+    for_each_isa(|isa| {
+        let (lt1, fu1) = at_threads(1, run);
+        for t in [2usize, 4, 8] {
+            let (ltp, fup) = at_threads(t, run);
+            let tag = isa.name();
+            assert_eq!(
+                bits_of(lt1.as_slice()),
+                bits_of(ltp.as_slice()),
+                "solve_lt_matrix @ {t} ({tag})"
+            );
+            assert_eq!(
+                bits_of(fu1.as_slice()),
+                bits_of(fup.as_slice()),
+                "solve_matrix @ {t} ({tag})"
+            );
+        }
+    });
 }
 
 #[test]
@@ -177,13 +220,16 @@ fn preconditioner_build_and_applies_bit_identical() {
         let p = Preconditioner::new(&kmm, &weights, 400, 1e-3).expect("precond");
         (p.apply_b(&v), p.apply_bt(&v), p.solve_lt(&v))
     };
-    let (b1, bt1, lt1) = at_threads(1, run);
-    for t in [2usize, 4, 8] {
-        let (bp, btp, ltp) = at_threads(t, run);
-        assert_eq!(bits_of(&b1), bits_of(&bp), "apply_b @ {t} threads");
-        assert_eq!(bits_of(&bt1), bits_of(&btp), "apply_bt @ {t} threads");
-        assert_eq!(bits_of(&lt1), bits_of(&ltp), "solve_lt @ {t} threads");
-    }
+    for_each_isa(|isa| {
+        let (b1, bt1, lt1) = at_threads(1, run);
+        for t in [2usize, 4, 8] {
+            let (bp, btp, ltp) = at_threads(t, run);
+            let tag = isa.name();
+            assert_eq!(bits_of(&b1), bits_of(&bp), "apply_b @ {t} threads ({tag})");
+            assert_eq!(bits_of(&bt1), bits_of(&btp), "apply_bt @ {t} threads ({tag})");
+            assert_eq!(bits_of(&lt1), bits_of(&ltp), "solve_lt @ {t} threads ({tag})");
+        }
+    });
 }
 
 #[test]
@@ -198,12 +244,15 @@ fn ls_generator_scores_bit_identical() {
         let gen = LsGenerator::new(&eng, &set, lambda).expect("generator");
         (gen.scores(&batch), gen.scores_all())
     };
-    let (s1, a1) = at_threads(1, run);
-    for t in [2usize, 4, 8] {
-        let (sp, ap) = at_threads(t, run);
-        assert_eq!(bits_of(&s1), bits_of(&sp), "scores @ {t} threads");
-        assert_eq!(bits_of(&a1), bits_of(&ap), "scores_all @ {t} threads");
-    }
+    for_each_isa(|isa| {
+        let (s1, a1) = at_threads(1, run);
+        for t in [2usize, 4, 8] {
+            let (sp, ap) = at_threads(t, run);
+            let tag = isa.name();
+            assert_eq!(bits_of(&s1), bits_of(&sp), "scores @ {t} threads ({tag})");
+            assert_eq!(bits_of(&a1), bits_of(&ap), "scores_all @ {t} threads ({tag})");
+        }
+    });
 }
 
 #[test]
@@ -222,12 +271,15 @@ fn falkon_training_and_predictions_bit_identical() {
         let preds = model.predict(&eng, &test.x);
         (model.alpha, preds)
     };
-    let (alpha1, preds1) = at_threads(1, fit_once);
-    for t in [2usize, 4] {
-        let (alphap, predsp) = at_threads(t, fit_once);
-        assert_eq!(bits_of(&alpha1), bits_of(&alphap), "FALKON α diverged at {t} threads");
-        assert_eq!(bits_of(&preds1), bits_of(&predsp), "predictions diverged at {t} threads");
-    }
+    for_each_isa(|isa| {
+        let (alpha1, preds1) = at_threads(1, fit_once);
+        for t in [2usize, 4] {
+            let (alphap, predsp) = at_threads(t, fit_once);
+            let tag = isa.name();
+            assert_eq!(bits_of(&alpha1), bits_of(&alphap), "FALKON α @ {t} threads ({tag})");
+            assert_eq!(bits_of(&preds1), bits_of(&predsp), "predictions @ {t} threads ({tag})");
+        }
+    });
 }
 
 /// Span tracing must be observation-only: the full BLESS → FALKON →
@@ -283,15 +335,18 @@ fn panel_cache_bit_identical_across_threads_and_budgets() {
         let cache = PanelCache::new(&eng, &centers, budget);
         (cache.knm_matvec(&v), cache.knm_t_matvec(&u), cache.knm_t_knm_matvec(&v))
     };
-    let (y1, z1, f1) = at_threads(1, || sweep(0));
-    for t in [1usize, 2, 4, 8] {
-        for budget in [0usize, partial_budget, usize::MAX] {
-            let (yp, zp, fp) = at_threads(t, || sweep(budget));
-            assert_eq!(bits_of(&y1), bits_of(&yp), "K·v @ {t} threads, budget {budget}");
-            assert_eq!(bits_of(&z1), bits_of(&zp), "Kᵀ·u @ {t} threads, budget {budget}");
-            assert_eq!(bits_of(&f1), bits_of(&fp), "KᵀK·v @ {t} threads, budget {budget}");
+    for_each_isa(|isa| {
+        let (y1, z1, f1) = at_threads(1, || sweep(0));
+        for t in [1usize, 2, 4, 8] {
+            for budget in [0usize, partial_budget, usize::MAX] {
+                let (yp, zp, fp) = at_threads(t, || sweep(budget));
+                let tag = isa.name();
+                assert_eq!(bits_of(&y1), bits_of(&yp), "K·v @ {t}, budget {budget} ({tag})");
+                assert_eq!(bits_of(&z1), bits_of(&zp), "Kᵀ·u @ {t}, budget {budget} ({tag})");
+                assert_eq!(bits_of(&f1), bits_of(&fp), "KᵀK·v @ {t}, budget {budget} ({tag})");
+            }
         }
-    }
+    });
 }
 
 #[test]
@@ -314,20 +369,23 @@ fn falkon_cached_and_streamed_paths_bit_identical_across_threads() {
         let preds = model.predict(&eng, &test.x);
         (model.alpha, preds)
     };
-    let (alpha1, preds1) = at_threads(1, || fit_at(0));
-    for t in [1usize, 2, 4, 8] {
-        for budget in [0usize, usize::MAX] {
-            let (alphap, predsp) = at_threads(t, || fit_at(budget));
-            assert_eq!(
-                bits_of(&alpha1),
-                bits_of(&alphap),
-                "FALKON α diverged at {t} threads, budget {budget}"
-            );
-            assert_eq!(
-                bits_of(&preds1),
-                bits_of(&predsp),
-                "predictions diverged at {t} threads, budget {budget}"
-            );
+    for_each_isa(|isa| {
+        let (alpha1, preds1) = at_threads(1, || fit_at(0));
+        for t in [1usize, 2, 4, 8] {
+            for budget in [0usize, usize::MAX] {
+                let (alphap, predsp) = at_threads(t, || fit_at(budget));
+                let tag = isa.name();
+                assert_eq!(
+                    bits_of(&alpha1),
+                    bits_of(&alphap),
+                    "FALKON α diverged at {t} threads, budget {budget} ({tag})"
+                );
+                assert_eq!(
+                    bits_of(&preds1),
+                    bits_of(&predsp),
+                    "predictions diverged at {t} threads, budget {budget} ({tag})"
+                );
+            }
         }
-    }
+    });
 }

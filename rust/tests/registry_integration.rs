@@ -57,17 +57,15 @@ fn two_models_and_hot_reload_under_traffic_with_zero_failures() {
         let expect_a2 = Arc::new(expect_a2);
         let expect_b = Arc::new(expect_b);
 
-        let cfg = ServeConfig {
-            addr: "127.0.0.1:0".to_string(),
-            workers: 2,
-            max_batch: 16,
-            linger: Duration::from_millis(1),
-            cache_capacity: 0, // keep served-value provenance unambiguous
-            cache_quant: 1e-9,
-            max_queue: 0,
-            threads: 0,
-            metrics_addr: None,
-        };
+        let cfg = ServeConfig::builder()
+            .addr("127.0.0.1:0")
+            .workers(2)
+            .max_batch(16)
+            .linger(Duration::from_millis(1))
+            .cache_capacity(0) // keep served-value provenance unambiguous
+            .max_queue(0)
+            .build()
+            .unwrap();
         let specs = vec![
             ModelSpec { name: "a".to_string(), artifact: a_v1, source: None },
             ModelSpec { name: "b".to_string(), artifact: b, source: None },
@@ -156,17 +154,15 @@ fn two_models_and_hot_reload_under_traffic_with_zero_failures() {
 fn queue_cap_sheds_one_model_without_touching_the_other() {
     with_timeout(120, || {
         const D: usize = 4;
-        let cfg = ServeConfig {
-            addr: "127.0.0.1:0".to_string(),
-            workers: 1,
-            max_batch: 4,
-            linger: Duration::from_millis(1_500),
-            cache_capacity: 0,
-            cache_quant: 1e-9,
-            max_queue: 1,
-            threads: 0,
-            metrics_addr: None,
-        };
+        let cfg = ServeConfig::builder()
+            .addr("127.0.0.1:0")
+            .workers(1)
+            .max_batch(4)
+            .linger(Duration::from_millis(1_500))
+            .cache_capacity(0)
+            .max_queue(1)
+            .build()
+            .unwrap();
         let specs = vec![
             ModelSpec { name: "a".to_string(), artifact: artifact(5, 10, D, 1.0), source: None },
             ModelSpec { name: "b".to_string(), artifact: artifact(6, 10, D, 1.0), source: None },

@@ -66,17 +66,15 @@ fn concurrent_clients_match_direct_predictions_and_coalesce() {
         let expected = Arc::new(reference.predict_batch(&queries).unwrap());
         let queries = Arc::new(queries);
 
-        let cfg = ServeConfig {
-            addr: "127.0.0.1:0".to_string(),
-            workers: 2,
-            max_batch: 16,
-            linger: Duration::from_millis(5),
-            cache_capacity: 0, // cache off: every request exercises the GEMM path
-            cache_quant: 1e-9,
-            max_queue: 0, // unbounded: this test is about coalescing, not shedding
-            threads: 0,
-            metrics_addr: None,
-        };
+        let cfg = ServeConfig::builder()
+            .addr("127.0.0.1:0")
+            .workers(2)
+            .max_batch(16)
+            .linger(Duration::from_millis(5))
+            .cache_capacity(0) // cache off: every request exercises the GEMM path
+            .max_queue(0) // unbounded: this test is about coalescing, not shedding
+            .build()
+            .unwrap();
         let handle = serve::start(loaded, &cfg).unwrap();
         let addr = handle.addr();
 
@@ -132,17 +130,15 @@ fn concurrent_clients_match_direct_predictions_and_coalesce() {
 fn repeated_queries_hit_cache_over_the_wire() {
     with_timeout(120, || {
         let (art, queries) = trained_artifact();
-        let cfg = ServeConfig {
-            addr: "127.0.0.1:0".to_string(),
-            workers: 1,
-            max_batch: 8,
-            linger: Duration::from_millis(1),
-            cache_capacity: 64,
-            cache_quant: 1e-9,
-            max_queue: 0,
-            threads: 0,
-            metrics_addr: None,
-        };
+        let cfg = ServeConfig::builder()
+            .addr("127.0.0.1:0")
+            .workers(1)
+            .max_batch(8)
+            .linger(Duration::from_millis(1))
+            .cache_capacity(64)
+            .max_queue(0)
+            .build()
+            .unwrap();
         let handle = serve::start(art, &cfg).unwrap();
         let mut client = Client::connect(handle.addr()).unwrap();
 
@@ -166,7 +162,7 @@ fn dimension_mismatch_is_rejected_per_request() {
         let d = art.d();
         let handle = serve::start(
             art,
-            &ServeConfig { addr: "127.0.0.1:0".to_string(), ..ServeConfig::default() },
+            &ServeConfig::builder().addr("127.0.0.1:0").build().unwrap(),
         )
         .unwrap();
         let mut client = Client::connect(handle.addr()).unwrap();
@@ -195,11 +191,11 @@ fn http_get(addr: std::net::SocketAddr, path: &str) -> (String, String) {
 fn metrics_and_healthz_scrape_well_formed() {
     with_timeout(120, || {
         let (art, queries) = trained_artifact();
-        let cfg = ServeConfig {
-            addr: "127.0.0.1:0".to_string(),
-            metrics_addr: Some("127.0.0.1:0".to_string()),
-            ..ServeConfig::default()
-        };
+        let cfg = ServeConfig::builder()
+            .addr("127.0.0.1:0")
+            .metrics_addr("127.0.0.1:0")
+            .build()
+            .unwrap();
         let handle = serve::start(art, &cfg).unwrap();
         let maddr = handle.metrics_addr().expect("metrics listener is up");
 
@@ -256,7 +252,7 @@ fn wire_shutdown_stops_the_server() {
         let (art, _) = trained_artifact();
         let handle = serve::start(
             art,
-            &ServeConfig { addr: "127.0.0.1:0".to_string(), ..ServeConfig::default() },
+            &ServeConfig::builder().addr("127.0.0.1:0").build().unwrap(),
         )
         .unwrap();
         let mut client = Client::connect(handle.addr()).unwrap();
