@@ -16,7 +16,7 @@ fn main() {
     let lambda = 1e-4;
     let ds = susy_like(n, &mut Rng::seeded(7));
     let eng = NativeEngine::new(ds.x, Gaussian::new(4.0));
-    let exact = exact_leverage_scores(&eng, lambda);
+    let exact = exact_leverage_scores(&eng, lambda).unwrap();
     let all: Vec<usize> = (0..n).collect();
 
     let mut table = Table::new(

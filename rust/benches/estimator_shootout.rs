@@ -1,0 +1,128 @@
+//! Estimator-family shoot-out bench: every [`bless::leverage`] estimator
+//! (exact, BLESS, RRLS, count-sketch, SRFT, recursive-RLS Nyström) on
+//! the same SUSY-like kernel — accuracy (R-ACC vs the exact scores),
+//! wall-clock, metered kernel-entry evaluations and peak dense
+//! workspace — plus a small size sweep for the empirical n-exponents.
+//!
+//! ```bash
+//! cargo bench --bench estimator_shootout
+//! cargo bench --bench estimator_shootout -- \
+//!     --n 500 --reps 2 --seed 7 --sizes 250,500 \
+//!     --out ../BENCH_estimators.json
+//! ```
+//!
+//! With `--out`, writes the repo-root `BENCH_estimators.json` schema: a
+//! flat object with one `<estimator>_{racc_mean,racc_q05,racc_q95,
+//! time_s,kernel_evals,peak_mb}` group per family member (names
+//! sanitized to `[a-z0-9_]`) plus `<estimator>_n_exponent` slopes from
+//! the sweep, so CI can track accuracy-vs-cost trajectories per PR.
+
+use bless::coordinator::{
+    fig1_estimator_shootout, fig2_estimator_scaling, scaling_exponent_for, Fig2Config,
+    ShootoutConfig,
+};
+use bless::data::susy_like;
+use bless::kernels::{Gaussian, NativeEngine};
+use bless::leverage::parse_estimator;
+use bless::rng::Rng;
+use bless::util::cli::Args;
+use bless::util::json::Json;
+use bless::util::pool;
+use std::collections::BTreeMap;
+
+/// Flatten an estimator display name into a JSON metric prefix:
+/// `count-sketch(s=256)` → `count_sketch_s_256`.
+fn sanitize(name: &str) -> String {
+    let mut out = String::with_capacity(name.len());
+    for c in name.chars() {
+        if c.is_ascii_alphanumeric() {
+            out.push(c.to_ascii_lowercase());
+        } else if !out.ends_with('_') {
+            out.push('_');
+        }
+    }
+    out.trim_matches('_').to_string()
+}
+
+fn parse_specs(args: &Args, default: &[String]) -> Vec<String> {
+    match args.get("estimators") {
+        None => default.to_vec(),
+        Some(list) => match list.trim() {
+            "default" | "all" => default.to_vec(),
+            other => {
+                other.split(',').map(|s| s.trim().to_string()).filter(|s| !s.is_empty()).collect()
+            }
+        },
+    }
+}
+
+fn main() {
+    let args = Args::parse();
+    pool::set_threads(args.get_usize("threads", 0));
+    let n = args.get_usize("n", 600);
+    let lambda = args.get_f64("lambda", 1e-2);
+    let sigma = args.get_f64("sigma", 3.0);
+    let seed = args.get_u64("seed", 7);
+    let reps = args.get_usize("reps", 3);
+    let specs = parse_specs(&args, &ShootoutConfig::default().specs);
+
+    println!(
+        "estimator shoot-out: n={n} λ={lambda:.1e} σ={sigma} reps={reps} seed={seed} \
+         threads={}",
+        pool::threads()
+    );
+    let ds = susy_like(n, &mut Rng::seeded(seed.wrapping_add(77)));
+    let eng = NativeEngine::new(ds.x, Gaussian::new(sigma));
+    let cfg = ShootoutConfig { lambda, reps, seed, specs: specs.clone() };
+    let shoot = fig1_estimator_shootout(&eng, &cfg).expect("shoot-out");
+    println!("{}", shoot.to_console());
+
+    // small size sweep → per-estimator empirical cost exponent in n
+    let sizes: Vec<usize> = args
+        .get("sizes")
+        .map(|s| s.split(',').map(|v| v.trim().parse().expect("bad --sizes")).collect())
+        .unwrap_or_else(|| vec![n / 2, n]);
+    let sweep_cfg =
+        Fig2Config { sizes: sizes.clone(), sigma, lambda, seed, ..Default::default() };
+    let sweep = fig2_estimator_scaling(&sweep_cfg, &specs).expect("estimator sweep");
+    println!("{}", sweep.to_console());
+    let mut slopes: Vec<(String, f64)> = Vec::new();
+    if sizes.len() >= 2 {
+        for spec in &specs {
+            let name = parse_estimator(spec).expect("spec parsed above").name();
+            let s = scaling_exponent_for(&sweep, &name);
+            println!("  {name:<22} empirical n-exponent: {s:.3}");
+            slopes.push((name, s));
+        }
+    }
+
+    // --- BENCH_estimators.json (repo-root schema: flat metric object)
+    if let Some(out) = args.get("out") {
+        let mut obj = BTreeMap::new();
+        let mut put = |k: String, v: f64| {
+            obj.insert(k, Json::Num(v));
+        };
+        put("threads".into(), pool::threads() as f64);
+        put("n".into(), n as f64);
+        put("lambda".into(), lambda);
+        put("reps".into(), reps as f64);
+        put("seed".into(), seed as f64);
+        // shoot-out columns: estimator time_s R-ACC q05 q95 kernel_evals peak_MB
+        for row in &shoot.rows {
+            let p = sanitize(&row[0]);
+            let f = |s: &str| s.parse::<f64>().expect("numeric table cell");
+            put(format!("{p}_time_s"), f(&row[1]));
+            put(format!("{p}_racc_mean"), f(&row[2]));
+            put(format!("{p}_racc_q05"), f(&row[3]));
+            put(format!("{p}_racc_q95"), f(&row[4]));
+            put(format!("{p}_kernel_evals"), f(&row[5]));
+            put(format!("{p}_peak_mb"), f(&row[6]));
+        }
+        for (name, s) in &slopes {
+            put(format!("{}_n_exponent", sanitize(name)), *s);
+        }
+        obj.insert("bench".to_string(), Json::Str("estimators".to_string()));
+        std::fs::write(out, Json::Obj(obj).to_string()).expect("writing BENCH json");
+        println!("wrote {out}");
+    }
+}

@@ -10,6 +10,6 @@ fn main() {
     let cfg = Fig1Config { n: 1_500, reps: 3, lambda: 1e-4, ..Default::default() };
     let ds = susy_like(cfg.n, &mut Rng::seeded(cfg.seed.wrapping_add(77)));
     let eng = build_engine(EngineKind::Native, ds.x, Gaussian::new(cfg.sigma)).unwrap();
-    let t = fig1_accuracy(eng.as_dyn(), &cfg);
+    let t = fig1_accuracy(eng.as_dyn(), &cfg).expect("fig1");
     println!("{}", t.to_console());
 }

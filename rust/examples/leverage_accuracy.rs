@@ -25,7 +25,7 @@ fn main() -> anyhow::Result<()> {
     let ds = susy_like(cfg.n, &mut Rng::seeded(cfg.seed.wrapping_add(77)));
     let kind = EngineKind::parse(&args.get_str("engine", "native")).unwrap();
     let engine = build_engine(kind, ds.x, Gaussian::new(cfg.sigma))?;
-    let table = fig1_accuracy(engine.as_dyn(), &cfg);
+    let table = fig1_accuracy(engine.as_dyn(), &cfg)?;
     println!("{}", table.to_console());
     println!("{}", table.to_markdown());
     Ok(())

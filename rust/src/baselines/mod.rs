@@ -47,7 +47,8 @@ pub fn exact_rls(
     rng: &mut Rng,
 ) -> SamplerOutput {
     let n = engine.n();
-    let scores = exact_leverage_scores(engine, lambda);
+    let scores =
+        exact_leverage_scores(engine, lambda).expect("exact RLS reference must factor");
     let set = sample_proportional(&(0..n).collect::<Vec<_>>(), &scores, m, n, lambda, rng);
     SamplerOutput { set, score_evals: n }
 }
@@ -112,7 +113,7 @@ mod tests {
         let gen = LsGenerator::new(&eng, &out.set, lambda).unwrap();
         let all: Vec<usize> = (0..250).collect();
         let approx = gen.scores(&all);
-        let exact = exact_leverage_scores(&eng, lambda);
+        let exact = exact_leverage_scores(&eng, lambda).unwrap();
         let stats = RAccStats::from_scores(&approx, &exact);
         assert!(stats.mean > 0.7 && stats.mean < 1.6, "mean {}", stats.mean);
     }

@@ -126,7 +126,7 @@ mod tests {
         assert!(out.score_evals >= 400);
         let gen = LsGenerator::new(&eng, &out.set, lambda).unwrap();
         let stats =
-            RAccStats::from_scores(&gen.scores_all(), &exact_leverage_scores(&eng, lambda));
+            RAccStats::from_scores(&gen.scores_all(), &exact_leverage_scores(&eng, lambda).unwrap());
         assert!(stats.mean > 0.5 && stats.mean < 2.0, "mean {}", stats.mean);
     }
 

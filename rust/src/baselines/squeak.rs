@@ -128,7 +128,7 @@ mod tests {
         let gen = LsGenerator::new(&eng, &out.set, lambda).unwrap();
         let all: Vec<usize> = (0..400).collect();
         let stats =
-            RAccStats::from_scores(&gen.scores(&all), &exact_leverage_scores(&eng, lambda));
+            RAccStats::from_scores(&gen.scores(&all), &exact_leverage_scores(&eng, lambda).unwrap());
         assert!(stats.mean > 0.5 && stats.mean < 2.0, "mean {}", stats.mean);
     }
 

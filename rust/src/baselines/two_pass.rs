@@ -72,7 +72,7 @@ mod tests {
         let gen = LsGenerator::new(&eng, &out.set, lambda).unwrap();
         let all: Vec<usize> = (0..300).collect();
         let stats =
-            RAccStats::from_scores(&gen.scores(&all), &exact_leverage_scores(&eng, lambda));
+            RAccStats::from_scores(&gen.scores(&all), &exact_leverage_scores(&eng, lambda).unwrap());
         assert!(stats.mean > 0.6 && stats.mean < 1.8, "mean {}", stats.mean);
     }
 

@@ -149,7 +149,7 @@ mod tests {
         let out = bless(&eng, lambda, &BlessConfig::default(), &mut Rng::seeded(2));
         let gen = LsGenerator::new(&eng, out.final_set(), lambda).unwrap();
         let approx = gen.scores_all();
-        let exact = exact_leverage_scores(&eng, lambda);
+        let exact = exact_leverage_scores(&eng, lambda).unwrap();
         let stats = RAccStats::from_scores(&approx, &exact);
         assert!(
             stats.mean > 0.6 && stats.mean < 1.8,
@@ -167,7 +167,7 @@ mod tests {
         let lambda = 1e-2;
         let cfg = BlessConfig::default();
         let out = bless(&eng, lambda, &cfg, &mut Rng::seeded(3));
-        let deff = effective_dimension(&exact_leverage_scores(&eng, lambda));
+        let deff = effective_dimension(&exact_leverage_scores(&eng, lambda).unwrap());
         let m = out.final_set().len() as f64;
         assert!(
             m <= 4.0 * cfg.q2 * deff + cfg.min_m as f64,

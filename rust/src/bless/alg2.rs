@@ -164,7 +164,7 @@ mod tests {
         let out = bless_r(&eng, lambda, &BlessRConfig::default(), &mut Rng::seeded(2));
         let gen = LsGenerator::new(&eng, out.final_set(), lambda).unwrap();
         let approx = gen.scores_all();
-        let exact = exact_leverage_scores(&eng, lambda);
+        let exact = exact_leverage_scores(&eng, lambda).unwrap();
         let stats = RAccStats::from_scores(&approx, &exact);
         assert!(
             stats.mean > 0.6 && stats.mean < 1.8,
@@ -180,7 +180,7 @@ mod tests {
         let lambda = 1e-2;
         let cfg = BlessRConfig::default();
         let out = bless_r(&eng, lambda, &cfg, &mut Rng::seeded(3));
-        let deff = effective_dimension(&exact_leverage_scores(&eng, lambda));
+        let deff = effective_dimension(&exact_leverage_scores(&eng, lambda).unwrap());
         let m = out.final_set().len() as f64;
         // Thm. 1(b) shape: |J| = O(q2·deff)
         assert!(m <= 6.0 * cfg.q2 * deff + cfg.min_m as f64, "|J| = {m}, deff = {deff}");

@@ -10,7 +10,9 @@
 
 use super::{run_method, Method};
 use crate::kernels::KernelEngine;
-use crate::leverage::{exact_leverage_scores, LsGenerator, RAccStats};
+use crate::leverage::{
+    exact_leverage_scores, parse_estimator, run_estimator, LsGenerator, RAccStats,
+};
 use crate::rng::Rng;
 use crate::util::table::{fnum, Table};
 use crate::util::{mean, timed};
@@ -51,10 +53,14 @@ impl Default for Fig1Config {
 
 /// Run the accuracy comparison; returns the Figure-1 table
 /// (method, time, mean R-ACC, 5ᵗʰ/95ᵗʰ quantiles, |J|).
-pub fn fig1_accuracy(engine: &dyn KernelEngine, cfg: &Fig1Config) -> Table {
+///
+/// Errors when the exact reference (or a method's generator) cannot
+/// factor the regularized kernel matrix — degenerate data, not a bug.
+pub fn fig1_accuracy(engine: &dyn KernelEngine, cfg: &Fig1Config) -> anyhow::Result<Table> {
     let n = engine.n();
     // exact reference once (shared across methods and reps)
     let (exact, exact_secs) = timed(|| exact_leverage_scores(engine, cfg.lambda));
+    let exact = exact?;
     let mut table = Table::new(
         &format!(
             "Figure 1: R-ACC at λ={:.0e}, n={}, σ={}, {} reps (exact ref: {:.1}s)",
@@ -73,7 +79,7 @@ pub fn fig1_accuracy(engine: &dyn KernelEngine, cfg: &Fig1Config) -> Table {
             let mut rng = Rng::seeded(cfg.seed ^ (rep as u64 + 1) * 0x9E37);
             let ((set, _), secs) =
                 timed(|| run_method(m, engine, cfg.lambda, cfg.uniform_m, &mut rng));
-            let gen = LsGenerator::new(engine, &set, cfg.lambda).expect("generator");
+            let gen = LsGenerator::new(engine, &set, cfg.lambda)?;
             let approx = gen.scores_all();
             let stats = RAccStats::from_scores(&approx, &exact);
             times.push(secs);
@@ -91,7 +97,86 @@ pub fn fig1_accuracy(engine: &dyn KernelEngine, cfg: &Fig1Config) -> Table {
             format!("{:.0}", mean(&sizes)),
         ]);
     }
-    table
+    Ok(table)
+}
+
+/// Configuration of the estimator shoot-out — the Figure-1 experiment
+/// widened from samplers to the full [`crate::leverage::LeverageEstimator`]
+/// family (exact / BLESS / RRLS / count-sketch / SRFT / recursive-RLS
+/// Nyström), with cost accounting per estimator.
+#[derive(Clone, Debug)]
+pub struct ShootoutConfig {
+    pub lambda: f64,
+    pub reps: usize,
+    pub seed: u64,
+    /// Estimator spec strings, e.g. `"srft:256"` — see
+    /// [`crate::leverage::parse_estimator`].
+    pub specs: Vec<String>,
+}
+
+impl Default for ShootoutConfig {
+    fn default() -> Self {
+        ShootoutConfig {
+            lambda: 1e-2,
+            reps: 3,
+            seed: 7,
+            specs: ["exact", "bless", "rrls", "count-sketch:256", "srft:256", "rls-nystrom:256"]
+                .iter()
+                .map(|s| s.to_string())
+                .collect(),
+        }
+    }
+}
+
+/// Run every estimator in `cfg.specs` against the exact reference and
+/// tabulate accuracy (mean R-ACC + 5ᵗʰ/95ᵗʰ quantiles of the score
+/// ratios), wall-clock, kernel-entry evaluations, and peak dense
+/// workspace — the per-estimator rows behind `BENCH_estimators.json`.
+pub fn fig1_estimator_shootout(
+    engine: &dyn KernelEngine,
+    cfg: &ShootoutConfig,
+) -> anyhow::Result<Table> {
+    let n = engine.n();
+    let exact = exact_leverage_scores(engine, cfg.lambda)?;
+    let mut table = Table::new(
+        &format!(
+            "Estimator shoot-out: R-ACC vs cost at λ={:.0e}, n={}, {} reps",
+            cfg.lambda, n, cfg.reps
+        ),
+        &["estimator", "time_s", "R-ACC", "q05", "q95", "kernel_evals", "peak_MB"],
+    );
+    for spec in &cfg.specs {
+        let est = parse_estimator(spec)
+            .ok_or_else(|| anyhow::anyhow!("unknown estimator spec `{spec}`"))?;
+        let mut times = Vec::new();
+        let mut means = Vec::new();
+        let mut q05s = Vec::new();
+        let mut q95s = Vec::new();
+        let mut evals = Vec::new();
+        let mut peaks = Vec::new();
+        for rep in 0..cfg.reps {
+            let mut rng = Rng::seeded(cfg.seed ^ (rep as u64 + 1) * 0x9E37);
+            let (res, secs) = timed(|| run_estimator(est.as_ref(), engine, cfg.lambda, &mut rng));
+            let e = res?;
+            let stats = RAccStats::from_scores(&e.scores, &exact);
+            times.push(secs);
+            means.push(stats.mean);
+            q05s.push(stats.q05);
+            q95s.push(stats.q95);
+            evals.push(e.kernel_evals as f64);
+            peaks.push(e.peak_bytes as f64 / 1e6);
+        }
+        table.row(&[
+            est.name(),
+            fnum(mean(&times)),
+            fnum(mean(&means)),
+            fnum(mean(&q05s)),
+            fnum(mean(&q95s)),
+            format!("{:.0}", mean(&evals)),
+            fnum(mean(&peaks)),
+        ]);
+    }
+    Ok(table)
 }
 
 #[cfg(test)]
@@ -116,10 +201,33 @@ mod tests {
             ..Default::default()
         };
         let eng = default_engine(&cfg);
-        let t = fig1_accuracy(&eng, &cfg);
+        let t = fig1_accuracy(&eng, &cfg).unwrap();
         assert_eq!(t.rows.len(), 2);
         // BLESS mean R-ACC close to 1
         let bless_racc: f64 = t.rows[0][2].parse().unwrap();
         assert!(bless_racc > 0.5 && bless_racc < 2.0, "R-ACC {bless_racc}");
+    }
+
+    #[test]
+    fn estimator_shootout_tabulates_every_spec() {
+        let fig = Fig1Config { n: 150, lambda: 1e-2, ..Default::default() };
+        let eng = default_engine(&fig);
+        let cfg = ShootoutConfig {
+            lambda: 1e-2,
+            reps: 1,
+            seed: 3,
+            specs: vec!["exact".into(), "srft:64".into(), "count-sketch:64".into()],
+        };
+        let t = fig1_estimator_shootout(&eng, &cfg).unwrap();
+        assert_eq!(t.rows.len(), 3);
+        // the exact row compares the reference to itself: mean ratio 1
+        let racc: f64 = t.rows[0][2].parse().unwrap();
+        assert!((racc - 1.0).abs() < 1e-9, "exact R-ACC {racc}");
+        // cost columns populated: exact evaluates the full n² kernel block
+        let evals: f64 = t.rows[0][5].parse().unwrap();
+        assert!(evals >= (150 * 150) as f64, "kernel evals {evals}");
+        // unknown specs are an error, not a panic
+        let bad = ShootoutConfig { specs: vec!["no-such".into()], ..cfg };
+        assert!(fig1_estimator_shootout(&eng, &bad).is_err());
     }
 }

@@ -8,6 +8,7 @@
 use super::{run_method, Method};
 use crate::data::susy_like;
 use crate::kernels::{Gaussian, NativeEngine};
+use crate::leverage::{parse_estimator, run_estimator};
 use crate::rng::Rng;
 use crate::util::table::{fnum, Table};
 use crate::util::timed;
@@ -60,13 +61,50 @@ pub fn fig2_scaling(cfg: &Fig2Config) -> Table {
     table
 }
 
+/// The Figure-2 sweep over estimator-family members instead of
+/// samplers: one row per (n, estimator) with wall-clock, metered
+/// kernel-entry evaluations and peak dense workspace — how each
+/// estimator's *total* cost (not just score evals) scales in `n`.
+pub fn fig2_estimator_scaling(cfg: &Fig2Config, specs: &[String]) -> anyhow::Result<Table> {
+    let mut table = Table::new(
+        &format!("Estimator scaling: cost vs n at λ={:.0e}", cfg.lambda),
+        &["n", "estimator", "time_s", "kernel_evals", "peak_MB"],
+    );
+    for &n in &cfg.sizes {
+        let ds = susy_like(n, &mut Rng::seeded(cfg.seed.wrapping_add(n as u64)));
+        let eng = NativeEngine::new(ds.x, Gaussian::new(cfg.sigma));
+        for spec in specs {
+            let est = parse_estimator(spec)
+                .ok_or_else(|| anyhow::anyhow!("unknown estimator spec `{spec}`"))?;
+            let mut rng = Rng::seeded(cfg.seed ^ 0xE57A ^ n as u64);
+            let (res, secs) = timed(|| run_estimator(est.as_ref(), &eng, cfg.lambda, &mut rng));
+            let e = res?;
+            table.row(&[
+                n.to_string(),
+                est.name(),
+                fnum(secs),
+                e.kernel_evals.to_string(),
+                fnum(e.peak_bytes as f64 / 1e6),
+            ]);
+        }
+    }
+    Ok(table)
+}
+
 /// Fit the log-log slope of time vs n for one method from a fig2 table —
 /// the Table-1 empirical scaling exponent (≈0 for BLESS, ≈1 for others).
 pub fn scaling_exponent(table: &Table, method: Method) -> f64 {
+    scaling_exponent_for(table, method.name())
+}
+
+/// [`scaling_exponent`] generalized to any row label in column 1 — the
+/// estimator-shootout tables put [`crate::leverage::LeverageEstimator`]
+/// names there instead of [`Method`] names.
+pub fn scaling_exponent_for(table: &Table, name: &str) -> f64 {
     let pts: Vec<(f64, f64)> = table
         .rows
         .iter()
-        .filter(|r| r[1] == method.name())
+        .filter(|r| r[1] == name)
         .map(|r| {
             let n: f64 = r[0].parse().unwrap();
             let t: f64 = r[2].parse().unwrap();
@@ -102,5 +140,20 @@ mod tests {
             s_tp > s_bless - 0.2,
             "two-pass slope {s_tp} vs bless {s_bless}"
         );
+    }
+
+    #[test]
+    fn estimator_sweep_tabulates_costs() {
+        let cfg = Fig2Config { sizes: vec![150, 300], lambda: 1e-2, ..Default::default() };
+        let specs = vec!["srft:64".to_string(), "rls-nystrom:64".to_string()];
+        let t = fig2_estimator_scaling(&cfg, &specs).unwrap();
+        assert_eq!(t.rows.len(), 4);
+        // kernel evals metered: the sketched path evaluates the full n²
+        let evals: f64 = t.rows[0][3].parse().unwrap();
+        assert!(evals >= (150 * 150) as f64, "evals {evals}");
+        // the generalized slope fit accepts estimator names
+        let s = scaling_exponent_for(&t, "srft(s=64)");
+        assert!(s.is_finite());
+        assert!(fig2_estimator_scaling(&cfg, &["bogus".to_string()]).is_err());
     }
 }

@@ -16,8 +16,10 @@ mod fig45;
 mod table1;
 
 pub use engines::{build_engine, Engine, EngineKind};
-pub use fig1::{fig1_accuracy, Fig1Config};
-pub use fig2::{fig2_scaling, scaling_exponent, Fig2Config};
+pub use fig1::{fig1_accuracy, fig1_estimator_shootout, Fig1Config, ShootoutConfig};
+pub use fig2::{
+    fig2_estimator_scaling, fig2_scaling, scaling_exponent, scaling_exponent_for, Fig2Config,
+};
 pub use fig3::{fig3_stability, Fig3Config};
 pub use fig45::{fig45_falkon, Fig45Config, FalkonCurve};
 pub use table1::{table1_complexity, Table1Config};

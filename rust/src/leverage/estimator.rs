@@ -8,8 +8,8 @@
 //! per iteration and queries many times.
 
 use crate::kernels::{tile_indices, Centers, KernelEngine, DEFAULT_ROW_TILE};
-use crate::leverage::WeightedSet;
-use crate::linalg::{cholesky_take, CholeskyFactor, Matrix};
+use crate::leverage::{LeverageError, WeightedSet};
+use crate::linalg::{cholesky_jittered, CholeskyFactor, Matrix};
 
 /// Leverage-score generator for a fixed `(J, A, λ)`.
 ///
@@ -32,13 +32,23 @@ impl<'a> LsGenerator<'a> {
     /// Build the generator: evaluates `K_{J,J}`, adds `λnA`, factorizes.
     ///
     /// Cost: `O(|J|² d)` kernel evaluations + `O(|J|³)` factorization.
+    ///
+    /// The factorization retries with escalating diagonal jitter (same
+    /// policy as [`exact_leverage_scores`](crate::leverage::exact_leverage_scores))
+    /// and returns [`LeverageError::FactorizationFailed`] only when that
+    /// is exhausted — previously this was a hard error on any
+    /// borderline-PSD `K_{J,J}` (heavy duplicate draws at tiny λ).
     pub fn new(
         engine: &'a dyn KernelEngine,
         set: &WeightedSet,
         lambda: f64,
-    ) -> anyhow::Result<Self> {
-        anyhow::ensure!(lambda > 0.0, "lambda must be positive");
-        set.validate()?;
+    ) -> Result<Self, LeverageError> {
+        if !(lambda > 0.0) {
+            return Err(LeverageError::InvalidConfig(format!(
+                "lambda must be positive, got {lambda}"
+            )));
+        }
+        set.validate().map_err(|e| LeverageError::InvalidSet(e.to_string()))?;
         let centers = engine.gather_centers(&set.indices);
         let factor = if set.is_empty() {
             None
@@ -50,8 +60,14 @@ impl<'a> LsGenerator<'a> {
             // which keeps K_JJ PSD but can make the factorization
             // borderline; the λnA shift keeps it SPD for A > 0. The
             // in-place factorization takes ownership — no |J|² clone.
-            let f = cholesky_take(kjj)
-                .map_err(|_| anyhow::anyhow!("K_JJ + λnA not SPD (λ={lambda})"))?;
+            // The kernel product is symmetric only up to round-off;
+            // mirror for the factorization's bitwise-symmetry contract.
+            kjj.mirror_lower_to_upper();
+            let trace: f64 = kjj.diagonal().iter().sum();
+            let m = set.len();
+            let (f, _jitter) =
+                cholesky_jittered(kjj, trace.abs() * 1e-12 / m as f64, trace.abs().max(1.0))
+                    .ok_or(LeverageError::FactorizationFailed { dim: m, lambda })?;
             Some(f)
         };
         Ok(LsGenerator { engine, set: set.clone(), centers, lambda, factor })
@@ -166,7 +182,7 @@ mod tests {
         let set = WeightedSet::uniform((0..35).collect(), lambda);
         let gen = LsGenerator::new(&eng, &set, lambda).unwrap();
         let approx = gen.scores(&(0..35).collect::<Vec<_>>());
-        let exact = exact_leverage_scores(&eng, lambda);
+        let exact = exact_leverage_scores(&eng, lambda).unwrap();
         for (a, e) in approx.iter().zip(&exact) {
             assert!((a - e).abs() < 1e-9, "{a} vs {e}");
         }
@@ -192,7 +208,7 @@ mod tests {
         // K_ii − kᵀ(·)⁻¹k is larger than with J=[n].
         let eng = engine(40);
         let lambda = 1e-2;
-        let exact = exact_leverage_scores(&eng, lambda);
+        let exact = exact_leverage_scores(&eng, lambda).unwrap();
         let sub = WeightedSet::uniform((0..40).step_by(2).collect(), lambda);
         let gen = LsGenerator::new(&eng, &sub, lambda).unwrap();
         let approx = gen.scores(&(0..40).collect::<Vec<_>>());

@@ -6,7 +6,8 @@
 //! solve instead of a full inverse.
 
 use crate::kernels::KernelEngine;
-use crate::linalg::{cholesky_take, column_sq_norms};
+use crate::leverage::LeverageError;
+use crate::linalg::{cholesky_jittered, column_sq_norms};
 
 /// Exact leverage scores for all `n` points at regularization `λ`.
 ///
@@ -15,7 +16,18 @@ use crate::linalg::{cholesky_take, column_sq_norms};
 /// factorization, the `n`-column triangular solve and the `‖Z e_i‖²`
 /// contraction all run on the shared pool (fixed-block partitions, so
 /// the scores are bit-identical at any thread count).
-pub fn exact_leverage_scores(engine: &dyn KernelEngine, lambda: f64) -> Vec<f64> {
+///
+/// `K + λnI` is SPD for any PSD kernel matrix, but float round-off on
+/// near-rank-deficient inputs (duplicated points, tiny λ) can push the
+/// smallest pivot negative; the factorization retries with escalating
+/// diagonal jitter and returns
+/// [`LeverageError::FactorizationFailed`] — instead of the historical
+/// panic — when even that fails (e.g. non-finite data making kernel
+/// entries NaN).
+pub fn exact_leverage_scores(
+    engine: &dyn KernelEngine,
+    lambda: f64,
+) -> Result<Vec<f64>, LeverageError> {
     let n = engine.n();
     assert!(n > 0 && lambda > 0.0);
     let all: Vec<usize> = (0..n).collect();
@@ -23,14 +35,16 @@ pub fn exact_leverage_scores(engine: &dyn KernelEngine, lambda: f64) -> Vec<f64>
     let lam_n = lambda * n as f64;
     let mut reg = k.clone();
     reg.add_scaled_identity(lam_n);
-    let f = match cholesky_take(reg) {
-        Ok(f) => f,
-        Err(_) => panic!("K + λnI must be SPD"),
-    };
+    // the NT kernel product is symmetric up to round-off, not bitwise —
+    // mirror before the factorization's symmetry debug-assert sees it
+    reg.mirror_lower_to_upper();
+    let trace: f64 = reg.diagonal().iter().sum();
+    let (f, _jitter) = cholesky_jittered(reg, trace.abs() * 1e-12 / n as f64, trace.abs().max(1.0))
+        .ok_or(LeverageError::FactorizationFailed { dim: n, lambda })?;
     // Z = L⁻¹ K ; ℓ_i = (K_ii − ‖Z e_i‖²)/(λn) = (K_ii − Σ_r Z_ri²)/(λn)
     let z = f.solve_l_matrix(&k);
     let col_sq = column_sq_norms(&z);
-    (0..n).map(|i| ((k.get(i, i) - col_sq[i]) / lam_n).max(0.0)).collect()
+    Ok((0..n).map(|i| ((k.get(i, i) - col_sq[i]) / lam_n).max(0.0)).collect())
 }
 
 /// Effective dimension `d_eff(λ) = Σ_i ℓ(i,λ)` from a score vector.
@@ -81,7 +95,7 @@ mod tests {
     fn matches_dense_oracle() {
         let eng = engine(50, 2.0);
         for &lambda in &[1e-1, 1e-2, 1e-3] {
-            let fast = exact_leverage_scores(&eng, lambda);
+            let fast = exact_leverage_scores(&eng, lambda).unwrap();
             let slow = oracle(&eng, lambda);
             for (a, b) in fast.iter().zip(&slow) {
                 assert!((a - b).abs() < 1e-9, "λ={lambda}: {a} vs {b}");
@@ -93,7 +107,7 @@ mod tests {
     fn scores_in_unit_interval_and_sum_bounds() {
         let eng = engine(80, 3.0);
         let lambda = 1e-2;
-        let scores = exact_leverage_scores(&eng, lambda);
+        let scores = exact_leverage_scores(&eng, lambda).unwrap();
         for &s in &scores {
             assert!((0.0..=1.0 + 1e-12).contains(&s));
         }
@@ -112,7 +126,7 @@ mod tests {
         let x = Matrix::from_fn(10, 2, |i, j| (i * 10 + j) as f64 * 50.0);
         let eng = NativeEngine::new(x, Gaussian::new(0.01));
         let lambda = 0.05;
-        let scores = exact_leverage_scores(&eng, lambda);
+        let scores = exact_leverage_scores(&eng, lambda).unwrap();
         let expect = 1.0 / (1.0 + lambda * 10.0);
         for &s in &scores {
             assert!((s - expect).abs() < 1e-9, "{s} vs {expect}");
@@ -124,8 +138,8 @@ mod tests {
         // Lemma 3: ℓ(i,λ') ≤ ℓ(i,λ) ≤ (λ'/λ) ℓ(i,λ') for λ ≤ λ'
         let eng = engine(40, 2.0);
         let (lam, lam_p) = (1e-3, 1e-2);
-        let lo = exact_leverage_scores(&eng, lam_p);
-        let hi = exact_leverage_scores(&eng, lam);
+        let lo = exact_leverage_scores(&eng, lam_p).unwrap();
+        let hi = exact_leverage_scores(&eng, lam).unwrap();
         for (l, h) in lo.iter().zip(&hi) {
             assert!(*l <= *h + 1e-12);
             assert!(*h <= (lam_p / lam) * *l + 1e-9);
@@ -135,8 +149,8 @@ mod tests {
     #[test]
     fn deff_decreases_with_lambda() {
         let eng = engine(60, 2.0);
-        let d1 = effective_dimension(&exact_leverage_scores(&eng, 1e-1));
-        let d2 = effective_dimension(&exact_leverage_scores(&eng, 1e-3));
+        let d1 = effective_dimension(&exact_leverage_scores(&eng, 1e-1).unwrap());
+        let d2 = effective_dimension(&exact_leverage_scores(&eng, 1e-3).unwrap());
         assert!(d1 < d2, "d_eff must grow as λ shrinks: {d1} vs {d2}");
     }
 }

@@ -1,0 +1,437 @@
+//! The leverage-score **estimator family**: one trait over every way
+//! this crate approximates ridge leverage scores, plus uniform cost
+//! accounting.
+//!
+//! The paper's central comparison — BLESS vs the rest of the field — is
+//! only meaningful when every competitor answers the same question
+//! through the same interface: *"scores for all `n` points at `λ`,
+//! given a kernel engine and a seed"*. [`LeverageEstimator`] is that
+//! interface; [`run_estimator`] wraps the engine in a
+//! [`CountingEngine`] so kernel-entry evaluations are measured rather
+//! than estimated, and each estimator reports its actual peak dense
+//! workspace. The fig1/fig2 shoot-out and `BENCH_estimators.json` are
+//! built on these three pieces.
+//!
+//! Members: [`ExactEstimator`] (O(n³) reference), [`BlessEstimator`]
+//! (Alg. 1), [`RrlsEstimator`] (Bernoulli recursive RLS baseline),
+//! [`CountSketchEstimator`] / [`SrftEstimator`] (El Alaoui &
+//! Mahoney-style sketches of the kernel square root), and
+//! [`RlsNystromEstimator`] (Musco & Musco fixed-size recursive
+//! Nyström).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use crate::baselines::{rrls, RrlsConfig};
+use crate::bless::{bless, BlessConfig};
+use crate::kernels::{Centers, Gaussian, KernelEngine, DEFAULT_ROW_TILE};
+use crate::leverage::{
+    exact_leverage_scores, CountSketchEstimator, LeverageError, LsGenerator,
+    RecursiveNystromConfig, RlsNystromEstimator, SrftEstimator,
+};
+use crate::linalg::Matrix;
+use crate::rng::Rng;
+
+/// The result of one estimator run: the scores plus cost accounting.
+#[derive(Clone, Debug)]
+pub struct Estimate {
+    /// Approximate (or exact) scores `ℓ̃(i,λ)` for every point `0..n`.
+    pub scores: Vec<f64>,
+    /// Peak dense workspace the estimator allocated, in bytes —
+    /// computed by the estimator from its *actual* dictionary / sketch
+    /// sizes, not a static bound.
+    pub peak_bytes: u64,
+    /// Kernel entries evaluated. Estimators leave this 0; it is filled
+    /// in by [`run_estimator`]'s [`CountingEngine`].
+    pub kernel_evals: u64,
+}
+
+impl Estimate {
+    /// An estimate with the given scores and workspace, evals unfilled.
+    pub fn new(scores: Vec<f64>, peak_bytes: u64) -> Self {
+        Estimate { scores, peak_bytes, kernel_evals: 0 }
+    }
+}
+
+/// A ridge leverage-score estimator: anything that can produce scores
+/// for all `n` points of a [`KernelEngine`]'s dataset at level `λ`.
+///
+/// Contract shared by every implementation:
+/// - scores are clamped positive and finite on success;
+/// - the same `(engine, lambda, seed)` triple yields **bitwise
+///   identical** scores at any `--threads` (the determinism tier in
+///   `tests/parallel_determinism.rs` enforces this);
+/// - all randomness is drawn from the passed [`Rng`] — no hidden state,
+///   so seed-sensitivity is testable (`util/prop.rs`).
+pub trait LeverageEstimator {
+    /// Display name including parameters, e.g. `srft(s=256)`.
+    fn name(&self) -> String;
+
+    /// Estimate scores for every point at regularization `λ`.
+    fn estimate(
+        &self,
+        engine: &dyn KernelEngine,
+        lambda: f64,
+        rng: &mut Rng,
+    ) -> Result<Estimate, LeverageError>;
+
+    /// Convenience: scores only.
+    fn scores(
+        &self,
+        engine: &dyn KernelEngine,
+        lambda: f64,
+        rng: &mut Rng,
+    ) -> Result<Vec<f64>, LeverageError> {
+        Ok(self.estimate(engine, lambda, rng)?.scores)
+    }
+}
+
+/// Run an estimator with kernel-evaluation metering: wraps `engine` in a
+/// [`CountingEngine`] and fills [`Estimate::kernel_evals`] with the
+/// measured count.
+pub fn run_estimator(
+    est: &dyn LeverageEstimator,
+    engine: &dyn KernelEngine,
+    lambda: f64,
+    rng: &mut Rng,
+) -> Result<Estimate, LeverageError> {
+    let counting = CountingEngine::new(engine);
+    let mut out = est.estimate(&counting, lambda, rng)?;
+    out.kernel_evals = counting.kernel_evals();
+    Ok(out)
+}
+
+/// A [`KernelEngine`] decorator that counts evaluated kernel entries.
+///
+/// Every block-producing method is overridden to add `rows × cols` to an
+/// atomic counter before delegating; the `knm_*` streaming defaults
+/// bottom out in the overridden `block_range`, so they are metered too.
+/// `diag`/`gather_centers` delegate without counting — the Gaussian
+/// diagonal is free and gathers evaluate nothing.
+pub struct CountingEngine<'a> {
+    inner: &'a dyn KernelEngine,
+    evals: AtomicU64,
+}
+
+impl<'a> CountingEngine<'a> {
+    /// Wrap an engine with a zeroed counter.
+    pub fn new(inner: &'a dyn KernelEngine) -> Self {
+        CountingEngine { inner, evals: AtomicU64::new(0) }
+    }
+
+    /// Kernel entries evaluated through this wrapper so far.
+    pub fn kernel_evals(&self) -> u64 {
+        self.evals.load(Ordering::Relaxed)
+    }
+
+    fn add(&self, rows: usize, cols: usize) {
+        self.evals.fetch_add((rows * cols) as u64, Ordering::Relaxed);
+    }
+}
+
+impl KernelEngine for CountingEngine<'_> {
+    fn n(&self) -> usize {
+        self.inner.n()
+    }
+
+    fn kernel(&self) -> &Gaussian {
+        self.inner.kernel()
+    }
+
+    fn points(&self) -> &Matrix {
+        self.inner.points()
+    }
+
+    fn block(&self, rows: &[usize], cols: &[usize]) -> Matrix {
+        self.add(rows.len(), cols.len());
+        self.inner.block(rows, cols)
+    }
+
+    fn cross_block(&self, q: &Matrix, cols: &[usize]) -> Matrix {
+        self.add(q.rows(), cols.len());
+        self.inner.cross_block(q, cols)
+    }
+
+    fn diag(&self, idx: &[usize]) -> Vec<f64> {
+        self.inner.diag(idx)
+    }
+
+    fn kappa_sq(&self) -> f64 {
+        self.inner.kappa_sq()
+    }
+
+    fn gather_centers(&self, idx: &[usize]) -> Centers {
+        self.inner.gather_centers(idx)
+    }
+
+    fn block_range(&self, s: usize, e: usize, centers: &Centers) -> Matrix {
+        self.add(e - s, centers.m());
+        self.inner.block_range(s, e, centers)
+    }
+
+    fn block_range_into(&self, s: usize, e: usize, centers: &Centers, out: &mut Matrix) {
+        self.add(e - s, centers.m());
+        self.inner.block_range_into(s, e, centers, out);
+    }
+
+    fn centers_block(&self, centers: &Centers, cols: &[usize]) -> Matrix {
+        self.add(centers.m(), cols.len());
+        self.inner.centers_block(centers, cols)
+    }
+
+    fn centers_square(&self, centers: &Centers) -> Matrix {
+        self.add(centers.m(), centers.m());
+        self.inner.centers_square(centers)
+    }
+
+    fn cross_block_range(&self, q: &Matrix, s: usize, e: usize, centers: &Centers) -> Matrix {
+        self.add(e - s, centers.m());
+        self.inner.cross_block_range(q, s, e, centers)
+    }
+}
+
+/// Peak workspace of a subset estimator with an `m`-column dictionary:
+/// the `m × m` factor, one `m × tile` cross block, and the score vector.
+fn subset_peak_bytes(n: usize, m: usize) -> u64 {
+    8 * (m * m + m * DEFAULT_ROW_TILE.min(n) + n) as u64
+}
+
+/// The O(n³) exact reference (Eq. 1) as a family member.
+pub struct ExactEstimator;
+
+impl LeverageEstimator for ExactEstimator {
+    fn name(&self) -> String {
+        "exact".to_string()
+    }
+
+    fn estimate(
+        &self,
+        engine: &dyn KernelEngine,
+        lambda: f64,
+        _rng: &mut Rng,
+    ) -> Result<Estimate, LeverageError> {
+        let n = engine.n();
+        let scores = exact_leverage_scores(engine, lambda)?;
+        // K, its regularized copy/factor, and the n×n triangular solve
+        Ok(Estimate::new(scores, 8 * (3 * n * n) as u64))
+    }
+}
+
+/// BLESS (Alg. 1) adapted onto the family: run the path, then score all
+/// points through the final dictionary's [`LsGenerator`].
+pub struct BlessEstimator {
+    pub cfg: BlessConfig,
+}
+
+impl LeverageEstimator for BlessEstimator {
+    fn name(&self) -> String {
+        "bless".to_string()
+    }
+
+    fn estimate(
+        &self,
+        engine: &dyn KernelEngine,
+        lambda: f64,
+        rng: &mut Rng,
+    ) -> Result<Estimate, LeverageError> {
+        let path = bless(engine, lambda, &self.cfg, rng);
+        let set = path.final_set();
+        let gen = LsGenerator::new(engine, set, lambda)?;
+        let scores = gen.scores_all();
+        Ok(Estimate::new(scores, subset_peak_bytes(engine.n(), set.len())))
+    }
+}
+
+/// The Bernoulli-keeps recursive RLS baseline ([`rrls`]) as a family
+/// member (distinct from the fixed-size Musco & Musco variant,
+/// [`RlsNystromEstimator`]).
+pub struct RrlsEstimator {
+    pub cfg: RrlsConfig,
+}
+
+impl LeverageEstimator for RrlsEstimator {
+    fn name(&self) -> String {
+        "rrls".to_string()
+    }
+
+    fn estimate(
+        &self,
+        engine: &dyn KernelEngine,
+        lambda: f64,
+        rng: &mut Rng,
+    ) -> Result<Estimate, LeverageError> {
+        let out = rrls(engine, lambda, &self.cfg, rng);
+        let gen = LsGenerator::new(engine, &out.set, lambda)?;
+        let scores = gen.scores_all();
+        Ok(Estimate::new(scores, subset_peak_bytes(engine.n(), out.set.len())))
+    }
+}
+
+/// Parse an estimator spec string into a boxed family member.
+///
+/// Specs (case-insensitive, optional `:<param>` suffix):
+/// - `exact`
+/// - `bless`
+/// - `rrls`
+/// - `count-sketch[:s]` (aliases `cwt`, `countsketch`; default s = 256)
+/// - `srft[:s]` (default s = 256)
+/// - `rls-nystrom[:m]` (aliases `recursive-nystrom`, `rlsn`;
+///   default m = 256)
+///
+/// Returns `None` for unknown names or malformed parameters.
+pub fn parse_estimator(spec: &str) -> Option<Box<dyn LeverageEstimator>> {
+    let spec = spec.trim().to_ascii_lowercase();
+    let (name, arg) = match spec.split_once(':') {
+        Some((n, a)) => (n, Some(a)),
+        None => (spec.as_str(), None),
+    };
+    let parse_size = |default: usize| -> Option<usize> {
+        match arg {
+            None => Some(default),
+            Some(a) => a.parse::<usize>().ok().filter(|&v| v > 0),
+        }
+    };
+    match name {
+        "exact" => {
+            if arg.is_some() {
+                return None;
+            }
+            Some(Box::new(ExactEstimator))
+        }
+        "bless" => {
+            if arg.is_some() {
+                return None;
+            }
+            Some(Box::new(BlessEstimator { cfg: BlessConfig::default() }))
+        }
+        "rrls" => {
+            if arg.is_some() {
+                return None;
+            }
+            Some(Box::new(RrlsEstimator { cfg: RrlsConfig::default() }))
+        }
+        "count-sketch" | "countsketch" | "cwt" => {
+            Some(Box::new(CountSketchEstimator { s: parse_size(256)? }))
+        }
+        "srft" => Some(Box::new(SrftEstimator { s: parse_size(256)? })),
+        "rls-nystrom" | "recursive-nystrom" | "rlsn" => Some(Box::new(RlsNystromEstimator {
+            cfg: RecursiveNystromConfig { m: parse_size(256)?, ..Default::default() },
+        })),
+        _ => None,
+    }
+}
+
+/// The default shoot-out lineup: every family member, with the sketched
+/// estimators at sketch size `sketch_s` and the Nyström variants at
+/// dictionary size `nystrom_m`.
+pub fn default_family(sketch_s: usize, nystrom_m: usize) -> Vec<Box<dyn LeverageEstimator>> {
+    vec![
+        Box::new(ExactEstimator),
+        Box::new(BlessEstimator { cfg: BlessConfig::default() }),
+        Box::new(RrlsEstimator { cfg: RrlsConfig::default() }),
+        Box::new(CountSketchEstimator { s: sketch_s }),
+        Box::new(SrftEstimator { s: sketch_s }),
+        Box::new(RlsNystromEstimator {
+            cfg: RecursiveNystromConfig { m: nystrom_m, ..Default::default() },
+        }),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::susy_like;
+    use crate::kernels::NativeEngine;
+    use crate::leverage::RAccStats;
+
+    fn engine(n: usize) -> NativeEngine {
+        let ds = susy_like(n, &mut Rng::seeded(31));
+        NativeEngine::new(ds.x, Gaussian::new(2.0))
+    }
+
+    #[test]
+    fn counting_engine_meters_every_block_path() {
+        let eng = engine(40);
+        let c = CountingEngine::new(&eng);
+        assert_eq!(c.kernel_evals(), 0);
+        let rows: Vec<usize> = (0..10).collect();
+        let cols: Vec<usize> = (0..7).collect();
+        let b = c.block(&rows, &cols);
+        assert_eq!(b.rows(), 10);
+        assert_eq!(c.kernel_evals(), 70);
+        let centers = c.gather_centers(&cols);
+        assert_eq!(c.kernel_evals(), 70, "gather must not count");
+        let _ = c.centers_square(&centers);
+        assert_eq!(c.kernel_evals(), 70 + 49);
+        let _ = c.block_range(0, 5, &centers);
+        assert_eq!(c.kernel_evals(), 70 + 49 + 35);
+        let _ = c.centers_block(&centers, &rows);
+        assert_eq!(c.kernel_evals(), 70 + 49 + 35 + 70);
+        // streaming defaults flow through the counted block_range
+        let v = vec![1.0; cols.len()];
+        let _ = c.knm_matvec(&cols, &v);
+        assert_eq!(c.kernel_evals(), 70 + 49 + 35 + 70 + 40 * 7);
+        // values untouched by the metering
+        let direct = eng.block(&rows, &cols);
+        assert!(b.max_abs_diff(&direct) == 0.0);
+    }
+
+    #[test]
+    fn exact_estimator_matches_reference_and_counts_n_squared() {
+        let eng = engine(35);
+        let lambda = 1e-2;
+        let est = ExactEstimator;
+        let out = run_estimator(&est, &eng, lambda, &mut Rng::seeded(0)).unwrap();
+        let reference = exact_leverage_scores(&eng, lambda).unwrap();
+        assert_eq!(out.scores, reference);
+        assert_eq!(out.kernel_evals, 35 * 35);
+        assert!(out.peak_bytes >= 8 * 35 * 35);
+    }
+
+    #[test]
+    fn adapted_samplers_stay_accurate_through_the_trait() {
+        let eng = engine(300);
+        let lambda = 1e-2;
+        let exact = exact_leverage_scores(&eng, lambda).unwrap();
+        for (est, name) in [
+            (
+                Box::new(BlessEstimator { cfg: BlessConfig::default() })
+                    as Box<dyn LeverageEstimator>,
+                "bless",
+            ),
+            (Box::new(RrlsEstimator { cfg: RrlsConfig::default() }), "rrls"),
+        ] {
+            assert_eq!(est.name(), name);
+            let out = run_estimator(est.as_ref(), &eng, lambda, &mut Rng::seeded(4)).unwrap();
+            let stats = RAccStats::from_scores(&out.scores, &exact);
+            assert!(
+                stats.mean > 0.5 && stats.mean < 2.0,
+                "{name}: mean R-ACC {} out of range",
+                stats.mean
+            );
+            assert!(out.kernel_evals > 0, "{name}: no kernel evals metered");
+            assert!(out.peak_bytes > 0);
+        }
+    }
+
+    #[test]
+    fn spec_parsing_roundtrip() {
+        for (spec, name) in [
+            ("exact", "exact"),
+            ("bless", "bless"),
+            ("rrls", "rrls"),
+            ("count-sketch:128", "count-sketch(s=128)"),
+            ("CWT:64", "count-sketch(s=64)"),
+            ("srft", "srft(s=256)"),
+            ("srft:512", "srft(s=512)"),
+            ("rls-nystrom:100", "rls-nystrom(m=100)"),
+            ("rlsn", "rls-nystrom(m=256)"),
+        ] {
+            let est = parse_estimator(spec).unwrap_or_else(|| panic!("spec {spec} rejected"));
+            assert_eq!(est.name(), name, "spec {spec}");
+        }
+        for bad in ["", "unknown", "srft:0", "srft:abc", "exact:3", "count-sketch:-1"] {
+            assert!(parse_estimator(bad).is_none(), "spec {bad} accepted");
+        }
+        assert_eq!(default_family(128, 96).len(), 6);
+    }
+}

@@ -8,11 +8,60 @@
 
 mod estimator;
 mod exact;
+mod family;
+mod recursive;
+mod sketch;
 
 pub use estimator::LsGenerator;
 pub use exact::{effective_dimension, exact_leverage_scores, max_leverage_dimension};
+pub use family::{
+    default_family, parse_estimator, run_estimator, BlessEstimator, CountingEngine, Estimate,
+    ExactEstimator, LeverageEstimator, RrlsEstimator,
+};
+pub use recursive::{recursive_nystrom, RecursiveNystromConfig, RlsNystromEstimator};
+pub use sketch::{CountSketchEstimator, SrftEstimator};
 
 use crate::util::quantile;
+
+/// Typed failure modes of the leverage-score tier.
+///
+/// Historically `exact_leverage_scores` panicked ("K + λnI must be SPD")
+/// when the factorization failed — reachable from library code on
+/// degenerate inputs (e.g. non-finite data rows turning kernel entries
+/// into NaN, where no amount of diagonal jitter rescues the Cholesky).
+/// Every estimator now surfaces that as a value instead.
+#[derive(Clone, Debug, PartialEq)]
+pub enum LeverageError {
+    /// The (jittered) Cholesky factorization of the regularized kernel
+    /// matrix exhausted its retry budget.
+    FactorizationFailed {
+        /// Dimension of the matrix that failed to factor.
+        dim: usize,
+        /// Regularization level at which it failed.
+        lambda: f64,
+    },
+    /// A [`WeightedSet`] failed validation (length mismatch,
+    /// non-positive weight, out-of-range index).
+    InvalidSet(String),
+    /// An estimator was built or invoked with invalid parameters.
+    InvalidConfig(String),
+}
+
+impl std::fmt::Display for LeverageError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            LeverageError::FactorizationFailed { dim, lambda } => write!(
+                f,
+                "Cholesky of the {dim}×{dim} regularized kernel matrix failed \
+                 (λ={lambda}): jitter retries exhausted — is the input data finite?"
+            ),
+            LeverageError::InvalidSet(msg) => write!(f, "invalid weighted set: {msg}"),
+            LeverageError::InvalidConfig(msg) => write!(f, "invalid estimator config: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for LeverageError {}
 
 /// A weighted column subset `(J, A)` — the output of every sampler in this
 /// crate (BLESS, BLESS-R and all baselines) and the input to FALKON.
@@ -116,6 +165,17 @@ mod tests {
         let st = RAccStats::from_scores(&s, &s);
         assert!((st.mean - 1.0).abs() < 1e-12);
         assert!(st.within_bound(0.01));
+    }
+
+    #[test]
+    fn leverage_error_display_and_source() {
+        let e = LeverageError::FactorizationFailed { dim: 40, lambda: 1e-3 };
+        let msg = e.to_string();
+        assert!(msg.contains("40×40") && msg.contains("0.001"), "{msg}");
+        // usable through the std Error trait (and therefore anyhow `?`)
+        let dynamic: Box<dyn std::error::Error> = Box::new(e);
+        assert!(dynamic.to_string().contains("jitter"));
+        assert!(LeverageError::InvalidConfig("s = 0".into()).to_string().contains("s = 0"));
     }
 
     #[test]

@@ -1,0 +1,311 @@
+//! Sketched ridge leverage-score estimators (El Alaoui & Mahoney 2015):
+//! count-sketch (Clarkson–Woodruff) and the subsampled randomized
+//! Hadamard transform (SRFT), applied to the kernel square root.
+//!
+//! With `K = L Lᵀ` (jittered Cholesky of `K` itself), the push-through
+//! identity gives the **exact** scores as
+//! `ℓ(i,λ) = row_i(L) · (LᵀL + λnI)⁻¹ · row_i(L)ᵀ`. Sketching replaces
+//! `L` by `B = L Sᵀ` (`n × s`, `s ≪ n`) so the Gram solve shrinks from
+//! `n × n` to `s × s`:
+//!
+//! `ℓ̃(i,λ) = b_i (BᵀB + λnI)⁻¹ b_iᵀ`
+//!
+//! which is precisely the exact score of the approximate kernel
+//! `K̃ = B Bᵀ = L SᵀS Lᵀ` — so `S = I` (or any orthonormal `S`, e.g.
+//! SRFT at `s = p`) recovers the exact scores up to float, and the
+//! quality degrades gracefully with the JL property of `SᵀS ≈ I`.
+//!
+//! The solve never forms `BᵀB`: the `R` factor of the stacked
+//! `(n+s) × s` matrix `[B; √(λn)·I]` (new blocked Householder QR,
+//! [`crate::linalg::qr`]) satisfies `RᵀR = BᵀB + λnI`, so
+//! `ℓ̃(i,λ) = ‖R⁻ᵀ b_iᵀ‖²` — one triangular solve, numerically stable
+//! even when `B` is ill-conditioned. Both sketch applications are
+//! pool-parallel over fixed output-row blocks (each output row depends
+//! only on its own row of `L`), keeping the scores bit-identical at any
+//! thread count.
+
+use crate::kernels::KernelEngine;
+use crate::leverage::{Estimate, LeverageError, LeverageEstimator};
+use crate::linalg::{cholesky_jittered, column_sq_norms, qr, Matrix};
+use crate::rng::Rng;
+use crate::util::pool;
+
+/// Row-block height of the parallel sketch application.
+const SKETCH_RB: usize = 64;
+/// Minimum madds before the sketch application dispatches to the pool.
+const PAR_MIN_SKETCH: usize = 1 << 14;
+
+/// Jittered Cholesky square root `L` of the kernel matrix itself.
+///
+/// `K` is PSD but numerically rank-deficient for smooth kernels (its
+/// spectrum decays below machine precision), so a plain factorization
+/// routinely fails; escalating diagonal jitter `δI` factors `K + δI`
+/// instead, perturbing the estimated scores by `O(δ/λn)` — negligible
+/// against the sketching error.
+fn kernel_sqrt(engine: &dyn KernelEngine, lambda: f64) -> Result<Matrix, LeverageError> {
+    let n = engine.n();
+    if n == 0 || !(lambda > 0.0) {
+        return Err(LeverageError::InvalidConfig(format!("n={n}, lambda={lambda}")));
+    }
+    let all: Vec<usize> = (0..n).collect();
+    let mut k = engine.block(&all, &all);
+    // bitwise symmetry for the factorization's symmetry contract
+    k.mirror_lower_to_upper();
+    let trace: f64 = k.diagonal().iter().sum();
+    let (f, _jitter) = cholesky_jittered(k, trace.abs() * 1e-12 / n as f64, trace.abs().max(1.0))
+        .ok_or(LeverageError::FactorizationFailed { dim: n, lambda })?;
+    Ok(f.take_l())
+}
+
+/// Shared tail of both sketched estimators: given `B = L Sᵀ`, solve the
+/// regularized sketched Gram system via the stacked QR and return
+/// `ℓ̃_i = ‖R⁻ᵀ b_i‖²`, clamped to `[1e-300, 1]`.
+fn scores_from_sketch(b: &Matrix, lam_n: f64) -> Vec<f64> {
+    let (n, s) = (b.rows(), b.cols());
+    let mut stacked = Matrix::zeros(n + s, s);
+    for r in 0..n {
+        stacked.row_mut(r).copy_from_slice(b.row(r));
+    }
+    for j in 0..s {
+        stacked.set(n + j, j, lam_n.sqrt());
+    }
+    let f = qr(stacked);
+    let z = f.solve_rt_matrix(&b.transpose());
+    column_sq_norms(&z).into_iter().map(|v| v.clamp(1e-300, 1.0)).collect()
+}
+
+/// Peak dense workspace of a sketched run at size `(n, s)`: the kernel
+/// matrix / its square root, the sketch `B`, the stacked QR input, and
+/// the `s × n` solve operands.
+fn sketch_peak_bytes(n: usize, s: usize) -> u64 {
+    8 * (n * n + n * s + (n + s) * s + 2 * s * n) as u64
+}
+
+/// Count-sketch (Clarkson–Woodruff transform): `S` has one `±1` per
+/// column of `L`, placed in a hashed row. Applying it is a single
+/// `O(n²)` pass over `L` — no multiplication by a dense test matrix —
+/// making it the cheapest sketch per entry.
+pub struct CountSketchEstimator {
+    /// Sketch size (columns of `B`); theory wants `s ≳ d_eff²/ε²`.
+    pub s: usize,
+}
+
+impl CountSketchEstimator {
+    /// Apply the count-sketch to the rows of lower-triangular `L`:
+    /// `B[i, h(j)] += σ(j)·L[i,j]`. The hash/sign draws consume exactly
+    /// `2n` values from `rng`; the application is parallel over fixed
+    /// blocks of output rows (each reads only its own row of `L`).
+    fn apply(&self, l: &Matrix, rng: &mut Rng) -> Matrix {
+        let n = l.rows();
+        let s = self.s;
+        let h: Vec<usize> = (0..n).map(|_| rng.below(s)).collect();
+        let sg: Vec<f64> = (0..n).map(|_| if rng.bernoulli(0.5) { 1.0 } else { -1.0 }).collect();
+        let mut b = Matrix::zeros(n, s);
+        let ld = l.as_slice();
+        let parallel = n * n / 2 >= PAR_MIN_SKETCH;
+        pool::par_chunks_mut_gated(b.as_mut_slice(), SKETCH_RB * s, parallel, |blk, chunk| {
+            for (local, row) in chunk.chunks_mut(s).enumerate() {
+                let i = blk * SKETCH_RB + local;
+                // L is lower triangular: columns 0..=i only
+                for (j, &v) in ld[i * n..i * n + i + 1].iter().enumerate() {
+                    row[h[j]] += sg[j] * v;
+                }
+            }
+        });
+        b
+    }
+}
+
+impl LeverageEstimator for CountSketchEstimator {
+    fn name(&self) -> String {
+        format!("count-sketch(s={})", self.s)
+    }
+
+    fn estimate(
+        &self,
+        engine: &dyn KernelEngine,
+        lambda: f64,
+        rng: &mut Rng,
+    ) -> Result<Estimate, LeverageError> {
+        if self.s == 0 {
+            return Err(LeverageError::InvalidConfig("count-sketch size s must be ≥ 1".into()));
+        }
+        let n = engine.n();
+        let l = kernel_sqrt(engine, lambda)?;
+        let b = self.apply(&l, rng);
+        drop(l);
+        let scores = scores_from_sketch(&b, lambda * n as f64);
+        Ok(Estimate::new(scores, sketch_peak_bytes(n, self.s)))
+    }
+}
+
+/// In-place unnormalized fast Walsh–Hadamard transform (length must be a
+/// power of two). Serial per row — the parallel unit is the row.
+fn fwht(v: &mut [f64]) {
+    let p = v.len();
+    debug_assert!(p.is_power_of_two());
+    let mut h = 1;
+    while h < p {
+        let mut i = 0;
+        while i < p {
+            for j in i..i + h {
+                let (x, y) = (v[j], v[j + h]);
+                v[j] = x + y;
+                v[j + h] = x - y;
+            }
+            i += 2 * h;
+        }
+        h *= 2;
+    }
+}
+
+/// Subsampled randomized Hadamard transform:
+/// `S = √(p/s) · P · (H/√p) · D` with `p = 2^⌈log₂ n⌉`, `D` a random
+/// sign diagonal, `H` the Walsh–Hadamard matrix and `P` a subsample of
+/// `s` of the `p` coordinates without replacement.
+///
+/// At `s = p`, `SᵀS = I` exactly (orthonormal rows, full subsample), so
+/// the estimator reproduces the exact scores up to float — the tight
+/// anchor case in `tests/estimator_accuracy.rs`.
+pub struct SrftEstimator {
+    /// Sketch size (clamped to `p`, the padded power of two).
+    pub s: usize,
+}
+
+impl SrftEstimator {
+    /// Apply the SRFT to the rows of `L`: per output row, sign-flip,
+    /// zero-pad to `p`, transform, subsample `s` fixed coordinates.
+    /// Draws `n` signs + one subsample from `rng`, then runs parallel
+    /// over fixed blocks of rows.
+    fn apply(&self, l: &Matrix, rng: &mut Rng) -> Matrix {
+        let n = l.rows();
+        let p = n.next_power_of_two();
+        let s = self.s.min(p);
+        let sg: Vec<f64> = (0..n).map(|_| if rng.bernoulli(0.5) { 1.0 } else { -1.0 }).collect();
+        let coords = rng.sample_without_replacement(p, s);
+        // √(p/s) subsample scale × 1/√p orthonormal-H scale = 1/√s
+        let scale = (s as f64).sqrt().recip();
+        let mut b = Matrix::zeros(n, s);
+        let ld = l.as_slice();
+        let parallel = n * (p + s) >= PAR_MIN_SKETCH;
+        pool::par_chunks_mut_gated(b.as_mut_slice(), SKETCH_RB * s, parallel, |blk, chunk| {
+            let mut buf = vec![0.0; p];
+            for (local, row) in chunk.chunks_mut(s).enumerate() {
+                let i = blk * SKETCH_RB + local;
+                buf.fill(0.0);
+                for (j, &v) in ld[i * n..i * n + i + 1].iter().enumerate() {
+                    buf[j] = sg[j] * v;
+                }
+                fwht(&mut buf);
+                for (t, &c) in coords.iter().enumerate() {
+                    row[t] = buf[c] * scale;
+                }
+            }
+        });
+        b
+    }
+}
+
+impl LeverageEstimator for SrftEstimator {
+    fn name(&self) -> String {
+        format!("srft(s={})", self.s)
+    }
+
+    fn estimate(
+        &self,
+        engine: &dyn KernelEngine,
+        lambda: f64,
+        rng: &mut Rng,
+    ) -> Result<Estimate, LeverageError> {
+        if self.s == 0 {
+            return Err(LeverageError::InvalidConfig("SRFT size s must be ≥ 1".into()));
+        }
+        let n = engine.n();
+        let l = kernel_sqrt(engine, lambda)?;
+        let b = self.apply(&l, rng);
+        drop(l);
+        let scores = scores_from_sketch(&b, lambda * n as f64);
+        Ok(Estimate::new(scores, sketch_peak_bytes(n, b.cols())))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::susy_like;
+    use crate::kernels::{Gaussian, NativeEngine};
+    use crate::leverage::{exact_leverage_scores, RAccStats};
+
+    fn engine(n: usize) -> NativeEngine {
+        let ds = susy_like(n, &mut Rng::seeded(17));
+        NativeEngine::new(ds.x, Gaussian::new(2.0))
+    }
+
+    #[test]
+    fn fwht_is_orthogonal_involution() {
+        // H (H x) = p·x for the unnormalized transform
+        let x: Vec<f64> = (0..8).map(|i| (i as f64 * 0.9).sin()).collect();
+        let mut y = x.clone();
+        fwht(&mut y);
+        fwht(&mut y);
+        for (a, b) in x.iter().zip(&y) {
+            assert!((8.0 * a - b).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn identity_sketch_recovers_exact_scores() {
+        // SRFT at s = p is an orthonormal S: SᵀS = I ⇒ exact scores.
+        let n = 64; // power of two: p = n, no padding
+        let eng = engine(n);
+        let lambda = 2e-2;
+        let exact = exact_leverage_scores(&eng, lambda).unwrap();
+        let est = SrftEstimator { s: 64 };
+        let approx = est.scores(&eng, lambda, &mut Rng::seeded(3)).unwrap();
+        let stats = RAccStats::from_scores(&approx, &exact);
+        assert!(stats.within_bound(1e-4), "orthonormal sketch not exact: {stats:?}");
+    }
+
+    #[test]
+    fn sketched_scores_are_plausible_at_moderate_size() {
+        let eng = engine(200);
+        let lambda = 2e-2;
+        let exact = exact_leverage_scores(&eng, lambda).unwrap();
+        for est in [
+            Box::new(CountSketchEstimator { s: 512 }) as Box<dyn LeverageEstimator>,
+            Box::new(SrftEstimator { s: 128 }),
+        ] {
+            let approx = est.scores(&eng, lambda, &mut Rng::seeded(11)).unwrap();
+            assert_eq!(approx.len(), 200);
+            assert!(approx.iter().all(|&v| v.is_finite() && v > 0.0 && v <= 1.0));
+            let stats = RAccStats::from_scores(&approx, &exact);
+            assert!(
+                stats.mean > 0.4 && stats.mean < 2.5,
+                "{}: mean R-ACC {} implausible",
+                est.name(),
+                stats.mean
+            );
+        }
+    }
+
+    #[test]
+    fn zero_sketch_size_is_config_error() {
+        let eng = engine(16);
+        for est in [
+            Box::new(CountSketchEstimator { s: 0 }) as Box<dyn LeverageEstimator>,
+            Box::new(SrftEstimator { s: 0 }),
+        ] {
+            let err = est.estimate(&eng, 1e-2, &mut Rng::seeded(0)).unwrap_err();
+            assert!(matches!(err, LeverageError::InvalidConfig(_)), "{err}");
+        }
+    }
+
+    #[test]
+    fn oversized_srft_clamps_to_padded_dimension() {
+        let eng = engine(20); // p = 32
+        let est = SrftEstimator { s: 1000 };
+        let out = est.estimate(&eng, 1e-2, &mut Rng::seeded(5)).unwrap();
+        assert_eq!(out.scores.len(), 20);
+        assert!(out.scores.iter().all(|&v| v.is_finite()));
+    }
+}

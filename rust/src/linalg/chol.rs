@@ -48,6 +48,14 @@ impl CholeskyFactor {
         &self.l
     }
 
+    /// Consume the factor, yielding the lower-triangular matrix `L`
+    /// (strict upper triangle zero) without a copy — for consumers that
+    /// operate on `L` directly, e.g. the sketched leverage-score
+    /// estimators applying a sketch to the kernel square root.
+    pub fn take_l(self) -> Matrix {
+        self.l
+    }
+
     /// Solve `A x = b` via two triangular solves.
     pub fn solve(&self, b: &[f64]) -> Vec<f64> {
         let y = solve_lower(&self.l, b);

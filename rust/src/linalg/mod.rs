@@ -1,9 +1,10 @@
 //! Dense linear-algebra substrate.
 //!
 //! The offline crate registry ships no BLAS/LAPACK bindings, so everything
-//! the paper's algorithms need — blocked GEMM, Cholesky factorization,
-//! triangular solves, SPD solves — is implemented here from scratch in
-//! `f64` (the paper's experiments ran in double precision).
+//! the paper's algorithms need — blocked GEMM, Cholesky and Householder
+//! QR factorizations, triangular solves, SPD solves — is implemented here
+//! from scratch in `f64` (the paper's experiments ran in double
+//! precision).
 //!
 //! Performance-critical routines ([`gemm`], [`cholesky`],
 //! [`solve_lower_matrix`]) are cache-blocked and register-blocked; see
@@ -29,6 +30,7 @@ mod chol;
 mod gemm;
 mod matmul;
 mod matrix;
+mod qr;
 mod triangular;
 
 pub use chol::{cholesky, cholesky_in_place, cholesky_jittered, cholesky_take, CholeskyFactor};
@@ -40,6 +42,7 @@ pub use gemm::{
 };
 pub use matmul::{MatMul, Transpose, Triangle};
 pub use matrix::Matrix;
+pub use qr::{qr, QrFactor};
 pub use triangular::{
     solve_llt_matrix, solve_lower, solve_lower_matrix, solve_upper, solve_upper_from_lower,
     solve_upper_from_lower_matrix,

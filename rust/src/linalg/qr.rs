@@ -1,0 +1,395 @@
+//! Blocked Householder QR factorization `A = Q R` for tall matrices.
+//!
+//! Compact-WY **right-looking** algorithm on the shared
+//! [`crate::util::pool`], mirroring the structure of the blocked
+//! Cholesky ([`super::cholesky`]): factor an `NB`-wide panel with
+//! unblocked Householder reflections (each reflector applied to the
+//! remaining panel columns in parallel over whole columns), accumulate
+//! the panel's `T` matrix (`Q_panel = I − V T Vᵀ`), then apply the
+//! blocked update `C ← C − V Tᵀ (Vᵀ C)` to the trailing columns through
+//! the [`super::MatMul`] facade. All inner dot products run through the
+//! runtime-dispatched micro-kernels ([`super::kernels`]), so the factor
+//! is ISA-gated exactly like Cholesky; every parallel partition is a
+//! fixed function of the shape, so the factor is **bit-identical** at
+//! any `--threads` (asserted by `tests/parallel_determinism.rs`).
+//!
+//! The consumer in this crate is the sketched leverage-score tier
+//! ([`crate::leverage`]): the `R` factor of the stacked matrix
+//! `[B; √(λn)·I]` satisfies `RᵀR = BᵀB + λnI`, so the "small sketched
+//! Gram solve" becomes one triangular solve against `Rᵀ` without ever
+//! forming the Gram matrix — the numerically stable route when `B` is
+//! ill-conditioned.
+
+use super::{solve_lower_matrix, Matrix};
+use crate::util::pool;
+
+/// Panel width of the blocked factorization (narrower than Cholesky's
+/// 96: QR panels pay two passes per reflector).
+const NB: usize = 32;
+/// Minimum multiply-adds in a panel-application stage before it
+/// dispatches to the pool.
+const PAR_MIN_STAGE: usize = 1 << 14;
+
+/// A Householder QR factorization of an `m × k` matrix with `m ≥ k`.
+///
+/// Stored in the usual packed form: `R` occupies the upper triangle of
+/// the factored matrix, the essential parts of the Householder vectors
+/// sit below the diagonal (implicit unit diagonal), and `taus` holds the
+/// reflector coefficients. [`QrFactor::r`] and [`QrFactor::thin_q`]
+/// return the *sign-normalized* factors — `R` with a non-negative
+/// diagonal and `Q` flipped to match — so that `R` agrees with the
+/// (unique) upper Cholesky factor of `AᵀA` on full-rank inputs.
+#[derive(Clone, Debug)]
+pub struct QrFactor {
+    /// Packed `R` + Householder vectors (`m × k`).
+    packed: Matrix,
+    /// Reflector coefficients `τ_j` (length `k`).
+    taus: Vec<f64>,
+    /// Row signs (±1) that make the normalized `R` diagonal
+    /// non-negative; `thin_q` applies them to the matching columns.
+    flips: Vec<f64>,
+}
+
+impl QrFactor {
+    /// Number of rows `m` of the factored matrix.
+    pub fn rows(&self) -> usize {
+        self.packed.rows()
+    }
+
+    /// Number of columns `k` of the factored matrix.
+    pub fn cols(&self) -> usize {
+        self.packed.cols()
+    }
+
+    /// The `k × k` upper-triangular factor with a non-negative diagonal.
+    pub fn r(&self) -> Matrix {
+        let k = self.cols();
+        Matrix::from_fn(k, k, |i, j| {
+            if j < i {
+                0.0
+            } else {
+                self.flips[i] * self.packed.get(i, j)
+            }
+        })
+    }
+
+    /// The thin orthonormal factor `Q` (`m × k`, `QᵀQ = I`), consistent
+    /// with [`QrFactor::r`]: `A = Q·R` exactly (up to float).
+    ///
+    /// Built by applying the stored panels to the first `k` columns of
+    /// the identity in reverse order, each through the same blocked
+    /// `C ← C − V T (Vᵀ C)` update as the factorization — pool-parallel
+    /// and bit-identical at any thread count.
+    pub fn thin_q(&self) -> Matrix {
+        let (m, k) = (self.rows(), self.cols());
+        let kern = super::dispatch::kernels();
+        let mut q = Matrix::zeros(m, k);
+        for j in 0..k {
+            q.set(j, j, 1.0);
+        }
+        let panel_starts: Vec<usize> = (0..k).step_by(NB).collect();
+        for &pb in panel_starts.iter().rev() {
+            let pe = (pb + NB).min(k);
+            let (pm, pw) = (m - pb, pe - pb);
+            // rebuild the column-major panel and its T matrix from the
+            // packed storage — same values, same dot order as factor time
+            let mut panel = vec![0.0; pm * pw];
+            for c in 0..pw {
+                for r in 0..pm {
+                    panel[c * pm + r] = self.packed.get(pb + r, pb + c);
+                }
+            }
+            let tmat = build_t(&panel, pm, pw, &self.taus[pb..pe], kern);
+            let vmat = v_matrix(&panel, pm, pw);
+            // gather the affected rows of Q, apply Q_panel = I − V T Vᵀ
+            let mut c = Matrix::zeros(pm, k);
+            for r in 0..pm {
+                c.row_mut(r).copy_from_slice(q.row(pb + r));
+            }
+            let w = super::MatMul::tn().run(&vmat, &c);
+            let mut w2 = super::MatMul::nn().run(&tmat, &w);
+            w2.scale(-1.0);
+            super::MatMul::nn().accumulate().run_into(&vmat, &w2, &mut c);
+            for r in 0..pm {
+                q.row_mut(pb + r).copy_from_slice(c.row(r));
+            }
+        }
+        // sign normalization: Q·R = (Q·D)(D·R) with D = diag(flips)
+        for r in 0..m {
+            let row = q.row_mut(r);
+            for (j, v) in row.iter_mut().enumerate() {
+                *v *= self.flips[j];
+            }
+        }
+        q
+    }
+
+    /// Solve `Rᵀ Z = B` (forward substitution against the normalized
+    /// upper factor, `B` is `k × nrhs`) — the sketched-Gram solve shape:
+    /// with `RᵀR = BᵀB + λnI`, the column squared norms of `Z = R⁻ᵀ Bᵀ`
+    /// are the sketched leverage scores.
+    pub fn solve_rt_matrix(&self, b: &Matrix) -> Matrix {
+        let rt = self.r().transpose();
+        solve_lower_matrix(&rt, b)
+    }
+}
+
+/// Materialize the unit-lower-trapezoidal `V` (`pm × pw`) from a
+/// column-major panel.
+fn v_matrix(panel: &[f64], pm: usize, pw: usize) -> Matrix {
+    Matrix::from_fn(pm, pw, |r, c| {
+        if r < c {
+            0.0
+        } else if r == c {
+            1.0
+        } else {
+            panel[c * pm + r]
+        }
+    })
+}
+
+/// Build the upper-triangular compact-WY `T` (`pw × pw`) of a factored
+/// column-major panel: `T[j][j] = τ_j`,
+/// `T[0..j, j] = −τ_j · T[0..j, 0..j] · (V[:,0..j]ᵀ v_j)`.
+fn build_t(
+    panel: &[f64],
+    pm: usize,
+    pw: usize,
+    taus: &[f64],
+    kern: &super::dispatch::MicroKernels,
+) -> Matrix {
+    let mut t = Matrix::zeros(pw, pw);
+    for j in 0..pw {
+        t.set(j, j, taus[j]);
+        if j == 0 || taus[j] == 0.0 {
+            continue;
+        }
+        // y[i] = V[:,i]ᵀ v_j  (v_j has an implicit 1 at row j)
+        let mut y = vec![0.0; j];
+        for (i, yi) in y.iter_mut().enumerate() {
+            let vi = &panel[i * pm + j + 1..(i + 1) * pm];
+            let vj = &panel[j * pm + j + 1..(j + 1) * pm];
+            *yi = panel[i * pm + j] + (kern.dot)(vi, vj);
+        }
+        // T[0..j, j] = −τ_j · T_{0..j,0..j} · y  (small upper triangular
+        // matvec, serial)
+        for i in 0..j {
+            let mut s = 0.0;
+            for (p, &yp) in y.iter().enumerate().skip(i) {
+                s += t.get(i, p) * yp;
+            }
+            t.set(i, j, -taus[j] * s);
+        }
+    }
+    t
+}
+
+/// Blocked Householder QR, taking ownership of the input (`m ≥ k`
+/// required; no clone on the success path — mirrors
+/// [`super::cholesky_take`]).
+///
+/// Rank-deficient inputs factor fine (a zero column yields `τ = 0` and a
+/// zero `R` diagonal entry); only the triangular *solves* against `R`
+/// require full rank.
+pub fn qr(mut a: Matrix) -> QrFactor {
+    let (m, kc) = (a.rows(), a.cols());
+    assert!(m >= kc && kc > 0, "qr requires a tall matrix (m ≥ k ≥ 1), got {m}×{kc}");
+    let kern = super::dispatch::kernels();
+    let mut taus = vec![0.0; kc];
+    let ad = a.as_mut_slice();
+    let mut panel: Vec<f64> = Vec::new();
+    let mut pb = 0;
+    while pb < kc {
+        let pe = (pb + NB).min(kc);
+        let (pm, pw) = (m - pb, pe - pb);
+        // gather the panel column-major: column c of the panel holds
+        // A[pb..m, pb+c]
+        panel.clear();
+        panel.resize(pm * pw, 0.0);
+        for r in 0..pm {
+            let row = &ad[(pb + r) * kc + pb..(pb + r) * kc + pe];
+            for (c, &v) in row.iter().enumerate() {
+                panel[c * pm + r] = v;
+            }
+        }
+        // unblocked panel factorization
+        for j in 0..pw {
+            let (alpha, sigma) = {
+                let col = &panel[j * pm + j..(j + 1) * pm];
+                (col[0], (kern.dot)(&col[1..], &col[1..]))
+            };
+            let tau;
+            if sigma == 0.0 {
+                // already triangular in this column (LAPACK dlarfg
+                // convention: no reflection, τ = 0, β = α)
+                tau = 0.0;
+            } else {
+                let beta = -alpha.signum() * (alpha * alpha + sigma).sqrt();
+                tau = (beta - alpha) / beta;
+                let scale = 1.0 / (alpha - beta);
+                let col = &mut panel[j * pm + j..(j + 1) * pm];
+                col[0] = beta;
+                for v in col[1..].iter_mut() {
+                    *v *= scale;
+                }
+            }
+            taus[pb + j] = tau;
+            if tau == 0.0 || j + 1 == pw {
+                continue;
+            }
+            // apply H_j = I − τ v vᵀ to the remaining panel columns —
+            // whole columns are the parallel unit, so the partition (and
+            // the bits) cannot depend on the thread count
+            let vt = panel[j * pm + j + 1..(j + 1) * pm].to_vec();
+            let rest = &mut panel[(j + 1) * pm..pw * pm];
+            let work = (pw - j - 1) * (pm - j);
+            pool::par_chunks_mut_gated(rest, pm, work >= PAR_MIN_STAGE, |_, col| {
+                let w = col[j] + (kern.dot)(&col[j + 1..], &vt);
+                let tw = tau * w;
+                col[j] -= tw;
+                for (cv, &vv) in col[j + 1..].iter_mut().zip(&vt) {
+                    *cv -= tw * vv;
+                }
+            });
+        }
+        // trailing update: C ← C − V Tᵀ (Vᵀ C) applies
+        // Qᵀ_panel = I − V Tᵀ Vᵀ to the columns right of the panel
+        let tw_cols = kc - pe;
+        if tw_cols > 0 {
+            let tmat = build_t(&panel, pm, pw, &taus[pb..pe], kern);
+            let vmat = v_matrix(&panel, pm, pw);
+            let mut c = Matrix::zeros(pm, tw_cols);
+            for r in 0..pm {
+                c.row_mut(r).copy_from_slice(&ad[(pb + r) * kc + pe..(pb + r) * kc + kc]);
+            }
+            let w = super::MatMul::tn().run(&vmat, &c);
+            let tt = tmat.transpose();
+            let mut w2 = super::MatMul::nn().run(&tt, &w);
+            w2.scale(-1.0);
+            super::MatMul::nn().accumulate().run_into(&vmat, &w2, &mut c);
+            for r in 0..pm {
+                ad[(pb + r) * kc + pe..(pb + r) * kc + kc].copy_from_slice(c.row(r));
+            }
+        }
+        // scatter the factored panel back (β on the diagonal → R, the
+        // essential v parts below it)
+        for r in 0..pm {
+            let row = &mut ad[(pb + r) * kc + pb..(pb + r) * kc + pe];
+            for (c, rv) in row.iter_mut().enumerate() {
+                *rv = panel[c * pm + r];
+            }
+        }
+        pb = pe;
+    }
+    let flips: Vec<f64> = (0..kc).map(|j| if a.get(j, j) < 0.0 { -1.0 } else { 1.0 }).collect();
+    QrFactor { packed: a, taus, flips }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{cholesky, MatMul};
+    use super::*;
+
+    fn test_matrix(m: usize, k: usize, seed: u64) -> Matrix {
+        Matrix::from_fn(m, k, |i, j| {
+            let t = (i * k + j) as f64 + seed as f64 * 0.7;
+            (t * 0.61803).sin() + if i == j { 2.0 } else { 0.0 }
+        })
+    }
+
+    #[test]
+    fn reconstructs_and_q_orthonormal() {
+        // sizes straddling the NB=32 panel boundary and square/tall mixes
+        for &(m, k) in &[(5usize, 3usize), (31, 31), (33, 32), (95, 64), (97, 96), (200, 97)] {
+            let a = test_matrix(m, k, (m + k) as u64);
+            let f = qr(a.clone());
+            let (q, r) = (f.thin_q(), f.r());
+            // R upper triangular with non-negative diagonal
+            for i in 0..k {
+                assert!(r.get(i, i) >= 0.0, "({m},{k}): negative R diagonal at {i}");
+                for j in 0..i {
+                    assert_eq!(r.get(i, j), 0.0, "({m},{k}): R not upper at ({i},{j})");
+                }
+            }
+            // QᵀQ = I
+            let qtq = MatMul::tn().run(&q, &q);
+            let eye = Matrix::eye(k);
+            assert!(qtq.max_abs_diff(&eye) < 1e-10, "({m},{k}): QᵀQ ≠ I");
+            // A = QR
+            let rec = MatMul::nn().run(&q, &r);
+            let scale = a.fro_norm().max(1.0);
+            assert!(rec.max_abs_diff(&a) / scale < 1e-12, "({m},{k}): A ≠ QR");
+        }
+    }
+
+    #[test]
+    fn r_matches_cholesky_of_gram() {
+        // on a well-conditioned input, R equals the (unique) upper
+        // Cholesky factor of AᵀA with positive diagonal
+        let a = test_matrix(140, 40, 9);
+        let r = qr(a.clone()).r();
+        let gram = MatMul::tn().lower().run(&a, &a);
+        let lc = cholesky(&gram).expect("Gram is SPD");
+        let lt = lc.l().transpose();
+        assert!(r.max_abs_diff(&lt) / lt.fro_norm() < 1e-10, "R ≠ chol(AᵀA)ᵀ");
+    }
+
+    #[test]
+    fn stacked_regularized_gram_identity() {
+        // the sketched-solve shape: R of [B; √δ·I] satisfies RᵀR = BᵀB + δI
+        let b = test_matrix(90, 24, 4);
+        let delta = 0.37;
+        let mut stacked = Matrix::zeros(90 + 24, 24);
+        for r in 0..90 {
+            stacked.row_mut(r).copy_from_slice(b.row(r));
+        }
+        for j in 0..24 {
+            stacked.set(90 + j, j, delta.sqrt());
+        }
+        let r = qr(stacked).r();
+        let rtr = MatMul::tn().run(&r, &r);
+        let mut gram = MatMul::tn().run(&b, &b);
+        gram.add_scaled_identity(delta);
+        assert!(rtr.max_abs_diff(&gram) / gram.fro_norm() < 1e-12);
+    }
+
+    #[test]
+    fn solve_rt_matches_direct() {
+        let b = test_matrix(60, 16, 2);
+        let delta = 1.25;
+        let mut stacked = Matrix::zeros(76, 16);
+        for r in 0..60 {
+            stacked.row_mut(r).copy_from_slice(b.row(r));
+        }
+        for j in 0..16 {
+            stacked.set(60 + j, j, delta.sqrt());
+        }
+        let f = qr(stacked);
+        let rhs = Matrix::from_fn(16, 5, |i, j| ((i * 5 + j) as f64 * 0.3).cos());
+        let z = f.solve_rt_matrix(&rhs);
+        // Rᵀ z = rhs
+        let rt = f.r().transpose();
+        let rec = MatMul::nn().run(&rt, &z);
+        assert!(rec.max_abs_diff(&rhs) < 1e-9);
+    }
+
+    #[test]
+    fn rank_deficient_panel_is_tolerated() {
+        // a zero column mid-panel: τ = 0, R diagonal 0, no NaNs
+        let mut a = test_matrix(50, 20, 3);
+        for i in 0..50 {
+            a.set(i, 7, 0.0);
+        }
+        let f = qr(a.clone());
+        let (q, r) = (f.thin_q(), f.r());
+        assert!(r.as_slice().iter().all(|v| v.is_finite()));
+        let rec = MatMul::nn().run(&q, &r);
+        assert!(rec.max_abs_diff(&a) < 1e-10);
+    }
+
+    #[test]
+    #[should_panic(expected = "tall matrix")]
+    fn wide_input_rejected() {
+        let _ = qr(Matrix::zeros(3, 5));
+    }
+}

@@ -20,9 +20,10 @@
 //! ```
 
 use bless::coordinator::{
-    build_engine, fig1_accuracy, fig2_scaling, fig3_stability, fig45_falkon,
-    scaling_exponent, table1_complexity, EngineKind, Fig1Config, Fig2Config, Fig3Config,
-    Fig45Config, Method, Table1Config,
+    build_engine, fig1_accuracy, fig1_estimator_shootout, fig2_estimator_scaling, fig2_scaling,
+    fig3_stability, fig45_falkon, scaling_exponent, scaling_exponent_for, table1_complexity,
+    EngineKind, Fig1Config, Fig2Config, Fig3Config, Fig45Config, Method, ShootoutConfig,
+    Table1Config,
 };
 use bless::data::{higgs_like, susy_like};
 use bless::kernels::Gaussian;
@@ -94,6 +95,10 @@ repro — BLESS (NeurIPS 2018) reproduction CLI
 
   (`falkon` is a deprecated alias for `train`; it used to re-run fig4)
 
+fig1/fig2 flags: --estimators exact,bless,rrls,count-sketch:256,srft:256,
+               rls-nystrom:256 (or `default`) — append the leverage-score
+               estimator-family shoot-out: accuracy vs wall-clock vs
+               metered kernel evals vs peak workspace per estimator
 common flags:  --n --lambda --sigma --seed --reps --engine native|xla|auto
                --threads N (compute threadpool width; default = all cores;
                output is bit-identical at any N)
@@ -147,9 +152,32 @@ fn cmd_fig1(args: &Args) -> anyhow::Result<()> {
     let ds = susy_like(cfg.n, &mut Rng::seeded(cfg.seed.wrapping_add(77)));
     let eng = build_engine(engine_kind(args), ds.x, Gaussian::new(cfg.sigma))?;
     println!("engine backend: {}", eng.label());
-    let t = fig1_accuracy(eng.as_dyn(), &cfg);
+    let t = fig1_accuracy(eng.as_dyn(), &cfg)?;
     println!("{}", t.to_console());
-    maybe_csv(args, &t)
+    maybe_csv(args, &t)?;
+    // --estimators exact,srft:256,... (or "default" for the full family)
+    // appends the estimator-family shoot-out on the same data/λ.
+    if let Some(list) = args.get("estimators") {
+        let sc = ShootoutConfig {
+            lambda: cfg.lambda,
+            reps: cfg.reps,
+            seed: cfg.seed,
+            specs: parse_estimator_specs(list, &ShootoutConfig::default().specs),
+        };
+        let shoot = fig1_estimator_shootout(eng.as_dyn(), &sc)?;
+        println!("{}", shoot.to_console());
+    }
+    Ok(())
+}
+
+/// Comma-split an `--estimators` value; `default`/`all` expands to the
+/// built-in family so `repro fig1 --estimators default` reproduces the
+/// paper-extension shoot-out verbatim.
+fn parse_estimator_specs(list: &str, default: &[String]) -> Vec<String> {
+    match list.trim() {
+        "default" | "all" => default.to_vec(),
+        other => other.split(',').map(|s| s.trim().to_string()).filter(|s| !s.is_empty()).collect(),
+    }
 }
 
 fn parse_sizes(args: &Args, default: &[usize]) -> Vec<usize> {
@@ -171,7 +199,25 @@ fn cmd_fig2(args: &Args) -> anyhow::Result<()> {
     for &m in &cfg.methods {
         println!("  {:<10} empirical n-exponent: {}", m.name(), fnum(scaling_exponent(&t, m)));
     }
-    maybe_csv(args, &t)
+    maybe_csv(args, &t)?;
+    // --estimators sweeps the estimator family over the same sizes and
+    // reports each member's empirical cost exponent in n.
+    if let Some(list) = args.get("estimators") {
+        let specs = parse_estimator_specs(list, &ShootoutConfig::default().specs);
+        let et = fig2_estimator_scaling(&cfg, &specs)?;
+        println!("{}", et.to_console());
+        for spec in specs.iter().filter(|_| cfg.sizes.len() >= 2) {
+            let name = bless::leverage::parse_estimator(spec)
+                .map(|e| e.name())
+                .unwrap_or_else(|| spec.clone());
+            println!(
+                "  {:<22} empirical n-exponent: {}",
+                name,
+                fnum(scaling_exponent_for(&et, &name))
+            );
+        }
+    }
+    Ok(())
 }
 
 fn cmd_fig3(args: &Args) -> anyhow::Result<()> {

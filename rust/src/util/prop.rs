@@ -86,6 +86,36 @@ pub fn for_all(cases: usize, seed: u64, mut prop: impl FnMut(&mut Gen)) {
     }
 }
 
+/// Seed-sensitivity harness for randomized estimators: asserts that
+/// `run` is a pure function of its seed (same seed ⇒ bitwise-identical
+/// output) and that distinct seeds actually change the output (the
+/// randomness is live, not vestigial). Returns the two distinct-seed
+/// outputs so the caller can apply its own accuracy gates to both.
+pub fn check_seed_sensitivity(
+    seed_a: u64,
+    seed_b: u64,
+    run: impl Fn(u64) -> Vec<f64>,
+) -> (Vec<f64>, Vec<f64>) {
+    assert_ne!(seed_a, seed_b, "need two distinct seeds");
+    let first = run(seed_a);
+    let replay = run(seed_a);
+    assert_eq!(first.len(), replay.len(), "same-seed reruns changed length");
+    for (i, (x, y)) in first.iter().zip(&replay).enumerate() {
+        assert_eq!(
+            x.to_bits(),
+            y.to_bits(),
+            "same-seed rerun diverged at index {i}: {x} vs {y}"
+        );
+    }
+    let other = run(seed_b);
+    assert_eq!(first.len(), other.len(), "seed change altered output length");
+    assert!(
+        first.iter().zip(&other).any(|(x, y)| x.to_bits() != y.to_bits()),
+        "distinct seeds produced bitwise-identical output — RNG not threaded through"
+    );
+    (first, other)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -110,6 +140,23 @@ mod tests {
             let w = g.weights(1..8);
             assert!(w.iter().sum::<f64>() > 0.0);
         });
+    }
+
+    #[test]
+    fn seed_sensitivity_accepts_honest_randomness() {
+        let run = |seed: u64| {
+            let mut rng = Rng::seeded(seed);
+            (0..8).map(|_| rng.next_f64()).collect::<Vec<_>>()
+        };
+        let (a, b) = check_seed_sensitivity(1, 2, run);
+        assert_eq!(a.len(), 8);
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    #[should_panic(expected = "bitwise-identical")]
+    fn seed_sensitivity_rejects_ignored_seed() {
+        check_seed_sensitivity(1, 2, |_| vec![0.25, 0.5]);
     }
 
     #[test]

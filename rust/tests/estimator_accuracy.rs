@@ -1,0 +1,273 @@
+//! Property-test tier gating the leverage-score **estimator family**
+//! (ISSUE 8): every approximate estimator — BLESS, RRLS, count-sketch,
+//! SRFT, recursive-RLS Nyström — is held against the exact scores at
+//! small `n` and fixed seeds, under **both** micro-kernel backends
+//! (scalar + AVX2 where the host supports it; CI additionally re-runs
+//! the whole binary with `BLESS_ISA=scalar`). Alongside the accuracy
+//! gates: monotone improvement in the sketch size, seed-sensitivity
+//! (same seed ⇒ bitwise-identical, distinct seeds ⇒ different but still
+//! inside the gate), per-ISA property checks of the blocked Householder
+//! QR behind the sketched solves, and regressions for the typed
+//! [`LeverageError`] that replaced the old factorization panic.
+//!
+//! Tests here flip the process-global ISA selection, so they serialize
+//! through one mutex (same scheme as `tests/parallel_determinism.rs`).
+
+use bless::data::susy_like;
+use bless::kernels::{Gaussian, NativeEngine};
+use bless::leverage::{
+    exact_leverage_scores, parse_estimator, run_estimator, LeverageError, LsGenerator,
+    RAccStats, WeightedSet,
+};
+use bless::linalg::{self, qr, MatMul, Matrix};
+use bless::rng::Rng;
+use bless::util::prop::check_seed_sensitivity;
+use std::sync::{Mutex, MutexGuard, OnceLock};
+
+/// Serialize tests that flip the global ISA selection.
+fn lock() -> MutexGuard<'static, ()> {
+    static GATE: OnceLock<Mutex<()>> = OnceLock::new();
+    GATE.get_or_init(|| Mutex::new(())).lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Run `f` under every micro-kernel backend this host supports — always
+/// scalar, plus AVX2 where available — then restore auto-detection.
+fn for_each_isa(f: impl Fn(linalg::Isa)) {
+    for isa in [linalg::Isa::Scalar, linalg::Isa::Avx2] {
+        if linalg::set_isa(isa).is_ok() {
+            f(isa);
+        }
+    }
+    linalg::set_isa_from_str("auto").unwrap();
+}
+
+fn engine(n: usize, seed: u64) -> NativeEngine {
+    let ds = susy_like(n, &mut Rng::seeded(seed));
+    NativeEngine::new(ds.x, Gaussian::new(2.5))
+}
+
+/// Mean absolute relative error of `approx` against `exact`.
+fn rel_err(approx: &[f64], exact: &[f64]) -> f64 {
+    assert_eq!(approx.len(), exact.len());
+    let s: f64 = approx.iter().zip(exact).map(|(a, e)| (a - e).abs() / e.max(1e-300)).sum();
+    s / exact.len() as f64
+}
+
+/// Every approximate family member must land inside a multiplicative
+/// R-ACC gate against the exact reference, at a fixed seed, per ISA.
+/// The exact member must reproduce the reference to float roundoff.
+#[test]
+fn every_estimator_passes_the_accuracy_gate_per_isa() {
+    let _g = lock();
+    let eng = engine(220, 5);
+    let lambda = 1e-2;
+    // (spec, lower, upper) — multiplicative gates on the mean score
+    // ratio; sketches at these sizes are near-exact, samplers looser.
+    let gates = [
+        ("bless", 0.5, 2.0),
+        ("rrls", 0.5, 2.0),
+        ("count-sketch:1024", 0.6, 1.7),
+        ("srft:192", 0.6, 1.7),
+        ("rls-nystrom:128", 0.4, 2.5),
+    ];
+    for_each_isa(|isa| {
+        let exact = exact_leverage_scores(&eng, lambda).unwrap();
+        // the exact family member IS the reference
+        let e = parse_estimator("exact").unwrap();
+        let out = run_estimator(e.as_ref(), &eng, lambda, &mut Rng::seeded(1)).unwrap();
+        let stats = RAccStats::from_scores(&out.scores, &exact);
+        assert!(stats.within_bound(1e-9), "exact vs itself ({}): {stats:?}", isa.name());
+        assert!(out.kernel_evals >= (220 * 220) as u64, "exact evals not metered");
+
+        for &(spec, lo, hi) in &gates {
+            let est = parse_estimator(spec).expect(spec);
+            let out = run_estimator(est.as_ref(), &eng, lambda, &mut Rng::seeded(12)).unwrap();
+            assert_eq!(out.scores.len(), 220, "{spec}: wrong length");
+            assert!(
+                out.scores.iter().all(|&v| v.is_finite() && v > 0.0),
+                "{spec} ({}): non-finite or non-positive scores",
+                isa.name()
+            );
+            // the sketched estimators additionally clamp to ℓ ≤ 1
+            if spec.starts_with("count-sketch") || spec.starts_with("srft") {
+                assert!(out.scores.iter().all(|&v| v <= 1.0), "{spec}: score above 1");
+            }
+            let stats = RAccStats::from_scores(&out.scores, &exact);
+            assert!(
+                stats.mean > lo && stats.mean < hi,
+                "{spec} ({}): mean R-ACC {} outside ({lo}, {hi})",
+                isa.name(),
+                stats.mean
+            );
+            assert!(out.kernel_evals > 0, "{spec}: kernel evals not metered");
+            assert!(out.peak_bytes > 0, "{spec}: no workspace accounted");
+        }
+    });
+}
+
+/// At `s = p` (full subsample of the padded dimension) the SRFT's test
+/// matrix is orthonormal, so the sketched scores equal the exact ones up
+/// to float — the tight anchor of the sketching math, per ISA.
+#[test]
+fn srft_full_sketch_is_near_exact_per_isa() {
+    let _g = lock();
+    let eng = engine(64, 9); // power of two: p = n, no padding
+    let lambda = 2e-2;
+    for_each_isa(|isa| {
+        let exact = exact_leverage_scores(&eng, lambda).unwrap();
+        let est = parse_estimator("srft:64").unwrap();
+        let approx = est.scores(&eng, lambda, &mut Rng::seeded(3)).unwrap();
+        let stats = RAccStats::from_scores(&approx, &exact);
+        assert!(
+            stats.within_bound(1e-4),
+            "orthonormal SRFT not exact under {}: {stats:?}",
+            isa.name()
+        );
+    });
+}
+
+/// Growing the sketch must (on average over seeds) shrink the error —
+/// the size knob is live, not cosmetic.
+#[test]
+fn sketch_error_improves_with_sketch_size() {
+    let _g = lock();
+    let eng = engine(200, 21);
+    let lambda = 2e-2;
+    let exact = exact_leverage_scores(&eng, lambda).unwrap();
+    for (small, large) in [("count-sketch:32", "count-sketch:2048"), ("srft:24", "srft:256")] {
+        let avg_err = |spec: &str| {
+            let est = parse_estimator(spec).expect(spec);
+            let mut total = 0.0;
+            for seed in [101u64, 202, 303] {
+                let approx = est.scores(&eng, lambda, &mut Rng::seeded(seed)).unwrap();
+                total += rel_err(&approx, &exact);
+            }
+            total / 3.0
+        };
+        let (e_small, e_large) = (avg_err(small), avg_err(large));
+        assert!(
+            e_large < 0.8 * e_small,
+            "{large} (err {e_large:.3e}) not clearly better than {small} (err {e_small:.3e})"
+        );
+    }
+}
+
+/// Every randomized estimator is a pure function of its seed (same seed
+/// ⇒ bitwise-identical scores), distinct seeds genuinely change the
+/// output, and both outputs stay inside a loose accuracy gate.
+#[test]
+fn estimators_are_seed_sensitive_but_gated() {
+    let _g = lock();
+    let eng = engine(200, 33);
+    let lambda = 1e-2;
+    let exact = exact_leverage_scores(&eng, lambda).unwrap();
+    for spec in ["bless", "rrls", "count-sketch:256", "srft:64", "rls-nystrom:96"] {
+        let run = |seed: u64| {
+            let est = parse_estimator(spec).expect(spec);
+            est.scores(&eng, lambda, &mut Rng::seeded(seed)).unwrap()
+        };
+        let (a, b) = check_seed_sensitivity(40, 41, run);
+        for (tag, scores) in [("seed 40", &a), ("seed 41", &b)] {
+            let stats = RAccStats::from_scores(scores, &exact);
+            assert!(
+                stats.mean > 0.3 && stats.mean < 3.0,
+                "{spec} @ {tag}: mean R-ACC {} outside the loose gate",
+                stats.mean
+            );
+        }
+    }
+}
+
+/// Householder QR property checks at panel-boundary-straddling shapes,
+/// per ISA: QᵀQ = I, A = QR, R upper-triangular with non-negative
+/// diagonal, and R = chol(AᵀA)ᵀ on well-conditioned input.
+#[test]
+fn qr_properties_hold_at_panel_boundaries_per_isa() {
+    let _g = lock();
+    let shapes = [(95usize, 64usize), (96, 96), (97, 96), (513, 97)];
+    for_each_isa(|isa| {
+        let tag = isa.name();
+        for &(m, k) in &shapes {
+            let a = Matrix::from_fn(m, k, |i, j| {
+                ((i * k + j) as f64 * 0.61803).sin() + if i == j { 2.0 } else { 0.0 }
+            });
+            let f = qr(a.clone());
+            let (q, r) = (f.thin_q(), f.r());
+            for i in 0..k {
+                assert!(r.get(i, i) >= 0.0, "({m},{k}) {tag}: negative R diagonal");
+                for j in 0..i {
+                    assert_eq!(r.get(i, j), 0.0, "({m},{k}) {tag}: R not upper-triangular");
+                }
+            }
+            let qtq = MatMul::tn().run(&q, &q);
+            assert!(qtq.max_abs_diff(&Matrix::eye(k)) < 1e-9, "({m},{k}) {tag}: QᵀQ ≠ I");
+            let rec = MatMul::nn().run(&q, &r);
+            let scale = a.fro_norm().max(1.0);
+            assert!(rec.max_abs_diff(&a) / scale < 1e-11, "({m},{k}) {tag}: A ≠ QR");
+            // R must agree with the Cholesky route through AᵀA
+            let gram = MatMul::tn().lower().run(&a, &a);
+            let lt = linalg::cholesky(&gram).expect("Gram SPD").l().transpose();
+            assert!(
+                r.max_abs_diff(&lt) / lt.fro_norm() < 1e-8,
+                "({m},{k}) {tag}: R ≠ chol(AᵀA)ᵀ"
+            );
+        }
+    });
+}
+
+/// Regression for the old panic path: non-finite input data makes every
+/// jittered factorization attempt fail, which must surface as the typed
+/// [`LeverageError::FactorizationFailed`] — not a panic.
+#[test]
+fn non_finite_data_yields_typed_error_not_panic() {
+    let _g = lock();
+    let x = Matrix::from_fn(30, 3, |i, j| {
+        if i == 7 {
+            f64::NAN
+        } else {
+            ((i * 3 + j) as f64 * 0.37).sin()
+        }
+    });
+    let eng = NativeEngine::new(x, Gaussian::new(2.0));
+    let lambda = 1e-2;
+    let err = exact_leverage_scores(&eng, lambda).unwrap_err();
+    assert!(
+        matches!(err, LeverageError::FactorizationFailed { dim: 30, .. }),
+        "unexpected error: {err:?}"
+    );
+    assert!(err.to_string().contains("jitter retries exhausted"), "{err}");
+    // the generator path reports the dictionary dimension instead
+    let set = WeightedSet::uniform((0..10).collect(), lambda);
+    let err = LsGenerator::new(&eng, &set, lambda).unwrap_err();
+    assert!(matches!(err, LeverageError::FactorizationFailed { dim: 10, .. }), "{err:?}");
+    // and the sketched path flows through the same typed error
+    let est = parse_estimator("srft:16").unwrap();
+    let err = est.scores(&eng, lambda, &mut Rng::seeded(0)).unwrap_err();
+    assert!(matches!(err, LeverageError::FactorizationFailed { .. }), "{err:?}");
+}
+
+/// Exactly duplicated points make the kernel matrix rank-deficient; the
+/// escalating jitter must rescue the factorization and return finite
+/// scores everywhere — for the exact path and the sketched one.
+#[test]
+fn rank_deficient_kernel_is_rescued_by_jitter() {
+    let _g = lock();
+    let n = 80;
+    // every point appears twice: rank(K) ≤ n/2
+    let x = Matrix::from_fn(n, 4, |i, j| (((i / 2) * 4 + j) as f64 * 0.73).sin());
+    let eng = NativeEngine::new(x, Gaussian::new(2.0));
+    let lambda = 1e-3;
+    let exact = exact_leverage_scores(&eng, lambda).unwrap();
+    assert_eq!(exact.len(), n);
+    assert!(exact.iter().all(|&v| v.is_finite() && v >= 0.0));
+    assert!(exact.iter().sum::<f64>() > 0.0, "all-zero exact scores");
+    // duplicate pairs share one leverage budget: scores stay bounded
+    for est in ["count-sketch:128", "srft:128"] {
+        let scores =
+            parse_estimator(est).unwrap().scores(&eng, lambda, &mut Rng::seeded(8)).unwrap();
+        assert!(
+            scores.iter().all(|&v| v.is_finite() && v > 0.0 && v <= 1.0),
+            "{est}: non-finite scores on rank-deficient kernel"
+        );
+    }
+}

@@ -350,6 +350,65 @@ fn panel_cache_bit_identical_across_threads_and_budgets() {
 }
 
 #[test]
+fn qr_factorization_bit_identical_across_thread_counts() {
+    let _g = lock();
+    // shapes straddling the NB=32 QR panel boundary, plus a multi-panel
+    // tall one — the sketched-solve shapes of leverage/sketch.rs
+    for &(m, k) in &[(95usize, 95usize), (96, 64), (97, 96), (513, 97)] {
+        let a = Matrix::from_fn(m, k, |i, j| {
+            ((i * k + j) as f64 * 0.61803).sin() + if i == j { 2.0 } else { 0.0 }
+        });
+        let run = || {
+            let f = linalg::qr(a.clone());
+            (f.r(), f.thin_q())
+        };
+        for_each_isa(|isa| {
+            let (r1, q1) = at_threads(1, run);
+            for t in [2usize, 4, 8] {
+                let (rp, qp) = at_threads(t, run);
+                let tag = isa.name();
+                assert_eq!(
+                    bits_of(r1.as_slice()),
+                    bits_of(rp.as_slice()),
+                    "qr R ({m},{k}) diverged at {t} threads ({tag})"
+                );
+                assert_eq!(
+                    bits_of(q1.as_slice()),
+                    bits_of(qp.as_slice()),
+                    "qr Q ({m},{k}) diverged at {t} threads ({tag})"
+                );
+            }
+        });
+    }
+}
+
+#[test]
+fn estimator_family_scores_bit_identical_across_thread_counts() {
+    let _g = lock();
+    let ds = susy_like(400, &mut Rng::seeded(61));
+    let eng = NativeEngine::new(ds.x, Gaussian::new(3.0));
+    let lambda = 1e-2;
+    for spec in ["count-sketch:96", "srft:96", "rls-nystrom:96"] {
+        let run = || {
+            let est = bless::leverage::parse_estimator(spec).expect(spec);
+            est.scores(&eng, lambda, &mut Rng::seeded(13)).expect(spec)
+        };
+        for_each_isa(|isa| {
+            let s1 = at_threads(1, run);
+            for t in [2usize, 4, 8] {
+                let sp = at_threads(t, run);
+                assert_eq!(
+                    bits_of(&s1),
+                    bits_of(&sp),
+                    "{spec} diverged at {t} threads ({})",
+                    isa.name()
+                );
+            }
+        });
+    }
+}
+
+#[test]
 fn falkon_cached_and_streamed_paths_bit_identical_across_threads() {
     let _g = lock();
     let mut rng = Rng::seeded(77);
