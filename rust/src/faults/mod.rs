@@ -1,0 +1,273 @@
+//! Seeded, deterministic fault injection for the serve tier.
+//!
+//! The ROADMAP's production north star means the server must survive the
+//! failure modes production actually throws: stalled and dropped
+//! connections, torn artifact reads, panicking workers, failing engines.
+//! This module is the controlled way to *cause* those, so
+//! `tests/chaos_soak.rs` can assert the hardening in `serve/` holds —
+//! the same observation-never-perturbs discipline as [`crate::obs`]:
+//!
+//! * **Zero cost when disabled.** Every check starts with one relaxed
+//!   atomic load ([`is_active`]); with no plan armed, no lock is taken,
+//!   no RNG advanced, no counter touched, and serve output is
+//!   bit-identical to a build without the module.
+//! * **Deterministic when enabled.** Each [`FaultPoint`] draws from its
+//!   own RNG stream, seeded from the plan seed and the point's index —
+//!   the *k*-th draw at a given point is the same in every run of the
+//!   same plan. (Which request consumes which draw still depends on
+//!   thread scheduling; the per-point draw sequences, and hence
+//!   aggregate fault counts for a fixed request count, replay exactly.)
+//! * **Observable.** Every injected fault increments a per-point counter
+//!   ([`injected_counts`]) and the process-wide
+//!   `faults_injected_total` counter in [`crate::obs::metrics::global`],
+//!   so `/metrics` shows chaos as it happens.
+//!
+//! Plans come from `serve --faults "…"` or the `BLESS_FAULTS` env var —
+//! see [`FaultPlan::parse`] for the spec grammar.
+//!
+//! The firing sites live in `serve/`: connection read/write
+//! ([`FaultPoint::ConnDelay`], [`ConnDrop`](FaultPoint::ConnDrop),
+//! [`ConnTruncate`](FaultPoint::ConnTruncate)), artifact load
+//! ([`ArtifactCorrupt`](FaultPoint::ArtifactCorrupt)), and the engine
+//! workers ([`WorkerPanic`](FaultPoint::WorkerPanic),
+//! [`EngineError`](FaultPoint::EngineError)).
+
+mod plan;
+
+pub use plan::{FaultPlan, FaultPoint, FaultRule};
+
+use crate::rng::Rng;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock, RwLock};
+use std::time::Duration;
+
+/// Fast-path gate: a single relaxed load decides "faults off".
+static ACTIVE: AtomicBool = AtomicBool::new(false);
+
+/// The armed plan plus its per-point draw streams and counters.
+struct Armed {
+    plan: FaultPlan,
+    /// One seeded stream per point: draws at one point never perturb
+    /// another point's sequence.
+    streams: [Mutex<Rng>; 6],
+    injected: [AtomicU64; 6],
+}
+
+fn slot() -> &'static RwLock<Option<Arc<Armed>>> {
+    static SLOT: OnceLock<RwLock<Option<Arc<Armed>>>> = OnceLock::new();
+    SLOT.get_or_init(|| RwLock::new(None))
+}
+
+fn armed() -> Option<Arc<Armed>> {
+    crate::util::sync::read(slot()).clone()
+}
+
+/// Arm a plan (or disarm with `None` / an empty plan). Re-arming resets
+/// the draw streams and injection counters, so two soaks of the same
+/// plan replay identically.
+pub fn configure(plan: Option<FaultPlan>) {
+    let armed = plan.filter(|p| !p.is_empty()).map(|plan| {
+        let streams = std::array::from_fn(|i| {
+            // distinct golden-ratio offsets per point: streams stay
+            // decorrelated even for adjacent seeds
+            Mutex::new(Rng::seeded(
+                plan.seed ^ (0x9e37_79b9_7f4a_7c15u64.wrapping_mul(i as u64 + 1)),
+            ))
+        });
+        Arc::new(Armed { plan, streams, injected: std::array::from_fn(|_| AtomicU64::new(0)) })
+    });
+    let mut guard = crate::util::sync::write(slot());
+    ACTIVE.store(armed.is_some(), Ordering::Relaxed);
+    *guard = armed;
+}
+
+/// Whether any fault plan is armed — one relaxed atomic load, the whole
+/// cost of the module on the disabled path.
+#[inline]
+pub fn is_active() -> bool {
+    ACTIVE.load(Ordering::Relaxed)
+}
+
+fn record(armed: &Armed, point: FaultPoint) {
+    armed.injected[point.index()].fetch_add(1, Ordering::Relaxed);
+    crate::obs::metrics::global().counter("faults_injected_total").inc();
+}
+
+/// Draw once at `point`: `true` means the fault fires now. Always
+/// `false` when disarmed or the plan has no rule for the point.
+pub fn fire(point: FaultPoint) -> bool {
+    if !is_active() {
+        return false;
+    }
+    let Some(armed) = armed() else { return false };
+    let Some(rule) = armed.plan.rule(point) else { return false };
+    if rule.p <= 0.0 {
+        return false;
+    }
+    let hit = crate::util::sync::lock(&armed.streams[point.index()]).bernoulli(rule.p);
+    if hit {
+        record(&armed, point);
+    }
+    hit
+}
+
+/// Draw at a delay-style point; `Some(d)` means "stall for `d` now".
+pub fn delay(point: FaultPoint) -> Option<Duration> {
+    if !is_active() {
+        return None;
+    }
+    let armed = armed()?;
+    let rule = armed.plan.rule(point)?;
+    if rule.p <= 0.0 {
+        return None;
+    }
+    let hit = crate::util::sync::lock(&armed.streams[point.index()]).bernoulli(rule.p);
+    if !hit {
+        return None;
+    }
+    record(&armed, point);
+    Some(Duration::from_millis(rule.ms))
+}
+
+/// Draw at [`FaultPoint::ArtifactCorrupt`]; when it fires, deterministically
+/// mutilate `bytes` (truncate to a seeded prefix, or flip one seeded bit)
+/// and return `true`. The loader downstream must turn the damage into a
+/// clean typed error — that contract is what `tests/chaos_soak.rs` and
+/// the artifact-recovery tests assert.
+pub fn corrupt_artifact(bytes: &mut Vec<u8>) -> bool {
+    if !is_active() {
+        return false;
+    }
+    let Some(armed) = armed() else { return false };
+    let Some(rule) = armed.plan.rule(FaultPoint::ArtifactCorrupt) else { return false };
+    if rule.p <= 0.0 {
+        return false;
+    }
+    let mut rng = crate::util::sync::lock(&armed.streams[FaultPoint::ArtifactCorrupt.index()]);
+    if !rng.bernoulli(rule.p) {
+        return false;
+    }
+    if bytes.is_empty() {
+        record(&armed, FaultPoint::ArtifactCorrupt);
+        return true;
+    }
+    if rng.bernoulli(0.5) {
+        // short read: keep a strict prefix (possibly empty)
+        let keep = rng.below(bytes.len());
+        bytes.truncate(keep);
+    } else {
+        // bit rot: flip one bit somewhere in the payload
+        let idx = rng.below(bytes.len());
+        let bit = rng.below(8) as u32;
+        bytes[idx] ^= 1u8 << bit;
+    }
+    drop(rng);
+    record(&armed, FaultPoint::ArtifactCorrupt);
+    true
+}
+
+/// Injected-fault counts per point since the last [`configure`], in
+/// [`FaultPoint::ALL`] order. Empty when disarmed.
+pub fn injected_counts() -> Vec<(&'static str, u64)> {
+    match armed() {
+        None => Vec::new(),
+        Some(armed) => FaultPoint::ALL
+            .iter()
+            .map(|p| (p.name(), armed.injected[p.index()].load(Ordering::Relaxed)))
+            .collect(),
+    }
+}
+
+/// Total faults injected since the last [`configure`].
+pub fn total_injected() -> u64 {
+    injected_counts().iter().map(|(_, n)| n).sum()
+}
+
+#[cfg(test)]
+static TEST_LOCK: Mutex<()> = Mutex::new(());
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Serialize tests that touch the process-global armed plan.
+    fn guard() -> std::sync::MutexGuard<'static, ()> {
+        crate::util::sync::lock(&TEST_LOCK)
+    }
+
+    #[test]
+    fn disabled_by_default_and_after_disarm() {
+        let _g = guard();
+        configure(None);
+        assert!(!is_active());
+        assert!(!fire(FaultPoint::WorkerPanic));
+        assert!(delay(FaultPoint::ConnDelay).is_none());
+        let mut bytes = vec![1, 2, 3];
+        assert!(!corrupt_artifact(&mut bytes));
+        assert_eq!(bytes, vec![1, 2, 3]);
+        assert_eq!(total_injected(), 0);
+        // an empty plan arms nothing
+        configure(Some(FaultPlan::seeded(9)));
+        assert!(!is_active());
+    }
+
+    #[test]
+    fn p1_always_fires_and_counts() {
+        let _g = guard();
+        configure(Some(
+            FaultPlan::seeded(1).with(FaultPoint::EngineError, FaultRule { p: 1.0, ms: 0 }),
+        ));
+        for _ in 0..10 {
+            assert!(fire(FaultPoint::EngineError));
+        }
+        // points without a rule never fire even while armed
+        assert!(!fire(FaultPoint::ConnDrop));
+        assert_eq!(total_injected(), 10);
+        let counts = injected_counts();
+        assert!(counts.contains(&("engine.error", 10)), "got {counts:?}");
+        configure(None);
+    }
+
+    #[test]
+    fn same_seed_replays_the_same_draw_sequence() {
+        let _g = guard();
+        let plan =
+            FaultPlan::seeded(33).with(FaultPoint::ConnDrop, FaultRule { p: 0.3, ms: 0 });
+        configure(Some(plan.clone()));
+        let a: Vec<bool> = (0..200).map(|_| fire(FaultPoint::ConnDrop)).collect();
+        configure(Some(plan));
+        let b: Vec<bool> = (0..200).map(|_| fire(FaultPoint::ConnDrop)).collect();
+        assert_eq!(a, b, "re-arming the same plan must replay bit-identically");
+        assert!(a.iter().any(|&f| f) && a.iter().any(|&f| !f), "p=0.3 should mix");
+        configure(None);
+    }
+
+    #[test]
+    fn delay_returns_the_configured_stall() {
+        let _g = guard();
+        configure(Some(
+            FaultPlan::seeded(5).with(FaultPoint::ConnDelay, FaultRule { p: 1.0, ms: 40 }),
+        ));
+        assert_eq!(delay(FaultPoint::ConnDelay), Some(Duration::from_millis(40)));
+        configure(None);
+    }
+
+    #[test]
+    fn corruption_damages_bytes_deterministically() {
+        let _g = guard();
+        let plan = FaultPlan::seeded(77)
+            .with(FaultPoint::ArtifactCorrupt, FaultRule { p: 1.0, ms: 0 });
+        let original: Vec<u8> = (0..=255).collect();
+
+        configure(Some(plan.clone()));
+        let mut first = original.clone();
+        assert!(corrupt_artifact(&mut first));
+        assert_ne!(first, original, "corruption must change the bytes");
+
+        configure(Some(plan));
+        let mut second = original.clone();
+        assert!(corrupt_artifact(&mut second));
+        assert_eq!(first, second, "same seed must produce the same damage");
+        configure(None);
+    }
+}

@@ -1,0 +1,236 @@
+//! The fault-plan spec: which injection points fire, how often, and the
+//! seed that makes a chaos run replayable.
+//!
+//! Grammar (CLI `serve --faults "…"` / `BLESS_FAULTS` env):
+//!
+//! ```text
+//! seed=42;conn.delay:p=0.05,ms=200;worker.panic:p=0.01
+//! ```
+//!
+//! Semicolon-separated entries; one optional `seed=N` entry (default 0)
+//! plus any number of `point:key=value,key=value` rules. Every point
+//! takes `p` (per-draw probability, in `[0,1]`); `conn.delay`
+//! additionally takes `ms` (injected delay). [`FaultPlan`] round-trips
+//! through `Display`, so a logged plan replays verbatim.
+
+use std::fmt;
+
+/// A named injection point at one of the serve tier's IO or compute
+/// boundaries. The set is closed — every point has exactly one firing
+/// site in `serve/`, so a plan can be reasoned about exhaustively.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum FaultPoint {
+    /// Stall a connection after reading a request line (`ms` applies).
+    ConnDelay,
+    /// Drop the connection before answering (client sees EOF).
+    ConnDrop,
+    /// Write a truncated response line, then drop the connection.
+    ConnTruncate,
+    /// Corrupt artifact bytes between disk read and decode.
+    ArtifactCorrupt,
+    /// Panic inside an engine worker mid-batch.
+    WorkerPanic,
+    /// Substitute a predict error for a batch's real result.
+    EngineError,
+}
+
+impl FaultPoint {
+    /// Every injection point, in spec order.
+    pub const ALL: [FaultPoint; 6] = [
+        FaultPoint::ConnDelay,
+        FaultPoint::ConnDrop,
+        FaultPoint::ConnTruncate,
+        FaultPoint::ArtifactCorrupt,
+        FaultPoint::WorkerPanic,
+        FaultPoint::EngineError,
+    ];
+
+    /// The spec name (`conn.delay`, `worker.panic`, …).
+    pub fn name(self) -> &'static str {
+        match self {
+            FaultPoint::ConnDelay => "conn.delay",
+            FaultPoint::ConnDrop => "conn.drop",
+            FaultPoint::ConnTruncate => "conn.truncate",
+            FaultPoint::ArtifactCorrupt => "artifact.corrupt",
+            FaultPoint::WorkerPanic => "worker.panic",
+            FaultPoint::EngineError => "engine.error",
+        }
+    }
+
+    /// Parse a spec name back to the point.
+    pub fn parse(s: &str) -> Option<FaultPoint> {
+        FaultPoint::ALL.iter().copied().find(|p| p.name() == s)
+    }
+
+    /// Dense index, for per-point state arrays.
+    pub(crate) fn index(self) -> usize {
+        self as usize
+    }
+}
+
+/// One point's firing rule.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct FaultRule {
+    /// Per-draw firing probability in `[0, 1]`.
+    pub p: f64,
+    /// Injected delay in milliseconds (only `conn.delay` reads it).
+    pub ms: u64,
+}
+
+/// A complete, replayable fault plan: the seed plus zero or more rules.
+#[derive(Clone, Debug, PartialEq, Default)]
+pub struct FaultPlan {
+    /// Base seed for the per-point draw streams; two runs of the same
+    /// plan see the same per-point draw sequences.
+    pub seed: u64,
+    rules: [Option<FaultRule>; 6],
+}
+
+impl FaultPlan {
+    /// An empty plan (no rules) with the given seed.
+    pub fn seeded(seed: u64) -> FaultPlan {
+        FaultPlan { seed, rules: [None; 6] }
+    }
+
+    /// Set (or replace) one point's rule; builder-style.
+    pub fn with(mut self, point: FaultPoint, rule: FaultRule) -> FaultPlan {
+        self.rules[point.index()] = Some(rule);
+        self
+    }
+
+    /// The rule for a point, if the plan carries one.
+    pub fn rule(&self, point: FaultPoint) -> Option<FaultRule> {
+        self.rules[point.index()]
+    }
+
+    /// Whether the plan has any rule at all.
+    pub fn is_empty(&self) -> bool {
+        self.rules.iter().all(Option::is_none)
+    }
+
+    /// Parse a spec string (see the module docs for the grammar).
+    pub fn parse(spec: &str) -> anyhow::Result<FaultPlan> {
+        let mut plan = FaultPlan::default();
+        for entry in spec.split(';').map(str::trim).filter(|e| !e.is_empty()) {
+            if let Some(seed) = entry.strip_prefix("seed=") {
+                plan.seed = seed
+                    .trim()
+                    .parse()
+                    .map_err(|e| anyhow::anyhow!("bad fault seed {seed:?}: {e}"))?;
+                continue;
+            }
+            let (name, kvs) = entry
+                .split_once(':')
+                .ok_or_else(|| anyhow::anyhow!("bad fault entry {entry:?} (want point:p=…)"))?;
+            let point = FaultPoint::parse(name.trim()).ok_or_else(|| {
+                anyhow::anyhow!(
+                    "unknown fault point {:?} (known: {})",
+                    name.trim(),
+                    FaultPoint::ALL.map(FaultPoint::name).join(", ")
+                )
+            })?;
+            let mut rule = FaultRule { p: 0.0, ms: 0 };
+            let mut saw_p = false;
+            for kv in kvs.split(',').map(str::trim).filter(|s| !s.is_empty()) {
+                let (k, v) = kv
+                    .split_once('=')
+                    .ok_or_else(|| anyhow::anyhow!("bad fault param {kv:?} (want key=value)"))?;
+                match k.trim() {
+                    "p" => {
+                        rule.p = v
+                            .trim()
+                            .parse()
+                            .map_err(|e| anyhow::anyhow!("bad probability {v:?}: {e}"))?;
+                        saw_p = true;
+                    }
+                    "ms" => {
+                        rule.ms = v
+                            .trim()
+                            .parse()
+                            .map_err(|e| anyhow::anyhow!("bad ms value {v:?}: {e}"))?;
+                    }
+                    other => anyhow::bail!("unknown fault param {other:?} (want p or ms)"),
+                }
+            }
+            anyhow::ensure!(saw_p, "fault entry {entry:?} needs a probability (p=…)");
+            anyhow::ensure!(
+                rule.p.is_finite() && (0.0..=1.0).contains(&rule.p),
+                "fault probability {} out of [0,1]",
+                rule.p
+            );
+            plan.rules[point.index()] = Some(rule);
+        }
+        Ok(plan)
+    }
+}
+
+impl fmt::Display for FaultPlan {
+    /// The canonical spec string; `FaultPlan::parse(&plan.to_string())`
+    /// reproduces the plan exactly.
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "seed={}", self.seed)?;
+        for point in FaultPoint::ALL {
+            if let Some(rule) = self.rule(point) {
+                write!(f, ";{}:p={}", point.name(), rule.p)?;
+                if rule.ms > 0 {
+                    write!(f, ",ms={}", rule.ms)?;
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_the_issue_example() {
+        let plan = FaultPlan::parse("conn.delay:p=0.05,ms=200;worker.panic:p=0.01").unwrap();
+        assert_eq!(plan.seed, 0);
+        assert_eq!(
+            plan.rule(FaultPoint::ConnDelay),
+            Some(FaultRule { p: 0.05, ms: 200 })
+        );
+        assert_eq!(plan.rule(FaultPoint::WorkerPanic), Some(FaultRule { p: 0.01, ms: 0 }));
+        assert_eq!(plan.rule(FaultPoint::ConnDrop), None);
+    }
+
+    #[test]
+    fn seed_entry_and_whitespace_are_accepted() {
+        let plan = FaultPlan::parse(" seed=42 ; engine.error : p = 1 ").unwrap();
+        assert_eq!(plan.seed, 42);
+        assert_eq!(plan.rule(FaultPoint::EngineError), Some(FaultRule { p: 1.0, ms: 0 }));
+        assert!(FaultPlan::parse("").unwrap().is_empty());
+    }
+
+    #[test]
+    fn display_round_trips() {
+        let plan = FaultPlan::seeded(7)
+            .with(FaultPoint::ConnDelay, FaultRule { p: 0.25, ms: 50 })
+            .with(FaultPoint::ArtifactCorrupt, FaultRule { p: 0.5, ms: 0 });
+        let spec = plan.to_string();
+        assert_eq!(FaultPlan::parse(&spec).unwrap(), plan, "spec was {spec}");
+    }
+
+    #[test]
+    fn bad_specs_are_rejected() {
+        assert!(FaultPlan::parse("nope.point:p=0.5").is_err());
+        assert!(FaultPlan::parse("conn.delay").is_err());
+        assert!(FaultPlan::parse("conn.delay:ms=5").is_err(), "p is mandatory");
+        assert!(FaultPlan::parse("conn.delay:p=1.5").is_err());
+        assert!(FaultPlan::parse("conn.delay:p=-0.1").is_err());
+        assert!(FaultPlan::parse("conn.delay:p=abc").is_err());
+        assert!(FaultPlan::parse("conn.delay:p=0.1,volume=11").is_err());
+        assert!(FaultPlan::parse("seed=notanumber").is_err());
+    }
+
+    #[test]
+    fn every_point_name_parses_back() {
+        for point in FaultPoint::ALL {
+            assert_eq!(FaultPoint::parse(point.name()), Some(point));
+        }
+        assert_eq!(FaultPoint::parse("conn"), None);
+    }
+}

@@ -80,11 +80,23 @@
 //! endpoint (`serve --metrics-addr` → `GET /metrics` in Prometheus text
 //! format, plus `/healthz` and `/varz`). Instrumentation observes and
 //! never partitions, so enabling it changes no computed bit.
+//!
+//! The serve tier is hardened for production failure modes and proven
+//! by a **fault-injection harness** ([`faults`], `serve --faults` /
+//! `BLESS_FAULTS`): seeded, deterministic chaos at the tier's IO and
+//! compute boundaries, against which the server holds per-request
+//! deadlines (`deadline_ms` / `--default-deadline`), socket IO
+//! timeouts, panic-isolated workers with supervised respawn, a
+//! per-model circuit breaker (quarantine + half-open recovery), and
+//! crash-safe artifact writes ([`util::fsio`]). With no plan armed the
+//! harness is a single relaxed atomic load — serve output stays
+//! bit-identical.
 pub mod baselines;
 pub mod bless;
 pub mod coordinator;
 pub mod data;
 pub mod falkon;
+pub mod faults;
 pub mod kernels;
 pub mod leverage;
 pub mod linalg;

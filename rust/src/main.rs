@@ -123,6 +123,21 @@ serve flags:   --host --port --workers --max-batch --linger-us --cache
                --metrics-addr host:port | --metrics-port N (HTTP GET
                /metrics, /healthz, /varz on a separate listener; off by
                default)
+               --default-deadline MS (deadline for requests without their
+               own deadline_ms; 0 = wait forever; default 0)
+               --io-timeout-ms N (per-connection socket read/write timeout,
+               the slowloris defense; 0 disables; default 30000)
+               --breaker-threshold K (consecutive worker failures that
+               quarantine a model; 0 disables; default 8)
+               --breaker-cooldown-ms N (open-state dwell before a half-open
+               probe; default 1000)
+               --stats-file PATH (persist per-model counters + histograms
+               on shutdown, restore on start)
+               --faults \"conn.delay:p=0.05,ms=200;worker.panic:p=0.01\"
+               (seeded fault injection for chaos testing; also the
+               BLESS_FAULTS env var — the flag wins; add seed=N to the
+               spec for deterministic replay; off by default and zero-cost
+               when off)
 convert flags: --in <path> --out <path> [--format json|binary] (default: by
                --out extension)
 ";
@@ -547,6 +562,24 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
             )
         })
     });
+    // chaos harness: --faults beats the BLESS_FAULTS env var; absent
+    // both, the registry stays disarmed (a single relaxed load per
+    // injection point — serving output is bit-identical)
+    let fault_spec = args
+        .get("faults")
+        .map(str::to_string)
+        .or_else(|| std::env::var("BLESS_FAULTS").ok().filter(|s| !s.trim().is_empty()));
+    match &fault_spec {
+        Some(spec) => {
+            let plan = bless::faults::FaultPlan::parse(spec)
+                .map_err(|e| anyhow::anyhow!("--faults: {e}"))?;
+            println!("fault injection ARMED: {plan}");
+            bless::faults::configure(Some(plan));
+        }
+        None => bless::faults::configure(None),
+    }
+    let default_deadline_ms = args.get_u64("default-deadline", 0);
+    let io_timeout_ms = args.get_u64("io-timeout-ms", 30_000);
     let mut builder = ServeConfig::builder()
         .addr(format!("{}:{}", args.get_str("host", "127.0.0.1"), args.get_usize("port", 7878)))
         .workers(args.get_usize("workers", 2))
@@ -555,7 +588,19 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
         .cache_capacity(args.get_usize("cache", 1024))
         .cache_quant(args.get_f64("cache-quant", 1e-9))
         .max_queue(args.get_usize("max-queue", 1024))
-        .threads(args.get_usize("threads", 0));
+        .threads(args.get_usize("threads", 0))
+        .default_deadline(
+            (default_deadline_ms > 0)
+                .then(|| std::time::Duration::from_millis(default_deadline_ms)),
+        )
+        .io_timeout((io_timeout_ms > 0).then(|| std::time::Duration::from_millis(io_timeout_ms)))
+        .breaker_threshold(args.get_usize("breaker-threshold", 8) as u32)
+        .breaker_cooldown(std::time::Duration::from_millis(
+            args.get_u64("breaker-cooldown-ms", 1_000),
+        ));
+    if let Some(path) = args.get("stats-file") {
+        builder = builder.stats_file(path);
+    }
     if let Some(addr) = metrics_addr {
         builder = builder.metrics_addr(addr);
     }

@@ -108,6 +108,21 @@ impl Histogram {
             sum: self.sum.load(Relaxed),
         }
     }
+
+    /// Fold a snapshot's counts back into the live histogram — the
+    /// restore half of snapshot/restore (`serve --stats-file`). Exact:
+    /// `h.merge_snapshot(&s)` makes `h.snapshot()` the bucket-wise sum.
+    /// Snapshots shorter than `HIST_BUCKETS` (older persisted files)
+    /// merge their prefix.
+    pub fn merge_snapshot(&self, s: &HistSnapshot) {
+        for (b, &c) in self.buckets.iter().zip(&s.buckets) {
+            if c > 0 {
+                b.fetch_add(c, Relaxed);
+            }
+        }
+        self.count.fetch_add(s.count, Relaxed);
+        self.sum.fetch_add(s.sum, Relaxed);
+    }
 }
 
 /// A plain-integer copy of a [`Histogram`]: mergeable, comparable, and
@@ -331,6 +346,22 @@ mod tests {
         let s = h.snapshot();
         assert_eq!(s.count, 40_000);
         assert_eq!(s.buckets.iter().sum::<u64>(), 40_000);
+    }
+
+    #[test]
+    fn merge_snapshot_restores_exactly() {
+        let mut rng = Rng::seeded(42);
+        let persisted = random_snapshot(&mut rng, 800);
+        let live = Histogram::new();
+        for v in [3u64, 97, 100_000] {
+            live.record(v);
+        }
+        live.merge_snapshot(&persisted);
+        let mut want = persisted.clone();
+        for v in [3u64, 97, 100_000] {
+            want.record(v);
+        }
+        assert_eq!(live.snapshot(), want, "restore must be bucket-exact");
     }
 
     #[test]

@@ -11,21 +11,72 @@
 //! The queue is a plain `Mutex<VecDeque> + Condvar` pair: `std::sync::
 //! mpsc` receivers cannot be shared across workers without holding a lock
 //! through the blocking `recv`, which would serialize the worker pool.
+//! Locking goes through [`crate::util::sync`], so a worker that panics
+//! mid-batch (isolated by the server's `catch_unwind` supervisor) never
+//! wedges the queue for its peers.
 
 use std::collections::VecDeque;
 use std::sync::mpsc;
 use std::sync::{Condvar, Mutex};
 use std::time::{Duration, Instant};
 
+use crate::util::sync as psync;
+
+/// Why a queued job failed — carried back over the job's reply channel
+/// so the connection handler can answer with the right wire `code`.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum JobError {
+    /// The job's deadline had already passed when a worker dequeued it
+    /// (or the handler timed out waiting); wire code `deadline_exceeded`.
+    DeadlineExceeded,
+    /// The worker servicing the batch panicked; the supervisor respawned
+    /// it and the job is answered with wire code `internal`.
+    Panicked,
+    /// The predict itself failed (engine error, stale dimension after a
+    /// hot reload, …); wire code `internal` with this message.
+    Failed(String),
+}
+
+impl JobError {
+    /// The machine-readable wire code for this failure.
+    pub fn code(&self) -> &'static str {
+        match self {
+            JobError::DeadlineExceeded => "deadline_exceeded",
+            JobError::Panicked | JobError::Failed(_) => "internal",
+        }
+    }
+
+    /// Human-readable message for the wire reply.
+    pub fn message(&self) -> String {
+        match self {
+            JobError::DeadlineExceeded => "deadline exceeded before completion".to_string(),
+            JobError::Panicked => "worker panicked servicing the batch".to_string(),
+            JobError::Failed(msg) => msg.clone(),
+        }
+    }
+}
+
 /// One queued prediction request: the query row plus the channel the
 /// connection handler is blocked on.
 pub struct PredictJob {
     /// Query point (length = model feature dimension; validated upstream).
     pub x: Vec<f64>,
-    /// Where the batched score — or a structured failure (e.g. the model
-    /// was hot-reloaded to a different dimension mid-flight) — is
-    /// delivered.
-    pub reply: mpsc::Sender<Result<f64, String>>,
+    /// Where the batched score — or a structured failure (deadline blown,
+    /// worker panicked, model hot-reloaded to a different dimension
+    /// mid-flight) — is delivered.
+    pub reply: mpsc::Sender<Result<f64, JobError>>,
+    /// Absolute completion deadline, if the request (or the server
+    /// default) set one; workers discard already-expired jobs at dequeue
+    /// instead of spending a batch slot on an answer nobody is waiting
+    /// for.
+    pub deadline: Option<Instant>,
+}
+
+impl PredictJob {
+    /// Whether the job's deadline (if any) has already passed.
+    pub fn expired(&self, now: Instant) -> bool {
+        self.deadline.is_some_and(|d| now >= d)
+    }
 }
 
 /// Outcome of a bounded enqueue attempt.
@@ -77,7 +128,7 @@ impl<T> BatchQueue<T> {
     /// an item arriving while `cap` items are already queued is dropped
     /// and [`Push::Full`] returned — the server's backpressure signal.
     pub fn push_bounded(&self, item: T, cap: usize) -> Push {
-        let mut g = self.state.lock().unwrap();
+        let mut g = psync::lock(&self.state);
         if g.closed {
             return Push::Closed;
         }
@@ -93,13 +144,13 @@ impl<T> BatchQueue<T> {
     /// Close the queue: no further pushes succeed; blocked poppers drain
     /// the remaining items and then observe `None`.
     pub fn close(&self) {
-        self.state.lock().unwrap().closed = true;
+        psync::lock(&self.state).closed = true;
         self.cv.notify_all();
     }
 
     /// Number of currently queued items.
     pub fn len(&self) -> usize {
-        self.state.lock().unwrap().items.len()
+        psync::lock(&self.state).items.len()
     }
 
     /// Whether the queue is currently empty.
@@ -113,13 +164,13 @@ impl<T> BatchQueue<T> {
     /// items. `max` must be ≥ 1.
     pub fn pop_batch(&self, max: usize, linger: Duration) -> Option<Vec<T>> {
         assert!(max >= 1);
-        let mut g = self.state.lock().unwrap();
+        let mut g = psync::lock(&self.state);
         // phase 1: wait for the first item
         while g.items.is_empty() {
             if g.closed {
                 return None;
             }
-            g = self.cv.wait(g).unwrap();
+            g = psync::wait(&self.cv, g);
         }
         // phase 2: linger for stragglers to coalesce a batch
         if linger > Duration::ZERO && g.items.len() < max && !g.closed {
@@ -129,7 +180,7 @@ impl<T> BatchQueue<T> {
                 if now >= deadline || g.items.len() >= max || g.closed {
                     break;
                 }
-                let (g2, timeout) = self.cv.wait_timeout(g, deadline - now).unwrap();
+                let (g2, timeout) = psync::wait_timeout(&self.cv, g, deadline - now);
                 g = g2;
                 if timeout.timed_out() {
                     break;
@@ -226,6 +277,47 @@ mod tests {
         assert!(batch.len() >= 2, "linger failed to coalesce: got {batch:?}");
     }
 
+    #[test]
+    fn job_error_wire_codes() {
+        assert_eq!(JobError::DeadlineExceeded.code(), "deadline_exceeded");
+        assert_eq!(JobError::Panicked.code(), "internal");
+        assert_eq!(JobError::Failed("dim".into()).code(), "internal");
+        assert_eq!(JobError::Failed("dim".into()).message(), "dim");
+    }
+
+    #[test]
+    fn expiry_is_judged_against_the_deadline() {
+        let (tx, _rx) = mpsc::channel();
+        let now = Instant::now();
+        let job = PredictJob { x: vec![0.0], reply: tx.clone(), deadline: None };
+        assert!(!job.expired(now), "no deadline never expires");
+        let job = PredictJob {
+            x: vec![0.0],
+            reply: tx,
+            deadline: Some(now + Duration::from_secs(5)),
+        };
+        assert!(!job.expired(now));
+        assert!(job.expired(now + Duration::from_secs(6)));
+    }
+
+    #[test]
+    fn queue_survives_a_popper_panicking_mid_hold() {
+        let q: Arc<BatchQueue<u32>> = Arc::new(BatchQueue::new());
+        q.push(1);
+        let q2 = Arc::clone(&q);
+        // poison the internal mutex the way a crashed worker would
+        let _ = std::thread::spawn(move || {
+            let _g = q2.state.lock().unwrap();
+            panic!("worker crash while holding the queue lock");
+        })
+        .join();
+        // every operation still works for the surviving threads
+        assert!(q.push(2));
+        assert_eq!(q.len(), 2);
+        assert_eq!(q.pop_batch(8, Duration::ZERO).unwrap(), vec![1, 2]);
+        q.close();
+    }
+
     /// The ISSUE-mandated agreement check: answering jobs through the
     /// batched path gives the same scores as one-at-a-time prediction.
     #[test]
@@ -243,7 +335,7 @@ mod tests {
         let mut receivers = Vec::new();
         for x in &queries {
             let (tx, rx) = mpsc::channel();
-            queue.push(PredictJob { x: x.clone(), reply: tx });
+            queue.push(PredictJob { x: x.clone(), reply: tx, deadline: None });
             receivers.push(rx);
         }
 

@@ -58,8 +58,34 @@
 //! shed immediately with `{"error":…,"code":"overloaded"}` rather than
 //! buffered without bound — clients should back off and retry.
 //! [`Client::predict_with_retry`] packages that loop: jittered
-//! exponential backoff under a [`RetryPolicy`], retrying only
-//! `overloaded` replies.
+//! exponential backoff under a [`RetryPolicy`], retrying the transient
+//! codes (`overloaded`, `deadline_exceeded`) and surfacing a typed
+//! [`server::RetryExhausted`] when the budget runs out.
+//!
+//! ## Robustness
+//!
+//! The serving tier is hardened against its own failure modes, and a
+//! seeded chaos harness ([`crate::faults`]) injects them on demand:
+//!
+//! * **Deadlines** — requests may carry `"deadline_ms"` (or inherit
+//!   `ServeConfig::default_deadline`); a request that cannot be
+//!   answered in time gets `{"code":"deadline_exceeded"}` instead of
+//!   waiting forever, and expired jobs are discarded at dequeue.
+//! * **Panic quarantine** — engine workers run each batch under
+//!   `catch_unwind`; a panic answers its batch with structured errors
+//!   and the worker respawns, so the pool never shrinks. Repeated
+//!   failures trip a per-model circuit breaker
+//!   ([`registry::Breaker`]): the model answers `quarantined`
+//!   immediately, `/healthz` degrades, and a half-open probe re-admits
+//!   it once healthy.
+//! * **Crash-safe artifacts** — every artifact and stats write goes
+//!   through temp-file + fsync + atomic rename
+//!   ([`crate::util::fsio::atomic_write`]), so a crash mid-save never
+//!   leaves a torn file; truncated or bit-flipped artifacts load as
+//!   clean typed errors (the checksum catches them).
+//! * **Stats continuity** — `ServeConfig::stats_file` persists
+//!   per-model counters and histograms across restarts
+//!   ([`stats_io`]).
 //!
 //! ## Observability
 //!
@@ -106,13 +132,17 @@ pub mod model_store;
 pub mod protocol;
 pub mod registry;
 pub mod server;
+pub mod stats_io;
 
-pub use batcher::{BatchQueue, PredictJob, Push};
+pub use batcher::{BatchQueue, JobError, PredictJob, Push};
 pub use cache::PredictionCache;
 pub use codec::Format;
 pub use model_store::{ModelArtifact, Predictor, FORMAT, VERSION};
 pub use protocol::{AdminRequest, AdminResponse, ModelInfo, Request, StatsSnapshot};
-pub use registry::{ModelEntry, ModelSpec, ModelStats, Registry};
+pub use registry::{
+    Admission, Breaker, ModelEntry, ModelSpec, ModelStats, Registry, RegistryConfig,
+};
 pub use server::{
-    start, start_registry, Client, RetryPolicy, ServeConfig, ServeConfigBuilder, ServerHandle,
+    start, start_registry, Client, RetryExhausted, RetryPolicy, ServeConfig,
+    ServeConfigBuilder, ServerHandle,
 };

@@ -221,19 +221,19 @@ impl ModelArtifact {
     }
 
     /// Save to disk in an explicit encoding (the `repro convert` path).
+    /// The write is crash-safe ([`crate::util::fsio::atomic_write`]):
+    /// staged in a same-directory temp file, fsynced, then renamed into
+    /// place — a crash mid-save can never leave a torn artifact under
+    /// the final name, only the complete old file or the complete new
+    /// one.
     pub fn save_as(&self, path: impl AsRef<Path>, format: Format) -> anyhow::Result<()> {
         self.validate()?;
         let path = path.as_ref();
-        if let Some(parent) = path.parent() {
-            if !parent.as_os_str().is_empty() {
-                std::fs::create_dir_all(parent)?;
-            }
-        }
         let bytes = match format {
             Format::Json => self.to_json().to_string().into_bytes(),
             Format::Binary => codec::encode(self),
         };
-        std::fs::write(path, bytes)
+        crate::util::fsio::atomic_write(path, &bytes)
             .map_err(|e| anyhow::anyhow!("writing {}: {e}", path.display()))
     }
 
@@ -242,8 +242,12 @@ impl ModelArtifact {
     /// and version mismatches all return errors.
     pub fn load(path: impl AsRef<Path>) -> anyhow::Result<Self> {
         let path = path.as_ref();
-        let bytes =
+        let mut bytes =
             std::fs::read(path).map_err(|e| anyhow::anyhow!("reading {}: {e}", path.display()))?;
+        // fault-injection point: a chaos plan may mutilate the bytes
+        // between read and decode; the decoders below must answer with a
+        // clean typed error either way
+        crate::faults::corrupt_artifact(&mut bytes);
         match Format::detect(&bytes) {
             Format::Binary => {
                 let art = codec::decode(&bytes)

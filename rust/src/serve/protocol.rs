@@ -32,7 +32,16 @@
 //! Malformed lines get `{"error":"…","code":"…"}` and the connection
 //! stays open. The `code` field is machine-readable: `bad_request`,
 //! `unknown_model`, `overloaded` (queue-depth backpressure — retry
-//! later), `reload_failed`, `internal`, `shutting_down`.
+//! later), `deadline_exceeded` (the request's `deadline_ms` — or the
+//! server's `--default-deadline` — elapsed before a score was ready;
+//! retryable), `quarantined` (the model's circuit breaker is open after
+//! repeated worker failures; retry after its cooldown), `reload_failed`,
+//! `internal`, `shutting_down`.
+//!
+//! A predict request may carry `"deadline_ms":N` — a per-request
+//! completion budget in milliseconds, measured from the moment the
+//! server parses the line. Expired requests are answered
+//! `deadline_exceeded` instead of occupying a batch slot.
 //!
 //! Numbers ride JSON's `f64` lane, so correlation `id`s (and counters)
 //! are exact only up to 2⁵³ — the standard JSON interop bound. Clients
@@ -52,6 +61,9 @@ pub enum Request {
         model: Option<String>,
         /// The query row.
         x: Vec<f64>,
+        /// Per-request completion budget in milliseconds; `None` falls
+        /// back to the server's default deadline (which may be none).
+        deadline_ms: Option<u64>,
     },
     /// Report counters — aggregate, or one model's when `model` is set.
     Stats {
@@ -336,7 +348,17 @@ impl Request {
         }
         let id = j.get("id").and_then(|v| v.as_f64()).unwrap_or(0.0) as u64;
         let model = j.get("model").and_then(|v| v.as_str()).map(str::to_string);
-        Ok(Request::Predict { id, model, x })
+        let deadline_ms = match j.get("deadline_ms").and_then(|v| v.as_f64()) {
+            Some(ms) => {
+                anyhow::ensure!(
+                    ms.is_finite() && ms >= 1.0,
+                    "deadline_ms must be a positive number of milliseconds"
+                );
+                Some(ms as u64)
+            }
+            None => None,
+        };
+        Ok(Request::Predict { id, model, x, deadline_ms })
     }
 
     /// Serialize a request to its wire line (no trailing newline) —
@@ -344,10 +366,13 @@ impl Request {
     pub fn to_line(&self) -> String {
         let mut obj = BTreeMap::new();
         match self {
-            Request::Predict { id, model, x } => {
+            Request::Predict { id, model, x, deadline_ms } => {
                 obj.insert("id".to_string(), Json::Num(*id as f64));
                 if let Some(m) = model {
                     obj.insert("model".to_string(), Json::Str(m.clone()));
+                }
+                if let Some(ms) = deadline_ms {
+                    obj.insert("deadline_ms".to_string(), Json::Num(*ms as f64));
                 }
                 obj.insert(
                     "x".to_string(),
@@ -423,6 +448,15 @@ pub struct StatsSnapshot {
     pub shed: u64,
     /// Hot reloads applied (per model; summed in the aggregate view).
     pub reloads: u64,
+    /// Requests answered `deadline_exceeded` (expired in queue or timed
+    /// out waiting for the batch result).
+    pub deadline_exceeded: u64,
+    /// Requests refused `quarantined` (circuit breaker open).
+    pub quarantined: u64,
+    /// Worker panics caught and isolated by the supervisor.
+    pub worker_panics: u64,
+    /// Supervised worker respawns after a panic.
+    pub worker_respawns: u64,
     /// Total predict latency in microseconds (enqueue → reply).
     pub latency_us: u64,
     /// Median predict latency in microseconds, from the server-side
@@ -470,6 +504,10 @@ impl StatsSnapshot {
         self.errors += other.errors;
         self.shed += other.shed;
         self.reloads += other.reloads;
+        self.deadline_exceeded += other.deadline_exceeded;
+        self.quarantined += other.quarantined;
+        self.worker_panics += other.worker_panics;
+        self.worker_respawns += other.worker_respawns;
         self.latency_us += other.latency_us;
     }
 
@@ -486,6 +524,13 @@ impl StatsSnapshot {
         obj.insert("errors".to_string(), Json::Num(self.errors as f64));
         obj.insert("shed".to_string(), Json::Num(self.shed as f64));
         obj.insert("reloads".to_string(), Json::Num(self.reloads as f64));
+        obj.insert(
+            "deadline_exceeded".to_string(),
+            Json::Num(self.deadline_exceeded as f64),
+        );
+        obj.insert("quarantined".to_string(), Json::Num(self.quarantined as f64));
+        obj.insert("worker_panics".to_string(), Json::Num(self.worker_panics as f64));
+        obj.insert("worker_respawns".to_string(), Json::Num(self.worker_respawns as f64));
         obj.insert("latency_us".to_string(), Json::Num(self.latency_us as f64));
         obj.insert("mean_latency_us".to_string(), Json::Num(self.mean_latency_us()));
         obj.insert("latency_p50_us".to_string(), Json::Num(self.latency_p50_us));
@@ -511,6 +556,10 @@ impl StatsSnapshot {
             errors: field("errors"),
             shed: field("shed"),
             reloads: field("reloads"),
+            deadline_exceeded: field("deadline_exceeded"),
+            quarantined: field("quarantined"),
+            worker_panics: field("worker_panics"),
+            worker_respawns: field("worker_respawns"),
             latency_us: field("latency_us"),
             latency_p50_us: ffield("latency_p50_us"),
             latency_p95_us: ffield("latency_p95_us"),
@@ -574,19 +623,33 @@ mod tests {
 
     #[test]
     fn predict_request_round_trips() {
-        let req = Request::Predict { id: 42, model: None, x: vec![0.5, -1.25, 3.0] };
+        let req = Request::Predict {
+            id: 42,
+            model: None,
+            x: vec![0.5, -1.25, 3.0],
+            deadline_ms: None,
+        };
         let line = req.to_line();
         assert!(!line.contains('\n'));
+        assert!(!line.contains("deadline_ms"), "absent deadline stays off the wire");
         assert_eq!(Request::parse(&line).unwrap(), req);
 
         let routed = Request::Predict {
             id: 7,
             model: Some("higgs-v2".to_string()),
             x: vec![1.0, 2.0],
+            deadline_ms: Some(250),
         };
         let line = routed.to_line();
         assert!(line.contains("\"model\":\"higgs-v2\""));
+        assert!(line.contains("\"deadline_ms\":250"));
         assert_eq!(Request::parse(&line).unwrap(), routed);
+    }
+
+    #[test]
+    fn bad_deadlines_are_rejected() {
+        assert!(Request::parse("{\"x\":[1],\"deadline_ms\":0}").is_err());
+        assert!(Request::parse("{\"x\":[1],\"deadline_ms\":-5}").is_err());
     }
 
     #[test]
@@ -697,6 +760,10 @@ mod tests {
             errors: 1,
             shed: 2,
             reloads: 4,
+            deadline_exceeded: 6,
+            quarantined: 5,
+            worker_panics: 2,
+            worker_respawns: 2,
             latency_us: 12_000,
             latency_p50_us: 104.0,
             latency_p95_us: 240.5,
@@ -715,12 +782,25 @@ mod tests {
     #[test]
     fn stats_aggregation_sums_fields() {
         let mut a = StatsSnapshot { requests: 3, shed: 1, latency_us: 10, ..Default::default() };
-        let b = StatsSnapshot { requests: 2, errors: 4, reloads: 1, ..Default::default() };
+        let b = StatsSnapshot {
+            requests: 2,
+            errors: 4,
+            reloads: 1,
+            deadline_exceeded: 3,
+            quarantined: 2,
+            worker_panics: 1,
+            worker_respawns: 1,
+            ..Default::default()
+        };
         a.add(&b);
         assert_eq!(a.requests, 5);
         assert_eq!(a.errors, 4);
         assert_eq!(a.shed, 1);
         assert_eq!(a.reloads, 1);
+        assert_eq!(a.deadline_exceeded, 3);
+        assert_eq!(a.quarantined, 2);
+        assert_eq!(a.worker_panics, 1);
+        assert_eq!(a.worker_respawns, 1);
         assert_eq!(a.latency_us, 10);
     }
 }

@@ -1,7 +1,8 @@
 //! Multi-model registry: N named models served by one process.
 //!
 //! Each [`ModelEntry`] owns its own micro-batching queue, LRU cache,
-//! counters and queue-depth cap, around a hot-swappable predictor:
+//! counters, queue-depth cap, and circuit breaker, around a
+//! hot-swappable predictor:
 //!
 //! * **Routing** — requests carry `"model":"name"`; with exactly one
 //!   model loaded the name may be omitted ([`Registry::resolve`]).
@@ -17,16 +18,25 @@
 //!   depth cap; beyond it the request is shed with [`Push::Full`] and
 //!   the server answers a structured `overloaded` error instead of
 //!   buffering without bound.
+//! * **Quarantine** — each entry's [`Breaker`] counts consecutive
+//!   worker-side failures (panics, engine errors). At the threshold the
+//!   model is quarantined: new requests are refused up front with a
+//!   structured `quarantined` error (the failing engine is not even
+//!   asked), `/healthz` reports the model degraded, and after a cooldown
+//!   one half-open probe request is let through — success re-admits the
+//!   model, failure re-opens the breaker for another cooldown.
 
 use crate::obs::{HistSnapshot, Histogram};
 use crate::serve::batcher::{BatchQueue, PredictJob, Push};
 use crate::serve::cache::{PredictionCache, QueryKey};
 use crate::serve::model_store::{ModelArtifact, Predictor};
 use crate::serve::protocol::StatsSnapshot;
+use crate::util::sync as psync;
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicU32, AtomicU64, AtomicU8, Ordering};
 use std::sync::{Arc, Mutex, RwLock};
+use std::time::{Duration, Instant};
 
 /// Per-model monotone counters and latency/batch-size histograms
 /// (lock-free; read via [`StatsSnapshot`]).
@@ -46,6 +56,16 @@ pub struct ModelStats {
     pub shed: AtomicU64,
     /// Hot reloads applied.
     pub reloads: AtomicU64,
+    /// Requests answered `deadline_exceeded` (expired in queue or timed
+    /// out waiting for the batch result).
+    pub deadline_exceeded: AtomicU64,
+    /// Requests refused up front because the breaker was open.
+    pub quarantined: AtomicU64,
+    /// Worker panics caught by the supervisor.
+    pub worker_panics: AtomicU64,
+    /// Supervised worker respawns (the pool never shrinks, so this
+    /// tracks `worker_panics`).
+    pub worker_respawns: AtomicU64,
     /// Per-request predict latency in microseconds. The histogram's
     /// exact running sum is what the wire protocol still reports as
     /// `latency_us`, so pre-histogram clients keep working.
@@ -68,6 +88,10 @@ impl ModelStats {
             errors: self.errors.load(Ordering::Relaxed),
             shed: self.shed.load(Ordering::Relaxed),
             reloads: self.reloads.load(Ordering::Relaxed),
+            deadline_exceeded: self.deadline_exceeded.load(Ordering::Relaxed),
+            quarantined: self.quarantined.load(Ordering::Relaxed),
+            worker_panics: self.worker_panics.load(Ordering::Relaxed),
+            worker_respawns: self.worker_respawns.load(Ordering::Relaxed),
             latency_us: lat.sum,
             latency_p50_us: lat.percentile(0.50),
             latency_p95_us: lat.percentile(0.95),
@@ -76,6 +100,174 @@ impl ModelStats {
             batch_p95: batch.percentile(0.95),
             batch_p99: batch.percentile(0.99),
         }
+    }
+
+    /// Restore persisted counters (`serve --stats-file`): add the
+    /// snapshot's counts onto the live atomics and fold the histograms
+    /// back bucket-exactly where the snapshot carries them.
+    pub fn restore(&self, s: &StatsSnapshot) {
+        self.requests.fetch_add(s.requests, Ordering::Relaxed);
+        self.batches.fetch_add(s.batches, Ordering::Relaxed);
+        self.batched.fetch_add(s.batched, Ordering::Relaxed);
+        self.cache_hits.fetch_add(s.cache_hits, Ordering::Relaxed);
+        self.errors.fetch_add(s.errors, Ordering::Relaxed);
+        self.shed.fetch_add(s.shed, Ordering::Relaxed);
+        self.reloads.fetch_add(s.reloads, Ordering::Relaxed);
+        self.deadline_exceeded.fetch_add(s.deadline_exceeded, Ordering::Relaxed);
+        self.quarantined.fetch_add(s.quarantined, Ordering::Relaxed);
+        self.worker_panics.fetch_add(s.worker_panics, Ordering::Relaxed);
+        self.worker_respawns.fetch_add(s.worker_respawns, Ordering::Relaxed);
+    }
+}
+
+/// Breaker admission decision for one request.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Admission {
+    /// Breaker closed (or disabled): serve normally.
+    Allowed,
+    /// Breaker half-open and this request won the probe slot: serve it;
+    /// its outcome decides whether the model is re-admitted.
+    Probe,
+    /// Breaker open (or half-open with the probe already in flight):
+    /// refuse with a structured `quarantined` error.
+    Quarantined,
+}
+
+const BREAKER_CLOSED: u8 = 0;
+const BREAKER_OPEN: u8 = 1;
+const BREAKER_HALF_OPEN: u8 = 2;
+
+/// Per-model circuit breaker: `threshold` consecutive worker-side
+/// failures open it; after `cooldown` one half-open probe is admitted,
+/// and its outcome closes or re-opens the breaker. `threshold == 0`
+/// disables the breaker entirely ([`admit`](Self::admit) always allows).
+///
+/// State machine (all transitions lock-free, CAS-guarded):
+///
+/// ```text
+/// closed --K consecutive failures--> open --cooldown--> half-open
+///   ^                                 ^                   |    |
+///   |                                 +----probe fails----+    |
+///   +-------------------probe succeeds-------------------------+
+/// ```
+pub struct Breaker {
+    threshold: u32,
+    cooldown: Duration,
+    consecutive: AtomicU32,
+    state: AtomicU8,
+    /// When the breaker last opened, as millis since `epoch` (an
+    /// `Instant` can't live in an atomic).
+    opened_at_ms: AtomicU64,
+    epoch: Instant,
+    /// Times the breaker has opened (monotone; for metrics).
+    trips: AtomicU64,
+}
+
+impl Breaker {
+    /// A closed breaker with the given policy.
+    pub fn new(threshold: u32, cooldown: Duration) -> Breaker {
+        Breaker {
+            threshold,
+            cooldown,
+            consecutive: AtomicU32::new(0),
+            state: AtomicU8::new(BREAKER_CLOSED),
+            opened_at_ms: AtomicU64::new(0),
+            epoch: Instant::now(),
+            trips: AtomicU64::new(0),
+        }
+    }
+
+    fn now_ms(&self) -> u64 {
+        self.epoch.elapsed().as_millis() as u64
+    }
+
+    /// Admission decision for one incoming request.
+    pub fn admit(&self) -> Admission {
+        if self.threshold == 0 {
+            return Admission::Allowed;
+        }
+        match self.state.load(Ordering::Acquire) {
+            BREAKER_CLOSED => Admission::Allowed,
+            BREAKER_OPEN => {
+                let opened = self.opened_at_ms.load(Ordering::Acquire);
+                if self.now_ms().saturating_sub(opened) >= self.cooldown.as_millis() as u64 {
+                    // cooldown elapsed: exactly one caller wins the CAS
+                    // and carries the half-open probe
+                    if self
+                        .state
+                        .compare_exchange(
+                            BREAKER_OPEN,
+                            BREAKER_HALF_OPEN,
+                            Ordering::AcqRel,
+                            Ordering::Acquire,
+                        )
+                        .is_ok()
+                    {
+                        return Admission::Probe;
+                    }
+                }
+                Admission::Quarantined
+            }
+            _ => Admission::Quarantined, // half-open: probe already in flight
+        }
+    }
+
+    /// A worker-side success for this model (a batch predicted cleanly).
+    /// Resets the failure streak and closes the breaker — including from
+    /// half-open, which is the probe succeeding.
+    pub fn record_success(&self) {
+        if self.threshold == 0 {
+            return;
+        }
+        self.consecutive.store(0, Ordering::Release);
+        self.state.store(BREAKER_CLOSED, Ordering::Release);
+    }
+
+    /// A worker-side failure (panic or engine error). From half-open
+    /// this is the probe failing: re-open immediately for another
+    /// cooldown. From closed, `threshold` consecutive failures open the
+    /// breaker.
+    pub fn record_failure(&self) {
+        if self.threshold == 0 {
+            return;
+        }
+        let state = self.state.load(Ordering::Acquire);
+        if state == BREAKER_HALF_OPEN {
+            self.open();
+            return;
+        }
+        let streak = self.consecutive.fetch_add(1, Ordering::AcqRel) + 1;
+        if streak >= self.threshold && state == BREAKER_CLOSED {
+            self.open();
+        }
+    }
+
+    fn open(&self) {
+        self.opened_at_ms.store(self.now_ms(), Ordering::Release);
+        if self.state.swap(BREAKER_OPEN, Ordering::AcqRel) != BREAKER_OPEN {
+            self.trips.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// Whether new requests are currently refused (open, cooldown not
+    /// yet spent by a probe). Half-open reports `false`: the model is
+    /// probing its way back.
+    pub fn is_open(&self) -> bool {
+        self.threshold != 0 && self.state.load(Ordering::Acquire) == BREAKER_OPEN
+    }
+
+    /// Numeric state for metrics: 0 closed, 1 open, 2 half-open.
+    pub fn state_code(&self) -> u8 {
+        if self.threshold == 0 {
+            BREAKER_CLOSED
+        } else {
+            self.state.load(Ordering::Acquire)
+        }
+    }
+
+    /// Times the breaker has opened.
+    pub fn trips(&self) -> u64 {
+        self.trips.load(Ordering::Relaxed)
     }
 }
 
@@ -89,7 +281,8 @@ pub enum CacheProbe {
     Miss(Option<(QueryKey, u64)>),
 }
 
-/// One named model: hot-swappable predictor + queue + cache + counters.
+/// One named model: hot-swappable predictor + queue + cache + counters
+/// + circuit breaker.
 pub struct ModelEntry {
     name: String,
     source: Mutex<Option<PathBuf>>,
@@ -101,6 +294,8 @@ pub struct ModelEntry {
     cache: Option<Mutex<PredictionCache>>,
     /// This model's traffic counters.
     pub stats: ModelStats,
+    /// This model's circuit breaker (threshold 0 = disabled).
+    pub breaker: Breaker,
     max_queue: usize,
 }
 
@@ -109,9 +304,7 @@ impl ModelEntry {
         name: String,
         artifact: &ModelArtifact,
         source: Option<PathBuf>,
-        cache_capacity: usize,
-        cache_quant: f64,
-        max_queue: usize,
+        cfg: &RegistryConfig,
     ) -> ModelEntry {
         ModelEntry {
             name,
@@ -119,10 +312,11 @@ impl ModelEntry {
             predictor: RwLock::new(Arc::new(Predictor::new(artifact))),
             version: AtomicU64::new(1),
             queue: BatchQueue::new(),
-            cache: (cache_capacity > 0)
-                .then(|| Mutex::new(PredictionCache::new(cache_capacity, cache_quant))),
+            cache: (cfg.cache_capacity > 0)
+                .then(|| Mutex::new(PredictionCache::new(cfg.cache_capacity, cfg.cache_quant))),
             stats: ModelStats::default(),
-            max_queue,
+            breaker: Breaker::new(cfg.breaker_threshold, cfg.breaker_cooldown),
+            max_queue: cfg.max_queue,
         }
     }
 
@@ -134,17 +328,17 @@ impl ModelEntry {
     /// Snapshot of the current predictor (workers hold this across a
     /// whole batch, so a concurrent reload never invalidates it).
     pub fn predictor(&self) -> Arc<Predictor> {
-        Arc::clone(&self.predictor.read().unwrap())
+        Arc::clone(&psync::read(&self.predictor))
     }
 
     /// Current feature dimension.
     pub fn dim(&self) -> usize {
-        self.predictor.read().unwrap().dim()
+        psync::read(&self.predictor).dim()
     }
 
     /// Current number of centers M.
     pub fn m(&self) -> usize {
-        self.predictor.read().unwrap().m()
+        psync::read(&self.predictor).m()
     }
 
     /// Monotone model version: 1 at load, +1 per reload.
@@ -167,7 +361,7 @@ impl ModelEntry {
         match &self.cache {
             None => CacheProbe::Miss(None),
             Some(cache) => {
-                let mut c = cache.lock().unwrap();
+                let mut c = psync::lock(cache);
                 let key = c.key(x);
                 match c.get(&key) {
                     Some(y) => CacheProbe::Hit(y),
@@ -184,7 +378,7 @@ impl ModelEntry {
     /// since the probe (the score may belong to the replaced predictor).
     pub fn cache_insert(&self, key: QueryKey, version: u64, y: f64) {
         if let Some(cache) = &self.cache {
-            let mut c = cache.lock().unwrap();
+            let mut c = psync::lock(cache);
             if self.version.load(Ordering::SeqCst) == version {
                 c.insert(key, y);
             }
@@ -196,11 +390,11 @@ impl ModelEntry {
     /// emptied under the swap so no stale score survives.
     pub fn swap(&self, artifact: &ModelArtifact) {
         let next = Arc::new(Predictor::new(artifact)); // built outside the lock
-        let mut guard = self.predictor.write().unwrap();
+        let mut guard = psync::write(&self.predictor);
         *guard = next;
         match &self.cache {
             Some(cache) => {
-                let mut c = cache.lock().unwrap();
+                let mut c = psync::lock(cache);
                 self.version.fetch_add(1, Ordering::SeqCst);
                 c.clear();
             }
@@ -220,7 +414,7 @@ impl ModelEntry {
         // hold the source lock across resolve+load+swap+record: two
         // concurrent reloads serialize, so the recorded source always
         // names the artifact the active predictor actually came from
-        let mut source = self.source.lock().unwrap();
+        let mut source = psync::lock(&self.source);
         let target: PathBuf = match path {
             Some(p) => p.to_path_buf(),
             None => source.clone().ok_or_else(|| {
@@ -264,6 +458,36 @@ impl ModelSpec {
     }
 }
 
+/// Per-model knobs applied to every entry (startup and dynamically
+/// added alike).
+#[derive(Clone, Debug)]
+#[non_exhaustive]
+pub struct RegistryConfig {
+    /// LRU query-cache capacity per model (0 = caching off).
+    pub cache_capacity: usize,
+    /// Cache quantization step.
+    pub cache_quant: f64,
+    /// Queue-depth cap per model (0 = unbounded).
+    pub max_queue: usize,
+    /// Consecutive worker-side failures that quarantine a model
+    /// (0 = breaker disabled).
+    pub breaker_threshold: u32,
+    /// How long a quarantined model waits before its half-open probe.
+    pub breaker_cooldown: Duration,
+}
+
+impl Default for RegistryConfig {
+    fn default() -> Self {
+        RegistryConfig {
+            cache_capacity: 0,
+            cache_quant: 1e-9,
+            max_queue: 0,
+            breaker_threshold: 0,
+            breaker_cooldown: Duration::from_secs(1),
+        }
+    }
+}
+
 /// The model table. Names are seeded at startup and may grow or shrink
 /// at run time ([`add`](Self::add) / [`remove`](Self::remove), driven
 /// by the `admin add`/`admin remove` wire verbs); each entry's
@@ -271,10 +495,8 @@ impl ModelSpec {
 pub struct Registry {
     models: RwLock<BTreeMap<String, Arc<ModelEntry>>>,
     /// Per-model knobs recorded at startup so dynamically added models
-    /// get the same cache and backpressure behaviour.
-    cache_capacity: usize,
-    cache_quant: f64,
-    max_queue: usize,
+    /// get the same cache, backpressure, and breaker behaviour.
+    config: RegistryConfig,
     /// Set by [`close_all`](Self::close_all); fences late `add`s so no
     /// model can join after shutdown closed every queue.
     closed: std::sync::atomic::AtomicBool,
@@ -282,18 +504,11 @@ pub struct Registry {
 
 impl Registry {
     /// Build from the startup specs; names must be unique and nonempty.
-    pub fn new(
-        specs: Vec<ModelSpec>,
-        cache_capacity: usize,
-        cache_quant: f64,
-        max_queue: usize,
-    ) -> anyhow::Result<Registry> {
+    pub fn new(specs: Vec<ModelSpec>, config: RegistryConfig) -> anyhow::Result<Registry> {
         anyhow::ensure!(!specs.is_empty(), "registry needs at least one model");
         let registry = Registry {
             models: RwLock::new(BTreeMap::new()),
-            cache_capacity,
-            cache_quant,
-            max_queue,
+            config,
             closed: std::sync::atomic::AtomicBool::new(false),
         };
         for spec in specs {
@@ -307,7 +522,7 @@ impl Registry {
     /// new entry so the caller can spawn its worker pool.
     pub fn add(&self, spec: ModelSpec) -> anyhow::Result<Arc<ModelEntry>> {
         anyhow::ensure!(!spec.name.is_empty(), "empty model name");
-        let mut models = self.models.write().unwrap();
+        let mut models = psync::write(&self.models);
         // checked under the write lock: close_all takes the same lock,
         // so an add serializes against shutdown
         anyhow::ensure!(
@@ -324,9 +539,7 @@ impl Registry {
             spec.name.clone(),
             &spec.artifact,
             spec.source,
-            self.cache_capacity,
-            self.cache_quant,
-            self.max_queue,
+            &self.config,
         ));
         models.insert(spec.name, Arc::clone(&entry));
         Ok(entry)
@@ -337,7 +550,7 @@ impl Registry {
     /// `unknown model` for new requests.
     pub fn remove(&self, name: &str) -> anyhow::Result<Arc<ModelEntry>> {
         let entry = {
-            let mut models = self.models.write().unwrap();
+            let mut models = psync::write(&self.models);
             models.remove(name).ok_or_else(|| {
                 anyhow::anyhow!(
                     "unknown model {name:?} (loaded: {})",
@@ -351,33 +564,33 @@ impl Registry {
 
     /// Number of registered models.
     pub fn len(&self) -> usize {
-        self.models.read().unwrap().len()
+        psync::read(&self.models).len()
     }
 
     /// Whether the registry is empty (only possible after `remove`).
     pub fn is_empty(&self) -> bool {
-        self.models.read().unwrap().is_empty()
+        psync::read(&self.models).is_empty()
     }
 
     /// Registered names, sorted.
     pub fn names(&self) -> Vec<String> {
-        self.models.read().unwrap().keys().cloned().collect()
+        psync::read(&self.models).keys().cloned().collect()
     }
 
     /// Look up a model by exact name.
     pub fn get(&self, name: &str) -> Option<Arc<ModelEntry>> {
-        self.models.read().unwrap().get(name).cloned()
+        psync::read(&self.models).get(name).cloned()
     }
 
     /// All entries (cloned handles, for spawning per-model workers).
     pub fn entries(&self) -> Vec<Arc<ModelEntry>> {
-        self.models.read().unwrap().values().cloned().collect()
+        psync::read(&self.models).values().cloned().collect()
     }
 
     /// Route a request: an explicit name must exist; no name is allowed
     /// only when exactly one model is loaded.
     pub fn resolve(&self, name: Option<&str>) -> anyhow::Result<Arc<ModelEntry>> {
-        let models = self.models.read().unwrap();
+        let models = psync::read(&self.models);
         let joined = || models.keys().cloned().collect::<Vec<_>>().join(", ");
         match name {
             Some(n) => models
@@ -396,7 +609,7 @@ impl Registry {
     /// Close every model queue (shutdown: drain then stop workers) and
     /// fence out further [`add`](Self::add)s.
     pub fn close_all(&self) {
-        let models = self.models.write().unwrap();
+        let models = psync::write(&self.models);
         self.closed.store(true, Ordering::SeqCst);
         for entry in models.values() {
             entry.queue.close();
@@ -447,13 +660,14 @@ mod tests {
 
     #[test]
     fn resolve_routes_by_name_and_defaults_when_unambiguous() {
-        let one = Registry::new(vec![spec("only", 1.0)], 0, 1e-9, 0).unwrap();
+        let one = Registry::new(vec![spec("only", 1.0)], RegistryConfig::default()).unwrap();
         assert_eq!(one.resolve(None).unwrap().name(), "only");
         assert_eq!(one.resolve(Some("only")).unwrap().name(), "only");
         let err = one.resolve(Some("nope")).err().unwrap().to_string();
         assert!(err.contains("unknown model"), "got {err}");
 
-        let two = Registry::new(vec![spec("a", 1.0), spec("b", 2.0)], 0, 1e-9, 0).unwrap();
+        let two = Registry::new(vec![spec("a", 1.0), spec("b", 2.0)], RegistryConfig::default())
+            .unwrap();
         assert_eq!(two.resolve(Some("b")).unwrap().name(), "b");
         let err = two.resolve(None).err().unwrap().to_string();
         assert!(err.contains("set \"model\""), "got {err}");
@@ -462,17 +676,20 @@ mod tests {
 
     #[test]
     fn duplicate_and_empty_registries_rejected() {
-        assert!(Registry::new(vec![], 0, 1e-9, 0).is_err());
-        assert!(Registry::new(vec![spec("a", 1.0), spec("a", 2.0)], 0, 1e-9, 0)
-            .err()
-            .unwrap()
-            .to_string()
-            .contains("duplicate"));
+        assert!(Registry::new(vec![], RegistryConfig::default()).is_err());
+        assert!(
+            Registry::new(vec![spec("a", 1.0), spec("a", 2.0)], RegistryConfig::default())
+                .err()
+                .unwrap()
+                .to_string()
+                .contains("duplicate")
+        );
     }
 
     #[test]
     fn swap_changes_predictions_bumps_version_and_clears_cache() {
-        let reg = Registry::new(vec![spec("a", 1.0)], 16, 1e-9, 0).unwrap();
+        let cfg = RegistryConfig { cache_capacity: 16, ..RegistryConfig::default() };
+        let reg = Registry::new(vec![spec("a", 1.0)], cfg).unwrap();
         let entry = reg.get("a").unwrap();
         let q = [0.1, -0.2, 0.3];
         let before = entry.predictor().predict_one(&q).unwrap();
@@ -505,7 +722,7 @@ mod tests {
 
     #[test]
     fn reload_reads_either_format_from_disk_and_updates_source() {
-        let reg = Registry::new(vec![spec("a", 1.0)], 0, 1e-9, 0).unwrap();
+        let reg = Registry::new(vec![spec("a", 1.0)], RegistryConfig::default()).unwrap();
         let entry = reg.get("a").unwrap();
         // no source recorded and no path given → clean error, model intact
         let err = entry.reload(None).unwrap_err().to_string();
@@ -525,7 +742,7 @@ mod tests {
 
     #[test]
     fn add_and_remove_models_at_run_time() {
-        let reg = Registry::new(vec![spec("a", 1.0)], 0, 1e-9, 0).unwrap();
+        let reg = Registry::new(vec![spec("a", 1.0)], RegistryConfig::default()).unwrap();
         let entry = reg.add(spec("b", 2.0)).unwrap();
         assert_eq!(entry.name(), "b");
         assert_eq!(reg.names(), vec!["a".to_string(), "b".to_string()]);
@@ -536,7 +753,7 @@ mod tests {
         // its workers drain and exit
         let (tx, _rx) = std::sync::mpsc::channel();
         assert_eq!(
-            removed.enqueue(PredictJob { x: vec![0.0; 3], reply: tx }),
+            removed.enqueue(PredictJob { x: vec![0.0; 3], reply: tx, deadline: None }),
             Push::Closed
         );
         assert!(reg.remove("a").is_err(), "double remove must fail");
@@ -550,11 +767,12 @@ mod tests {
 
     #[test]
     fn enqueue_applies_the_depth_cap() {
-        let reg = Registry::new(vec![spec("a", 1.0)], 0, 1e-9, 2).unwrap();
+        let cfg = RegistryConfig { max_queue: 2, ..RegistryConfig::default() };
+        let reg = Registry::new(vec![spec("a", 1.0)], cfg).unwrap();
         let entry = reg.get("a").unwrap();
         let job = |x: f64| {
             let (tx, rx) = std::sync::mpsc::channel();
-            (PredictJob { x: vec![x, 0.0, 0.0], reply: tx }, rx)
+            (PredictJob { x: vec![x, 0.0, 0.0], reply: tx, deadline: None }, rx)
         };
         let (j1, _r1) = job(0.1);
         let (j2, _r2) = job(0.2);
@@ -567,18 +785,24 @@ mod tests {
 
     #[test]
     fn aggregate_stats_sums_models() {
-        let reg = Registry::new(vec![spec("a", 1.0), spec("b", 2.0)], 0, 1e-9, 0).unwrap();
+        let reg = Registry::new(vec![spec("a", 1.0), spec("b", 2.0)], RegistryConfig::default())
+            .unwrap();
         reg.get("a").unwrap().stats.requests.fetch_add(3, Ordering::Relaxed);
         reg.get("b").unwrap().stats.requests.fetch_add(4, Ordering::Relaxed);
         reg.get("b").unwrap().stats.shed.fetch_add(1, Ordering::Relaxed);
+        reg.get("a").unwrap().stats.deadline_exceeded.fetch_add(2, Ordering::Relaxed);
+        reg.get("b").unwrap().stats.quarantined.fetch_add(5, Ordering::Relaxed);
         let total = reg.aggregate_stats();
         assert_eq!(total.requests, 7);
         assert_eq!(total.shed, 1);
+        assert_eq!(total.deadline_exceeded, 2);
+        assert_eq!(total.quarantined, 5);
     }
 
     #[test]
     fn snapshot_derives_percentiles_and_aggregate_merges_histograms() {
-        let reg = Registry::new(vec![spec("a", 1.0), spec("b", 2.0)], 0, 1e-9, 0).unwrap();
+        let reg = Registry::new(vec![spec("a", 1.0), spec("b", 2.0)], RegistryConfig::default())
+            .unwrap();
         let a = reg.get("a").unwrap();
         let b = reg.get("b").unwrap();
         // model a: fast (≈100 µs), model b: slow (≈10 ms)
@@ -598,5 +822,96 @@ mod tests {
         assert_eq!(total.latency_us, 100 * 100 + 100 * 10_000);
         assert!(total.latency_p50_us < 10_000.0, "p50 {}", total.latency_p50_us);
         assert!(total.latency_p99_us >= 10_000.0, "p99 {}", total.latency_p99_us);
+    }
+
+    #[test]
+    fn stats_restore_adds_counters_back() {
+        let stats = ModelStats::default();
+        stats.requests.fetch_add(2, Ordering::Relaxed);
+        let mut snap = StatsSnapshot::default();
+        snap.requests = 40;
+        snap.deadline_exceeded = 7;
+        snap.worker_respawns = 3;
+        stats.restore(&snap);
+        let s = stats.snapshot();
+        assert_eq!(s.requests, 42);
+        assert_eq!(s.deadline_exceeded, 7);
+        assert_eq!(s.worker_respawns, 3);
+    }
+
+    #[test]
+    fn breaker_trips_at_threshold_and_recovers_through_half_open() {
+        let b = Breaker::new(3, Duration::from_millis(20));
+        assert_eq!(b.admit(), Admission::Allowed);
+        assert_eq!(b.state_code(), 0);
+
+        b.record_failure();
+        b.record_failure();
+        assert_eq!(b.admit(), Admission::Allowed, "below threshold stays closed");
+        b.record_failure();
+        assert!(b.is_open());
+        assert_eq!(b.state_code(), 1);
+        assert_eq!(b.trips(), 1);
+        assert_eq!(b.admit(), Admission::Quarantined, "open refuses before cooldown");
+
+        std::thread::sleep(Duration::from_millis(25));
+        assert_eq!(b.admit(), Admission::Probe, "cooldown elapsed: one probe");
+        assert_eq!(b.state_code(), 2);
+        assert_eq!(b.admit(), Admission::Quarantined, "only one probe in flight");
+        assert!(!b.is_open(), "half-open is probing, not refusing outright");
+
+        // probe fails → re-open for another cooldown
+        b.record_failure();
+        assert!(b.is_open());
+        assert_eq!(b.trips(), 2);
+        std::thread::sleep(Duration::from_millis(25));
+        assert_eq!(b.admit(), Admission::Probe);
+        // probe succeeds → closed, traffic flows again
+        b.record_success();
+        assert_eq!(b.state_code(), 0);
+        assert_eq!(b.admit(), Admission::Allowed);
+    }
+
+    #[test]
+    fn breaker_success_resets_the_failure_streak() {
+        let b = Breaker::new(3, Duration::from_millis(10));
+        b.record_failure();
+        b.record_failure();
+        b.record_success();
+        b.record_failure();
+        b.record_failure();
+        assert!(!b.is_open(), "streak was reset; 2 < 3 failures since");
+        b.record_failure();
+        assert!(b.is_open());
+    }
+
+    #[test]
+    fn disabled_breaker_never_trips() {
+        let b = Breaker::new(0, Duration::from_millis(1));
+        for _ in 0..100 {
+            b.record_failure();
+        }
+        assert!(!b.is_open());
+        assert_eq!(b.admit(), Admission::Allowed);
+        assert_eq!(b.state_code(), 0);
+        assert_eq!(b.trips(), 0);
+    }
+
+    #[test]
+    fn probe_race_admits_exactly_one() {
+        let b = Arc::new(Breaker::new(1, Duration::from_millis(5)));
+        b.record_failure();
+        assert!(b.is_open());
+        std::thread::sleep(Duration::from_millis(10));
+        let threads: Vec<_> = (0..8)
+            .map(|_| {
+                let b = Arc::clone(&b);
+                std::thread::spawn(move || b.admit())
+            })
+            .collect();
+        let decisions: Vec<_> = threads.into_iter().map(|t| t.join().unwrap()).collect();
+        let probes = decisions.iter().filter(|d| **d == Admission::Probe).count();
+        assert_eq!(probes, 1, "got {decisions:?}");
+        assert!(decisions.iter().all(|d| *d != Admission::Allowed));
     }
 }

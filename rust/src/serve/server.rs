@@ -28,19 +28,49 @@
 //! `GET /metrics` (Prometheus), `/healthz` and `/varz` through
 //! [`MetricsBridge`]-over-[`crate::obs::serve_http`] — scrape traffic
 //! never touches the prediction socket.
+//!
+//! ## Robustness
+//!
+//! The tier is hardened against the failure modes the
+//! [`crate::faults`] chaos harness injects (`tests/chaos_soak.rs`
+//! proves each one):
+//!
+//! * **Deadlines** — a request's `deadline_ms` (or
+//!   [`ServeConfig::default_deadline`]) bounds enqueue→reply; expired
+//!   jobs are discarded at dequeue and answered `deadline_exceeded`.
+//! * **Socket timeouts** — every connection gets
+//!   [`ServeConfig::io_timeout`] read/write timeouts, so a slowloris
+//!   peer (or an injected stall) cannot pin a connection thread forever.
+//! * **Panic isolation** — each engine worker runs its batch ticks
+//!   under `catch_unwind` inside a supervision loop: a panicking batch
+//!   answers its jobs with a structured `internal` error (a drop guard
+//!   replies even mid-unwind), the worker respawns in place, and the
+//!   pool never shrinks.
+//! * **Circuit breaker** — consecutive worker-side failures quarantine
+//!   a model ([`crate::serve::registry::Breaker`]): requests are
+//!   refused up front with `quarantined`, `/healthz` degrades, and a
+//!   half-open probe re-admits the model after
+//!   [`ServeConfig::breaker_cooldown`].
+//! * **Crash-safe stats** — with [`ServeConfig::stats_file`] set,
+//!   per-model counters and histograms persist across restarts
+//!   ([`crate::serve::stats_io`]).
 
 use crate::linalg::Matrix;
 use crate::obs::{escape_label, serve_http, HttpHandle, MetricsProvider};
-use crate::serve::batcher::{PredictJob, Push};
+use crate::serve::batcher::{JobError, PredictJob, Push};
 use crate::serve::model_store::ModelArtifact;
 use crate::serve::protocol::{
     self, AdminRequest, AdminResponse, ModelInfo, Request, StatsSnapshot,
 };
-use crate::serve::registry::{CacheProbe, ModelEntry, ModelSpec, ModelStats, Registry};
+use crate::serve::registry::{
+    Admission, CacheProbe, ModelEntry, ModelSpec, ModelStats, Registry, RegistryConfig,
+};
 use crate::util::json::Json;
+use crate::util::sync as psync;
 use std::collections::BTreeMap;
 use std::io::{BufRead, BufReader, BufWriter, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
+use std::panic::AssertUnwindSafe;
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
@@ -95,6 +125,25 @@ pub struct ServeConfig {
     /// (`GET /metrics`, `/healthz`, `/varz`). `None` (the default)
     /// disables it; use port 0 for an ephemeral port (tests).
     pub metrics_addr: Option<String>,
+    /// Deadline applied to predict requests that carry no
+    /// `deadline_ms` of their own. `None` (the default) means such
+    /// requests wait indefinitely, as before this knob existed.
+    pub default_deadline: Option<Duration>,
+    /// Socket read/write timeout per connection — the slowloris
+    /// defense. A peer that stalls mid-line for longer than this gets
+    /// its connection dropped. `None` disables; default 30s.
+    pub io_timeout: Option<Duration>,
+    /// Consecutive worker-side failures (panics or engine errors) that
+    /// trip a model's circuit breaker into quarantine. 0 disables the
+    /// breaker entirely. Default 8 — a healthy model never comes close,
+    /// so serving output is unchanged unless a model is actually sick.
+    pub breaker_threshold: u32,
+    /// How long a tripped breaker stays fully open before admitting a
+    /// single half-open probe request.
+    pub breaker_cooldown: Duration,
+    /// Persist per-model stats here on graceful shutdown and fold them
+    /// back in at start ([`crate::serve::stats_io`]). `None` disables.
+    pub stats_file: Option<PathBuf>,
 }
 
 impl Default for ServeConfig {
@@ -109,6 +158,11 @@ impl Default for ServeConfig {
             max_queue: 1024,
             threads: 0,
             metrics_addr: None,
+            default_deadline: None,
+            io_timeout: Some(Duration::from_secs(30)),
+            breaker_threshold: 8,
+            breaker_cooldown: Duration::from_secs(1),
+            stats_file: None,
         }
     }
 }
@@ -197,6 +251,38 @@ impl ServeConfigBuilder {
         self
     }
 
+    /// Deadline for requests that carry no `deadline_ms` (None = wait
+    /// indefinitely).
+    pub fn default_deadline(mut self, d: Option<Duration>) -> Self {
+        self.cfg.default_deadline = d;
+        self
+    }
+
+    /// Socket read/write timeout per connection (None disables).
+    pub fn io_timeout(mut self, d: Option<Duration>) -> Self {
+        self.cfg.io_timeout = d;
+        self
+    }
+
+    /// Consecutive worker failures that quarantine a model (0 disables
+    /// the breaker).
+    pub fn breaker_threshold(mut self, n: u32) -> Self {
+        self.cfg.breaker_threshold = n;
+        self
+    }
+
+    /// Open-state dwell time before a half-open probe.
+    pub fn breaker_cooldown(mut self, d: Duration) -> Self {
+        self.cfg.breaker_cooldown = d;
+        self
+    }
+
+    /// Stats persistence file (save on shutdown, restore on start).
+    pub fn stats_file(mut self, path: impl Into<PathBuf>) -> Self {
+        self.cfg.stats_file = Some(path.into());
+        self
+    }
+
     /// Validate the combination and hand back the config.
     pub fn build(self) -> anyhow::Result<ServeConfig> {
         let cfg = self.cfg;
@@ -211,6 +297,16 @@ impl ServeConfigBuilder {
         if let Some(addr) = &cfg.metrics_addr {
             anyhow::ensure!(!addr.is_empty(), "metrics_addr must not be empty when set");
         }
+        if let Some(d) = cfg.default_deadline {
+            anyhow::ensure!(!d.is_zero(), "default_deadline must be positive when set");
+        }
+        if let Some(d) = cfg.io_timeout {
+            anyhow::ensure!(!d.is_zero(), "io_timeout must be positive when set");
+        }
+        anyhow::ensure!(
+            cfg.breaker_threshold == 0 || !cfg.breaker_cooldown.is_zero(),
+            "breaker_cooldown must be positive when the breaker is enabled"
+        );
         Ok(cfg)
     }
 }
@@ -227,6 +323,10 @@ struct Shared {
     workers_per_model: usize,
     max_batch: usize,
     linger: Duration,
+    /// Deadline for requests without their own `deadline_ms`.
+    default_deadline: Option<Duration>,
+    /// Per-connection socket read/write timeout.
+    io_timeout: Option<Duration>,
     /// Engine worker threads — boot-time pools plus any spawned for
     /// dynamically added models; joined by [`ServerHandle`].
     workers: Mutex<Vec<JoinHandle<()>>>,
@@ -265,7 +365,7 @@ impl MetricsProvider for MetricsBridge {
         let mut out = String::new();
         let entries = self.shared.registry.entries();
         type StatGetter = fn(&ModelStats) -> u64;
-        let kinds: [(&str, StatGetter); 7] = [
+        let kinds: [(&str, StatGetter); 11] = [
             ("bless_serve_requests_total", |s| s.requests.load(Ordering::Relaxed)),
             ("bless_serve_batches_total", |s| s.batches.load(Ordering::Relaxed)),
             ("bless_serve_batched_total", |s| s.batched.load(Ordering::Relaxed)),
@@ -273,6 +373,14 @@ impl MetricsProvider for MetricsBridge {
             ("bless_serve_errors_total", |s| s.errors.load(Ordering::Relaxed)),
             ("bless_serve_shed_total", |s| s.shed.load(Ordering::Relaxed)),
             ("bless_serve_reloads_total", |s| s.reloads.load(Ordering::Relaxed)),
+            ("bless_serve_deadline_exceeded_total", |s| {
+                s.deadline_exceeded.load(Ordering::Relaxed)
+            }),
+            ("bless_serve_quarantined_total", |s| s.quarantined.load(Ordering::Relaxed)),
+            ("bless_serve_worker_panics_total", |s| s.worker_panics.load(Ordering::Relaxed)),
+            ("bless_serve_worker_respawns_total", |s| {
+                s.worker_respawns.load(Ordering::Relaxed)
+            }),
         ];
         for (name, get) in kinds {
             let _ = writeln!(out, "# TYPE {name} counter");
@@ -292,6 +400,13 @@ impl MetricsProvider for MetricsBridge {
             let model = escape_label(e.name());
             let v = e.version();
             let _ = writeln!(out, "bless_serve_model_version{{model=\"{model}\"}} {v}");
+        }
+        // 0 = closed, 1 = open (quarantined), 2 = half-open (probing)
+        let _ = writeln!(out, "# TYPE bless_serve_breaker_state gauge");
+        for e in &entries {
+            let model = escape_label(e.name());
+            let s = e.breaker.state_code();
+            let _ = writeln!(out, "bless_serve_breaker_state{{model=\"{model}\"}} {s}");
         }
         let _ = writeln!(out, "# TYPE bless_serve_conn_errors_total counter");
         let _ = writeln!(
@@ -358,20 +473,27 @@ impl MetricsProvider for MetricsBridge {
     }
 
     fn healthz(&self) -> (bool, Json) {
-        let ready = !self.shared.shutdown.load(Ordering::SeqCst);
+        let up = !self.shared.shutdown.load(Ordering::SeqCst);
+        let mut all_ready = up;
         let mut models = BTreeMap::new();
         for e in self.shared.registry.entries() {
+            // a quarantined (breaker-open) model degrades health even
+            // while the rest of the fleet keeps serving
+            let quarantined = e.breaker.is_open();
+            let ready = up && !quarantined;
+            all_ready &= ready;
             let mut o = BTreeMap::new();
             o.insert("ready".to_string(), Json::Bool(ready));
+            o.insert("quarantined".to_string(), Json::Bool(quarantined));
             o.insert("version".to_string(), Json::Num(e.version() as f64));
             o.insert("m".to_string(), Json::Num(e.m() as f64));
             o.insert("d".to_string(), Json::Num(e.dim() as f64));
             models.insert(e.name().to_string(), Json::Obj(o));
         }
         let mut root = BTreeMap::new();
-        root.insert("ok".to_string(), Json::Bool(ready));
+        root.insert("ok".to_string(), Json::Bool(all_ready));
         root.insert("models".to_string(), Json::Obj(models));
-        (ready, Json::Obj(root))
+        (all_ready, Json::Obj(root))
     }
 }
 
@@ -384,6 +506,9 @@ pub struct ServerHandle {
     /// The pool width configured before this server applied
     /// [`ServeConfig::threads`]; restored when the handle goes away.
     prev_threads: Option<usize>,
+    /// Where to persist per-model stats once the workers have drained
+    /// ([`ServeConfig::stats_file`]); taken on the first join.
+    stats_file: Option<PathBuf>,
 }
 
 impl ServerHandle {
@@ -436,9 +561,16 @@ impl ServerHandle {
         // take the handles out before joining: a connection thread
         // servicing `admin add` locks the same list to register new
         // workers, and must never find us holding it across a join
-        let drained: Vec<_> = self.shared.workers.lock().unwrap().drain(..).collect();
+        let drained: Vec<_> = psync::lock(&self.shared.workers).drain(..).collect();
         for w in drained {
             let _ = w.join();
+        }
+        // workers are quiescent, so the snapshot is complete and stable;
+        // atomic_write means a crash mid-save leaves the old file intact
+        if let Some(path) = self.stats_file.take() {
+            if let Err(e) = crate::serve::stats_io::save(&path, &self.shared.registry) {
+                eprintln!("warning: {e}");
+            }
         }
         // only after the prediction side is down: the foreground `join`
         // path must keep scrapes answering while the server runs
@@ -484,7 +616,24 @@ pub fn start_registry(
         crate::util::pool::set_threads(cfg.threads);
         prev
     });
-    let registry = Registry::new(models, cfg.cache_capacity, cfg.cache_quant, cfg.max_queue)?;
+    let reg_cfg = RegistryConfig {
+        cache_capacity: cfg.cache_capacity,
+        cache_quant: cfg.cache_quant,
+        max_queue: cfg.max_queue,
+        breaker_threshold: cfg.breaker_threshold,
+        breaker_cooldown: cfg.breaker_cooldown,
+        ..RegistryConfig::default()
+    };
+    let registry = Registry::new(models, reg_cfg)?;
+    // fold persisted counters/histograms back in before traffic starts,
+    // so dashboards see one continuous run across restarts. A missing
+    // file is first boot; a corrupt one fails the start loudly rather
+    // than silently zeroing history.
+    if let Some(path) = &cfg.stats_file {
+        if path.exists() {
+            crate::serve::stats_io::load(path, &registry)?;
+        }
+    }
     let listener = TcpListener::bind(&cfg.addr)
         .map_err(|e| anyhow::anyhow!("binding {}: {e}", cfg.addr))?;
     let addr = listener.local_addr()?;
@@ -496,6 +645,8 @@ pub fn start_registry(
         workers_per_model: cfg.workers.max(1),
         max_batch: cfg.max_batch,
         linger: cfg.linger,
+        default_deadline: cfg.default_deadline,
+        io_timeout: cfg.io_timeout,
         workers: Mutex::new(Vec::new()),
     });
 
@@ -515,64 +666,131 @@ pub fn start_registry(
 
     let accept_shared = Arc::clone(&shared);
     let accept = std::thread::spawn(move || accept_loop(listener, &accept_shared));
-    Ok(ServerHandle { shared, accept: Some(accept), metrics, prev_threads })
+    Ok(ServerHandle {
+        shared,
+        accept: Some(accept),
+        metrics,
+        prev_threads,
+        stats_file: cfg.stats_file.clone(),
+    })
 }
 
 /// Spawn one model's engine worker pool and register the handles for
 /// the eventual join — shared by boot and `admin add`.
 fn spawn_model_workers(shared: &Shared, entry: &Arc<ModelEntry>) {
-    let mut workers = shared.workers.lock().unwrap();
+    let mut workers = psync::lock(&shared.workers);
     for _ in 0..shared.workers_per_model {
         let entry = Arc::clone(entry);
         let (max_batch, linger) = (shared.max_batch, shared.linger);
         workers.push(std::thread::spawn(move || {
-            worker_loop(&entry, max_batch, linger);
+            supervised_worker(&entry, max_batch, linger);
         }));
     }
 }
 
-fn worker_loop(entry: &ModelEntry, max_batch: usize, linger: Duration) {
-    while let Some(batch) = entry.queue.pop_batch(max_batch, linger) {
-        if batch.is_empty() {
-            continue;
-        }
-        // snapshot the predictor once per batch: a concurrent hot reload
-        // swaps the entry's Arc but cannot invalidate this one
-        let predictor = entry.predictor();
-        let dim = predictor.dim();
-        let (good, stale): (Vec<_>, Vec<_>) =
-            batch.into_iter().partition(|job| job.x.len() == dim);
-        for job in stale {
-            // only possible when a reload changed the feature dimension
-            // between enqueue-time validation and this batch
-            let _ = job
-                .reply
-                .send(Err("model was reloaded with a different dimension".to_string()));
-        }
-        if good.is_empty() {
-            continue;
-        }
-        entry.stats.batches.fetch_add(1, Ordering::Relaxed);
-        entry.stats.batched.fetch_add(good.len() as u64, Ordering::Relaxed);
-        if crate::obs::metrics::serve_recording() {
-            entry.stats.batch_sizes.record(good.len() as u64);
-        }
-        let q = Matrix::from_fn(good.len(), dim, |i, j| good[i].x[j]);
-        match predictor.predict_batch(&q) {
-            Ok(scores) => {
-                for (job, &score) in good.iter().zip(&scores) {
-                    // a disconnected client is not a worker error
-                    let _ = job.reply.send(Ok(score));
-                }
-            }
-            Err(e) => {
-                let msg = e.to_string();
-                for job in &good {
-                    let _ = job.reply.send(Err(msg.clone()));
-                }
+/// The supervision loop a worker thread runs: each batch tick executes
+/// under `catch_unwind`, so a panic (a model bug, a poisoned batch, or
+/// the chaos harness's `worker.panic` point) is confined to the one
+/// batch that hit it. The thread logs the panic against the model's
+/// breaker and respawns its tick loop in place — the pool never
+/// shrinks, and jobs caught mid-batch are answered by a drop guard.
+fn supervised_worker(entry: &ModelEntry, max_batch: usize, linger: Duration) {
+    loop {
+        let tick = std::panic::catch_unwind(AssertUnwindSafe(|| {
+            worker_tick(entry, max_batch, linger)
+        }));
+        match tick {
+            Ok(true) => {}
+            Ok(false) => return, // queue closed: graceful shutdown
+            Err(_) => {
+                entry.stats.worker_panics.fetch_add(1, Ordering::Relaxed);
+                entry.stats.worker_respawns.fetch_add(1, Ordering::Relaxed);
+                entry.breaker.record_failure();
             }
         }
     }
+}
+
+/// Replies `Panicked` to every job still unanswered when dropped — the
+/// worker's promise that a panic mid-batch never strands a client
+/// blocked on `recv`. Jobs answered normally are drained out first.
+struct PendingJobs(Vec<PredictJob>);
+
+impl Drop for PendingJobs {
+    fn drop(&mut self) {
+        for job in self.0.drain(..) {
+            let _ = job.reply.send(Err(JobError::Panicked));
+        }
+    }
+}
+
+/// One batch cycle; returns `false` when the queue has closed.
+fn worker_tick(entry: &ModelEntry, max_batch: usize, linger: Duration) -> bool {
+    let Some(batch) = entry.queue.pop_batch(max_batch, linger) else {
+        return false;
+    };
+    if batch.is_empty() {
+        return true;
+    }
+    // deadline enforcement happens here, at dequeue: a job that sat in
+    // the queue past its deadline is answered without wasting a GEMM
+    // slot on a result the client has already given up on
+    let now = Instant::now();
+    let (batch, expired): (Vec<_>, Vec<_>) =
+        batch.into_iter().partition(|job| !job.expired(now));
+    for job in expired {
+        let _ = job.reply.send(Err(JobError::DeadlineExceeded));
+    }
+    // snapshot the predictor once per batch: a concurrent hot reload
+    // swaps the entry's Arc but cannot invalidate this one
+    let predictor = entry.predictor();
+    let dim = predictor.dim();
+    let (good, stale): (Vec<_>, Vec<_>) =
+        batch.into_iter().partition(|job| job.x.len() == dim);
+    for job in stale {
+        // only possible when a reload changed the feature dimension
+        // between enqueue-time validation and this batch
+        let _ = job.reply.send(Err(JobError::Failed(
+            "model was reloaded with a different dimension".to_string(),
+        )));
+    }
+    if good.is_empty() {
+        return true;
+    }
+    entry.stats.batches.fetch_add(1, Ordering::Relaxed);
+    entry.stats.batched.fetch_add(good.len() as u64, Ordering::Relaxed);
+    if crate::obs::metrics::serve_recording() {
+        entry.stats.batch_sizes.record(good.len() as u64);
+    }
+    // from here on a panic must answer the batch: move the jobs into
+    // the drop guard before any engine work runs
+    let mut pending = PendingJobs(good);
+    if crate::faults::fire(crate::faults::FaultPoint::WorkerPanic) {
+        panic!("injected worker.panic fault");
+    }
+    let q = Matrix::from_fn(pending.0.len(), dim, |i, j| pending.0[i].x[j]);
+    let result = if crate::faults::fire(crate::faults::FaultPoint::EngineError) {
+        Err(anyhow::anyhow!("injected engine.error fault"))
+    } else {
+        predictor.predict_batch(&q)
+    };
+    match result {
+        Ok(scores) => {
+            for (job, &score) in pending.0.drain(..).zip(&scores) {
+                // a disconnected client is not a worker error
+                let _ = job.reply.send(Ok(score));
+            }
+            entry.breaker.record_success();
+        }
+        Err(e) => {
+            let msg = e.to_string();
+            for job in pending.0.drain(..) {
+                let _ = job.reply.send(Err(JobError::Failed(msg.clone())));
+            }
+            entry.breaker.record_failure();
+        }
+    }
+    true
 }
 
 fn accept_loop(listener: TcpListener, shared: &Arc<Shared>) {
@@ -593,6 +811,10 @@ fn accept_loop(listener: TcpListener, shared: &Arc<Shared>) {
 }
 
 fn handle_conn(stream: TcpStream, shared: &Shared) -> std::io::Result<()> {
+    // slowloris defense: a peer that stalls mid-line (or never reads its
+    // reply) times the socket out instead of pinning this thread forever
+    stream.set_read_timeout(shared.io_timeout)?;
+    stream.set_write_timeout(shared.io_timeout)?;
     let reader = BufReader::new(stream.try_clone()?);
     let mut writer = BufWriter::new(stream);
     for line in reader.lines() {
@@ -600,7 +822,45 @@ fn handle_conn(stream: TcpStream, shared: &Shared) -> std::io::Result<()> {
         if line.trim().is_empty() {
             continue;
         }
-        let response = match Request::parse(&line) {
+        // chaos-harness connection faults (no-ops unless armed): a
+        // stalled peer, a peer that vanishes mid-request, and a reply
+        // cut off mid-line — every client must survive all three
+        if crate::faults::is_active() {
+            if let Some(stall) = crate::faults::delay(crate::faults::FaultPoint::ConnDelay) {
+                std::thread::sleep(stall);
+            }
+            if crate::faults::fire(crate::faults::FaultPoint::ConnDrop) {
+                return Ok(());
+            }
+            if crate::faults::fire(crate::faults::FaultPoint::ConnTruncate) {
+                let response = dispatch_line(&line, shared, &mut writer)?;
+                if let Some(response) = response {
+                    let cut = response.len() / 2;
+                    writer.write_all(&response.as_bytes()[..cut])?;
+                    writer.flush()?;
+                }
+                return Ok(());
+            }
+        }
+        match dispatch_line(&line, shared, &mut writer)? {
+            Some(response) => {
+                writeln!(writer, "{response}")?;
+                writer.flush()?;
+            }
+            None => return Ok(()), // shutdown acked inside dispatch
+        }
+    }
+    Ok(())
+}
+
+/// Parse and execute one request line; returns the reply to write, or
+/// `None` when the line was a shutdown (already acked, connection done).
+fn dispatch_line(
+    line: &str,
+    shared: &Shared,
+    writer: &mut BufWriter<TcpStream>,
+) -> std::io::Result<Option<String>> {
+    let response = match Request::parse(line) {
             Err(e) => {
                 shared.conn_errors.fetch_add(1, Ordering::Relaxed);
                 protocol::error_response(None, "bad_request", &e.to_string())
@@ -624,16 +884,13 @@ fn handle_conn(stream: TcpStream, shared: &Shared) -> std::io::Result<()> {
                 shared.request_shutdown();
                 writeln!(writer, "{}", protocol::ok_response())?;
                 writer.flush()?;
-                return Ok(());
+                return Ok(None);
             }
-            Ok(Request::Predict { id, model, x }) => {
-                handle_predict(shared, id, model.as_deref(), x)
+            Ok(Request::Predict { id, model, x, deadline_ms }) => {
+                handle_predict(shared, id, model.as_deref(), x, deadline_ms)
             }
         };
-        writeln!(writer, "{response}")?;
-        writer.flush()?;
-    }
-    Ok(())
+    Ok(Some(response))
 }
 
 fn handle_stats(shared: &Shared, model: Option<&str>) -> String {
@@ -736,7 +993,13 @@ fn handle_remove(shared: &Shared, model: &str) -> String {
     }
 }
 
-fn handle_predict(shared: &Shared, id: u64, model: Option<&str>, x: Vec<f64>) -> String {
+fn handle_predict(
+    shared: &Shared,
+    id: u64,
+    model: Option<&str>,
+    x: Vec<f64>,
+    deadline_ms: Option<u64>,
+) -> String {
     let t0 = Instant::now();
     let entry = match shared.registry.resolve(model) {
         Ok(e) => e,
@@ -746,6 +1009,25 @@ fn handle_predict(shared: &Shared, id: u64, model: Option<&str>, x: Vec<f64>) ->
         }
     };
     entry.stats.requests.fetch_add(1, Ordering::Relaxed);
+    // the request's own deadline wins; otherwise the server default
+    let budget = deadline_ms.map(Duration::from_millis).or(shared.default_deadline);
+    let deadline = budget.map(|b| t0 + b);
+    // breaker check up front: a quarantined model answers immediately
+    // instead of queueing work its sick engine will only fail again
+    match entry.breaker.admit() {
+        Admission::Allowed | Admission::Probe => {}
+        Admission::Quarantined => {
+            entry.stats.quarantined.fetch_add(1, Ordering::Relaxed);
+            return protocol::error_response(
+                Some(id),
+                "quarantined",
+                &format!(
+                    "model {:?} is quarantined after repeated worker failures; retry later",
+                    entry.name()
+                ),
+            );
+        }
+    }
     let dim = entry.dim();
     if x.len() != dim {
         entry.stats.errors.fetch_add(1, Ordering::Relaxed);
@@ -766,7 +1048,7 @@ fn handle_predict(shared: &Shared, id: u64, model: Option<&str>, x: Vec<f64>) ->
     };
 
     let (tx, rx) = mpsc::channel();
-    match entry.enqueue(PredictJob { x, reply: tx }) {
+    match entry.enqueue(PredictJob { x, reply: tx, deadline }) {
         Push::Accepted => {}
         Push::Full => {
             entry.stats.shed.fetch_add(1, Ordering::Relaxed);
@@ -785,7 +1067,13 @@ fn handle_predict(shared: &Shared, id: u64, model: Option<&str>, x: Vec<f64>) ->
             return protocol::error_response(Some(id), "shutting_down", "server is shutting down");
         }
     }
-    match rx.recv() {
+    // with a deadline, don't out-wait it on the channel either: the
+    // worker may be mid-GEMM on an earlier batch when time runs out
+    let received = match deadline {
+        None => rx.recv().map_err(|_| mpsc::RecvTimeoutError::Disconnected),
+        Some(d) => rx.recv_timeout(d.saturating_duration_since(Instant::now())),
+    };
+    match received {
         Ok(Ok(y)) => {
             if let Some((key, version)) = pending {
                 entry.cache_insert(key, version, y);
@@ -793,11 +1081,26 @@ fn handle_predict(shared: &Shared, id: u64, model: Option<&str>, x: Vec<f64>) ->
             bump_latency(entry, t0);
             protocol::predict_response(id, y, false)
         }
-        Ok(Err(msg)) => {
-            entry.stats.errors.fetch_add(1, Ordering::Relaxed);
-            protocol::error_response(Some(id), "internal", &msg)
+        Ok(Err(err)) => {
+            // deadline misses are their own counter (the request was
+            // well-formed and the engine healthy — time just ran out);
+            // everything else is a model error
+            if matches!(err, JobError::DeadlineExceeded) {
+                entry.stats.deadline_exceeded.fetch_add(1, Ordering::Relaxed);
+            } else {
+                entry.stats.errors.fetch_add(1, Ordering::Relaxed);
+            }
+            protocol::error_response(Some(id), err.code(), &err.message())
         }
-        Err(_) => {
+        Err(mpsc::RecvTimeoutError::Timeout) => {
+            entry.stats.deadline_exceeded.fetch_add(1, Ordering::Relaxed);
+            protocol::error_response(
+                Some(id),
+                "deadline_exceeded",
+                &format!("deadline of {}ms elapsed before a result", budget.unwrap().as_millis()),
+            )
+        }
+        Err(mpsc::RecvTimeoutError::Disconnected) => {
             entry.stats.errors.fetch_add(1, Ordering::Relaxed);
             protocol::error_response(
                 Some(id),
@@ -817,10 +1120,10 @@ fn bump_latency(entry: &ModelEntry, t0: Instant) {
     }
 }
 
-/// Backoff policy for [`Client::predict_with_retry`]: shed
-/// (`overloaded`) replies are retried after a jittered exponential
-/// delay, so a fleet of clients hitting a saturated queue spreads out
-/// instead of hammering it in lockstep.
+/// Backoff policy for [`Client::predict_with_retry`]: transient
+/// (`overloaded`, `deadline_exceeded`) replies are retried after a
+/// jittered exponential delay, so a fleet of clients hitting a
+/// saturated queue spreads out instead of hammering it in lockstep.
 #[derive(Clone, Debug)]
 pub struct RetryPolicy {
     /// Retries after the first attempt (0 = plain `predict`).
@@ -832,6 +1135,10 @@ pub struct RetryPolicy {
     /// Seed for the jitter stream; mixed with the request id so
     /// concurrent requests de-correlate while staying reproducible.
     pub seed: u64,
+    /// Wall-clock cap across *all* attempts and backoff sleeps: once
+    /// spent, retrying stops even with `max_retries` left. `None` (the
+    /// default) bounds by attempt count alone.
+    pub budget: Option<Duration>,
 }
 
 impl Default for RetryPolicy {
@@ -841,9 +1148,36 @@ impl Default for RetryPolicy {
             base: Duration::from_millis(1),
             max_delay: Duration::from_millis(200),
             seed: 0x5eed,
+            budget: None,
         }
     }
 }
+
+/// The typed error [`Client::predict_with_retry`] returns when every
+/// attempt failed transiently: distinguishable (via `downcast_ref`)
+/// from a hard server error, and it carries what the caller needs to
+/// decide between escalating and giving up.
+#[derive(Debug)]
+pub struct RetryExhausted {
+    /// Attempts made (the first try plus each retry).
+    pub attempts: u32,
+    /// Wall-clock spent across attempts and backoff sleeps.
+    pub elapsed: Duration,
+    /// The transient error from the final attempt.
+    pub last_error: String,
+}
+
+impl std::fmt::Display for RetryExhausted {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "retry budget exhausted after {} attempts over {:?}: {}",
+            self.attempts, self.elapsed, self.last_error
+        )
+    }
+}
+
+impl std::error::Error for RetryExhausted {}
 
 /// A minimal blocking client for the line protocol — used by the CLI,
 /// the integration tests and the `serve_roundtrip` example.
@@ -879,33 +1213,73 @@ impl Client {
     /// Score one query point against the only loaded model; returns
     /// `(score, served_from_cache)`.
     pub fn predict(&mut self, id: u64, x: &[f64]) -> anyhow::Result<(f64, bool)> {
-        self.predict_req(Request::Predict { id, model: None, x: x.to_vec() }, id)
+        self.predict_req(
+            Request::Predict { id, model: None, x: x.to_vec(), deadline_ms: None },
+            id,
+        )
     }
 
-    /// Like [`predict`](Self::predict) but retries `overloaded` shed
-    /// replies under `policy` (jittered exponential backoff). Any other
-    /// error — and exhaustion of the retry budget — returns as-is.
+    /// Like [`predict`](Self::predict) but carries a per-request
+    /// deadline: the server answers `deadline_exceeded` instead of
+    /// letting the request wait longer than `deadline_ms`.
+    pub fn predict_within(
+        &mut self,
+        id: u64,
+        x: &[f64],
+        deadline_ms: u64,
+    ) -> anyhow::Result<(f64, bool)> {
+        self.predict_req(
+            Request::Predict {
+                id,
+                model: None,
+                x: x.to_vec(),
+                deadline_ms: Some(deadline_ms),
+            },
+            id,
+        )
+    }
+
+    /// Like [`predict`](Self::predict) but retries transient replies —
+    /// `overloaded` sheds and `deadline_exceeded` misses — under
+    /// `policy` (jittered exponential backoff, optional wall-clock
+    /// budget). Hard errors return as-is; exhausting the retry budget
+    /// returns a typed [`RetryExhausted`] the caller can `downcast_ref`.
     pub fn predict_with_retry(
         &mut self,
         id: u64,
         x: &[f64],
         policy: &RetryPolicy,
     ) -> anyhow::Result<(f64, bool)> {
+        fn transient(e: &anyhow::Error) -> bool {
+            let s = e.to_string();
+            s.contains("[overloaded]") || s.contains("[deadline_exceeded]")
+        }
+        let t0 = Instant::now();
         let mut rng = crate::rng::Rng::seeded(policy.seed ^ id);
         let mut delay = policy.base;
-        for _ in 0..policy.max_retries {
+        let mut attempts = 0u32;
+        let mut last_error;
+        loop {
+            attempts += 1;
             match self.predict(id, x) {
-                Err(e) if e.to_string().contains("[overloaded]") => {
-                    // "equal jitter": sleep a uniform fraction of
-                    // [delay/2, delay) so retry waves decohere
-                    let frac = 0.5 + 0.5 * (rng.below(1_000) as f64 / 1_000.0);
-                    std::thread::sleep(delay.mul_f64(frac).min(policy.max_delay));
-                    delay = (delay * 2).min(policy.max_delay);
-                }
+                Err(e) if transient(&e) => last_error = e.to_string(),
                 other => return other,
             }
+            let budget_spent =
+                policy.budget.is_some_and(|b| t0.elapsed() >= b);
+            if attempts > policy.max_retries || budget_spent {
+                return Err(anyhow::Error::new(RetryExhausted {
+                    attempts,
+                    elapsed: t0.elapsed(),
+                    last_error,
+                }));
+            }
+            // "equal jitter": sleep a uniform fraction of
+            // [delay/2, delay) so retry waves decohere
+            let frac = 0.5 + 0.5 * (rng.below(1_000) as f64 / 1_000.0);
+            std::thread::sleep(delay.mul_f64(frac).min(policy.max_delay));
+            delay = (delay * 2).min(policy.max_delay);
         }
-        self.predict(id, x)
     }
 
     /// Score one query point against a named model.
@@ -916,7 +1290,12 @@ impl Client {
         x: &[f64],
     ) -> anyhow::Result<(f64, bool)> {
         self.predict_req(
-            Request::Predict { id, model: Some(model.to_string()), x: x.to_vec() },
+            Request::Predict {
+                id,
+                model: Some(model.to_string()),
+                x: x.to_vec(),
+                deadline_ms: None,
+            },
             id,
         )
     }
@@ -1260,6 +1639,33 @@ mod tests {
         assert!(ServeConfig::builder().cache_quant(0.0).build().is_err());
         assert!(ServeConfig::builder().cache_quant(f64::NAN).build().is_err());
         assert!(ServeConfig::builder().metrics_addr("").build().is_err());
+
+        // robustness knobs: defaults are timeout-on/breaker-on, zeros
+        // are rejected where they would mean "instantly expired"
+        let cfg = ServeConfig::builder()
+            .default_deadline(Some(Duration::from_millis(50)))
+            .io_timeout(Some(Duration::from_secs(5)))
+            .breaker_threshold(3)
+            .breaker_cooldown(Duration::from_millis(100))
+            .stats_file("/tmp/stats.json")
+            .build()
+            .unwrap();
+        assert_eq!(cfg.default_deadline, Some(Duration::from_millis(50)));
+        assert_eq!(cfg.breaker_threshold, 3);
+        assert!(cfg.stats_file.is_some());
+        let defaults = ServeConfig::default();
+        assert_eq!(defaults.io_timeout, Some(Duration::from_secs(30)));
+        assert_eq!(defaults.breaker_threshold, 8);
+        assert!(ServeConfig::builder()
+            .default_deadline(Some(Duration::ZERO))
+            .build()
+            .is_err());
+        assert!(ServeConfig::builder().io_timeout(Some(Duration::ZERO)).build().is_err());
+        assert!(ServeConfig::builder()
+            .breaker_threshold(1)
+            .breaker_cooldown(Duration::ZERO)
+            .build()
+            .is_err());
     }
 
     #[test]
@@ -1356,8 +1762,144 @@ mod tests {
         let (ready, body) = bridge.healthz();
         assert!(ready);
         assert!(body.to_string().contains("\"ok\":true"));
+        assert!(text.contains("bless_serve_breaker_state{model=\"default\"} 0"), "{text}");
         handle.shutdown();
         let (ready, _) = bridge.healthz();
         assert!(!ready, "healthz must flip after shutdown");
+    }
+
+    #[test]
+    fn per_request_deadline_replies_with_typed_code() {
+        // the worker lingers far past the deadline, so the job expires
+        // while queued and the client gets the structured code quickly
+        let cfg = ServeConfig::builder()
+            .addr("127.0.0.1:0")
+            .workers(1)
+            .linger(Duration::from_millis(800))
+            .cache_capacity(0)
+            .build()
+            .unwrap();
+        let handle = start(tiny_artifact(), &cfg).unwrap();
+        let mut client = Client::connect(handle.addr()).unwrap();
+        let t0 = Instant::now();
+        let err = client.predict_within(1, &[0.1, 0.2], 20).unwrap_err().to_string();
+        assert!(err.contains("[deadline_exceeded]"), "got {err}");
+        assert!(
+            t0.elapsed() < Duration::from_millis(700),
+            "the reply must beat the linger window, took {:?}",
+            t0.elapsed()
+        );
+        let stats = handle.stats();
+        assert_eq!(stats.deadline_exceeded, 1);
+        assert_eq!(stats.errors, 0, "a deadline miss is not a model error");
+        handle.shutdown();
+    }
+
+    #[test]
+    fn default_deadline_applies_when_the_request_has_none() {
+        let cfg = ServeConfig::builder()
+            .addr("127.0.0.1:0")
+            .workers(1)
+            .linger(Duration::from_millis(800))
+            .cache_capacity(0)
+            .default_deadline(Some(Duration::from_millis(20)))
+            .build()
+            .unwrap();
+        let handle = start(tiny_artifact(), &cfg).unwrap();
+        let mut client = Client::connect(handle.addr()).unwrap();
+        let err = client.predict(1, &[0.1, 0.2]).unwrap_err().to_string();
+        assert!(err.contains("[deadline_exceeded]"), "got {err}");
+        assert_eq!(handle.stats().deadline_exceeded, 1);
+        handle.shutdown();
+    }
+
+    #[test]
+    fn retry_exhaustion_returns_the_typed_error() {
+        // saturate a depth-1 queue, then retry against it with a tiny
+        // attempt budget — the typed RetryExhausted must surface
+        let cfg = ServeConfig::builder()
+            .addr("127.0.0.1:0")
+            .workers(1)
+            .max_batch(4)
+            .linger(Duration::from_millis(800))
+            .cache_capacity(0)
+            .max_queue(1)
+            .build()
+            .unwrap();
+        let handle = start(tiny_artifact(), &cfg).unwrap();
+        let addr = handle.addr();
+        let blocker = std::thread::spawn(move || {
+            let mut c = Client::connect(addr).unwrap();
+            c.predict(1, &[0.1, 0.2]).unwrap()
+        });
+        let queue_len = || handle.shared.registry.get("default").unwrap().queue.len();
+        let t0 = Instant::now();
+        while queue_len() == 0 {
+            assert!(t0.elapsed() < Duration::from_secs(10), "blocker never enqueued");
+            std::thread::sleep(Duration::from_millis(2));
+        }
+
+        let mut client = Client::connect(addr).unwrap();
+        let policy = RetryPolicy {
+            max_retries: 2,
+            base: Duration::from_millis(1),
+            max_delay: Duration::from_millis(2),
+            ..RetryPolicy::default()
+        };
+        let err = client.predict_with_retry(2, &[0.3, 0.4], &policy).unwrap_err();
+        let typed = err
+            .downcast_ref::<RetryExhausted>()
+            .expect("exhaustion must be the typed error");
+        assert_eq!(typed.attempts, 3, "first try plus two retries");
+        assert!(typed.last_error.contains("[overloaded]"), "got {}", typed.last_error);
+        blocker.join().unwrap();
+        handle.shutdown();
+    }
+
+    #[test]
+    fn stats_file_round_trips_across_a_server_restart() {
+        let path = std::env::temp_dir()
+            .join(format!("bless-server-stats-{}.json", std::process::id()));
+        std::fs::remove_file(&path).ok();
+        let cfg = ServeConfig::builder()
+            .addr("127.0.0.1:0")
+            .workers(1)
+            .linger(Duration::from_millis(1))
+            .stats_file(&path)
+            .build()
+            .unwrap();
+
+        let handle = start(tiny_artifact(), &cfg).unwrap();
+        let mut client = Client::connect(handle.addr()).unwrap();
+        client.predict(1, &[0.2, 0.1]).unwrap();
+        client.predict(2, &[0.4, -0.3]).unwrap();
+        handle.shutdown(); // persists {requests: 2, …} to the stats file
+        assert!(path.exists(), "shutdown must write the stats file");
+
+        // a "restarted" server folds the history back in before traffic
+        let handle = start(tiny_artifact(), &cfg).unwrap();
+        let restored = handle.model_stats("default").unwrap();
+        assert_eq!(restored.requests, 2, "counters must survive the restart");
+        let mut client = Client::connect(handle.addr()).unwrap();
+        client.predict(3, &[0.5, 0.5]).unwrap();
+        assert_eq!(handle.model_stats("default").unwrap().requests, 3);
+        handle.shutdown();
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn corrupt_stats_file_fails_the_start_loudly() {
+        let path = std::env::temp_dir()
+            .join(format!("bless-server-badstats-{}.json", std::process::id()));
+        std::fs::write(&path, b"{ this is not a stats file").unwrap();
+        let cfg = ServeConfig::builder()
+            .addr("127.0.0.1:0")
+            .workers(1)
+            .stats_file(&path)
+            .build()
+            .unwrap();
+        let err = start(tiny_artifact(), &cfg).unwrap_err().to_string();
+        assert!(err.contains("stats file"), "got {err}");
+        std::fs::remove_file(&path).ok();
     }
 }

@@ -1,0 +1,237 @@
+//! Stats snapshot/restore across server restarts (`serve --stats-file`).
+//!
+//! A restart normally zeroes every per-model counter and histogram,
+//! which breaks long-horizon dashboards (request totals, cumulative
+//! p99) every deploy. With `--stats-file PATH` the server persists each
+//! model's counters *and* full latency/batch-size histograms on
+//! graceful shutdown and folds them back in at the next start:
+//! counters add on, histograms merge bucket-exactly
+//! ([`Histogram::merge_snapshot`]), so percentiles after a restart are
+//! what one uninterrupted run would have reported.
+//!
+//! The file is JSON (written crash-safely via
+//! [`crate::util::fsio::atomic_write`]):
+//!
+//! ```text
+//! {"format":"bless-serve-stats","version":1,
+//!  "models":{"susy":{"requests":128,…,
+//!                    "latency":{"buckets":[[17,40],[18,88]],"count":128,"sum":…},
+//!                    "batch_sizes":{…}}}}
+//! ```
+//!
+//! Histogram buckets are stored sparsely as `[index,count]` pairs.
+//! Restore is name-keyed and forgiving: models in the file but not in
+//! the registry are skipped (the fleet changed), models not in the file
+//! start cold, and a missing file is simply "no history yet".
+
+use crate::obs::{HistSnapshot, Histogram};
+use crate::serve::protocol::StatsSnapshot;
+use crate::serve::registry::Registry;
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+use std::path::Path;
+
+const FORMAT: &str = "bless-serve-stats";
+const VERSION: u64 = 1;
+
+fn hist_to_json(s: &HistSnapshot) -> Json {
+    let mut obj = BTreeMap::new();
+    let pairs: Vec<Json> = s
+        .buckets
+        .iter()
+        .enumerate()
+        .filter(|(_, &c)| c > 0)
+        .map(|(i, &c)| Json::Arr(vec![Json::Num(i as f64), Json::Num(c as f64)]))
+        .collect();
+    obj.insert("buckets".to_string(), Json::Arr(pairs));
+    obj.insert("count".to_string(), Json::Num(s.count as f64));
+    obj.insert("sum".to_string(), Json::Num(s.sum as f64));
+    Json::Obj(obj)
+}
+
+fn hist_from_json(j: &Json) -> anyhow::Result<HistSnapshot> {
+    let mut s = HistSnapshot::default();
+    if let Some(pairs) = j.get("buckets").and_then(|v| v.as_arr()) {
+        for pair in pairs {
+            let p = pair
+                .as_arr()
+                .filter(|p| p.len() == 2)
+                .ok_or_else(|| anyhow::anyhow!("bad histogram bucket entry"))?;
+            let idx = p[0]
+                .as_usize()
+                .filter(|&i| i < s.buckets.len())
+                .ok_or_else(|| anyhow::anyhow!("histogram bucket index out of range"))?;
+            let count = p[1]
+                .as_f64()
+                .ok_or_else(|| anyhow::anyhow!("non-numeric histogram bucket count"))?;
+            s.buckets[idx] += count as u64;
+        }
+    }
+    s.count = j.get("count").and_then(|v| v.as_f64()).unwrap_or(0.0) as u64;
+    s.sum = j.get("sum").and_then(|v| v.as_f64()).unwrap_or(0.0) as u64;
+    Ok(s)
+}
+
+fn model_to_json(snap: &StatsSnapshot, lat: &HistSnapshot, batch: &HistSnapshot) -> Json {
+    // reuse the wire serialization for the counters, then attach the
+    // exact histograms (to_line's derived percentiles are redundant on
+    // disk but harmless — parse ignores unknown keys)
+    let mut obj = match Json::parse(&snap.to_line()) {
+        Ok(Json::Obj(m)) => m,
+        _ => BTreeMap::new(),
+    };
+    obj.insert("latency".to_string(), hist_to_json(lat));
+    obj.insert("batch_sizes".to_string(), hist_to_json(batch));
+    Json::Obj(obj)
+}
+
+/// Persist every registered model's counters and histograms to `path`
+/// (crash-safe: temp file + fsync + atomic rename). Returns the number
+/// of models written.
+pub fn save(path: impl AsRef<Path>, registry: &Registry) -> anyhow::Result<usize> {
+    let mut models = BTreeMap::new();
+    for entry in registry.entries() {
+        models.insert(
+            entry.name().to_string(),
+            model_to_json(
+                &entry.stats.snapshot(),
+                &entry.stats.latency.snapshot(),
+                &entry.stats.batch_sizes.snapshot(),
+            ),
+        );
+    }
+    let n = models.len();
+    let mut root = BTreeMap::new();
+    root.insert("format".to_string(), Json::Str(FORMAT.to_string()));
+    root.insert("version".to_string(), Json::Num(VERSION as f64));
+    root.insert("models".to_string(), Json::Obj(models));
+    let path = path.as_ref();
+    crate::util::fsio::atomic_write(path, Json::Obj(root).to_string().as_bytes())
+        .map_err(|e| anyhow::anyhow!("writing stats file {}: {e}", path.display()))?;
+    Ok(n)
+}
+
+/// Fold a persisted stats file back into the registry: counters add on,
+/// histograms merge bucket-exactly. Models named in the file but absent
+/// from the registry are skipped. Returns the number of models restored.
+pub fn load(path: impl AsRef<Path>, registry: &Registry) -> anyhow::Result<usize> {
+    let path = path.as_ref();
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| anyhow::anyhow!("reading stats file {}: {e}", path.display()))?;
+    let j = Json::parse(&text)
+        .map_err(|e| anyhow::anyhow!("parsing stats file {}: {e}", path.display()))?;
+    anyhow::ensure!(
+        j.get("format").and_then(|v| v.as_str()) == Some(FORMAT),
+        "{} is not a {FORMAT} file",
+        path.display()
+    );
+    let version = j.get("version").and_then(|v| v.as_f64()).unwrap_or(0.0) as u64;
+    anyhow::ensure!(
+        version == VERSION,
+        "stats file {} has version {version}, this server reads {VERSION}",
+        path.display()
+    );
+    let models = j
+        .get("models")
+        .and_then(|v| v.as_obj())
+        .ok_or_else(|| anyhow::anyhow!("stats file {} has no models map", path.display()))?;
+    let mut restored = 0;
+    for (name, model_j) in models {
+        let Some(entry) = registry.get(name) else { continue };
+        let counters = StatsSnapshot::parse(&model_j.to_string())?;
+        entry.stats.restore(&counters);
+        if let Some(lat) = model_j.get("latency") {
+            entry.stats.latency.merge_snapshot(&hist_from_json(lat)?);
+        }
+        if let Some(batch) = model_j.get("batch_sizes") {
+            entry.stats.batch_sizes.merge_snapshot(&hist_from_json(batch)?);
+        }
+        restored += 1;
+    }
+    Ok(restored)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::Matrix;
+    use crate::serve::registry::{ModelSpec, RegistryConfig};
+    use crate::serve::ModelArtifact;
+    use std::sync::atomic::Ordering;
+
+    fn spec(name: &str) -> ModelSpec {
+        ModelSpec {
+            name: name.to_string(),
+            artifact: ModelArtifact {
+                sigma: 1.5,
+                centers: Matrix::from_fn(4, 3, |i, j| ((i * 3 + j) as f64 * 0.31).cos()),
+                alpha: vec![0.4, -0.2, 0.9, 0.1],
+                trained_n: 4,
+                dataset: "unit".to_string(),
+            },
+            source: None,
+        }
+    }
+
+    fn tmp_path(tag: &str) -> std::path::PathBuf {
+        std::env::temp_dir().join(format!("bless-stats-io-{}-{tag}.json", std::process::id()))
+    }
+
+    #[test]
+    fn round_trip_restores_counters_and_percentiles() {
+        let reg =
+            Registry::new(vec![spec("a"), spec("b")], RegistryConfig::default()).unwrap();
+        let a = reg.get("a").unwrap();
+        a.stats.requests.fetch_add(120, Ordering::Relaxed);
+        a.stats.deadline_exceeded.fetch_add(4, Ordering::Relaxed);
+        a.stats.worker_respawns.fetch_add(2, Ordering::Relaxed);
+        for i in 0..100u64 {
+            a.stats.latency.record(100 + i * 7);
+            a.stats.batch_sizes.record(1 + i % 8);
+        }
+        let before = a.stats.snapshot();
+
+        let path = tmp_path("roundtrip");
+        assert_eq!(save(&path, &reg).unwrap(), 2);
+
+        // a fresh registry (same models, cold counters) restores exactly
+        let reg2 =
+            Registry::new(vec![spec("a"), spec("b")], RegistryConfig::default()).unwrap();
+        assert_eq!(load(&path, &reg2).unwrap(), 2);
+        let after = reg2.get("a").unwrap().stats.snapshot();
+        assert_eq!(after, before, "snapshot must survive the restart byte-exactly");
+        assert_eq!(reg2.get("b").unwrap().stats.snapshot().requests, 0);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn restore_skips_models_the_registry_no_longer_has() {
+        let reg = Registry::new(vec![spec("a"), spec("gone")], RegistryConfig::default())
+            .unwrap();
+        reg.get("gone").unwrap().stats.requests.fetch_add(9, Ordering::Relaxed);
+        let path = tmp_path("skips");
+        save(&path, &reg).unwrap();
+
+        let reg2 = Registry::new(vec![spec("a")], RegistryConfig::default()).unwrap();
+        assert_eq!(load(&path, &reg2).unwrap(), 1, "only the surviving model restores");
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn bad_stats_files_error_cleanly() {
+        let reg = Registry::new(vec![spec("a")], RegistryConfig::default()).unwrap();
+        let path = tmp_path("bad");
+        assert!(load(&path, &reg).is_err(), "missing file is an error the caller gates on");
+        std::fs::write(&path, b"not json").unwrap();
+        assert!(load(&path, &reg).is_err());
+        std::fs::write(&path, b"{\"format\":\"other\",\"version\":1,\"models\":{}}").unwrap();
+        assert!(load(&path, &reg).is_err());
+        std::fs::write(
+            &path,
+            format!("{{\"format\":\"{FORMAT}\",\"version\":99,\"models\":{{}}}}"),
+        )
+        .unwrap();
+        assert!(load(&path, &reg).is_err());
+        std::fs::remove_file(&path).ok();
+    }
+}

@@ -1,0 +1,148 @@
+//! Crash-safe file writes: temp file + fsync + atomic rename.
+//!
+//! `std::fs::write` truncates the destination before writing, so a crash
+//! (or power cut) mid-write leaves a *torn* file under the final name —
+//! exactly what a model-artifact loader must never see. [`atomic_write`]
+//! instead stages the bytes in a uniquely named temp file in the same
+//! directory, fsyncs the data to disk, then renames over the
+//! destination: POSIX `rename(2)` is atomic within a filesystem, so any
+//! reader observes either the complete old file or the complete new one,
+//! never a prefix. On Unix the parent directory is fsynced afterwards so
+//! the rename itself survives a crash.
+//!
+//! A crash between stage and rename strands a `.tmp-…` file next to the
+//! destination; it is never picked up by loaders (the final name was
+//! untouched) and the next successful write of the same destination
+//! reuses nothing — stale temps are cleaned up opportunistically by
+//! [`atomic_write`] on failure and are safe to delete at any time.
+
+use std::io::Write as _;
+use std::path::Path;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Per-process counter so concurrent writers of the same destination
+/// never collide on a temp name.
+static TMP_COUNTER: AtomicU64 = AtomicU64::new(0);
+
+/// Write `bytes` to `path` atomically: stage in a same-directory temp
+/// file, fsync, rename into place, then (Unix) fsync the directory. The
+/// destination never exists in a partially written state.
+pub fn atomic_write(path: impl AsRef<Path>, bytes: &[u8]) -> anyhow::Result<()> {
+    let path = path.as_ref();
+    let parent = match path.parent() {
+        Some(p) if !p.as_os_str().is_empty() => {
+            std::fs::create_dir_all(p)?;
+            p.to_path_buf()
+        }
+        _ => std::path::PathBuf::from("."),
+    };
+    let file_name = path
+        .file_name()
+        .ok_or_else(|| anyhow::anyhow!("cannot atomically write {}: no file name", path.display()))?
+        .to_string_lossy()
+        .into_owned();
+    let tmp = parent.join(format!(
+        ".{file_name}.tmp-{}-{}",
+        std::process::id(),
+        TMP_COUNTER.fetch_add(1, Ordering::Relaxed)
+    ));
+
+    let staged = (|| -> std::io::Result<()> {
+        let mut f = std::fs::File::create(&tmp)?;
+        f.write_all(bytes)?;
+        // data must be durable *before* the rename makes it visible:
+        // rename-then-sync can expose an empty file after a crash
+        f.sync_all()?;
+        Ok(())
+    })();
+    if let Err(e) = staged {
+        let _ = std::fs::remove_file(&tmp);
+        anyhow::bail!("staging {}: {e}", tmp.display());
+    }
+    if let Err(e) = std::fs::rename(&tmp, path) {
+        let _ = std::fs::remove_file(&tmp);
+        anyhow::bail!("renaming {} into place: {e}", path.display());
+    }
+    // make the rename itself durable (the directory entry lives in the
+    // parent); non-Unix platforms don't expose directory fsync
+    #[cfg(unix)]
+    {
+        if let Ok(dir) = std::fs::File::open(&parent) {
+            let _ = dir.sync_all();
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp_dir(tag: &str) -> std::path::PathBuf {
+        let d = std::env::temp_dir().join(format!("bless-fsio-{}-{tag}", std::process::id()));
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    #[test]
+    fn writes_land_and_replace_atomically() {
+        let dir = tmp_dir("basic");
+        let path = dir.join("artifact.bin");
+        atomic_write(&path, b"first").unwrap();
+        assert_eq!(std::fs::read(&path).unwrap(), b"first");
+        atomic_write(&path, b"second, longer payload").unwrap();
+        assert_eq!(std::fs::read(&path).unwrap(), b"second, longer payload");
+        // no stray temp files remain after successful writes
+        let strays: Vec<_> = std::fs::read_dir(&dir)
+            .unwrap()
+            .filter_map(|e| e.ok())
+            .filter(|e| e.file_name().to_string_lossy().contains(".tmp-"))
+            .collect();
+        assert!(strays.is_empty(), "leftover temps: {strays:?}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn a_stale_temp_never_shadows_the_destination() {
+        let dir = tmp_dir("stale");
+        let path = dir.join("model.json");
+        atomic_write(&path, b"good").unwrap();
+        // simulate a crash that died between stage and rename
+        std::fs::write(dir.join(".model.json.tmp-999-0"), b"torn garb").unwrap();
+        assert_eq!(std::fs::read(&path).unwrap(), b"good");
+        atomic_write(&path, b"better").unwrap();
+        assert_eq!(std::fs::read(&path).unwrap(), b"better");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn concurrent_writers_leave_one_complete_file() {
+        let dir = tmp_dir("race");
+        let path = dir.join("contended.bin");
+        let threads: Vec<_> = (0..8u8)
+            .map(|t| {
+                let path = path.clone();
+                std::thread::spawn(move || {
+                    let payload = vec![t; 4096];
+                    for _ in 0..20 {
+                        atomic_write(&path, &payload).unwrap();
+                    }
+                })
+            })
+            .collect();
+        for t in threads {
+            t.join().unwrap();
+        }
+        // whatever writer won, the file is a complete 4096-byte payload
+        // of a single byte value — never an interleaving
+        let got = std::fs::read(&path).unwrap();
+        assert_eq!(got.len(), 4096);
+        assert!(got.windows(2).all(|w| w[0] == w[1]), "torn write observed");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn pathological_destinations_error_cleanly() {
+        assert!(atomic_write(std::path::Path::new("/"), b"x").is_err());
+    }
+}

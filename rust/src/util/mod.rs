@@ -1,15 +1,20 @@
 //! Cross-cutting utilities: bench harness, CLI parsing, property testing,
-//! result tables, and the shared compute threadpool. The first four
-//! replace `criterion`, `clap` and `proptest` (none of which exist in
-//! the offline crate registry); [`pool`] is the process-wide thread
-//! policy every parallel kernel in [`crate::linalg`] and
-//! [`crate::kernels`] dispatches through.
+//! result tables, poison-tolerant locking, crash-safe file writes, and
+//! the shared compute threadpool. [`bench`], [`cli`], [`json`] and
+//! [`prop`] replace `criterion`, `clap` and `proptest` (none of which
+//! exist in the offline crate registry); [`pool`] is the process-wide
+//! thread policy every parallel kernel in [`crate::linalg`] and
+//! [`crate::kernels`] dispatches through; [`sync`] and [`fsio`] carry
+//! the serve tier's robustness policies (a panicked worker must not
+//! wedge a lock, a crashed save must not tear an artifact).
 
 pub mod bench;
 pub mod cli;
+pub mod fsio;
 pub mod json;
 pub mod pool;
 pub mod prop;
+pub mod sync;
 pub mod table;
 
 use std::time::Instant;

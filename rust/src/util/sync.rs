@@ -1,0 +1,112 @@
+//! Poison-tolerant locking helpers.
+//!
+//! `std::sync` poisons a `Mutex`/`RwLock` when a thread panics while
+//! holding it, and `lock().unwrap()` then panics in *every other thread*
+//! that touches the lock — one crashed worker wedges the whole serve
+//! tier. All serve-tier state guarded by locks here is either
+//! plain-old-data (queues of jobs, counter maps, LRU tables) or swapped
+//! atomically under the guard, so a panic mid-critical-section cannot
+//! leave it logically torn: recovering the guard with
+//! [`PoisonError::into_inner`] is safe and keeps every other client
+//! serviceable. These helpers centralize that policy so the intent
+//! ("this lock survives a panicking peer") reads at the call site.
+
+use std::sync::{
+    Condvar, Mutex, MutexGuard, PoisonError, RwLock, RwLockReadGuard, RwLockWriteGuard,
+    WaitTimeoutResult,
+};
+use std::time::Duration;
+
+/// Lock a mutex, recovering the guard if a previous holder panicked.
+#[inline]
+pub fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+/// Read-lock an `RwLock`, recovering from poison.
+#[inline]
+pub fn read<T>(l: &RwLock<T>) -> RwLockReadGuard<'_, T> {
+    l.read().unwrap_or_else(PoisonError::into_inner)
+}
+
+/// Write-lock an `RwLock`, recovering from poison.
+#[inline]
+pub fn write<T>(l: &RwLock<T>) -> RwLockWriteGuard<'_, T> {
+    l.write().unwrap_or_else(PoisonError::into_inner)
+}
+
+/// Block on a condvar, recovering the guard from poison on wake.
+#[inline]
+pub fn wait<'a, T>(cv: &Condvar, guard: MutexGuard<'a, T>) -> MutexGuard<'a, T> {
+    cv.wait(guard).unwrap_or_else(PoisonError::into_inner)
+}
+
+/// Block on a condvar with a timeout, recovering from poison on wake.
+#[inline]
+pub fn wait_timeout<'a, T>(
+    cv: &Condvar,
+    guard: MutexGuard<'a, T>,
+    dur: Duration,
+) -> (MutexGuard<'a, T>, WaitTimeoutResult) {
+    cv.wait_timeout(guard, dur).unwrap_or_else(PoisonError::into_inner)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn poisoned_mutex_is_still_lockable() {
+        let m = Arc::new(Mutex::new(7usize));
+        let m2 = Arc::clone(&m);
+        let _ = std::thread::spawn(move || {
+            let _g = m2.lock().unwrap();
+            panic!("poison it");
+        })
+        .join();
+        assert!(m.is_poisoned());
+        assert_eq!(*lock(&m), 7, "helper must see through the poison");
+        *lock(&m) += 1;
+        assert_eq!(*lock(&m), 8);
+    }
+
+    #[test]
+    fn poisoned_rwlock_is_still_usable() {
+        let l = Arc::new(RwLock::new(vec![1, 2, 3]));
+        let l2 = Arc::clone(&l);
+        let _ = std::thread::spawn(move || {
+            let _g = l2.write().unwrap();
+            panic!("poison it");
+        })
+        .join();
+        assert!(l.is_poisoned());
+        assert_eq!(read(&l).len(), 3);
+        write(&l).push(4);
+        assert_eq!(read(&l).len(), 4);
+    }
+
+    #[test]
+    fn condvar_wait_survives_a_poisoned_mutex() {
+        let pair = Arc::new((Mutex::new(false), Condvar::new()));
+        let p2 = Arc::clone(&pair);
+        // poison the mutex first
+        {
+            let p3 = Arc::clone(&pair);
+            let _ = std::thread::spawn(move || {
+                let _g = p3.0.lock().unwrap();
+                panic!("poison it");
+            })
+            .join();
+        }
+        let waker = std::thread::spawn(move || {
+            *lock(&p2.0) = true;
+            p2.1.notify_all();
+        });
+        let (mut g, _) = wait_timeout(&pair.1, lock(&pair.0), Duration::from_secs(5));
+        while !*g {
+            g = wait(&pair.1, g);
+        }
+        waker.join().unwrap();
+    }
+}

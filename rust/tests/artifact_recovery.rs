@@ -1,0 +1,172 @@
+//! Artifact damage recovery (ISSUE 9): every way an artifact file can
+//! be torn — truncation, bit rot, zero length, a crash between
+//! temp-stage and rename — must surface as a clean typed error from
+//! `ModelArtifact::load`, never a panic, a hang, or a silently wrong
+//! model. The binary codec's trailing checksum and the JSON parser's
+//! strictness are what make this hold.
+//!
+//! The chaos harness's `artifact.corrupt` point is also exercised here:
+//! with it armed, loads of a *good* file see deterministically damaged
+//! bytes and must fail just as cleanly. Tests serialize on a lock
+//! because the fault registry is process-global.
+
+mod common;
+
+use bless::faults::{self, FaultPlan, FaultPoint, FaultRule};
+use bless::linalg::Matrix;
+use bless::serve::ModelArtifact;
+use common::with_timeout;
+use std::path::PathBuf;
+use std::sync::{Mutex, OnceLock};
+
+/// All tests here load artifacts; the fault-armed one must not overlap
+/// with the rest (corruption is process-global while armed).
+fn faults_lock() -> &'static Mutex<()> {
+    static LOCK: OnceLock<Mutex<()>> = OnceLock::new();
+    LOCK.get_or_init(|| Mutex::new(()))
+}
+
+fn artifact() -> ModelArtifact {
+    ModelArtifact {
+        sigma: 2.0,
+        centers: Matrix::from_fn(6, 4, |i, j| ((i * 4 + j) as f64 * 0.23).cos()),
+        alpha: (0..6).map(|i| 0.1 * (i as f64 + 1.0)).collect(),
+        trained_n: 6,
+        dataset: "recovery".to_string(),
+    }
+}
+
+fn tmp_dir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("bless-artrec-{}-{tag}", std::process::id()));
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+/// Assert a load fails as a *clean* error: an `Err` with a non-empty
+/// message (reaching here at all means no panic and no hang).
+fn assert_clean_error(path: &std::path::Path, what: &str) {
+    match ModelArtifact::load(path) {
+        Ok(_) => panic!("{what}: damaged artifact loaded as if valid"),
+        Err(e) => {
+            let msg = e.to_string();
+            assert!(!msg.is_empty(), "{what}: error must carry a message");
+        }
+    }
+}
+
+#[test]
+fn truncated_artifacts_fail_cleanly_in_both_codecs() {
+    let _g = faults_lock().lock().unwrap_or_else(|e| e.into_inner());
+    with_timeout(60, || {
+        let dir = tmp_dir("trunc");
+        for ext in ["bless", "json"] {
+            let path = dir.join(format!("model.{ext}"));
+            artifact().save(&path).unwrap();
+            let full = std::fs::read(&path).unwrap();
+            assert!(ModelArtifact::load(&path).is_ok(), "pristine {ext} must load");
+            // a short read at several depths, including cutting the
+            // binary checksum trailer off
+            for keep in [full.len() - 1, full.len() / 2, 16, 1] {
+                std::fs::write(&path, &full[..keep]).unwrap();
+                assert_clean_error(&path, &format!(".{ext} truncated to {keep} bytes"));
+            }
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    });
+}
+
+#[test]
+fn bit_flips_and_zero_length_files_fail_cleanly() {
+    let _g = faults_lock().lock().unwrap_or_else(|e| e.into_inner());
+    with_timeout(60, || {
+        let dir = tmp_dir("bits");
+        // binary: the FNV trailer catches a flip anywhere in the payload
+        let bin = dir.join("model.bless");
+        artifact().save(&bin).unwrap();
+        let full = std::fs::read(&bin).unwrap();
+        for idx in [8, full.len() / 2, full.len() - 1] {
+            let mut bytes = full.clone();
+            bytes[idx] ^= 0x10;
+            std::fs::write(&bin, &bytes).unwrap();
+            assert_clean_error(&bin, &format!(".bless bit flip at byte {idx}"));
+        }
+        // json: structural damage (the leading brace) must parse-error
+        let json = dir.join("model.json");
+        artifact().save(&json).unwrap();
+        let mut bytes = std::fs::read(&json).unwrap();
+        bytes[0] ^= 0x01;
+        std::fs::write(&json, &bytes).unwrap();
+        assert_clean_error(&json, ".json corrupted opening brace");
+        // zero length, either extension
+        for ext in ["bless", "json"] {
+            let path = dir.join(format!("empty.{ext}"));
+            std::fs::write(&path, b"").unwrap();
+            assert_clean_error(&path, &format!("zero-length .{ext}"));
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    });
+}
+
+/// A crash between temp-stage and rename leaves a stale `.tmp-…` file
+/// and an untouched (or absent) destination — loaders must never pick
+/// the temp up, and the next save must still land atomically.
+#[test]
+fn mid_rename_crash_leaves_loads_and_resaves_working() {
+    let _g = faults_lock().lock().unwrap_or_else(|e| e.into_inner());
+    with_timeout(60, || {
+        let dir = tmp_dir("rename");
+        let path = dir.join("model.bless");
+
+        // crash BEFORE the first rename: only the torn temp exists
+        std::fs::write(dir.join(".model.bless.tmp-4242-0"), b"torn half-written").unwrap();
+        assert_clean_error(&path, "destination missing, only a stale temp present");
+
+        // a good save lands despite the stale temp sitting there
+        artifact().save(&path).unwrap();
+        let good = std::fs::read(&path).unwrap();
+        assert!(ModelArtifact::load(&path).is_ok());
+
+        // crash between stage and rename on a RE-save: the destination
+        // still holds the complete previous bytes
+        std::fs::write(dir.join(".model.bless.tmp-4242-1"), &good[..good.len() / 3]).unwrap();
+        assert_eq!(std::fs::read(&path).unwrap(), good, "destination must be untouched");
+        let reloaded = ModelArtifact::load(&path).unwrap();
+        assert_eq!(reloaded.m(), 6);
+        std::fs::remove_dir_all(&dir).ok();
+    });
+}
+
+/// With `artifact.corrupt` armed at p=1, every load of a good binary
+/// artifact sees damaged bytes — and the checksum turns each into a
+/// clean error, deterministically for a fixed seed.
+#[test]
+fn injected_corruption_on_load_fails_cleanly_and_replays() {
+    let _g = faults_lock().lock().unwrap_or_else(|e| e.into_inner());
+    with_timeout(60, || {
+        let dir = tmp_dir("inject");
+        let path = dir.join("model.bless");
+        artifact().save(&path).unwrap();
+
+        let plan = FaultPlan::seeded(0xBAD)
+            .with(FaultPoint::ArtifactCorrupt, FaultRule { p: 1.0, ms: 0 });
+        faults::configure(Some(plan.clone()));
+        let first: Vec<String> = (0..8)
+            .map(|i| {
+                ModelArtifact::load(&path)
+                    .expect_err(&format!("corrupted load {i} must fail"))
+                    .to_string()
+            })
+            .collect();
+        // same seed → the same 8 corruptions → the same 8 errors
+        faults::configure(Some(plan));
+        let second: Vec<String> =
+            (0..8).map(|_| ModelArtifact::load(&path).unwrap_err().to_string()).collect();
+        assert_eq!(first, second, "corruption must replay deterministically");
+        faults::configure(None);
+
+        // disarmed, the untouched file loads fine — corruption happened
+        // in memory, never on disk
+        assert!(ModelArtifact::load(&path).is_ok());
+        std::fs::remove_dir_all(&dir).ok();
+    });
+}

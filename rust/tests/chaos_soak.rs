@@ -1,0 +1,276 @@
+//! Chaos soak: the serving tier under seeded fault injection
+//! (ISSUE 9 acceptance).
+//!
+//! The soak drives thousands of requests through a server whose
+//! connection and worker paths are being actively sabotaged by
+//! [`bless::faults`] — stalled sockets, dropped connections, truncated
+//! replies, panicking workers, failing engines — and asserts the
+//! robustness contract:
+//!
+//! * every request ends in a score, a typed error code, or a clean
+//!   connection error the client recovers from by reconnecting — no
+//!   request ever hangs (the whole body runs under a watchdog timeout);
+//! * the worker pool never shrinks: after the storm, with faults
+//!   disarmed, the same server answers everything;
+//! * a model quarantined by its circuit breaker recovers through the
+//!   half-open probe once the fault goes away.
+//!
+//! The fault plan is seeded, so a failure reproduces exactly. Tests in
+//! this binary serialize on a lock because the fault registry is
+//! process-global. With `CHAOS_BENCH_OUT=path` the soak writes a
+//! `BENCH_chaos.json` summary for CI artifact upload.
+
+mod common;
+
+use bless::faults::{self, FaultPlan, FaultPoint, FaultRule};
+use bless::linalg::Matrix;
+use bless::serve::{self, Client, ModelArtifact, ServeConfig};
+use common::with_timeout;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+use std::time::{Duration, Instant};
+
+/// The fault registry is process-global; tests must not overlap.
+fn faults_lock() -> &'static Mutex<()> {
+    static LOCK: OnceLock<Mutex<()>> = OnceLock::new();
+    LOCK.get_or_init(|| Mutex::new(()))
+}
+
+/// Disarms fault injection when dropped, so a panicking test cannot
+/// leave the registry armed for the next one.
+struct Disarm;
+impl Drop for Disarm {
+    fn drop(&mut self) {
+        faults::configure(None);
+    }
+}
+
+fn tiny_artifact() -> ModelArtifact {
+    ModelArtifact {
+        sigma: 1.0,
+        centers: Matrix::from_fn(8, 3, |i, j| ((i * 3 + j) as f64 * 0.37).sin()),
+        alpha: (0..8).map(|i| 0.25 * (i as f64 - 3.5)).collect(),
+        trained_n: 8,
+        dataset: "chaos".to_string(),
+    }
+}
+
+#[derive(Default)]
+struct SoakTally {
+    ok: AtomicU64,
+    typed_errors: AtomicU64,
+    conn_resets: AtomicU64,
+}
+
+/// One soak client: `per_thread` requests, reconnecting whenever the
+/// chaos harness kills its connection mid-exchange. Returns only when
+/// every request has been accounted for.
+fn soak_client(addr: std::net::SocketAddr, seed: u64, per_thread: u64, tally: &SoakTally) {
+    let mut client = Client::connect(addr).expect("initial connect");
+    for i in 0..per_thread {
+        let id = seed * 1_000_000 + i;
+        let x = [0.1 * (id % 17) as f64, -0.2 * (id % 13) as f64, 0.05 * (id % 7) as f64];
+        // a generous per-request deadline doubles as the "nothing may
+        // hang" guarantee at the protocol level
+        match client.predict_within(id, &x, 5_000) {
+            Ok((y, _)) => {
+                assert!(y.is_finite(), "request {id} got a non-finite score");
+                tally.ok.fetch_add(1, Ordering::Relaxed);
+            }
+            Err(e) => {
+                let msg = e.to_string();
+                if msg.contains('[') {
+                    // a structured `{"error":…,"code":…}` reply — the
+                    // server answered even though a fault fired
+                    tally.typed_errors.fetch_add(1, Ordering::Relaxed);
+                } else {
+                    // the connection itself was killed (conn.drop /
+                    // conn.truncate); recover by reconnecting
+                    tally.conn_resets.fetch_add(1, Ordering::Relaxed);
+                    client = Client::connect(addr).expect("reconnect after fault");
+                }
+            }
+        }
+    }
+}
+
+/// The headline soak: ≥5k requests, ≥200 injected faults, every request
+/// resolved, pool intact afterwards.
+#[test]
+fn soak_survives_a_mixed_fault_storm() {
+    let _guard = faults_lock().lock().unwrap_or_else(|e| e.into_inner());
+    let _disarm = Disarm;
+    with_timeout(240, || {
+        const THREADS: u64 = 8;
+        const PER_THREAD: u64 = 640; // 5120 requests total
+        let cfg = ServeConfig::builder()
+            .addr("127.0.0.1:0")
+            .workers(2)
+            .max_batch(16)
+            .linger(Duration::from_millis(1))
+            .cache_capacity(0)
+            .max_queue(0)
+            .io_timeout(Some(Duration::from_secs(10)))
+            // the storm makes consecutive failures likely; keep the
+            // breaker out of this test (it has its own below) so every
+            // request exercises the full path
+            .breaker_threshold(0)
+            .build()
+            .unwrap();
+        let handle = serve::start(tiny_artifact(), &cfg).unwrap();
+        let addr = handle.addr();
+
+        let injected_before = faults::total_injected();
+        let plan = FaultPlan::seeded(0xC0FFEE)
+            .with(FaultPoint::ConnDelay, FaultRule { p: 0.02, ms: 2 })
+            .with(FaultPoint::ConnDrop, FaultRule { p: 0.02, ms: 0 })
+            .with(FaultPoint::ConnTruncate, FaultRule { p: 0.02, ms: 0 })
+            .with(FaultPoint::WorkerPanic, FaultRule { p: 0.05, ms: 0 })
+            .with(FaultPoint::EngineError, FaultRule { p: 0.05, ms: 0 });
+        faults::configure(Some(plan));
+
+        let tally = Arc::new(SoakTally::default());
+        let t0 = Instant::now();
+        let workers: Vec<_> = (0..THREADS)
+            .map(|t| {
+                let tally = Arc::clone(&tally);
+                std::thread::spawn(move || soak_client(addr, t, PER_THREAD, &tally))
+            })
+            .collect();
+        for w in workers {
+            w.join().expect("soak client must not die");
+        }
+        let elapsed = t0.elapsed();
+        // read the injection tallies BEFORE disarming: the counters live
+        // with the armed plan and reset with it
+        let injected = faults::total_injected() - injected_before;
+        let point_counts = faults::injected_counts();
+        faults::configure(None);
+
+        let ok = tally.ok.load(Ordering::Relaxed);
+        let typed = tally.typed_errors.load(Ordering::Relaxed);
+        let resets = tally.conn_resets.load(Ordering::Relaxed);
+        let total = ok + typed + resets;
+        assert_eq!(total, THREADS * PER_THREAD, "every request must be accounted for");
+        assert!(ok > 0, "the storm must not starve out every success");
+        assert!(injected >= 200, "want ≥200 injected faults for a real soak, got {injected}");
+
+        // pool intact: with faults off, the same server answers a full
+        // sweep with zero failures — no worker thread was permanently
+        // lost to a panic
+        let mut client = Client::connect(addr).unwrap();
+        for i in 0..64u64 {
+            let (y, _) = client.predict(10_000_000 + i, &[0.3, -0.1, 0.2]).unwrap();
+            assert!(y.is_finite());
+        }
+        let stats = handle.stats();
+        assert_eq!(
+            stats.worker_panics, stats.worker_respawns,
+            "every worker panic must have respawned its tick loop"
+        );
+
+        if let Ok(path) = std::env::var("CHAOS_BENCH_OUT") {
+            let by_point: Vec<String> = point_counts
+                .into_iter()
+                .map(|(name, n)| format!("\"{name}\":{n}"))
+                .collect();
+            let json = format!(
+                "{{\"requests\":{total},\"ok\":{ok},\"typed_errors\":{typed},\
+                 \"conn_resets\":{resets},\"faults_injected\":{injected},\
+                 \"worker_panics\":{},\"deadline_exceeded\":{},\
+                 \"elapsed_s\":{:.3},\"by_point\":{{{}}}}}",
+                stats.worker_panics,
+                stats.deadline_exceeded,
+                elapsed.as_secs_f64(),
+                by_point.join(",")
+            );
+            std::fs::write(&path, json).expect("writing CHAOS_BENCH_OUT");
+            eprintln!("wrote chaos bench summary to {path}");
+        }
+        handle.shutdown();
+    });
+}
+
+/// A model whose every batch panics trips its breaker into quarantine;
+/// once the fault clears, the half-open probe re-admits it and traffic
+/// flows again — no restart needed.
+#[test]
+fn quarantined_model_recovers_once_the_fault_clears() {
+    let _guard = faults_lock().lock().unwrap_or_else(|e| e.into_inner());
+    let _disarm = Disarm;
+    with_timeout(120, || {
+        let cfg = ServeConfig::builder()
+            .addr("127.0.0.1:0")
+            .workers(1)
+            .max_batch(4)
+            .linger(Duration::from_millis(1))
+            .cache_capacity(0)
+            .breaker_threshold(3)
+            .breaker_cooldown(Duration::from_millis(150))
+            .build()
+            .unwrap();
+        let handle = serve::start(tiny_artifact(), &cfg).unwrap();
+        let mut client = Client::connect(handle.addr()).unwrap();
+
+        faults::configure(Some(FaultPlan::seeded(7).with(FaultPoint::WorkerPanic, FaultRule { p: 1.0, ms: 0 })));
+        // every batch panics → internal errors pile up → after the third
+        // consecutive failure the breaker opens and answers up front
+        let mut saw_quarantine = false;
+        for i in 0..50u64 {
+            match client.predict(i, &[0.1, 0.2, 0.3]) {
+                Err(e) if e.to_string().contains("[quarantined]") => {
+                    saw_quarantine = true;
+                    break;
+                }
+                Err(e) if e.to_string().contains("[internal]") => continue,
+                other => panic!("expected internal/quarantined, got {other:?}"),
+            }
+        }
+        assert!(saw_quarantine, "the breaker must trip under a panic storm");
+        let stats = handle.model_stats("default").unwrap();
+        assert!(stats.worker_panics >= 3, "got {} panics", stats.worker_panics);
+        assert!(stats.quarantined >= 1);
+
+        // the engine heals (faults off); after the cooldown the next
+        // request is the half-open probe — it succeeds and closes the
+        // breaker for everyone after it
+        faults::configure(None);
+        std::thread::sleep(Duration::from_millis(200));
+        let t0 = Instant::now();
+        loop {
+            match client.predict(1_000, &[0.1, 0.2, 0.3]) {
+                Ok((y, _)) => {
+                    assert!(y.is_finite());
+                    break;
+                }
+                Err(_) if t0.elapsed() < Duration::from_secs(10) => {
+                    std::thread::sleep(Duration::from_millis(50));
+                }
+                Err(e) => panic!("model never recovered from quarantine: {e}"),
+            }
+        }
+        for i in 0..16u64 {
+            let (y, _) = client.predict(2_000 + i, &[0.4, -0.2, 0.1]).unwrap();
+            assert!(y.is_finite());
+        }
+        handle.shutdown();
+    });
+}
+
+/// Same seed → same fault sequence: the soak's storm is replayable, so
+/// a chaos failure in CI reproduces locally byte-for-byte.
+#[test]
+fn fault_plans_replay_deterministically_across_arms() {
+    let _guard = faults_lock().lock().unwrap_or_else(|e| e.into_inner());
+    let _disarm = Disarm;
+    with_timeout(60, || {
+        let plan = FaultPlan::seeded(42).with(FaultPoint::ConnDrop, FaultRule { p: 0.3, ms: 0 });
+        faults::configure(Some(plan.clone()));
+        let first: Vec<bool> = (0..64).map(|_| faults::fire(FaultPoint::ConnDrop)).collect();
+        faults::configure(Some(plan));
+        let second: Vec<bool> = (0..64).map(|_| faults::fire(FaultPoint::ConnDrop)).collect();
+        assert_eq!(first, second, "re-arming the same plan must replay the same draws");
+        assert!(first.iter().any(|&b| b) && first.iter().any(|&b| !b));
+        faults::configure(None);
+    });
+}
