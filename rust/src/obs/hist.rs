@@ -113,11 +113,15 @@ impl Histogram {
     /// restore half of snapshot/restore (`serve --stats-file`). Exact:
     /// `h.merge_snapshot(&s)` makes `h.snapshot()` the bucket-wise sum.
     /// Snapshots shorter than `HIST_BUCKETS` (older persisted files)
-    /// merge their prefix.
+    /// merge their prefix; snapshots *longer* than the live histogram
+    /// fold the surplus tail into the last live bucket, so `count`
+    /// always equals the sum of buckets and percentiles stay sane
+    /// (the tail is pessimistically attributed to the overflow bucket).
     pub fn merge_snapshot(&self, s: &HistSnapshot) {
-        for (b, &c) in self.buckets.iter().zip(&s.buckets) {
+        let last = self.buckets.len() - 1;
+        for (i, &c) in s.buckets.iter().enumerate() {
             if c > 0 {
-                b.fetch_add(c, Relaxed);
+                self.buckets[i.min(last)].fetch_add(c, Relaxed);
             }
         }
         self.count.fetch_add(s.count, Relaxed);
@@ -362,6 +366,29 @@ mod tests {
             want.record(v);
         }
         assert_eq!(live.snapshot(), want, "restore must be bucket-exact");
+    }
+
+    #[test]
+    fn merge_snapshot_folds_surplus_buckets_into_last() {
+        // a snapshot from a future format with extra buckets must not
+        // drop counts: the surplus tail folds into the overflow bucket
+        let live = Histogram::new();
+        let mut s = HistSnapshot::default();
+        s.buckets[0] = 2;
+        s.buckets.extend([5u64, 7]);
+        s.count = 14;
+        s.sum = 1_000;
+        live.merge_snapshot(&s);
+        let got = live.snapshot();
+        assert_eq!(got.count, 14);
+        assert_eq!(got.sum, 1_000);
+        assert_eq!(
+            got.buckets.iter().sum::<u64>(),
+            got.count,
+            "restored histogram must stay internally consistent"
+        );
+        assert_eq!(got.buckets[0], 2);
+        assert_eq!(got.buckets[HIST_BUCKETS - 1], 12);
     }
 
     #[test]

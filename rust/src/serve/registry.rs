@@ -148,8 +148,17 @@ const BREAKER_HALF_OPEN: u8 = 2;
 /// closed --K consecutive failures--> open --cooldown--> half-open
 ///   ^                                 ^                   |    |
 ///   |                                 +----probe fails----+    |
+///   |         (probe released without a verdict: back to open,  |
+///   |          cooldown already spent, so the next request      |
+///   |          re-probes immediately)                           |
 ///   +-------------------probe succeeds-------------------------+
 /// ```
+///
+/// Every admitted probe must resolve via exactly one of
+/// [`record_success`](Self::record_success),
+/// [`record_failure`](Self::record_failure), or
+/// [`release_probe`](Self::release_probe) — otherwise the breaker
+/// wedges half-open and quarantines the model forever.
 pub struct Breaker {
     threshold: u32,
     cooldown: Duration,
@@ -247,6 +256,25 @@ impl Breaker {
         if self.state.swap(BREAKER_OPEN, Ordering::AcqRel) != BREAKER_OPEN {
             self.trips.fetch_add(1, Ordering::Relaxed);
         }
+    }
+
+    /// The half-open probe ended without a verdict on the engine — the
+    /// request hit the cache, was malformed, was shed by a full queue,
+    /// or expired before a worker saw it. Returns the slot by moving
+    /// half-open back to open *without* refreshing `opened_at_ms`, so
+    /// the already-spent cooldown lets the very next request re-probe
+    /// instead of quarantining everyone for another cooldown. No-op
+    /// from any other state.
+    pub fn release_probe(&self) {
+        if self.threshold == 0 {
+            return;
+        }
+        let _ = self.state.compare_exchange(
+            BREAKER_HALF_OPEN,
+            BREAKER_OPEN,
+            Ordering::AcqRel,
+            Ordering::Acquire,
+        );
     }
 
     /// Whether new requests are currently refused (open, cooldown not
@@ -883,6 +911,37 @@ mod tests {
         assert!(!b.is_open(), "streak was reset; 2 < 3 failures since");
         b.record_failure();
         assert!(b.is_open());
+    }
+
+    #[test]
+    fn released_probe_reopens_and_readmits_immediately() {
+        let b = Breaker::new(1, Duration::from_millis(5));
+        b.record_failure();
+        assert!(b.is_open());
+        std::thread::sleep(Duration::from_millis(10));
+        assert_eq!(b.admit(), Admission::Probe);
+        // the probe exits without an engine verdict (cache hit, bad
+        // dims, shed queue, expired deadline): the slot must come back
+        b.release_probe();
+        assert!(b.is_open(), "slot returned: breaker is open again");
+        // cooldown was already spent, so the next request re-probes at
+        // once instead of the model quarantining for another cooldown
+        assert_eq!(b.admit(), Admission::Probe);
+        b.record_success();
+        assert_eq!(b.admit(), Admission::Allowed);
+    }
+
+    #[test]
+    fn release_probe_is_a_noop_outside_half_open() {
+        let b = Breaker::new(2, Duration::from_millis(5));
+        b.release_probe();
+        assert_eq!(b.admit(), Admission::Allowed, "closed stays closed");
+        b.record_failure();
+        b.record_failure();
+        assert!(b.is_open());
+        b.release_probe();
+        assert!(b.is_open(), "open stays open");
+        assert_eq!(b.trips(), 1);
     }
 
     #[test]

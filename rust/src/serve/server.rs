@@ -755,6 +755,10 @@ fn worker_tick(entry: &ModelEntry, max_batch: usize, linger: Duration) -> bool {
         )));
     }
     if good.is_empty() {
+        // every drained job was dropped before prediction; if one of
+        // them held the half-open probe slot, no record_* call is
+        // coming — hand the slot back so the breaker can't wedge
+        entry.breaker.release_probe();
         return true;
     }
     entry.stats.batches.fetch_add(1, Ordering::Relaxed);
@@ -775,12 +779,26 @@ fn worker_tick(entry: &ModelEntry, max_batch: usize, linger: Duration) -> bool {
         predictor.predict_batch(&q)
     };
     match result {
-        Ok(scores) => {
+        // a short score vector would let zip silently drop the surplus
+        // jobs (clients would see a misleading disconnect), so treat a
+        // row/score count mismatch as an engine failure for the batch
+        Ok(scores) if scores.len() == pending.0.len() => {
             for (job, &score) in pending.0.drain(..).zip(&scores) {
                 // a disconnected client is not a worker error
                 let _ = job.reply.send(Ok(score));
             }
             entry.breaker.record_success();
+        }
+        Ok(scores) => {
+            let msg = format!(
+                "engine returned {} scores for a batch of {} rows",
+                scores.len(),
+                pending.0.len()
+            );
+            for job in pending.0.drain(..) {
+                let _ = job.reply.send(Err(JobError::Failed(msg.clone())));
+            }
+            entry.breaker.record_failure();
         }
         Err(e) => {
             let msg = e.to_string();
@@ -1013,9 +1031,13 @@ fn handle_predict(
     let budget = deadline_ms.map(Duration::from_millis).or(shared.default_deadline);
     let deadline = budget.map(|b| t0 + b);
     // breaker check up front: a quarantined model answers immediately
-    // instead of queueing work its sick engine will only fail again
-    match entry.breaker.admit() {
-        Admission::Allowed | Admission::Probe => {}
+    // instead of queueing work its sick engine will only fail again.
+    // A Probe admission carries an obligation: if this request exits
+    // before a worker predicts it (cache hit, bad dims, shed, closed),
+    // it must hand the slot back or the breaker wedges half-open.
+    let is_probe = match entry.breaker.admit() {
+        Admission::Allowed => false,
+        Admission::Probe => true,
         Admission::Quarantined => {
             entry.stats.quarantined.fetch_add(1, Ordering::Relaxed);
             return protocol::error_response(
@@ -1027,9 +1049,12 @@ fn handle_predict(
                 ),
             );
         }
-    }
+    };
     let dim = entry.dim();
     if x.len() != dim {
+        if is_probe {
+            entry.breaker.release_probe();
+        }
         entry.stats.errors.fetch_add(1, Ordering::Relaxed);
         return protocol::error_response(
             Some(id),
@@ -1040,6 +1065,11 @@ fn handle_predict(
 
     let pending = match entry.cache_probe(&x) {
         CacheProbe::Hit(y) => {
+            // a cached score says nothing about the engine's health, so
+            // this is a release, not a success: the next miss probes
+            if is_probe {
+                entry.breaker.release_probe();
+            }
             entry.stats.cache_hits.fetch_add(1, Ordering::Relaxed);
             bump_latency(entry, t0);
             return protocol::predict_response(id, y, true);
@@ -1051,6 +1081,9 @@ fn handle_predict(
     match entry.enqueue(PredictJob { x, reply: tx, deadline }) {
         Push::Accepted => {}
         Push::Full => {
+            if is_probe {
+                entry.breaker.release_probe();
+            }
             entry.stats.shed.fetch_add(1, Ordering::Relaxed);
             return protocol::error_response(
                 Some(id),
@@ -1063,6 +1096,9 @@ fn handle_predict(
             );
         }
         Push::Closed => {
+            if is_probe {
+                entry.breaker.release_probe();
+            }
             entry.stats.errors.fetch_add(1, Ordering::Relaxed);
             return protocol::error_response(Some(id), "shutting_down", "server is shutting down");
         }
@@ -1265,9 +1301,11 @@ impl Client {
                 Err(e) if transient(&e) => last_error = e.to_string(),
                 other => return other,
             }
-            let budget_spent =
-                policy.budget.is_some_and(|b| t0.elapsed() >= b);
-            if attempts > policy.max_retries || budget_spent {
+            // the budget is a wall-clock ceiling on the whole call, so
+            // the backoff sleep must fit inside what remains of it —
+            // and a spent budget ends the loop before sleeping at all
+            let remaining = policy.budget.map(|b| b.saturating_sub(t0.elapsed()));
+            if attempts > policy.max_retries || remaining == Some(Duration::ZERO) {
                 return Err(anyhow::Error::new(RetryExhausted {
                     attempts,
                     elapsed: t0.elapsed(),
@@ -1277,7 +1315,11 @@ impl Client {
             // "equal jitter": sleep a uniform fraction of
             // [delay/2, delay) so retry waves decohere
             let frac = 0.5 + 0.5 * (rng.below(1_000) as f64 / 1_000.0);
-            std::thread::sleep(delay.mul_f64(frac).min(policy.max_delay));
+            let mut sleep = delay.mul_f64(frac).min(policy.max_delay);
+            if let Some(r) = remaining {
+                sleep = sleep.min(r);
+            }
+            std::thread::sleep(sleep);
             delay = (delay * 2).min(policy.max_delay);
         }
     }

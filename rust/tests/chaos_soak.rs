@@ -257,6 +257,76 @@ fn quarantined_model_recovers_once_the_fault_clears() {
     });
 }
 
+/// Regression: a request that wins the half-open probe slot but is
+/// served from the cache never reaches a worker, so no breaker verdict
+/// arrives from the batch path. The slot must be released — before the
+/// fix the breaker wedged half-open forever and every later request
+/// answered `quarantined` while `/healthz` reported the model ready.
+#[test]
+fn cache_hit_probe_releases_the_half_open_slot() {
+    let _guard = faults_lock().lock().unwrap_or_else(|e| e.into_inner());
+    let _disarm = Disarm;
+    with_timeout(120, || {
+        let cfg = ServeConfig::builder()
+            .addr("127.0.0.1:0")
+            .workers(1)
+            .max_batch(4)
+            .linger(Duration::from_millis(1))
+            .cache_capacity(64)
+            .breaker_threshold(3)
+            .breaker_cooldown(Duration::from_millis(150))
+            .build()
+            .unwrap();
+        let handle = serve::start(tiny_artifact(), &cfg).unwrap();
+        let mut client = Client::connect(handle.addr()).unwrap();
+
+        // seed the cache while the engine is healthy
+        let hot = [0.5, 0.5, 0.5];
+        let (y0, _) = client.predict(1, &hot).unwrap();
+
+        // a panic storm on distinct (uncached) queries trips the breaker
+        faults::configure(Some(
+            FaultPlan::seeded(11).with(FaultPoint::WorkerPanic, FaultRule { p: 1.0, ms: 0 }),
+        ));
+        let mut saw_quarantine = false;
+        for i in 0..50u64 {
+            let x = [i as f64, -(i as f64), 1.0 + i as f64];
+            match client.predict(100 + i, &x) {
+                Err(e) if e.to_string().contains("[quarantined]") => {
+                    saw_quarantine = true;
+                    break;
+                }
+                Err(e) if e.to_string().contains("[internal]") => continue,
+                other => panic!("expected internal/quarantined, got {other:?}"),
+            }
+        }
+        assert!(saw_quarantine, "the breaker must trip under a panic storm");
+
+        // the engine heals; after the cooldown the first request in is
+        // the cached one — it wins the probe slot yet never exercises
+        // the engine, so it must hand the slot back
+        faults::configure(None);
+        std::thread::sleep(Duration::from_millis(200));
+        let (y1, cached) = client.predict(1_000, &hot).expect("cache hit must serve");
+        assert!(cached, "the probe request must be served from cache");
+        assert_eq!(y1, y0);
+
+        // the released slot lets the very next cache miss probe for
+        // real: it predicts and closes the breaker — a wedged breaker
+        // would answer `quarantined` here forever
+        let (y2, cached2) = client
+            .predict(1_001, &[0.7, -0.3, 0.9])
+            .expect("released probe slot must re-admit a real probe");
+        assert!(!cached2);
+        assert!(y2.is_finite());
+        for i in 0..8u64 {
+            let (y, _) = client.predict(2_000 + i, &[0.2, 0.1, -0.4]).unwrap();
+            assert!(y.is_finite());
+        }
+        handle.shutdown();
+    });
+}
+
 /// Same seed → same fault sequence: the soak's storm is replayable, so
 /// a chaos failure in CI reproduces locally byte-for-byte.
 #[test]
