@@ -13,6 +13,31 @@ pub struct CgTrace {
 /// Callback invoked after each CG iteration with `(iter, current β)`.
 pub type CgCallback<'a> = dyn FnMut(usize, &[f64]) + 'a;
 
+/// Complete CG iteration state, captured at the **end** of an iteration
+/// (after the direction update, so `rs_old` already holds `‖r_t‖²`).
+/// Feeding a captured state back through [`cg_solve_resumable`] continues
+/// the run with bit-identical arithmetic: iteration `t+1` sees exactly
+/// the `(x, r, p, rs_old)` it would have seen in an uninterrupted run.
+/// This is the payload of the `BLESSCKPT` checkpoint format.
+#[derive(Clone, Debug, PartialEq)]
+pub struct CgState {
+    /// Current iterate `x_t` (β in preconditioned space for FALKON).
+    pub x: Vec<f64>,
+    /// Current residual `r_t = b − W x_t`.
+    pub r: Vec<f64>,
+    /// Current search direction `p_{t+1}` (already β-updated).
+    pub p: Vec<f64>,
+    /// Iterations completed so far (the resume runs `iter+1..=max_iter`).
+    pub iter: usize,
+    /// `‖r_t‖²` — carried so resume recomputes nothing.
+    pub rs_old: f64,
+}
+
+/// Callback invoked at the end of each CG iteration with the complete
+/// resumable state; the hook decides whether to persist it (e.g. every
+/// `k`-th iteration to a `BLESSCKPT` file).
+pub type CgSnapshotHook<'a> = dyn FnMut(&CgState) + 'a;
+
 /// Solve `W β = b` by CG, where `matvec` applies the SPD operator `W`,
 /// writing `W·p` into the provided output buffer.
 ///
@@ -24,22 +49,55 @@ pub type CgCallback<'a> = dyn FnMut(usize, &[f64]) + 'a;
 /// Runs exactly `max_iter` iterations unless the relative residual drops
 /// below `tol` first. Returns `(β, trace)`.
 pub fn cg_solve(
+    matvec: impl FnMut(&[f64], &mut [f64]),
+    b: &[f64],
+    max_iter: usize,
+    tol: f64,
+    callback: Option<&mut CgCallback<'_>>,
+) -> (Vec<f64>, Vec<CgTrace>) {
+    cg_solve_resumable(matvec, b, max_iter, tol, callback, None, None)
+}
+
+/// [`cg_solve`] plus crash tolerance: `resume` continues a run from a
+/// previously captured [`CgState`] (a warm start is the same mechanism
+/// with `iter == 0` and state derived from an incumbent solution), and
+/// `snapshot` observes the complete state at the end of every iteration
+/// so callers can checkpoint it.
+///
+/// Because the state is captured after the direction update, resuming
+/// from the iteration-`j` snapshot and running to `max_iter` performs
+/// the *same* float operations in the *same* order as an uninterrupted
+/// run — the resumed result is bit-identical, at any thread width.
+pub fn cg_solve_resumable(
     mut matvec: impl FnMut(&[f64], &mut [f64]),
     b: &[f64],
     max_iter: usize,
     tol: f64,
     mut callback: Option<&mut CgCallback<'_>>,
+    resume: Option<CgState>,
+    mut snapshot: Option<&mut CgSnapshotHook<'_>>,
 ) -> (Vec<f64>, Vec<CgTrace>) {
     let n = b.len();
-    let mut x = vec![0.0; n];
-    let mut r = b.to_vec();
-    let mut p = r.clone();
+    let (mut x, mut r, mut p, start, mut rs_old) = match resume {
+        Some(s) => {
+            assert_eq!(s.x.len(), n, "resume state dimension mismatch");
+            assert_eq!(s.r.len(), n, "resume state dimension mismatch");
+            assert_eq!(s.p.len(), n, "resume state dimension mismatch");
+            (s.x, s.r, s.p, s.iter, s.rs_old)
+        }
+        None => {
+            let x = vec![0.0; n];
+            let r = b.to_vec();
+            let p = r.clone();
+            let rs = crate::linalg::dot(&r, &r);
+            (x, r, p, 0, rs)
+        }
+    };
     let mut wp = vec![0.0; n];
     let b_norm = crate::linalg::norm2(b).max(1e-300);
-    let mut rs_old = crate::linalg::dot(&r, &r);
-    let mut trace = Vec::with_capacity(max_iter);
+    let mut trace = Vec::with_capacity(max_iter.saturating_sub(start));
 
-    for it in 1..=max_iter {
+    for it in (start + 1)..=max_iter {
         if rs_old.sqrt() / b_norm < tol {
             break;
         }
@@ -63,6 +121,9 @@ pub fn cg_solve(
             *pi = ri + beta * *pi;
         }
         rs_old = rs_new;
+        if let Some(snap) = snapshot.as_deref_mut() {
+            snap(&CgState { x: x.clone(), r: r.clone(), p: p.clone(), iter: it, rs_old });
+        }
     }
     (x, trace)
 }
@@ -121,6 +182,79 @@ mod tests {
         for (u, v) in ax.iter().zip(&b) {
             assert!((u - v).abs() < 1e-8);
         }
+    }
+
+    #[test]
+    fn snapshot_resume_is_bit_identical() {
+        let n = 24;
+        let a = spd(n);
+        let b: Vec<f64> = (0..n).map(|i| ((i * 5) % 7) as f64 - 3.0).collect();
+        let total = 14;
+        let (straight, straight_trace) =
+            cg_solve(|v, out| matvec_into(&a, v, out), &b, total, 0.0, None);
+
+        // capture the state after iteration 6, then "crash" and resume
+        let cut = 6;
+        let mut captured: Option<CgState> = None;
+        let mut hook = |s: &CgState| {
+            if s.iter == cut {
+                captured = Some(s.clone());
+            }
+        };
+        let _ = cg_solve_resumable(
+            |v, out| matvec_into(&a, v, out),
+            &b,
+            cut,
+            0.0,
+            None,
+            None,
+            Some(&mut hook),
+        );
+        let state = captured.expect("snapshot hook must fire at the cut iteration");
+        assert_eq!(state.iter, cut);
+        let (resumed, resumed_trace) = cg_solve_resumable(
+            |v, out| matvec_into(&a, v, out),
+            &b,
+            total,
+            0.0,
+            None,
+            Some(state),
+            None,
+        );
+        let bits = |v: &[f64]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+        assert_eq!(bits(&straight), bits(&resumed), "resume must be bit-identical");
+        assert_eq!(resumed_trace.len(), total - cut);
+        assert_eq!(resumed_trace[0].iter, cut + 1);
+        let tail = &straight_trace[cut..];
+        for (a_, b_) in tail.iter().zip(&resumed_trace) {
+            assert_eq!(a_.iter, b_.iter);
+            assert_eq!(a_.rel_residual.to_bits(), b_.rel_residual.to_bits());
+        }
+    }
+
+    #[test]
+    fn snapshot_fires_every_iteration_with_consistent_state() {
+        let n = 16;
+        let a = spd(n);
+        let b = vec![1.0; n];
+        let mut iters_seen = Vec::new();
+        let mut hook = |s: &CgState| {
+            assert_eq!(s.x.len(), n);
+            assert_eq!(s.r.len(), n);
+            assert_eq!(s.p.len(), n);
+            assert!(s.rs_old.is_finite() && s.rs_old >= 0.0);
+            iters_seen.push(s.iter);
+        };
+        let _ = cg_solve_resumable(
+            |v, out| matvec_into(&a, v, out),
+            &b,
+            8,
+            0.0,
+            None,
+            None,
+            Some(&mut hook),
+        );
+        assert_eq!(iters_seen, (1..=8).collect::<Vec<_>>());
     }
 
     #[test]

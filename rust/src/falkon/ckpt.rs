@@ -1,0 +1,295 @@
+//! `BLESSCKPT` — the checksummed on-disk encoding of a mid-fit CG state
+//! ([`CgState`]), written every `k` iterations through
+//! [`crate::util::fsio::atomic_write`] so a `train --checkpoint` run
+//! killed at CG iteration 19/20 resumes from iteration 19 instead of 0.
+//!
+//! Byte layout (all integers and float bit patterns little-endian):
+//!
+//! ```text
+//! offset  size  field
+//!      0     8  magic "BLESSCKP"
+//!      8     4  version (u32, currently 1)
+//!     12     4  reserved (u32, zero)
+//!     16     8  problem fingerprint (u64, FNV-1a over the CG right-hand
+//!               side's f64 bit patterns + λn — a checkpoint never
+//!               resumes a *different* fit)
+//!     24     8  m — state vector length (u64)
+//!     32     8  iter — completed CG iterations (u64)
+//!     40     8  rs_old — ‖r‖² bit pattern (f64)
+//!     48    8m  x section (f64 bit patterns)
+//!  48+8m    8m  r section
+//! 48+16m    8m  p section
+//! 48+24m     8  FNV-1a checksum over every preceding byte (u64)
+//! ```
+//!
+//! The same failure contract as the `BLESSBIN` artifact codec
+//! ([`crate::serve::codec`]): decoding validates magic, length, checksum
+//! and version **in that order** and reports each as a clean typed
+//! error. One difference in spirit — a damaged *checkpoint* is not fatal
+//! the way a damaged *artifact* is, because the fit can always cold
+//! start; [`load`] therefore degrades to `None` with a loud `stderr`
+//! warning and never panics or aborts the run. The
+//! [`crate::faults::FaultPoint::CkptCorrupt`] injection point mutilates
+//! the bytes between disk read and decode to prove exactly that.
+
+use super::CgState;
+use crate::serve::codec::fnv1a;
+use std::path::Path;
+
+/// Magic prefix of every checkpoint file.
+pub const MAGIC: [u8; 8] = *b"BLESSCKP";
+/// Current encoding version.
+pub const CKPT_VERSION: u32 = 1;
+/// Fixed-size header: magic + version + reserved + fingerprint + m +
+/// iter + rs_old.
+const HEADER_LEN: usize = 8 + 4 + 4 + 8 + 8 + 8 + 8;
+/// Smallest well-formed file: header + checksum trailer (m = 0).
+const MIN_LEN: usize = HEADER_LEN + 8;
+
+/// Fingerprint of the linear system a checkpoint belongs to: FNV-1a over
+/// the right-hand side's f64 bit patterns plus `λn`. Two fits with the
+/// same data, centers, weights and regularization produce the same `b`
+/// bit-for-bit (the determinism contract), so their checkpoints are
+/// interchangeable; anything else is rejected at [`load`].
+pub fn problem_fingerprint(b: &[f64], lam_n: f64) -> u64 {
+    let mut bytes = Vec::with_capacity(b.len() * 8 + 8);
+    for v in b {
+        bytes.extend_from_slice(&v.to_bits().to_le_bytes());
+    }
+    bytes.extend_from_slice(&lam_n.to_bits().to_le_bytes());
+    fnv1a(&bytes)
+}
+
+/// Encode a CG state to the `BLESSCKPT` byte layout.
+pub fn encode(state: &CgState, fingerprint: u64) -> Vec<u8> {
+    let m = state.x.len();
+    debug_assert_eq!(state.r.len(), m);
+    debug_assert_eq!(state.p.len(), m);
+    let mut out = Vec::with_capacity(HEADER_LEN + 24 * m + 8);
+    out.extend_from_slice(&MAGIC);
+    out.extend_from_slice(&CKPT_VERSION.to_le_bytes());
+    out.extend_from_slice(&0u32.to_le_bytes());
+    out.extend_from_slice(&fingerprint.to_le_bytes());
+    out.extend_from_slice(&(m as u64).to_le_bytes());
+    out.extend_from_slice(&(state.iter as u64).to_le_bytes());
+    out.extend_from_slice(&state.rs_old.to_bits().to_le_bytes());
+    for section in [&state.x, &state.r, &state.p] {
+        for v in section.iter() {
+            out.extend_from_slice(&v.to_bits().to_le_bytes());
+        }
+    }
+    let sum = fnv1a(&out);
+    out.extend_from_slice(&sum.to_le_bytes());
+    out
+}
+
+/// Sequential little-endian reader with checked bounds.
+struct Reader<'a> {
+    b: &'a [u8],
+    i: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn take(&mut self, n: usize) -> anyhow::Result<&'a [u8]> {
+        let end = self
+            .i
+            .checked_add(n)
+            .filter(|&e| e <= self.b.len())
+            .ok_or_else(|| anyhow::anyhow!("truncated checkpoint (at byte {})", self.i))?;
+        let s = &self.b[self.i..end];
+        self.i = end;
+        Ok(s)
+    }
+
+    fn u32(&mut self) -> anyhow::Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> anyhow::Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn f64_section(&mut self, len: usize) -> anyhow::Result<Vec<f64>> {
+        let bytes = self.take(len.checked_mul(8).ok_or_else(|| {
+            anyhow::anyhow!("checkpoint section length overflow ({len} values)")
+        })?)?;
+        Ok(bytes
+            .chunks_exact(8)
+            .map(|c| f64::from_bits(u64::from_le_bytes(c.try_into().unwrap())))
+            .collect())
+    }
+}
+
+/// Decode a `BLESSCKPT` byte string, returning the CG state and the
+/// problem fingerprint it was written under. Every class of damage —
+/// wrong magic, truncation at any depth, a flipped bit anywhere (caught
+/// by the checksum trailer), an unknown version, internal length
+/// mismatches — surfaces as a clean typed error.
+pub fn decode(bytes: &[u8]) -> anyhow::Result<(CgState, u64)> {
+    anyhow::ensure!(bytes.len() >= 8 && bytes[..8] == MAGIC, "bad checkpoint magic");
+    anyhow::ensure!(bytes.len() >= MIN_LEN, "truncated checkpoint");
+    let (payload, trailer) = bytes.split_at(bytes.len() - 8);
+    let stored = u64::from_le_bytes(trailer.try_into().unwrap());
+    let computed = fnv1a(payload);
+    anyhow::ensure!(
+        stored == computed,
+        "checkpoint checksum mismatch (stored {stored:016x}, computed {computed:016x}) — \
+         checkpoint corrupted"
+    );
+    let mut r = Reader { b: payload, i: 8 };
+    let version = r.u32()?;
+    anyhow::ensure!(version == CKPT_VERSION, "unsupported checkpoint version {version}");
+    let _reserved = r.u32()?;
+    let fingerprint = r.u64()?;
+    let m = r.u64()? as usize;
+    let iter = r.u64()? as usize;
+    let rs_old = f64::from_bits(r.u64()?);
+    let x = r.f64_section(m)?;
+    let rr = r.f64_section(m)?;
+    let p = r.f64_section(m)?;
+    anyhow::ensure!(
+        r.i == payload.len(),
+        "checkpoint length mismatch ({} bytes, consumed {})",
+        payload.len(),
+        r.i
+    );
+    Ok((CgState { x, r: rr, p, iter, rs_old }, fingerprint))
+}
+
+/// Persist a checkpoint crash-safely (temp file + fsync + atomic
+/// rename): a crash mid-save leaves the *previous* checkpoint intact,
+/// never a torn file.
+pub fn save(path: impl AsRef<Path>, state: &CgState, fingerprint: u64) -> anyhow::Result<()> {
+    crate::util::fsio::atomic_write(path, &encode(state, fingerprint))
+}
+
+/// Load a checkpoint for the fit identified by `expected_fingerprint`.
+///
+/// Degrades, never fails: a missing file returns `None` silently (first
+/// run), and *any* damage — truncation, bit rot, a foreign or stale fit's
+/// fingerprint, an injected `ckpt.corrupt` fault — returns `None` with a
+/// loud warning on stderr so the caller cold-starts. Training must never
+/// panic because a checkpoint went bad; the checkpoint is an
+/// optimization, not a dependency.
+pub fn load(path: impl AsRef<Path>, expected_fingerprint: u64) -> Option<CgState> {
+    let path = path.as_ref();
+    let mut bytes = match std::fs::read(path) {
+        Ok(b) => b,
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => return None,
+        Err(e) => {
+            eprintln!(
+                "warning: reading checkpoint {}: {e} — falling back to cold start",
+                path.display()
+            );
+            return None;
+        }
+    };
+    // chaos hook: the ckpt.corrupt fault point mutilates the bytes here,
+    // between read and decode, exactly like a torn disk would
+    crate::faults::corrupt_checkpoint(&mut bytes);
+    let (state, fingerprint) = match decode(&bytes) {
+        Ok(v) => v,
+        Err(e) => {
+            eprintln!(
+                "warning: checkpoint {} unusable: {e} — falling back to cold start",
+                path.display()
+            );
+            return None;
+        }
+    };
+    if fingerprint != expected_fingerprint {
+        eprintln!(
+            "warning: checkpoint {} belongs to a different fit \
+             (fingerprint {fingerprint:016x}, expected {expected_fingerprint:016x}) — \
+             falling back to cold start",
+            path.display()
+        );
+        return None;
+    }
+    Some(state)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn state(m: usize) -> CgState {
+        CgState {
+            x: (0..m).map(|i| (i as f64 * 0.37).sin()).collect(),
+            r: (0..m).map(|i| (i as f64 * 0.11).cos()).collect(),
+            p: (0..m).map(|i| i as f64 - 2.5).collect(),
+            iter: 7,
+            rs_old: 1.25e-3,
+        }
+    }
+
+    fn tmp_dir(tag: &str) -> std::path::PathBuf {
+        let d = std::env::temp_dir().join(format!("bless-ckpt-{}-{tag}", std::process::id()));
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    #[test]
+    fn round_trips_bit_exactly() {
+        let s = state(9);
+        let (back, fp) = decode(&encode(&s, 0xfeed)).unwrap();
+        assert_eq!(fp, 0xfeed);
+        assert_eq!(back, s);
+        // subnormals, infinities and negative zero all survive
+        let odd = CgState {
+            x: vec![f64::MIN_POSITIVE / 8.0, -0.0, f64::INFINITY],
+            r: vec![0.0; 3],
+            p: vec![1.0; 3],
+            iter: 1,
+            rs_old: 0.0,
+        };
+        let (back, _) = decode(&encode(&odd, 1)).unwrap();
+        assert_eq!(
+            back.x.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            odd.x.iter().map(|v| v.to_bits()).collect::<Vec<_>>()
+        );
+    }
+
+    #[test]
+    fn damage_is_always_a_clean_error() {
+        let bytes = encode(&state(6), 42);
+        assert!(decode(b"BLESSBIN").unwrap_err().to_string().contains("magic"));
+        for cut in [bytes.len() - 1, bytes.len() / 2, 16, 1, 0] {
+            let e = decode(&bytes[..cut]).unwrap_err().to_string();
+            assert!(
+                e.contains("truncated") || e.contains("magic"),
+                "cut {cut}: {e}"
+            );
+        }
+        for idx in [8, 20, 50, bytes.len() - 1] {
+            let mut bad = bytes.clone();
+            bad[idx] ^= 0x04;
+            let e = decode(&bad).unwrap_err().to_string();
+            assert!(e.contains("checksum"), "flip at {idx}: {e}");
+        }
+    }
+
+    #[test]
+    fn save_load_round_trips_and_rejects_wrong_fingerprint() {
+        let dir = tmp_dir("roundtrip");
+        let path = dir.join("fit.ckpt");
+        let s = state(12);
+        save(&path, &s, 77).unwrap();
+        assert_eq!(load(&path, 77), Some(s));
+        // a different fit's fingerprint → cold start, not a panic
+        assert_eq!(load(&path, 78), None);
+        // missing file → silent cold start
+        assert_eq!(load(dir.join("nope.ckpt"), 77), None);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn fingerprint_separates_problems() {
+        let b1 = vec![1.0, 2.0, 3.0];
+        let mut b2 = b1.clone();
+        b2[2] += 1e-15;
+        assert_eq!(problem_fingerprint(&b1, 0.5), problem_fingerprint(&b1, 0.5));
+        assert_ne!(problem_fingerprint(&b1, 0.5), problem_fingerprint(&b2, 0.5));
+        assert_ne!(problem_fingerprint(&b1, 0.5), problem_fingerprint(&b1, 0.25));
+    }
+}

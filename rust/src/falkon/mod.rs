@@ -14,6 +14,14 @@
 //!   Eq. 16 — bit-identical either way.
 //! * [`nystrom_krr`] — the direct `O(nM² + M³)` Nyström solver (Def. 4),
 //!   used as the convergence oracle in tests.
+//! * [`ckpt`] — the checksummed `BLESSCKPT` encoding of a mid-fit CG
+//!   state. [`Falkon::fit_opts`] snapshots full CG state every `k`
+//!   iterations and resumes a killed fit **bit-identically** (the state
+//!   is captured between iterations, so the resumed run replays the
+//!   exact float sequence of an uninterrupted one);
+//!   [`Falkon::refit`] warm-starts CG from an incumbent model's `α`
+//!   through [`Preconditioner::apply_b_inv`], converging in a few
+//!   iterations when the data has only drifted.
 //!
 //! FALKON-BLESS = `Falkon::fit` with centers/weights from
 //! [`crate::bless::bless`]; FALKON-UNI = the same with uniform centers.
@@ -24,12 +32,13 @@
 //! results at any `--threads` setting.
 
 mod cg;
+pub mod ckpt;
 mod precond;
 mod solver;
 
-pub use cg::{cg_solve, CgCallback, CgTrace};
+pub use cg::{cg_solve, cg_solve_resumable, CgCallback, CgSnapshotHook, CgState, CgTrace};
 pub use precond::Preconditioner;
-pub use solver::{nystrom_krr, Falkon, FalkonModel, IterationStat};
+pub use solver::{nystrom_krr, CheckpointSpec, Falkon, FalkonModel, FitOptions, IterationStat};
 
 #[cfg(test)]
 mod tests {

@@ -94,6 +94,19 @@ impl Preconditioner {
         v.iter().zip(&self.a_isqrt).map(|(x, s)| x * s).collect()
     }
 
+    /// `β = B⁻¹ α` — the exact inverse of [`Preconditioner::apply_b`]:
+    /// `B⁻¹ = L_Gᵀ Lᵀ A^{1/2}`, two triangular *multiplies* plus a
+    /// diagonal scale (`O(M²)`, no solve). This is how a warm-started
+    /// refit ([`super::Falkon::refit`]) maps an incumbent model's
+    /// coefficients back into the preconditioned CG space: CG then
+    /// starts from the incumbent solution instead of zero.
+    pub fn apply_b_inv(&self, alpha: &[f64]) -> Vec<f64> {
+        // A^{1/2} α (a_isqrt holds A^{-1/2}, so divide)
+        let w: Vec<f64> = alpha.iter().zip(&self.a_isqrt).map(|(x, s)| x / s).collect();
+        let u = mul_lt(self.l.l(), &w);
+        mul_lt(self.lg.l(), &u)
+    }
+
     /// `z = Bᵀ v`.
     pub fn apply_bt(&self, v: &[f64]) -> Vec<f64> {
         let w: Vec<f64> = v.iter().zip(&self.a_isqrt).map(|(x, s)| x * s).collect();
@@ -111,6 +124,13 @@ impl Preconditioner {
     pub fn solve_lt(&self, b: &[f64]) -> Vec<f64> {
         self.l.solve_lt(b)
     }
+}
+
+/// `y = Lᵀ x` against a stored **lower** factor: `y_i = Σ_{j≥i} L_ji x_j`.
+/// Small (`M × M`) and cold — runs on the calling thread.
+fn mul_lt(l: &Matrix, x: &[f64]) -> Vec<f64> {
+    let m = x.len();
+    (0..m).map(|i| (i..m).map(|j| l.get(j, i) * x[j]).sum()).collect()
 }
 
 #[cfg(test)]
@@ -176,6 +196,26 @@ mod tests {
         let lhs = crate::linalg::dot(&p.apply_b(&x), &y);
         let rhs = crate::linalg::dot(&x, &p.apply_bt(&y));
         assert!((lhs - rhs).abs() < 1e-8 * lhs.abs().max(1.0));
+    }
+
+    #[test]
+    fn b_inv_inverts_b() {
+        let m = 20;
+        let (k, n) = kmm(m);
+        let a: Vec<f64> = (0..m).map(|i| 0.4 + (i as f64) * 0.05).collect();
+        let p = Preconditioner::new(&k, &a, n, 1e-3).unwrap();
+        let mut rng = Rng::seeded(17);
+        let beta: Vec<f64> = (0..m).map(|_| rng.gaussian()).collect();
+        let back = p.apply_b_inv(&p.apply_b(&beta));
+        for (u, v) in back.iter().zip(&beta) {
+            assert!((u - v).abs() < 1e-8 * v.abs().max(1.0), "{u} vs {v}");
+        }
+        // and the other composition order
+        let alpha: Vec<f64> = (0..m).map(|_| rng.gaussian()).collect();
+        let back = p.apply_b(&p.apply_b_inv(&alpha));
+        for (u, v) in back.iter().zip(&alpha) {
+            assert!((u - v).abs() < 1e-8 * v.abs().max(1.0), "{u} vs {v}");
+        }
     }
 
     #[test]

@@ -7,11 +7,41 @@
 //! CG iteration and training-set prediction stream the same bit-identical
 //! tiles — so training costs ~1 kernel sweep instead of `t` of them.
 
-use super::{cg_solve, Preconditioner};
+use super::{cg_solve_resumable, CgSnapshotHook, CgState, Preconditioner};
 use crate::kernels::{tile_indices, Centers, KernelEngine, PanelCache};
 use crate::leverage::WeightedSet;
 use crate::linalg::{self, Matrix};
 use std::sync::Arc;
+
+/// Mid-fit checkpointing for [`Falkon::fit_opts`]: where to write the
+/// `BLESSCKPT` file, how often, and whether to resume from one.
+#[derive(Clone, Debug)]
+pub struct CheckpointSpec {
+    /// Checkpoint file (`BLESSCKPT`, written via atomic rename).
+    pub path: std::path::PathBuf,
+    /// Snapshot every `every`-th CG iteration (0 is treated as 1).
+    pub every: usize,
+    /// Resume from an existing checkpoint at `path` if one is present
+    /// and valid for this exact fit; damage or a fingerprint mismatch
+    /// degrades to a cold start with a warning.
+    pub resume: bool,
+}
+
+/// Options for [`Falkon::fit_opts`]. `Default` reproduces
+/// [`Falkon::fit`] exactly: no tolerance stop, cold start, no
+/// checkpointing.
+#[derive(Debug, Default)]
+pub struct FitOptions<'o> {
+    /// CG stop tolerance on the relative residual (`0.0` = run all `t`
+    /// iterations, the paper-faithful fixed-iteration regime).
+    pub tol: f64,
+    /// Warm-start CG from an incumbent model's coefficients `α`
+    /// (mapped into β-space through [`Preconditioner::apply_b_inv`]).
+    /// A valid resumable checkpoint takes precedence.
+    pub warm_start: Option<&'o [f64]>,
+    /// Mid-fit crash tolerance (see [`CheckpointSpec`]).
+    pub checkpoint: Option<CheckpointSpec>,
+}
 
 /// Statistics captured after each CG iteration via the fit callback.
 #[derive(Clone, Debug)]
@@ -176,7 +206,47 @@ impl<'a> Falkon<'a> {
         &self,
         y: &[f64],
         t: usize,
+        per_iter: Option<&mut dyn FnMut(usize, &FalkonModel) -> Option<f64>>,
+    ) -> anyhow::Result<FalkonModel> {
+        self.fit_opts(y, t, per_iter, FitOptions::default())
+    }
+
+    /// Warm-started refit: seed CG from an incumbent model's `α` and stop
+    /// as soon as the relative residual drops below `tol`. When the data
+    /// has only drifted, the incumbent is already near the solution and
+    /// CG converges in a few iterations instead of a full cold fit —
+    /// the number actually run is `model.iterations.len()`.
+    pub fn refit(
+        &self,
+        y: &[f64],
+        t: usize,
+        tol: f64,
+        incumbent_alpha: &[f64],
+    ) -> anyhow::Result<FalkonModel> {
+        self.fit_opts(
+            y,
+            t,
+            None,
+            FitOptions { tol, warm_start: Some(incumbent_alpha), checkpoint: None },
+        )
+    }
+
+    /// [`Falkon::fit`] with the full option set: a CG stop tolerance, a
+    /// warm start from incumbent coefficients, and `BLESSCKPT`
+    /// checkpointing with crash-safe resume.
+    ///
+    /// Resume precedence: a valid checkpoint (right fingerprint, intact
+    /// checksum) beats a warm start beats a cold start. Because the
+    /// checkpoint captures the complete CG state *between* iterations,
+    /// a resumed run replays the exact float sequence of an
+    /// uninterrupted one — the fitted model is bit-identical, at any
+    /// thread width and panel budget.
+    pub fn fit_opts(
+        &self,
+        y: &[f64],
+        t: usize,
         mut per_iter: Option<&mut dyn FnMut(usize, &FalkonModel) -> Option<f64>>,
+        opts: FitOptions<'_>,
     ) -> anyhow::Result<FalkonModel> {
         anyhow::ensure!(y.len() == self.engine.n(), "label length mismatch");
         anyhow::ensure!(t > 0, "need at least one iteration");
@@ -194,7 +264,7 @@ impl<'a> Falkon<'a> {
         // W β = Bᵀ (K_nMᵀ K_nM + λn K_MM) B β — the K_nM products stream
         // from the panel cache; `reg` is reused across iterations.
         let mut reg = vec![0.0; m];
-        let matvec = |beta: &[f64], out: &mut [f64]| {
+        let mut matvec = |beta: &[f64], out: &mut [f64]| {
             let _s = crate::obs::span("cg_iter");
             let alpha = self.precond.apply_b(beta);
             self.panel.knm_t_knm_matvec_into(&alpha, out);
@@ -203,6 +273,41 @@ impl<'a> Falkon<'a> {
             let z = self.precond.apply_bt(out);
             out.copy_from_slice(&z);
         };
+
+        // the fingerprint binds a checkpoint to this exact linear system
+        // (same data + centers + weights + λ ⇒ same `b` bit-for-bit)
+        let fingerprint =
+            opts.checkpoint.as_ref().map(|_| super::ckpt::problem_fingerprint(&b, lam_n));
+        let mreg = crate::obs::metrics::global();
+        let mut resume: Option<CgState> = None;
+        if let (Some(spec), Some(fp)) = (&opts.checkpoint, fingerprint) {
+            if spec.resume {
+                resume = super::ckpt::load(&spec.path, fp);
+                if let Some(state) = &resume {
+                    mreg.counter("falkon_resumed_fits_total").inc();
+                    println!(
+                        "resuming fit from checkpoint {} (CG iteration {})",
+                        spec.path.display(),
+                        state.iter
+                    );
+                }
+            }
+        }
+        if resume.is_none() {
+            if let Some(alpha) = opts.warm_start {
+                anyhow::ensure!(alpha.len() == m, "warm-start coefficient length mismatch");
+                // β₀ = B⁻¹α, r₀ = b − Wβ₀: one extra operator application
+                // buys CG a start at the incumbent solution
+                let x = self.precond.apply_b_inv(alpha);
+                let mut wx = vec![0.0; m];
+                matvec(&x, &mut wx);
+                let r: Vec<f64> = b.iter().zip(&wx).map(|(bv, wv)| bv - wv).collect();
+                let rs_old = linalg::dot(&r, &r);
+                let p = r.clone();
+                mreg.counter("falkon_warm_fits_total").inc();
+                resume = Some(CgState { x, r, p, iter: 0, rs_old });
+            }
+        }
 
         let mut stats: Vec<IterationStat> = Vec::with_capacity(t);
         let t0 = std::time::Instant::now();
@@ -224,13 +329,32 @@ impl<'a> Falkon<'a> {
                 metric: metric.flatten(),
             });
         };
-        let (beta, trace) = cg_solve(matvec, &b, t, 0.0, Some(&mut cb));
-        // `cg_solve` pushes its trace entry immediately before invoking
+
+        let mut snap_hook;
+        let snapshot: Option<&mut CgSnapshotHook<'_>> = match (&opts.checkpoint, fingerprint) {
+            (Some(spec), Some(fp)) => {
+                let every = spec.every.max(1);
+                let path = spec.path.clone();
+                snap_hook = move |s: &CgState| {
+                    if s.iter % every == 0 {
+                        // a failed checkpoint write must not kill the fit
+                        if let Err(e) = super::ckpt::save(&path, s, fp) {
+                            eprintln!("warning: writing checkpoint {}: {e}", path.display());
+                        }
+                    }
+                };
+                Some(&mut snap_hook)
+            }
+            _ => None,
+        };
+
+        let (beta, trace) =
+            cg_solve_resumable(&mut matvec, &b, t, opts.tol, Some(&mut cb), resume, snapshot);
+        // the solver pushes its trace entry immediately before invoking
         // the callback each iteration, so the vectors align one-to-one
         for (stat, tr) in stats.iter_mut().zip(&trace) {
             stat.rel_residual = tr.rel_residual;
         }
-        let mreg = crate::obs::metrics::global();
         mreg.counter("falkon_fits_total").inc();
         mreg.counter("falkon_cg_iterations_total").add(trace.len() as u64);
 
@@ -423,5 +547,102 @@ mod tests {
         let f = Falkon::new(&eng, &set, 1e-3).unwrap();
         assert!(f.fit(&y[..50], 5, None).is_err()); // wrong label length
         assert!(f.fit(&y, 0, None).is_err()); // zero iterations
+        assert!(f.refit(&y, 5, 0.0, &y[..3]).is_err()); // wrong α length
+    }
+
+    fn bits(v: &[f64]) -> Vec<u64> {
+        v.iter().map(|x| x.to_bits()).collect()
+    }
+
+    #[test]
+    fn checkpoint_resume_is_bit_identical_to_uninterrupted_fit() {
+        let (eng, y, centers) = setup(240);
+        let lambda = 1e-3;
+        let set = WeightedSet::uniform(centers, lambda);
+        let f = Falkon::new(&eng, &set, lambda).unwrap();
+        let full = f.fit(&y, 10, None).unwrap();
+
+        let dir =
+            std::env::temp_dir().join(format!("bless-solver-ckpt-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("fit.ckpt");
+        // a fit killed after 6 of 10 iterations = run exactly 6 with
+        // checkpointing on (state lands on disk at iteration 6)
+        let spec = |resume: bool| CheckpointSpec { path: path.clone(), every: 2, resume };
+        let partial = f
+            .fit_opts(
+                &y,
+                6,
+                None,
+                FitOptions { tol: 0.0, warm_start: None, checkpoint: Some(spec(false)) },
+            )
+            .unwrap();
+        assert_eq!(partial.iterations.len(), 6);
+        let resumed = f
+            .fit_opts(
+                &y,
+                10,
+                None,
+                FitOptions { tol: 0.0, warm_start: None, checkpoint: Some(spec(true)) },
+            )
+            .unwrap();
+        assert_eq!(resumed.iterations.len(), 4, "must resume at iteration 7");
+        assert_eq!(resumed.iterations[0].iter, 7);
+        assert_eq!(bits(&full.alpha), bits(&resumed.alpha), "resume must be bit-identical");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn a_damaged_checkpoint_cold_starts_with_the_same_result() {
+        let (eng, y, centers) = setup(180);
+        let lambda = 1e-3;
+        let set = WeightedSet::uniform(centers, lambda);
+        let f = Falkon::new(&eng, &set, lambda).unwrap();
+        let full = f.fit(&y, 5, None).unwrap();
+
+        let dir = std::env::temp_dir().join(format!("bless-solver-bad-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("fit.ckpt");
+        std::fs::write(&path, b"BLESSCKP garbage that will not checksum").unwrap();
+        let spec = CheckpointSpec { path: path.clone(), every: 1, resume: true };
+        let model = f
+            .fit_opts(
+                &y,
+                5,
+                None,
+                FitOptions { tol: 0.0, warm_start: None, checkpoint: Some(spec) },
+            )
+            .unwrap();
+        assert_eq!(model.iterations.len(), 5, "damage must cold-start, not resume");
+        assert_eq!(bits(&full.alpha), bits(&model.alpha));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn warm_refit_converges_in_fewer_iterations() {
+        let (eng, y, centers) = setup(300);
+        let lambda = 1e-3;
+        let set = WeightedSet::uniform(centers, lambda);
+        let f = Falkon::new(&eng, &set, lambda).unwrap();
+        let tol = 1e-8;
+        let cold = f.fit_opts(&y, 200, None, FitOptions { tol, ..Default::default() }).unwrap();
+
+        // drifted labels: the incumbent is already near the new solution
+        let y2: Vec<f64> =
+            y.iter().enumerate().map(|(i, v)| v + 0.01 * ((i as f64) * 0.1).sin()).collect();
+        let cold2 = f.fit_opts(&y2, 200, None, FitOptions { tol, ..Default::default() }).unwrap();
+        let warm = f.refit(&y2, 200, tol, &cold.alpha).unwrap();
+        assert!(
+            warm.iterations.len() < cold2.iterations.len(),
+            "warm {} vs cold {} iterations",
+            warm.iterations.len(),
+            cold2.iterations.len()
+        );
+        // and the warm answer matches the cold one to the shared tolerance
+        let pw = f.predict_train(&warm.alpha);
+        let pc = f.predict_train(&cold2.alpha);
+        let err = crate::data::rmse(&pw, &pc);
+        let scale = linalg::norm2(&pc) / (y.len() as f64).sqrt();
+        assert!(err < 1e-5 * scale.max(1.0), "warm vs cold rmse {err}");
     }
 }

@@ -25,12 +25,16 @@
 //! Plans come from `serve --faults "…"` or the `BLESS_FAULTS` env var —
 //! see [`FaultPlan::parse`] for the spec grammar.
 //!
-//! The firing sites live in `serve/`: connection read/write
-//! ([`FaultPoint::ConnDelay`], [`ConnDrop`](FaultPoint::ConnDrop),
+//! The firing sites live in `serve/`, `falkon/` and `lifecycle/`:
+//! connection read/write ([`FaultPoint::ConnDelay`],
+//! [`ConnDrop`](FaultPoint::ConnDrop),
 //! [`ConnTruncate`](FaultPoint::ConnTruncate)), artifact load
-//! ([`ArtifactCorrupt`](FaultPoint::ArtifactCorrupt)), and the engine
+//! ([`ArtifactCorrupt`](FaultPoint::ArtifactCorrupt)), the engine
 //! workers ([`WorkerPanic`](FaultPoint::WorkerPanic),
-//! [`EngineError`](FaultPoint::EngineError)).
+//! [`EngineError`](FaultPoint::EngineError)), checkpoint load
+//! ([`CkptCorrupt`](FaultPoint::CkptCorrupt)), the lifecycle candidate
+//! trainer ([`TrainPanic`](FaultPoint::TrainPanic)) and the holdout
+//! promotion gate ([`GateFail`](FaultPoint::GateFail)).
 
 mod plan;
 
@@ -49,8 +53,8 @@ struct Armed {
     plan: FaultPlan,
     /// One seeded stream per point: draws at one point never perturb
     /// another point's sequence.
-    streams: [Mutex<Rng>; 6],
-    injected: [AtomicU64; 6],
+    streams: [Mutex<Rng>; 9],
+    injected: [AtomicU64; 9],
 }
 
 fn slot() -> &'static RwLock<Option<Arc<Armed>>> {
@@ -129,26 +133,26 @@ pub fn delay(point: FaultPoint) -> Option<Duration> {
     Some(Duration::from_millis(rule.ms))
 }
 
-/// Draw at [`FaultPoint::ArtifactCorrupt`]; when it fires, deterministically
+/// Draw at a byte-corruption point; when it fires, deterministically
 /// mutilate `bytes` (truncate to a seeded prefix, or flip one seeded bit)
 /// and return `true`. The loader downstream must turn the damage into a
 /// clean typed error — that contract is what `tests/chaos_soak.rs` and
 /// the artifact-recovery tests assert.
-pub fn corrupt_artifact(bytes: &mut Vec<u8>) -> bool {
+fn corrupt_bytes(point: FaultPoint, bytes: &mut Vec<u8>) -> bool {
     if !is_active() {
         return false;
     }
     let Some(armed) = armed() else { return false };
-    let Some(rule) = armed.plan.rule(FaultPoint::ArtifactCorrupt) else { return false };
+    let Some(rule) = armed.plan.rule(point) else { return false };
     if rule.p <= 0.0 {
         return false;
     }
-    let mut rng = crate::util::sync::lock(&armed.streams[FaultPoint::ArtifactCorrupt.index()]);
+    let mut rng = crate::util::sync::lock(&armed.streams[point.index()]);
     if !rng.bernoulli(rule.p) {
         return false;
     }
     if bytes.is_empty() {
-        record(&armed, FaultPoint::ArtifactCorrupt);
+        record(&armed, point);
         return true;
     }
     if rng.bernoulli(0.5) {
@@ -162,8 +166,20 @@ pub fn corrupt_artifact(bytes: &mut Vec<u8>) -> bool {
         bytes[idx] ^= 1u8 << bit;
     }
     drop(rng);
-    record(&armed, FaultPoint::ArtifactCorrupt);
+    record(&armed, point);
     true
+}
+
+/// Draw at [`FaultPoint::ArtifactCorrupt`] against model-artifact bytes.
+pub fn corrupt_artifact(bytes: &mut Vec<u8>) -> bool {
+    corrupt_bytes(FaultPoint::ArtifactCorrupt, bytes)
+}
+
+/// Draw at [`FaultPoint::CkptCorrupt`] against `BLESSCKPT` checkpoint
+/// bytes; the checkpoint loader must degrade to a cold start (with a
+/// loud warning), never a panic.
+pub fn corrupt_checkpoint(bytes: &mut Vec<u8>) -> bool {
+    corrupt_bytes(FaultPoint::CkptCorrupt, bytes)
 }
 
 /// Injected-fault counts per point since the last [`configure`], in
@@ -268,6 +284,30 @@ mod tests {
         let mut second = original.clone();
         assert!(corrupt_artifact(&mut second));
         assert_eq!(first, second, "same seed must produce the same damage");
+        configure(None);
+    }
+
+    #[test]
+    fn checkpoint_corruption_replays_and_is_independent() {
+        let _g = guard();
+        let plan = FaultPlan::seeded(123)
+            .with(FaultPoint::ArtifactCorrupt, FaultRule { p: 1.0, ms: 0 })
+            .with(FaultPoint::CkptCorrupt, FaultRule { p: 1.0, ms: 0 });
+        let original: Vec<u8> = (0..=255).collect();
+
+        configure(Some(plan.clone()));
+        let mut first = original.clone();
+        assert!(corrupt_checkpoint(&mut first));
+        assert_ne!(first, original, "corruption must change the bytes");
+
+        configure(Some(plan));
+        let mut second = original.clone();
+        assert!(corrupt_checkpoint(&mut second));
+        assert_eq!(first, second, "same seed must produce the same damage");
+        // draws at ckpt.corrupt never advanced the artifact stream
+        let counts = injected_counts();
+        assert!(counts.contains(&("ckpt.corrupt", 1)), "got {counts:?}");
+        assert!(counts.contains(&("artifact.corrupt", 0)), "got {counts:?}");
         configure(None);
     }
 }

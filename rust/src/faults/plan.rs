@@ -12,12 +12,19 @@
 //! takes `p` (per-draw probability, in `[0,1]`); `conn.delay`
 //! additionally takes `ms` (injected delay). [`FaultPlan`] round-trips
 //! through `Display`, so a logged plan replays verbatim.
+//!
+//! The lifecycle tier adds three points to the original serve six:
+//! `train.panic` (kill the candidate trainer mid-fit), `ckpt.corrupt`
+//! (mutilate checkpoint bytes on load) and `gate.fail` (force the
+//! holdout gate to reject the candidate) — the retrain chaos soak in
+//! `tests/lifecycle_soak.rs` storms all three.
 
 use std::fmt;
 
-/// A named injection point at one of the serve tier's IO or compute
-/// boundaries. The set is closed — every point has exactly one firing
-/// site in `serve/`, so a plan can be reasoned about exhaustively.
+/// A named injection point at one of the serve or lifecycle tier's IO
+/// or compute boundaries. The set is closed — every point has exactly
+/// one firing site in `serve/`, `falkon/` or `lifecycle/`, so a plan can
+/// be reasoned about exhaustively.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
 pub enum FaultPoint {
     /// Stall a connection after reading a request line (`ms` applies).
@@ -32,17 +39,26 @@ pub enum FaultPoint {
     WorkerPanic,
     /// Substitute a predict error for a batch's real result.
     EngineError,
+    /// Panic inside the candidate trainer mid-fit (lifecycle retrain).
+    TrainPanic,
+    /// Corrupt checkpoint bytes between disk read and decode.
+    CkptCorrupt,
+    /// Force the holdout promotion gate to reject the candidate.
+    GateFail,
 }
 
 impl FaultPoint {
     /// Every injection point, in spec order.
-    pub const ALL: [FaultPoint; 6] = [
+    pub const ALL: [FaultPoint; 9] = [
         FaultPoint::ConnDelay,
         FaultPoint::ConnDrop,
         FaultPoint::ConnTruncate,
         FaultPoint::ArtifactCorrupt,
         FaultPoint::WorkerPanic,
         FaultPoint::EngineError,
+        FaultPoint::TrainPanic,
+        FaultPoint::CkptCorrupt,
+        FaultPoint::GateFail,
     ];
 
     /// The spec name (`conn.delay`, `worker.panic`, …).
@@ -54,6 +70,9 @@ impl FaultPoint {
             FaultPoint::ArtifactCorrupt => "artifact.corrupt",
             FaultPoint::WorkerPanic => "worker.panic",
             FaultPoint::EngineError => "engine.error",
+            FaultPoint::TrainPanic => "train.panic",
+            FaultPoint::CkptCorrupt => "ckpt.corrupt",
+            FaultPoint::GateFail => "gate.fail",
         }
     }
 
@@ -83,13 +102,13 @@ pub struct FaultPlan {
     /// Base seed for the per-point draw streams; two runs of the same
     /// plan see the same per-point draw sequences.
     pub seed: u64,
-    rules: [Option<FaultRule>; 6],
+    rules: [Option<FaultRule>; 9],
 }
 
 impl FaultPlan {
     /// An empty plan (no rules) with the given seed.
     pub fn seeded(seed: u64) -> FaultPlan {
-        FaultPlan { seed, rules: [None; 6] }
+        FaultPlan { seed, rules: [None; 9] }
     }
 
     /// Set (or replace) one point's rule; builder-style.
@@ -224,6 +243,16 @@ mod tests {
         assert!(FaultPlan::parse("conn.delay:p=abc").is_err());
         assert!(FaultPlan::parse("conn.delay:p=0.1,volume=11").is_err());
         assert!(FaultPlan::parse("seed=notanumber").is_err());
+    }
+
+    #[test]
+    fn lifecycle_points_parse_and_round_trip() {
+        let plan =
+            FaultPlan::parse("seed=9;train.panic:p=0.2;ckpt.corrupt:p=1;gate.fail:p=0.5").unwrap();
+        assert_eq!(plan.rule(FaultPoint::TrainPanic), Some(FaultRule { p: 0.2, ms: 0 }));
+        assert_eq!(plan.rule(FaultPoint::CkptCorrupt), Some(FaultRule { p: 1.0, ms: 0 }));
+        assert_eq!(plan.rule(FaultPoint::GateFail), Some(FaultRule { p: 0.5, ms: 0 }));
+        assert_eq!(FaultPlan::parse(&plan.to_string()).unwrap(), plan);
     }
 
     #[test]

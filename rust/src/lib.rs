@@ -91,6 +91,15 @@
 //! crash-safe artifact writes ([`util::fsio`]). With no plan armed the
 //! harness is a single relaxed atomic load — serve output stays
 //! bit-identical.
+//!
+//! Closing the loop, the **continuous-training lifecycle tier**
+//! ([`lifecycle`], `serve --retrain-every`) keeps a served model fresh
+//! as data drifts: crash-resumable checkpointed fits
+//! (`train --checkpoint` / `--resume`, the `BLESSCKPT` codec in
+//! [`falkon::ckpt`]), warm-started refits ([`falkon::Falkon::refit`]),
+//! a holdout-RMSE promotion gate with quarantine for failed candidates,
+//! and automatic rollback when a freshly promoted model trips its
+//! circuit breaker inside the probation window.
 pub mod baselines;
 pub mod bless;
 pub mod coordinator;
@@ -99,6 +108,7 @@ pub mod falkon;
 pub mod faults;
 pub mod kernels;
 pub mod leverage;
+pub mod lifecycle;
 pub mod linalg;
 pub mod obs;
 pub mod rng;

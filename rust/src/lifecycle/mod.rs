@@ -1,0 +1,708 @@
+//! Continuous-training lifecycle: supervised retrain → gate → promote
+//! → probation → (maybe) rollback, against a live serving registry.
+//!
+//! The serving tier ([`crate::serve`]) treats a model as immutable once
+//! loaded; this module closes the loop for data that drifts. One
+//! *cycle* ([`run_cycle`]):
+//!
+//! ```text
+//!        trainer() ── catch_unwind ──▶ candidate ModelArtifact
+//!            │ panic / Err                  │
+//!            ▼                              ▼
+//!     TrainFailed                 HoldoutGate::evaluate
+//!   (incumbent untouched)         RMSE(candidate) ≤ RMSE(incumbent)+tol?
+//!                                    │ no                │ yes
+//!                                    ▼                   ▼
+//!                             GateRejected           promote:
+//!                       (candidate quarantined       retain incumbent at
+//!                        to <path>.rejected-N,       <path>.prev, swap the
+//!                        incumbent untouched)        entry, reset breaker
+//!                                                        │
+//!                                                        ▼
+//!                                                 probation window:
+//!                                                 breaker trips? ──yes──▶
+//!                                                        │ no      rollback
+//!                                                        ▼         (swap the
+//!                                                    Promoted      retained
+//!                                                                  incumbent
+//!                                                                  back)
+//! ```
+//!
+//! Invariants the chaos tier (`tests/lifecycle_soak.rs`) proves:
+//!
+//! * The incumbent **never stops serving**: a retrain panic
+//!   (`train.panic`), a trainer error, a gate failure (`gate.fail`) or
+//!   a post-promotion rollback all leave (or restore) the predictor
+//!   that was serving before the cycle started.
+//! * Every artifact write is an atomic replace
+//!   ([`crate::util::fsio::atomic_write`] inside
+//!   [`ModelArtifact::save`]), so a crash mid-promotion never leaves a
+//!   torn file on the reload path.
+//! * Everything is observable: per-entry `promotions` / `rollbacks`
+//!   counters ride the `stats` wire verb, and the process-wide
+//!   `lifecycle_*` counters plus the `lifecycle_model_generation` gauge
+//!   render on `/metrics` and `/varz`.
+//!
+//! [`RetrainScheduler`] runs cycles on a period (`serve
+//! --retrain-every`), feeding each one a caller-supplied trainer —
+//! typically a warm-started [`crate::falkon::Falkon::refit`] on freshly
+//! drifted data.
+
+use crate::linalg::Matrix;
+use crate::serve::model_store::{ModelArtifact, Predictor};
+use crate::serve::registry::ModelEntry;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+/// The validation gate a retrained candidate must pass before it may
+/// replace the incumbent: held-out RMSE no worse than the incumbent's
+/// plus an absolute `tolerance`.
+pub struct HoldoutGate {
+    /// Held-out query rows (one per row, entry dimension columns).
+    queries: Matrix,
+    /// Ground-truth targets, one per query row.
+    targets: Vec<f64>,
+    /// Absolute RMSE slack: the candidate passes when
+    /// `rmse(candidate) <= rmse(incumbent) + tolerance`.
+    tolerance: f64,
+}
+
+/// What [`HoldoutGate::evaluate`] decided, with the numbers behind it.
+#[derive(Clone, Debug)]
+pub struct GateDecision {
+    /// Whether the candidate may be promoted.
+    pub pass: bool,
+    /// Candidate RMSE on the holdout set.
+    pub candidate_rmse: f64,
+    /// Incumbent RMSE on the holdout set.
+    pub incumbent_rmse: f64,
+    /// True when the `gate.fail` chaos point forced this rejection.
+    pub injected: bool,
+}
+
+impl HoldoutGate {
+    /// Build a gate; the holdout set must be non-empty and consistent.
+    pub fn new(queries: Matrix, targets: Vec<f64>, tolerance: f64) -> anyhow::Result<Self> {
+        anyhow::ensure!(queries.rows() > 0, "holdout set must not be empty");
+        anyhow::ensure!(
+            queries.rows() == targets.len(),
+            "holdout rows {} != targets {}",
+            queries.rows(),
+            targets.len()
+        );
+        anyhow::ensure!(
+            tolerance.is_finite() && tolerance >= 0.0,
+            "gate tolerance must be finite and non-negative (got {tolerance})"
+        );
+        Ok(HoldoutGate { queries, targets, tolerance })
+    }
+
+    /// Rows in the holdout set.
+    pub fn len(&self) -> usize {
+        self.targets.len()
+    }
+
+    /// Whether the holdout set is empty (never true after `new`).
+    pub fn is_empty(&self) -> bool {
+        self.targets.is_empty()
+    }
+
+    /// Score both predictors on the holdout set and decide. This is the
+    /// firing site of the `gate.fail` chaos point: when armed it forces
+    /// a rejection, proving the refuse-and-quarantine path without
+    /// needing a genuinely bad model.
+    pub fn evaluate(
+        &self,
+        incumbent: &Predictor,
+        candidate: &Predictor,
+    ) -> anyhow::Result<GateDecision> {
+        let inc = incumbent.predict_batch(&self.queries)?;
+        let cand = candidate.predict_batch(&self.queries)?;
+        let incumbent_rmse = crate::data::rmse(&inc, &self.targets);
+        let candidate_rmse = crate::data::rmse(&cand, &self.targets);
+        let mut pass =
+            candidate_rmse.is_finite() && candidate_rmse <= incumbent_rmse + self.tolerance;
+        let injected = crate::faults::fire(crate::faults::FaultPoint::GateFail);
+        if injected {
+            pass = false;
+        }
+        Ok(GateDecision { pass, candidate_rmse, incumbent_rmse, injected })
+    }
+}
+
+/// Knobs for one retrain cycle.
+#[derive(Clone, Debug)]
+pub struct LifecycleConfig {
+    /// Where the serving artifact lives. Promotion atomically replaces
+    /// this file with the candidate, retains the incumbent at
+    /// `<path>.prev`, and quarantines gate-rejected candidates at
+    /// `<path>.rejected-<n>` — so a restart always reloads whatever is
+    /// actually serving.
+    pub artifact_path: PathBuf,
+    /// How long a freshly promoted model stays on probation: any
+    /// breaker trip inside this window rolls the promotion back.
+    pub probation: Duration,
+    /// How often the probation watch polls the breaker.
+    pub poll: Duration,
+}
+
+impl LifecycleConfig {
+    /// Defaults: 5s probation polled every 20ms.
+    pub fn new(artifact_path: impl Into<PathBuf>) -> Self {
+        LifecycleConfig {
+            artifact_path: artifact_path.into(),
+            probation: Duration::from_secs(5),
+            poll: Duration::from_millis(20),
+        }
+    }
+}
+
+/// How one [`run_cycle`] ended.
+#[derive(Debug)]
+pub enum CycleOutcome {
+    /// The trainer panicked or returned an error — the incumbent was
+    /// never touched.
+    TrainFailed {
+        /// The panic payload or error message.
+        reason: String,
+    },
+    /// The candidate failed the holdout gate (or the `gate.fail` chaos
+    /// point fired) — refused before any swap, artifact quarantined.
+    GateRejected {
+        /// The decision with both RMSE values.
+        decision: GateDecision,
+        /// Where the rejected candidate was parked for post-mortem
+        /// (None when the quarantine write itself failed).
+        quarantined_to: Option<PathBuf>,
+    },
+    /// The candidate passed, was promoted, and survived probation.
+    Promoted {
+        /// The promoted artifact — the caller's next incumbent.
+        artifact: ModelArtifact,
+        /// The gate decision that admitted it.
+        decision: GateDecision,
+    },
+    /// The candidate was promoted but its breaker tripped inside the
+    /// probation window; the retained incumbent is serving again.
+    RolledBack {
+        /// The gate decision that (wrongly, in hindsight) admitted it.
+        decision: GateDecision,
+        /// Breaker trips observed during probation.
+        trips: u64,
+    },
+}
+
+fn lifecycle_counter(name: &'static str) -> std::sync::Arc<crate::obs::metrics::Counter> {
+    crate::obs::metrics::global().counter(name)
+}
+
+/// Run one supervised retrain cycle against a live registry entry.
+///
+/// `incumbent` must be the artifact the entry is currently serving —
+/// it is what a rollback swaps back and what `<path>.prev` retains.
+/// `stop` aborts the probation watch early (treating the promotion as
+/// final) so a server shutdown is never blocked behind a long window.
+///
+/// The trainer runs under `catch_unwind` with the `train.panic` chaos
+/// point armed in front of it: a panicking retrain is contained to
+/// this cycle and the incumbent keeps serving.
+pub fn run_cycle(
+    entry: &ModelEntry,
+    incumbent: &ModelArtifact,
+    trainer: impl FnOnce() -> anyhow::Result<ModelArtifact>,
+    gate: &HoldoutGate,
+    cfg: &LifecycleConfig,
+    stop: &AtomicBool,
+) -> CycleOutcome {
+    lifecycle_counter("lifecycle_retrains_started_total").inc();
+
+    let candidate = match catch_unwind(AssertUnwindSafe(|| {
+        if crate::faults::fire(crate::faults::FaultPoint::TrainPanic) {
+            panic!("injected train.panic fault");
+        }
+        trainer()
+    })) {
+        Ok(Ok(artifact)) => artifact,
+        Ok(Err(e)) => return train_failed(entry, e.to_string()),
+        Err(payload) => {
+            let reason = payload
+                .downcast_ref::<&str>()
+                .map(|s| s.to_string())
+                .or_else(|| payload.downcast_ref::<String>().cloned())
+                .unwrap_or_else(|| "non-string panic payload".to_string());
+            return train_failed(entry, format!("retrain panicked: {reason}"));
+        }
+    };
+
+    // same guard the reload path enforces: a candidate that changed the
+    // input dimension can never be swapped under live traffic
+    if candidate.d() != entry.dim() {
+        return train_failed(
+            entry,
+            format!(
+                "candidate input dimension {} != serving dimension {}",
+                candidate.d(),
+                entry.dim()
+            ),
+        );
+    }
+
+    let incumbent_pred = entry.predictor();
+    let candidate_pred = Predictor::new(&candidate);
+    let decision = match gate.evaluate(&incumbent_pred, &candidate_pred) {
+        Ok(d) => d,
+        Err(e) => return train_failed(entry, format!("gate evaluation failed: {e}")),
+    };
+
+    if !decision.pass {
+        let n = lifecycle_counter("lifecycle_retrains_gate_rejected_total");
+        n.inc();
+        let quarantine =
+            PathBuf::from(format!("{}.rejected-{}", cfg.artifact_path.display(), n.get()));
+        let quarantined_to = match candidate.save(&quarantine) {
+            Ok(()) => {
+                eprintln!(
+                    "warning: retrained candidate for {:?} failed the gate \
+                     (rmse {:.6} vs incumbent {:.6} + tol); quarantined at {}",
+                    entry.name(),
+                    decision.candidate_rmse,
+                    decision.incumbent_rmse,
+                    quarantine.display()
+                );
+                Some(quarantine)
+            }
+            Err(e) => {
+                eprintln!("warning: could not quarantine rejected candidate: {e}");
+                None
+            }
+        };
+        return CycleOutcome::GateRejected { decision, quarantined_to };
+    }
+
+    // Promote. Retain the incumbent first: the rollback path (and a
+    // post-crash operator) needs it after artifact_path is overwritten.
+    let prev_path = PathBuf::from(format!("{}.prev", cfg.artifact_path.display()));
+    if let Err(e) = incumbent.save(&prev_path) {
+        eprintln!("warning: could not retain incumbent at {}: {e}", prev_path.display());
+    }
+    if let Err(e) = candidate.save(&cfg.artifact_path) {
+        eprintln!(
+            "warning: could not persist promoted artifact at {}: {e}",
+            cfg.artifact_path.display()
+        );
+    }
+    entry.swap(&candidate);
+    // the breaker's failure streak belonged to the replaced predictor
+    entry.breaker.reset();
+    entry.stats.promotions.fetch_add(1, Ordering::Relaxed);
+    lifecycle_counter("lifecycle_retrains_promoted_total").inc();
+    let generation = crate::obs::metrics::global().gauge("lifecycle_model_generation");
+    generation.add(1);
+
+    // Probation: the gate scored held-out accuracy, not serving health.
+    // If the breaker trips now, the promotion was wrong — undo it.
+    let trips_before = entry.breaker.trips();
+    let t0 = Instant::now();
+    while t0.elapsed() < cfg.probation && !stop.load(Ordering::SeqCst) {
+        std::thread::sleep(cfg.poll.min(Duration::from_millis(100)).max(Duration::from_millis(1)));
+        let trips = entry.breaker.trips();
+        if trips > trips_before {
+            entry.swap(incumbent);
+            entry.breaker.reset();
+            entry.stats.rollbacks.fetch_add(1, Ordering::Relaxed);
+            lifecycle_counter("lifecycle_retrains_rolled_back_total").inc();
+            generation.add(-1);
+            if let Err(e) = incumbent.save(&cfg.artifact_path) {
+                eprintln!(
+                    "warning: could not restore incumbent artifact at {}: {e}",
+                    cfg.artifact_path.display()
+                );
+            }
+            eprintln!(
+                "warning: promotion of {:?} rolled back — breaker tripped {} time(s) \
+                 within the {:?} probation window",
+                entry.name(),
+                trips - trips_before,
+                cfg.probation
+            );
+            return CycleOutcome::RolledBack { decision, trips: trips - trips_before };
+        }
+    }
+    CycleOutcome::Promoted { artifact: candidate, decision }
+}
+
+fn train_failed(entry: &ModelEntry, reason: String) -> CycleOutcome {
+    lifecycle_counter("lifecycle_retrains_failed_total").inc();
+    eprintln!(
+        "warning: retrain cycle for {:?} failed — incumbent keeps serving: {reason}",
+        entry.name()
+    );
+    CycleOutcome::TrainFailed { reason }
+}
+
+/// Background retrain scheduler (`serve --retrain-every`): runs
+/// [`run_cycle`] on a period against one registry entry, threading the
+/// incumbent artifact from cycle to cycle. Dropping the scheduler (or
+/// calling [`stop`](Self::stop)) ends the loop promptly — the sleep is
+/// sliced and the probation watch honours the same flag.
+pub struct RetrainScheduler {
+    stop: Arc<AtomicBool>,
+    thread: Option<JoinHandle<()>>,
+}
+
+impl RetrainScheduler {
+    /// Start retraining `entry` every `every`. `initial` must be the
+    /// artifact the entry currently serves; `trainer(cycle)` produces
+    /// candidate number `cycle` (1-based) — typically a warm-started
+    /// refit on freshly drifted data.
+    pub fn start(
+        entry: Arc<ModelEntry>,
+        initial: ModelArtifact,
+        every: Duration,
+        mut trainer: impl FnMut(u64) -> anyhow::Result<ModelArtifact> + Send + 'static,
+        gate: HoldoutGate,
+        cfg: LifecycleConfig,
+    ) -> Self {
+        let stop = Arc::new(AtomicBool::new(false));
+        let flag = Arc::clone(&stop);
+        let thread = std::thread::spawn(move || {
+            let mut incumbent = initial;
+            let mut cycle = 0u64;
+            'outer: loop {
+                // sliced sleep so stop() never waits out a long period
+                let t0 = Instant::now();
+                while t0.elapsed() < every {
+                    if flag.load(Ordering::SeqCst) {
+                        break 'outer;
+                    }
+                    std::thread::sleep(
+                        (every - t0.elapsed()).min(Duration::from_millis(50)),
+                    );
+                }
+                if flag.load(Ordering::SeqCst) {
+                    break;
+                }
+                cycle += 1;
+                let outcome =
+                    run_cycle(&entry, &incumbent, || trainer(cycle), &gate, &cfg, &flag);
+                if let CycleOutcome::Promoted { artifact, .. } = outcome {
+                    incumbent = artifact;
+                }
+            }
+        });
+        RetrainScheduler { stop, thread: Some(thread) }
+    }
+
+    /// Signal the loop to end and join it.
+    pub fn stop(mut self) {
+        self.shutdown();
+    }
+
+    fn shutdown(&mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        if let Some(t) = self.thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+impl Drop for RetrainScheduler {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serve::registry::{ModelSpec, Registry, RegistryConfig};
+    use std::sync::atomic::AtomicU64;
+
+    fn artifact(scale: f64) -> ModelArtifact {
+        ModelArtifact {
+            sigma: 1.5,
+            centers: Matrix::from_fn(5, 3, |i, j| ((i * 3 + j) as f64 * 0.37).sin()),
+            alpha: (0..5).map(|i| scale * (0.3 + i as f64 * 0.11)).collect(),
+            trained_n: 5,
+            dataset: "unit".to_string(),
+        }
+    }
+
+    fn entry_with(threshold: u32) -> Arc<ModelEntry> {
+        let cfg = RegistryConfig {
+            breaker_threshold: threshold,
+            breaker_cooldown: Duration::from_secs(3600),
+            ..RegistryConfig::default()
+        };
+        let reg = Registry::new(
+            vec![ModelSpec { name: "m".to_string(), artifact: artifact(1.0), source: None }],
+            cfg,
+        )
+        .unwrap();
+        reg.get("m").unwrap()
+    }
+
+    /// Holdout targets equal to a given artifact's own predictions, so
+    /// that artifact gates at RMSE 0 against them.
+    fn gate_matching(art: &ModelArtifact, tolerance: f64) -> HoldoutGate {
+        let queries = Matrix::from_fn(8, 3, |i, j| ((i * 3 + j) as f64 * 0.21).cos());
+        let targets = Predictor::new(art).predict_batch(&queries).unwrap();
+        HoldoutGate::new(queries, targets, tolerance).unwrap()
+    }
+
+    fn tmp(tag: &str) -> PathBuf {
+        std::env::temp_dir()
+            .join(format!("bless-lifecycle-{tag}-{}.bin", std::process::id()))
+    }
+
+    fn cleanup(path: &PathBuf) {
+        std::fs::remove_file(path).ok();
+        std::fs::remove_file(format!("{}.prev", path.display())).ok();
+        if let Some(dir) = path.parent() {
+            let stem = path.file_name().unwrap().to_string_lossy().to_string();
+            if let Ok(entries) = std::fs::read_dir(dir) {
+                for e in entries.flatten() {
+                    if e.file_name().to_string_lossy().starts_with(&(stem.clone() + ".rejected")) {
+                        std::fs::remove_file(e.path()).ok();
+                    }
+                }
+            }
+        }
+    }
+
+    fn quick(path: &PathBuf) -> LifecycleConfig {
+        LifecycleConfig {
+            artifact_path: path.clone(),
+            probation: Duration::from_millis(60),
+            poll: Duration::from_millis(5),
+        }
+    }
+
+    #[test]
+    fn gate_scores_and_validates() {
+        let inc = artifact(1.0);
+        let gate = gate_matching(&inc, 1e-9);
+        let inc_pred = Predictor::new(&inc);
+        // identical candidate: rmse 0 on both sides, passes
+        let d = gate.evaluate(&inc_pred, &Predictor::new(&artifact(1.0))).unwrap();
+        assert!(d.pass, "{d:?}");
+        assert!(d.candidate_rmse < 1e-12);
+        assert!(!d.injected);
+        // a 5x-scaled candidate is much worse than tolerance allows
+        let d = gate.evaluate(&inc_pred, &Predictor::new(&artifact(5.0))).unwrap();
+        assert!(!d.pass, "{d:?}");
+        assert!(d.candidate_rmse > d.incumbent_rmse);
+        // bad construction
+        assert!(HoldoutGate::new(Matrix::zeros(0, 3), vec![], 0.1).is_err());
+        assert!(HoldoutGate::new(Matrix::zeros(2, 3), vec![0.0], 0.1).is_err());
+        assert!(HoldoutGate::new(Matrix::zeros(1, 3), vec![0.0], -1.0).is_err());
+        assert!(HoldoutGate::new(Matrix::zeros(1, 3), vec![0.0], f64::NAN).is_err());
+    }
+
+    #[test]
+    fn promotion_swaps_persists_and_survives_probation() {
+        let entry = entry_with(0);
+        let incumbent = artifact(1.0);
+        let better = artifact(2.0);
+        // targets match the *candidate*: the incumbent gates worse
+        let gate = gate_matching(&better, 1e-9);
+        let path = tmp("promote");
+        let cfg = quick(&path);
+        let stop = AtomicBool::new(false);
+
+        let q = [0.1, -0.2, 0.3];
+        let want = Predictor::new(&better).predict_one(&q).unwrap();
+        let outcome = run_cycle(
+            &entry,
+            &incumbent,
+            || Ok(artifact(2.0)),
+            &gate,
+            &cfg,
+            &stop,
+        );
+        match outcome {
+            CycleOutcome::Promoted { ref decision, .. } => {
+                assert!(decision.candidate_rmse <= decision.incumbent_rmse);
+            }
+            other => panic!("expected promotion, got {other:?}"),
+        }
+        assert_eq!(entry.version(), 2, "promotion must swap the entry");
+        assert_eq!(entry.stats.promotions.load(Ordering::Relaxed), 1);
+        assert_eq!(entry.stats.rollbacks.load(Ordering::Relaxed), 0);
+        let got = entry.predictor().predict_one(&q).unwrap();
+        assert_eq!(got.to_bits(), want.to_bits(), "candidate must be serving");
+        // artifact_path now holds the candidate, .prev the incumbent
+        assert_eq!(ModelArtifact::load(&path).unwrap().alpha, better.alpha);
+        let prev = PathBuf::from(format!("{}.prev", path.display()));
+        assert_eq!(ModelArtifact::load(&prev).unwrap().alpha, incumbent.alpha);
+        cleanup(&path);
+    }
+
+    #[test]
+    fn gate_rejection_quarantines_and_keeps_incumbent() {
+        let entry = entry_with(0);
+        let incumbent = artifact(1.0);
+        let gate = gate_matching(&incumbent, 1e-9);
+        let path = tmp("reject");
+        let cfg = quick(&path);
+        let stop = AtomicBool::new(false);
+
+        let outcome =
+            run_cycle(&entry, &incumbent, || Ok(artifact(5.0)), &gate, &cfg, &stop);
+        let quarantined = match outcome {
+            CycleOutcome::GateRejected { quarantined_to, decision } => {
+                assert!(!decision.pass);
+                quarantined_to.expect("quarantine file must be written")
+            }
+            other => panic!("expected rejection, got {other:?}"),
+        };
+        assert_eq!(entry.version(), 1, "a rejected candidate must never swap in");
+        assert_eq!(entry.stats.promotions.load(Ordering::Relaxed), 0);
+        assert!(!path.exists(), "artifact_path must be untouched by a rejection");
+        // the quarantined artifact is intact for post-mortem
+        assert_eq!(ModelArtifact::load(&quarantined).unwrap().alpha, artifact(5.0).alpha);
+        std::fs::remove_file(&quarantined).ok();
+        cleanup(&path);
+    }
+
+    #[test]
+    fn train_panic_and_train_error_leave_incumbent_serving() {
+        let entry = entry_with(0);
+        let incumbent = artifact(1.0);
+        let gate = gate_matching(&incumbent, 1e-9);
+        let path = tmp("panic");
+        let cfg = quick(&path);
+        let stop = AtomicBool::new(false);
+
+        let outcome = run_cycle(
+            &entry,
+            &incumbent,
+            || panic!("synthetic trainer crash"),
+            &gate,
+            &cfg,
+            &stop,
+        );
+        match outcome {
+            CycleOutcome::TrainFailed { reason } => {
+                assert!(reason.contains("synthetic trainer crash"), "got {reason}");
+            }
+            other => panic!("expected TrainFailed, got {other:?}"),
+        }
+        let outcome = run_cycle(
+            &entry,
+            &incumbent,
+            || anyhow::bail!("no data this cycle"),
+            &gate,
+            &cfg,
+            &stop,
+        );
+        assert!(matches!(outcome, CycleOutcome::TrainFailed { .. }));
+        // a candidate with the wrong dimension is refused up front
+        let wrong_d = ModelArtifact {
+            sigma: 1.5,
+            centers: Matrix::from_fn(5, 4, |i, j| (i + j) as f64),
+            alpha: vec![0.1; 5],
+            trained_n: 5,
+            dataset: "unit".to_string(),
+        };
+        let outcome = run_cycle(&entry, &incumbent, || Ok(wrong_d), &gate, &cfg, &stop);
+        match outcome {
+            CycleOutcome::TrainFailed { reason } => {
+                assert!(reason.contains("dimension"), "got {reason}");
+            }
+            other => panic!("expected TrainFailed, got {other:?}"),
+        }
+        assert_eq!(entry.version(), 1, "incumbent untouched through all three failures");
+        cleanup(&path);
+    }
+
+    #[test]
+    fn breaker_trip_in_probation_rolls_back() {
+        let entry = entry_with(2);
+        let incumbent = artifact(1.0);
+        let better = artifact(2.0);
+        let gate = gate_matching(&better, 1e-9);
+        let path = tmp("rollback");
+        let cfg = LifecycleConfig {
+            artifact_path: path.clone(),
+            probation: Duration::from_secs(10), // the trip ends it early
+            poll: Duration::from_millis(2),
+        };
+        let stop = AtomicBool::new(false);
+
+        // trip the breaker shortly after the promotion lands
+        let trip_entry = Arc::clone(&entry);
+        let tripper = std::thread::spawn(move || {
+            let t0 = Instant::now();
+            while trip_entry.version() < 2 {
+                assert!(t0.elapsed() < Duration::from_secs(10), "promotion never landed");
+                std::thread::sleep(Duration::from_millis(2));
+            }
+            trip_entry.breaker.record_failure();
+            trip_entry.breaker.record_failure(); // threshold 2 → trip
+        });
+
+        let q = [0.1, -0.2, 0.3];
+        let want = Predictor::new(&incumbent).predict_one(&q).unwrap();
+        let outcome =
+            run_cycle(&entry, &incumbent, || Ok(artifact(2.0)), &gate, &cfg, &stop);
+        tripper.join().unwrap();
+        match outcome {
+            CycleOutcome::RolledBack { trips, .. } => assert!(trips >= 1),
+            other => panic!("expected rollback, got {other:?}"),
+        }
+        assert_eq!(entry.version(), 3, "swap in + swap back");
+        assert_eq!(entry.stats.promotions.load(Ordering::Relaxed), 1);
+        assert_eq!(entry.stats.rollbacks.load(Ordering::Relaxed), 1);
+        assert!(!entry.breaker.is_open(), "rollback must reset the breaker");
+        let got = entry.predictor().predict_one(&q).unwrap();
+        assert_eq!(got.to_bits(), want.to_bits(), "incumbent must be serving again");
+        // artifact_path was restored to the incumbent for restart safety
+        assert_eq!(ModelArtifact::load(&path).unwrap().alpha, incumbent.alpha);
+        cleanup(&path);
+    }
+
+    #[test]
+    fn scheduler_runs_cycles_and_stops_cleanly() {
+        let entry = entry_with(0);
+        let initial = artifact(1.0);
+        // every candidate matches the holdout targets exactly, so each
+        // cycle promotes and the version keeps climbing
+        let better = artifact(2.0);
+        let gate = gate_matching(&better, 1e-9);
+        let path = tmp("sched");
+        let cfg = LifecycleConfig {
+            artifact_path: path.clone(),
+            probation: Duration::from_millis(5),
+            poll: Duration::from_millis(1),
+        };
+        let calls = Arc::new(AtomicU64::new(0));
+        let calls2 = Arc::clone(&calls);
+        let sched = RetrainScheduler::start(
+            Arc::clone(&entry),
+            initial,
+            Duration::from_millis(20),
+            move |_cycle| {
+                calls2.fetch_add(1, Ordering::Relaxed);
+                Ok(artifact(2.0))
+            },
+            gate,
+            cfg,
+        );
+        let t0 = Instant::now();
+        while entry.stats.promotions.load(Ordering::Relaxed) < 2 {
+            assert!(t0.elapsed() < Duration::from_secs(30), "scheduler never promoted twice");
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        sched.stop();
+        let after = calls.load(Ordering::Relaxed);
+        assert!(after >= 2, "trainer must have run, got {after}");
+        std::thread::sleep(Duration::from_millis(60));
+        assert_eq!(calls.load(Ordering::Relaxed), after, "stop must end the loop");
+        cleanup(&path);
+    }
+}

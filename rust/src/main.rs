@@ -12,9 +12,10 @@
 //! repro table1 [--sizes ...] [--lambda 1e-3]
 //! repro bless  [--n 4000] [--lambda 1e-4] [--method bless|bless-r|...]
 //! repro train   [--n 8000] [--dataset susy|higgs] [--save model.bin]
+//!               [--checkpoint fit.ckpt [--checkpoint-every 2] [--resume]]
 //! repro predict --model model.bin [--query "x1,x2,..."] [--queries file.csv]
 //! repro serve   --models susy=a.bin,higgs=b.bin [--port 7878] [--workers 2]
-//!               [--max-batch 64] [--max-queue 1024]
+//!               [--max-batch 64] [--max-queue 1024] [--retrain-every 60]
 //! repro convert --in model.json --out model.bin   # JSON ↔ binary
 //! repro info                         # runtime / artifact diagnostics
 //! ```
@@ -26,7 +27,10 @@ use bless::coordinator::{
     Table1Config,
 };
 use bless::data::{higgs_like, susy_like};
-use bless::kernels::Gaussian;
+use bless::falkon::{CheckpointSpec, Falkon, FitOptions};
+use bless::kernels::{Gaussian, NativeEngine};
+use bless::leverage::WeightedSet;
+use bless::lifecycle::{HoldoutGate, LifecycleConfig, RetrainScheduler};
 use bless::rng::Rng;
 use bless::serve::{Format, ModelArtifact, ModelSpec, Predictor, ServeConfig};
 use bless::util::cli::Args;
@@ -116,6 +120,13 @@ train flags:   --dataset susy|higgs --lambda-bless --lambda-falkon --iters --sav
                levels, preconditioner phases and CG iterations, plus
                counters; observation only — results stay bit-identical)
                --verbose (per-iteration CG residual table + panel traffic)
+               --checkpoint PATH [--checkpoint-every K] [--resume]
+               (crash-tolerant fits: the full CG state lands in a
+               BLESSCKPT file every K iterations via atomic rename;
+               --resume continues bit-identically where a killed run
+               stopped — damage or a problem mismatch cold-starts)
+               --tol T (CG early-stop on the relative residual; 0 = run
+               all --iters, the paper-faithful fixed-iteration regime)
 serve flags:   --host --port --workers --max-batch --linger-us --cache
                --cache-quant --max-queue (0 = unbounded; default 1024)
                --threads (shared compute pool for all models' batch GEMMs;
@@ -133,6 +144,17 @@ serve flags:   --host --port --workers --max-batch --linger-us --cache
                probe; default 1000)
                --stats-file PATH (persist per-model counters + histograms
                on shutdown, restore on start)
+               --stats-flush-secs N (also flush that snapshot every N
+               seconds while serving; requires --stats-file)
+               --retrain-every SECS (continuous-training lifecycle: refit
+               on drifting synthetic labels in the background, gate each
+               candidate on a fixed holdout RMSE, promote or quarantine,
+               and auto-rollback a promotion whose breaker trips inside
+               the probation window; needs exactly one disk-backed
+               --model — knobs: --retrain-n 2000 --retrain-centers 100
+               --retrain-iters 40 --retrain-tol 1e-6 --retrain-lambda
+               1e-5 --drift 0.02 --gate-tolerance 0.05
+               --probation-secs 5)
                --faults \"conn.delay:p=0.05,ms=200;worker.panic:p=0.01\"
                (seeded fault injection for chaos testing; also the
                BLESS_FAULTS env var — the flag wins; add seed=N to the
@@ -412,7 +434,26 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
         plan.cached_bytes as f64 / (1 << 20) as f64,
         plan.budget_bytes as f64 / (1 << 20) as f64
     );
-    let model = solver.fit(&train.y, iters, None)?;
+    // --checkpoint PATH [--checkpoint-every K] [--resume]: crash-tolerant
+    // fits. The complete CG state lands in a BLESSCKPT file every K
+    // iterations (atomic rename), and --resume picks up bit-identically
+    // where a killed run left off; a damaged or mismatched checkpoint
+    // degrades to a cold start. --tol adds an early residual stop
+    // (0 = run all --iters, the paper-faithful fixed-iteration regime).
+    let checkpoint = args.get("checkpoint").map(|p| CheckpointSpec {
+        path: p.into(),
+        every: args.get_usize("checkpoint-every", 1),
+        resume: args.has_flag("resume"),
+    });
+    if args.has_flag("resume") && checkpoint.is_none() {
+        anyhow::bail!("--resume needs --checkpoint <path>");
+    }
+    let model = solver.fit_opts(
+        &train.y,
+        iters,
+        None,
+        FitOptions { tol: args.get_f64("tol", 0.0), warm_start: None, checkpoint },
+    )?;
     let test_auc = bless::data::auc(&model.predict(eng.as_dyn(), &test.x), &test.y);
     println!(
         "FALKON: M={} λ_falkon={lambda_falkon:.1e} {iters} iters | test AUC {}",
@@ -601,10 +642,36 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     if let Some(path) = args.get("stats-file") {
         builder = builder.stats_file(path);
     }
+    // --stats-flush-secs N: flush the same snapshot every N seconds
+    // while serving (needs --stats-file), bounding what a hard kill
+    // can lose to one flush interval.
+    let flush_secs = args.get_f64("stats-flush-secs", 0.0);
+    if flush_secs > 0.0 {
+        builder = builder.stats_flush(Some(std::time::Duration::from_secs_f64(flush_secs)));
+    }
     if let Some(addr) = metrics_addr {
         builder = builder.metrics_addr(addr);
     }
     let cfg = builder.build()?;
+    // --retrain-every SECS: the continuous-training lifecycle. Capture
+    // the incumbent artifact + its disk path before the registry takes
+    // ownership of the specs; the scheduler itself starts after the
+    // server is listening.
+    let retrain_secs = args.get_f64("retrain-every", 0.0);
+    let lifecycle_seed = if retrain_secs > 0.0 {
+        anyhow::ensure!(
+            specs.len() == 1,
+            "--retrain-every drives exactly one served model (got {})",
+            specs.len()
+        );
+        let spec = &specs[0];
+        let path = spec.source.clone().ok_or_else(|| {
+            anyhow::anyhow!("--retrain-every needs a disk-backed model (--model <path>)")
+        })?;
+        Some((spec.name.clone(), spec.artifact.clone(), path))
+    } else {
+        None
+    };
     for spec in &specs {
         println!(
             "model {:?}: M={} d={} ({})",
@@ -635,9 +702,104 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     if let Some(m) = handle.metrics_addr() {
         println!("metrics: http://{m}/metrics (also /healthz, /varz)");
     }
+    let scheduler = match lifecycle_seed {
+        Some((name, incumbent, path)) => {
+            Some(start_retrain(args, &handle, name, incumbent, path, retrain_secs)?)
+        }
+        None => None,
+    };
     handle.join();
+    if let Some(s) = scheduler {
+        s.stop();
+    }
     println!("server stopped");
     Ok(())
+}
+
+/// Wire the continuous-training lifecycle onto a running server: a
+/// background [`RetrainScheduler`] refits on deterministically drifting
+/// SUSY-like labels (warm-started from the previous cycle's `α`), gates
+/// every candidate on a fixed holdout split, promotes winners into the
+/// live registry entry (persisting to the served artifact path) and
+/// rolls back automatically if a fresh promotion trips the breaker.
+fn start_retrain(
+    args: &Args,
+    handle: &bless::serve::ServerHandle,
+    name: String,
+    incumbent: ModelArtifact,
+    artifact_path: std::path::PathBuf,
+    every_secs: f64,
+) -> anyhow::Result<RetrainScheduler> {
+    let entry = handle
+        .entry(&name)
+        .ok_or_else(|| anyhow::anyhow!("model {name:?} not found in the registry"))?;
+    let n = args.get_usize("retrain-n", 2_000);
+    let seed = args.get_u64("seed", 0);
+    let iters = args.get_usize("retrain-iters", 40);
+    let tol = args.get_f64("retrain-tol", 1e-6);
+    let centers_m = args.get_usize("retrain-centers", 100);
+    let lambda = args.get_f64("retrain-lambda", 1e-5);
+    let drift = args.get_f64("drift", 0.02);
+    let gate_tol = args.get_f64("gate-tolerance", 0.05);
+    let probation = args.get_f64("probation-secs", 5.0);
+
+    let mut rng = Rng::seeded(seed);
+    let ds = susy_like(n, &mut rng);
+    let (train, holdout) = ds.split(0.25, &mut rng);
+    anyhow::ensure!(
+        train.d() == entry.dim(),
+        "retrain demo generates d={} queries but model {:?} serves d={}",
+        train.d(),
+        name,
+        entry.dim()
+    );
+    let gate = HoldoutGate::new(holdout.x.clone(), holdout.y.clone(), gate_tol)?;
+
+    // fixed centers across cycles keep α-vectors comparable, so every
+    // refit after the first warm-starts from the previous coefficients
+    let centers = Rng::seeded(seed ^ 0x9e37_79b9)
+        .sample_without_replacement(train.n(), centers_m.min(train.n()));
+    let m_actual = centers.len();
+    let engine = NativeEngine::new(train.x.clone(), Gaussian::new(incumbent.sigma));
+    let base_y = train.y.clone();
+    let model_name = name.clone();
+    let mut warm: Option<Vec<f64>> = None;
+    let trainer = move |cycle: u64| -> anyhow::Result<ModelArtifact> {
+        // deterministic label drift: each cycle shifts the target surface
+        let y: Vec<f64> = base_y
+            .iter()
+            .enumerate()
+            .map(|(i, v)| v + drift * (0.1 * i as f64 + 0.37 * cycle as f64).sin())
+            .collect();
+        let set = WeightedSet::uniform(centers.clone(), lambda);
+        let solver = Falkon::new(&engine, &set, lambda)?;
+        let model = match warm.as_deref() {
+            Some(alpha) if alpha.len() == solver.m() => solver.refit(&y, iters, tol, alpha)?,
+            _ => solver.fit_opts(&y, iters, None, FitOptions { tol, ..Default::default() })?,
+        };
+        println!(
+            "retrain cycle {cycle} ({model_name}): {} CG iterations ({})",
+            model.iterations.len(),
+            if warm.is_some() { "warm" } else { "cold" }
+        );
+        warm = Some(model.alpha.clone());
+        ModelArtifact::from_fitted(&model, &engine, "susy-like-drift")
+    };
+
+    let mut cfg = LifecycleConfig::new(artifact_path);
+    cfg.probation = std::time::Duration::from_secs_f64(probation);
+    println!(
+        "lifecycle: retraining {name:?} every {every_secs}s (n={n} M={m_actual} drift={drift} \
+         gate-tol={gate_tol} probation={probation}s)"
+    );
+    Ok(RetrainScheduler::start(
+        entry,
+        incumbent,
+        std::time::Duration::from_secs_f64(every_secs),
+        trainer,
+        gate,
+        cfg,
+    ))
 }
 
 /// `repro convert`: re-encode a model artifact between JSON and binary

@@ -59,8 +59,10 @@
 //! buffered without bound — clients should back off and retry.
 //! [`Client::predict_with_retry`] packages that loop: jittered
 //! exponential backoff under a [`RetryPolicy`], retrying the transient
-//! codes (`overloaded`, `deadline_exceeded`) and surfacing a typed
-//! [`server::RetryExhausted`] when the budget runs out.
+//! codes (`overloaded` and `deadline_exceeded` on the fast ladder,
+//! `quarantined` on a slower breaker-cooldown-aware one) and surfacing
+//! a typed [`server::RetryExhausted`] — carrying the exhausting code —
+//! when the budget runs out.
 //!
 //! ## Robustness
 //!
@@ -84,8 +86,9 @@
 //!   leaves a torn file; truncated or bit-flipped artifacts load as
 //!   clean typed errors (the checksum catches them).
 //! * **Stats continuity** — `ServeConfig::stats_file` persists
-//!   per-model counters and histograms across restarts
-//!   ([`stats_io`]).
+//!   per-model counters and histograms across restarts ([`stats_io`]);
+//!   `ServeConfig::stats_flush` flushes the same snapshot periodically
+//!   while serving, bounding what a hard kill can lose.
 //!
 //! ## Observability
 //!

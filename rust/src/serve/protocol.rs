@@ -457,6 +457,12 @@ pub struct StatsSnapshot {
     pub worker_panics: u64,
     /// Supervised worker respawns after a panic.
     pub worker_respawns: u64,
+    /// Retrained candidates promoted into this entry after passing the
+    /// holdout gate (lifecycle tier; summed in the aggregate view).
+    pub promotions: u64,
+    /// Promotions undone because the breaker tripped inside the
+    /// probation window — the previous artifact was swapped back.
+    pub rollbacks: u64,
     /// Total predict latency in microseconds (enqueue → reply).
     pub latency_us: u64,
     /// Median predict latency in microseconds, from the server-side
@@ -508,6 +514,8 @@ impl StatsSnapshot {
         self.quarantined += other.quarantined;
         self.worker_panics += other.worker_panics;
         self.worker_respawns += other.worker_respawns;
+        self.promotions += other.promotions;
+        self.rollbacks += other.rollbacks;
         self.latency_us += other.latency_us;
     }
 
@@ -531,6 +539,8 @@ impl StatsSnapshot {
         obj.insert("quarantined".to_string(), Json::Num(self.quarantined as f64));
         obj.insert("worker_panics".to_string(), Json::Num(self.worker_panics as f64));
         obj.insert("worker_respawns".to_string(), Json::Num(self.worker_respawns as f64));
+        obj.insert("promotions".to_string(), Json::Num(self.promotions as f64));
+        obj.insert("rollbacks".to_string(), Json::Num(self.rollbacks as f64));
         obj.insert("latency_us".to_string(), Json::Num(self.latency_us as f64));
         obj.insert("mean_latency_us".to_string(), Json::Num(self.mean_latency_us()));
         obj.insert("latency_p50_us".to_string(), Json::Num(self.latency_p50_us));
@@ -560,6 +570,8 @@ impl StatsSnapshot {
             quarantined: field("quarantined"),
             worker_panics: field("worker_panics"),
             worker_respawns: field("worker_respawns"),
+            promotions: field("promotions"),
+            rollbacks: field("rollbacks"),
             latency_us: field("latency_us"),
             latency_p50_us: ffield("latency_p50_us"),
             latency_p95_us: ffield("latency_p95_us"),
@@ -764,6 +776,8 @@ mod tests {
             quarantined: 5,
             worker_panics: 2,
             worker_respawns: 2,
+            promotions: 3,
+            rollbacks: 1,
             latency_us: 12_000,
             latency_p50_us: 104.0,
             latency_p95_us: 240.5,

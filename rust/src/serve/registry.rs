@@ -66,6 +66,11 @@ pub struct ModelStats {
     /// Supervised worker respawns (the pool never shrinks, so this
     /// tracks `worker_panics`).
     pub worker_respawns: AtomicU64,
+    /// Lifecycle promotions: gate-passing candidates swapped in.
+    pub promotions: AtomicU64,
+    /// Lifecycle rollbacks: promotions undone inside the probation
+    /// window after the breaker tripped.
+    pub rollbacks: AtomicU64,
     /// Per-request predict latency in microseconds. The histogram's
     /// exact running sum is what the wire protocol still reports as
     /// `latency_us`, so pre-histogram clients keep working.
@@ -92,6 +97,8 @@ impl ModelStats {
             quarantined: self.quarantined.load(Ordering::Relaxed),
             worker_panics: self.worker_panics.load(Ordering::Relaxed),
             worker_respawns: self.worker_respawns.load(Ordering::Relaxed),
+            promotions: self.promotions.load(Ordering::Relaxed),
+            rollbacks: self.rollbacks.load(Ordering::Relaxed),
             latency_us: lat.sum,
             latency_p50_us: lat.percentile(0.50),
             latency_p95_us: lat.percentile(0.95),
@@ -117,6 +124,8 @@ impl ModelStats {
         self.quarantined.fetch_add(s.quarantined, Ordering::Relaxed);
         self.worker_panics.fetch_add(s.worker_panics, Ordering::Relaxed);
         self.worker_respawns.fetch_add(s.worker_respawns, Ordering::Relaxed);
+        self.promotions.fetch_add(s.promotions, Ordering::Relaxed);
+        self.rollbacks.fetch_add(s.rollbacks, Ordering::Relaxed);
     }
 }
 
@@ -297,6 +306,16 @@ impl Breaker {
     pub fn trips(&self) -> u64 {
         self.trips.load(Ordering::Relaxed)
     }
+
+    /// Force the breaker closed and clear the failure streak — called
+    /// when a *new* model is promoted into this entry: the failures
+    /// belonged to the replaced predictor, and the candidate earned its
+    /// admission through the holdout gate. The trip count is monotone
+    /// history and is deliberately preserved.
+    pub fn reset(&self) {
+        self.consecutive.store(0, Ordering::Release);
+        self.state.store(BREAKER_CLOSED, Ordering::Release);
+    }
 }
 
 /// Cache-lookup outcome: either a served score, or the key + model
@@ -454,6 +473,17 @@ impl ModelEntry {
         };
         let artifact = ModelArtifact::load(&target)?;
         let (m, d) = (artifact.m(), artifact.d());
+        // reject a dimension change *before* the swap: in-flight and
+        // queued requests were validated against the current input dim,
+        // and silently changing it mid-stream would turn every one of
+        // them into a bad_request. The incumbent keeps serving.
+        anyhow::ensure!(
+            d == self.dim(),
+            "refusing reload of model {:?}: artifact input dimension {} != serving dimension {}",
+            self.name,
+            d,
+            self.dim()
+        );
         self.swap(&artifact);
         *source = Some(target);
         Ok((m, d, self.version()))
@@ -766,6 +796,49 @@ mod tests {
         let (_, _, version) = entry.reload(None).unwrap();
         assert_eq!(version, 3);
         std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn reload_rejects_dimension_mismatch_before_swap() {
+        let reg = Registry::new(vec![spec("a", 1.0)], RegistryConfig::default()).unwrap();
+        let entry = reg.get("a").unwrap();
+        let q = [0.1, -0.2, 0.3];
+        let before = entry.predictor().predict_one(&q).unwrap();
+
+        let path = std::env::temp_dir()
+            .join(format!("bless-registry-dim-mismatch-{}.bin", std::process::id()));
+        artifact(2.0, 4).save(&path).unwrap();
+        let err = entry.reload(Some(path.as_path())).unwrap_err().to_string();
+        assert!(err.contains("dimension 4"), "got {err}");
+        std::fs::remove_file(&path).ok();
+
+        // the swap never happened: version, dim and predictions intact
+        assert_eq!(entry.version(), 1);
+        assert_eq!(entry.dim(), 3);
+        assert_eq!(entry.stats.reloads.load(Ordering::Relaxed), 0);
+        let after = entry.predictor().predict_one(&q).unwrap();
+        assert_eq!(after.to_bits(), before.to_bits(), "incumbent must be untouched");
+    }
+
+    #[test]
+    fn promotion_reset_closes_an_open_breaker_and_keeps_history() {
+        let b = Breaker::new(2, Duration::from_secs(3600));
+        b.record_failure();
+        b.record_failure();
+        assert!(b.is_open());
+        assert_eq!(b.trips(), 1);
+
+        // promotion: breaker force-closed, trip history preserved
+        b.reset();
+        assert!(!b.is_open(), "reset must close the breaker immediately");
+        assert_eq!(b.trips(), 1, "trip count is history, not state");
+
+        // and the failure streak restarted from zero
+        b.record_failure();
+        assert!(!b.is_open(), "one failure after reset is below threshold");
+        b.record_failure();
+        assert!(b.is_open(), "breaker still functions after reset");
+        assert_eq!(b.trips(), 2);
     }
 
     #[test]

@@ -53,7 +53,9 @@
 //!   [`ServeConfig::breaker_cooldown`].
 //! * **Crash-safe stats** — with [`ServeConfig::stats_file`] set,
 //!   per-model counters and histograms persist across restarts
-//!   ([`crate::serve::stats_io`]).
+//!   ([`crate::serve::stats_io`]); [`ServeConfig::stats_flush`] also
+//!   flushes them periodically (atomic replace), so even a SIGKILL
+//!   loses at most one interval of history.
 
 use crate::linalg::Matrix;
 use crate::obs::{escape_label, serve_http, HttpHandle, MetricsProvider};
@@ -144,6 +146,13 @@ pub struct ServeConfig {
     /// Persist per-model stats here on graceful shutdown and fold them
     /// back in at start ([`crate::serve::stats_io`]). `None` disables.
     pub stats_file: Option<PathBuf>,
+    /// Additionally flush the stats file on this period while serving
+    /// (`serve --stats-flush-secs`), so a SIGKILL loses at most one
+    /// interval of counter history instead of the whole run. Each flush
+    /// is an [`crate::util::fsio::atomic_write`] — a crash mid-flush
+    /// leaves the previous snapshot intact. Requires `stats_file`;
+    /// `None` (the default) keeps the shutdown-only behaviour.
+    pub stats_flush: Option<Duration>,
 }
 
 impl Default for ServeConfig {
@@ -163,6 +172,7 @@ impl Default for ServeConfig {
             breaker_threshold: 8,
             breaker_cooldown: Duration::from_secs(1),
             stats_file: None,
+            stats_flush: None,
         }
     }
 }
@@ -283,6 +293,12 @@ impl ServeConfigBuilder {
         self
     }
 
+    /// Periodic stats-file flush interval (None = shutdown-only).
+    pub fn stats_flush(mut self, d: Option<Duration>) -> Self {
+        self.cfg.stats_flush = d;
+        self
+    }
+
     /// Validate the combination and hand back the config.
     pub fn build(self) -> anyhow::Result<ServeConfig> {
         let cfg = self.cfg;
@@ -307,6 +323,13 @@ impl ServeConfigBuilder {
             cfg.breaker_threshold == 0 || !cfg.breaker_cooldown.is_zero(),
             "breaker_cooldown must be positive when the breaker is enabled"
         );
+        if let Some(d) = cfg.stats_flush {
+            anyhow::ensure!(!d.is_zero(), "stats_flush must be positive when set");
+            anyhow::ensure!(
+                cfg.stats_file.is_some(),
+                "stats_flush requires a stats_file to flush to"
+            );
+        }
         Ok(cfg)
     }
 }
@@ -365,7 +388,7 @@ impl MetricsProvider for MetricsBridge {
         let mut out = String::new();
         let entries = self.shared.registry.entries();
         type StatGetter = fn(&ModelStats) -> u64;
-        let kinds: [(&str, StatGetter); 11] = [
+        let kinds: [(&str, StatGetter); 13] = [
             ("bless_serve_requests_total", |s| s.requests.load(Ordering::Relaxed)),
             ("bless_serve_batches_total", |s| s.batches.load(Ordering::Relaxed)),
             ("bless_serve_batched_total", |s| s.batched.load(Ordering::Relaxed)),
@@ -381,6 +404,8 @@ impl MetricsProvider for MetricsBridge {
             ("bless_serve_worker_respawns_total", |s| {
                 s.worker_respawns.load(Ordering::Relaxed)
             }),
+            ("bless_serve_promotions_total", |s| s.promotions.load(Ordering::Relaxed)),
+            ("bless_serve_rollbacks_total", |s| s.rollbacks.load(Ordering::Relaxed)),
         ];
         for (name, get) in kinds {
             let _ = writeln!(out, "# TYPE {name} counter");
@@ -452,6 +477,8 @@ impl MetricsProvider for MetricsBridge {
             o.insert("errors".to_string(), Json::Num(s.errors as f64));
             o.insert("shed".to_string(), Json::Num(s.shed as f64));
             o.insert("reloads".to_string(), Json::Num(s.reloads as f64));
+            o.insert("promotions".to_string(), Json::Num(s.promotions as f64));
+            o.insert("rollbacks".to_string(), Json::Num(s.rollbacks as f64));
             o.insert("latency_us".to_string(), Json::Num(s.latency_us as f64));
             o.insert("latency_p50_us".to_string(), Json::Num(s.latency_p50_us));
             o.insert("latency_p95_us".to_string(), Json::Num(s.latency_p95_us));
@@ -503,6 +530,9 @@ pub struct ServerHandle {
     shared: Arc<Shared>,
     accept: Option<JoinHandle<()>>,
     metrics: Option<HttpHandle>,
+    /// Periodic stats flusher ([`ServeConfig::stats_flush`]); exits on
+    /// the shutdown flag and is joined before the final stats save.
+    flusher: Option<JoinHandle<()>>,
     /// The pool width configured before this server applied
     /// [`ServeConfig::threads`]; restored when the handle goes away.
     prev_threads: Option<usize>,
@@ -537,6 +567,15 @@ impl ServerHandle {
         self.shared.registry.names()
     }
 
+    /// Handle to one model's live registry entry — the continuous-
+    /// training tier ([`crate::lifecycle`]) retrains against this:
+    /// promotion swaps its predictor, the probation watch reads its
+    /// breaker, and rollback swaps the retained artifact back, all while
+    /// the entry keeps serving.
+    pub fn entry(&self, name: &str) -> Option<Arc<ModelEntry>> {
+        self.shared.registry.get(name)
+    }
+
     /// Whether a shutdown has been requested (locally or over the wire).
     pub fn is_shut_down(&self) -> bool {
         self.shared.shutdown.load(Ordering::SeqCst)
@@ -564,6 +603,11 @@ impl ServerHandle {
         let drained: Vec<_> = psync::lock(&self.shared.workers).drain(..).collect();
         for w in drained {
             let _ = w.join();
+        }
+        // the flusher exits on the shutdown flag; join it before the
+        // final save so the two writers never interleave
+        if let Some(f) = self.flusher.take() {
+            let _ = f.join();
         }
         // workers are quiescent, so the snapshot is complete and stable;
         // atomic_write means a crash mid-save leaves the old file intact
@@ -664,12 +708,38 @@ pub fn start_registry(
         spawn_model_workers(&shared, &entry);
     }
 
+    // periodic stats flusher: sleeps in short slices so shutdown is
+    // never blocked behind a long interval, and each flush is an
+    // atomic_write — a kill between flushes loses at most one interval
+    let flusher = match (&cfg.stats_file, cfg.stats_flush) {
+        (Some(path), Some(every)) => {
+            let shared = Arc::clone(&shared);
+            let path = path.clone();
+            Some(std::thread::spawn(move || {
+                let tick = every.min(Duration::from_millis(50));
+                let mut since_flush = Duration::ZERO;
+                while !shared.shutdown.load(Ordering::SeqCst) {
+                    std::thread::sleep(tick);
+                    since_flush += tick;
+                    if since_flush >= every {
+                        since_flush = Duration::ZERO;
+                        if let Err(e) = crate::serve::stats_io::save(&path, &shared.registry) {
+                            eprintln!("warning: periodic stats flush failed: {e}");
+                        }
+                    }
+                }
+            }))
+        }
+        _ => None,
+    };
+
     let accept_shared = Arc::clone(&shared);
     let accept = std::thread::spawn(move || accept_loop(listener, &accept_shared));
     Ok(ServerHandle {
         shared,
         accept: Some(accept),
         metrics,
+        flusher,
         prev_threads,
         stats_file: cfg.stats_file.clone(),
     })
@@ -1156,10 +1226,17 @@ fn bump_latency(entry: &ModelEntry, t0: Instant) {
     }
 }
 
-/// Backoff policy for [`Client::predict_with_retry`]: transient
-/// (`overloaded`, `deadline_exceeded`) replies are retried after a
-/// jittered exponential delay, so a fleet of clients hitting a
-/// saturated queue spreads out instead of hammering it in lockstep.
+/// Backoff policy for [`Client::predict_with_retry`]: transient replies
+/// are retried after a jittered exponential delay, so a fleet of
+/// clients hitting a saturated queue spreads out instead of hammering
+/// it in lockstep. Two backoff classes:
+///
+/// * **fast** (`overloaded`, `deadline_exceeded`) — momentary pressure;
+///   the ladder starts at [`base`](Self::base).
+/// * **slow** (`quarantined`) — the model's circuit breaker is open and
+///   will not even probe until its cooldown elapses, so retrying on the
+///   fast ladder only burns attempts. The ladder is floored at
+///   [`quarantine_base`](Self::quarantine_base) instead.
 #[derive(Clone, Debug)]
 pub struct RetryPolicy {
     /// Retries after the first attempt (0 = plain `predict`).
@@ -1175,6 +1252,10 @@ pub struct RetryPolicy {
     /// spent, retrying stops even with `max_retries` left. `None` (the
     /// default) bounds by attempt count alone.
     pub budget: Option<Duration>,
+    /// Floor on the backoff delay after a `quarantined` reply — sized
+    /// to the server's breaker cooldown (default 250ms), since nothing
+    /// can succeed before the half-open probe is admitted.
+    pub quarantine_base: Duration,
 }
 
 impl Default for RetryPolicy {
@@ -1185,6 +1266,7 @@ impl Default for RetryPolicy {
             max_delay: Duration::from_millis(200),
             seed: 0x5eed,
             budget: None,
+            quarantine_base: Duration::from_millis(250),
         }
     }
 }
@@ -1201,19 +1283,33 @@ pub struct RetryExhausted {
     pub elapsed: Duration,
     /// The transient error from the final attempt.
     pub last_error: String,
+    /// The wire error code that exhausted the budget (`overloaded`,
+    /// `deadline_exceeded` or `quarantined`) — callers branch on this:
+    /// an exhausted `quarantined` means the model is sick, not busy.
+    pub code: String,
 }
 
 impl std::fmt::Display for RetryExhausted {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         write!(
             f,
-            "retry budget exhausted after {} attempts over {:?}: {}",
-            self.attempts, self.elapsed, self.last_error
+            "retry budget exhausted by [{}] after {} attempts over {:?}: {}",
+            self.code, self.attempts, self.elapsed, self.last_error
         )
     }
 }
 
 impl std::error::Error for RetryExhausted {}
+
+/// Extract the bracketed wire code from a client-side error string
+/// (`"server error [overloaded]: …"` → `"overloaded"`).
+fn error_code(message: &str) -> &str {
+    message
+        .split_once('[')
+        .and_then(|(_, rest)| rest.split_once(']'))
+        .map(|(code, _)| code)
+        .unwrap_or("unknown")
+}
 
 /// A minimal blocking client for the line protocol — used by the CLI,
 /// the integration tests and the `serve_roundtrip` example.
@@ -1276,10 +1372,15 @@ impl Client {
     }
 
     /// Like [`predict`](Self::predict) but retries transient replies —
-    /// `overloaded` sheds and `deadline_exceeded` misses — under
-    /// `policy` (jittered exponential backoff, optional wall-clock
-    /// budget). Hard errors return as-is; exhausting the retry budget
-    /// returns a typed [`RetryExhausted`] the caller can `downcast_ref`.
+    /// `overloaded` sheds, `deadline_exceeded` misses and `quarantined`
+    /// refusals — under `policy` (jittered exponential backoff, optional
+    /// wall-clock budget). A `quarantined` reply switches to the slow
+    /// backoff class ([`RetryPolicy::quarantine_base`]): the breaker
+    /// will not admit anything before its cooldown, so fast retries
+    /// would only burn the attempt budget. Hard errors return as-is;
+    /// exhausting the retry budget returns a typed [`RetryExhausted`]
+    /// (carrying the exhausting wire code) the caller can
+    /// `downcast_ref`.
     pub fn predict_with_retry(
         &mut self,
         id: u64,
@@ -1288,7 +1389,9 @@ impl Client {
     ) -> anyhow::Result<(f64, bool)> {
         fn transient(e: &anyhow::Error) -> bool {
             let s = e.to_string();
-            s.contains("[overloaded]") || s.contains("[deadline_exceeded]")
+            s.contains("[overloaded]")
+                || s.contains("[deadline_exceeded]")
+                || s.contains("[quarantined]")
         }
         let t0 = Instant::now();
         let mut rng = crate::rng::Rng::seeded(policy.seed ^ id);
@@ -1301,26 +1404,38 @@ impl Client {
                 Err(e) if transient(&e) => last_error = e.to_string(),
                 other => return other,
             }
+            let quarantined = last_error.contains("[quarantined]");
             // the budget is a wall-clock ceiling on the whole call, so
             // the backoff sleep must fit inside what remains of it —
             // and a spent budget ends the loop before sleeping at all
             let remaining = policy.budget.map(|b| b.saturating_sub(t0.elapsed()));
             if attempts > policy.max_retries || remaining == Some(Duration::ZERO) {
+                let code = error_code(&last_error).to_string();
                 return Err(anyhow::Error::new(RetryExhausted {
                     attempts,
                     elapsed: t0.elapsed(),
                     last_error,
+                    code,
                 }));
             }
+            // quarantine floors the ladder at the breaker-cooldown
+            // scale — and lifts the cap to match, since max_delay is
+            // usually tuned for the fast (overloaded) class
+            let cap = if quarantined {
+                delay = delay.max(policy.quarantine_base);
+                policy.max_delay.max(policy.quarantine_base)
+            } else {
+                policy.max_delay
+            };
             // "equal jitter": sleep a uniform fraction of
             // [delay/2, delay) so retry waves decohere
             let frac = 0.5 + 0.5 * (rng.below(1_000) as f64 / 1_000.0);
-            let mut sleep = delay.mul_f64(frac).min(policy.max_delay);
+            let mut sleep = delay.mul_f64(frac).min(cap);
             if let Some(r) = remaining {
                 sleep = sleep.min(r);
             }
             std::thread::sleep(sleep);
-            delay = (delay * 2).min(policy.max_delay);
+            delay = (delay * 2).min(cap);
         }
     }
 
@@ -1894,8 +2009,68 @@ mod tests {
             .expect("exhaustion must be the typed error");
         assert_eq!(typed.attempts, 3, "first try plus two retries");
         assert!(typed.last_error.contains("[overloaded]"), "got {}", typed.last_error);
+        assert_eq!(typed.code, "overloaded", "the exhausting code must be reported");
+        assert!(typed.to_string().contains("[overloaded]"), "got {typed}");
         blocker.join().unwrap();
         handle.shutdown();
+    }
+
+    #[test]
+    fn error_code_extracts_the_bracketed_wire_code() {
+        assert_eq!(error_code("server error [overloaded]: queue full"), "overloaded");
+        assert_eq!(error_code("server error [quarantined]: retry later"), "quarantined");
+        assert_eq!(error_code("no brackets here"), "unknown");
+        assert_eq!(error_code("half [open"), "unknown");
+    }
+
+    #[test]
+    fn periodic_flush_persists_stats_without_a_shutdown() {
+        let path = std::env::temp_dir()
+            .join(format!("bless-server-flush-{}.json", std::process::id()));
+        std::fs::remove_file(&path).ok();
+        let cfg = ServeConfig::builder()
+            .addr("127.0.0.1:0")
+            .workers(1)
+            .linger(Duration::from_millis(1))
+            .stats_file(&path)
+            .stats_flush(Some(Duration::from_millis(30)))
+            .build()
+            .unwrap();
+        // flush without a file to flush to is a config error
+        assert!(ServeConfig::builder()
+            .stats_flush(Some(Duration::from_millis(10)))
+            .build()
+            .is_err());
+        assert!(ServeConfig::builder()
+            .stats_file(&path)
+            .stats_flush(Some(Duration::ZERO))
+            .build()
+            .is_err());
+
+        let handle = start(tiny_artifact(), &cfg).unwrap();
+        let mut client = Client::connect(handle.addr()).unwrap();
+        client.predict(1, &[0.2, 0.1]).unwrap();
+        client.predict(2, &[0.4, -0.3]).unwrap();
+        // the file must appear while the server is still running
+        let t0 = Instant::now();
+        loop {
+            if path.exists() {
+                break;
+            }
+            assert!(t0.elapsed() < Duration::from_secs(10), "flusher never wrote");
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        // a restarted server sees the flushed counters even though this
+        // "previous" one never shut down gracefully (we drop it below
+        // only after the assertion, mimicking a kill)
+        handle.shutdown();
+        let restarted = start(tiny_artifact(), &cfg).unwrap();
+        assert!(
+            restarted.model_stats("default").unwrap().requests >= 2,
+            "flushed counters must survive"
+        );
+        restarted.shutdown();
+        std::fs::remove_file(&path).ok();
     }
 
     #[test]

@@ -12,6 +12,7 @@
 
 mod common;
 
+use bless::falkon::{ckpt, CgState};
 use bless::faults::{self, FaultPlan, FaultPoint, FaultRule};
 use bless::linalg::Matrix;
 use bless::serve::ModelArtifact;
@@ -167,6 +168,133 @@ fn injected_corruption_on_load_fails_cleanly_and_replays() {
         // disarmed, the untouched file loads fine — corruption happened
         // in memory, never on disk
         assert!(ModelArtifact::load(&path).is_ok());
+        std::fs::remove_dir_all(&dir).ok();
+    });
+}
+
+// ---- BLESSCKPT checkpoints -------------------------------------------
+//
+// The same damage classes, applied to the mid-fit CG checkpoint codec.
+// The contract differs in one way: a damaged *checkpoint* is not fatal —
+// `ckpt::load` degrades to `None` (cold start) with a stderr warning,
+// because the fit can always start over. It must still never panic,
+// hang, or hand back a wrong state.
+
+fn cg_state() -> CgState {
+    CgState {
+        x: (0..10).map(|i| (i as f64 * 0.31).sin()).collect(),
+        r: (0..10).map(|i| (i as f64 * 0.17).cos()).collect(),
+        p: (0..10).map(|i| i as f64 * 0.5 - 2.0).collect(),
+        iter: 6,
+        rs_old: 3.7e-4,
+    }
+}
+
+const FP: u64 = 0xC0FFEE;
+
+#[test]
+fn damaged_checkpoints_cold_start_instead_of_resuming() {
+    let _g = faults_lock().lock().unwrap_or_else(|e| e.into_inner());
+    with_timeout(60, || {
+        let dir = tmp_dir("ckpt-damage");
+        let path = dir.join("fit.ckpt");
+        ckpt::save(&path, &cg_state(), FP).unwrap();
+        let full = std::fs::read(&path).unwrap();
+        assert_eq!(ckpt::load(&path, FP), Some(cg_state()), "pristine checkpoint must resume");
+
+        // truncation at several depths, including cutting only the
+        // checksum trailer and leaving a single magic byte
+        for keep in [full.len() - 1, full.len() / 2, 16, 1] {
+            std::fs::write(&path, &full[..keep]).unwrap();
+            assert_eq!(ckpt::load(&path, FP), None, "truncated to {keep} bytes must cold-start");
+        }
+        // a single flipped bit anywhere — header, payload, trailer
+        for idx in [9, 30, full.len() / 2, full.len() - 1] {
+            let mut bytes = full.clone();
+            bytes[idx] ^= 0x20;
+            std::fs::write(&path, &bytes).unwrap();
+            assert_eq!(ckpt::load(&path, FP), None, "bit flip at byte {idx} must cold-start");
+        }
+        // zero length and wrong-codec magic (a model artifact is not a
+        // checkpoint, even though both carry FNV trailers)
+        std::fs::write(&path, b"").unwrap();
+        assert_eq!(ckpt::load(&path, FP), None);
+        artifact().save_as(&path, bless::serve::Format::Binary).unwrap();
+        assert_eq!(ckpt::load(&path, FP), None, "BLESSBIN bytes must not decode as BLESSCKPT");
+
+        // intact file, foreign fit: the fingerprint gate must refuse it
+        ckpt::save(&path, &cg_state(), FP).unwrap();
+        assert_eq!(ckpt::load(&path, FP ^ 1), None, "foreign fingerprint must cold-start");
+        std::fs::remove_dir_all(&dir).ok();
+    });
+}
+
+/// A crash between the checkpoint's temp-stage and rename leaves a stale
+/// `.tmp-…` file; resume must ignore it (missing destination → silent
+/// cold start) and the next save must still land atomically beside it.
+#[test]
+fn stale_checkpoint_temps_are_ignored_and_do_not_block_saves() {
+    let _g = faults_lock().lock().unwrap_or_else(|e| e.into_inner());
+    with_timeout(60, || {
+        let dir = tmp_dir("ckpt-rename");
+        let path = dir.join("fit.ckpt");
+        std::fs::write(dir.join(".fit.ckpt.tmp-4242-0"), b"torn half-written state").unwrap();
+        assert_eq!(ckpt::load(&path, FP), None, "only a stale temp present → cold start");
+
+        ckpt::save(&path, &cg_state(), FP).unwrap();
+        assert_eq!(ckpt::load(&path, FP), Some(cg_state()));
+
+        // re-save crash: destination keeps the previous complete bytes
+        let good = std::fs::read(&path).unwrap();
+        std::fs::write(dir.join(".fit.ckpt.tmp-4242-1"), &good[..good.len() / 3]).unwrap();
+        assert_eq!(std::fs::read(&path).unwrap(), good, "destination must be untouched");
+        assert_eq!(ckpt::load(&path, FP), Some(cg_state()));
+        std::fs::remove_dir_all(&dir).ok();
+    });
+}
+
+/// With `ckpt.corrupt` armed at p=1, every load of a good checkpoint
+/// sees mutilated bytes in memory and cold-starts cleanly; the same seed
+/// replays the same mutilations, and disarming restores the resume.
+#[test]
+fn injected_ckpt_corruption_cold_starts_and_replays() {
+    let _g = faults_lock().lock().unwrap_or_else(|e| e.into_inner());
+    with_timeout(60, || {
+        let dir = tmp_dir("ckpt-inject");
+        let path = dir.join("fit.ckpt");
+        ckpt::save(&path, &cg_state(), FP).unwrap();
+        let pristine = std::fs::read(&path).unwrap();
+
+        let plan = FaultPlan::seeded(0xC4A0)
+            .with(FaultPoint::CkptCorrupt, FaultRule { p: 1.0, ms: 0 });
+        faults::configure(Some(plan.clone()));
+        for i in 0..8 {
+            assert_eq!(ckpt::load(&path, FP), None, "corrupted load {i} must cold-start");
+        }
+        // determinism: re-arming the same seed mutilates the bytes the
+        // same way, call for call
+        faults::configure(Some(plan.clone()));
+        let first: Vec<Vec<u8>> = (0..4)
+            .map(|_| {
+                let mut b = pristine.clone();
+                faults::corrupt_checkpoint(&mut b);
+                b
+            })
+            .collect();
+        faults::configure(Some(plan));
+        let second: Vec<Vec<u8>> = (0..4)
+            .map(|_| {
+                let mut b = pristine.clone();
+                faults::corrupt_checkpoint(&mut b);
+                b
+            })
+            .collect();
+        assert_eq!(first, second, "ckpt.corrupt must replay deterministically");
+        assert!(first.iter().all(|b| *b != pristine), "armed at p=1, every load is damaged");
+        faults::configure(None);
+
+        // disarmed, the on-disk file was never touched — resume works
+        assert_eq!(ckpt::load(&path, FP), Some(cg_state()));
         std::fs::remove_dir_all(&dir).ok();
     });
 }

@@ -1,0 +1,460 @@
+//! Retrain chaos soak: the continuous-training lifecycle under seeded
+//! fault injection (ISSUE 10 acceptance).
+//!
+//! A live server keeps answering traffic while retrain cycles are being
+//! actively sabotaged — panicking trainers (`train.panic`), a gate
+//! forced to reject (`gate.fail`), checkpoints mutilated between read
+//! and decode (`ckpt.corrupt`) — and the lifecycle contract holds:
+//!
+//! * the incumbent never stops serving: every concurrent request
+//!   resolves to a finite score through every failed cycle, promotion
+//!   and swap;
+//! * the gate holds: a cycle that does not end in `Promoted` leaves the
+//!   entry's version, predictor and counters untouched;
+//! * a forced failure spike right after a promotion trips the breaker
+//!   inside the probation window and triggers automatic rollback to the
+//!   retained incumbent — in memory and on disk;
+//! * warm-started refits converge in ≤ 1/3 of a cold fit's CG
+//!   iterations at equal tolerance (written to `BENCH_retrain.json`
+//!   via `RETRAIN_BENCH_OUT` for CI upload).
+//!
+//! Fault plans are seeded, so every storm replays exactly. Tests
+//! serialize on a lock because the fault registry is process-global.
+
+mod common;
+
+use bless::data::susy_like;
+use bless::falkon::{CheckpointSpec, Falkon, FitOptions};
+use bless::faults::{self, FaultPlan, FaultPoint, FaultRule};
+use bless::kernels::{Gaussian, NativeEngine};
+use bless::leverage::WeightedSet;
+use bless::lifecycle::{run_cycle, CycleOutcome, HoldoutGate, LifecycleConfig};
+use bless::rng::Rng;
+use bless::serve::{self, Client, ModelArtifact, Predictor, RetryPolicy, ServeConfig};
+use common::with_timeout;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+use std::time::{Duration, Instant};
+
+/// The fault registry is process-global; tests must not overlap.
+fn faults_lock() -> &'static Mutex<()> {
+    static LOCK: OnceLock<Mutex<()>> = OnceLock::new();
+    LOCK.get_or_init(|| Mutex::new(()))
+}
+
+/// Disarms fault injection when dropped, so a panicking test cannot
+/// leave the registry armed for the next one.
+struct Disarm;
+impl Drop for Disarm {
+    fn drop(&mut self) {
+        faults::configure(None);
+    }
+}
+
+fn tmp_dir(tag: &str) -> std::path::PathBuf {
+    let d = std::env::temp_dir().join(format!("bless-lcsoak-{}-{tag}", std::process::id()));
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+fn bits(v: &[f64]) -> Vec<u64> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+/// Everything one retrain-soak world needs: a fitted incumbent on real
+/// SUSY-like data, its training engine + center set for refits, and a
+/// holdout gate cut from the same split.
+struct World {
+    engine: NativeEngine,
+    set: WeightedSet,
+    train_y: Vec<f64>,
+    incumbent: ModelArtifact,
+    gate: HoldoutGate,
+    dim: usize,
+}
+
+fn build_world() -> World {
+    let lambda = 1e-3;
+    let mut rng = Rng::seeded(42);
+    let ds = susy_like(600, &mut rng);
+    let (train, holdout) = ds.split(0.25, &mut rng);
+    let centers = Rng::seeded(7).sample_without_replacement(train.n(), 60);
+    let set = WeightedSet::uniform(centers, lambda);
+    let dim = train.d();
+    let engine = NativeEngine::new(train.x.clone(), Gaussian::new(3.0));
+    let model = Falkon::new(&engine, &set, lambda).unwrap().fit(&train.y, 8, None).unwrap();
+    let incumbent = ModelArtifact::from_fitted(&model, &engine, "lcsoak").unwrap();
+    // generous tolerance: drifted refits wobble around the incumbent's
+    // holdout RMSE, and this soak tests the *machinery*, not the gate's
+    // statistical sharpness (gate_scores_and_validates covers that)
+    let gate = HoldoutGate::new(holdout.x.clone(), holdout.y.clone(), 0.5).unwrap();
+    World { engine, set, train_y: train.y, incumbent, gate, dim }
+}
+
+/// Labels drifted deterministically by cycle number — what each retrain
+/// cycle fits against.
+fn drifted(y: &[f64], cycle: u64, amplitude: f64) -> Vec<f64> {
+    y.iter()
+        .enumerate()
+        .map(|(i, v)| v + amplitude * (0.1 * i as f64 + 0.37 * cycle as f64).sin())
+        .collect()
+}
+
+/// The headline soak: a three-phase seeded storm over `train.panic`,
+/// `gate.fail` and `ckpt.corrupt` while a client hammers the server.
+/// Every cycle outcome is accounted for, every request serves, and the
+/// entry's version moves only on promotions.
+#[test]
+fn retrain_storm_never_interrupts_serving_and_the_gate_holds() {
+    let _guard = faults_lock().lock().unwrap_or_else(|e| e.into_inner());
+    let _disarm = Disarm;
+    with_timeout(240, || {
+        let w = build_world();
+        let dir = tmp_dir("storm");
+        let artifact_path = dir.join("serving.bin");
+        w.incumbent.save(&artifact_path).unwrap();
+
+        let cfg = ServeConfig::builder()
+            .addr("127.0.0.1:0")
+            .workers(2)
+            .max_batch(16)
+            .linger(Duration::from_millis(1))
+            .cache_capacity(0)
+            .breaker_threshold(0) // rollback has its own test below
+            .build()
+            .unwrap();
+        let handle = serve::start(w.incumbent.clone(), &cfg).unwrap();
+        let entry = handle.entry("default").unwrap();
+        let addr = handle.addr();
+
+        // continuous traffic for the whole storm: every request must
+        // resolve to a finite score, across every swap and failed cycle
+        let stop_traffic = Arc::new(AtomicBool::new(false));
+        let served = Arc::new(AtomicU64::new(0));
+        let dim = w.dim;
+        let traffic = {
+            let stop = Arc::clone(&stop_traffic);
+            let served = Arc::clone(&served);
+            std::thread::spawn(move || {
+                let mut client = Client::connect(addr).expect("traffic connect");
+                let policy = RetryPolicy { max_retries: 12, ..Default::default() };
+                let mut i = 0u64;
+                while !stop.load(Ordering::SeqCst) {
+                    let x: Vec<f64> =
+                        (0..dim).map(|j| 0.05 * ((i + j as u64) % 23) as f64 - 0.4).collect();
+                    let (y, _) = client
+                        .predict_with_retry(i, &x, &policy)
+                        .expect("a request failed while the incumbent should be serving");
+                    assert!(y.is_finite(), "request {i} got a non-finite score");
+                    served.fetch_add(1, Ordering::Relaxed);
+                    i += 1;
+                }
+            })
+        };
+
+        // trainer: warm refit on drifted labels, with a checkpoint it
+        // tries to resume each cycle — under `ckpt.corrupt` p=1 every
+        // resume attempt sees mutilated bytes and must cold-start the
+        // CG state (warm α still applies), never panic
+        let ckpt_path = dir.join("refit.ckpt");
+        let mut last_alpha = w.incumbent.alpha.clone();
+        let lambda = 1e-3;
+        let cycle_of = |cycle: u64, alpha: &[f64]| -> anyhow::Result<ModelArtifact> {
+            let y = drifted(&w.train_y, cycle, 0.02);
+            let solver = Falkon::new(&w.engine, &w.set, lambda)?;
+            let model = solver.fit_opts(
+                &y,
+                40,
+                None,
+                FitOptions {
+                    tol: 1e-6,
+                    warm_start: Some(alpha),
+                    checkpoint: Some(CheckpointSpec {
+                        path: ckpt_path.clone(),
+                        every: 2,
+                        resume: true,
+                    }),
+                },
+            )?;
+            ModelArtifact::from_fitted(&model, &w.engine, "lcsoak-drift")
+        };
+
+        let mut lcfg = LifecycleConfig::new(artifact_path.clone());
+        lcfg.probation = Duration::from_millis(40);
+        lcfg.poll = Duration::from_millis(5);
+        let never_stop = AtomicBool::new(false);
+
+        let mut incumbent = w.incumbent.clone();
+        let run = |cycle: u64,
+                   incumbent: &mut ModelArtifact,
+                   last_alpha: &mut Vec<f64>,
+                   tallies: &mut (u64, u64, u64)| {
+            let alpha = last_alpha.clone();
+            let outcome = run_cycle(
+                &entry,
+                incumbent,
+                || cycle_of(cycle, &alpha),
+                &w.gate,
+                &lcfg,
+                &never_stop,
+            );
+            match outcome {
+                CycleOutcome::TrainFailed { reason } => {
+                    assert!(!reason.is_empty());
+                    tallies.0 += 1;
+                }
+                CycleOutcome::GateRejected { decision, quarantined_to } => {
+                    assert!(decision.injected || !decision.pass);
+                    // the quarantined candidate is a loadable artifact
+                    let q = quarantined_to.expect("quarantine write must succeed");
+                    assert!(ModelArtifact::load(&q).is_ok());
+                    tallies.1 += 1;
+                }
+                CycleOutcome::Promoted { artifact, .. } => {
+                    *last_alpha = artifact.alpha.clone();
+                    *incumbent = artifact;
+                    tallies.2 += 1;
+                }
+                CycleOutcome::RolledBack { .. } => {
+                    panic!("no breaker in this storm — rollback is impossible")
+                }
+            }
+        };
+
+        // phase A — every trainer panics: all cycles contained, nothing
+        // promoted, incumbent untouched
+        faults::configure(Some(
+            FaultPlan::seeded(0xA11)
+                .with(FaultPoint::TrainPanic, FaultRule { p: 1.0, ms: 0 })
+                .with(FaultPoint::CkptCorrupt, FaultRule { p: 1.0, ms: 0 }),
+        ));
+        let mut tallies = (0u64, 0u64, 0u64);
+        for c in 1..=2u64 {
+            run(c, &mut incumbent, &mut last_alpha, &mut tallies);
+        }
+        assert_eq!(tallies, (2, 0, 0), "phase A: every cycle must be a contained panic");
+        assert_eq!(entry.version(), 1, "a failed train must never touch the entry");
+
+        // phase B — the gate is forced to fail: candidates train fine
+        // but are refused before any swap and parked for post-mortem
+        faults::configure(Some(
+            FaultPlan::seeded(0xB22)
+                .with(FaultPoint::GateFail, FaultRule { p: 1.0, ms: 0 })
+                .with(FaultPoint::CkptCorrupt, FaultRule { p: 1.0, ms: 0 }),
+        ));
+        for c in 3..=4u64 {
+            run(c, &mut incumbent, &mut last_alpha, &mut tallies);
+        }
+        assert_eq!(tallies, (2, 2, 0), "phase B: every cycle must be gate-rejected");
+        assert_eq!(entry.version(), 1, "a rejected candidate must never be swapped in");
+        let probe: Vec<f64> = vec![0.1; w.dim];
+        let pre_storm = entry.predictor().predict_one(&probe).unwrap();
+
+        // phase C — the mixed storm: seeded coin flips over both points,
+        // checkpoints corrupted throughout
+        faults::configure(Some(
+            FaultPlan::seeded(0xC33)
+                .with(FaultPoint::TrainPanic, FaultRule { p: 0.3, ms: 0 })
+                .with(FaultPoint::GateFail, FaultRule { p: 0.3, ms: 0 })
+                .with(FaultPoint::CkptCorrupt, FaultRule { p: 1.0, ms: 0 }),
+        ));
+        for c in 5..=12u64 {
+            run(c, &mut incumbent, &mut last_alpha, &mut tallies);
+        }
+        faults::configure(None);
+        let (failed, rejected, promoted) = tallies;
+        assert_eq!(failed + rejected + promoted, 12, "every cycle must be accounted for");
+
+        // the gate held: the version moved exactly once per promotion
+        assert_eq!(entry.version(), 1 + promoted, "version must move only on promotion");
+        let snap = entry.stats.snapshot();
+        assert_eq!(snap.promotions, promoted);
+        assert_eq!(snap.rollbacks, 0);
+        // promotions persisted: the serving artifact on disk is the last
+        // incumbent, bit for bit
+        let on_disk = ModelArtifact::load(&artifact_path).unwrap();
+        assert_eq!(bits(&on_disk.alpha), bits(&incumbent.alpha));
+        if promoted > 0 {
+            let now = entry.predictor().predict_one(&probe).unwrap();
+            assert_ne!(pre_storm.to_bits(), now.to_bits(), "a promotion must change the model");
+        }
+
+        // serving never stopped — and still works after the storm
+        stop_traffic.store(true, Ordering::SeqCst);
+        traffic.join().expect("traffic thread must not die");
+        assert!(served.load(Ordering::Relaxed) > 100, "traffic must have flowed all along");
+        let mut client = Client::connect(addr).unwrap();
+        for i in 0..32u64 {
+            let x: Vec<f64> = (0..w.dim).map(|j| 0.02 * (i + j as u64) as f64).collect();
+            let (y, _) = client.predict(1_000_000 + i, &x).unwrap();
+            assert!(y.is_finite());
+        }
+        handle.shutdown();
+        std::fs::remove_dir_all(&dir).ok();
+    });
+}
+
+/// A promotion that passes the gate but collapses under live traffic:
+/// an engine-failure spike trips the breaker inside the probation
+/// window, the lifecycle rolls back to the retained incumbent — in
+/// memory and on disk — and serving recovers without a restart.
+#[test]
+fn failure_spike_after_promotion_rolls_back_automatically() {
+    let _guard = faults_lock().lock().unwrap_or_else(|e| e.into_inner());
+    let _disarm = Disarm;
+    with_timeout(240, || {
+        let w = build_world();
+        let dir = tmp_dir("rollback");
+        let artifact_path = dir.join("serving.bin");
+        w.incumbent.save(&artifact_path).unwrap();
+
+        let cfg = ServeConfig::builder()
+            .addr("127.0.0.1:0")
+            .workers(1)
+            .max_batch(4)
+            .linger(Duration::from_millis(1))
+            .cache_capacity(0)
+            .breaker_threshold(3)
+            .breaker_cooldown(Duration::from_millis(150))
+            .build()
+            .unwrap();
+        let handle = serve::start(w.incumbent.clone(), &cfg).unwrap();
+        let entry = handle.entry("default").unwrap();
+        let addr = handle.addr();
+
+        // the saboteur: waits for the promotion to land (version 2),
+        // arms a total engine-failure storm, and hammers requests until
+        // the breaker trips — all while run_cycle watches probation
+        let dim = w.dim;
+        let saboteur = {
+            let entry = Arc::clone(&entry);
+            std::thread::spawn(move || {
+                let t0 = Instant::now();
+                while entry.version() < 2 {
+                    assert!(t0.elapsed() < Duration::from_secs(60), "promotion never landed");
+                    std::thread::sleep(Duration::from_millis(2));
+                }
+                faults::configure(Some(
+                    FaultPlan::seeded(0xDEAD)
+                        .with(FaultPoint::EngineError, FaultRule { p: 1.0, ms: 0 }),
+                ));
+                let mut client = Client::connect(addr).expect("saboteur connect");
+                for i in 0..200u64 {
+                    let x: Vec<f64> = (0..dim).map(|j| 0.01 * (i + j as u64) as f64).collect();
+                    match client.predict(500_000 + i, &x) {
+                        Err(e) if e.to_string().contains("[quarantined]") => {
+                            faults::configure(None);
+                            return;
+                        }
+                        Err(_) => continue, // [internal] while failures accumulate
+                        Ok(_) => continue,
+                    }
+                }
+                faults::configure(None);
+                panic!("the failure spike never tripped the breaker");
+            })
+        };
+
+        let lambda = 1e-3;
+        let trainer = || -> anyhow::Result<ModelArtifact> {
+            let y = drifted(&w.train_y, 1, 0.02);
+            let solver = Falkon::new(&w.engine, &w.set, lambda)?;
+            let model = solver.refit(&y, 40, 1e-6, &w.incumbent.alpha)?;
+            ModelArtifact::from_fitted(&model, &w.engine, "lcsoak-spike")
+        };
+        let mut lcfg = LifecycleConfig::new(artifact_path.clone());
+        lcfg.probation = Duration::from_secs(30); // the spike ends it long before
+        lcfg.poll = Duration::from_millis(2);
+        let never_stop = AtomicBool::new(false);
+        let outcome =
+            run_cycle(&entry, &w.incumbent, trainer, &w.gate, &lcfg, &never_stop);
+        saboteur.join().expect("saboteur must not die");
+
+        let trips = match outcome {
+            CycleOutcome::RolledBack { trips, .. } => trips,
+            other => panic!("expected RolledBack, got {other:?}"),
+        };
+        assert!(trips >= 1);
+        // promote (2) then rollback swap (3); both counters recorded
+        assert_eq!(entry.version(), 3);
+        let snap = entry.stats.snapshot();
+        assert_eq!((snap.promotions, snap.rollbacks), (1, 1));
+        assert!(!entry.breaker.is_open(), "rollback must reset the breaker");
+
+        // the incumbent serves again, bit-for-bit — in memory...
+        let probe: Vec<f64> = (0..w.dim).map(|j| 0.03 * j as f64 - 0.2).collect();
+        let want = Predictor::new(&w.incumbent).predict_one(&probe).unwrap();
+        let got = entry.predictor().predict_one(&probe).unwrap();
+        assert_eq!(want.to_bits(), got.to_bits(), "rollback must restore the incumbent");
+        // ...and on disk, so a restart reloads what is actually serving
+        let on_disk = ModelArtifact::load(&artifact_path).unwrap();
+        assert_eq!(bits(&on_disk.alpha), bits(&w.incumbent.alpha));
+
+        // live traffic flows again with no restart (faults are disarmed
+        // and the rollback closed the breaker)
+        let mut client = Client::connect(addr).unwrap();
+        let policy = RetryPolicy { max_retries: 12, ..Default::default() };
+        for i in 0..16u64 {
+            let x: Vec<f64> = (0..w.dim).map(|j| 0.02 * (i + j as u64) as f64).collect();
+            let (y, _) = client.predict_with_retry(700_000 + i, &x, &policy).unwrap();
+            assert!(y.is_finite());
+        }
+        handle.shutdown();
+        std::fs::remove_dir_all(&dir).ok();
+    });
+}
+
+/// Warm-started refits are what make a tight retrain period affordable:
+/// seeded from the incumbent `α` on mildly drifted labels, CG must
+/// converge in at most a third of a cold fit's iterations at the same
+/// tolerance. `RETRAIN_BENCH_OUT=path` records the measurement as JSON
+/// for CI artifact upload.
+#[test]
+fn warm_refit_needs_at_most_a_third_of_cold_iterations() {
+    with_timeout(240, || {
+        let lambda = 1e-3;
+        let tol = 1e-6;
+        let mut rng = Rng::seeded(42);
+        let ds = susy_like(500, &mut rng);
+        let (train, _holdout) = ds.split(0.25, &mut rng);
+        let centers = Rng::seeded(9).sample_without_replacement(train.n(), 60);
+        let set = WeightedSet::uniform(centers, lambda);
+        let engine = NativeEngine::new(train.x.clone(), Gaussian::new(3.0));
+        let solver = Falkon::new(&engine, &set, lambda).unwrap();
+
+        let cold = solver
+            .fit_opts(&train.y, 200, None, FitOptions { tol, ..Default::default() })
+            .unwrap();
+        // mild drift: the incumbent is already close to the new solution
+        let y2 = drifted(&train.y, 1, 1e-5);
+        let cold2 = solver
+            .fit_opts(&y2, 200, None, FitOptions { tol, ..Default::default() })
+            .unwrap();
+        let warm = solver.refit(&y2, 200, tol, &cold.alpha).unwrap();
+
+        let (cold_iters, warm_iters) = (cold2.iterations.len(), warm.iterations.len());
+        assert!(
+            warm_iters * 3 <= cold_iters,
+            "warm refit took {warm_iters} CG iterations vs cold {cold_iters} — want ≤ 1/3"
+        );
+        // equal tolerance means equal answers (to the shared tolerance)
+        let pw = solver.predict_train(&warm.alpha);
+        let pc = solver.predict_train(&cold2.alpha);
+        let err = bless::data::rmse(&pw, &pc);
+        let scale = bless::linalg::norm2(&pc) / (pc.len() as f64).sqrt();
+        assert!(err < 1e-4 * scale.max(1.0), "warm vs cold rmse {err}");
+
+        if let Ok(path) = std::env::var("RETRAIN_BENCH_OUT") {
+            let json = format!(
+                "{{\"cold_iters\":{cold_iters},\"warm_iters\":{warm_iters},\
+                 \"speedup\":{:.2},\"tol\":{tol:e},\"n\":{},\"m\":{},\
+                 \"warm_vs_cold_rmse\":{err:e}}}",
+                cold_iters as f64 / warm_iters.max(1) as f64,
+                train.n(),
+                solver.m(),
+            );
+            std::fs::write(&path, json).expect("writing RETRAIN_BENCH_OUT");
+            eprintln!("wrote retrain bench summary to {path}");
+        }
+    });
+}

@@ -13,7 +13,7 @@
 //! process-global ISA selection, so they serialize through one mutex.
 
 use bless::data::susy_like;
-use bless::falkon::{Falkon, Preconditioner};
+use bless::falkon::{CheckpointSpec, Falkon, FitOptions, Preconditioner};
 use bless::kernels::{Gaussian, KernelEngine, NativeEngine, PanelCache, DEFAULT_ROW_TILE};
 use bless::leverage::{LsGenerator, WeightedSet};
 use bless::linalg::{self, MatMul, Matrix};
@@ -347,6 +347,80 @@ fn panel_cache_bit_identical_across_threads_and_budgets() {
             }
         }
     });
+}
+
+/// A fit killed mid-run and resumed from its `BLESSCKPT` checkpoint must
+/// reproduce the uninterrupted fit bit-for-bit — at every thread width,
+/// under every ISA backend, and regardless of which width wrote the
+/// checkpoint versus which one resumed it (the checkpoint captures the
+/// complete CG state between iterations, and iteration arithmetic is
+/// thread-invariant).
+#[test]
+fn checkpoint_resume_bit_identical_across_thread_counts() {
+    let _g = lock();
+    let mut rng = Rng::seeded(42);
+    let ds = susy_like(600, &mut rng);
+    let (train, _test) = ds.split(0.25, &mut rng);
+    let centers = Rng::seeded(7).sample_without_replacement(train.n(), 80);
+    let lambda = 1e-3;
+    let set = WeightedSet::uniform(centers, lambda);
+    let dir = std::env::temp_dir().join(format!("bless-ckpt-det-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+
+    let eng = NativeEngine::new(train.x.clone(), Gaussian::new(3.0));
+    let solver = Falkon::new(&eng, &set, lambda).unwrap();
+    let fit_ckpt = |solver: &Falkon<'_>, t: usize, path: &std::path::Path, resume: bool| {
+        solver
+            .fit_opts(
+                &train.y,
+                t,
+                None,
+                FitOptions {
+                    tol: 0.0,
+                    warm_start: None,
+                    checkpoint: Some(CheckpointSpec {
+                        path: path.to_path_buf(),
+                        every: 2,
+                        resume,
+                    }),
+                },
+            )
+            .unwrap()
+    };
+
+    for_each_isa(|isa| {
+        let tag = isa.name();
+        // the reference: one uninterrupted 10-iteration fit at 1 thread
+        let full = at_threads(1, || solver.fit(&train.y, 10, None).unwrap());
+        for t in [1usize, 2, 4] {
+            // "kill" after 6 iterations at width t, resume to 10 at the
+            // same width...
+            let path = dir.join(format!("det-{tag}-{t}.ckpt"));
+            at_threads(t, || fit_ckpt(&solver, 6, &path, false));
+            let resumed = at_threads(t, || fit_ckpt(&solver, 10, &path, true));
+            assert_eq!(
+                resumed.iterations.first().map(|s| s.iter),
+                Some(7),
+                "must resume at iteration 7, not cold-start ({tag}, {t} threads)"
+            );
+            assert_eq!(
+                bits_of(&full.alpha),
+                bits_of(&resumed.alpha),
+                "resumed α diverged from uninterrupted fit at {t} threads ({tag})"
+            );
+            // ...and resume a checkpoint written at a *different* width:
+            // 1-thread writer, t-thread resumer
+            let cross = dir.join(format!("det-{tag}-cross-{t}.ckpt"));
+            at_threads(1, || fit_ckpt(&solver, 6, &cross, false));
+            let crossed = at_threads(t, || fit_ckpt(&solver, 10, &cross, true));
+            assert_eq!(
+                bits_of(&full.alpha),
+                bits_of(&crossed.alpha),
+                "cross-width resume diverged at {t} threads ({tag})"
+            );
+        }
+    });
+    std::fs::remove_dir_all(&dir).ok();
 }
 
 #[test]

@@ -1,0 +1,188 @@
+//! `serve --stats-flush-secs N` end-to-end: periodic stats snapshots
+//! bound what a hard kill can lose (satellite of ISSUE 10).
+//!
+//! Without periodic flushing, `--stats-file` only persists counters on
+//! *graceful* shutdown — a SIGKILL loses the whole run. Here we spawn
+//! the real `repro serve` binary with a sub-second flush period, drive
+//! traffic, SIGKILL it mid-flight, and verify a restarted server folds
+//! the flushed counters back in and keeps counting on top of them.
+
+mod common;
+
+use bless::linalg::Matrix;
+use bless::serve::registry::{ModelSpec, Registry, RegistryConfig};
+use bless::serve::{self, stats_io, Client, ModelArtifact, ServeConfig};
+use common::with_timeout;
+use std::io::{BufRead, BufReader};
+use std::path::PathBuf;
+use std::process::{Child, Command, Stdio};
+use std::time::{Duration, Instant};
+
+fn artifact() -> ModelArtifact {
+    ModelArtifact {
+        sigma: 1.5,
+        centers: Matrix::from_fn(4, 3, |i, j| ((i * 3 + j) as f64 * 0.31).cos()),
+        alpha: vec![0.4, -0.2, 0.9, 0.1],
+        trained_n: 4,
+        dataset: "flush".to_string(),
+    }
+}
+
+fn tmp_dir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("bless-statsflush-{}-{tag}", std::process::id()));
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+/// SIGKILLs the child if the test panics before doing so itself, so a
+/// failed assertion cannot leak a serving process.
+struct KillOnDrop(Child);
+impl Drop for KillOnDrop {
+    fn drop(&mut self) {
+        self.0.kill().ok();
+        self.0.wait().ok();
+    }
+}
+
+/// How many requests the flushed stats file currently records for
+/// `default`. Loads into a *fresh* registry each call because
+/// [`stats_io::load`] folds counters additively.
+fn flushed_requests(path: &std::path::Path) -> Option<u64> {
+    let reg = Registry::new(
+        vec![ModelSpec { name: "default".to_string(), artifact: artifact(), source: None }],
+        RegistryConfig::default(),
+    )
+    .unwrap();
+    stats_io::load(path, &reg).ok()?;
+    Some(reg.get("default").unwrap().stats.snapshot().requests)
+}
+
+#[test]
+fn periodic_flush_survives_a_hard_kill_and_restart() {
+    with_timeout(180, || {
+        let dir = tmp_dir("kill");
+        let model_path = dir.join("model.bin");
+        let stats_path = dir.join("stats.json");
+        artifact().save(&model_path).unwrap();
+
+        let child = Command::new(env!("CARGO_BIN_EXE_repro"))
+            .args([
+                "serve",
+                "--model",
+                model_path.to_str().unwrap(),
+                "--port",
+                "0",
+                "--workers",
+                "1",
+                "--stats-file",
+                stats_path.to_str().unwrap(),
+                "--stats-flush-secs",
+                "0.2",
+            ])
+            .stdout(Stdio::piped())
+            .stderr(Stdio::null())
+            .spawn()
+            .expect("spawning repro serve");
+        let mut child = KillOnDrop(child);
+
+        // the server announces its ephemeral port on stdout
+        let mut lines = BufReader::new(child.0.stdout.take().unwrap());
+        let addr = loop {
+            let mut line = String::new();
+            if lines.read_line(&mut line).expect("reading child stdout") == 0 {
+                panic!("child exited before announcing its address");
+            }
+            if let Some(rest) = line.strip_prefix("listening on ") {
+                break rest.split_whitespace().next().unwrap().to_string();
+            }
+        };
+
+        let sent = 40u64;
+        let mut client = Client::connect(addr.as_str()).expect("connecting to child server");
+        for i in 0..sent {
+            let x: Vec<f64> = (0..3).map(|j| 0.1 * (i + j) as f64 - 0.5).collect();
+            let (y, _) = client.predict(i, &x).expect("predict against child");
+            assert!(y.is_finite());
+        }
+
+        // within a flush period or two, the stats file must have caught
+        // up with everything we sent — that is the loss bound
+        let t0 = Instant::now();
+        loop {
+            if flushed_requests(&stats_path).is_some_and(|r| r >= sent) {
+                break;
+            }
+            assert!(
+                t0.elapsed() < Duration::from_secs(60),
+                "stats file never reflected {sent} requests (got {:?})",
+                flushed_requests(&stats_path)
+            );
+            std::thread::sleep(Duration::from_millis(25));
+        }
+
+        // hard kill: no graceful-shutdown save, the periodic flush is
+        // all that survives
+        child.0.kill().expect("SIGKILL child");
+        child.0.wait().expect("reaping child");
+
+        // a restarted server folds the flushed counters back in…
+        let cfg = ServeConfig::builder()
+            .addr("127.0.0.1:0")
+            .workers(1)
+            .stats_file(&stats_path)
+            .build()
+            .unwrap();
+        let handle = serve::start(artifact(), &cfg).unwrap();
+        let restored = handle.model_stats("default").expect("default registered").requests;
+        assert!(
+            restored >= sent,
+            "restart restored {restored} requests, expected at least {sent}"
+        );
+
+        // …and keeps counting on top of the restored base
+        let extra = 8u64;
+        let mut client = Client::connect(handle.addr()).unwrap();
+        for i in 0..extra {
+            let x: Vec<f64> = (0..3).map(|j| 0.05 * (i + j) as f64).collect();
+            let (y, _) = client.predict(1_000 + i, &x).unwrap();
+            assert!(y.is_finite());
+        }
+        let now = handle.model_stats("default").unwrap().requests;
+        assert!(
+            now >= restored + extra,
+            "counters must continue from the restored base ({now} < {restored} + {extra})"
+        );
+        handle.shutdown();
+        std::fs::remove_dir_all(&dir).ok();
+    });
+}
+
+/// The CLI refuses a flush period with nowhere to flush to, loudly and
+/// before binding anything.
+#[test]
+fn flush_without_a_stats_file_is_rejected_at_startup() {
+    with_timeout(60, || {
+        let dir = tmp_dir("reject");
+        let model_path = dir.join("model.bin");
+        artifact().save(&model_path).unwrap();
+        let out = Command::new(env!("CARGO_BIN_EXE_repro"))
+            .args([
+                "serve",
+                "--model",
+                model_path.to_str().unwrap(),
+                "--port",
+                "0",
+                "--stats-flush-secs",
+                "1",
+            ])
+            .output()
+            .expect("running repro serve");
+        assert!(!out.status.success(), "serve must refuse --stats-flush-secs without --stats-file");
+        let err = String::from_utf8_lossy(&out.stderr);
+        assert!(
+            err.contains("stats_flush requires a stats_file"),
+            "unexpected error output: {err}"
+        );
+        std::fs::remove_dir_all(&dir).ok();
+    });
+}
